@@ -1,0 +1,75 @@
+//! Quickstart: run BitStopper's BESF/LATS attention on a synthetic workload,
+//! compare against dense INT12 attention, and show the cycle-level simulator's
+//! speedup/energy report.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use bitstopper::algo::{besf_select, Lats};
+use bitstopper::attention::{attention_int12, attention_int12_sparse, rel_err};
+use bitstopper::config::{Features, LatsConfig, SimConfig};
+use bitstopper::quant::{margin::BitMargins, BitPlanes};
+use bitstopper::sim::simulate_attention;
+use bitstopper::workload::{AttnWorkload, QuantAttn, SynthConfig};
+
+fn main() {
+    let (seq, dim, queries) = (1024, 64, 8);
+    println!("== BitStopper quickstart: seq={seq} dim={dim} queries={queries} ==\n");
+
+    // 1. Synthesize an attention workload with realistic score diversity and
+    //    quantize it to INT12 (the paper's PTQ baseline).
+    let w = AttnWorkload::generate(SynthConfig::new(seq, dim, queries, 42));
+    let qs: Vec<Vec<f32>> = (0..queries).map(|i| w.query(i).to_vec()).collect();
+    let qa = QuantAttn::quantize(&qs, &w.k, &w.v, seq, dim);
+
+    // 2. Functional BESF/LATS: bit-incremental pruning with margin bounds.
+    let planes = BitPlanes::decompose(&qa.k);
+    let lats = Lats::new(LatsConfig::default(), dim, qa.qp.scale, qa.kp.scale);
+    println!("LATS: alpha=0.6 radius(int)={}\n", lats.radius_int);
+    println!("query | kept/seq | K-bits fetched (vs dense) | output rel-err vs dense");
+    for (i, q) in qa.queries.iter().enumerate() {
+        let margins = BitMargins::generate(q);
+        let sel = besf_select(q, &planes, &margins, &lats);
+        let dense = attention_int12(q, &qa.k, &qa.v, qa.qp, qa.kp, qa.vp);
+        let sparse =
+            attention_int12_sparse(q, &qa.k, &qa.v, qa.qp, qa.kp, qa.vp, &sel.survivors);
+        println!(
+            "  Q{i}  | {:>4}/{seq} | {:>5.1}%                     | {:.4}",
+            sel.survivors.len(),
+            100.0 * sel.k_traffic_fraction(),
+            rel_err(&sparse, &dense)
+        );
+    }
+
+    // 3. Cycle-level simulation: BitStopper vs the dense baseline.
+    let cfg = SimConfig::default();
+    let mut dense_cfg = cfg.clone();
+    dense_cfg.features = Features::DENSE;
+    let bs = simulate_attention(&qa, &cfg);
+    let dn = simulate_attention(&qa, &dense_cfg);
+
+    println!("\n== cycle-level simulation (32 lanes, HBM2) ==");
+    println!("             cycles      DRAM bytes   energy(uJ)  util");
+    println!(
+        "dense      {:>9}   {:>10.0}   {:>8.2}    {:.2}",
+        dn.cycles,
+        dn.complexity.dram_bytes(),
+        dn.energy.total_pj() / 1e6,
+        dn.utilization
+    );
+    println!(
+        "bitstopper {:>9}   {:>10.0}   {:>8.2}    {:.2}",
+        bs.cycles,
+        bs.complexity.dram_bytes(),
+        bs.energy.total_pj() / 1e6,
+        bs.utilization
+    );
+    println!(
+        "\nspeedup {:.2}x | energy efficiency {:.2}x | keep rate {:.1}% | K-traffic {:.1}%",
+        bs.speedup_over(&dn),
+        dn.energy.total_pj() / bs.energy.total_pj(),
+        100.0 * bs.keep_rate,
+        100.0 * bs.k_traffic_fraction
+    );
+}

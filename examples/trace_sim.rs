@@ -1,0 +1,68 @@
+//! Simulate BitStopper and every baseline accelerator on **real attention
+//! traces** captured from the trained tiny transformer's forward pass
+//! (`artifacts/tiny_model/traces.bin`), printing a Fig. 12-style comparison.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example trace_sim
+//! ```
+
+use bitstopper::baselines::{simulate_sanger, simulate_sofa, simulate_tokenpicker, SofaMode};
+use bitstopper::config::{Features, SimConfig};
+use bitstopper::sim::simulate_attention;
+use bitstopper::workload::{read_trace, QuantAttn};
+
+fn main() -> anyhow::Result<()> {
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/tiny_model/traces.bin");
+    if !path.exists() {
+        eprintln!("traces missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let records = read_trace(&path)?;
+    println!("loaded {} attention records from the tiny model\n", records.len());
+
+    // Group identical shapes; each record contributes one query.
+    let (seq, dim) = (records[0].seq, records[0].dim);
+    let queries: Vec<Vec<f32>> = records.iter().map(|r| r.q.clone()).collect();
+    let qa = QuantAttn::quantize(&queries, &records[0].k, &records[0].v, seq, dim);
+    println!("workload: {} queries × K/V {}x{} (INT12)\n", queries.len(), seq, dim);
+
+    let cfg = SimConfig::default();
+    let mut dense_cfg = cfg.clone();
+    dense_cfg.features = Features::DENSE;
+
+    let dense = simulate_attention(&qa, &dense_cfg);
+    let bs = simulate_attention(&qa, &cfg);
+    let sanger = simulate_sanger(&qa, &cfg);
+    let sofa_ft = simulate_sofa(&qa, &cfg, SofaMode::Finetuned);
+    let sofa = simulate_sofa(&qa, &cfg, SofaMode::NoFinetune);
+    let tp = simulate_tokenpicker(&qa, &cfg);
+
+    println!("design       cycles   speedup  energy(nJ)  eff-gain  DRAM-KB  keep%");
+    for (name, r) in [
+        ("dense", &dense),
+        ("sanger", &sanger),
+        ("sofa", &sofa),
+        ("sofa*", &sofa_ft),
+        ("tokenpicker", &tp),
+        ("bitstopper", &bs),
+    ] {
+        println!(
+            "{name:<12} {:>7}   {:>5.2}x   {:>8.1}   {:>5.2}x   {:>6.1}  {:>5.1}",
+            r.cycles,
+            dense.cycles as f64 / r.cycles as f64,
+            r.energy.total_pj() / 1e3,
+            dense.energy.total_pj() / r.energy.total_pj(),
+            r.complexity.dram_bytes() / 1024.0,
+            100.0 * r.keep_rate,
+        );
+    }
+    println!(
+        "\nBitStopper on real traces: {:.2}x speedup / {:.2}x energy efficiency vs dense; \
+         utilization {:.0}%",
+        bs.speedup_over(&dense),
+        dense.energy.total_pj() / bs.energy.total_pj(),
+        100.0 * bs.utilization
+    );
+    Ok(())
+}

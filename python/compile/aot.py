@@ -1,0 +1,114 @@
+"""AOT export: lower the Layer-2 attention pipelines to HLO *text* artifacts.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the runtime's xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+
+Produces, per (seq, dim, alpha) variant:
+  attn_dense_{S}x{D}.hlo.txt        — INT12 dense attention baseline
+  attn_bitstopper_{S}x{D}_a{A}.hlo.txt — fused BESF/LATS sparse attention
+and a `manifest.txt` describing every artifact (consumed by the Rust
+runtime's ArtifactRegistry).
+
+Interfaces (all little-endian f32, shapes static per artifact):
+  dense:      (q[D], k[S,D], v[S,D], valid[S]) -> (out[D], mask[S])
+  bitstopper: (q[D], k[S,D], v[S,D], valid[S]) -> (out[D], mask[S])
+`valid` masks padding keys (decode at context < S pads K/V with zeros).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (seq, dim) variants: a demo shape and the tiny model's head shape.
+DEFAULT_SHAPES = [(256, 64), (128, 32), (128, 16)]
+DEFAULT_ALPHAS = [0.6, 0.4]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange).
+
+    `as_hlo_text(True)` = print_large_constants: the default printer elides
+    big constant arrays as `{...}`, which the downstream text parser silently
+    reads as zeros — the whole LATS threshold pipeline (plane-weight /
+    margin / triangular-accumulation constants) would degenerate.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(True)
+    assert "{...}" not in text, "HLO text contains elided constants"
+    return text
+
+
+def lower_dense(seq, dim):
+    def fn(q, k, v, valid):
+        out, mask = model.dense_attention(q, k, v, valid=valid)
+        return out, mask
+
+    spec_q = jax.ShapeDtypeStruct((dim,), jnp.float32)
+    spec_k = jax.ShapeDtypeStruct((seq, dim), jnp.float32)
+    spec_v = jax.ShapeDtypeStruct((seq, dim), jnp.float32)
+    spec_m = jax.ShapeDtypeStruct((seq,), jnp.float32)
+    return jax.jit(fn).lower(spec_q, spec_k, spec_v, spec_m)
+
+
+def lower_bitstopper(seq, dim, alpha):
+    def fn(q, k, v, valid):
+        out, mask = model.besf_attention(q, k, v, alpha=alpha, valid=valid)
+        return out, mask
+
+    spec_q = jax.ShapeDtypeStruct((dim,), jnp.float32)
+    spec_k = jax.ShapeDtypeStruct((seq, dim), jnp.float32)
+    spec_v = jax.ShapeDtypeStruct((seq, dim), jnp.float32)
+    spec_m = jax.ShapeDtypeStruct((seq,), jnp.float32)
+    return jax.jit(fn).lower(spec_q, spec_k, spec_v, spec_m)
+
+
+def export(out_dir, shapes=DEFAULT_SHAPES, alphas=DEFAULT_ALPHAS):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    for seq, dim in shapes:
+        name = f"attn_dense_{seq}x{dim}.hlo.txt"
+        text = to_hlo_text(lower_dense(seq, dim))
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        manifest.append(f"{name} kind=dense seq={seq} dim={dim} alpha=0")
+        print(f"wrote {name} ({len(text)} chars)")
+        for alpha in alphas:
+            aname = f"attn_bitstopper_{seq}x{dim}_a{int(alpha * 100):02d}.hlo.txt"
+            text = to_hlo_text(lower_bitstopper(seq, dim, alpha))
+            with open(os.path.join(out_dir, aname), "w") as f:
+                f.write(text)
+            manifest.append(
+                f"{aname} kind=bitstopper seq={seq} dim={dim} alpha={alpha}"
+            )
+            print(f"wrote {aname} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="single small variant (CI smoke)")
+    args = ap.parse_args()
+    if args.quick:
+        export(args.out_dir, shapes=[(64, 32)], alphas=[0.6])
+    else:
+        export(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

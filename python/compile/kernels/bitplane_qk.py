@@ -1,0 +1,93 @@
+"""Layer-1 Pallas kernel: bit-plane partial dot products (the BRAT hot loop).
+
+The paper's PE lane computes, per cycle, the dot product of a 12-bit query
+with a 1-bit Key plane (64 dims). On TPU there is no 1-bit datapath, so we
+map the insight onto the MXU (see DESIGN.md §Hardware-Adaptation): each bit
+plane is a {0,1} matrix and the per-round partial scores for *all* keys are
+one `planes[r] @ q` matrix-vector product — a dense MXU-shaped op over
+bit-plane operands. The 12 planes stream through the same VMEM tile buffers
+(BlockSpec over the plane axis), the analogue of the paper's on-demand
+bit-plane fetch; early-terminated work is expressed as masking at Layer 2 and
+accounted analytically.
+
+interpret=True throughout: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are identical.
+"""
+
+import functools
+
+import jax
+
+# Score accumulation is float64: integer scores reach ~2^45 (the paper's
+# 45-bit Scoreboard), beyond f32's exact range.
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax.experimental import pallas as pl  # noqa: E402
+
+N_BITS = 12
+
+
+def plane_weights(dtype=jnp.float32):
+    """Signed weight of each bit-plane round (round 0 = sign plane)."""
+    w = [2.0 ** (N_BITS - 1 - r) for r in range(N_BITS)]
+    w[0] = -w[0]
+    return jnp.array(w, dtype)
+
+
+def _scores_kernel(q_ref, planes_ref, out_ref):
+    # planes_ref: [N_BITS, seq, dim]; q_ref: [dim]; out_ref: [N_BITS, seq].
+    # One matrix-vector product per plane — each is MXU-shaped; on TPU the
+    # plane axis would become a BlockSpec grid streaming planes through the
+    # same VMEM tiles (the analogue of on-demand bit-plane fetch). The CPU
+    # interchange path (xla_extension 0.5.1) cannot execute the while-loop
+    # HLO that a gridded interpret-mode pallas_call lowers to, so the kernel
+    # is single-block here; the grid decomposition is documented in
+    # DESIGN.md §Hardware-Adaptation.
+    out_ref[...] = jnp.einsum("rsd,d->rs", planes_ref[...], q_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_seq",))
+def bitplane_scores(q, planes, block_seq=128):
+    """Unweighted per-plane dot products.
+
+    Args:
+      q: [dim] float32 holding INT12 integer values.
+      planes: [N_BITS, seq, dim] float32 in {0, 1}.
+      block_seq: accepted for API stability (TPU tiling parameter); the CPU
+        interpret path runs single-block (see `_scores_kernel`).
+
+    Returns:
+      [N_BITS, seq] float32: ``out[r, j] = sum_d q[d] * planes[r, j, d]``.
+    """
+    n, seq, dim = planes.shape
+    assert n == N_BITS, f"expected {N_BITS} planes, got {n}"
+    _ = (block_seq, dim)
+    return pl.pallas_call(
+        _scores_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, seq), jnp.float32),
+        interpret=True,
+    )(q, planes)
+
+
+def _weighted_cumulative(partials, dtype=jnp.float64):
+    """Cumulative weighted partial scores A^r = sum_{t<=r} w_t * partial_t.
+
+    Accumulates in float64: integer scores reach ~2^45 (the paper's 45-bit
+    Scoreboard), beyond f32's exact range. On a real TPU this accumulation
+    would live in the MXU's s32 accumulators; on CPU-PJRT f64 is exact.
+
+    Implemented as a lower-triangular matmul rather than `jnp.cumsum`: the
+    prefix-sum HLO that cumsum lowers to mis-executes on the HLO-text
+    interchange path (xla_extension 0.5.1), and a [12×12] triangular matmul
+    is the MXU-native formulation anyway.
+    """
+    w = plane_weights(dtype)
+    weighted = w[:, None] * partials.astype(dtype)
+    lower_tri = jnp.tril(jnp.ones((N_BITS, N_BITS), dtype))
+    return lower_tri @ weighted
+
+
+def cumulative_scores(q, planes, block_seq=128):
+    """[N_BITS, seq] float64 cumulative scores after each round."""
+    return _weighted_cumulative(bitplane_scores(q, planes, block_seq=block_seq))

@@ -1,0 +1,159 @@
+"""Pure-jnp/numpy correctness oracle for the Layer-1 kernels and the BESF pipeline.
+
+Everything here is written for clarity, not speed: explicit loops over bit
+rounds, float64 score arithmetic (exact for the 45-bit dynamic range), and
+direct translations of the paper's equations. The Pallas kernels
+(`bitplane_qk`, `sparse_attn`), the fused Layer-2 model (`compile.model`) and
+the Rust functional models are all validated against these functions.
+"""
+
+import numpy as np
+
+N_BITS = 12
+QMAX = 2047
+QMIN = -2048
+
+
+# ---------------------------------------------------------------------------
+# Quantization / decomposition
+# ---------------------------------------------------------------------------
+
+def quantize_sym(x):
+    """Symmetric per-tensor INT12 PTQ. Returns (int values as float32, scale)."""
+    x = np.asarray(x, np.float32)
+    max_abs = float(np.max(np.abs(x))) if x.size else 0.0
+    scale = max_abs / QMAX if max_abs > 0 else 1.0
+    q = np.clip(np.round(x / scale), QMIN, QMAX).astype(np.float32)
+    return q, np.float32(scale)
+
+
+def decompose_planes(k_int):
+    """2's-complement bit planes of an INT12 matrix, MSB (sign) first.
+
+    Args:
+      k_int: [seq, dim] float32/int holding integers in [-2048, 2047].
+
+    Returns:
+      [N_BITS, seq, dim] float32 in {0, 1}.
+    """
+    k = np.asarray(k_int).astype(np.int64) & 0xFFF
+    planes = np.stack(
+        [(k >> (N_BITS - 1 - r)) & 1 for r in range(N_BITS)], axis=0
+    )
+    return planes.astype(np.float32)
+
+
+def plane_weights():
+    w = np.array([2.0 ** (N_BITS - 1 - r) for r in range(N_BITS)], np.float64)
+    w[0] = -w[0]
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Reference kernels
+# ---------------------------------------------------------------------------
+
+def ref_bitplane_scores(q, planes):
+    """Loop-and-sum reference of `bitplane_qk.bitplane_scores`."""
+    n, seq, dim = planes.shape
+    q = np.asarray(q, np.float64)
+    out = np.zeros((n, seq), np.float64)
+    for r in range(n):
+        for j in range(seq):
+            out[r, j] = float(np.dot(planes[r, j].astype(np.float64), q))
+    return out.astype(np.float32)
+
+
+def ref_cumulative_scores(q, planes):
+    """Float64 cumulative weighted scores A^r (exact)."""
+    partial = ref_bitplane_scores(q, planes).astype(np.float64)
+    w = plane_weights()
+    return np.cumsum(w[:, None] * partial, axis=0)
+
+
+def ref_margins(q_int):
+    """Per-round (min, max) uncertainty margins of a query (Eq. 4 / Fig. 6)."""
+    q = np.asarray(q_int, np.float64)
+    pos = float(np.sum(np.maximum(q, 0.0)))
+    neg = float(np.sum(np.minimum(q, 0.0)))
+    rem = np.array([2.0 ** (N_BITS - 1 - r) - 1.0 for r in range(N_BITS)])
+    return rem * neg, rem * pos
+
+
+def ref_besf_select(q_int, k_int, alpha, radius_int):
+    """Reference BESF + LATS selection (paper §III-A/B).
+
+    Returns (death_round [seq] int, survivors mask [seq] bool, exact scores).
+    death_round = N_BITS means the token survived all rounds.
+    """
+    planes = decompose_planes(k_int)
+    scores = ref_cumulative_scores(q_int, planes)  # [N_BITS, seq]
+    m_min, m_max = ref_margins(q_int)
+    seq = planes.shape[1]
+    # Integer band, matching the Rust Lats and the hardware threshold register.
+    band = np.round(alpha * np.round(max(radius_int, 1)))
+    death = np.full(seq, N_BITS, np.int32)
+    active = np.ones(seq, bool)
+    for r in range(N_BITS):
+        lower = scores[r] + m_min[r]
+        upper = scores[r] + m_max[r]
+        eta = np.max(lower[active]) - band
+        dies = active & ~(upper >= eta)
+        death[dies] = r
+        active &= ~dies
+        if not active.any():
+            break
+    exact = scores[N_BITS - 1]
+    return death, active, exact
+
+
+def ref_brute_force_select(q_int, k_int, alpha, radius_int):
+    """Keep tokens within alpha*radius of the exact max — BESF must match."""
+    q = np.asarray(q_int, np.float64)
+    k = np.asarray(k_int, np.float64)
+    exact = k @ q
+    eta = np.max(exact) - np.round(alpha * np.round(max(radius_int, 1)))
+    return exact >= eta
+
+
+def ref_masked_attention(logits, mask, v):
+    """Masked softmax @ V reference."""
+    logits = np.asarray(logits, np.float64)
+    mask = np.asarray(mask) > 0
+    v = np.asarray(v, np.float64)
+    masked = np.where(mask, logits, -np.inf)
+    mx = np.max(masked)
+    e = np.where(mask, np.exp(masked - mx), 0.0)
+    p = e / np.sum(e)
+    return (p @ v).astype(np.float32)
+
+
+def ref_dense_attention(q, k, v):
+    """Plain attention for one query (no quantization)."""
+    q = np.asarray(q, np.float64)
+    k = np.asarray(k, np.float64)
+    v = np.asarray(v, np.float64)
+    logits = k @ q / np.sqrt(q.shape[0])
+    logits -= logits.max()
+    p = np.exp(logits)
+    p /= p.sum()
+    return (p @ v).astype(np.float32)
+
+
+def ref_int12_attention(qf, kf, vf):
+    """INT12-quantized attention (the paper's accuracy baseline)."""
+    qi, qs = quantize_sym(qf)
+    ki, ks = quantize_sym(kf)
+    vi, vs = quantize_sym(vf)
+    dim = qi.shape[0]
+    logits = np.asarray(ki, np.float64) @ np.asarray(qi, np.float64)
+    logits *= float(qs) * float(ks) / np.sqrt(dim)
+    logits -= logits.max()
+    p = np.exp(logits)
+    p /= p.sum()
+    return (p @ (np.asarray(vi, np.float64) * float(vs))).astype(np.float32)
+
+
+def radius_int_from_logit(radius_logit, dim, q_scale, k_scale):
+    """Convert the paper's logit-domain radius (default 5) to integer scores."""
+    return float(radius_logit) * np.sqrt(dim) / (float(q_scale) * float(k_scale))

@@ -1,0 +1,50 @@
+"""Layer-1 Pallas kernel: masked sparse attention (the V-PU).
+
+Given exact attention logits, a survival mask from the BESF/LATS selection,
+and the Value matrix, computes ``softmax(logits | mask) @ V`` with pruned
+tokens receiving exactly zero weight — the V-PU's weighted summation over the
+surviving rows.
+
+Tiling: one grid step per (query) with the full context resident; at the
+evaluation shapes (seq ≤ 4k, dim ≤ 128, f32) a [seq, dim] V tile is ≤ 2 MB —
+on a real TPU this would block over seq with an online-softmax accumulator;
+for the CPU interpret path a single block keeps the kernel transparent.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _masked_attn_kernel(s_ref, m_ref, v_ref, o_ref):
+    s = s_ref[...]
+    m = m_ref[...]
+    neg = jnp.finfo(s.dtype).min
+    masked = jnp.where(m > 0, s, neg)
+    # Numerically stable masked softmax.
+    mx = jnp.max(masked)
+    e = jnp.where(m > 0, jnp.exp(masked - mx), 0.0)
+    p = e / jnp.sum(e)
+    o_ref[...] = p @ v_ref[...]
+
+
+@jax.jit
+def masked_attention(logits, mask, v):
+    """``softmax(logits restricted to mask) @ v``.
+
+    Args:
+      logits: [seq] float32 attention logits (already scaled by 1/sqrt(d)).
+      mask: [seq] float32 in {0,1}; 1 = token survives.
+      v: [seq, dim] float32 Value matrix.
+
+    Returns:
+      [dim] float32 attention output.
+    """
+    seq, dim = v.shape
+    assert logits.shape == (seq,)
+    assert mask.shape == (seq,)
+    return pl.pallas_call(
+        _masked_attn_kernel,
+        out_shape=jax.ShapeDtypeStruct((dim,), jnp.float32),
+        interpret=True,
+    )(logits.astype(jnp.float32), mask.astype(jnp.float32), v.astype(jnp.float32))

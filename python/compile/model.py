@@ -1,0 +1,221 @@
+"""Layer-2 JAX model: the fused BESF/LATS attention pipeline and the tiny
+transformer used for quality experiments.
+
+The fused attention function is the compute graph that gets AOT-lowered to
+HLO text (`compile.aot`) and executed from the Rust runtime on the request
+path; it calls the Layer-1 Pallas kernels so everything lowers into a single
+module.
+
+Score arithmetic is float64 (exact for the 45-bit dynamic range the paper's
+Scoreboard holds); jax_enable_x64 is switched on at import.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from .kernels import bitplane_qk, sparse_attn  # noqa: E402
+from .kernels.ref import N_BITS, QMAX, QMIN  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# Fused BESF attention (the AOT artifact body)
+# ---------------------------------------------------------------------------
+
+def quantize_sym_jnp(x):
+    """In-graph symmetric INT12 PTQ: returns (integer values f32, scale)."""
+    max_abs = jnp.max(jnp.abs(x))
+    scale = jnp.where(max_abs > 0, max_abs / QMAX, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / scale), QMIN, QMAX).astype(jnp.float32)
+    return q, scale
+
+
+def decompose_planes_jnp(k_int):
+    """In-graph bit-plane decomposition: [seq, dim] ints → [12, seq, dim] {0,1}.
+
+    Note: the shift vector is built as `11 - arange(12)` rather than a
+    negative-step `arange` — the HLO-text interchange path (xla_extension
+    0.5.1) mis-executes the `reverse` op that a negative-step iota lowers to.
+    """
+    k = jnp.asarray(k_int, jnp.int32) & 0xFFF
+    shifts = (N_BITS - 1) - jnp.arange(N_BITS, dtype=jnp.int32)  # MSB first
+    planes = (k[None, :, :] >> shifts[:, None, None]) & 1
+    return planes.astype(jnp.float32)
+
+
+def margins_jnp(q_int):
+    """Per-round (min, max) margins, float64 — the Bit Margin Generator."""
+    q = q_int.astype(jnp.float64)
+    pos = jnp.sum(jnp.maximum(q, 0.0))
+    neg = jnp.sum(jnp.minimum(q, 0.0))
+    rem = jnp.array([2.0 ** (N_BITS - 1 - r) - 1.0 for r in range(N_BITS)],
+                    jnp.float64)
+    return rem * neg, rem * pos
+
+
+def besf_mask(q_int, planes, alpha, radius_int, valid=None):
+    """Survival mask from the 12-round BESF/LATS loop (statically unrolled).
+
+    Args:
+      q_int: [dim] float32 integer query.
+      planes: [12, seq, dim] float32 bit planes.
+      alpha, radius_int: LATS parameters (integer-score domain).
+      valid: optional [seq] {0,1} — padding keys are never selected.
+
+    Returns:
+      (mask [seq] float32 {0,1}, exact_scores [seq] float64)
+    """
+    scores = bitplane_qk.cumulative_scores(q_int, planes)  # [12, seq] f64
+    m_min, m_max = margins_jnp(q_int)
+    seq = planes.shape[1]
+    active = jnp.ones((seq,), bool)
+    if valid is not None:
+        active = active & (valid > 0)
+    # Integer-domain band, rounded exactly like the Rust Lats (and the
+    # hardware, whose threshold register is an integer).
+    band = jnp.round(alpha * jnp.round(radius_int))
+    neg_inf = jnp.float64(-jnp.inf)
+    for r in range(N_BITS):
+        lower = scores[r] + m_min[r]
+        upper = scores[r] + m_max[r]
+        eta = jnp.max(jnp.where(active, lower, neg_inf)) - band
+        active = active & (upper >= eta)
+    return active.astype(jnp.float32), scores[N_BITS - 1]
+
+
+def besf_attention(q, k, v, alpha=0.6, radius_logit=5.0, valid=None):
+    """The full BitStopper attention pipeline for one query (f32 in/out).
+
+    Quantizes Q/K to INT12, decomposes K to bit planes, runs the fused
+    BESF/LATS selection, and computes the masked softmax·V on the surviving
+    tokens via the Layer-1 kernels.
+
+    Returns (out [dim] f32, mask [seq] f32).
+    """
+    dim = q.shape[0]
+    q_int, qs = quantize_sym_jnp(q)
+    k_int, ks = quantize_sym_jnp(k)
+    planes = decompose_planes_jnp(k_int)
+    radius_int = jnp.maximum(
+        jnp.round(
+            radius_logit * jnp.sqrt(jnp.float64(dim))
+            / (qs.astype(jnp.float64) * ks.astype(jnp.float64))
+        ),
+        1.0,
+    )
+    mask, exact = besf_mask(q_int, planes, alpha, radius_int, valid=valid)
+    logit_scale = (qs * ks).astype(jnp.float64) / jnp.sqrt(jnp.float64(dim))
+    logits = (exact * logit_scale).astype(jnp.float32)
+    out = sparse_attn.masked_attention(logits, mask, v)
+    return out, mask
+
+
+def dense_attention(q, k, v, valid=None):
+    """INT12 dense attention (the accuracy baseline), one query."""
+    dim = q.shape[0]
+    q_int, qs = quantize_sym_jnp(q)
+    k_int, ks = quantize_sym_jnp(k)
+    logits = (k_int.astype(jnp.float64) @ q_int.astype(jnp.float64))
+    logits = logits * (qs * ks).astype(jnp.float64) / jnp.sqrt(jnp.float64(dim))
+    mask = jnp.ones((k.shape[0],), jnp.float32) if valid is None else valid
+    return sparse_attn.masked_attention(logits.astype(jnp.float32), mask, v), mask
+
+
+# ---------------------------------------------------------------------------
+# Tiny transformer (pre-LN GPT) — must match rust/src/model exactly
+# ---------------------------------------------------------------------------
+
+def init_tiny(cfg, seed=0):
+    """Initialize parameters. cfg: dict(vocab, d_model, n_layers, n_heads, max_seq)."""
+    rng = np.random.RandomState(seed)
+    d = cfg["d_model"]
+
+    def normal(*shape, scale):
+        return jnp.asarray(rng.normal(0, scale, size=shape), jnp.float32)
+
+    params = {
+        "tok_emb": normal(cfg["vocab"], d, scale=0.08),
+        "pos_emb": normal(cfg["max_seq"], d, scale=0.04),
+        "ln_f.g": jnp.ones((d,), jnp.float32),
+        "ln_f.b": jnp.zeros((d,), jnp.float32),
+        "lm_head": normal(d, cfg["vocab"], scale=0.08),
+    }
+    proj = 0.08 / np.sqrt(2.0 * cfg["n_layers"])
+    for i in range(cfg["n_layers"]):
+        p = f"layers.{i}."
+        params[p + "ln1.g"] = jnp.ones((d,), jnp.float32)
+        params[p + "ln1.b"] = jnp.zeros((d,), jnp.float32)
+        params[p + "wq"] = normal(d, d, scale=0.08)
+        params[p + "wk"] = normal(d, d, scale=0.08)
+        params[p + "wv"] = normal(d, d, scale=0.08)
+        params[p + "wo"] = normal(d, d, scale=proj)
+        params[p + "ln2.g"] = jnp.ones((d,), jnp.float32)
+        params[p + "ln2.b"] = jnp.zeros((d,), jnp.float32)
+        params[p + "w1"] = normal(d, 4 * d, scale=0.08)
+        params[p + "b1"] = jnp.zeros((4 * d,), jnp.float32)
+        params[p + "w2"] = normal(4 * d, d, scale=proj)
+        params[p + "b2"] = jnp.zeros((d,), jnp.float32)
+    return params
+
+
+def _layer_norm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def _gelu(x):
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608 * (x + 0.044715 * x ** 3)))
+
+
+def tiny_forward(params, tokens, cfg, collect_qkv=False):
+    """Forward pass: tokens [S] int32 → logits [S, vocab].
+
+    With collect_qkv=True also returns per-layer (q, k, v) tensors
+    [S, d_model] (pre-head-split) for trace export.
+    """
+    d = cfg["d_model"]
+    heads = cfg["n_heads"]
+    hd = d // heads
+    s = tokens.shape[0]
+    x = params["tok_emb"][tokens] + params["pos_emb"][:s]
+    qkvs = []
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    for i in range(cfg["n_layers"]):
+        p = f"layers.{i}."
+        h = _layer_norm(x, params[p + "ln1.g"], params[p + "ln1.b"])
+        q = h @ params[p + "wq"]
+        k = h @ params[p + "wk"]
+        v = h @ params[p + "wv"]
+        if collect_qkv:
+            qkvs.append((q, k, v))
+        qh = q.reshape(s, heads, hd).transpose(1, 0, 2)
+        kh = k.reshape(s, heads, hd).transpose(1, 0, 2)
+        vh = v.reshape(s, heads, hd).transpose(1, 0, 2)
+        att = jnp.einsum("hqd,hkd->hqk", qh, kh) / np.sqrt(hd)
+        att = jnp.where(causal[None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        out = jnp.einsum("hqk,hkd->hqd", att, vh).transpose(1, 0, 2).reshape(s, d)
+        x = x + out @ params[p + "wo"]
+        h2 = _layer_norm(x, params[p + "ln2.g"], params[p + "ln2.b"])
+        h2 = _gelu(h2 @ params[p + "w1"] + params[p + "b1"])
+        x = x + h2 @ params[p + "w2"] + params[p + "b2"]
+    x = _layer_norm(x, params["ln_f.g"], params["ln_f.b"])
+    logits = x @ params["lm_head"]
+    if collect_qkv:
+        return logits, qkvs
+    return logits
+
+
+def tiny_loss(params, tokens, cfg):
+    """Mean next-token cross-entropy over a [B, S] batch."""
+    def one(seq):
+        logits = tiny_forward(params, seq, cfg)
+        logp = jax.nn.log_softmax(logits[:-1], axis=-1)
+        tgt = seq[1:]
+        return -jnp.mean(jnp.take_along_axis(logp, tgt[:, None], axis=-1))
+
+    return jnp.mean(jax.vmap(one)(tokens))

@@ -1,0 +1,246 @@
+"""Train the tiny character-level transformer and export build-time artifacts.
+
+Substitute for the paper's OPT-1.3B / Llama2-7B + Wikitext-2 / Dolly quality
+evaluation (see DESIGN.md §2): a real LM trained on a synthetic structured
+corpus, whose real attention distributions and perplexity drive the
+PPL-vs-α experiments (Fig. 10 PPL column, Fig. 13 (a)).
+
+Outputs (into --out-dir, default ../artifacts/tiny_model):
+  weights.bin      — BSWGHT01 format (rust/src/model/loader.rs)
+  val_tokens.bin   — BSTOK001 held-out token stream
+  traces.bin       — BSTRACE1 attention records captured from a forward pass
+  golden_besf.txt  — BESF selection test vectors for the Rust golden test
+  meta.txt         — training log / corpus stats
+
+Usage: python -m compile.train_tiny --out-dir ../artifacts/tiny_model
+"""
+
+import argparse
+import os
+import struct
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+from .kernels import ref
+
+CFG = {"vocab": 0, "d_model": 64, "n_layers": 3, "n_heads": 4, "max_seq": 96}
+
+
+# ---------------------------------------------------------------------------
+# Synthetic structured corpus: a deterministic Markov grammar over words.
+# Structured enough that attention matters (agreement between distant words),
+# small enough to train in seconds.
+# ---------------------------------------------------------------------------
+
+SUBJECTS = ["the cat", "a dog", "the robot", "my friend", "the old sailor",
+            "a tiny bird", "the compiler", "that engine"]
+VERBS = ["runs", "jumps", "sleeps", "computes", "sails", "sings", "parses",
+         "stalls"]
+OBJECTS = ["over the hill", "in the garden", "through the night",
+           "across the sea", "under the table", "beyond the wall",
+           "with great care", "without a sound"]
+CONNECT = ["and then", "but soon", "because", "while", "so"]
+
+
+def make_corpus(n_sentences, seed):
+    rng = np.random.RandomState(seed)
+    parts = []
+    for _ in range(n_sentences):
+        s = rng.randint(len(SUBJECTS))
+        # verb correlates with subject (long-range structure for attention)
+        v = (s + rng.randint(2)) % len(VERBS)
+        o = rng.randint(len(OBJECTS))
+        sent = f"{SUBJECTS[s]} {VERBS[v]} {OBJECTS[o]}"
+        if rng.rand() < 0.5:
+            c = CONNECT[rng.randint(len(CONNECT))]
+            s2 = rng.randint(len(SUBJECTS))
+            sent += f" {c} {SUBJECTS[s2]} {VERBS[(s2 + rng.randint(2)) % len(VERBS)]}"
+        parts.append(sent + ". ")
+    return "".join(parts)
+
+
+def tokenize(text):
+    chars = sorted(set(text))
+    stoi = {c: i for i, c in enumerate(chars)}
+    return np.array([stoi[c] for c in text], np.uint16), chars
+
+
+# ---------------------------------------------------------------------------
+# Adam (inline — no optax dependency requirements)
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    z = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": z, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": 0}
+
+
+def adam_step(params, grads, state, lr=3e-3, b1=0.9, b2=0.99, eps=1e-8):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    mhat = {k: m[k] / (1 - b1 ** t) for k in params}
+    vhat = {k: v[k] / (1 - b2 ** t) for k in params}
+    new = {k: params[k] - lr * mhat[k] / (jnp.sqrt(vhat[k]) + eps) for k in params}
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Binary writers (formats shared with rust/src/model/loader.rs, workload/trace.rs)
+# ---------------------------------------------------------------------------
+
+def write_weights(path, cfg, params):
+    with open(path, "wb") as f:
+        f.write(b"BSWGHT01")
+        for key in ["vocab", "d_model", "n_layers", "n_heads", "max_seq"]:
+            f.write(struct.pack("<I", cfg[key]))
+        names = list(params.keys())
+        f.write(struct.pack("<I", len(names)))
+        for name in names:
+            data = np.asarray(params[name], np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", data.ndim))
+            for d in data.shape:
+                f.write(struct.pack("<I", d))
+            f.write(data.tobytes())
+
+
+def write_tokens(path, tokens):
+    with open(path, "wb") as f:
+        f.write(b"BSTOK001")
+        f.write(struct.pack("<I", len(tokens)))
+        f.write(np.asarray(tokens, np.uint16).tobytes())
+
+
+def write_traces(path, records):
+    with open(path, "wb") as f:
+        f.write(b"BSTRACE1")
+        f.write(struct.pack("<I", len(records)))
+        for q, k, v in records:
+            seq, dim = k.shape
+            assert q.shape == (dim,) and v.shape == (seq, dim)
+            f.write(struct.pack("<II", seq, dim))
+            f.write(np.asarray(q, np.float32).tobytes())
+            f.write(np.asarray(k, np.float32).tobytes())
+            f.write(np.asarray(v, np.float32).tobytes())
+
+
+def write_golden(path, cases):
+    """BESF golden vectors: plain text the Rust golden test parses."""
+    with open(path, "w") as f:
+        f.write(f"{len(cases)}\n")
+        for q_int, k_int, alpha, radius_int, death, survivors in cases:
+            seq, dim = k_int.shape
+            f.write(f"case {dim} {seq} {alpha} {int(radius_int)}\n")
+            f.write(" ".join(str(int(x)) for x in q_int) + "\n")
+            for j in range(seq):
+                f.write(" ".join(str(int(x)) for x in k_int[j]) + "\n")
+            f.write(" ".join(str(int(d)) for d in death) + "\n")
+            f.write(" ".join(str(j) for j in np.nonzero(survivors)[0]) + "\n")
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts/tiny_model")
+    ap.add_argument("--steps", type=int, default=500)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    text = make_corpus(6000, args.seed)
+    tokens, chars = tokenize(text)
+    cfg = dict(CFG)
+    cfg["vocab"] = len(chars)
+    split = int(len(tokens) * 0.9)
+    train_toks, val_toks = tokens[:split], tokens[split:]
+    print(f"corpus: {len(tokens)} tokens, vocab {cfg['vocab']}")
+
+    params = model.init_tiny(cfg, seed=args.seed)
+    opt = adam_init(params)
+    win = cfg["max_seq"]
+    rng = np.random.RandomState(args.seed + 1)
+
+    loss_fn = jax.jit(
+        lambda p, b: model.tiny_loss(p, b, cfg), static_argnames=()
+    ) if False else jax.jit(lambda p, b: model.tiny_loss(p, b, cfg))
+    grad_fn = jax.jit(jax.value_and_grad(lambda p, b: model.tiny_loss(p, b, cfg)))
+
+    t0 = time.time()
+    losses = []
+    for step in range(args.steps):
+        starts = rng.randint(0, len(train_toks) - win - 1, size=args.batch)
+        batch = np.stack([train_toks[s:s + win].astype(np.int32) for s in starts])
+        loss, grads = grad_fn(params, jnp.asarray(batch))
+        params, opt = adam_step(params, grads, opt)
+        losses.append(float(loss))
+        if step % 100 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.1f}s)")
+    final_loss = float(np.mean(losses[-20:]))
+
+    # --- exports ---
+    write_weights(os.path.join(args.out_dir, "weights.bin"), cfg, params)
+    write_tokens(os.path.join(args.out_dir, "val_tokens.bin"),
+                 val_toks[: 4096])
+    write_tokens(os.path.join(args.out_dir, "train_tokens.bin"),
+                 train_toks[: 4096])
+
+    # Attention traces: real QKV from a validation window, per layer, head 0
+    # and head 1, decode-position query (the last row).
+    window = val_toks[:win].astype(np.int32)
+    _, qkvs = model.tiny_forward(params, jnp.asarray(window), cfg,
+                                 collect_qkv=True)
+    hd = cfg["d_model"] // cfg["n_heads"]
+    records = []
+    for (q, k, v) in qkvs:
+        for h in range(2):
+            sl = slice(h * hd, (h + 1) * hd)
+            records.append((
+                np.asarray(q[-1, sl], np.float32),
+                np.asarray(k[:, sl], np.float32),
+                np.asarray(v[:, sl], np.float32),
+            ))
+    write_traces(os.path.join(args.out_dir, "traces.bin"), records)
+
+    # Golden BESF vectors: quantized real traces + adversarial random cases.
+    golden = []
+    g_rng = np.random.RandomState(99)
+    for idx, (q, k, v) in enumerate(records[:3]):
+        q_int, qs = ref.quantize_sym(q)
+        k_int, ks = ref.quantize_sym(k)
+        alpha = [0.2, 0.5, 0.8][idx % 3]
+        radius_int = round(ref.radius_int_from_logit(5.0, q.shape[0], qs, ks))
+        death, surv, _ = ref.ref_besf_select(q_int, k_int, alpha, radius_int)
+        golden.append((q_int, k_int, alpha, radius_int, death, surv))
+    for idx in range(3):
+        dim, seq = 16, 32
+        q_int = g_rng.randint(-2048, 2048, size=dim).astype(np.float32)
+        k_int = g_rng.randint(-2048, 2048, size=(seq, dim)).astype(np.float32)
+        alpha = [0.0, 0.4, 1.0][idx]
+        radius_int = int(g_rng.randint(1, 500000))
+        death, surv, _ = ref.ref_besf_select(q_int, k_int, alpha, radius_int)
+        golden.append((q_int, k_int, alpha, radius_int, death, surv))
+    write_golden(os.path.join(args.out_dir, "golden_besf.txt"), golden)
+
+    with open(os.path.join(args.out_dir, "meta.txt"), "w") as f:
+        f.write(f"vocab {cfg['vocab']}\nd_model {cfg['d_model']}\n"
+                f"n_layers {cfg['n_layers']}\nn_heads {cfg['n_heads']}\n"
+                f"max_seq {cfg['max_seq']}\nsteps {args.steps}\n"
+                f"final_loss {final_loss:.4f}\n"
+                f"train_tokens {len(train_toks)}\nval_tokens {len(val_toks)}\n"
+                f"chars {''.join(chars)!r}\n")
+    print(f"exports written to {args.out_dir} (final loss {final_loss:.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,173 @@
+"""Layer-1 kernel correctness: Pallas kernels vs the pure-numpy oracle.
+
+Hypothesis sweeps shapes and value ranges; every property asserts
+allclose against ref.py — the core correctness signal of the build path.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bitplane_qk, ref, sparse_attn
+
+RNG = np.random.RandomState(0)
+
+
+def rand_ints(shape, rng):
+    return rng.randint(-2048, 2048, size=shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# bitplane decomposition / margins (oracle self-consistency)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(min_value=-2048, max_value=2047))
+@settings(max_examples=60, deadline=None)
+def test_planes_reconstruct_every_value(v):
+    planes = ref.decompose_planes(np.array([[v]], np.float32))
+    w = ref.plane_weights()
+    total = float((w[:, None, None] * planes).sum())
+    assert total == v
+
+
+@given(st.integers(min_value=1, max_value=48), st.integers(min_value=0, max_value=2**32 - 1))
+@settings(max_examples=30, deadline=None)
+def test_margin_interval_sound(dim, seed):
+    rng = np.random.RandomState(seed % (2**31))
+    q = rand_ints(dim, rng)
+    k = rand_ints((1, dim), rng)
+    planes = ref.decompose_planes(k)
+    scores = ref.ref_cumulative_scores(q, planes)[:, 0]
+    m_min, m_max = ref.ref_margins(q)
+    exact = float(np.asarray(k, np.float64)[0] @ np.asarray(q, np.float64))
+    for r in range(ref.N_BITS):
+        assert scores[r] + m_min[r] <= exact + 1e-6
+        assert scores[r] + m_max[r] >= exact - 1e-6
+    assert scores[ref.N_BITS - 1] == pytest.approx(exact)
+
+
+# ---------------------------------------------------------------------------
+# Pallas bitplane_scores vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seq,dim", [(8, 8), (64, 32), (100, 17), (128, 64)])
+def test_bitplane_scores_matches_ref(seq, dim):
+    rng = np.random.RandomState(seq * 1000 + dim)
+    q = rand_ints(dim, rng)
+    k = rand_ints((seq, dim), rng)
+    planes = ref.decompose_planes(k)
+    got = np.asarray(bitplane_qk.bitplane_scores(q, planes))
+    want = ref.ref_bitplane_scores(q, planes)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@given(
+    st.integers(min_value=1, max_value=40),
+    st.integers(min_value=1, max_value=24),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_bitplane_scores_matches_ref_hypothesis(seq, dim, seed):
+    rng = np.random.RandomState(seed)
+    q = rand_ints(dim, rng)
+    k = rand_ints((seq, dim), rng)
+    planes = ref.decompose_planes(k)
+    got = np.asarray(bitplane_qk.bitplane_scores(q, planes, block_seq=16))
+    want = ref.ref_bitplane_scores(q, planes)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_cumulative_scores_equal_exact_dot_at_lsb():
+    rng = np.random.RandomState(3)
+    q = rand_ints(24, rng)
+    k = rand_ints((16, 24), rng)
+    planes = ref.decompose_planes(k)
+    cum = np.asarray(bitplane_qk.cumulative_scores(q, planes))
+    exact = np.asarray(k, np.float64) @ np.asarray(q, np.float64)
+    np.testing.assert_allclose(cum[-1], exact, rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# Pallas masked attention vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seq,dim", [(4, 4), (64, 32), (128, 64)])
+def test_masked_attention_matches_ref(seq, dim):
+    rng = np.random.RandomState(seq + dim)
+    logits = rng.normal(0, 2, size=seq).astype(np.float32)
+    mask = (rng.rand(seq) < 0.5).astype(np.float32)
+    mask[int(np.argmax(logits))] = 1.0  # never empty
+    v = rng.normal(0, 1, size=(seq, dim)).astype(np.float32)
+    got = np.asarray(sparse_attn.masked_attention(logits, mask, v))
+    want = ref.ref_masked_attention(logits, mask, v)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_masked_attention_full_mask_is_softmax():
+    rng = np.random.RandomState(9)
+    seq, dim = 32, 16
+    logits = rng.normal(size=seq).astype(np.float32)
+    v = rng.normal(size=(seq, dim)).astype(np.float32)
+    got = np.asarray(sparse_attn.masked_attention(logits, np.ones(seq, np.float32), v))
+    e = np.exp(logits - logits.max())
+    p = e / e.sum()
+    np.testing.assert_allclose(got, p @ v, rtol=2e-5, atol=2e-5)
+
+
+def test_masked_attention_pruned_tokens_have_zero_weight():
+    seq, dim = 8, 4
+    logits = np.zeros(seq, np.float32)
+    mask = np.zeros(seq, np.float32)
+    mask[3] = 1.0
+    v = np.arange(seq * dim, dtype=np.float32).reshape(seq, dim)
+    got = np.asarray(sparse_attn.masked_attention(logits, mask, v))
+    np.testing.assert_allclose(got, v[3], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# BESF selection oracle properties (mirrors the Rust proptests)
+# ---------------------------------------------------------------------------
+
+@given(
+    st.integers(min_value=2, max_value=40),
+    st.integers(min_value=1, max_value=20),
+    st.floats(min_value=0.0, max_value=1.0),
+    st.integers(min_value=1, max_value=10**6),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_besf_matches_brute_force(seq, dim, alpha, radius, seed):
+    rng = np.random.RandomState(seed)
+    q = rand_ints(dim, rng)
+    k = rand_ints((seq, dim), rng)
+    _, surv, _ = ref.ref_besf_select(q, k, alpha, radius)
+    brute = ref.ref_brute_force_select(q, k, alpha, radius)
+    np.testing.assert_array_equal(surv, brute)
+
+
+def test_besf_argmax_always_survives():
+    rng = np.random.RandomState(17)
+    for _ in range(10):
+        q = rand_ints(16, rng)
+        k = rand_ints((32, 16), rng)
+        _, surv, exact = ref.ref_besf_select(q, k, 0.0, 1)
+        assert surv[int(np.argmax(exact))]
+
+
+def test_besf_death_rounds_monotone_with_alpha():
+    rng = np.random.RandomState(23)
+    q = rand_ints(32, rng)
+    k = rand_ints((64, 32), rng)
+    d_tight, s_tight, _ = ref.ref_besf_select(q, k, 0.1, 10**5)
+    d_loose, s_loose, _ = ref.ref_besf_select(q, k, 0.9, 10**5)
+    # Looser band keeps at least as many tokens at least as long.
+    assert s_tight.sum() <= s_loose.sum()
+    assert np.all(d_tight <= d_loose)
+
+
+def test_quantize_roundtrip_error():
+    rng = np.random.RandomState(31)
+    x = rng.normal(0, 3, size=256).astype(np.float32)
+    q, s = ref.quantize_sym(x)
+    assert np.all(np.abs(x - q * s) <= 0.5 * s + 1e-6)
+    assert np.abs(q).max() <= 2048

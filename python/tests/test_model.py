@@ -1,0 +1,127 @@
+"""Layer-2 model tests: fused BESF attention pipeline + tiny transformer."""
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def synth(seq, dim, seed):
+    rng = np.random.RandomState(seed)
+    q = rng.normal(0, 1, size=dim).astype(np.float32)
+    k = rng.normal(0, 1, size=(seq, dim)).astype(np.float32)
+    v = rng.normal(0, 1, size=(seq, dim)).astype(np.float32)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Fused BESF attention
+# ---------------------------------------------------------------------------
+
+def test_besf_attention_close_to_int12_dense_at_default_alpha():
+    q, k, v = synth(128, 32, 1)
+    out, mask = model.besf_attention(q, k, v, alpha=0.6)
+    want = ref.ref_int12_attention(q, k, v)
+    got = np.asarray(out)
+    rel = np.linalg.norm(got - want) / np.linalg.norm(want)
+    assert rel < 0.15, f"rel err {rel} (mask keeps {np.asarray(mask).sum()})"
+
+
+def test_besf_attention_huge_radius_equals_dense():
+    q, k, v = synth(64, 16, 2)
+    out_s, mask = model.besf_attention(q, k, v, alpha=1.0, radius_logit=1e6)
+    out_d, _ = model.dense_attention(q, k, v)
+    assert np.asarray(mask).sum() == 64
+    np.testing.assert_allclose(np.asarray(out_s), np.asarray(out_d),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_besf_mask_matches_oracle_selection():
+    q, k, v = synth(96, 24, 3)
+    alpha = 0.5
+    q_int, qs = ref.quantize_sym(q)
+    k_int, ks = ref.quantize_sym(k)
+    radius_int = ref.radius_int_from_logit(5.0, 24, qs, ks)
+    _, want_mask, _ = ref.ref_besf_select(q_int, k_int, alpha, radius_int)
+    _, got_mask = model.besf_attention(q, k, v, alpha=alpha)
+    np.testing.assert_array_equal(np.asarray(got_mask) > 0, want_mask)
+
+
+def test_besf_attention_prunes_at_tight_alpha():
+    q, k, v = synth(256, 32, 4)
+    _, mask = model.besf_attention(q, k, v, alpha=0.2)
+    kept = float(np.asarray(mask).sum())
+    assert kept < 256, "tight alpha must prune"
+    assert kept >= 1, "max token always survives"
+
+
+def test_valid_mask_excludes_padding():
+    q, k, v = synth(32, 16, 5)
+    # Give padding rows large values so they would otherwise dominate.
+    k[16:] = 10.0
+    valid = np.zeros(32, np.float32)
+    valid[:16] = 1.0
+    _, mask = model.besf_attention(q, k, v, valid=valid)
+    assert np.asarray(mask)[16:].sum() == 0
+
+
+def test_dense_attention_matches_ref_int12():
+    # The in-graph path keeps V at f32 (the V-PU dequantizes on the fly), the
+    # oracle quantizes V too — differences are bounded by V's quant error.
+    q, k, v = synth(64, 32, 6)
+    out, _ = model.dense_attention(q, k, v)
+    want = ref.ref_int12_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Tiny transformer
+# ---------------------------------------------------------------------------
+
+CFG = {"vocab": 19, "d_model": 16, "n_layers": 2, "n_heads": 2, "max_seq": 12}
+
+
+def test_tiny_forward_shapes():
+    params = model.init_tiny(CFG, seed=0)
+    toks = np.arange(10, dtype=np.int32) % CFG["vocab"]
+    logits = model.tiny_forward(params, toks, CFG)
+    assert logits.shape == (10, CFG["vocab"])
+    assert bool(np.isfinite(np.asarray(logits)).all())
+
+
+def test_tiny_forward_is_causal():
+    params = model.init_tiny(CFG, seed=1)
+    t1 = np.array([1, 2, 3, 4, 5, 6], np.int32)
+    t2 = np.array([1, 2, 3, 4, 17, 18], np.int32)
+    l1 = np.asarray(model.tiny_forward(params, t1, CFG))
+    l2 = np.asarray(model.tiny_forward(params, t2, CFG))
+    np.testing.assert_allclose(l1[:4], l2[:4], rtol=1e-5, atol=1e-5)
+
+
+def test_tiny_loss_decreases_with_one_adam_step():
+    from compile.train_tiny import adam_init, adam_step
+    import jax
+
+    params = model.init_tiny(CFG, seed=2)
+    rng = np.random.RandomState(0)
+    batch = rng.randint(0, CFG["vocab"], size=(4, CFG["max_seq"])).astype(np.int32)
+    grad_fn = jax.value_and_grad(lambda p, b: model.tiny_loss(p, b, CFG))
+    loss0, grads = grad_fn(params, batch)
+    opt = adam_init(params)
+    # A few steps on the same batch must reduce its loss.
+    for _ in range(5):
+        loss, grads = grad_fn(params, batch)
+        params, opt = adam_step(params, grads, opt, lr=1e-2)
+    loss1, _ = grad_fn(params, batch)
+    assert float(loss1) < float(loss0), f"{float(loss1)} !< {float(loss0)}"
+
+
+def test_collect_qkv_shapes():
+    params = model.init_tiny(CFG, seed=3)
+    toks = np.arange(8, dtype=np.int32) % CFG["vocab"]
+    _, qkvs = model.tiny_forward(params, toks, CFG, collect_qkv=True)
+    assert len(qkvs) == CFG["n_layers"]
+    for q, k, v in qkvs:
+        assert q.shape == (8, CFG["d_model"])
+        assert k.shape == v.shape == (8, CFG["d_model"])

@@ -1,0 +1,97 @@
+//! Hot-path microbenchmarks (custom harness): the L3 kernels whose
+//! performance bounds the whole-figure suite — bit-plane dot products, BESF
+//! selection, the DRAM model and the lane engine. Used by the §Perf pass in
+//! EXPERIMENTS.md.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use bitstopper::algo::{besf_select, Lats};
+use bitstopper::config::LatsConfig;
+use bitstopper::quant::{margin::BitMargins, BitPlanes};
+use bitstopper::sim::dram::{Dram, DramConfig};
+use bitstopper::sim::qkpu::{assign_round_robin, simulate_lanes, ChainTask, FetchSpec};
+use bitstopper::util::stats::Summary;
+use bitstopper::util::SplitMix64;
+use bitstopper::workload::{AttnWorkload, QuantAttn, SynthConfig};
+use std::time::Instant;
+
+fn time_it<F: FnMut() -> u64>(name: &str, iters: usize, mut f: F) {
+    let mut acc = 0u64;
+    acc = acc.wrapping_add(f()); // warmup
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        acc = acc.wrapping_add(f());
+        times.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    std::hint::black_box(acc);
+    let s = Summary::of(&times);
+    println!(
+        "bench {name:<28} {:>9.3} ms/iter (p50 {:>9.3}, p95 {:>9.3}, n={})",
+        s.mean, s.p50, s.p95, s.n
+    );
+}
+
+fn main() {
+    println!("== BitStopper hot-path microbenches ==\n");
+    let (seq, dim) = (2048usize, 128usize);
+    let w = AttnWorkload::generate(SynthConfig::new(seq, dim, 8, 7));
+    let qs: Vec<Vec<f32>> = (0..8).map(|i| w.query(i).to_vec()).collect();
+    let qa = QuantAttn::quantize(&qs, &w.k, &w.v, seq, dim);
+    let planes = BitPlanes::decompose(&qa.k);
+    let lats = Lats::new(LatsConfig::default(), dim, qa.qp.scale, qa.kp.scale);
+
+    // L3 hot path #1: bit-plane decomposition (build-time per context).
+    time_it("bitplane_decompose_2kx128", 10, || {
+        let p = BitPlanes::decompose(&qa.k);
+        p.keys as u64
+    });
+
+    // L3 hot path #2: one plane pass over all keys (the BRAT inner loop).
+    time_it("plane_dot_round0_all_keys", 20, || {
+        let q = &qa.queries[0];
+        let mut acc = 0i64;
+        for j in 0..seq {
+            acc += planes.plane_dot(0, j, q);
+        }
+        acc as u64
+    });
+
+    // L3 hot path #3: full BESF selection for one query.
+    time_it("besf_select_2kx128", 10, || {
+        let margins = BitMargins::generate(&qa.queries[0]);
+        let r = besf_select(&qa.queries[0], &planes, &margins, &lats);
+        r.survivors.len() as u64
+    });
+
+    // L3 hot path #4: DRAM model throughput (100k requests).
+    time_it("dram_model_100k_reads", 10, || {
+        let mut d = Dram::new(DramConfig::default());
+        let mut rng = SplitMix64::new(3);
+        let mut t = 0;
+        for _ in 0..100_000 {
+            t = d.read(rng.below(1 << 24), 16, t.min(1 << 40));
+        }
+        t
+    });
+
+    // L3 hot path #5: lane engine on a realistic chain mix.
+    let chains: Vec<ChainTask> = (0..seq)
+        .map(|j| ChainTask {
+            steps: (0..3)
+                .map(|r| FetchSpec { addr: (r * seq + j) as u64 * 16, bytes: 16, compute: 2 })
+                .collect(),
+        })
+        .collect();
+    let lanes = assign_round_robin(chains, 32);
+    time_it("lane_engine_2k_chains", 10, || {
+        let mut d = Dram::new(DramConfig::default());
+        simulate_lanes(&lanes, &mut d, 0, 64).finish
+    });
+
+    // End-to-end: one full accelerator simulation.
+    time_it("simulate_attention_2kx128x8q", 5, || {
+        let cfg = bitstopper::config::SimConfig::default();
+        bitstopper::sim::simulate_attention(&qa, &cfg).cycles
+    });
+}

@@ -1,0 +1,71 @@
+//! Paper-figure benchmark suite (custom harness — criterion is unavailable
+//! offline). One bench per table/figure: each regenerates its figure while
+//! timing the full simulation stack, printing both the wall-time statistics
+//! and the figure rows (the numbers the paper reports).
+//!
+//! Run: `cargo bench` (or `cargo bench -- 11` to filter by name substring).
+
+use bitstopper::figures;
+use bitstopper::util::stats::Summary;
+use std::time::Instant;
+
+fn bench<F: FnMut() -> bitstopper::report::Table>(name: &str, iters: usize, mut f: F) {
+    // Warmup.
+    let table = f();
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let t = f();
+        times.push(t0.elapsed().as_secs_f64() * 1e3);
+        std::hint::black_box(t);
+    }
+    let s = Summary::of(&times);
+    println!(
+        "bench {name:<22} {:>8.1} ms/iter (p50 {:>8.1}, p95 {:>8.1}, n={})",
+        s.mean, s.p50, s.p95, s.n
+    );
+    println!("{}", table.render());
+}
+
+fn main() {
+    let filter: Option<String> = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+    let run = |name: &str| filter.as_deref().map(|f| name.contains(f)).unwrap_or(true);
+
+    println!("== BitStopper paper-figure bench suite ==\n");
+    if run("table1") {
+        bench("table1_config", 3, figures::table1);
+    }
+    if run("fig3a") {
+        bench("fig3a_power_split", 2, figures::fig3a);
+    }
+    if run("fig3b") {
+        bench("fig3b_selection_acc", 2, figures::fig3b);
+    }
+    if run("fig10") {
+        bench("fig10_complexity", 1, figures::fig10);
+    }
+    if run("fig11") {
+        bench("fig11_dram_access", 1, figures::fig11);
+    }
+    if run("fig12") {
+        bench("fig12_speedup_energy", 1, figures::fig12);
+    }
+    if run("fig13a") {
+        bench("fig13a_alpha_sweep", 1, figures::fig13a);
+    }
+    if run("fig13b") {
+        bench("fig13b_breakdown", 1, figures::fig13b);
+    }
+    if run("fig14") {
+        bench("fig14_area_power", 3, figures::fig14);
+    }
+    if run("headline") {
+        bench("headline_claims", 1, figures::headline);
+    }
+    if run("ablation") {
+        bench("ablation_scoreboard", 1, figures::ablations::ablation_scoreboard);
+        bench("ablation_dram_latency", 1, figures::ablations::ablation_dram_latency);
+        bench("ablation_radius", 1, figures::ablations::ablation_radius);
+        bench("ablation_lanes", 1, figures::ablations::ablation_lanes);
+    }
+}

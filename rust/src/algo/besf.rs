@@ -1,0 +1,295 @@
+//! BESF — Bit-serial Enabled Stage Fusion (paper §III-A, Fig. 5).
+//!
+//! The functional model of the fused prediction/execution pipeline: partial
+//! scores are accumulated plane-by-plane (MSB first); after each round the
+//! LATS threshold is re-derived and tokens whose upper bound falls below it
+//! are terminated — their remaining bit planes are never fetched, and the
+//! partials already computed for survivors are *reused* (nothing is
+//! recomputed in a separate "formal" stage).
+//!
+//! Key invariant (tested here, in `python/tests`, and via golden vectors):
+//! BESF is **exact** with respect to its final-round rule — the surviving set
+//! equals the brute-force set `{ j : A_j ≥ max_j A_j − α·radius }` computed
+//! from full-precision scores, because interval bounds are sound and the
+//! threshold derived from lower bounds can never exceed the true one.
+
+use crate::algo::complexity::Complexity;
+use crate::algo::lats::Lats;
+use crate::quant::bitplane::{BitPlanes, N_BITS};
+use crate::quant::margin::BitMargins;
+
+/// Sentinel death round for tokens that survive all 12 rounds.
+pub const SURVIVED: u8 = N_BITS as u8;
+
+/// Outcome of BESF selection for a single query.
+#[derive(Debug, Clone)]
+pub struct BesfResult {
+    /// Indices of surviving keys, ascending.
+    pub survivors: Vec<usize>,
+    /// Per-key round at which the token was pruned; `SURVIVED` (12) if kept.
+    pub death_round: Vec<u8>,
+    /// Exact integer scores of surviving keys (parallel to `survivors`).
+    pub scores: Vec<i64>,
+    /// Per-round count of still-active tokens *entering* each round
+    /// (`active_per_round[0] == S`).
+    pub active_per_round: [usize; N_BITS],
+    /// Work/traffic consumed by the QK stage (V-stage traffic is added by the
+    /// caller, which knows the V layout).
+    pub complexity: Complexity,
+}
+
+impl BesfResult {
+    /// Fraction of K bit-planes fetched relative to dense 12-bit fetch.
+    /// A token pruned at round `r` consumed `r + 1` planes; survivors all 12.
+    pub fn k_traffic_fraction(&self) -> f64 {
+        if self.death_round.is_empty() {
+            return 0.0;
+        }
+        let total_rounds: u64 = self
+            .death_round
+            .iter()
+            .map(|&d| if d == SURVIVED { N_BITS as u64 } else { d as u64 + 1 })
+            .sum();
+        total_rounds as f64 / (self.death_round.len() as u64 * N_BITS as u64) as f64
+    }
+
+    /// Keep rate: survivors / total keys.
+    pub fn keep_rate(&self) -> f64 {
+        self.survivors.len() as f64 / self.death_round.len() as f64
+    }
+}
+
+/// Run BESF token selection for one query against a bit-plane-decomposed Key
+/// matrix.
+///
+/// * `q` — full-precision INT12 query (length = `planes.dim`).
+/// * `planes` — 12-plane decomposition of K.
+/// * `margins` — the query's margin LUT (Bit Margin Generator output).
+/// * `lats` — threshold policy in the integer score domain.
+pub fn besf_select(
+    q: &[i16],
+    planes: &BitPlanes,
+    margins: &BitMargins,
+    lats: &Lats,
+) -> BesfResult {
+    besf_select_with(q, planes, margins, |_round, max_lower| lats.threshold(max_lower))
+}
+
+/// BESF with an arbitrary per-round threshold policy.
+///
+/// `policy(round, max_lower_bound) -> η` — [`besf_select`] passes the LATS
+/// rule; the BESF-only ablation (Fig. 13 (b)) passes a *static* threshold that
+/// ignores `max_lower`. Survival is always `upper ≥ η`.
+pub fn besf_select_with<P: Fn(usize, i64) -> i64>(
+    q: &[i16],
+    planes: &BitPlanes,
+    margins: &BitMargins,
+    policy: P,
+) -> BesfResult {
+    let s = planes.keys;
+    let dim = planes.dim;
+    let mut partial = vec![0i64; s];
+    let mut death_round = vec![SURVIVED; s];
+    let mut active: Vec<usize> = (0..s).collect();
+    let mut active_per_round = [0usize; N_BITS];
+    let mut cx = Complexity::default();
+
+    // Query itself is fetched once at full precision.
+    cx.q_bits += (dim * N_BITS) as u64;
+
+    for r in 0..N_BITS {
+        active_per_round[r] = active.len();
+        // --- fetch + accumulate this round's plane for every active token ---
+        for &j in &active {
+            partial[j] += planes.weighted_plane_dot(r, j, q);
+        }
+        cx.k_bits += (active.len() * dim) as u64;
+        cx.bit_ops += (active.len() * dim) as u64;
+
+        // --- derive threshold from lower bounds (Fig. 7) ---
+        let m = margins.at(r);
+        let max_lower = active.iter().map(|&j| partial[j] + m.min).max().unwrap_or(0);
+        let eta = policy(r, max_lower);
+
+        // --- prune tokens whose upper bound cannot reach the threshold ---
+        active.retain(|&j| {
+            let upper = partial[j] + m.max;
+            if upper >= eta {
+                true
+            } else {
+                death_round[j] = r as u8;
+                false
+            }
+        });
+
+        if active.is_empty() {
+            // Cannot happen (the max-lower-bound token always survives), but
+            // stay defensive for degenerate S = 0.
+            break;
+        }
+    }
+
+    let survivors = active;
+    let scores = survivors.iter().map(|&j| partial[j]).collect();
+    BesfResult { survivors, death_round, scores, active_per_round, complexity: cx }
+}
+
+/// Brute-force reference of the final selection rule: keep exactly the tokens
+/// within `α·radius` of the maximum exact score. BESF must match this set.
+pub fn brute_force_select(scores: &[i64], lats: &Lats) -> Vec<usize> {
+    let max = match scores.iter().max() {
+        Some(&m) => m,
+        None => return vec![],
+    };
+    let eta = lats.threshold(max);
+    scores
+        .iter()
+        .enumerate()
+        .filter(|(_, &a)| lats.survives(a, eta))
+        .map(|(j, _)| j)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{IntMatrix, QMAX, QMIN};
+    use crate::util::proptest::check;
+    use crate::util::SplitMix64;
+
+    fn rand_qk(rng: &mut SplitMix64, s: usize, dim: usize) -> (Vec<i16>, IntMatrix) {
+        let q: Vec<i16> =
+            (0..dim).map(|_| rng.range_i64(QMIN as i64, QMAX as i64) as i16).collect();
+        let k: Vec<i16> =
+            (0..s * dim).map(|_| rng.range_i64(QMIN as i64, QMAX as i64) as i16).collect();
+        (q, IntMatrix::new(s, dim, k))
+    }
+
+    fn run(q: &[i16], k: &IntMatrix, alpha: f64, radius: i64) -> (BesfResult, Vec<i64>) {
+        let planes = BitPlanes::decompose(k);
+        let margins = BitMargins::generate(q);
+        let lats = Lats::from_int(alpha, radius);
+        let res = besf_select(q, &planes, &margins, &lats);
+        let exact: Vec<i64> = (0..k.rows).map(|j| k.dot_row(j, q)).collect();
+        (res, exact)
+    }
+
+    #[test]
+    fn besf_equals_brute_force_on_fixed_case() {
+        let mut rng = SplitMix64::new(0xAB);
+        let (q, k) = rand_qk(&mut rng, 64, 64);
+        let (res, exact) = run(&q, &k, 0.5, 500_000);
+        let lats = Lats::from_int(0.5, 500_000);
+        assert_eq!(res.survivors, brute_force_select(&exact, &lats));
+    }
+
+    #[test]
+    fn survivor_scores_are_exact() {
+        let mut rng = SplitMix64::new(0xCD);
+        let (q, k) = rand_qk(&mut rng, 32, 48);
+        let (res, exact) = run(&q, &k, 0.4, 100_000);
+        for (idx, &j) in res.survivors.iter().enumerate() {
+            assert_eq!(res.scores[idx], exact[j], "reused partials must be exact");
+        }
+    }
+
+    #[test]
+    fn argmax_always_survives() {
+        let mut rng = SplitMix64::new(0xEF);
+        for _ in 0..20 {
+            let (q, k) = rand_qk(&mut rng, 40, 32);
+            let (res, exact) = run(&q, &k, 0.0, 1);
+            let argmax = exact
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &v)| v)
+                .unwrap()
+                .0;
+            assert!(res.survivors.contains(&argmax));
+        }
+    }
+
+    #[test]
+    fn active_set_is_monotone_nonincreasing() {
+        let mut rng = SplitMix64::new(0x11);
+        let (q, k) = rand_qk(&mut rng, 128, 64);
+        let (res, _) = run(&q, &k, 0.3, 200_000);
+        for r in 1..N_BITS {
+            assert!(res.active_per_round[r] <= res.active_per_round[r - 1]);
+        }
+        assert_eq!(res.active_per_round[0], 128);
+    }
+
+    #[test]
+    fn tighter_alpha_keeps_fewer_tokens() {
+        let mut rng = SplitMix64::new(0x22);
+        let (q, k) = rand_qk(&mut rng, 96, 64);
+        let (tight, _) = run(&q, &k, 0.1, 1_000_000);
+        let (loose, _) = run(&q, &k, 0.9, 1_000_000);
+        assert!(tight.survivors.len() <= loose.survivors.len());
+        // Tight survivors must be a subset of loose survivors.
+        for j in &tight.survivors {
+            assert!(loose.survivors.contains(j));
+        }
+    }
+
+    #[test]
+    fn early_termination_saves_k_traffic() {
+        let mut rng = SplitMix64::new(0x33);
+        // Narrow band → aggressive pruning → clearly sub-dense traffic.
+        let (q, k) = rand_qk(&mut rng, 256, 64);
+        let (res, _) = run(&q, &k, 0.2, 50_000);
+        assert!(res.k_traffic_fraction() < 0.9, "fraction={}", res.k_traffic_fraction());
+        let dense_bits = (256 * 64 * N_BITS) as u64;
+        assert!(res.complexity.k_bits < dense_bits);
+    }
+
+    #[test]
+    fn huge_radius_keeps_everything_and_fetches_everything() {
+        let mut rng = SplitMix64::new(0x44);
+        let (q, k) = rand_qk(&mut rng, 16, 16);
+        let (res, _) = run(&q, &k, 1.0, i64::MAX / 4);
+        assert_eq!(res.survivors.len(), 16);
+        assert!((res.k_traffic_fraction() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_key_set_is_handled() {
+        let k = IntMatrix::zeros(0, 8);
+        let q = vec![1i16; 8];
+        let (res, _) = run(&q, &k, 0.5, 100);
+        assert!(res.survivors.is_empty());
+    }
+
+    #[test]
+    fn prop_besf_matches_brute_force() {
+        // The paper's central claim, as an invariant: stage fusion loses
+        // nothing relative to running the full-precision selection rule.
+        check("BESF == brute force selection", 80, |rng| {
+            let s = 1 + rng.below(64) as usize;
+            let dim = 1 + rng.below(72) as usize;
+            let (q, k) = rand_qk(rng, s, dim);
+            let alpha = rng.uniform(0.0, 1.0);
+            let radius = 1 + rng.below(1_000_000) as i64;
+            let (res, exact) = run(&q, &k, alpha, radius);
+            let lats = Lats::from_int(alpha, radius);
+            assert_eq!(res.survivors, brute_force_select(&exact, &lats));
+        });
+    }
+
+    #[test]
+    fn prop_death_round_consistent_with_traffic() {
+        check("k_bits == Σ rounds_processed × dim", 40, |rng| {
+            let s = 1 + rng.below(48) as usize;
+            let dim = 1 + rng.below(64) as usize;
+            let (q, k) = rand_qk(rng, s, dim);
+            let (res, _) = run(&q, &k, 0.3, 100_000);
+            let rounds_processed: u64 = res
+                .death_round
+                .iter()
+                .map(|&d| if d == SURVIVED { N_BITS as u64 } else { d as u64 + 1 })
+                .sum();
+            assert_eq!(res.complexity.k_bits, rounds_processed * dim as u64);
+        });
+    }
+}

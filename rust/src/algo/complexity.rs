@@ -1,0 +1,102 @@
+//! Complexity accounting shared by the functional models and the baselines.
+//!
+//! The paper's Fig. 10 normalizes designs by *computation* (MAC-equivalent
+//! operations) and *memory access* (off-chip bytes). We track both at the
+//! finest granularity the designs differ in: single-bit MAC operations (one
+//! AND + add in a BRAT lane) and bit-level DRAM traffic.
+
+/// One INT12×INT12 MAC expressed in 1-bit MAC equivalents. A b-bit × b-bit
+/// multiply is b² single-bit partial products; we follow the bit-serial
+/// literature and normalize by operand bits processed: a 12b×12b MAC consumes
+/// 12 passes of a 12b×1b lane, i.e. `BITS` bit-serial ops of 12-bit width.
+pub const BITS: u64 = crate::quant::bitplane::N_BITS as u64;
+
+/// Aggregated work/traffic counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Complexity {
+    /// Off-chip Key traffic, bits.
+    pub k_bits: u64,
+    /// Off-chip Value traffic, bits.
+    pub v_bits: u64,
+    /// Off-chip Query traffic, bits.
+    pub q_bits: u64,
+    /// Bit-serial operations: one (12-bit × 1-bit × dim≤64) BRAT pass counts
+    /// `dim` bit-ops.
+    pub bit_ops: u64,
+    /// Full INT12 MAC operations (V-PU weighted sum, predictor MACs, …).
+    pub mac_ops: u64,
+    /// Softmax element evaluations (exp + normalize per token).
+    pub softmax_ops: u64,
+}
+
+impl Complexity {
+    /// Total off-chip traffic in bits.
+    pub fn dram_bits(&self) -> u64 {
+        self.k_bits + self.v_bits + self.q_bits
+    }
+
+    /// Total off-chip traffic in bytes.
+    pub fn dram_bytes(&self) -> f64 {
+        self.dram_bits() as f64 / 8.0
+    }
+
+    /// Computation normalized to INT12-MAC equivalents: `BITS` bit-ops make
+    /// one MAC-equivalent.
+    pub fn mac_equiv(&self) -> f64 {
+        self.mac_ops as f64 + self.softmax_ops as f64 + self.bit_ops as f64 / BITS as f64
+    }
+
+    /// Element-wise accumulate.
+    pub fn add(&mut self, other: &Complexity) {
+        self.k_bits += other.k_bits;
+        self.v_bits += other.v_bits;
+        self.q_bits += other.q_bits;
+        self.bit_ops += other.bit_ops;
+        self.mac_ops += other.mac_ops;
+        self.softmax_ops += other.softmax_ops;
+    }
+
+    /// Scale all counters by an integer factor (e.g. heads × layers).
+    pub fn scaled(&self, f: u64) -> Complexity {
+        Complexity {
+            k_bits: self.k_bits * f,
+            v_bits: self.v_bits * f,
+            q_bits: self.q_bits * f,
+            bit_ops: self.bit_ops * f,
+            mac_ops: self.mac_ops * f,
+            softmax_ops: self.softmax_ops * f,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_accumulates_all_fields() {
+        let mut a = Complexity { k_bits: 1, v_bits: 2, q_bits: 3, bit_ops: 4, mac_ops: 5, softmax_ops: 6 };
+        let b = Complexity { k_bits: 10, v_bits: 20, q_bits: 30, bit_ops: 40, mac_ops: 50, softmax_ops: 60 };
+        a.add(&b);
+        assert_eq!(a, Complexity { k_bits: 11, v_bits: 22, q_bits: 33, bit_ops: 44, mac_ops: 55, softmax_ops: 66 });
+    }
+
+    #[test]
+    fn mac_equiv_normalizes_bit_ops() {
+        let c = Complexity { bit_ops: 24, mac_ops: 1, ..Default::default() };
+        assert!((c.mac_equiv() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaled_multiplies() {
+        let c = Complexity { k_bits: 3, ..Default::default() };
+        assert_eq!(c.scaled(4).k_bits, 12);
+    }
+
+    #[test]
+    fn dram_totals() {
+        let c = Complexity { k_bits: 8, v_bits: 8, q_bits: 8, ..Default::default() };
+        assert_eq!(c.dram_bits(), 24);
+        assert!((c.dram_bytes() - 3.0).abs() < 1e-12);
+    }
+}

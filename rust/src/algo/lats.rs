@@ -1,0 +1,114 @@
+//! LATS — Lightweight Adaptive Token Selection (paper §III-B, Eq. 3).
+//!
+//! The pruning threshold for query *i* at bit round *r* is derived from the
+//! current *lower bounds* of all candidate scores:
+//!
+//! ```text
+//! η_i = max_j (A_{i,j}^r + M_i^{r,min}) − α · radius
+//! ```
+//!
+//! and a token *j* survives the round iff its *upper bound* clears it:
+//! `A_{i,j}^r + M_i^{r,max} ≥ η_i`.
+//!
+//! The paper specifies `radius = 5` in the softmax-logit domain (so pruning at
+//! distance δ from the max discards softmax mass < e^{−δ}, Eq. 2). Integer
+//! scores live in the quantized domain `A_int = A_logit · √d / (s_q·s_k)`, so
+//! the radius is converted once per (tensor-pair, head-dim) configuration.
+
+use crate::config::LatsConfig;
+
+/// LATS thresholding for one query tensor configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Lats {
+    /// α ∈ [0,1] — pruning aggressiveness (higher keeps fewer tokens... see
+    /// note: higher α *widens* the kept band; the paper sweeps 0.2–0.8 and
+    /// picks ≈0.6).
+    pub alpha: f64,
+    /// Radius converted into the integer score domain.
+    pub radius_int: i64,
+}
+
+impl Lats {
+    /// Build from algorithm config and quantization scales.
+    ///
+    /// `radius_int = radius · √dim / (s_q · s_k)` — the integer-score distance
+    /// equivalent to a logit distance of `radius`.
+    pub fn new(cfg: LatsConfig, dim: usize, q_scale: f32, k_scale: f32) -> Self {
+        let radius_int =
+            (cfg.radius * (dim as f64).sqrt() / (q_scale as f64 * k_scale as f64)).round() as i64;
+        Self { alpha: cfg.alpha, radius_int: radius_int.max(1) }
+    }
+
+    /// Construct directly in the integer domain (tests, simulator).
+    pub fn from_int(alpha: f64, radius_int: i64) -> Self {
+        Self { alpha, radius_int: radius_int.max(1) }
+    }
+
+    /// Integer margin subtracted from the max lower bound.
+    #[inline]
+    pub fn band(&self) -> i64 {
+        (self.alpha * self.radius_int as f64).round() as i64
+    }
+
+    /// Threshold from the maximum lower bound (Eq. 3).
+    #[inline]
+    pub fn threshold(&self, max_lower_bound: i64) -> i64 {
+        max_lower_bound - self.band()
+    }
+
+    /// Survival check: does this token's upper bound clear the threshold?
+    ///
+    /// `>=` (not the paper's strict `>`) so that at the LSB round — where
+    /// bounds are exact — the arg-max token itself can never be pruned even
+    /// at α = 0.
+    #[inline]
+    pub fn survives(&self, upper_bound: i64, eta: i64) -> bool {
+        upper_bound >= eta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LatsConfig;
+
+    #[test]
+    fn radius_conversion_scales_with_dim_and_quant() {
+        let cfg = LatsConfig { alpha: 0.5, radius: 5.0 };
+        let l = Lats::new(cfg, 64, 0.001, 0.001);
+        // 5 * 8 / 1e-6 = 4e7 (up to f32 scale rounding)
+        let expect = 40_000_000f64;
+        assert!((l.radius_int as f64 - expect).abs() / expect < 1e-5, "{}", l.radius_int);
+    }
+
+    #[test]
+    fn radius_never_below_one() {
+        let cfg = LatsConfig { alpha: 0.5, radius: 1e-12 };
+        let l = Lats::new(cfg, 4, 1.0, 1.0);
+        assert_eq!(l.radius_int, 1);
+    }
+
+    #[test]
+    fn threshold_formula() {
+        let l = Lats::from_int(0.5, 100);
+        assert_eq!(l.band(), 50);
+        assert_eq!(l.threshold(1000), 950);
+    }
+
+    #[test]
+    fn alpha_zero_keeps_only_at_or_above_max_lower() {
+        let l = Lats::from_int(0.0, 1_000_000);
+        let eta = l.threshold(777);
+        assert_eq!(eta, 777);
+        assert!(l.survives(777, eta));
+        assert!(!l.survives(776, eta));
+    }
+
+    #[test]
+    fn larger_alpha_is_more_permissive() {
+        let tight = Lats::from_int(0.2, 1000);
+        let loose = Lats::from_int(0.8, 1000);
+        let max_lower = 5000;
+        assert!(loose.threshold(max_lower) < tight.threshold(max_lower));
+    }
+}

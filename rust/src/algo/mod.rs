@@ -1,0 +1,17 @@
+//! Algorithm-level (cycle-free) models of the paper's techniques.
+//!
+//! These functional models define *what* BitStopper computes — which tokens
+//! survive, how many bits/bytes/ops each design consumes — independent of
+//! timing. The cycle-level simulator (`crate::sim`) reproduces the same
+//! decisions cycle-by-cycle and is cross-checked against this module; the
+//! Python oracle (`python/compile/kernels/ref.py`) is golden-tested against it
+//! through exported test vectors.
+
+pub mod complexity;
+pub mod lats;
+pub mod besf;
+pub mod selection;
+
+pub use besf::{besf_select, BesfResult};
+pub use complexity::Complexity;
+pub use lats::Lats;

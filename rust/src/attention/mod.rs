@@ -1,0 +1,254 @@
+//! Reference attention computation (dense, full precision and INT12 paths).
+//!
+//! This is the correctness oracle on the Rust side: the BESF/LATS pipeline and
+//! the cycle-level simulator are validated against these functions, which in
+//! turn are golden-tested against the pure-jnp oracle in `python/compile/kernels/ref.py`.
+
+pub mod softmax_lut;
+
+pub use softmax_lut::SoftmaxLut;
+
+use crate::quant::{IntMatrix, QuantParams};
+
+/// Numerically-stable softmax over a slice, in place.
+pub fn softmax_inplace(xs: &mut [f32]) {
+    if xs.is_empty() {
+        return;
+    }
+    let max = xs.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+    let mut sum = 0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in xs.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// Dense f32 attention for a single query: `softmax(q·Kᵀ/√d)·V`.
+///
+/// `k` and `v` are row-major `[seq × dim]` / `[seq × dim_v]`.
+pub fn attention_f32(q: &[f32], k: &[f32], v: &[f32], seq: usize, dim: usize, dim_v: usize) -> Vec<f32> {
+    assert_eq!(q.len(), dim);
+    assert_eq!(k.len(), seq * dim);
+    assert_eq!(v.len(), seq * dim_v);
+    let scale = 1.0 / (dim as f32).sqrt();
+    let mut logits: Vec<f32> = (0..seq)
+        .map(|j| {
+            let kr = &k[j * dim..(j + 1) * dim];
+            q.iter().zip(kr).map(|(a, b)| a * b).sum::<f32>() * scale
+        })
+        .collect();
+    softmax_inplace(&mut logits);
+    let mut out = vec![0f32; dim_v];
+    for j in 0..seq {
+        let w = logits[j];
+        let vr = &v[j * dim_v..(j + 1) * dim_v];
+        for (o, &x) in out.iter_mut().zip(vr) {
+            *o += w * x;
+        }
+    }
+    out
+}
+
+/// Logits (pre-softmax, scaled) of the INT12 path for a single query.
+///
+/// Integer scores `q·kᵀ` are exact in i64 and converted to the real domain with
+/// the product of quantization scales and the `1/√d` factor — this is the
+/// domain in which the paper's `radius = 5` threshold lives.
+pub fn int_logits(
+    q: &[i16],
+    k: &IntMatrix,
+    qp: QuantParams,
+    kp: QuantParams,
+) -> Vec<f32> {
+    let scale = qp.scale * kp.scale / (k.cols as f32).sqrt();
+    (0..k.rows).map(|j| k.dot_row(j, q) as f32 * scale).collect()
+}
+
+/// Dense INT12 attention for a single query, softmax in f32, V dequantized.
+///
+/// Mirrors the accelerator baseline datapath (12-bit QK, 12-bit V MACs with
+/// f32-equivalent accumulation).
+pub fn attention_int12(
+    q: &[i16],
+    k: &IntMatrix,
+    v: &IntMatrix,
+    qp: QuantParams,
+    kp: QuantParams,
+    vp: QuantParams,
+) -> Vec<f32> {
+    assert_eq!(k.rows, v.rows);
+    let mut logits = int_logits(q, k, qp, kp);
+    softmax_inplace(&mut logits);
+    let mut out = vec![0f32; v.cols];
+    for j in 0..k.rows {
+        let w = logits[j];
+        for (c, o) in out.iter_mut().enumerate() {
+            *o += w * vp.dq(v.at(j, c));
+        }
+    }
+    out
+}
+
+/// Sparse attention for a single query restricted to `survivors` (sorted or
+/// not); pruned tokens get exactly zero weight. Used to evaluate the quality
+/// impact of a selection policy.
+pub fn attention_int12_sparse(
+    q: &[i16],
+    k: &IntMatrix,
+    v: &IntMatrix,
+    qp: QuantParams,
+    kp: QuantParams,
+    vp: QuantParams,
+    survivors: &[usize],
+) -> Vec<f32> {
+    assert_eq!(k.rows, v.rows);
+    let scale = qp.scale * kp.scale / (k.cols as f32).sqrt();
+    let mut logits: Vec<f32> =
+        survivors.iter().map(|&j| k.dot_row(j, q) as f32 * scale).collect();
+    softmax_inplace(&mut logits);
+    let mut out = vec![0f32; v.cols];
+    for (idx, &j) in survivors.iter().enumerate() {
+        let w = logits[idx];
+        for (c, o) in out.iter_mut().enumerate() {
+            *o += w * vp.dq(v.at(j, c));
+        }
+    }
+    out
+}
+
+/// L2 relative error between two vectors — the quality metric used when
+/// comparing sparse outputs against the dense INT12 reference.
+pub fn rel_err(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let num: f32 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>().sqrt();
+    let den: f32 = b.iter().map(|y| y * y).sum::<f32>().sqrt();
+    if den == 0.0 {
+        num
+    } else {
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quantize;
+    use crate::util::SplitMix64;
+
+    fn synth(seq: usize, dim: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = SplitMix64::new(seed);
+        let q: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..seq * dim).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..seq * dim).map(|_| rng.normal() as f32).collect();
+        (q, k, v)
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_is_stable() {
+        let mut xs = vec![1000.0f32, 1001.0, 999.0];
+        softmax_inplace(&mut xs);
+        let s: f32 = xs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(xs.iter().all(|&x| x.is_finite() && x >= 0.0));
+        assert!(xs[1] > xs[0] && xs[0] > xs[2]);
+    }
+
+    #[test]
+    fn softmax_uniform_for_equal_inputs() {
+        let mut xs = vec![3.0f32; 5];
+        softmax_inplace(&mut xs);
+        for &x in &xs {
+            assert!((x - 0.2).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn attention_f32_weights_concentrate_on_matching_key() {
+        // Key 2 equals the query scaled up — it should dominate the output.
+        let dim = 8;
+        let q: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.3).sin()).collect();
+        let mut k = vec![0f32; 4 * dim];
+        for d in 0..dim {
+            k[2 * dim + d] = q[d] * 10.0;
+        }
+        let mut v = vec![0f32; 4 * dim];
+        for d in 0..dim {
+            v[2 * dim + d] = 1.0; // marker row
+        }
+        let out = attention_f32(&q, &k, &v, 4, dim, dim);
+        assert!(out.iter().all(|&x| x > 0.5), "out={out:?}");
+    }
+
+    #[test]
+    fn int12_path_tracks_f32_path() {
+        let (q, k, v) = synth(64, 32, 0xC0FFEE);
+        let dense = attention_f32(&q, &k, &v, 64, 32, 32);
+        let (qi, qp) = quantize(&q);
+        let (ki, kp) = quantize(&k);
+        let (vi, vp) = quantize(&v);
+        let km = IntMatrix::new(64, 32, ki);
+        let vm = IntMatrix::new(64, 32, vi);
+        let quant = attention_int12(&qi, &km, &vm, qp, kp, vp);
+        let err = rel_err(&quant, &dense);
+        assert!(err < 0.02, "INT12 should track f32 closely, err={err}");
+    }
+
+    #[test]
+    fn sparse_with_all_survivors_equals_dense() {
+        let (q, k, v) = synth(32, 16, 0xDADA);
+        let (qi, qp) = quantize(&q);
+        let (ki, kp) = quantize(&k);
+        let (vi, vp) = quantize(&v);
+        let km = IntMatrix::new(32, 16, ki);
+        let vm = IntMatrix::new(32, 16, vi);
+        let dense = attention_int12(&qi, &km, &vm, qp, kp, vp);
+        let all: Vec<usize> = (0..32).collect();
+        let sparse = attention_int12_sparse(&qi, &km, &vm, qp, kp, vp, &all);
+        assert!(rel_err(&sparse, &dense) < 1e-6);
+    }
+
+    #[test]
+    fn dropping_top_token_changes_output_more_than_dropping_weak_token() {
+        let (q, k, v) = synth(32, 16, 0xF00D);
+        let (qi, qp) = quantize(&q);
+        let (ki, kp) = quantize(&k);
+        let (vi, vp) = quantize(&v);
+        let km = IntMatrix::new(32, 16, ki);
+        let vm = IntMatrix::new(32, 16, vi);
+        let dense = attention_int12(&qi, &km, &vm, qp, kp, vp);
+        let logits = int_logits(&qi, &km, qp, kp);
+        let top = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let bottom = logits
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let without_top: Vec<usize> = (0..32).filter(|&j| j != top).collect();
+        let without_bottom: Vec<usize> = (0..32).filter(|&j| j != bottom).collect();
+        let e_top = rel_err(
+            &attention_int12_sparse(&qi, &km, &vm, qp, kp, vp, &without_top),
+            &dense,
+        );
+        let e_bot = rel_err(
+            &attention_int12_sparse(&qi, &km, &vm, qp, kp, vp, &without_bottom),
+            &dense,
+        );
+        assert!(e_top > e_bot, "top={e_top} bottom={e_bot}");
+    }
+
+    #[test]
+    fn rel_err_zero_for_identical() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        assert_eq!(rel_err(&a, &a), 0.0);
+    }
+}

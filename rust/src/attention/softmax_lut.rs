@@ -1,0 +1,150 @@
+//! LUT-based softmax model of the V-PU's softmax unit (Table I: "18-bit input,
+//! 18-bit output LUT-based Softmax").
+//!
+//! The hardware unit computes `exp(x - max)` by table lookup on the (always
+//! non-positive) distance-to-max, in an 18-bit fixed-point domain, then
+//! normalizes with one reciprocal multiply. We model it bit-faithfully enough
+//! to quantify its quality impact: inputs are 18-bit fixed-point logits
+//! (Q6.12: 6 integer bits cover the e^{-x} underflow range, 12 fractional),
+//! the exp table has 2^10 entries over the distance range [0, 16), and outputs
+//! are 18-bit fixed-point probabilities (Q0.18 scaled).
+
+/// Fractional bits of the Q6.12 logit domain.
+pub const LOGIT_FRAC_BITS: u32 = 12;
+/// Table index bits.
+pub const LUT_BITS: u32 = 10;
+/// Distance-to-max range covered by the table; beyond this exp(-x) ≈ 0
+/// (e^-16 ≈ 1.1e-7, below the 18-bit output LSB).
+pub const LUT_RANGE: f32 = 16.0;
+/// Fractional bits of the fixed-point probability output.
+pub const PROB_FRAC_BITS: u32 = 18;
+
+/// The exp lookup table plus conversion helpers.
+#[derive(Debug, Clone)]
+pub struct SoftmaxLut {
+    table: Vec<u32>, // exp(-d) in Q0.18, indexed by quantized distance
+}
+
+impl Default for SoftmaxLut {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SoftmaxLut {
+    pub fn new() -> Self {
+        let n = 1usize << LUT_BITS;
+        let table = (0..n)
+            .map(|i| {
+                let d = i as f32 / n as f32 * LUT_RANGE;
+                ((-d).exp() * (1u32 << PROB_FRAC_BITS) as f32).round() as u32
+            })
+            .collect();
+        Self { table }
+    }
+
+    /// Quantize a real logit to the 18-bit Q6.12 grid (saturating).
+    #[inline]
+    pub fn quantize_logit(&self, x: f32) -> i32 {
+        let v = (x * (1 << LOGIT_FRAC_BITS) as f32).round() as i64;
+        let max = (1i64 << 17) - 1;
+        v.clamp(-(1i64 << 17), max) as i32
+    }
+
+    /// exp(-(distance)) via table lookup; `dist_fx` is a non-negative Q6.12
+    /// distance-to-max. Returns Q0.18.
+    #[inline]
+    pub fn exp_neg(&self, dist_fx: i32) -> u32 {
+        debug_assert!(dist_fx >= 0);
+        let d = dist_fx as f32 / (1 << LOGIT_FRAC_BITS) as f32;
+        if d >= LUT_RANGE {
+            return 0;
+        }
+        let idx = (d / LUT_RANGE * self.table.len() as f32) as usize;
+        self.table[idx.min(self.table.len() - 1)]
+    }
+
+    /// Full softmax over real-valued logits through the fixed-point datapath.
+    /// Returns f32 probabilities (the normalization divide happens at full
+    /// precision in hardware via a reciprocal unit).
+    pub fn softmax(&self, logits: &[f32]) -> Vec<f32> {
+        if logits.is_empty() {
+            return vec![];
+        }
+        let qmax = logits
+            .iter()
+            .map(|&x| self.quantize_logit(x))
+            .max()
+            .unwrap();
+        let exps: Vec<u32> = logits
+            .iter()
+            .map(|&x| {
+                let q = self.quantize_logit(x);
+                self.exp_neg(qmax - q)
+            })
+            .collect();
+        let sum: u64 = exps.iter().map(|&e| e as u64).sum();
+        if sum == 0 {
+            // Degenerate: everything underflowed except (at least) the max,
+            // which cannot happen since exp_neg(0) > 0 — defensive anyway.
+            let n = logits.len() as f32;
+            return vec![1.0 / n; logits.len()];
+        }
+        exps.iter().map(|&e| e as f32 / sum as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::softmax_inplace;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn exp_table_endpoints() {
+        let lut = SoftmaxLut::new();
+        assert_eq!(lut.exp_neg(0), 1u32 << PROB_FRAC_BITS);
+        // Distance beyond range underflows to zero.
+        let big = lut.quantize_logit(LUT_RANGE + 1.0);
+        assert_eq!(lut.exp_neg(big), 0);
+    }
+
+    #[test]
+    fn lut_softmax_close_to_exact_softmax() {
+        let lut = SoftmaxLut::new();
+        let mut rng = SplitMix64::new(77);
+        for _ in 0..50 {
+            let n = 2 + rng.below(64) as usize;
+            let logits: Vec<f32> = (0..n).map(|_| rng.normal_ms(0.0, 2.0) as f32).collect();
+            let got = lut.softmax(&logits);
+            let mut want = logits.clone();
+            softmax_inplace(&mut want);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 5e-3, "lut {g} vs exact {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn lut_softmax_sums_to_one() {
+        let lut = SoftmaxLut::new();
+        let logits = vec![0.1f32, -3.0, 2.4, 2.4, -8.0];
+        let p = lut.softmax(&logits);
+        let s: f32 = p.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn saturation_handles_huge_logits() {
+        let lut = SoftmaxLut::new();
+        let p = lut.softmax(&[1e9, 0.0]);
+        assert!(p[0] > 0.99);
+        assert!(p.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        let lut = SoftmaxLut::new();
+        assert!(lut.softmax(&[]).is_empty());
+    }
+}

@@ -1,0 +1,153 @@
+//! Baseline accelerator models (paper §V-A): Sanger, SOFA(±fine-tuning) and
+//! TokenPicker, plus the dense design (which is `Features::DENSE` of the
+//! BitStopper simulator itself).
+//!
+//! Normalization protocol (identical to the paper's): all designs get the
+//! same PE-array *bit-product throughput* as BitStopper's 32 lanes
+//! (32 × 64 dims × 12 bit-products per cycle), the same 1 GHz clock, the same
+//! HBM2 device, and ≈328 KB of on-chip SRAM. A b_q×b_k-bit MAC consumes
+//! `b_q·b_k` bit-products, so per-key compute time at any precision is
+//! `ceil(dim · b_q · b_k / (brat_dim · 12))` cycles per lane.
+//!
+//! Quality normalization: each design's selection knob is calibrated on the
+//! workload so that its *own scoring mechanism* (4-bit scores for Sanger,
+//! log-domain magnitudes for SOFA, progressive chunks for TokenPicker)
+//! reaches a target recall of the ground-truth vital token set — the
+//! "comparable PPL (+0.1)" protocol of Fig. 10/11. Coarser mechanisms need
+//! more tokens (or more bits) to hit the target, which is precisely where
+//! their extra traffic comes from.
+
+pub mod sanger;
+pub mod sofa;
+pub mod tokenpicker;
+
+pub use sanger::simulate_sanger;
+pub use sofa::{simulate_sofa, SofaMode};
+pub use tokenpicker::simulate_tokenpicker;
+
+use crate::attention::softmax_inplace;
+use crate::config::HwConfig;
+use crate::quant::IntMatrix;
+
+/// Per-key PE-lane compute cycles for a `b_q × b_k`-bit dot product over
+/// `dim` elements, normalized to BitStopper's lane throughput.
+pub fn compute_cycles(dim: usize, b_q: usize, b_k: usize, hw: &HwConfig) -> u64 {
+    let bit_products = (dim * b_q * b_k) as u64;
+    let per_cycle = (hw.brat_dim * hw.bits) as u64;
+    bit_products.div_ceil(per_cycle).max(1)
+}
+
+/// Quantize an INT12 value down to its top `bits` (arithmetic shift keeps the
+/// sign) — the b-bit predictor's view of an operand.
+#[inline]
+pub fn top_bits(v: i16, bits: usize) -> i16 {
+    debug_assert!(bits <= 12);
+    v >> (12 - bits)
+}
+
+/// Predictor-domain scores: dot products computed with both operands reduced
+/// to `bits` (e.g. Sanger's 4-bit prediction).
+pub fn predictor_scores(q: &[i16], k: &IntMatrix, bits: usize) -> Vec<i64> {
+    (0..k.rows)
+        .map(|j| {
+            k.row(j)
+                .iter()
+                .zip(q.iter())
+                .map(|(&kv, &qv)| top_bits(kv, bits) as i64 * top_bits(qv, bits) as i64)
+                .sum()
+        })
+        .collect()
+}
+
+/// Ground-truth vital set of a query in the *exact* integer score domain
+/// (softmax-mass cover, same rule as `algo::selection::vital_set`).
+pub fn vital_set_int(q: &[i16], k: &IntMatrix, scale: f32, mass: f32) -> Vec<usize> {
+    let mut logits: Vec<f32> = (0..k.rows).map(|j| k.dot_row(j, q) as f32 * scale).collect();
+    let idx_sorted = {
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        idx
+    };
+    softmax_inplace(&mut logits);
+    let mut cum = 0.0f32;
+    let mut out = vec![];
+    for j in idx_sorted {
+        out.push(j);
+        cum += logits[j];
+        if cum >= mass {
+            break;
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Recall of `vital` within `selected`.
+pub fn recall(selected: &[usize], vital: &[usize]) -> f64 {
+    if vital.is_empty() {
+        return 1.0;
+    }
+    let s: std::collections::HashSet<usize> = selected.iter().copied().collect();
+    vital.iter().filter(|j| s.contains(j)).count() as f64 / vital.len() as f64
+}
+
+/// Logit-domain scale of a quantized QK pair (shared by calibrations).
+pub fn logit_scale(qa: &crate::workload::QuantAttn) -> f32 {
+    qa.qp.scale * qa.kp.scale / (qa.dim() as f32).sqrt()
+}
+
+/// Target vital-set recall for iso-quality calibration (the paper's
+/// "+0.1 PPL" budget).
+pub const RECALL_TARGET: f64 = 0.95;
+/// Vital-set softmax mass.
+pub const VITAL_MASS: f32 = 0.95;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HwConfig;
+
+    #[test]
+    fn compute_cycles_normalization() {
+        let hw = HwConfig::default();
+        // 12×12 over 64 dims = 9216 bit-products / 768 per cycle = 12 cycles —
+        // exactly BitStopper's 12 BRAT rounds. Consistency of the protocol.
+        assert_eq!(compute_cycles(64, 12, 12, &hw), 12);
+        // 4×4 predictor is 9× cheaper.
+        assert_eq!(compute_cycles(64, 4, 4, &hw), 2);
+        // 1×12 plane pass = 1 cycle.
+        assert_eq!(compute_cycles(64, 12, 1, &hw), 1);
+    }
+
+    #[test]
+    fn top_bits_keeps_sign() {
+        assert_eq!(top_bits(-2048, 4), -8);
+        assert_eq!(top_bits(2047, 4), 7);
+        assert_eq!(top_bits(100, 4), 0); // small magnitudes vanish at 4 bits
+    }
+
+    #[test]
+    fn predictor_scores_correlate_with_exact() {
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(5);
+        let dim = 32;
+        let q: Vec<i16> = (0..dim).map(|_| rng.range_i64(-2048, 2047) as i16).collect();
+        let kdata: Vec<i16> = (0..64 * dim).map(|_| rng.range_i64(-2048, 2047) as i16).collect();
+        let k = IntMatrix::new(64, dim, kdata);
+        let exact: Vec<i64> = (0..64).map(|j| k.dot_row(j, &q)).collect();
+        let pred = predictor_scores(&q, &k, 4);
+        // Rank correlation proxy: the argmax should usually coincide; at least
+        // the predicted argmax must be in the exact top quartile.
+        let pred_argmax = (0..64).max_by_key(|&j| pred[j]).unwrap();
+        let mut sorted = exact.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        assert!(exact[pred_argmax] >= sorted[16]);
+    }
+
+    #[test]
+    fn recall_basic() {
+        assert_eq!(recall(&[1, 2, 3], &[2, 3]), 1.0);
+        assert_eq!(recall(&[1], &[2, 3]), 0.0);
+        assert_eq!(recall(&[], &[]), 1.0);
+    }
+}

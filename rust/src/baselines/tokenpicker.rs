@@ -1,0 +1,292 @@
+//! TokenPicker (Park et al., DAC'24) baseline model.
+//!
+//! Mechanism: no separate predictor — Keys are consumed in **4-bit chunks**
+//! (three chunks for INT12), MSB-chunk first; after each chunk the design
+//! estimates each token's **post-exp probability** and prunes tokens whose
+//! estimated softmax weight falls below a minimum; partial chunk results are
+//! reused (no re-fetch). Differences from BitStopper that the paper calls out
+//! (§VI): coarser granularity (4-bit vs 1-bit — a token that dies at bit 1
+//! still paid for bits 0–3), a costlier decision rule (exponentials per token
+//! per round instead of a max-relative compare), and decode-only operation.
+//!
+//! Our model: chunk-granular interval bounds (the 4-bit analogue of the bit
+//! margin), a post-exp band calibrated for target vital recall, and
+//! round-synchronous progressive fetching (chunk r+1 of a token is requested
+//! only after its round-r decision).
+
+use super::{logit_scale, recall, vital_set_int, RECALL_TARGET, VITAL_MASS};
+use crate::algo::complexity::Complexity;
+use crate::config::SimConfig;
+use crate::energy::EnergyModel;
+use crate::quant::bitplane::N_BITS;
+use crate::quant::IntMatrix;
+use crate::sim::accelerator::SimReport;
+use crate::sim::dram::{Dram, DramConfig};
+use crate::sim::qkpu::{assign_round_robin, simulate_lanes, ChainTask, FetchSpec};
+use crate::sim::vpu::simulate_vpu;
+use crate::sim::Cycle;
+use crate::workload::QuantAttn;
+
+/// Chunk width in bits; 12-bit operands → 3 chunks.
+pub const CHUNK_BITS: usize = 4;
+pub const N_CHUNKS: usize = N_BITS / CHUNK_BITS;
+
+/// Signed value contribution of chunk `c` of an INT12 value (chunk 0 holds
+/// the sign nibble).
+#[inline]
+fn chunk_value(v: i16, c: usize) -> i32 {
+    match c {
+        0 => ((v >> 8) as i32) << 8, // arithmetic shift keeps the sign
+        1 => (((v >> 4) & 0xF) as i32) << 4,
+        _ => (v & 0xF) as i32,
+    }
+}
+
+/// Positive weight remaining after chunks `0..=c`.
+#[inline]
+fn chunk_remaining(c: usize) -> i64 {
+    match c {
+        0 => 255,
+        1 => 15,
+        _ => 0,
+    }
+}
+
+/// Per-chunk dot-product increments for one key.
+fn chunk_dot(q: &[i16], k: &IntMatrix, j: usize, c: usize) -> i64 {
+    k.row(j)
+        .iter()
+        .zip(q.iter())
+        .map(|(&kv, &qv)| chunk_value(kv, c) as i64 * qv as i64)
+        .sum()
+}
+
+/// Progressive chunk selection: returns per-key death chunk (N_CHUNKS =
+/// survived) and the surviving set. `band` is the post-exp pruning band in
+/// integer-score units: prune when `upper < max_lower − band`.
+pub fn chunk_select(q: &[i16], k: &IntMatrix, band: i64) -> (Vec<u8>, Vec<usize>) {
+    let seq = k.rows;
+    let pos_sum: i64 = q.iter().map(|&v| (v as i64).max(0)).sum();
+    let neg_sum: i64 = q.iter().map(|&v| (v as i64).min(0)).sum();
+    let mut partial = vec![0i64; seq];
+    let mut death = vec![N_CHUNKS as u8; seq];
+    let mut active: Vec<usize> = (0..seq).collect();
+    for c in 0..N_CHUNKS {
+        for &j in &active {
+            partial[j] += chunk_dot(q, k, j, c);
+        }
+        let rem = chunk_remaining(c);
+        let m_max = rem * pos_sum;
+        let m_min = rem * neg_sum;
+        let max_lower = active.iter().map(|&j| partial[j] + m_min).max().unwrap_or(0);
+        let eta = max_lower - band;
+        active.retain(|&j| {
+            if partial[j] + m_max >= eta {
+                true
+            } else {
+                death[j] = c as u8;
+                false
+            }
+        });
+        if active.is_empty() {
+            break;
+        }
+    }
+    (death, active)
+}
+
+/// Calibrate the post-exp band for target vital recall.
+fn calibrate_band(qa: &QuantAttn) -> i64 {
+    let scale = logit_scale(qa);
+    let n_cal = qa.queries.len().min(8);
+    // Band in logit units swept 0.5..16; convert to integer domain.
+    let mut band_logit = 0.5f64;
+    while band_logit < 16.0 {
+        let band = (band_logit / scale as f64) as i64;
+        let mean_recall: f64 = qa
+            .queries
+            .iter()
+            .take(n_cal)
+            .map(|q| {
+                let (_, surv) = chunk_select(q, &qa.k, band);
+                let vital = vital_set_int(q, &qa.k, scale, VITAL_MASS);
+                recall(&surv, &vital)
+            })
+            .sum::<f64>()
+            / n_cal.max(1) as f64;
+        if mean_recall >= RECALL_TARGET {
+            return band;
+        }
+        band_logit *= 1.3;
+    }
+    (16.0 / scale as f64) as i64
+}
+
+/// Simulate TokenPicker on a workload.
+pub fn simulate_tokenpicker(qa: &QuantAttn, cfg: &SimConfig) -> SimReport {
+    let seq = qa.seq();
+    let dim = qa.dim();
+    let hw = &cfg.hw;
+    let mut dram = Dram::new(DramConfig::hbm2_from(hw));
+    let band = calibrate_band(qa);
+
+    let chunk_row_bytes = ((dim * CHUNK_BITS).div_ceil(8)) as u64;
+    let full_row_bytes = ((dim * N_BITS).div_ceil(8)) as u64;
+    // 12-bit Q × 4-bit chunk.
+    let chunk_compute = super::compute_cycles(dim, N_BITS, CHUNK_BITS, hw);
+    let v_base = N_CHUNKS as u64 * seq as u64 * chunk_row_bytes + seq as u64 * full_row_bytes;
+
+    let mut cx = Complexity::default();
+    let mut stage_free: Cycle = 0;
+    let mut vpu_free: Cycle = 0;
+    let mut busy = 0u64;
+    let mut span_end: Cycle = 0;
+    let mut survivors_total = 0u64;
+    let mut chunks_fetched = 0u64;
+
+    for q in &qa.queries {
+        let (death, survivors) = chunk_select(q, &qa.k, band);
+
+        // Round-synchronous progressive chunks: round c fetches chunk c of all
+        // still-active tokens, then a post-exp decision barrier.
+        let mut t = stage_free;
+        for c in 0..N_CHUNKS {
+            // A key processes chunk c iff it was not pruned in an earlier
+            // round (death == c means it processed chunk c and then died).
+            let active: Vec<usize> = (0..seq).filter(|&j| death[j] as usize >= c).collect();
+            if active.is_empty() {
+                break;
+            }
+            let chains: Vec<ChainTask> = active
+                .iter()
+                .map(|&j| ChainTask {
+                    steps: vec![FetchSpec {
+                        addr: (c as u64 * seq as u64 + j as u64) * chunk_row_bytes,
+                        bytes: chunk_row_bytes,
+                        compute: chunk_compute,
+                    }],
+                })
+                .collect();
+            let r = simulate_lanes(&assign_round_robin(chains, hw.pe_lanes), &mut dram, t, 16);
+            busy += r.busy_cycles;
+            cx.k_bits += (active.len() * dim * CHUNK_BITS) as u64;
+            cx.bit_ops += (active.len() * dim * CHUNK_BITS) as u64; // 12b×4b = 4 plane-equivalents
+            // Post-exp decision: one exponential per active token per round —
+            // the "significant computational overhead" of §VI.
+            cx.softmax_ops += active.len() as u64;
+            chunks_fetched += active.len() as u64;
+            // Decision barrier: exp-unit throughput 8 tokens/cycle.
+            t = r.finish + (active.len() as u64).div_ceil(8);
+        }
+        cx.q_bits += (dim * N_BITS) as u64;
+        span_end = span_end.max(t);
+
+        // V stage over survivors (partials reused — no K re-fetch).
+        let vpu_start = t.max(vpu_free);
+        let v = simulate_vpu(&survivors, dim, hw.vpu_macs, &mut dram, vpu_start, v_base);
+        vpu_free = v.finish;
+        cx.v_bits += v.v_bits;
+        cx.mac_ops += v.mac_ops;
+        cx.softmax_ops += v.softmax_ops;
+        survivors_total += survivors.len() as u64;
+
+        stage_free = t;
+    }
+
+    let emodel = EnergyModel { kv_buffer_bytes: hw.kv_buffer_bytes, ..Default::default() };
+    let energy = emodel.energy(&cx, EnergyModel::default_sram_bits(&cx), chunks_fetched);
+    let n_q = qa.queries.len();
+    SimReport {
+        queries: n_q,
+        seq,
+        dim,
+        cycles: vpu_free.max(span_end),
+        qk_busy: busy,
+        qk_span: span_end,
+        lanes: hw.pe_lanes,
+        utilization: if span_end > 0 {
+            busy as f64 / (hw.pe_lanes as f64 * span_end as f64)
+        } else {
+            0.0
+        },
+        complexity: cx,
+        energy,
+        dram: dram.stats,
+        scoreboard: Default::default(),
+        keep_rate: survivors_total as f64 / (n_q * seq).max(1) as f64,
+        k_traffic_fraction: chunks_fetched as f64 * CHUNK_BITS as f64
+            / (n_q as u64 * seq as u64 * N_BITS as u64).max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::sim::accelerator::simulate_attention;
+    use crate::workload::{AttnWorkload, SynthConfig};
+
+    fn workload(seq: usize, queries: usize, seed: u64) -> QuantAttn {
+        let w = AttnWorkload::generate(SynthConfig::new(seq, 64, queries, seed));
+        let qs: Vec<Vec<f32>> = (0..queries).map(|i| w.query(i).to_vec()).collect();
+        QuantAttn::quantize(&qs, &w.k, &w.v, seq, 64)
+    }
+
+    #[test]
+    fn chunks_reconstruct_value() {
+        for v in [-2048i16, -1000, -5, 0, 3, 77, 2047] {
+            let sum: i32 = (0..N_CHUNKS).map(|c| chunk_value(v, c)).sum();
+            assert_eq!(sum, v as i32, "value {v}");
+        }
+    }
+
+    #[test]
+    fn chunk_bounds_are_sound() {
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(31);
+        let dim = 16;
+        let q: Vec<i16> = (0..dim).map(|_| rng.range_i64(-2048, 2047) as i16).collect();
+        let kd: Vec<i16> = (0..dim).map(|_| rng.range_i64(-2048, 2047) as i16).collect();
+        let k = IntMatrix::new(1, dim, kd);
+        let exact = k.dot_row(0, &q);
+        let pos: i64 = q.iter().map(|&v| (v as i64).max(0)).sum();
+        let neg: i64 = q.iter().map(|&v| (v as i64).min(0)).sum();
+        let mut partial = 0i64;
+        for c in 0..N_CHUNKS {
+            partial += chunk_dot(&q, &k, 0, c);
+            let rem = chunk_remaining(c);
+            assert!(partial + rem * neg <= exact, "chunk {c}");
+            assert!(partial + rem * pos >= exact, "chunk {c}");
+        }
+        assert_eq!(partial, exact);
+    }
+
+    #[test]
+    fn argmax_survives_chunk_selection() {
+        let qa = workload(128, 4, 32);
+        for q in &qa.queries {
+            let (_, surv) = chunk_select(q, &qa.k, 1);
+            let exact: Vec<i64> = (0..128).map(|j| qa.k.dot_row(j, q)).collect();
+            let argmax = (0..128).max_by_key(|&j| exact[j]).unwrap();
+            assert!(surv.contains(&argmax));
+        }
+    }
+
+    #[test]
+    fn tokenpicker_between_dense_and_bitstopper_on_traffic() {
+        let qa = workload(1024, 8, 33);
+        let cfg = SimConfig::default();
+        let tp = simulate_tokenpicker(&qa, &cfg);
+        let bs = simulate_attention(&qa, &cfg);
+        // 4-bit chunks cannot stop earlier than bit 4: BitStopper's 1-bit
+        // granularity must win on K traffic.
+        assert!(
+            bs.complexity.k_bits < tp.complexity.k_bits,
+            "bs {} tp {}",
+            bs.complexity.k_bits,
+            tp.complexity.k_bits
+        );
+        // But TokenPicker still beats dense 12-bit streaming.
+        assert!(tp.k_traffic_fraction < 1.0);
+    }
+}

@@ -1,0 +1,314 @@
+//! Configuration system: hardware parameters (Table I), simulator feature
+//! flags, model shapes, and a small TOML-subset parser so deployments can be
+//! described in files (`configs/*.toml`) without a serde dependency.
+
+pub mod toml;
+
+pub use toml::{parse_toml, TomlDoc, TomlValue};
+
+use crate::quant::bitplane::N_BITS;
+
+/// Hardware configuration of the BitStopper accelerator — paper Table I.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HwConfig {
+    // --- Main memory: HBM2, 8 channels × 128-bit @ 2 Gbps ---
+    /// Number of HBM channels.
+    pub dram_channels: usize,
+    /// Data bus width per channel, bits.
+    pub dram_bus_bits: usize,
+    /// Per-pin data rate in Gbps (DDR).
+    pub dram_gbps: f64,
+    /// Banks per channel.
+    pub dram_banks: usize,
+    /// Row buffer size per bank, bytes.
+    pub dram_row_bytes: usize,
+    /// Activate-to-read latency (core cycles @1 GHz).
+    pub t_rcd: u64,
+    /// Precharge latency (core cycles).
+    pub t_rp: u64,
+    /// CAS latency (core cycles).
+    pub t_cl: u64,
+
+    // --- On-chip buffers ---
+    /// Key/Value SRAM bytes (Table I: 320 KB).
+    pub kv_buffer_bytes: usize,
+    /// Query SRAM bytes (Table I: 8 KB).
+    pub q_buffer_bytes: usize,
+
+    // --- QK-PU ---
+    /// Number of bit-level PE lanes (Table I: 32).
+    pub pe_lanes: usize,
+    /// BRAT width: dims processed per cycle per lane (Table I: 64).
+    pub brat_dim: usize,
+    /// Scoreboard entries per lane (Table I: 64).
+    pub scoreboard_entries: usize,
+    /// Scoreboard entry width, bits (Table I: 45).
+    pub scoreboard_bits: usize,
+
+    // --- V-PU ---
+    /// MAC units in the 1-D array (Table I: 64-way INT12).
+    pub vpu_macs: usize,
+
+    // --- Global ---
+    /// Core clock, Hz.
+    pub clock_hz: f64,
+    /// Operand bit width (INT12).
+    pub bits: usize,
+}
+
+impl Default for HwConfig {
+    fn default() -> Self {
+        Self {
+            dram_channels: 8,
+            dram_bus_bits: 128,
+            dram_gbps: 2.0,
+            dram_banks: 16,
+            dram_row_bytes: 1024,
+            t_rcd: 14,
+            t_rp: 14,
+            t_cl: 14,
+            kv_buffer_bytes: 320 * 1024,
+            q_buffer_bytes: 8 * 1024,
+            pe_lanes: 32,
+            brat_dim: 64,
+            scoreboard_entries: 64,
+            scoreboard_bits: 45,
+            vpu_macs: 64,
+            clock_hz: 1.0e9,
+            bits: N_BITS,
+        }
+    }
+}
+
+impl HwConfig {
+    /// Aggregate DRAM bandwidth, bytes per second (Table I: 8 × 32 GB/s).
+    pub fn dram_bandwidth_bps(&self) -> f64 {
+        self.dram_channels as f64 * self.dram_bus_bits as f64 * self.dram_gbps * 1e9 / 8.0
+    }
+
+    /// Bytes one channel transfers per core cycle.
+    pub fn channel_bytes_per_cycle(&self) -> f64 {
+        self.dram_bus_bits as f64 * self.dram_gbps * 1e9 / 8.0 / self.clock_hz
+    }
+
+    /// Sanity checks used by `selftest` and unit tests.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.pe_lanes == 0 || self.brat_dim == 0 || self.vpu_macs == 0 {
+            return Err("compute resources must be non-zero".into());
+        }
+        if self.bits == 0 || self.bits > 16 {
+            return Err(format!("unsupported bit width {}", self.bits));
+        }
+        if self.scoreboard_bits < 2 * self.bits + 7 {
+            // 12b×12b×64-dim products need log2(64·2048·2048)=45 bits, wider
+            // dims need more; Table I's 45 bits matches brat_dim=64.
+            return Err("scoreboard too narrow for score dynamic range".into());
+        }
+        Ok(())
+    }
+}
+
+/// Which of the paper's three techniques are active — used for the Fig. 13(b)
+/// ablation (dense → +BESF → +BAP → +LATS).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Features {
+    /// Bit-serial enabled stage fusion (early termination + partial reuse).
+    pub besf: bool,
+    /// Bit-level asynchronous processing (out-of-order plane handling).
+    pub bap: bool,
+    /// Adaptive threshold (LATS); when false but `besf` is true, a static
+    /// threshold is used instead (the paper's intermediate ablation point).
+    pub lats: bool,
+}
+
+impl Features {
+    pub const DENSE: Features = Features { besf: false, bap: false, lats: false };
+    pub const BESF_ONLY: Features = Features { besf: true, bap: false, lats: false };
+    pub const BESF_BAP: Features = Features { besf: true, bap: true, lats: false };
+    pub const ALL: Features = Features { besf: true, bap: true, lats: true };
+}
+
+/// Algorithm (LATS) parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatsConfig {
+    /// Pruning aggressiveness α ∈ [0,1] (paper Eq. 3; default near 0.6).
+    pub alpha: f64,
+    /// Logit-domain radius (paper: 5).
+    pub radius: f64,
+}
+
+impl Default for LatsConfig {
+    fn default() -> Self {
+        Self { alpha: 0.6, radius: 5.0 }
+    }
+}
+
+/// Shape of an attention workload (one head unless stated otherwise).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelShape {
+    /// Human-readable name ("opt-1.3b", "llama2-7b", "tiny").
+    pub name: &'static str,
+    /// Decoder layers.
+    pub layers: usize,
+    /// Attention heads.
+    pub heads: usize,
+    /// Per-head dimension.
+    pub head_dim: usize,
+}
+
+impl ModelShape {
+    pub const OPT_1_3B: ModelShape =
+        ModelShape { name: "opt-1.3b", layers: 24, heads: 32, head_dim: 64 };
+    pub const LLAMA2_7B: ModelShape =
+        ModelShape { name: "llama2-7b", layers: 32, heads: 32, head_dim: 128 };
+    pub const TINY: ModelShape = ModelShape { name: "tiny", layers: 4, heads: 4, head_dim: 32 };
+
+    pub fn hidden(&self) -> usize {
+        self.heads * self.head_dim
+    }
+}
+
+/// A full experiment point: model shape × sequence length × task label.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkloadPoint {
+    pub shape: ModelShape,
+    pub seq_len: usize,
+    /// Dataset label used in the paper's figures ("wikitext-2" / "dolly").
+    pub task: &'static str,
+}
+
+/// The four evaluation points of the paper (§V-A "Configurations"):
+/// Wikitext: OPT@1k, Llama@2k; Dolly: OPT@2k, Llama@4k.
+pub fn paper_workloads() -> Vec<WorkloadPoint> {
+    vec![
+        WorkloadPoint { shape: ModelShape::OPT_1_3B, seq_len: 1024, task: "wikitext-2" },
+        WorkloadPoint { shape: ModelShape::LLAMA2_7B, seq_len: 2048, task: "wikitext-2" },
+        WorkloadPoint { shape: ModelShape::OPT_1_3B, seq_len: 2048, task: "dolly" },
+        WorkloadPoint { shape: ModelShape::LLAMA2_7B, seq_len: 4096, task: "dolly" },
+    ]
+}
+
+/// Top-level simulation config.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub hw: HwConfig,
+    pub features: Features,
+    pub lats: LatsConfig,
+    /// RNG seed for workload synthesis.
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self { hw: HwConfig::default(), features: Features::ALL, lats: LatsConfig::default(), seed: 1 }
+    }
+}
+
+impl SimConfig {
+    /// Load overrides from a TOML-subset document (missing keys keep defaults).
+    pub fn from_toml(doc: &TomlDoc) -> Result<Self, String> {
+        let mut cfg = SimConfig::default();
+        if let Some(v) = doc.get_f64("lats", "alpha") {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(format!("lats.alpha out of range: {v}"));
+            }
+            cfg.lats.alpha = v;
+        }
+        if let Some(v) = doc.get_f64("lats", "radius") {
+            cfg.lats.radius = v;
+        }
+        if let Some(v) = doc.get_bool("features", "besf") {
+            cfg.features.besf = v;
+        }
+        if let Some(v) = doc.get_bool("features", "bap") {
+            cfg.features.bap = v;
+        }
+        if let Some(v) = doc.get_bool("features", "lats") {
+            cfg.features.lats = v;
+        }
+        if let Some(v) = doc.get_i64("hw", "pe_lanes") {
+            cfg.hw.pe_lanes = v as usize;
+        }
+        if let Some(v) = doc.get_i64("hw", "brat_dim") {
+            cfg.hw.brat_dim = v as usize;
+        }
+        if let Some(v) = doc.get_i64("hw", "scoreboard_entries") {
+            cfg.hw.scoreboard_entries = v as usize;
+        }
+        if let Some(v) = doc.get_i64("hw", "dram_channels") {
+            cfg.hw.dram_channels = v as usize;
+        }
+        if let Some(v) = doc.get_i64("sim", "seed") {
+            cfg.seed = v as u64;
+        }
+        cfg.hw.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_bandwidth_is_256_gbs() {
+        let hw = HwConfig::default();
+        // 8 channels × 32 GB/s = 256 GB/s aggregate.
+        assert!((hw.dram_bandwidth_bps() - 256e9).abs() < 1e6);
+    }
+
+    #[test]
+    fn default_config_validates() {
+        assert!(HwConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn zero_lanes_rejected() {
+        let mut hw = HwConfig::default();
+        hw.pe_lanes = 0;
+        assert!(hw.validate().is_err());
+    }
+
+    #[test]
+    fn narrow_scoreboard_rejected() {
+        let mut hw = HwConfig::default();
+        hw.scoreboard_bits = 16;
+        assert!(hw.validate().is_err());
+    }
+
+    #[test]
+    fn paper_workloads_match_section_5a() {
+        let w = paper_workloads();
+        assert_eq!(w.len(), 4);
+        assert_eq!(w[0].seq_len, 1024);
+        assert_eq!(w[3].seq_len, 4096);
+        assert_eq!(w[3].shape.head_dim, 128);
+    }
+
+    #[test]
+    fn model_shapes_have_expected_hidden() {
+        assert_eq!(ModelShape::OPT_1_3B.hidden(), 2048);
+        assert_eq!(ModelShape::LLAMA2_7B.hidden(), 4096);
+    }
+
+    #[test]
+    fn sim_config_from_toml_overrides() {
+        let doc = parse_toml(
+            "[lats]\nalpha = 0.4\nradius = 8.0\n[features]\nbap = false\n[hw]\npe_lanes = 16\n[sim]\nseed = 99\n",
+        )
+        .unwrap();
+        let cfg = SimConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.lats.alpha, 0.4);
+        assert_eq!(cfg.lats.radius, 8.0);
+        assert!(!cfg.features.bap);
+        assert!(cfg.features.besf);
+        assert_eq!(cfg.hw.pe_lanes, 16);
+        assert_eq!(cfg.seed, 99);
+    }
+
+    #[test]
+    fn sim_config_rejects_bad_alpha() {
+        let doc = parse_toml("[lats]\nalpha = 1.5\n").unwrap();
+        assert!(SimConfig::from_toml(&doc).is_err());
+    }
+}

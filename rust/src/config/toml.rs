@@ -1,0 +1,202 @@
+//! A TOML-subset parser (offline substitute for serde+toml).
+//!
+//! Supported: `[section]` headers, `key = value` pairs with integer, float,
+//! boolean and double-quoted string values, `#` comments, blank lines.
+//! Unsupported (rejected with an error): arrays, inline tables, dotted keys,
+//! multi-line strings — none of which our configs need.
+
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+/// A parsed document: `section -> key -> value`. Keys outside any section go
+/// under the empty-string section.
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_i64(&self, section: &str, key: &str) -> Option<i64> {
+        match self.get(section, key)? {
+            TomlValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key)? {
+            TomlValue::Float(v) => Some(*v),
+            TomlValue::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key)? {
+            TomlValue::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        match self.get(section, key)? {
+            TomlValue::Str(v) => Some(v.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &String> {
+        self.sections.keys()
+    }
+}
+
+/// Parse a TOML-subset string.
+pub fn parse_toml(src: &str) -> Result<TomlDoc, String> {
+    let mut doc = TomlDoc::default();
+    let mut current = String::new();
+    doc.sections.entry(current.clone()).or_default();
+
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section header", lineno + 1))?
+                .trim();
+            if name.is_empty() || name.contains('[') || name.contains('.') {
+                return Err(format!("line {}: unsupported section name `{name}`", lineno + 1));
+            }
+            current = name.to_string();
+            doc.sections.entry(current.clone()).or_default();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| format!("line {}: expected `key = value`", lineno + 1))?;
+        let key = line[..eq].trim();
+        let val = line[eq + 1..].trim();
+        if key.is_empty() || key.contains('.') || key.contains(' ') {
+            return Err(format!("line {}: unsupported key `{key}`", lineno + 1));
+        }
+        let value = parse_value(val).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        doc.sections.get_mut(&current).unwrap().insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside a quoted string is content, not a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let inner = body.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quotes unsupported".into());
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s.starts_with('[') || s.starts_with('{') {
+        return Err("arrays/inline tables unsupported".into());
+    }
+    let clean = s.replace('_', "");
+    if clean.contains('.') || clean.contains('e') || clean.contains('E') {
+        return clean
+            .parse::<f64>()
+            .map(TomlValue::Float)
+            .map_err(|_| format!("bad float `{s}`"));
+    }
+    clean.parse::<i64>().map(TomlValue::Int).map_err(|_| format!("bad value `{s}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse_toml(
+            "# top comment\nroot_key = 1\n[alpha]\nx = 3\ny = 2.5\nz = true\nname = \"hello\" # trailing\n[beta]\nx = -7\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get_i64("", "root_key"), Some(1));
+        assert_eq!(doc.get_i64("alpha", "x"), Some(3));
+        assert_eq!(doc.get_f64("alpha", "y"), Some(2.5));
+        assert_eq!(doc.get_bool("alpha", "z"), Some(true));
+        assert_eq!(doc.get_str("alpha", "name"), Some("hello"));
+        assert_eq!(doc.get_i64("beta", "x"), Some(-7));
+    }
+
+    #[test]
+    fn int_promotes_to_f64() {
+        let doc = parse_toml("[s]\nv = 4\n").unwrap();
+        assert_eq!(doc.get_f64("s", "v"), Some(4.0));
+    }
+
+    #[test]
+    fn underscores_in_numbers() {
+        let doc = parse_toml("[s]\nbig = 1_000_000\n").unwrap();
+        assert_eq!(doc.get_i64("s", "big"), Some(1_000_000));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = parse_toml("[s]\nv = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get_str("s", "v"), Some("a#b"));
+    }
+
+    #[test]
+    fn missing_key_is_none_not_error() {
+        let doc = parse_toml("[s]\nv = 1\n").unwrap();
+        assert_eq!(doc.get_i64("s", "nope"), None);
+        assert_eq!(doc.get_i64("other", "v"), None);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(parse_toml("just words\n").is_err());
+        assert!(parse_toml("[unclosed\n").is_err());
+        assert!(parse_toml("k = [1, 2]\n").is_err());
+        assert!(parse_toml("k = \"unterminated\n").is_err());
+        assert!(parse_toml("a.b = 1\n").is_err());
+    }
+
+    #[test]
+    fn scientific_floats() {
+        let doc = parse_toml("[s]\nclk = 1e9\n").unwrap();
+        assert_eq!(doc.get_f64("s", "clk"), Some(1e9));
+    }
+}

@@ -1,0 +1,181 @@
+//! Dynamic batching policy: group requests by artifact shape, release a
+//! batch when it reaches `max_batch` or its oldest member has waited
+//! `max_wait`.
+
+use super::{AttnRequest, AttnResponse};
+use std::collections::HashMap;
+use std::sync::mpsc::Sender;
+use std::time::{Duration, Instant};
+
+/// Batching knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchConfig {
+    /// Maximum requests per batch.
+    pub max_batch: usize,
+    /// Maximum time the oldest request may wait before the batch is released.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        Self { max_batch: 16, max_wait: Duration::from_millis(2) }
+    }
+}
+
+type Pending = Vec<(AttnRequest, Instant, Sender<AttnResponse>)>;
+
+/// Shape-keyed pending queues.
+pub struct Batcher {
+    cfg: BatchConfig,
+    pending: HashMap<(crate::runtime::ArtifactKind, usize, usize, u32), Pending>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatchConfig) -> Self {
+        assert!(cfg.max_batch >= 1);
+        Self { cfg, pending: HashMap::new() }
+    }
+
+    /// Enqueue a request.
+    pub fn push(&mut self, req: AttnRequest, submitted: Instant, resp: Sender<AttnResponse>) {
+        self.pending.entry(req.shape_key()).or_default().push((req, submitted, resp));
+    }
+
+    /// Is any shape group at capacity?
+    pub fn any_full(&self) -> bool {
+        self.pending.values().any(|v| v.len() >= self.cfg.max_batch)
+    }
+
+    /// Total queued requests.
+    pub fn len(&self) -> usize {
+        self.pending.values().map(|v| v.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Remove and return every batch that is ready at `now` (full, or oldest
+    /// member has exceeded max_wait).
+    pub fn take_ready(&mut self, now: Instant) -> Vec<Pending> {
+        let mut out = vec![];
+        let keys: Vec<_> = self.pending.keys().copied().collect();
+        for key in keys {
+            let queue = self.pending.get_mut(&key).unwrap();
+            while queue.len() >= self.cfg.max_batch {
+                out.push(queue.drain(..self.cfg.max_batch).collect());
+            }
+            let timed_out = queue
+                .first()
+                .map(|(_, t, _)| now.duration_since(*t) >= self.cfg.max_wait)
+                .unwrap_or(false);
+            if timed_out && !queue.is_empty() {
+                out.push(std::mem::take(queue));
+            }
+            if self.pending.get(&key).map(|q| q.is_empty()).unwrap_or(false) {
+                self.pending.remove(&key);
+            }
+        }
+        out
+    }
+
+    /// Drain everything (shutdown).
+    pub fn take_all(&mut self) -> Vec<Pending> {
+        self.pending.drain().map(|(_, v)| v).filter(|v| !v.is_empty()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ArtifactKind;
+    use std::sync::mpsc::channel;
+
+    fn req(kind: ArtifactKind, seq: usize) -> AttnRequest {
+        AttnRequest {
+            id: 0,
+            kind,
+            alpha: 0.6,
+            seq,
+            dim: 4,
+            q: vec![0.0; 4],
+            k: vec![0.0; seq * 4],
+            v: vec![0.0; seq * 4],
+            valid: vec![1.0; seq],
+        }
+    }
+
+    fn push(b: &mut Batcher, r: AttnRequest, t: Instant) {
+        let (tx, _rx) = channel();
+        // Keep _rx alive long enough for the test by leaking the receiver —
+        // batcher itself never sends.
+        std::mem::forget(_rx);
+        b.push(r, t, tx);
+    }
+
+    #[test]
+    fn full_batch_released_immediately() {
+        let mut b = Batcher::new(BatchConfig { max_batch: 3, max_wait: Duration::from_secs(60) });
+        let t = Instant::now();
+        for _ in 0..3 {
+            push(&mut b, req(ArtifactKind::Dense, 8), t);
+        }
+        let ready = b.take_ready(t);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].len(), 3);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn partial_batch_waits_until_timeout() {
+        let cfg = BatchConfig { max_batch: 8, max_wait: Duration::from_millis(10) };
+        let mut b = Batcher::new(cfg);
+        let t0 = Instant::now();
+        push(&mut b, req(ArtifactKind::Dense, 8), t0);
+        push(&mut b, req(ArtifactKind::Dense, 8), t0);
+        assert!(b.take_ready(t0).is_empty(), "not full, not timed out");
+        let later = t0 + Duration::from_millis(11);
+        let ready = b.take_ready(later);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].len(), 2);
+    }
+
+    #[test]
+    fn different_shapes_never_mix() {
+        let mut b = Batcher::new(BatchConfig { max_batch: 2, max_wait: Duration::ZERO });
+        let t = Instant::now();
+        push(&mut b, req(ArtifactKind::Dense, 8), t);
+        push(&mut b, req(ArtifactKind::Dense, 16), t);
+        push(&mut b, req(ArtifactKind::BitStopper, 8), t);
+        let ready = b.take_ready(t + Duration::from_millis(1));
+        assert_eq!(ready.len(), 3, "three distinct shape groups");
+        for batch in &ready {
+            let key = batch[0].0.shape_key();
+            assert!(batch.iter().all(|(r, _, _)| r.shape_key() == key));
+        }
+    }
+
+    #[test]
+    fn oversized_burst_splits_into_multiple_batches() {
+        let mut b = Batcher::new(BatchConfig { max_batch: 4, max_wait: Duration::ZERO });
+        let t = Instant::now();
+        for _ in 0..10 {
+            push(&mut b, req(ArtifactKind::Dense, 8), t);
+        }
+        let ready = b.take_ready(t);
+        let sizes: Vec<usize> = ready.iter().map(|b| b.len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+        assert!(sizes.iter().all(|&s| s <= 4));
+    }
+
+    #[test]
+    fn take_all_drains() {
+        let mut b = Batcher::new(BatchConfig::default());
+        let t = Instant::now();
+        push(&mut b, req(ArtifactKind::Dense, 8), t);
+        push(&mut b, req(ArtifactKind::BitStopper, 8), t);
+        let all = b.take_all();
+        assert_eq!(all.iter().map(|v| v.len()).sum::<usize>(), 2);
+        assert!(b.is_empty());
+    }
+}

@@ -1,0 +1,352 @@
+//! Layer-3 serving coordinator: request queue → dynamic batcher → executor
+//! workers (vLLM-router-style, std-thread based — the offline environment has
+//! no tokio; see DESIGN.md §2).
+//!
+//! The coordinator owns the *request path*: attention requests are grouped by
+//! artifact shape by the [`batch::Batcher`], routed to executor workers by
+//! least-queue-depth ([`router::Router`]), and executed either through the
+//! PJRT runtime (AOT artifacts — the production path) or through a pure-Rust
+//! fallback executor (used in tests and when artifacts are absent).
+//!
+//! Python is never on this path; the only Python involvement was the one-time
+//! `make artifacts`.
+
+pub mod batch;
+pub mod router;
+
+pub use batch::{Batcher, BatchConfig};
+pub use router::Router;
+
+use crate::attention::attention_f32;
+use crate::runtime::ArtifactKind;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One attention request (single query against a K/V context).
+#[derive(Debug, Clone)]
+pub struct AttnRequest {
+    pub id: u64,
+    pub kind: ArtifactKind,
+    pub alpha: f64,
+    pub seq: usize,
+    pub dim: usize,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub valid: Vec<f32>,
+}
+
+impl AttnRequest {
+    /// Shape key used for batching (requests in a batch share an artifact).
+    pub fn shape_key(&self) -> (ArtifactKind, usize, usize, u32) {
+        (self.kind, self.seq, self.dim, (self.alpha * 100.0).round() as u32)
+    }
+}
+
+/// Completed response.
+#[derive(Debug, Clone)]
+pub struct AttnResponse {
+    pub id: u64,
+    pub out: Vec<f32>,
+    /// Tokens kept by the in-graph selection (seq for dense).
+    pub kept: usize,
+    pub latency: Duration,
+}
+
+/// Executor abstraction: the PJRT-backed executor lives in the binary /
+/// examples (it needs a loaded [`crate::runtime::Runtime`]); the pure-Rust
+/// executor makes the coordinator testable without artifacts.
+///
+/// Executors are **constructed inside their worker thread** (the PJRT client
+/// is not `Send`), so implementations need not be thread-safe.
+pub trait AttnExecutor: 'static {
+    fn execute(&mut self, req: &AttnRequest) -> Result<(Vec<f32>, usize)>;
+}
+
+/// Pure-Rust dense-attention executor (fallback / tests).
+pub struct RustExecutor;
+
+impl AttnExecutor for RustExecutor {
+    fn execute(&mut self, req: &AttnRequest) -> Result<(Vec<f32>, usize)> {
+        // Respect `valid` by truncation when it is a prefix mask.
+        let live = req.valid.iter().filter(|&&v| v > 0.5).count();
+        let out = attention_f32(&req.q, &req.k[..live * req.dim], &req.v[..live * req.dim], live, req.dim, req.dim);
+        Ok((out, live))
+    }
+}
+
+/// Aggregated serving metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub completed: u64,
+    pub errors: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub mean_latency_us: f64,
+    pub p95_latency_us: f64,
+    pub throughput_rps: f64,
+}
+
+#[derive(Default)]
+struct MetricsInner {
+    completed: u64,
+    errors: u64,
+    batches: u64,
+    batch_size_sum: u64,
+    latencies_us: Vec<f64>,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+}
+
+/// The serving engine: batcher thread + N executor workers.
+pub struct Engine {
+    tx: Sender<(AttnRequest, Sender<AttnResponse>)>,
+    metrics: Arc<Mutex<MetricsInner>>,
+    next_id: AtomicU64,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    batcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Start an engine. `make_executor` is cloned into and invoked **inside**
+    /// each worker thread (the PJRT client is not `Send`).
+    pub fn start<F, E>(n_workers: usize, cfg: BatchConfig, make_executor: F) -> Self
+    where
+        F: Fn() -> E + Send + Clone + 'static,
+        E: AttnExecutor,
+    {
+        assert!(n_workers >= 1);
+        let metrics = Arc::new(Mutex::new(MetricsInner::default()));
+
+        // Worker channels.
+        let mut worker_txs = Vec::new();
+        let mut workers = Vec::new();
+        for _ in 0..n_workers {
+            let (wtx, wrx): (
+                Sender<Vec<(AttnRequest, Instant, Sender<AttnResponse>)>>,
+                Receiver<Vec<(AttnRequest, Instant, Sender<AttnResponse>)>>,
+            ) = channel();
+            let factory = make_executor.clone();
+            let m = Arc::clone(&metrics);
+            workers.push(std::thread::spawn(move || {
+                let mut exec = factory();
+                while let Ok(batch) = wrx.recv() {
+                    let bsize = batch.len() as u64;
+                    for (req, submitted, resp_tx) in batch {
+                        let t0 = Instant::now();
+                        match exec.execute(&req) {
+                            Ok((out, kept)) => {
+                                let latency = submitted.elapsed();
+                                // Metrics BEFORE the response: a caller that
+                                // has all its responses must see all counts.
+                                {
+                                    let mut mi = m.lock().unwrap();
+                                    mi.completed += 1;
+                                    mi.latencies_us.push(latency.as_secs_f64() * 1e6);
+                                    if mi.started.is_none() {
+                                        mi.started = Some(t0);
+                                    }
+                                    mi.finished = Some(Instant::now());
+                                }
+                                let _ = resp_tx.send(AttnResponse {
+                                    id: req.id,
+                                    out,
+                                    kept,
+                                    latency,
+                                });
+                            }
+                            Err(_) => {
+                                let mut mi = m.lock().unwrap();
+                                mi.errors += 1;
+                            }
+                        }
+                    }
+                    let mut mi = m.lock().unwrap();
+                    mi.batches += 1;
+                    mi.batch_size_sum += bsize;
+                }
+            }));
+            worker_txs.push(wtx);
+        }
+
+        // Batcher thread: shape-group then route to least-loaded worker.
+        let (tx, rx): (
+            Sender<(AttnRequest, Sender<AttnResponse>)>,
+            Receiver<(AttnRequest, Sender<AttnResponse>)>,
+        ) = channel();
+        let batcher = {
+            std::thread::spawn(move || {
+                let mut batcher = Batcher::new(cfg);
+                let mut router = Router::new(worker_txs.len());
+                loop {
+                    // Block for the first request, then drain within the window.
+                    let first = match rx.recv_timeout(Duration::from_millis(5)) {
+                        Ok(r) => Some(r),
+                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
+                        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+                    };
+                    if let Some((req, resp)) = first {
+                        batcher.push(req, Instant::now(), resp);
+                        // Greedy drain without blocking.
+                        while let Ok((req, resp)) = rx.try_recv() {
+                            batcher.push(req, Instant::now(), resp);
+                            if batcher.any_full() {
+                                break;
+                            }
+                        }
+                    }
+                    for batch in batcher.take_ready(Instant::now()) {
+                        let w = router.pick();
+                        router.note_dispatch(w, batch.len());
+                        if worker_txs[w].send(batch).is_err() {
+                            return;
+                        }
+                    }
+                }
+                // Drain leftovers on shutdown.
+                for batch in batcher.take_all() {
+                    let w = router.pick();
+                    let _ = worker_txs[w].send(batch);
+                }
+            })
+        };
+
+        Self { tx, metrics, next_id: AtomicU64::new(1), workers, batcher: Some(batcher) }
+    }
+
+    /// Submit a request; returns a receiver for its response.
+    pub fn submit(&self, mut req: AttnRequest) -> Receiver<AttnResponse> {
+        req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (rtx, rrx) = channel();
+        // Engine shutdown mid-submit simply drops the sender; callers see a
+        // disconnected receiver.
+        let _ = self.tx.send((req, rtx));
+        rrx
+    }
+
+    /// Submit and wait.
+    pub fn submit_blocking(&self, req: AttnRequest) -> Result<AttnResponse> {
+        let rx = self.submit(req);
+        rx.recv().map_err(|_| anyhow::anyhow!("engine shut down"))
+    }
+
+    /// Snapshot current metrics.
+    pub fn metrics(&self) -> Metrics {
+        let mi = self.metrics.lock().unwrap();
+        let mean_lat = crate::util::stats::mean(&mi.latencies_us);
+        let p95 = crate::util::stats::percentile(&mi.latencies_us, 95.0);
+        let elapsed = match (mi.started, mi.finished) {
+            (Some(s), Some(f)) if f > s => (f - s).as_secs_f64(),
+            _ => 0.0,
+        };
+        Metrics {
+            completed: mi.completed,
+            errors: mi.errors,
+            batches: mi.batches,
+            mean_batch_size: if mi.batches == 0 {
+                0.0
+            } else {
+                mi.batch_size_sum as f64 / mi.batches as f64
+            },
+            mean_latency_us: mean_lat,
+            p95_latency_us: p95,
+            throughput_rps: if elapsed > 0.0 { mi.completed as f64 / elapsed } else { 0.0 },
+        }
+    }
+
+    /// Graceful shutdown: drains in-flight work.
+    pub fn shutdown(mut self) {
+        drop(self.tx);
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn mk_request(seq: usize, dim: usize, seed: u64) -> AttnRequest {
+        let mut rng = SplitMix64::new(seed);
+        AttnRequest {
+            id: 0,
+            kind: ArtifactKind::Dense,
+            alpha: 0.0,
+            seq,
+            dim,
+            q: (0..dim).map(|_| rng.normal() as f32).collect(),
+            k: (0..seq * dim).map(|_| rng.normal() as f32).collect(),
+            v: (0..seq * dim).map(|_| rng.normal() as f32).collect(),
+            valid: vec![1.0; seq],
+        }
+    }
+
+    #[test]
+    fn engine_serves_requests_through_rust_executor() {
+        let engine = Engine::start(2, BatchConfig::default(), || RustExecutor);
+        let mut rxs = vec![];
+        for i in 0..20 {
+            rxs.push(engine.submit(mk_request(16, 8, i)));
+        }
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.out.len(), 8);
+            assert_eq!(resp.kept, 16);
+            assert!(resp.out.iter().all(|x| x.is_finite()));
+        }
+        let m = engine.metrics();
+        assert_eq!(m.completed, 20);
+        assert_eq!(m.errors, 0);
+        assert!(m.batches >= 1);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn responses_match_direct_attention() {
+        let engine = Engine::start(1, BatchConfig::default(), || RustExecutor);
+        let req = mk_request(12, 6, 42);
+        let want = attention_f32(&req.q, &req.k, &req.v, 12, 6, 6);
+        let resp = engine.submit_blocking(req).unwrap();
+        assert_eq!(resp.out, want);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn ids_are_unique_and_monotone() {
+        let engine = Engine::start(1, BatchConfig::default(), || RustExecutor);
+        let r1 = engine.submit_blocking(mk_request(4, 4, 1)).unwrap();
+        let r2 = engine.submit_blocking(mk_request(4, 4, 2)).unwrap();
+        assert!(r2.id > r1.id);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn valid_prefix_mask_respected() {
+        let engine = Engine::start(1, BatchConfig::default(), || RustExecutor);
+        let mut req = mk_request(8, 4, 3);
+        for j in 4..8 {
+            req.valid[j] = 0.0;
+        }
+        let resp = engine.submit_blocking(req).unwrap();
+        assert_eq!(resp.kept, 4);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_cleanly() {
+        let engine = Engine::start(2, BatchConfig::default(), || RustExecutor);
+        let rx = engine.submit(mk_request(8, 4, 9));
+        engine.shutdown();
+        // The response may or may not have been delivered before shutdown —
+        // but the channel must be resolved either way (no hang).
+        let _ = rx.try_recv();
+    }
+}

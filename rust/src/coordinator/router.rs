@@ -1,0 +1,87 @@
+//! Worker routing: least-outstanding-work selection with round-robin tie
+//! breaking (the standard replica-routing policy of serving routers).
+
+/// Tracks estimated outstanding work per worker.
+#[derive(Debug)]
+pub struct Router {
+    outstanding: Vec<usize>,
+    rr: usize,
+}
+
+impl Router {
+    pub fn new(n_workers: usize) -> Self {
+        assert!(n_workers >= 1);
+        Self { outstanding: vec![0; n_workers], rr: 0 }
+    }
+
+    /// Pick the least-loaded worker (round-robin across ties).
+    pub fn pick(&mut self) -> usize {
+        let min = *self.outstanding.iter().min().unwrap();
+        let n = self.outstanding.len();
+        for off in 0..n {
+            let idx = (self.rr + off) % n;
+            if self.outstanding[idx] == min {
+                self.rr = (idx + 1) % n;
+                return idx;
+            }
+        }
+        unreachable!()
+    }
+
+    /// Record a dispatched batch.
+    pub fn note_dispatch(&mut self, worker: usize, n: usize) {
+        self.outstanding[worker] += n;
+    }
+
+    /// Record completion (used when completion feedback is wired; the
+    /// batcher thread also decays optimistically).
+    pub fn note_complete(&mut self, worker: usize, n: usize) {
+        self.outstanding[worker] = self.outstanding[worker].saturating_sub(n);
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.outstanding.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ties_rotate_round_robin() {
+        let mut r = Router::new(3);
+        let a = r.pick();
+        let b = r.pick();
+        let c = r.pick();
+        let mut seen = vec![a, b, c];
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2], "all workers used on ties");
+    }
+
+    #[test]
+    fn least_loaded_preferred() {
+        let mut r = Router::new(3);
+        r.note_dispatch(0, 10);
+        r.note_dispatch(1, 5);
+        assert_eq!(r.pick(), 2);
+        r.note_dispatch(2, 20);
+        assert_eq!(r.pick(), 1);
+    }
+
+    #[test]
+    fn completion_reduces_load() {
+        let mut r = Router::new(2);
+        r.note_dispatch(0, 4);
+        r.note_dispatch(1, 2);
+        r.note_complete(0, 4);
+        assert_eq!(r.pick(), 0);
+    }
+
+    #[test]
+    fn saturating_complete() {
+        let mut r = Router::new(1);
+        r.note_complete(0, 99);
+        assert_eq!(r.pick(), 0);
+    }
+}

@@ -1,0 +1,191 @@
+//! 28 nm energy / area / power model (substitute for Synopsys DC + CACTI).
+//!
+//! Per-operation energies are anchored on published 28–45 nm datapoints
+//! (Horowitz, ISSCC'14 "Computing's energy problem", scaled 45 nm → 28 nm by
+//! ≈0.6×; HBM2 pJ/bit from the HBM2 JEDEC-era literature; SRAM from
+//! CACTI-style capacity scaling). Absolute values carry model error, but every
+//! comparison in the paper is *relative* between designs evaluated under the
+//! same constants, which is exactly how we use them.
+//!
+//! The static area/power table is calibrated so that the BitStopper
+//! configuration reproduces the paper's Fig. 14 totals (6.84 mm², 703 mW) and
+//! its stated overhead percentages (LATS + Bit-Margin-Generator: 4.9 % area /
+//! 6.9 % power; Scoreboard + Pruning Engine: 5.8 % area / 4.9 % power).
+
+pub mod area;
+
+pub use area::{bitstopper_area_power, AreaPowerEntry};
+
+use crate::algo::complexity::Complexity;
+
+/// Per-op / per-bit energy constants at 28 nm, 1 GHz, in picojoules.
+#[derive(Debug, Clone, Copy)]
+pub struct OpEnergies {
+    /// One INT12×INT12 multiply-accumulate.
+    pub mac12_pj: f64,
+    /// One BRAT dim-bit op (12-bit operand AND-select + add into the tree).
+    pub bitop_pj: f64,
+    /// One softmax element through the 18-bit LUT path (lookup + multiply).
+    pub softmax_pj: f64,
+    /// One scoreboard read or write (45-bit register-file entry).
+    pub scoreboard_pj: f64,
+    /// Off-chip DRAM access energy per bit (HBM2).
+    pub dram_pj_per_bit: f64,
+}
+
+impl Default for OpEnergies {
+    fn default() -> Self {
+        Self {
+            // 12b multiply ≈ (12/8)² × 0.2 pJ(45nm,8b) × 0.6 ≈ 0.27; +accum ≈ 0.33.
+            mac12_pj: 0.33,
+            // One dim of a 12b×1b AND + adder-tree level ≈ 1/10 of a full MAC.
+            bitop_pj: 0.033,
+            // LUT read (1 k × 18 b) + reciprocal multiply share.
+            softmax_pj: 1.8,
+            // Small RF access, 45 b.
+            scoreboard_pj: 0.45,
+            // HBM2: ~3.9 pJ/bit (I/O + DRAM core).
+            dram_pj_per_bit: 3.9,
+        }
+    }
+}
+
+/// CACTI-like SRAM read/write energy per bit as a function of macro capacity.
+/// Larger arrays burn more per access (longer lines, bigger decoders).
+pub fn sram_pj_per_bit(capacity_bytes: usize) -> f64 {
+    let kb = (capacity_bytes as f64 / 1024.0).max(1.0);
+    // 0.03 pJ/bit at 1 KB growing logarithmically to ≈0.20 pJ/bit at 512 KB.
+    0.03 + 0.019 * kb.log2()
+}
+
+/// Energy breakdown in the paper's Fig. 12 categories.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    /// Datapath (BRAT + MAC + softmax + scoreboard) energy, pJ.
+    pub compute_pj: f64,
+    /// On-chip buffer energy, pJ.
+    pub buffer_pj: f64,
+    /// Off-chip DRAM energy, pJ.
+    pub dram_pj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_pj(&self) -> f64 {
+        self.compute_pj + self.buffer_pj + self.dram_pj
+    }
+
+    pub fn add(&mut self, o: &EnergyBreakdown) {
+        self.compute_pj += o.compute_pj;
+        self.buffer_pj += o.buffer_pj;
+        self.dram_pj += o.dram_pj;
+    }
+
+    /// Fraction of total energy spent in DRAM (the paper's 67 %/62 %/38 %
+    /// comparison).
+    pub fn dram_fraction(&self) -> f64 {
+        let t = self.total_pj();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.dram_pj / t
+        }
+    }
+}
+
+/// The full energy model.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyModel {
+    pub ops: OpEnergies,
+    /// K/V buffer capacity (drives SRAM per-bit energy).
+    pub kv_buffer_bytes: usize,
+    /// Scoreboard accesses charged per bit-serial round (read + write).
+    pub scoreboard_accesses_per_round: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        Self {
+            ops: OpEnergies::default(),
+            kv_buffer_bytes: 320 * 1024,
+            scoreboard_accesses_per_round: 2.0,
+        }
+    }
+}
+
+impl EnergyModel {
+    /// Convert complexity counters into an energy breakdown.
+    ///
+    /// `sram_bits` — on-chip buffer traffic (each off-chip bit is written once
+    /// and read at least once on chip; callers that model tiling pass their
+    /// own counts, functional models use [`EnergyModel::default_sram_bits`]).
+    /// `scoreboard_rounds` — number of (token, round) partial-score updates.
+    pub fn energy(&self, cx: &Complexity, sram_bits: u64, scoreboard_rounds: u64) -> EnergyBreakdown {
+        let compute_pj = cx.bit_ops as f64 * self.ops.bitop_pj
+            + cx.mac_ops as f64 * self.ops.mac12_pj
+            + cx.softmax_ops as f64 * self.ops.softmax_pj
+            + scoreboard_rounds as f64
+                * self.scoreboard_accesses_per_round
+                * self.ops.scoreboard_pj;
+        let buffer_pj = sram_bits as f64 * sram_pj_per_bit(self.kv_buffer_bytes);
+        let dram_pj = cx.dram_bits() as f64 * self.ops.dram_pj_per_bit;
+        EnergyBreakdown { compute_pj, buffer_pj, dram_pj }
+    }
+
+    /// Default on-chip traffic estimate: every off-chip bit is written to and
+    /// read from the buffers once (write + read = 2 passes).
+    pub fn default_sram_bits(cx: &Complexity) -> u64 {
+        cx.dram_bits() * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dram_dominates_compute_per_bit() {
+        // Foundational premise of the paper: moving a bit off-chip costs far
+        // more than computing with it.
+        let e = OpEnergies::default();
+        assert!(e.dram_pj_per_bit > 10.0 * e.bitop_pj);
+        assert!(e.dram_pj_per_bit * 12.0 > e.mac12_pj);
+    }
+
+    #[test]
+    fn sram_energy_grows_with_capacity() {
+        assert!(sram_pj_per_bit(512 * 1024) > sram_pj_per_bit(8 * 1024));
+        assert!(sram_pj_per_bit(1024) > 0.0);
+    }
+
+    #[test]
+    fn breakdown_totals_and_fractions() {
+        let b = EnergyBreakdown { compute_pj: 10.0, buffer_pj: 20.0, dram_pj: 70.0 };
+        assert!((b.total_pj() - 100.0).abs() < 1e-12);
+        assert!((b.dram_fraction() - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_work_zero_energy() {
+        let m = EnergyModel::default();
+        let e = m.energy(&Complexity::default(), 0, 0);
+        assert_eq!(e.total_pj(), 0.0);
+        assert_eq!(e.dram_fraction(), 0.0);
+    }
+
+    #[test]
+    fn energy_scales_linearly_with_work() {
+        let m = EnergyModel::default();
+        let cx1 = Complexity { k_bits: 1000, bit_ops: 500, mac_ops: 20, softmax_ops: 5, ..Default::default() };
+        let cx2 = cx1.scaled(3);
+        let e1 = m.energy(&cx1, 2000, 10);
+        let e2 = m.energy(&cx2, 6000, 30);
+        assert!((e2.total_pj() - 3.0 * e1.total_pj()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn add_accumulates() {
+        let mut a = EnergyBreakdown { compute_pj: 1.0, buffer_pj: 2.0, dram_pj: 3.0 };
+        a.add(&EnergyBreakdown { compute_pj: 1.0, buffer_pj: 1.0, dram_pj: 1.0 });
+        assert_eq!(a.total_pj(), 9.0);
+    }
+}

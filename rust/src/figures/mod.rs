@@ -1,0 +1,442 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (§V, Figs. 3/10/11/12/13/14, Table I) — see DESIGN.md §5 for the
+//! per-experiment index and the substitutions that apply.
+//!
+//! Each `figN_*` function runs the relevant workloads through the simulator
+//! stack and returns a [`Table`]; `run_all` renders everything (the
+//! `bitstopper figures` CLI and `cargo bench` wrap these).
+
+pub mod ablations;
+
+use crate::algo::selection::strategy_accuracy;
+use crate::baselines::{simulate_sanger, simulate_sofa, simulate_tokenpicker, SofaMode};
+use crate::config::{paper_workloads, Features, SimConfig};
+use crate::energy::area::{bitstopper_area_power, total_area, total_power, PEAK_TOPS_PER_W};
+use crate::report::{f, Table};
+use crate::sim::accelerator::{simulate_attention, SimReport};
+use crate::util::SplitMix64;
+use crate::workload::{AttnWorkload, QuantAttn, SynthConfig};
+
+/// Queries simulated per workload point (kept modest: the cycle simulator is
+/// deterministic, and the figures are ratios).
+const N_QUERIES: usize = 8;
+
+fn workload(seq: usize, dim: usize, queries: usize, seed: u64) -> QuantAttn {
+    let w = AttnWorkload::generate(SynthConfig::new(seq, dim, queries, seed));
+    let qs: Vec<Vec<f32>> = (0..queries).map(|i| w.query(i).to_vec()).collect();
+    QuantAttn::quantize(&qs, &w.k, &w.v, seq, dim)
+}
+
+fn dense_cfg() -> SimConfig {
+    let mut c = SimConfig::default();
+    c.features = Features::DENSE;
+    c
+}
+
+/// Fig. 3 (a): power split between prediction and formal stages, dense vs DS,
+/// at 2 k and 4 k context. "DS" is the Sanger-style two-stage design; power
+/// is modeled as energy at fixed makespan (1 GHz).
+pub fn fig3a() -> Table {
+    let mut t = Table::new(
+        "Fig.3a — power distribution: prediction vs formal stage (generic DS vs dense)",
+        &["seq", "design", "pred energy uJ", "formal energy uJ", "pred/formal"],
+    );
+    for seq in [2048usize, 4096] {
+        let qa = workload(seq, 64, N_QUERIES, 0x3A + seq as u64);
+        let cfg = SimConfig::default();
+        let dn = simulate_attention(&qa, &dense_cfg());
+        t.row(&[
+            seq.to_string(),
+            "dense".into(),
+            "0.00".into(),
+            f(dn.energy.total_pj() / 1e6, 2),
+            "-".into(),
+        ]);
+        // DS (Sanger-style): prediction = full-K stream + 4b compute;
+        // formal = survivors at 12 b + V. Decompose its energy by stage.
+        let ds = simulate_sanger(&qa, &cfg);
+        // Stage split: prediction carries the full K traffic, formal the
+        // survivor K re-fetch + V + MACs.
+        let pred_dram = (qa.seq() * qa.dim() * 12) as f64 * N_QUERIES as f64 * 3.9;
+        let pred_compute = ds.energy.compute_pj() * 0.25;
+        let pred = pred_dram + pred_compute;
+        let formal = ds.energy.total_pj() - pred;
+        t.row(&[
+            seq.to_string(),
+            "DS (2-stage)".into(),
+            f(pred / 1e6, 2),
+            f(formal / 1e6, 2),
+            f(pred / formal.max(1.0), 2),
+        ]);
+    }
+    t
+}
+
+/// Fig. 3 (b): token-selection accuracy (F1 vs ground-truth vital set) as
+/// query diversity grows — static threshold & fixed top-k vs LATS.
+pub fn fig3b() -> Table {
+    let mut t = Table::new(
+        "Fig.3b — selection accuracy vs number of queries",
+        &["queries", "static-threshold F1", "top-k F1", "LATS F1"],
+    );
+    let mut rng = SplitMix64::new(0x3B);
+    for &n in &[1usize, 4, 16, 64, 256] {
+        let w = AttnWorkload::generate(SynthConfig::new(512, 64, n, rng.next_u64()));
+        let logits: Vec<Vec<f32>> = (0..n).map(|i| w.logits(i)).collect();
+        let acc = strategy_accuracy(&logits, 0.6, 5.0, 0.95);
+        t.row(&[
+            n.to_string(),
+            f(acc.static_threshold, 3),
+            f(acc.topk, 3),
+            f(acc.lats, 3),
+        ]);
+    }
+    t
+}
+
+/// One full design sweep on one workload point.
+struct Sweep {
+    dense: SimReport,
+    sanger: SimReport,
+    sofa: SimReport,
+    sofa_ft: SimReport,
+    tokenpicker: SimReport,
+    bitstopper: SimReport,
+}
+
+fn sweep(seq: usize, dim: usize, seed: u64) -> Sweep {
+    let qa = workload(seq, dim, N_QUERIES, seed);
+    let cfg = SimConfig::default();
+    Sweep {
+        dense: simulate_attention(&qa, &dense_cfg()),
+        sanger: simulate_sanger(&qa, &cfg),
+        sofa: simulate_sofa(&qa, &cfg, SofaMode::NoFinetune),
+        sofa_ft: simulate_sofa(&qa, &cfg, SofaMode::Finetuned),
+        tokenpicker: simulate_tokenpicker(&qa, &cfg),
+        bitstopper: simulate_attention(&qa, &cfg),
+    }
+}
+
+/// Fig. 10: normalized complexity (compute MAC-equivalents + DRAM traffic)
+/// per design on the four (model, task) points.
+pub fn fig10() -> Table {
+    let mut t = Table::new(
+        "Fig.10 — normalized complexity (compute + memory), dense = 1.0",
+        &["workload", "design", "compute", "memory", "total"],
+    );
+    for wp in paper_workloads() {
+        let s = sweep(wp.seq_len, wp.shape.head_dim, 0x10 + wp.seq_len as u64);
+        let base_c = s.dense.complexity.mac_equiv();
+        let base_m = s.dense.complexity.dram_bits() as f64;
+        for (name, r) in [
+            ("dense", &s.dense),
+            ("sanger", &s.sanger),
+            ("sofa", &s.sofa),
+            ("tokenpicker", &s.tokenpicker),
+            ("bitstopper", &s.bitstopper),
+        ] {
+            let c = r.complexity.mac_equiv() / base_c;
+            let m = r.complexity.dram_bits() as f64 / base_m;
+            t.row(&[
+                format!("{}@{}({})", wp.shape.name, wp.seq_len, wp.task),
+                name.into(),
+                f(c, 3),
+                f(m, 3),
+                f((c + m) / 2.0, 3),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 11: normalized off-chip (DRAM) access vs sequence length.
+pub fn fig11() -> Table {
+    let mut t = Table::new(
+        "Fig.11 — normalized DRAM access (dense = 1.0), Llama-shape head",
+        &["seq", "sanger", "sofa", "sofa*", "tokenpicker", "bitstopper", "bs gain vs sanger", "bs gain vs sofa*"],
+    );
+    for &seq in &[1024usize, 2048, 4096] {
+        let s = sweep(seq, 128, 0x11 + seq as u64);
+        let base = s.dense.complexity.dram_bits() as f64;
+        let n = |r: &SimReport| r.complexity.dram_bits() as f64 / base;
+        t.row(&[
+            seq.to_string(),
+            f(n(&s.sanger), 3),
+            f(n(&s.sofa), 3),
+            f(n(&s.sofa_ft), 3),
+            f(n(&s.tokenpicker), 3),
+            f(n(&s.bitstopper), 3),
+            f(n(&s.sanger) / n(&s.bitstopper), 2),
+            f(n(&s.sofa_ft) / n(&s.bitstopper), 2),
+        ]);
+    }
+    t
+}
+
+/// Fig. 12: speedup over dense and energy breakdown per design per task.
+pub fn fig12() -> Table {
+    let mut t = Table::new(
+        "Fig.12 — speedup (vs dense) and energy breakdown",
+        &["workload", "design", "speedup", "E compute%", "E buffer%", "E dram%", "E total uJ"],
+    );
+    for wp in paper_workloads() {
+        let s = sweep(wp.seq_len, wp.shape.head_dim, 0x12 + wp.seq_len as u64);
+        for (name, r) in [
+            ("dense", &s.dense),
+            ("sanger", &s.sanger),
+            ("sofa*", &s.sofa_ft),
+            ("tokenpicker", &s.tokenpicker),
+            ("bitstopper", &s.bitstopper),
+        ] {
+            let e = &r.energy;
+            let tot = e.total_pj().max(1.0);
+            t.row(&[
+                format!("{}@{}({})", wp.shape.name, wp.seq_len, wp.task),
+                name.into(),
+                f(s.dense.cycles as f64 / r.cycles as f64, 2),
+                f(100.0 * e.compute_pj / tot, 1),
+                f(100.0 * e.buffer_pj / tot, 1),
+                f(100.0 * e.dram_pj / tot, 1),
+                f(tot / 1e6, 2),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 13 (a): 1/PPL and complexity reduction vs α — on the trained tiny
+/// transformer when available, else on the selection-rate proxy.
+pub fn fig13a() -> Table {
+    let mut t = Table::new(
+        "Fig.13a — quality (1/PPL) and complexity reduction vs alpha (tiny LM)",
+        &["alpha", "PPL", "1/PPL", "keep-rate %", "K-traffic reduction x"],
+    );
+    let dir = crate::runtime::default_artifact_dir().join("tiny_model");
+    if let (Ok((cfg, w)), Ok(tokens)) = (
+        crate::model::loader::load_weights(&dir.join("weights.bin")),
+        crate::model::loader::load_tokens(&dir.join("val_tokens.bin")),
+    ) {
+        let model = crate::model::TinyTransformer::new(cfg, w);
+        let eval = &tokens[..tokens.len().min(1536)];
+        for step in 0..7 {
+            let alpha = 0.2 + 0.1 * step as f64;
+            let policy = crate::model::AttnPolicy::Lats { alpha, radius: 5.0 };
+            let r = crate::model::evaluate_ppl(&model, eval, cfg.max_seq, &policy);
+            let (_, kept, total) =
+                model.forward_with_stats(&eval[..cfg.max_seq.min(eval.len())], &policy);
+            let keep = kept as f64 / total.max(1) as f64;
+            // Traffic reduction proxy from the accelerator sim at this α.
+            let qa = workload(1024, 64, 4, 0x13);
+            let mut scfg = SimConfig::default();
+            scfg.lats.alpha = alpha;
+            let rep = simulate_attention(&qa, &scfg);
+            t.row(&[
+                f(alpha, 1),
+                f(r.ppl, 4),
+                f(1.0 / r.ppl, 4),
+                f(100.0 * keep, 1),
+                f(1.0 / rep.k_traffic_fraction, 2),
+            ]);
+        }
+    } else {
+        t.row(&["(tiny model missing — run `make artifacts`)".into(), "-".into(), "-".into(), "-".into(), "-".into()]);
+    }
+    t
+}
+
+/// Fig. 13 (b): speedup breakdown (dense → +BESF → +BAP → +LATS) and
+/// compute-unit utilization.
+pub fn fig13b() -> Table {
+    let mut t = Table::new(
+        "Fig.13b — technique breakdown: cumulative speedup & QK utilization",
+        &["config", "cycles", "speedup vs dense", "utilization %", "keep-rate %"],
+    );
+    let qa = workload(2048, 128, N_QUERIES, 0x13B);
+    let mut cfg = SimConfig::default();
+    for (name, feats) in [
+        ("dense", Features::DENSE),
+        ("+BESF (static thr, sync)", Features::BESF_ONLY),
+        ("+BAP (async)", Features::BESF_BAP),
+        ("+LATS (full BitStopper)", Features::ALL),
+    ] {
+        cfg.features = feats;
+        let r = simulate_attention(&qa, &cfg);
+        if name == "dense" {
+            t.row(&[
+                name.into(),
+                r.cycles.to_string(),
+                "1.00".into(),
+                f(100.0 * r.utilization, 1),
+                f(100.0 * r.keep_rate, 1),
+            ]);
+        } else {
+            let dense = {
+                let mut c = cfg.clone();
+                c.features = Features::DENSE;
+                simulate_attention(&qa, &c)
+            };
+            t.row(&[
+                name.into(),
+                r.cycles.to_string(),
+                f(dense.cycles as f64 / r.cycles as f64, 2),
+                f(100.0 * r.utilization, 1),
+                f(100.0 * r.keep_rate, 1),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 14: area and power breakdown (calibrated model; §V-D).
+pub fn fig14() -> Table {
+    let mut t = Table::new(
+        "Fig.14 — area / power breakdown @ TSMC 28nm, 1 GHz",
+        &["component", "area mm2", "area %", "power mW", "power %", "sparsity overhead"],
+    );
+    let rows = bitstopper_area_power();
+    let (ta, tp) = (total_area(&rows), total_power(&rows));
+    for e in &rows {
+        t.row(&[
+            e.component.into(),
+            f(e.area_mm2, 3),
+            f(100.0 * e.area_mm2 / ta, 1),
+            f(e.power_mw, 1),
+            f(100.0 * e.power_mw / tp, 1),
+            if e.sparsity_overhead { "yes".into() } else { "".into() },
+        ]);
+    }
+    t.row(&[
+        "TOTAL".into(),
+        f(ta, 2),
+        "100.0".into(),
+        f(tp, 1),
+        "100.0".into(),
+        format!("peak {PEAK_TOPS_PER_W} TOPS/W"),
+    ]);
+    t
+}
+
+/// Table I: hardware configuration dump.
+pub fn table1() -> Table {
+    let hw = crate::config::HwConfig::default();
+    let mut t = Table::new("Table I — hardware configuration", &["parameter", "value"]);
+    let rows: Vec<(&str, String)> = vec![
+        ("Main memory", format!("HBM2, {} ch x {}-bit @ {} Gbps ({} GB/s)", hw.dram_channels, hw.dram_bus_bits, hw.dram_gbps, hw.dram_bandwidth_bps() / 1e9)),
+        ("K/V buffer", format!("{} KB SRAM", hw.kv_buffer_bytes / 1024)),
+        ("Q buffer", format!("{} KB SRAM", hw.q_buffer_bytes / 1024)),
+        ("PE lanes", format!("{} bit-level lanes", hw.pe_lanes)),
+        ("BRAT", format!("{}-dim x {}-bit x 1-bit per cycle", hw.brat_dim, hw.bits)),
+        ("Scoreboard", format!("{} entries x {} bit / lane", hw.scoreboard_entries, hw.scoreboard_bits)),
+        ("V-PU", format!("{}-way INT12 MAC + 18-bit LUT softmax", hw.vpu_macs)),
+        ("Clock", format!("{} GHz", hw.clock_hz / 1e9)),
+    ];
+    for (k, v) in rows {
+        t.row(&[k.into(), v]);
+    }
+    t
+}
+
+/// Headline claim: mean speedup / energy-efficiency gains (aggregate of Fig. 12).
+pub fn headline() -> Table {
+    let mut t = Table::new(
+        "Headline — BitStopper vs baselines (geomean over the 4 workload points)",
+        &["vs", "speedup (paper)", "speedup (ours)", "energy eff (paper)", "energy eff (ours)"],
+    );
+    let mut sp_d = vec![];
+    let mut sp_sa = vec![];
+    let mut sp_so = vec![];
+    let mut ee_d = vec![];
+    let mut ee_sa = vec![];
+    let mut ee_so = vec![];
+    for wp in paper_workloads() {
+        let s = sweep(wp.seq_len, wp.shape.head_dim, 0x12 + wp.seq_len as u64);
+        let bs = &s.bitstopper;
+        sp_d.push(s.dense.cycles as f64 / bs.cycles as f64);
+        sp_sa.push(s.sanger.cycles as f64 / bs.cycles as f64);
+        sp_so.push(s.sofa_ft.cycles as f64 / bs.cycles as f64);
+        ee_d.push(s.dense.energy.total_pj() / bs.energy.total_pj());
+        ee_sa.push(s.sanger.energy.total_pj() / bs.energy.total_pj());
+        ee_so.push(s.sofa_ft.energy.total_pj() / bs.energy.total_pj());
+    }
+    use crate::util::stats::geomean;
+    t.row(&["dense".into(), "3.20".into(), f(geomean(&sp_d), 2), "3.70".into(), f(geomean(&ee_d), 2)]);
+    t.row(&["sanger".into(), "2.03".into(), f(geomean(&sp_sa), 2), "2.40".into(), f(geomean(&ee_sa), 2)]);
+    t.row(&["sofa*".into(), "1.89".into(), f(geomean(&sp_so), 2), "2.10".into(), f(geomean(&ee_so), 2)]);
+    t
+}
+
+impl crate::energy::EnergyBreakdown {
+    /// Compute-stage energy (helper for the Fig. 3a split).
+    pub fn compute_pj(&self) -> f64 {
+        self.compute_pj
+    }
+}
+
+/// All figures in order; `which = None` runs everything.
+pub fn run_all(which: Option<&str>, out_dir: Option<&std::path::Path>) -> anyhow::Result<Vec<Table>> {
+    let all: Vec<(&str, fn() -> Table)> = vec![
+        ("table1", table1),
+        ("3a", fig3a),
+        ("3b", fig3b),
+        ("10", fig10),
+        ("11", fig11),
+        ("12", fig12),
+        ("13a", fig13a),
+        ("13b", fig13b),
+        ("14", fig14),
+        ("headline", headline),
+        ("ablation-scoreboard", ablations::ablation_scoreboard),
+        ("ablation-latency", ablations::ablation_dram_latency),
+        ("ablation-radius", ablations::ablation_radius),
+        ("ablation-lanes", ablations::ablation_lanes),
+    ];
+    let mut out = vec![];
+    for (name, func) in all {
+        if let Some(w) = which {
+            if w != name && !(w == "ablations" && name.starts_with("ablation")) {
+                continue;
+            }
+        }
+        let table = func();
+        println!("{}", table.render());
+        if let Some(dir) = out_dir {
+            crate::report::save(dir, &format!("fig{name}"), &table)?;
+        }
+        out.push(table);
+    }
+    anyhow::ensure!(!out.is_empty(), "unknown figure `{which:?}`");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3b_lats_wins_at_high_diversity() {
+        let t = fig3b();
+        let r = t.render();
+        assert!(r.contains("256"));
+    }
+
+    #[test]
+    fn fig14_total_matches_paper() {
+        let t = fig14();
+        let r = t.render();
+        assert!(r.contains("6.84"));
+        assert!(r.contains("703"));
+    }
+
+    #[test]
+    fn table1_lists_hbm2() {
+        let r = table1().render();
+        assert!(r.contains("HBM2"));
+        assert!(r.contains("256 GB/s"));
+    }
+
+    #[test]
+    fn fig13b_has_four_configs() {
+        let t = fig13b();
+        assert!(t.render().lines().count() >= 6);
+    }
+}

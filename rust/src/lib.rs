@@ -1,0 +1,37 @@
+//! # BitStopper
+//!
+//! Full-system reproduction of *"BitStopper: An Efficient Transformer Attention
+//! Accelerator via Stage-fusion and Early Termination"* (Wang et al., 2025).
+//!
+//! The crate is the Layer-3 (Rust) half of a three-layer stack:
+//!
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) implementing the
+//!   bit-plane partial-score computation and masked sparse attention, lowered
+//!   at build time.
+//! * **Layer 2** — JAX model (`python/compile/model.py`) composing the kernels
+//!   into attention forward passes, AOT-exported to HLO text artifacts.
+//! * **Layer 3** — this crate: the cycle-level BitStopper simulator, baseline
+//!   accelerator models (Sanger/SOFA/TokenPicker/dense), the 28 nm
+//!   energy/area model, the PJRT runtime that executes the AOT artifacts, a
+//!   serving coordinator, and the harness that regenerates every figure and
+//!   table of the paper's evaluation.
+//!
+//! See `DESIGN.md` for the system inventory and per-experiment index.
+
+pub mod util;
+pub mod config;
+pub mod quant;
+pub mod attention;
+pub mod algo;
+pub mod energy;
+pub mod workload;
+pub mod sim;
+pub mod baselines;
+pub mod model;
+pub mod runtime;
+pub mod coordinator;
+pub mod figures;
+pub mod report;
+// Modules below are added incrementally (see DESIGN.md §6):
+// algo, energy, workload, sim, baselines, model, runtime, coordinator,
+// figures, report.

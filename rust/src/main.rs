@@ -1,0 +1,133 @@
+//! BitStopper CLI.
+//!
+//! ```text
+//! bitstopper figures [--fig <id>] [--all] [--out <dir>]   regenerate paper figures
+//! bitstopper simulate [--seq N] [--dim N] [--queries N] [--alpha A] [--config F]
+//! bitstopper ppl [--alpha A]                               tiny-LM perplexity eval
+//! bitstopper artifacts                                     list loaded AOT artifacts
+//! bitstopper selftest                                      config + runtime sanity
+//! ```
+//! (Hand-rolled parsing: the build environment has no clap.)
+
+use bitstopper::config::{parse_toml, SimConfig};
+use bitstopper::figures;
+use bitstopper::runtime::{default_artifact_dir, Runtime};
+use bitstopper::sim::simulate_attention;
+use bitstopper::workload::{AttnWorkload, QuantAttn, SynthConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let get = |flag: &str| -> Option<String> {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    };
+    let has = |flag: &str| args.iter().any(|a| a == flag);
+
+    let result = match cmd {
+        "figures" => {
+            let which = get("--fig");
+            let out = get("--out").map(std::path::PathBuf::from);
+            let which_ref = if has("--all") { None } else { which.as_deref() };
+            figures::run_all(which_ref, out.as_deref()).map(|_| ())
+        }
+        "simulate" => {
+            let seq: usize = get("--seq").and_then(|s| s.parse().ok()).unwrap_or(1024);
+            let dim: usize = get("--dim").and_then(|s| s.parse().ok()).unwrap_or(64);
+            let queries: usize = get("--queries").and_then(|s| s.parse().ok()).unwrap_or(8);
+            let mut cfg = match get("--config") {
+                Some(path) => {
+                    let text = std::fs::read_to_string(&path)
+                        .unwrap_or_else(|e| panic!("reading {path}: {e}"));
+                    SimConfig::from_toml(&parse_toml(&text).expect("parse config"))
+                        .expect("valid config")
+                }
+                None => SimConfig::default(),
+            };
+            if let Some(a) = get("--alpha").and_then(|s| s.parse::<f64>().ok()) {
+                cfg.lats.alpha = a;
+            }
+            let w = AttnWorkload::generate(SynthConfig::new(seq, dim, queries, cfg.seed));
+            let qs: Vec<Vec<f32>> = (0..queries).map(|i| w.query(i).to_vec()).collect();
+            let qa = QuantAttn::quantize(&qs, &w.k, &w.v, seq, dim);
+            let r = simulate_attention(&qa, &cfg);
+            println!("workload  : {queries} queries x {seq} keys x {dim} dims (INT12)");
+            println!("features  : {:?}  alpha={}", cfg.features, cfg.lats.alpha);
+            println!("cycles    : {}", r.cycles);
+            println!("throughput: {:.0} queries/s @1GHz", r.throughput_qps(1e9));
+            println!("keep rate : {:.2}%", 100.0 * r.keep_rate);
+            println!("K traffic : {:.1}% of dense", 100.0 * r.k_traffic_fraction);
+            println!("DRAM      : {:.1} KB (row-hit {:.0}%)", r.complexity.dram_bytes() / 1024.0, 100.0 * r.dram.row_hit_rate());
+            println!("energy    : {:.2} uJ ({:.0}% dram)", r.energy.total_pj() / 1e6, 100.0 * r.energy.dram_fraction());
+            println!("QK util   : {:.1}%", 100.0 * r.utilization);
+            Ok(())
+        }
+        "ppl" => {
+            let alpha: f64 = get("--alpha").and_then(|s| s.parse().ok()).unwrap_or(0.6);
+            let dir = default_artifact_dir().join("tiny_model");
+            (|| -> anyhow::Result<()> {
+                let (cfg, w) = bitstopper::model::loader::load_weights(&dir.join("weights.bin"))?;
+                let tokens = bitstopper::model::loader::load_tokens(&dir.join("val_tokens.bin"))?;
+                let model = bitstopper::model::TinyTransformer::new(cfg, w);
+                let eval = &tokens[..tokens.len().min(2048)];
+                let dense = bitstopper::model::evaluate_ppl(
+                    &model, eval, cfg.max_seq, &bitstopper::model::AttnPolicy::Dense,
+                );
+                let lats = bitstopper::model::evaluate_ppl(
+                    &model, eval, cfg.max_seq,
+                    &bitstopper::model::AttnPolicy::Lats { alpha, radius: 5.0 },
+                );
+                println!("dense PPL        : {:.4}", dense.ppl);
+                println!("LATS(a={alpha}) PPL: {:.4} (delta {:+.4})", lats.ppl, lats.ppl - dense.ppl);
+                Ok(())
+            })()
+        }
+        "artifacts" => (|| -> anyhow::Result<()> {
+            let mut rt = Runtime::new()?;
+            let n = rt.load_dir(&default_artifact_dir())?;
+            println!("platform {} — {} artifacts:", rt.platform(), n);
+            for name in rt.artifact_names() {
+                println!("  {name}");
+            }
+            Ok(())
+        })(),
+        "selftest" => (|| -> anyhow::Result<()> {
+            bitstopper::config::HwConfig::default()
+                .validate()
+                .map_err(|e| anyhow::anyhow!(e))?;
+            println!("hw config OK");
+            let qa = {
+                let w = AttnWorkload::generate(SynthConfig::new(128, 32, 2, 1));
+                let qs: Vec<Vec<f32>> = (0..2).map(|i| w.query(i).to_vec()).collect();
+                QuantAttn::quantize(&qs, &w.k, &w.v, 128, 32)
+            };
+            let r = simulate_attention(&qa, &SimConfig::default());
+            anyhow::ensure!(r.cycles > 0, "simulator produced zero cycles");
+            println!("simulator OK ({} cycles)", r.cycles);
+            match Runtime::new() {
+                Ok(mut rt) => match rt.load_dir(&default_artifact_dir()) {
+                    Ok(n) => println!("runtime OK ({n} artifacts)"),
+                    Err(e) => println!("runtime: artifacts unavailable ({e}) — run `make artifacts`"),
+                },
+                Err(e) => println!("runtime: PJRT unavailable ({e})"),
+            }
+            Ok(())
+        })(),
+        _ => {
+            eprintln!(
+                "usage: bitstopper <figures|simulate|ppl|artifacts|selftest> [options]\n\
+                 \x20 figures  [--fig 3a|3b|10|11|12|13a|13b|14|table1|headline] [--all] [--out DIR]\n\
+                 \x20 simulate [--seq N] [--dim N] [--queries N] [--alpha A] [--config FILE]\n\
+                 \x20 ppl      [--alpha A]\n\
+                 \x20 artifacts | selftest"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,296 @@
+//! Weight / token-stream binary formats shared with `python/compile/train_tiny.py`.
+//!
+//! Weights (`weights.bin`, little-endian):
+//! ```text
+//! magic "BSWGHT01"
+//! u32 vocab, d_model, n_layers, n_heads, max_seq
+//! u32 n_tensors
+//! repeat: u16 name_len, name (utf8), u32 ndim, u32 dims[ndim], f32 data[]
+//! ```
+//!
+//! Token streams (`val_tokens.bin`): magic `"BSTOK001"`, `u32 n`, `u16 tokens[n]`.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::Path;
+
+pub const WEIGHTS_MAGIC: &[u8; 8] = b"BSWGHT01";
+pub const TOKENS_MAGIC: &[u8; 8] = b"BSTOK001";
+
+/// Model hyperparameters (from the weights header).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TinyConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub max_seq: usize,
+}
+
+/// One decoder layer's parameters.
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub wq: Vec<f32>,
+    pub wk: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub wo: Vec<f32>,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+}
+
+/// All model parameters.
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub tok_emb: Vec<f32>,
+    pub pos_emb: Vec<f32>,
+    pub layers: Vec<LayerWeights>,
+    pub lnf_g: Vec<f32>,
+    pub lnf_b: Vec<f32>,
+    pub lm_head: Vec<f32>,
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+/// Parse a weights file into a config + named-tensor map, then assemble.
+pub fn load_weights(path: &Path) -> Result<(TinyConfig, Weights)> {
+    let mut f =
+        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != WEIGHTS_MAGIC {
+        bail!("bad weights magic");
+    }
+    let cfg = TinyConfig {
+        vocab: read_u32(&mut f)? as usize,
+        d_model: read_u32(&mut f)? as usize,
+        n_layers: read_u32(&mut f)? as usize,
+        n_heads: read_u32(&mut f)? as usize,
+        max_seq: read_u32(&mut f)? as usize,
+    };
+    if cfg.vocab == 0 || cfg.d_model == 0 || cfg.n_layers == 0 || cfg.n_heads == 0 {
+        bail!("degenerate config {cfg:?}");
+    }
+    if cfg.d_model % cfg.n_heads != 0 {
+        bail!("d_model {} not divisible by heads {}", cfg.d_model, cfg.n_heads);
+    }
+    let n_tensors = read_u32(&mut f)? as usize;
+    let mut tensors: HashMap<String, Vec<f32>> = HashMap::with_capacity(n_tensors);
+    for _ in 0..n_tensors {
+        let name_len = read_u16(&mut f)? as usize;
+        let mut name_bytes = vec![0u8; name_len];
+        f.read_exact(&mut name_bytes)?;
+        let name = String::from_utf8(name_bytes).context("tensor name utf8")?;
+        let ndim = read_u32(&mut f)? as usize;
+        if ndim > 4 {
+            bail!("tensor {name}: implausible ndim {ndim}");
+        }
+        let mut numel = 1usize;
+        for _ in 0..ndim {
+            numel = numel.saturating_mul(read_u32(&mut f)? as usize);
+        }
+        if numel > 256 << 20 {
+            bail!("tensor {name}: implausible size {numel}");
+        }
+        tensors.insert(name, read_f32s(&mut f, numel)?);
+    }
+
+    let mut take = |name: String, expect: usize| -> Result<Vec<f32>> {
+        let t = tensors
+            .remove(&name)
+            .with_context(|| format!("missing tensor {name}"))?;
+        if t.len() != expect {
+            bail!("tensor {name}: expected {expect} elements, got {}", t.len());
+        }
+        Ok(t)
+    };
+
+    let d = cfg.d_model;
+    let layers = (0..cfg.n_layers)
+        .map(|i| -> Result<LayerWeights> {
+            let p = |s: &str| format!("layers.{i}.{s}");
+            Ok(LayerWeights {
+                ln1_g: take(p("ln1.g"), d)?,
+                ln1_b: take(p("ln1.b"), d)?,
+                wq: take(p("wq"), d * d)?,
+                wk: take(p("wk"), d * d)?,
+                wv: take(p("wv"), d * d)?,
+                wo: take(p("wo"), d * d)?,
+                ln2_g: take(p("ln2.g"), d)?,
+                ln2_b: take(p("ln2.b"), d)?,
+                w1: take(p("w1"), d * 4 * d)?,
+                b1: take(p("b1"), 4 * d)?,
+                w2: take(p("w2"), 4 * d * d)?,
+                b2: take(p("b2"), d)?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let w = Weights {
+        tok_emb: take("tok_emb".into(), cfg.vocab * d)?,
+        pos_emb: take("pos_emb".into(), cfg.max_seq * d)?,
+        layers,
+        lnf_g: take("ln_f.g".into(), d)?,
+        lnf_b: take("ln_f.b".into(), d)?,
+        lm_head: take("lm_head".into(), d * cfg.vocab)?,
+    };
+    Ok((cfg, w))
+}
+
+/// Load a token stream file.
+pub fn load_tokens(path: &Path) -> Result<Vec<u16>> {
+    let mut f =
+        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != TOKENS_MAGIC {
+        bail!("bad tokens magic");
+    }
+    let n = read_u32(&mut f)? as usize;
+    let mut bytes = vec![0u8; n * 2];
+    f.read_exact(&mut bytes)?;
+    Ok(bytes.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect())
+}
+
+/// Test/fixture writer (the production writer is `train_tiny.py`).
+pub fn write_weights(path: &Path, cfg: &TinyConfig, w: &Weights) -> Result<()> {
+    use std::io::Write;
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(WEIGHTS_MAGIC);
+    for v in [cfg.vocab, cfg.d_model, cfg.n_layers, cfg.n_heads, cfg.max_seq] {
+        buf.extend_from_slice(&(v as u32).to_le_bytes());
+    }
+    let mut tensors: Vec<(String, Vec<usize>, &[f32])> = vec![
+        ("tok_emb".into(), vec![cfg.vocab, cfg.d_model], &w.tok_emb),
+        ("pos_emb".into(), vec![cfg.max_seq, cfg.d_model], &w.pos_emb),
+    ];
+    for (i, l) in w.layers.iter().enumerate() {
+        let d = cfg.d_model;
+        let p = |s: &str| format!("layers.{i}.{s}");
+        tensors.push((p("ln1.g"), vec![d], &l.ln1_g));
+        tensors.push((p("ln1.b"), vec![d], &l.ln1_b));
+        tensors.push((p("wq"), vec![d, d], &l.wq));
+        tensors.push((p("wk"), vec![d, d], &l.wk));
+        tensors.push((p("wv"), vec![d, d], &l.wv));
+        tensors.push((p("wo"), vec![d, d], &l.wo));
+        tensors.push((p("ln2.g"), vec![d], &l.ln2_g));
+        tensors.push((p("ln2.b"), vec![d], &l.ln2_b));
+        tensors.push((p("w1"), vec![d, 4 * d], &l.w1));
+        tensors.push((p("b1"), vec![4 * d], &l.b1));
+        tensors.push((p("w2"), vec![4 * d, d], &l.w2));
+        tensors.push((p("b2"), vec![d], &l.b2));
+    }
+    tensors.push(("ln_f.g".into(), vec![cfg.d_model], &w.lnf_g));
+    tensors.push(("ln_f.b".into(), vec![cfg.d_model], &w.lnf_b));
+    tensors.push(("lm_head".into(), vec![cfg.d_model, cfg.vocab], &w.lm_head));
+
+    buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for (name, dims, data) in tensors {
+        buf.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        buf.extend_from_slice(name.as_bytes());
+        buf.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+        for d in &dims {
+            buf.extend_from_slice(&(*d as u32).to_le_bytes());
+        }
+        assert_eq!(dims.iter().product::<usize>(), data.len(), "{name}");
+        for &x in data {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    std::fs::File::create(path)?.write_all(&buf)?;
+    Ok(())
+}
+
+/// Test/fixture writer for token streams.
+pub fn write_tokens(path: &Path, tokens: &[u16]) -> Result<()> {
+    use std::io::Write;
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(TOKENS_MAGIC);
+    buf.extend_from_slice(&(tokens.len() as u32).to_le_bytes());
+    for &t in tokens {
+        buf.extend_from_slice(&t.to_le_bytes());
+    }
+    std::fs::File::create(path)?.write_all(&buf)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::test_support::random_model;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("bitstopper_model_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn weights_roundtrip() {
+        let m = random_model(10);
+        let p = tmp("w_roundtrip");
+        write_weights(&p, &m.cfg, &m.w).unwrap();
+        let (cfg, w) = load_weights(&p).unwrap();
+        assert_eq!(cfg, m.cfg);
+        assert_eq!(w.tok_emb, m.w.tok_emb);
+        assert_eq!(w.layers.len(), m.w.layers.len());
+        assert_eq!(w.layers[1].w2, m.w.layers[1].w2);
+        assert_eq!(w.lm_head, m.w.lm_head);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn tokens_roundtrip() {
+        let p = tmp("t_roundtrip");
+        let toks: Vec<u16> = (0..1000).map(|i| (i % 97) as u16).collect();
+        write_tokens(&p, &toks).unwrap();
+        assert_eq!(load_tokens(&p).unwrap(), toks);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn corrupted_magic_rejected() {
+        let p = tmp("bad");
+        std::fs::write(&p, b"GARBAGE!").unwrap();
+        assert!(load_weights(&p).is_err());
+        assert!(load_tokens(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn missing_tensor_rejected() {
+        // Write a header claiming 0 tensors: loader must fail on take().
+        let p = tmp("missing");
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(WEIGHTS_MAGIC);
+        for v in [32u32, 16, 1, 2, 8] {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        std::fs::write(&p, &buf).unwrap();
+        assert!(load_weights(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,286 @@
+//! Tiny-transformer substrate: a GPT-style character-level model whose
+//! weights are trained by `python/compile/train_tiny.py` (JAX, build time)
+//! and executed here in Rust for quality experiments.
+//!
+//! Role in the reproduction: the paper evaluates pruning quality as perplexity
+//! on OPT-1.3B / Llama2-7B. Those weights are unavailable, so the PPL-vs-α
+//! trends (Fig. 10's PPL column, Fig. 13 (a)) are measured on this model —
+//! a real trained LM with real attention distributions — with the *same*
+//! selection policies the accelerator implements (see DESIGN.md §2).
+//!
+//! Architecture (pre-LN GPT): token + positional embeddings, `n_layers` ×
+//! [LN → causal MHA → residual, LN → GELU MLP → residual], final LN, tied or
+//! untied LM head.
+
+pub mod loader;
+pub mod ppl;
+
+pub use loader::{load_weights, TinyConfig, Weights};
+pub use ppl::{evaluate_ppl, AttnPolicy, PplReport};
+
+use crate::attention::softmax_inplace;
+
+/// The model with its weights resident.
+#[derive(Debug)]
+pub struct TinyTransformer {
+    pub cfg: TinyConfig,
+    pub w: Weights,
+}
+
+/// Row-major matmul: `out[m×n] = x[m×k] · w[k×n]`.
+fn matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    for i in 0..m {
+        for p in 0..k {
+            let xv = x[i * k + p];
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[p * n..(p + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+}
+
+/// LayerNorm over the last dim.
+fn layer_norm(x: &mut [f32], g: &[f32], b: &[f32], d: usize) {
+    for row in x.chunks_exact_mut(d) {
+        let mean: f32 = row.iter().sum::<f32>() / d as f32;
+        let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for (i, v) in row.iter_mut().enumerate() {
+            *v = (*v - mean) * inv * g[i] + b[i];
+        }
+    }
+}
+
+/// tanh-approximation GELU (matches the JAX trainer).
+#[inline]
+fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + ((0.7978845608 * (x + 0.044715 * x * x * x)) as f32).tanh())
+}
+
+impl TinyTransformer {
+    pub fn new(cfg: TinyConfig, w: Weights) -> Self {
+        Self { cfg, w }
+    }
+
+    /// Full forward pass over a token window; returns logits `[seq × vocab]`.
+    ///
+    /// `policy` controls which keys each attention query may attend to —
+    /// `AttnPolicy::Dense` reproduces the training-time model; the pruning
+    /// policies reproduce the accelerator's selection.
+    pub fn forward(&self, tokens: &[u16], policy: &AttnPolicy) -> Vec<f32> {
+        self.forward_with_stats(tokens, policy).0
+    }
+
+    /// Forward pass that also reports attention pruning statistics:
+    /// `(logits, kept_keys, total_keys)` summed over layers/heads/positions.
+    pub fn forward_with_stats(
+        &self,
+        tokens: &[u16],
+        policy: &AttnPolicy,
+    ) -> (Vec<f32>, u64, u64) {
+        let cfg = &self.cfg;
+        let s = tokens.len();
+        assert!(s <= cfg.max_seq, "window {} exceeds max_seq {}", s, cfg.max_seq);
+        let d = cfg.d_model;
+        let heads = cfg.n_heads;
+        let hd = d / heads;
+
+        // Embeddings.
+        let mut x = vec![0f32; s * d];
+        for (i, &t) in tokens.iter().enumerate() {
+            let te = &self.w.tok_emb[t as usize * d..(t as usize + 1) * d];
+            let pe = &self.w.pos_emb[i * d..(i + 1) * d];
+            for c in 0..d {
+                x[i * d + c] = te[c] + pe[c];
+            }
+        }
+
+        let mut kept_keys = 0u64;
+        let mut total_keys = 0u64;
+        let mut q = vec![0f32; s * d];
+        let mut k = vec![0f32; s * d];
+        let mut v = vec![0f32; s * d];
+        let mut attn_out = vec![0f32; s * d];
+        let mut proj = vec![0f32; s * d];
+        let mut h1 = vec![0f32; s * 4 * d];
+        let mut h2 = vec![0f32; s * d];
+
+        for layer in &self.w.layers {
+            // --- attention block ---
+            let mut xin = x.clone();
+            layer_norm(&mut xin, &layer.ln1_g, &layer.ln1_b, d);
+            matmul(&xin, &layer.wq, s, d, d, &mut q);
+            matmul(&xin, &layer.wk, s, d, d, &mut k);
+            matmul(&xin, &layer.wv, s, d, d, &mut v);
+
+            attn_out.fill(0.0);
+            let scale = 1.0 / (hd as f32).sqrt();
+            for h in 0..heads {
+                let off = h * hd;
+                for i in 0..s {
+                    // Causal context 0..=i.
+                    let qi = &q[i * d + off..i * d + off + hd];
+                    let mut logits: Vec<f32> = (0..=i)
+                        .map(|j| {
+                            let kj = &k[j * d + off..j * d + off + hd];
+                            qi.iter().zip(kj).map(|(a, b)| a * b).sum::<f32>() * scale
+                        })
+                        .collect();
+                    let keep = policy.select(&logits);
+                    total_keys += (i + 1) as u64;
+                    match keep {
+                        Some(idx) => {
+                            kept_keys += idx.len() as u64;
+                            // Sparse softmax over survivors only.
+                            let mut sub: Vec<f32> = idx.iter().map(|&j| logits[j]).collect();
+                            softmax_inplace(&mut sub);
+                            for (w_attn, &j) in sub.iter().zip(&idx) {
+                                let vj = &v[j * d + off..j * d + off + hd];
+                                let out = &mut attn_out[i * d + off..i * d + off + hd];
+                                for (o, &vv) in out.iter_mut().zip(vj) {
+                                    *o += w_attn * vv;
+                                }
+                            }
+                        }
+                        None => {
+                            kept_keys += (i + 1) as u64;
+                            softmax_inplace(&mut logits);
+                            for (j, &w_attn) in logits.iter().enumerate() {
+                                let vj = &v[j * d + off..j * d + off + hd];
+                                let out = &mut attn_out[i * d + off..i * d + off + hd];
+                                for (o, &vv) in out.iter_mut().zip(vj) {
+                                    *o += w_attn * vv;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            matmul(&attn_out, &layer.wo, s, d, d, &mut proj);
+            for (xv, &p) in x.iter_mut().zip(proj.iter()) {
+                *xv += p;
+            }
+
+            // --- MLP block ---
+            let mut xin2 = x.clone();
+            layer_norm(&mut xin2, &layer.ln2_g, &layer.ln2_b, d);
+            matmul(&xin2, &layer.w1, s, d, 4 * d, &mut h1);
+            for (i, hv) in h1.iter_mut().enumerate() {
+                *hv = gelu(*hv + layer.b1[i % (4 * d)]);
+            }
+            matmul(&h1, &layer.w2, s, 4 * d, d, &mut h2);
+            for (i, xv) in x.iter_mut().enumerate() {
+                *xv += h2[i] + layer.b2[i % d];
+            }
+        }
+
+        layer_norm(&mut x, &self.w.lnf_g, &self.w.lnf_b, d);
+        let mut logits = vec![0f32; s * cfg.vocab];
+        matmul(&x, &self.w.lm_head, s, d, cfg.vocab, &mut logits);
+        (logits, kept_keys, total_keys)
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::loader::{LayerWeights, TinyConfig, Weights};
+    use crate::util::SplitMix64;
+
+    /// A small random-weight model for unit tests (scaled for stable norms).
+    pub fn random_model(seed: u64) -> super::TinyTransformer {
+        let cfg = TinyConfig { vocab: 32, d_model: 16, n_layers: 2, n_heads: 2, max_seq: 24 };
+        let mut rng = SplitMix64::new(seed);
+        let d = cfg.d_model;
+        let mut t = |n: usize, scale: f64| -> Vec<f32> {
+            (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+        };
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerWeights {
+                ln1_g: vec![1.0; d],
+                ln1_b: vec![0.0; d],
+                wq: t(d * d, 0.15),
+                wk: t(d * d, 0.15),
+                wv: t(d * d, 0.15),
+                wo: t(d * d, 0.15),
+                ln2_g: vec![1.0; d],
+                ln2_b: vec![0.0; d],
+                w1: t(d * 4 * d, 0.15),
+                b1: vec![0.0; 4 * d],
+                w2: t(4 * d * d, 0.15),
+                b2: vec![0.0; d],
+            })
+            .collect();
+        let w = Weights {
+            tok_emb: t(cfg.vocab * d, 0.3),
+            pos_emb: t(cfg.max_seq * d, 0.1),
+            layers,
+            lnf_g: vec![1.0; d],
+            lnf_b: vec![0.0; d],
+            lm_head: t(d * cfg.vocab, 0.2),
+        };
+        super::TinyTransformer::new(cfg, w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::ppl::AttnPolicy;
+    use super::test_support::random_model;
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let m = random_model(1);
+        let tokens: Vec<u16> = (0..10).map(|i| (i % 32) as u16).collect();
+        let logits = m.forward(&tokens, &AttnPolicy::Dense);
+        assert_eq!(logits.len(), 10 * 32);
+        assert!(logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn dense_and_full_lats_agree() {
+        // With a huge band, LATS keeps every key → outputs must match dense.
+        let m = random_model(2);
+        let tokens: Vec<u16> = (0..12).map(|i| ((i * 7) % 32) as u16).collect();
+        let dense = m.forward(&tokens, &AttnPolicy::Dense);
+        let lats = m.forward(&tokens, &AttnPolicy::Lats { alpha: 1.0, radius: 1e9 });
+        for (a, b) in dense.iter().zip(&lats) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn aggressive_pruning_changes_but_does_not_break_output() {
+        let m = random_model(3);
+        let tokens: Vec<u16> = (0..16).map(|i| ((i * 3) % 32) as u16).collect();
+        let pruned = m.forward(&tokens, &AttnPolicy::Lats { alpha: 0.1, radius: 1.0 });
+        assert!(pruned.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn causality_prefix_logits_stable() {
+        // Logits at position i must not depend on tokens after i.
+        let m = random_model(4);
+        let t1: Vec<u16> = vec![1, 2, 3, 4, 5, 6];
+        let t2: Vec<u16> = vec![1, 2, 3, 4, 31, 30];
+        let l1 = m.forward(&t1, &AttnPolicy::Dense);
+        let l2 = m.forward(&t2, &AttnPolicy::Dense);
+        let vocab = 32;
+        for c in 0..vocab {
+            for i in 0..4 {
+                assert!(
+                    (l1[i * vocab + c] - l2[i * vocab + c]).abs() < 1e-5,
+                    "position {i} leaked future tokens"
+                );
+            }
+        }
+    }
+}

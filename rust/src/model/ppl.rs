@@ -1,0 +1,170 @@
+//! Perplexity evaluation with pluggable attention-pruning policies — the
+//! quality axis of Fig. 10 and Fig. 13 (a).
+//!
+//! A policy decides, per attention query, which causal keys survive; the
+//! model then computes an exact sparse softmax over the survivors. PPL is
+//! measured by sliding a non-overlapping window over a held-out token stream
+//! and averaging token NLL.
+
+use super::TinyTransformer;
+use crate::algo::selection::{lats_select_logits, static_threshold_select, topk_select};
+
+/// Attention selection policy used during evaluation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AttnPolicy {
+    /// Full attention (the INT12 accuracy baseline of §V-A).
+    Dense,
+    /// BitStopper's LATS rule: keep logits within `alpha × radius` of the max.
+    Lats { alpha: f64, radius: f64 },
+    /// Sanger-style absolute static threshold in the logit domain.
+    StaticThreshold { theta: f32 },
+    /// SOFA-style fixed top-k.
+    TopK { k: usize },
+}
+
+impl AttnPolicy {
+    /// Returns surviving key indices for a query's logits, or `None` for
+    /// dense (keep everything, skip the indirection).
+    pub fn select(&self, logits: &[f32]) -> Option<Vec<usize>> {
+        match *self {
+            AttnPolicy::Dense => None,
+            AttnPolicy::Lats { alpha, radius } => {
+                Some(lats_select_logits(logits, alpha, radius))
+            }
+            AttnPolicy::StaticThreshold { theta } => {
+                let sel = static_threshold_select(logits, theta);
+                // Never return an empty context: hardware always keeps the max.
+                if sel.is_empty() {
+                    Some(vec![argmax(logits)])
+                } else {
+                    Some(sel)
+                }
+            }
+            AttnPolicy::TopK { k } => Some(topk_select(logits, k.max(1))),
+        }
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// PPL evaluation result.
+#[derive(Debug, Clone, Copy)]
+pub struct PplReport {
+    pub ppl: f64,
+    pub nll: f64,
+    pub tokens: usize,
+}
+
+/// Evaluate perplexity of `model` on `tokens` under `policy`, using
+/// non-overlapping windows of `window` tokens (the standard strided protocol
+/// with stride = window).
+pub fn evaluate_ppl(
+    model: &TinyTransformer,
+    tokens: &[u16],
+    window: usize,
+    policy: &AttnPolicy,
+) -> PplReport {
+    assert!(window >= 2);
+    let vocab = model.cfg.vocab;
+    let mut total_nll = 0f64;
+    let mut count = 0usize;
+
+    let mut start = 0usize;
+    while start + 2 <= tokens.len() {
+        let end = (start + window).min(tokens.len());
+        let ctx = &tokens[start..end];
+        if ctx.len() < 2 {
+            break;
+        }
+        let logits = model.forward(ctx, policy);
+        // Predict token i+1 from position i.
+        for i in 0..ctx.len() - 1 {
+            let row = &logits[i * vocab..(i + 1) * vocab];
+            let target = ctx[i + 1] as usize;
+            // log-softmax.
+            let max = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+            let lse: f32 = row.iter().map(|&x| (x - max).exp()).sum::<f32>().ln() + max;
+            total_nll += (lse - row[target]) as f64;
+            count += 1;
+        }
+        start = end;
+    }
+
+    let nll = if count == 0 { 0.0 } else { total_nll / count as f64 };
+    PplReport { ppl: nll.exp(), nll, tokens: count }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::test_support::random_model;
+    use crate::util::SplitMix64;
+
+    fn tokens(n: usize, vocab: u16, seed: u64) -> Vec<u16> {
+        let mut rng = SplitMix64::new(seed);
+        (0..n).map(|_| rng.below(vocab as u64) as u16).collect()
+    }
+
+    #[test]
+    fn ppl_of_random_model_near_uniform() {
+        // An untrained model on random tokens ≈ uniform prediction: PPL ≈ vocab.
+        let m = random_model(20);
+        let toks = tokens(200, 32, 21);
+        let r = evaluate_ppl(&m, &toks, 24, &AttnPolicy::Dense);
+        assert!(r.ppl > 16.0 && r.ppl < 70.0, "ppl {}", r.ppl);
+        assert_eq!(r.tokens, 200 - 200usize.div_ceil(24).max(200 / 24)); // windows lose 1 token each
+    }
+
+    #[test]
+    fn permissive_lats_matches_dense_ppl() {
+        let m = random_model(22);
+        let toks = tokens(120, 32, 23);
+        let dense = evaluate_ppl(&m, &toks, 24, &AttnPolicy::Dense);
+        let lats = evaluate_ppl(&m, &toks, 24, &AttnPolicy::Lats { alpha: 1.0, radius: 1e9 });
+        assert!((dense.ppl - lats.ppl).abs() / dense.ppl < 1e-4);
+    }
+
+    #[test]
+    fn harsher_pruning_degrades_ppl_monotonically_in_expectation() {
+        let m = random_model(24);
+        let toks = tokens(200, 32, 25);
+        let full = evaluate_ppl(&m, &toks, 24, &AttnPolicy::Dense).ppl;
+        let mild = evaluate_ppl(&m, &toks, 24, &AttnPolicy::Lats { alpha: 0.8, radius: 5.0 }).ppl;
+        let harsh = evaluate_ppl(&m, &toks, 24, &AttnPolicy::TopK { k: 1 }).ppl;
+        // top-1 attention is a big distortion; it should hurt more than a wide
+        // LATS band (relative to dense).
+        let d_mild = (mild - full).abs();
+        let d_harsh = (harsh - full).abs();
+        assert!(d_harsh >= d_mild, "harsh {d_harsh} vs mild {d_mild}");
+    }
+
+    #[test]
+    fn policy_select_never_empty() {
+        let logits = vec![-5.0f32, -9.0, -7.0];
+        for p in [
+            AttnPolicy::Lats { alpha: 0.1, radius: 0.1 },
+            AttnPolicy::StaticThreshold { theta: 100.0 },
+            AttnPolicy::TopK { k: 1 },
+        ] {
+            let sel = p.select(&logits).unwrap();
+            assert!(!sel.is_empty(), "{p:?}");
+            assert!(sel.contains(&0), "{p:?} must keep the max");
+        }
+    }
+
+    #[test]
+    fn empty_token_stream_is_safe() {
+        let m = random_model(26);
+        let r = evaluate_ppl(&m, &[], 8, &AttnPolicy::Dense);
+        assert_eq!(r.tokens, 0);
+        assert_eq!(r.ppl, 1.0);
+    }
+}

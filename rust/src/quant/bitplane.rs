@@ -1,0 +1,229 @@
+//! 2's-complement bit-plane decomposition of INT12 Key matrices.
+//!
+//! Paper §III-A / Eq. (4): an N-bit 2's-complement integer `c_{N-1}..c_0` has
+//! value `x = -c_{N-1}·2^{N-1} + Σ_{i<N-1} c_i·2^i`. BitStopper streams Key
+//! vectors MSB-plane first, so we index planes by *round* `r`:
+//!
+//! * round 0   = sign plane, weight `-2^11`
+//! * round r≥1 = magnitude plane, weight `+2^(11-r)`
+//! * round 11  = LSB, weight `+1`
+//!
+//! Planes are bit-packed (one `u64` word per 64 dims) per key row; the partial
+//! dot product of a 12-bit query with a 1-bit plane — what the paper's BRAT
+//! (bit-serial reusable ANDer tree) computes in one cycle — is
+//! [`BitPlanes::plane_dot`].
+
+use super::IntMatrix;
+
+/// Bit width of the quantized operands.
+pub const N_BITS: usize = 12;
+
+/// Signed weight contributed by plane `r` (round-indexed, MSB first).
+#[inline]
+pub fn plane_weight(r: usize) -> i64 {
+    debug_assert!(r < N_BITS);
+    if r == 0 {
+        -(1i64 << (N_BITS - 1))
+    } else {
+        1i64 << (N_BITS - 1 - r)
+    }
+}
+
+/// Sum of |weights| of planes strictly after round `r`: `2^(11-r) - 1`.
+///
+/// This is the maximum magnitude the unseen low-order bits can still add per
+/// unit of query value — the core quantity behind the uncertainty margin.
+#[inline]
+pub fn remaining_weight(r: usize) -> i64 {
+    debug_assert!(r < N_BITS);
+    (1i64 << (N_BITS - 1 - r)) - 1
+}
+
+/// Bit-packed 1-bit planes of a Key matrix `K ∈ INT12^{S×H}`.
+///
+/// `planes[r]` holds S rows of `words_per_row` u64 words; bit `d` of key `j`'s
+/// row is `(planes[r][j*wpr + d/64] >> (d%64)) & 1`.
+#[derive(Debug, Clone)]
+pub struct BitPlanes {
+    /// Number of keys (S).
+    pub keys: usize,
+    /// Head dimension (H).
+    pub dim: usize,
+    words_per_row: usize,
+    planes: Vec<Vec<u64>>,
+}
+
+impl BitPlanes {
+    /// Decompose an INT12 matrix (keys × dim) into 12 bit planes.
+    ///
+    /// The 2's-complement bit pattern of each i16 value is used directly; the
+    /// sign plane is the raw bit 11.
+    pub fn decompose(k: &IntMatrix) -> Self {
+        let keys = k.rows;
+        let dim = k.cols;
+        let wpr = (dim + 63) / 64;
+        let mut planes = vec![vec![0u64; keys * wpr]; N_BITS];
+        // Hot path (called once per context): accumulate each 64-dim chunk's
+        // twelve plane words in registers and store once per plane — ~3×
+        // faster than per-bit read-modify-write into the vectors (see
+        // EXPERIMENTS.md §Perf).
+        for j in 0..keys {
+            let row = k.row(j);
+            for (w, chunk) in row.chunks(64).enumerate() {
+                let mut words = [0u64; N_BITS];
+                for (d, &v) in chunk.iter().enumerate() {
+                    // 12-bit 2's complement pattern; round r carries bit
+                    // (11 - r): MSB first.
+                    let bits = (v as i32 & 0xFFF) as u32;
+                    for (r, word) in words.iter_mut().enumerate() {
+                        *word |= (((bits >> (N_BITS - 1 - r)) & 1) as u64) << d;
+                    }
+                }
+                for (r, &word) in words.iter().enumerate() {
+                    planes[r][j * wpr + w] = word;
+                }
+            }
+        }
+        Self { keys, dim, words_per_row: wpr, planes }
+    }
+
+    /// Bit `d` of key `j` in round-`r` plane.
+    #[inline]
+    pub fn bit(&self, r: usize, j: usize, d: usize) -> u64 {
+        (self.planes[r][j * self.words_per_row + d / 64] >> (d % 64)) & 1
+    }
+
+    /// Packed words of key `j`'s round-`r` plane.
+    #[inline]
+    pub fn row_words(&self, r: usize, j: usize) -> &[u64] {
+        let w = self.words_per_row;
+        &self.planes[r][j * w..(j + 1) * w]
+    }
+
+    /// *Unweighted* dot product of a full-precision query with key `j`'s
+    /// round-`r` bit plane: `Σ_d q[d]·bit_r(j,d)`.
+    ///
+    /// One invocation models one BRAT operation (64-dim × 12-bit × 1-bit per
+    /// cycle; wider dims take `ceil(dim/64)` BRAT cycles).
+    pub fn plane_dot(&self, r: usize, j: usize, q: &[i16]) -> i64 {
+        debug_assert_eq!(q.len(), self.dim);
+        let mut acc: i64 = 0;
+        for (w, &word) in self.row_words(r, j).iter().enumerate() {
+            let mut bits = word;
+            let base = w * 64;
+            while bits != 0 {
+                let d = bits.trailing_zeros() as usize;
+                acc += q[base + d] as i64;
+                bits &= bits - 1;
+            }
+        }
+        acc
+    }
+
+    /// Weighted partial-score increment for round `r`:
+    /// `ΔA^r_{i,j} = w_r · Σ_d q[d]·bit_r(j,d)`.
+    #[inline]
+    pub fn weighted_plane_dot(&self, r: usize, j: usize, q: &[i16]) -> i64 {
+        plane_weight(r) * self.plane_dot(r, j, q)
+    }
+
+    /// Exact dot product reconstructed from **all** planes — must equal the
+    /// direct integer dot product (tested below).
+    pub fn full_dot(&self, j: usize, q: &[i16]) -> i64 {
+        (0..N_BITS).map(|r| self.weighted_plane_dot(r, j, q)).sum()
+    }
+
+    /// Bytes of DRAM traffic to fetch one bit plane of one key
+    /// (dim bits, rounded up to bytes).
+    #[inline]
+    pub fn plane_bytes(&self) -> u64 {
+        ((self.dim + 7) / 8) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{QMAX, QMIN};
+    use crate::util::proptest::check;
+
+    fn rand_matrix(rng: &mut crate::util::SplitMix64, rows: usize, cols: usize) -> IntMatrix {
+        let data: Vec<i16> = (0..rows * cols)
+            .map(|_| rng.range_i64(QMIN as i64, QMAX as i64) as i16)
+            .collect();
+        IntMatrix::new(rows, cols, data)
+    }
+
+    #[test]
+    fn plane_weights_sum_to_value_range() {
+        // -2^11 + Σ_{r=1..11} 2^(11-r) = -2048 + 2047 = -1 (all-ones pattern).
+        let total: i64 = (0..N_BITS).map(plane_weight).sum();
+        assert_eq!(total, -1);
+    }
+
+    #[test]
+    fn remaining_weight_telescopes() {
+        for r in 0..N_BITS - 1 {
+            // remaining(r) = weight(r+1) + remaining(r+1) for magnitude planes.
+            assert_eq!(remaining_weight(r), plane_weight(r + 1).abs() + remaining_weight(r + 1));
+        }
+        assert_eq!(remaining_weight(N_BITS - 1), 0);
+    }
+
+    #[test]
+    fn decompose_reconstructs_exact_values() {
+        // Every representable INT12 value must round-trip through its planes.
+        let vals: Vec<i16> = (QMIN..=QMAX as i32).step_by(7).map(|v| v as i16).collect();
+        let n = vals.len();
+        let m = IntMatrix::new(n, 1, vals.clone());
+        let bp = BitPlanes::decompose(&m);
+        let q = vec![1i16];
+        for (j, &v) in vals.iter().enumerate() {
+            assert_eq!(bp.full_dot(j, &q), v as i64, "value {v}");
+        }
+    }
+
+    #[test]
+    fn full_dot_matches_direct_dot() {
+        let mut rng = crate::util::SplitMix64::new(0xBEEF);
+        let k = rand_matrix(&mut rng, 8, 64);
+        let bp = BitPlanes::decompose(&k);
+        let q: Vec<i16> = (0..64).map(|_| rng.range_i64(QMIN as i64, QMAX as i64) as i16).collect();
+        for j in 0..8 {
+            assert_eq!(bp.full_dot(j, &q), k.dot_row(j, &q));
+        }
+    }
+
+    #[test]
+    fn plane_dot_counts_selected_query_entries() {
+        // K row = [1, 0, -1]: LSB plane has bits for 1 (0b...01) and -1 (all ones).
+        let m = IntMatrix::new(1, 3, vec![1, 0, -1]);
+        let bp = BitPlanes::decompose(&m);
+        let q = vec![10i16, 100, 1000];
+        // LSB plane (round 11): bits at d=0 (value 1) and d=2 (value -1, all ones).
+        assert_eq!(bp.plane_dot(N_BITS - 1, 0, &q), 10 + 1000);
+        // Sign plane (round 0): only d=2 is negative.
+        assert_eq!(bp.plane_dot(0, 0, &q), 1000);
+    }
+
+    #[test]
+    fn prop_full_dot_equals_direct_for_random_shapes() {
+        check("bitplane reconstruction == direct dot", 60, |rng| {
+            let keys = 1 + rng.below(16) as usize;
+            let dim = 1 + rng.below(130) as usize; // crosses the 64/128 word edges
+            let k = rand_matrix(rng, keys, dim);
+            let bp = BitPlanes::decompose(&k);
+            let q: Vec<i16> =
+                (0..dim).map(|_| rng.range_i64(QMIN as i64, QMAX as i64) as i16).collect();
+            let j = rng.below(keys as u64) as usize;
+            assert_eq!(bp.full_dot(j, &q), k.dot_row(j, &q));
+        });
+    }
+
+    #[test]
+    fn plane_bytes_rounds_up() {
+        let m = IntMatrix::zeros(1, 65);
+        let bp = BitPlanes::decompose(&m);
+        assert_eq!(bp.plane_bytes(), 9);
+    }
+}

@@ -1,0 +1,175 @@
+//! Bit-level uncertainty margins (paper §III-B, Fig. 6).
+//!
+//! After processing bit rounds `0..=r` of a Key vector, the exact dot product
+//! `A = Q·K` is only known up to the contribution of the unseen low-order
+//! planes. Because every non-sign bit contributes non-negatively (Eq. 4), the
+//! unseen contribution for a query element `q_d` is bounded by
+//! `[0, rem_r·q_d]` if `q_d ≥ 0` and `[rem_r·q_d, 0]` otherwise, where
+//! `rem_r = 2^(11-r) - 1` ([`remaining_weight`]).
+//!
+//! Summing over dims gives *per-query, per-round* margin pairs
+//! `M_i^{r,min} = rem_r·Σ_d min(q_d,0)` and `M_i^{r,max} = rem_r·Σ_d max(q_d,0)`,
+//! which is exactly what the paper's **Bit Margin Generator** precomputes into a
+//! 12-entry LUT per query (Fig. 9 (c)): it needs only the positive-sum and
+//! negative-sum of the query once, then scales by `rem_r` per round.
+//!
+//! Soundness (property-tested here and in `python/tests` against the jnp
+//! oracle): `A^r + M^{r,min} ≤ A ≤ A^r + M^{r,max}` for every round, with
+//! equality at the LSB round (`rem_11 = 0`).
+
+use super::bitplane::{remaining_weight, N_BITS};
+
+/// Lower/upper bound increments for one round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MarginPair {
+    /// `M^{r,min}` — most negative value unseen bits can still add (≤ 0).
+    pub min: i64,
+    /// `M^{r,max}` — most positive value unseen bits can still add (≥ 0).
+    pub max: i64,
+}
+
+/// The 12-entry margin LUT for one query (the Bit Margin Generator output).
+#[derive(Debug, Clone)]
+pub struct BitMargins {
+    pairs: [MarginPair; N_BITS],
+    /// Σ_d max(q_d, 0) — reused by callers for traffic/energy accounting.
+    pub pos_sum: i64,
+    /// Σ_d min(q_d, 0).
+    pub neg_sum: i64,
+}
+
+impl BitMargins {
+    /// Build the margin LUT from a full-precision INT12 query vector.
+    pub fn generate(q: &[i16]) -> Self {
+        let mut pos_sum: i64 = 0;
+        let mut neg_sum: i64 = 0;
+        for &v in q {
+            if v >= 0 {
+                pos_sum += v as i64;
+            } else {
+                neg_sum += v as i64;
+            }
+        }
+        let mut pairs = [MarginPair { min: 0, max: 0 }; N_BITS];
+        for (r, p) in pairs.iter_mut().enumerate() {
+            let rem = remaining_weight(r);
+            p.min = rem * neg_sum;
+            p.max = rem * pos_sum;
+        }
+        Self { pairs, pos_sum, neg_sum }
+    }
+
+    /// Margin pair after processing rounds `0..=r`.
+    #[inline]
+    pub fn at(&self, r: usize) -> MarginPair {
+        self.pairs[r]
+    }
+
+    /// Upper bound on the exact score given partial score `a_r` at round `r`.
+    #[inline]
+    pub fn upper(&self, r: usize, a_r: i64) -> i64 {
+        a_r + self.pairs[r].max
+    }
+
+    /// Lower bound on the exact score given partial score `a_r` at round `r`.
+    #[inline]
+    pub fn lower(&self, r: usize, a_r: i64) -> i64 {
+        a_r + self.pairs[r].min
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{BitPlanes, IntMatrix, QMAX, QMIN};
+    use crate::util::proptest::check;
+
+    #[test]
+    fn margins_zero_at_lsb_round() {
+        let q = vec![100i16, -50, 3];
+        let m = BitMargins::generate(&q);
+        assert_eq!(m.at(N_BITS - 1), MarginPair { min: 0, max: 0 });
+    }
+
+    #[test]
+    fn margins_shrink_monotonically() {
+        let q = vec![2047i16, -2048, 13, -7];
+        let m = BitMargins::generate(&q);
+        for r in 1..N_BITS {
+            assert!(m.at(r).max <= m.at(r - 1).max);
+            assert!(m.at(r).min >= m.at(r - 1).min);
+        }
+    }
+
+    #[test]
+    fn all_positive_query_has_zero_min_margin() {
+        let q = vec![5i16, 10, 2047];
+        let m = BitMargins::generate(&q);
+        for r in 0..N_BITS {
+            assert_eq!(m.at(r).min, 0);
+            assert!(m.at(r).max >= 0);
+        }
+    }
+
+    #[test]
+    fn prop_margin_interval_is_sound_every_round() {
+        // The central correctness property of LATS: the exact score always lies
+        // inside [A^r + M^min, A^r + M^max] at every bit round.
+        check("margin interval soundness", 120, |rng| {
+            let dim = 1 + rng.below(96) as usize;
+            let q: Vec<i16> =
+                (0..dim).map(|_| rng.range_i64(QMIN as i64, QMAX as i64) as i16).collect();
+            let kvals: Vec<i16> =
+                (0..dim).map(|_| rng.range_i64(QMIN as i64, QMAX as i64) as i16).collect();
+            let k = IntMatrix::new(1, dim, kvals);
+            let bp = BitPlanes::decompose(&k);
+            let margins = BitMargins::generate(&q);
+            let exact = k.dot_row(0, &q);
+
+            let mut partial: i64 = 0;
+            for r in 0..N_BITS {
+                partial += bp.weighted_plane_dot(r, 0, &q);
+                let lo = margins.lower(r, partial);
+                let hi = margins.upper(r, partial);
+                assert!(
+                    lo <= exact && exact <= hi,
+                    "round {r}: exact {exact} outside [{lo}, {hi}]"
+                );
+            }
+            assert_eq!(partial, exact, "LSB round must be exact");
+        });
+    }
+
+    #[test]
+    fn prop_bounds_are_tight_for_extreme_keys() {
+        // With K = all-ones pattern in unseen bits, the upper bound is achieved
+        // for positive-q dims; with zeros, the lower bound for positive-q dims.
+        check("margin tightness", 40, |rng| {
+            let dim = 1 + rng.below(32) as usize;
+            // Non-negative query so only the max margin is active.
+            let q: Vec<i16> = (0..dim).map(|_| rng.range_i64(0, QMAX as i64) as i16).collect();
+            // K value with low bits all ones: x = 0b0_0000_0111_1111-style.
+            let r_stop = 1 + rng.below((N_BITS - 1) as u64) as usize;
+            let low_ones = ((1i32 << (N_BITS - 1 - r_stop)) - 1) as i16;
+            let k = IntMatrix::new(1, dim, vec![low_ones; dim]);
+            let bp = BitPlanes::decompose(&k);
+            let margins = BitMargins::generate(&q);
+            let exact = k.dot_row(0, &q);
+            let mut partial = 0i64;
+            for r in 0..=r_stop {
+                partial += bp.weighted_plane_dot(r, 0, &q);
+            }
+            // All remaining bits are ones → upper bound is exact.
+            assert_eq!(margins.upper(r_stop, partial), exact);
+        });
+    }
+
+    #[test]
+    fn pos_neg_sums_partition_query_mass() {
+        let q = vec![10i16, -4, 0, 7, -1];
+        let m = BitMargins::generate(&q);
+        assert_eq!(m.pos_sum, 17);
+        assert_eq!(m.neg_sum, -5);
+        assert_eq!(m.pos_sum + m.neg_sum, q.iter().map(|&v| v as i64).sum::<i64>());
+    }
+}

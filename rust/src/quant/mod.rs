@@ -1,0 +1,166 @@
+//! INT12 post-training quantization and bit-plane decomposition.
+//!
+//! BitStopper processes attention at 12-bit per-tensor quantization (paper §IV-A);
+//! Keys are additionally decomposed into twelve 1-bit planes (MSB first) so that
+//! the QK-PU can consume them incrementally (BESF, §III-A).
+//!
+//! * [`QuantParams`] / [`quantize`] — symmetric per-tensor INT12 PTQ.
+//! * [`IntMatrix`] — row-major i16 matrix (values within [-2048, 2047]).
+//! * [`bitplane::BitPlanes`] — packed 1-bit planes of a Key matrix.
+//! * [`margin`] — bit-level uncertainty margins (paper Eq. 4 / Fig. 6).
+
+pub mod bitplane;
+pub mod margin;
+
+pub use bitplane::{BitPlanes, N_BITS};
+pub use margin::{BitMargins, MarginPair};
+
+/// Number of quantization levels on each side of zero for INT12.
+pub const QMAX: i32 = 2047;
+/// Most negative INT12 value.
+pub const QMIN: i32 = -2048;
+
+/// Per-tensor symmetric quantization parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    /// Real value represented by one integer step.
+    pub scale: f32,
+}
+
+impl QuantParams {
+    /// Calibrate from data: `scale = max|x| / 2047` (symmetric PTQ).
+    pub fn calibrate(xs: &[f32]) -> Self {
+        let max_abs = xs.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        // Avoid a zero scale for all-zero tensors.
+        let scale = if max_abs > 0.0 { max_abs / QMAX as f32 } else { 1.0 };
+        Self { scale }
+    }
+
+    /// Quantize one value.
+    #[inline]
+    pub fn q(&self, x: f32) -> i16 {
+        let v = (x / self.scale).round() as i32;
+        v.clamp(QMIN, QMAX) as i16
+    }
+
+    /// Dequantize one value.
+    #[inline]
+    pub fn dq(&self, v: i16) -> f32 {
+        v as f32 * self.scale
+    }
+}
+
+/// Quantize a slice with calibrated per-tensor parameters.
+pub fn quantize(xs: &[f32]) -> (Vec<i16>, QuantParams) {
+    let p = QuantParams::calibrate(xs);
+    (xs.iter().map(|&x| p.q(x)).collect(), p)
+}
+
+/// Row-major integer matrix holding INT12 values in i16 storage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i16>,
+}
+
+impl IntMatrix {
+    pub fn new(rows: usize, cols: usize, data: Vec<i16>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        debug_assert!(
+            data.iter().all(|&v| (QMIN..=QMAX as i32).contains(&(v as i32))),
+            "values must fit INT12"
+        );
+        Self { rows, cols, data }
+    }
+
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    /// Quantize an f32 row-major buffer into an `IntMatrix` + params.
+    pub fn from_f32(rows: usize, cols: usize, xs: &[f32]) -> (Self, QuantParams) {
+        assert_eq!(xs.len(), rows * cols);
+        let (data, p) = quantize(xs);
+        (Self { rows, cols, data }, p)
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[i16] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> i16 {
+        self.data[r * self.cols + c]
+    }
+
+    /// Exact integer dot product of row `r` with another vector (i64 to hold
+    /// the 45-bit dynamic range the paper's Scoreboard stores).
+    pub fn dot_row(&self, r: usize, v: &[i16]) -> i64 {
+        debug_assert_eq!(v.len(), self.cols);
+        self.row(r)
+            .iter()
+            .zip(v.iter())
+            .map(|(&a, &b)| a as i64 * b as i64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn calibrate_maps_max_to_qmax() {
+        let xs = [0.5f32, -1.0, 0.25];
+        let p = QuantParams::calibrate(&xs);
+        assert_eq!(p.q(-1.0), -2047);
+        assert_eq!(p.q(1.0), 2047);
+        assert_eq!(p.q(0.0), 0);
+    }
+
+    #[test]
+    fn zero_tensor_has_unit_scale() {
+        let p = QuantParams::calibrate(&[0.0, 0.0]);
+        assert_eq!(p.scale, 1.0);
+        assert_eq!(p.q(0.0), 0);
+    }
+
+    #[test]
+    fn quantize_roundtrip_error_bounded_by_half_step() {
+        let xs: Vec<f32> = (-100..=100).map(|i| i as f32 * 0.013).collect();
+        let (q, p) = quantize(&xs);
+        for (&x, &v) in xs.iter().zip(q.iter()) {
+            let err = (x - p.dq(v)).abs();
+            assert!(err <= 0.5 * p.scale + 1e-6, "err {err} scale {}", p.scale);
+        }
+    }
+
+    #[test]
+    fn int_matrix_dot_row_matches_naive() {
+        let m = IntMatrix::new(2, 3, vec![1, -2, 3, 4, 5, -6]);
+        let v = vec![7i16, 8, 9];
+        assert_eq!(m.dot_row(0, &v), 1 * 7 - 2 * 8 + 3 * 9);
+        assert_eq!(m.dot_row(1, &v), 4 * 7 + 5 * 8 - 6 * 9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn int_matrix_shape_mismatch_panics() {
+        let _ = IntMatrix::new(2, 2, vec![0; 3]);
+    }
+
+    #[test]
+    fn prop_quantized_values_in_range() {
+        check("quantized values within INT12", 100, |rng| {
+            let n = 1 + rng.below(64) as usize;
+            let xs: Vec<f32> = (0..n).map(|_| rng.normal_ms(0.0, 3.0) as f32).collect();
+            let (q, _) = quantize(&xs);
+            for v in q {
+                assert!((QMIN..=QMAX).contains(&(v as i32)));
+            }
+        });
+    }
+}

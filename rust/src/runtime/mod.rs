@@ -1,0 +1,244 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them on the request path.
+//!
+//! Python never runs at serving time — `make artifacts` lowers the JAX/Pallas
+//! pipeline once to `artifacts/*.hlo.txt`; this module compiles each module
+//! on the PJRT CPU client at startup and exposes typed entry points.
+//!
+//! Artifact interface (see aot.py):
+//! `(q[D], k[S,D], v[S,D], valid[S]) -> (out[D], mask[S])`, all f32.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Which pipeline an artifact implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    Dense,
+    BitStopper,
+}
+
+/// Parsed manifest entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactInfo {
+    pub file: String,
+    pub kind: ArtifactKind,
+    pub seq: usize,
+    pub dim: usize,
+    /// LATS α baked into the artifact (0 for dense).
+    pub alpha: f64,
+}
+
+/// Attention result from an artifact execution.
+#[derive(Debug, Clone)]
+pub struct AttnOutput {
+    pub out: Vec<f32>,
+    /// Survival mask (1.0 = token kept by the in-graph BESF/LATS selection).
+    pub mask: Vec<f32>,
+}
+
+impl AttnOutput {
+    pub fn kept(&self) -> usize {
+        self.mask.iter().filter(|&&m| m > 0.5).count()
+    }
+}
+
+/// Parse `manifest.txt` lines of the form
+/// `attn_dense_256x64.hlo.txt kind=dense seq=256 dim=64 alpha=0`.
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactInfo>> {
+    let mut out = vec![];
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let file = parts.next().ok_or_else(|| anyhow!("line {}: empty", i + 1))?.to_string();
+        let mut kind = None;
+        let mut seq = None;
+        let mut dim = None;
+        let mut alpha = 0.0f64;
+        for kv in parts {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: bad field `{kv}`", i + 1))?;
+            match k {
+                "kind" => {
+                    kind = Some(match v {
+                        "dense" => ArtifactKind::Dense,
+                        "bitstopper" => ArtifactKind::BitStopper,
+                        other => bail!("line {}: unknown kind `{other}`", i + 1),
+                    })
+                }
+                "seq" => seq = Some(v.parse::<usize>().context("seq")?),
+                "dim" => dim = Some(v.parse::<usize>().context("dim")?),
+                "alpha" => alpha = v.parse::<f64>().context("alpha")?,
+                _ => {} // forward-compatible
+            }
+        }
+        out.push(ArtifactInfo {
+            file,
+            kind: kind.ok_or_else(|| anyhow!("line {}: missing kind", i + 1))?,
+            seq: seq.ok_or_else(|| anyhow!("line {}: missing seq", i + 1))?,
+            dim: dim.ok_or_else(|| anyhow!("line {}: missing dim", i + 1))?,
+            alpha,
+        });
+    }
+    Ok(out)
+}
+
+/// A compiled artifact.
+pub struct Artifact {
+    pub info: ArtifactInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute attention for one query.
+    pub fn run(&self, q: &[f32], k: &[f32], v: &[f32], valid: &[f32]) -> Result<AttnOutput> {
+        let (seq, dim) = (self.info.seq, self.info.dim);
+        if q.len() != dim || k.len() != seq * dim || v.len() != seq * dim || valid.len() != seq {
+            bail!(
+                "shape mismatch for {}: q={} k={} v={} valid={} (want dim={dim}, seq={seq})",
+                self.info.file,
+                q.len(),
+                k.len(),
+                v.len(),
+                valid.len()
+            );
+        }
+        let q_l = xla::Literal::vec1(q);
+        let k_l = xla::Literal::vec1(k).reshape(&[seq as i64, dim as i64])?;
+        let v_l = xla::Literal::vec1(v).reshape(&[seq as i64, dim as i64])?;
+        let valid_l = xla::Literal::vec1(valid);
+        let result = self.exe.execute::<xla::Literal>(&[q_l, k_l, v_l, valid_l])?[0][0]
+            .to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        if tuple.len() != 2 {
+            bail!("{}: expected 2 outputs, got {}", self.info.file, tuple.len());
+        }
+        let mut it = tuple.into_iter();
+        let out = it.next().unwrap().to_vec::<f32>()?;
+        let mask = it.next().unwrap().to_vec::<f32>()?;
+        Ok(AttnOutput { out, mask })
+    }
+}
+
+/// Registry of compiled artifacts, keyed by (kind, seq, dim[, α]).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, Artifact>,
+}
+
+impl Runtime {
+    /// Create a PJRT CPU client.
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, artifacts: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load every artifact listed in `<dir>/manifest.txt`. Returns the count.
+    pub fn load_dir(&mut self, dir: &Path) -> Result<usize> {
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let infos = parse_manifest(&text)?;
+        for info in infos {
+            let path = dir.join(&info.file);
+            // Defensive: HLO text with elided (`{...}`) constants parses as
+            // zeros and silently corrupts the computation — reject it.
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            if text.contains("{...}") {
+                bail!(
+                    "{}: HLO text has elided constants; re-export with \
+                     print_large_constants (make artifacts)",
+                    info.file
+                );
+            }
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e}", info.file))?;
+            self.artifacts.insert(info.file.clone(), Artifact { info, exe });
+        }
+        Ok(self.artifacts.len())
+    }
+
+    /// Look up the artifact for (kind, seq, dim); for BitStopper artifacts,
+    /// picks the one with α closest to `alpha`.
+    pub fn lookup(&self, kind: ArtifactKind, seq: usize, dim: usize, alpha: f64) -> Option<&Artifact> {
+        self.artifacts
+            .values()
+            .filter(|a| a.info.kind == kind && a.info.seq == seq && a.info.dim == dim)
+            .min_by(|a, b| {
+                (a.info.alpha - alpha)
+                    .abs()
+                    .partial_cmp(&(b.info.alpha - alpha).abs())
+                    .unwrap()
+            })
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+}
+
+/// Repo-relative default artifact directory (next to Cargo.toml).
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_well_formed_lines() {
+        let text = "a.hlo.txt kind=dense seq=256 dim=64 alpha=0\n\
+                    b.hlo.txt kind=bitstopper seq=128 dim=32 alpha=0.6\n";
+        let infos = parse_manifest(text).unwrap();
+        assert_eq!(infos.len(), 2);
+        assert_eq!(infos[0].kind, ArtifactKind::Dense);
+        assert_eq!(infos[1].kind, ArtifactKind::BitStopper);
+        assert_eq!(infos[1].seq, 128);
+        assert!((infos[1].alpha - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(parse_manifest("x.hlo kind=weird seq=1 dim=1\n").is_err());
+        assert!(parse_manifest("x.hlo seq=1 dim=1\n").is_err()); // missing kind
+        assert!(parse_manifest("x.hlo kind=dense dim=1\n").is_err()); // missing seq
+    }
+
+    #[test]
+    fn manifest_skips_blank_lines() {
+        let infos = parse_manifest("\n\na.hlo kind=dense seq=4 dim=2 alpha=0\n\n").unwrap();
+        assert_eq!(infos.len(), 1);
+    }
+
+    #[test]
+    fn attn_output_kept_counts_mask() {
+        let o = AttnOutput { out: vec![], mask: vec![1.0, 0.0, 1.0, 0.0] };
+        assert_eq!(o.kept(), 2);
+    }
+}

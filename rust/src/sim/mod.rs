@@ -1,0 +1,30 @@
+//! Cycle-level simulator of the BitStopper accelerator (paper §IV, Fig. 9).
+//!
+//! Decomposition:
+//! * [`dram`] — HBM2 main-memory model (Ramulator substitute).
+//! * [`sram`] — on-chip K/V and Q buffer model.
+//! * [`scoreboard`] — the per-lane 64-entry partial-score store.
+//! * [`qkpu`] — 32 bit-level PE lanes + BAP scheduling (sync/async) + LATS.
+//! * [`vpu`] — softmax LUT + 64-way INT12 MAC array.
+//! * [`accelerator`] — the top level: two-stage QK-PU → V-PU pipeline,
+//!   producing cycle counts, utilization, traffic and energy.
+//!
+//! Methodology note (see DESIGN.md §2): pruning *decisions* are computed by
+//! the functional BESF model (`crate::algo::besf`) at round granularity —
+//! identical in sync and async modes — while *timing* is simulated cycle by
+//! cycle. BAP reorders when planes are fetched and computed, not what is
+//! decided, so the simulator's outputs are exactly cross-checkable against
+//! the functional model (and the Python oracle).
+
+pub mod dram;
+pub mod sram;
+pub mod scoreboard;
+pub mod qkpu;
+pub mod vpu;
+pub mod accelerator;
+
+pub use accelerator::{simulate_attention, SimReport};
+pub use dram::{Dram, DramConfig, DramStats};
+
+/// Cycle type: core clock cycles at 1 GHz.
+pub type Cycle = u64;

@@ -1,0 +1,256 @@
+//! The QK-PU timing engine: N bit-level PE lanes issuing on-demand fetches to
+//! DRAM and computing BRAT passes as data arrives (paper §IV-A step ❷, Fig. 8).
+//!
+//! The engine is generic over *chains*: a [`ChainTask`] is a dependent
+//! sequence of (fetch → compute) steps — for BESF, the successive bit planes
+//! of one Key (each plane's fetch is only issued after the previous plane's
+//! compute decided the token survives). Lanes run chains from their private
+//! queues with a bounded number of outstanding fetches:
+//!
+//! * `outstanding = 1` → **synchronous** bit-serial processing: the lane
+//!   stalls on every DRAM access (the paper's BESF-only ablation point).
+//! * `outstanding = W > 1` → **BAP**: up to `W` tokens in flight per lane
+//!   (bounded by the Scoreboard capacity); the lane computes whichever plane
+//!   arrives first and hides DRAM latency behind compute.
+//!
+//! The same engine times the V-PU (chains of length 1 over Value rows).
+
+use super::dram::Dram;
+use super::Cycle;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// One dependent step of a chain: fetch `bytes` at `addr`, then compute for
+/// `compute` cycles.
+#[derive(Debug, Clone, Copy)]
+pub struct FetchSpec {
+    pub addr: u64,
+    pub bytes: u64,
+    pub compute: u64,
+}
+
+/// A dependent sequence of steps (e.g. the bit planes of one Key, in round
+/// order). Step `i+1` is issued only after step `i`'s compute retires.
+#[derive(Debug, Clone)]
+pub struct ChainTask {
+    pub steps: Vec<FetchSpec>,
+}
+
+/// Aggregate result of a lane-array simulation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PipeResult {
+    /// Cycle at which the last lane retires its last compute.
+    pub finish: Cycle,
+    /// Total compute-busy cycles summed over lanes.
+    pub busy_cycles: u64,
+    /// Number of DRAM fetches issued.
+    pub fetches: u64,
+    /// Bytes fetched.
+    pub bytes: u64,
+    /// Number of lanes that had work.
+    pub active_lanes: usize,
+}
+
+impl PipeResult {
+    /// Compute-unit utilization over the makespan (the Fig. 13(b) metric).
+    pub fn utilization(&self, lanes: usize, start: Cycle) -> f64 {
+        if self.finish <= start || lanes == 0 {
+            return 0.0;
+        }
+        self.busy_cycles as f64 / (lanes as f64 * (self.finish - start) as f64)
+    }
+}
+
+/// Simulate an array of lanes, each with a private queue of chain tasks and at
+/// most `outstanding` fetches in flight. Deterministic: ties in arrival time
+/// are broken by (lane, task, step) order.
+pub fn simulate_lanes(
+    lanes: &[Vec<ChainTask>],
+    dram: &mut Dram,
+    start: Cycle,
+    outstanding: usize,
+) -> PipeResult {
+    assert!(outstanding >= 1);
+    let n_lanes = lanes.len();
+    let mut cursor = vec![start; n_lanes]; // next cycle each lane's BRAT is free
+    let mut busy = vec![0u64; n_lanes];
+    let mut next_task = vec![0usize; n_lanes];
+    let mut result = PipeResult::default();
+
+    // Event: Reverse((arrival, lane, task, step))
+    let mut heap: BinaryHeap<Reverse<(Cycle, usize, usize, usize)>> = BinaryHeap::new();
+
+    let issue = |heap: &mut BinaryHeap<Reverse<(Cycle, usize, usize, usize)>>,
+                     dram: &mut Dram,
+                     result: &mut PipeResult,
+                     lane: usize,
+                     task: usize,
+                     step: usize,
+                     when: Cycle| {
+        let spec = lanes[lane][task].steps[step];
+        let arrival = dram.read(spec.addr, spec.bytes, when);
+        result.fetches += 1;
+        result.bytes += spec.bytes;
+        heap.push(Reverse((arrival, lane, task, step)));
+    };
+
+    // Prime each lane with up to `outstanding` first-step fetches.
+    for (lane, tasks) in lanes.iter().enumerate() {
+        if !tasks.is_empty() {
+            result.active_lanes += 1;
+        }
+        let n = tasks.len().min(outstanding);
+        for t in 0..n {
+            if !tasks[t].steps.is_empty() {
+                issue(&mut heap, dram, &mut result, lane, t, 0, start);
+            }
+            next_task[lane] = t + 1;
+        }
+    }
+
+    while let Some(Reverse((arrival, lane, task, step))) = heap.pop() {
+        let spec = lanes[lane][task].steps[step];
+        let begin = cursor[lane].max(arrival);
+        let end = begin + spec.compute;
+        cursor[lane] = end;
+        busy[lane] += spec.compute;
+
+        if step + 1 < lanes[lane][task].steps.len() {
+            // Token survived this round: request the next bit plane.
+            issue(&mut heap, dram, &mut result, lane, task, step + 1, end);
+        } else {
+            // Chain finished (token pruned or fully scored): start the next
+            // queued token to keep `outstanding` fetches in flight.
+            let t = next_task[lane];
+            if t < lanes[lane].len() {
+                next_task[lane] = t + 1;
+                if !lanes[lane][t].steps.is_empty() {
+                    issue(&mut heap, dram, &mut result, lane, t, 0, end);
+                }
+            }
+        }
+    }
+
+    result.finish = cursor.iter().copied().max().unwrap_or(start);
+    result.busy_cycles = busy.iter().sum();
+    result
+}
+
+/// Round-robin assignment of per-key chains to lanes.
+pub fn assign_round_robin(chains: Vec<ChainTask>, n_lanes: usize) -> Vec<Vec<ChainTask>> {
+    let mut lanes: Vec<Vec<ChainTask>> = vec![Vec::new(); n_lanes];
+    for (i, c) in chains.into_iter().enumerate() {
+        lanes[i % n_lanes].push(c);
+    }
+    lanes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::dram::DramConfig;
+
+    fn dram() -> Dram {
+        Dram::new(DramConfig::default())
+    }
+
+    fn chain(addr: u64, steps: usize, bytes: u64, compute: u64) -> ChainTask {
+        ChainTask {
+            steps: (0..steps)
+                .map(|s| FetchSpec { addr: addr + s as u64 * 4096, bytes, compute })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn single_chain_serializes_steps() {
+        let mut d = dram();
+        let lanes = vec![vec![chain(0, 3, 32, 10)]];
+        let r = simulate_lanes(&lanes, &mut d, 0, 1);
+        assert_eq!(r.fetches, 3);
+        assert_eq!(r.busy_cycles, 30);
+        // Three dependent fetch+compute pairs: finish well beyond 30 cycles.
+        assert!(r.finish > 30);
+    }
+
+    #[test]
+    fn bap_hides_latency_vs_sync() {
+        // Many independent 1-step chains: async should overlap fetch latency.
+        let mk = || -> Vec<Vec<ChainTask>> {
+            vec![(0..64).map(|i| chain(i * 64, 1, 16, 8)).collect()]
+        };
+        let mut d1 = dram();
+        let sync = simulate_lanes(&mk(), &mut d1, 0, 1);
+        let mut d2 = dram();
+        let bap = simulate_lanes(&mk(), &mut d2, 0, 16);
+        assert!(
+            bap.finish < sync.finish,
+            "BAP {} should beat sync {}",
+            bap.finish,
+            sync.finish
+        );
+        assert_eq!(bap.busy_cycles, sync.busy_cycles, "same work either way");
+    }
+
+    #[test]
+    fn utilization_improves_with_bap() {
+        let mk = || -> Vec<Vec<ChainTask>> {
+            assign_round_robin((0..256).map(|i| chain(i * 128, 4, 16, 4)).collect(), 4)
+        };
+        let mut d1 = dram();
+        let sync = simulate_lanes(&mk(), &mut d1, 0, 1);
+        let mut d2 = dram();
+        let bap = simulate_lanes(&mk(), &mut d2, 0, 16);
+        let u_sync = sync.utilization(4, 0);
+        let u_bap = bap.utilization(4, 0);
+        assert!(u_bap > u_sync, "bap {u_bap} vs sync {u_sync}");
+    }
+
+    #[test]
+    fn lanes_run_in_parallel() {
+        let chains: Vec<ChainTask> = (0..32).map(|i| chain(i * 256, 2, 32, 16)).collect();
+        let mut d1 = dram();
+        let one_lane = simulate_lanes(&assign_round_robin(chains.clone(), 1), &mut d1, 0, 4);
+        let mut d2 = dram();
+        let eight_lanes = simulate_lanes(&assign_round_robin(chains, 8), &mut d2, 0, 4);
+        assert!(eight_lanes.finish < one_lane.finish);
+        assert_eq!(eight_lanes.busy_cycles, one_lane.busy_cycles);
+    }
+
+    #[test]
+    fn empty_input_finishes_at_start() {
+        let mut d = dram();
+        let r = simulate_lanes(&[vec![], vec![]], &mut d, 100, 4);
+        assert_eq!(r.finish, 100);
+        assert_eq!(r.busy_cycles, 0);
+        assert_eq!(r.active_lanes, 0);
+    }
+
+    #[test]
+    fn start_offset_respected() {
+        let mut d = dram();
+        let lanes = vec![vec![chain(0, 1, 32, 5)]];
+        let r = simulate_lanes(&lanes, &mut d, 1000, 1);
+        assert!(r.finish > 1000);
+    }
+
+    #[test]
+    fn round_robin_balances() {
+        let lanes = assign_round_robin((0..10).map(|i| chain(i, 1, 1, 1)).collect(), 4);
+        let sizes: Vec<usize> = lanes.iter().map(|l| l.len()).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn deterministic_repeatable() {
+        let mk = || -> Vec<Vec<ChainTask>> {
+            assign_round_robin((0..100).map(|i| chain(i * 96, 3, 16, 4)).collect(), 8)
+        };
+        let mut d1 = dram();
+        let a = simulate_lanes(&mk(), &mut d1, 0, 8);
+        let mut d2 = dram();
+        let b = simulate_lanes(&mk(), &mut d2, 0, 8);
+        assert_eq!(a.finish, b.finish);
+        assert_eq!(a.busy_cycles, b.busy_cycles);
+    }
+}

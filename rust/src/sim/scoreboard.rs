@@ -1,0 +1,177 @@
+//! The per-lane Scoreboard (paper §IV-B, Table I: 64 entries × 45 bit).
+//!
+//! Stores partial scores `A^r_{i,j}` for tokens that remain unpruned so later
+//! bit rounds can *reuse* them (the essence of stage fusion). An entry is
+//! allocated on a token's first (MSB) plane, updated on every subsequent
+//! plane, and evicted when the Pruning Engine kills the token or its final
+//! score is handed to the V-PU.
+//!
+//! Capacity bounds the number of tokens a lane may keep in flight under BAP —
+//! the accelerator's scheduler never exceeds it, so `insert` failures indicate
+//! a scheduler bug (surfaced via `Result` and tested).
+
+use std::collections::HashMap;
+
+/// Statistics for hardware-utilization reporting and the capacity ablation.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScoreboardStats {
+    pub inserts: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub peak_occupancy: usize,
+}
+
+/// A bounded map token-index → (partial score, rounds accumulated).
+#[derive(Debug, Clone)]
+pub struct Scoreboard {
+    capacity: usize,
+    entries: HashMap<usize, Entry>,
+    pub stats: ScoreboardStats,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    partial: i64,
+    rounds_done: u8,
+}
+
+impl Scoreboard {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self { capacity, entries: HashMap::with_capacity(capacity), stats: ScoreboardStats::default() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.entries.len() >= self.capacity
+    }
+
+    /// Allocate an entry for a token's first plane. Errors when full.
+    pub fn insert(&mut self, token: usize, partial: i64) -> Result<(), ScoreboardFull> {
+        if self.is_full() && !self.entries.contains_key(&token) {
+            return Err(ScoreboardFull { token });
+        }
+        self.entries.insert(token, Entry { partial, rounds_done: 1 });
+        self.stats.inserts += 1;
+        self.stats.peak_occupancy = self.stats.peak_occupancy.max(self.entries.len());
+        Ok(())
+    }
+
+    /// Retrieve-and-accumulate: the Hit path of Fig. 9 (b). Returns the updated
+    /// partial score, or `None` (a miss — caller must `insert` instead, which
+    /// models the deasserted Hit signal on the MSB plane).
+    pub fn accumulate(&mut self, token: usize, delta: i64) -> Option<i64> {
+        match self.entries.get_mut(&token) {
+            Some(e) => {
+                e.partial += delta;
+                e.rounds_done += 1;
+                self.stats.hits += 1;
+                Some(e.partial)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Current partial score without modifying it.
+    pub fn peek(&self, token: usize) -> Option<i64> {
+        self.entries.get(&token).map(|e| e.partial)
+    }
+
+    /// Rounds accumulated for a token.
+    pub fn rounds_done(&self, token: usize) -> Option<u8> {
+        self.entries.get(&token).map(|e| e.rounds_done)
+    }
+
+    /// Eviction (token pruned, or final score drained to the V-PU).
+    pub fn evict(&mut self, token: usize) -> Option<i64> {
+        let e = self.entries.remove(&token);
+        if e.is_some() {
+            self.stats.evictions += 1;
+        }
+        e.map(|e| e.partial)
+    }
+}
+
+/// Scheduler contract violation: attempted to track more tokens than entries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+#[error("scoreboard full inserting token {token}")]
+pub struct ScoreboardFull {
+    pub token: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_accumulate_evict_lifecycle() {
+        let mut sb = Scoreboard::new(4);
+        sb.insert(7, 100).unwrap();
+        assert_eq!(sb.peek(7), Some(100));
+        assert_eq!(sb.accumulate(7, 23), Some(123));
+        assert_eq!(sb.rounds_done(7), Some(2));
+        assert_eq!(sb.evict(7), Some(123));
+        assert!(sb.is_empty());
+    }
+
+    #[test]
+    fn miss_on_unknown_token() {
+        let mut sb = Scoreboard::new(2);
+        assert_eq!(sb.accumulate(3, 5), None);
+        assert_eq!(sb.stats.misses, 1);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut sb = Scoreboard::new(2);
+        sb.insert(0, 1).unwrap();
+        sb.insert(1, 2).unwrap();
+        assert_eq!(sb.insert(2, 3), Err(ScoreboardFull { token: 2 }));
+        // Re-inserting an existing token is allowed (overwrite, not growth).
+        sb.insert(1, 9).unwrap();
+        assert_eq!(sb.peek(1), Some(9));
+    }
+
+    #[test]
+    fn eviction_frees_space() {
+        let mut sb = Scoreboard::new(1);
+        sb.insert(0, 1).unwrap();
+        sb.evict(0);
+        sb.insert(1, 2).unwrap();
+        assert_eq!(sb.len(), 1);
+    }
+
+    #[test]
+    fn peak_occupancy_tracked() {
+        let mut sb = Scoreboard::new(8);
+        for t in 0..5 {
+            sb.insert(t, t as i64).unwrap();
+        }
+        for t in 0..5 {
+            sb.evict(t);
+        }
+        assert_eq!(sb.stats.peak_occupancy, 5);
+    }
+
+    #[test]
+    fn evicting_absent_token_is_noop() {
+        let mut sb = Scoreboard::new(2);
+        assert_eq!(sb.evict(42), None);
+        assert_eq!(sb.stats.evictions, 0);
+    }
+}

@@ -1,0 +1,108 @@
+//! V-PU timing: softmax LUT + 64-way INT12 MAC array (paper §IV-A).
+//!
+//! For each query, the V-PU receives the surviving tokens' exact scores from
+//! the QK-PU, streams the corresponding Value rows from DRAM, applies the
+//! LUT softmax (pipelined, one token per cycle) and accumulates the weighted
+//! sum on the MAC array (`ceil(dim / vpu_macs)` cycles per surviving row).
+//!
+//! Timing reuses the lane engine with a single "lane" (the MAC array) and a
+//! small outstanding window that models the double-buffered Value staging.
+
+use super::dram::Dram;
+use super::qkpu::{simulate_lanes, ChainTask, FetchSpec, PipeResult};
+use super::Cycle;
+use crate::quant::bitplane::N_BITS;
+
+/// Result of one query's V-stage.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VpuResult {
+    pub finish: Cycle,
+    pub compute_cycles: u64,
+    pub mac_ops: u64,
+    pub softmax_ops: u64,
+    pub v_bits: u64,
+}
+
+/// Simulate the V-stage for one query.
+///
+/// * `survivors` — indices of surviving tokens (their V rows are fetched).
+/// * `dim` — head dimension (row length).
+/// * `vpu_macs` — MAC array width (Table I: 64).
+/// * `v_base` — byte address where the V matrix starts (row-major INT12).
+pub fn simulate_vpu(
+    survivors: &[usize],
+    dim: usize,
+    vpu_macs: usize,
+    dram: &mut Dram,
+    start: Cycle,
+    v_base: u64,
+) -> VpuResult {
+    if survivors.is_empty() {
+        return VpuResult { finish: start, ..Default::default() };
+    }
+    let row_bytes = (dim * N_BITS).div_ceil(8) as u64;
+    // The 64-way MAC array consumes ceil(dim/64) cycles per surviving row;
+    // the LUT softmax is a separate pipelined unit (1 token/cycle) hidden
+    // behind the MAC stream.
+    let compute_per_row = (dim.div_ceil(vpu_macs)) as u64;
+
+    let chains: Vec<ChainTask> = survivors
+        .iter()
+        .map(|&j| ChainTask {
+            steps: vec![FetchSpec {
+                addr: v_base + j as u64 * row_bytes,
+                bytes: row_bytes,
+                compute: compute_per_row,
+            }],
+        })
+        .collect();
+
+    // Single MAC-array "lane"; 32 outstanding row fetches (the 320 KB KV
+    // SRAM double-buffers far more than 32 rows, so V streaming is
+    // bandwidth- not latency-bound).
+    let lanes = vec![chains];
+    let r: PipeResult = simulate_lanes(&lanes, dram, start, 32);
+
+    VpuResult {
+        finish: r.finish,
+        compute_cycles: r.busy_cycles,
+        mac_ops: (survivors.len() * dim) as u64,
+        softmax_ops: survivors.len() as u64,
+        v_bits: r.bytes * 8,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::dram::DramConfig;
+
+    #[test]
+    fn empty_survivors_is_free() {
+        let mut d = Dram::new(DramConfig::default());
+        let r = simulate_vpu(&[], 64, 64, &mut d, 42, 0);
+        assert_eq!(r.finish, 42);
+        assert_eq!(r.mac_ops, 0);
+    }
+
+    #[test]
+    fn ops_scale_with_survivors_and_dim() {
+        let mut d = Dram::new(DramConfig::default());
+        let surv: Vec<usize> = (0..10).collect();
+        let r = simulate_vpu(&surv, 128, 64, &mut d, 0, 0);
+        assert_eq!(r.mac_ops, 10 * 128);
+        assert_eq!(r.softmax_ops, 10);
+        assert_eq!(r.v_bits, 10 * 192 * 8); // 128 dims × 12 b = 192 B per row
+        // 128/64 = 2 MAC-array cycles per row (softmax pipelined separately).
+        assert_eq!(r.compute_cycles, 10 * 2);
+    }
+
+    #[test]
+    fn fewer_survivors_finish_faster() {
+        let mut d1 = Dram::new(DramConfig::default());
+        let few = simulate_vpu(&(0..8).collect::<Vec<_>>(), 64, 64, &mut d1, 0, 0);
+        let mut d2 = Dram::new(DramConfig::default());
+        let many = simulate_vpu(&(0..512).collect::<Vec<_>>(), 64, 64, &mut d2, 0, 0);
+        assert!(few.finish < many.finish);
+    }
+}

@@ -1,0 +1,46 @@
+//! Small self-contained utilities: deterministic PRNG, statistics helpers and a
+//! property-test harness.
+//!
+//! The build environment is offline (no `rand`, no `proptest`), so this module
+//! provides the deterministic randomness and property-testing machinery the rest
+//! of the crate (and its test suite) relies on.
+
+pub mod rng;
+pub mod stats;
+pub mod proptest;
+
+pub use rng::SplitMix64;
+pub use stats::{mean, percentile, stddev, Summary};
+
+/// Integer ceiling division: `ceil(a / b)` for positive integers.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Clamp a float into `[lo, hi]`.
+#[inline]
+pub fn clampf(x: f64, lo: f64, hi: f64) -> f64 {
+    x.max(lo).min(hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_exact_and_remainder() {
+        assert_eq!(ceil_div(10, 5), 2);
+        assert_eq!(ceil_div(11, 5), 3);
+        assert_eq!(ceil_div(1, 5), 1);
+        assert_eq!(ceil_div(0, 5), 0);
+    }
+
+    #[test]
+    fn clampf_bounds() {
+        assert_eq!(clampf(0.5, 0.0, 1.0), 0.5);
+        assert_eq!(clampf(-1.0, 0.0, 1.0), 0.0);
+        assert_eq!(clampf(2.0, 0.0, 1.0), 1.0);
+    }
+}

@@ -1,0 +1,71 @@
+//! Minimal property-based testing harness (offline substitute for `proptest`).
+//!
+//! Usage:
+//! ```no_run
+//! // (no_run: doctest binaries don't inherit the xla_extension rpath)
+//! use bitstopper::util::proptest::check;
+//! check("sum is commutative", 200, |rng| {
+//!     let a = rng.range_i64(-100, 100);
+//!     let b = rng.range_i64(-100, 100);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! Each case receives a deterministically-seeded [`SplitMix64`]; on failure the
+//! panic message reports the case index and seed so the exact case can be
+//! replayed with [`replay`].
+
+use super::rng::SplitMix64;
+
+/// Base seed for all property checks; fixed so CI is deterministic.
+pub const BASE_SEED: u64 = 0xB17_5709; // "BITSTOP"
+
+/// Run `cases` generated test cases of property `name`.
+///
+/// Panics (propagating the inner assertion) with the case seed on failure.
+pub fn check<F: FnMut(&mut SplitMix64)>(name: &str, cases: u32, mut prop: F) {
+    for i in 0..cases {
+        let seed = BASE_SEED ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = SplitMix64::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property `{name}` failed at case {i} (seed {seed:#x}); replay with util::proptest::replay({seed:#x}, ..)");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn replay<F: FnMut(&mut SplitMix64)>(seed: u64, mut prop: F) {
+    let mut rng = SplitMix64::new(seed);
+    prop(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("count", 50, |_| count += 1);
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn failing_property_panics() {
+        let r = std::panic::catch_unwind(|| {
+            check("always-fails", 3, |_| panic!("boom"));
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<u64> = vec![];
+        check("record", 5, |rng| first.push(rng.next_u64()));
+        let mut second: Vec<u64> = vec![];
+        check("record", 5, |rng| second.push(rng.next_u64()));
+        assert_eq!(first, second);
+    }
+}

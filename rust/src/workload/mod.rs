@@ -1,0 +1,84 @@
+//! Workload synthesis and trace loading.
+//!
+//! Two sources drive every experiment:
+//!
+//! 1. **Synthetic QKV** ([`distribution`]) with calibrated attention-score
+//!    diversity — per-query mixtures of "one sharp winner" (Fig. 4 Dist A) and
+//!    "several moderate winners" (Dist B) at the tensor shapes of OPT-1.3B and
+//!    Llama2-7B. Used for all hardware figures (3a, 10–14), replacing the
+//!    paper's model-extracted tensors which need weights we don't have.
+//! 2. **Real traces** ([`trace`]) exported from the tiny JAX-trained
+//!    transformer (`python/compile/train_tiny.py`) — real QKV from a real
+//!    forward pass, used for quality experiments (PPL vs α) and golden
+//!    cross-checks.
+
+pub mod distribution;
+pub mod trace;
+
+pub use distribution::{AttnWorkload, SynthConfig};
+pub use trace::{read_trace, AttnRecord};
+
+use crate::quant::{IntMatrix, QuantParams};
+
+/// A quantized attention problem instance: one or more queries against a
+/// shared K/V context (one head).
+#[derive(Debug, Clone)]
+pub struct QuantAttn {
+    pub queries: Vec<Vec<i16>>,
+    pub k: IntMatrix,
+    pub v: IntMatrix,
+    pub qp: QuantParams,
+    pub kp: QuantParams,
+    pub vp: QuantParams,
+}
+
+impl QuantAttn {
+    /// Quantize a float attention instance (row-major K/V of shape seq × dim).
+    pub fn quantize(queries: &[Vec<f32>], k: &[f32], v: &[f32], seq: usize, dim: usize) -> Self {
+        let all_q: Vec<f32> = queries.iter().flatten().copied().collect();
+        let qp = QuantParams::calibrate(&all_q);
+        let kp = QuantParams::calibrate(k);
+        let vp = QuantParams::calibrate(v);
+        let qi: Vec<Vec<i16>> =
+            queries.iter().map(|q| q.iter().map(|&x| qp.q(x)).collect()).collect();
+        let ki: Vec<i16> = k.iter().map(|&x| kp.q(x)).collect();
+        let vi: Vec<i16> = v.iter().map(|&x| vp.q(x)).collect();
+        Self {
+            queries: qi,
+            k: IntMatrix::new(seq, dim, ki),
+            v: IntMatrix::new(seq, dim, vi),
+            qp,
+            kp,
+            vp,
+        }
+    }
+
+    pub fn seq(&self) -> usize {
+        self.k.rows
+    }
+
+    pub fn dim(&self) -> usize {
+        self.k.cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_shapes() {
+        let seq = 4;
+        let dim = 3;
+        let queries = vec![vec![0.5f32; dim], vec![-0.5f32; dim]];
+        let k = vec![0.1f32; seq * dim];
+        let v = vec![0.2f32; seq * dim];
+        let qa = QuantAttn::quantize(&queries, &k, &v, seq, dim);
+        assert_eq!(qa.seq(), seq);
+        assert_eq!(qa.dim(), dim);
+        assert_eq!(qa.queries.len(), 2);
+        // Shared query scale: ±0.5 both map to ±2047.
+        assert_eq!(qa.queries[0][0], 2047);
+        assert_eq!(qa.queries[1][0], -2047);
+    }
+}

@@ -1,0 +1,151 @@
+//! Binary trace I/O shared with the Python build path.
+//!
+//! `python/compile/train_tiny.py` exports real attention inputs (per layer,
+//! per head) captured from the tiny transformer's forward pass; this module
+//! reads them on the Rust side. Format (little-endian):
+//!
+//! ```text
+//! magic   8 bytes  "BSTRACE1"
+//! u32     n_records
+//! repeat n_records times:
+//!   u32 seq, u32 dim
+//!   f32 q[dim]
+//!   f32 k[seq*dim]
+//!   f32 v[seq*dim]
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+pub const TRACE_MAGIC: &[u8; 8] = b"BSTRACE1";
+
+/// One attention instance from a real model forward pass.
+#[derive(Debug, Clone)]
+pub struct AttnRecord {
+    pub seq: usize,
+    pub dim: usize,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Read a trace file; validates magic and shapes.
+pub fn read_trace(path: &Path) -> Result<Vec<AttnRecord>> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening trace {}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != TRACE_MAGIC {
+        bail!("bad trace magic in {}", path.display());
+    }
+    let n = read_u32(&mut f)? as usize;
+    if n > 1_000_000 {
+        bail!("implausible record count {n}");
+    }
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let seq = read_u32(&mut f)? as usize;
+        let dim = read_u32(&mut f)? as usize;
+        if seq == 0 || dim == 0 || seq > 1 << 20 || dim > 1 << 12 {
+            bail!("record {i}: implausible shape {seq}x{dim}");
+        }
+        let q = read_f32s(&mut f, dim)?;
+        let k = read_f32s(&mut f, seq * dim)?;
+        let v = read_f32s(&mut f, seq * dim)?;
+        out.push(AttnRecord { seq, dim, q, k, v });
+    }
+    Ok(out)
+}
+
+/// Write a trace file (used by tests and by the trace_sim example to create
+/// fixtures; the production writer lives in Python).
+pub fn write_trace(path: &Path, records: &[AttnRecord]) -> Result<()> {
+    use std::io::Write;
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(TRACE_MAGIC);
+    buf.extend_from_slice(&(records.len() as u32).to_le_bytes());
+    for r in records {
+        assert_eq!(r.q.len(), r.dim);
+        assert_eq!(r.k.len(), r.seq * r.dim);
+        assert_eq!(r.v.len(), r.seq * r.dim);
+        buf.extend_from_slice(&(r.seq as u32).to_le_bytes());
+        buf.extend_from_slice(&(r.dim as u32).to_le_bytes());
+        for &x in r.q.iter().chain(&r.k).chain(&r.v) {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating trace {}", path.display()))?;
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("bitstopper_test_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip() {
+        let rec = AttnRecord {
+            seq: 3,
+            dim: 2,
+            q: vec![1.0, -2.0],
+            k: vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0],
+            v: vec![5.0, 4.0, 3.0, 2.0, 1.0, 0.0],
+        };
+        let p = tmpfile("roundtrip");
+        write_trace(&p, &[rec.clone(), rec.clone()]).unwrap();
+        let got = read_trace(&p).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].q, rec.q);
+        assert_eq!(got[1].k, rec.k);
+        assert_eq!(got[1].v, rec.v);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = tmpfile("badmagic");
+        std::fs::write(&p, b"NOTATRACExxxx").unwrap();
+        assert!(read_trace(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let rec = AttnRecord { seq: 2, dim: 2, q: vec![0.0; 2], k: vec![0.0; 4], v: vec![0.0; 4] };
+        let p = tmpfile("trunc");
+        write_trace(&p, &[rec]).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 7]).unwrap();
+        assert!(read_trace(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn missing_file_is_error_not_panic() {
+        assert!(read_trace(Path::new("/nonexistent/trace.bin")).is_err());
+    }
+}

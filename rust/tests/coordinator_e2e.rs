@@ -1,0 +1,113 @@
+//! Coordinator end-to-end over the PJRT runtime: submit batched attention
+//! requests through the engine with a real artifact-backed executor and
+//! validate responses + metrics. Skips when artifacts are missing.
+
+use bitstopper::coordinator::{AttnExecutor, AttnRequest, BatchConfig, Engine};
+use bitstopper::runtime::{default_artifact_dir, ArtifactKind, Runtime};
+use bitstopper::util::SplitMix64;
+use std::time::Duration;
+
+/// PJRT-backed executor; constructed lazily inside its worker thread (the
+/// PJRT client is not `Send`).
+struct PjrtExecutor {
+    rt: Option<Runtime>,
+}
+
+impl PjrtExecutor {
+    fn new() -> Self {
+        Self { rt: None }
+    }
+
+    fn runtime(&mut self) -> anyhow::Result<&Runtime> {
+        if self.rt.is_none() {
+            let mut rt = Runtime::new()?;
+            rt.load_dir(&default_artifact_dir())?;
+            self.rt = Some(rt);
+        }
+        Ok(self.rt.as_ref().unwrap())
+    }
+}
+
+impl AttnExecutor for PjrtExecutor {
+    fn execute(&mut self, req: &AttnRequest) -> anyhow::Result<(Vec<f32>, usize)> {
+        let (kind, seq, dim, alpha) = (req.kind, req.seq, req.dim, req.alpha);
+        let q = req.q.clone();
+        let k = req.k.clone();
+        let v = req.v.clone();
+        let valid = req.valid.clone();
+        let rt = self.runtime()?;
+        let art = rt
+            .lookup(kind, seq, dim, alpha)
+            .ok_or_else(|| anyhow::anyhow!("no artifact for {kind:?} {seq}x{dim}"))?;
+        let out = art.run(&q, &k, &v, &valid)?;
+        let kept = out.kept();
+        Ok((out.out, kept))
+    }
+}
+
+fn mk_request(kind: ArtifactKind, seq: usize, dim: usize, seed: u64) -> AttnRequest {
+    let mut rng = SplitMix64::new(seed);
+    AttnRequest {
+        id: 0,
+        kind,
+        alpha: 0.6,
+        seq,
+        dim,
+        q: (0..dim).map(|_| rng.normal() as f32).collect(),
+        k: (0..seq * dim).map(|_| rng.normal() as f32).collect(),
+        v: (0..seq * dim).map(|_| rng.normal() as f32).collect(),
+        valid: vec![1.0; seq],
+    }
+}
+
+#[test]
+fn coordinator_serves_mixed_artifact_requests() {
+    if !default_artifact_dir().join("manifest.txt").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::start(
+        2,
+        BatchConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+        PjrtExecutor::new,
+    );
+
+    let mut rxs = vec![];
+    for i in 0..24 {
+        let kind = if i % 2 == 0 { ArtifactKind::BitStopper } else { ArtifactKind::Dense };
+        let (seq, dim) = if i % 3 == 0 { (128, 32) } else { (256, 64) };
+        rxs.push((kind, dim, engine.submit(mk_request(kind, seq, dim, i))));
+    }
+    for (kind, dim, rx) in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+        assert_eq!(resp.out.len(), dim);
+        assert!(resp.out.iter().all(|x| x.is_finite()));
+        if kind == ArtifactKind::BitStopper {
+            assert!(resp.kept >= 1);
+        }
+    }
+    let m = engine.metrics();
+    assert_eq!(m.completed, 24);
+    assert_eq!(m.errors, 0);
+    assert!(m.mean_batch_size >= 1.0);
+    assert!(m.throughput_rps > 0.0);
+    engine.shutdown();
+}
+
+#[test]
+fn coordinator_reports_latency_metrics() {
+    if !default_artifact_dir().join("manifest.txt").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::start(1, BatchConfig::default(), PjrtExecutor::new);
+    for i in 0..8 {
+        engine
+            .submit_blocking(mk_request(ArtifactKind::Dense, 128, 32, 100 + i))
+            .unwrap();
+    }
+    let m = engine.metrics();
+    assert!(m.mean_latency_us > 0.0);
+    assert!(m.p95_latency_us >= m.mean_latency_us * 0.5);
+    engine.shutdown();
+}

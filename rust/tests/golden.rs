@@ -1,0 +1,139 @@
+//! Golden cross-layer test: the Rust BESF/LATS functional model must produce
+//! *identical* selections to the Python oracle (`kernels/ref.py`) on the
+//! vectors exported by `train_tiny.py` — quantized real attention traces plus
+//! adversarial random cases.
+//!
+//! File format (artifacts/tiny_model/golden_besf.txt):
+//! ```text
+//! <n_cases>
+//! case <dim> <seq> <alpha> <radius_int>
+//! <q ints ...>
+//! <k row 0 ints ...>      (seq rows)
+//! <death rounds ...>      (seq entries; 12 = survived)
+//! <survivor indices ...>  (may be empty line)
+//! ```
+
+use bitstopper::algo::besf::{besf_select, SURVIVED};
+use bitstopper::algo::Lats;
+use bitstopper::quant::{margin::BitMargins, BitPlanes, IntMatrix};
+
+struct GoldenCase {
+    dim: usize,
+    seq: usize,
+    alpha: f64,
+    radius_int: i64,
+    q: Vec<i16>,
+    k: IntMatrix,
+    death: Vec<u8>,
+    survivors: Vec<usize>,
+}
+
+fn golden_path() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/tiny_model/golden_besf.txt")
+}
+
+fn parse_golden(text: &str) -> Vec<GoldenCase> {
+    let mut lines = text.lines();
+    let n: usize = lines.next().expect("count line").trim().parse().expect("count");
+    let mut cases = Vec::with_capacity(n);
+    for _ in 0..n {
+        let header = lines.next().expect("case header");
+        let mut h = header.split_whitespace();
+        assert_eq!(h.next(), Some("case"));
+        let dim: usize = h.next().unwrap().parse().unwrap();
+        let seq: usize = h.next().unwrap().parse().unwrap();
+        let alpha: f64 = h.next().unwrap().parse().unwrap();
+        let radius_int: i64 = h.next().unwrap().parse().unwrap();
+        let ints = |line: &str| -> Vec<i64> {
+            line.split_whitespace().map(|t| t.parse().unwrap()).collect()
+        };
+        let q: Vec<i16> = ints(lines.next().unwrap()).into_iter().map(|v| v as i16).collect();
+        assert_eq!(q.len(), dim);
+        let mut kdata = Vec::with_capacity(seq * dim);
+        for _ in 0..seq {
+            let row = ints(lines.next().unwrap());
+            assert_eq!(row.len(), dim);
+            kdata.extend(row.into_iter().map(|v| v as i16));
+        }
+        let death: Vec<u8> = ints(lines.next().unwrap()).into_iter().map(|v| v as u8).collect();
+        assert_eq!(death.len(), seq);
+        let survivors: Vec<usize> = lines
+            .next()
+            .unwrap()
+            .split_whitespace()
+            .map(|t| t.parse().unwrap())
+            .collect();
+        cases.push(GoldenCase {
+            dim,
+            seq,
+            alpha,
+            radius_int,
+            q,
+            k: IntMatrix::new(seq, dim, kdata),
+            death,
+            survivors,
+        });
+    }
+    cases
+}
+
+fn load_cases() -> Option<Vec<GoldenCase>> {
+    let path = golden_path();
+    if !path.exists() {
+        eprintln!("SKIP: {} missing — run `make artifacts`", path.display());
+        return None;
+    }
+    Some(parse_golden(&std::fs::read_to_string(path).unwrap()))
+}
+
+#[test]
+fn rust_besf_matches_python_oracle_survivors() {
+    let Some(cases) = load_cases() else { return };
+    assert!(cases.len() >= 4, "expected several golden cases");
+    for (i, c) in cases.iter().enumerate() {
+        let planes = BitPlanes::decompose(&c.k);
+        let margins = BitMargins::generate(&c.q);
+        let lats = Lats::from_int(c.alpha, c.radius_int);
+        let got = besf_select(&c.q, &planes, &margins, &lats);
+        assert_eq!(
+            got.survivors, c.survivors,
+            "case {i} (dim {} seq {} alpha {}): survivor mismatch",
+            c.dim, c.seq, c.alpha
+        );
+    }
+}
+
+#[test]
+fn rust_besf_matches_python_oracle_death_rounds() {
+    let Some(cases) = load_cases() else { return };
+    for (i, c) in cases.iter().enumerate() {
+        let planes = BitPlanes::decompose(&c.k);
+        let margins = BitMargins::generate(&c.q);
+        let lats = Lats::from_int(c.alpha, c.radius_int);
+        let got = besf_select(&c.q, &planes, &margins, &lats);
+        let got_death: Vec<u8> = got.death_round.clone();
+        assert_eq!(got_death, c.death, "case {i}: death-round mismatch");
+        // Internal consistency: survivors are exactly death == SURVIVED.
+        let from_death: Vec<usize> = got_death
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d == SURVIVED)
+            .map(|(j, _)| j)
+            .collect();
+        assert_eq!(from_death, got.survivors);
+    }
+}
+
+#[test]
+fn golden_cases_cover_real_traces_and_random() {
+    let Some(cases) = load_cases() else { return };
+    // Later cases are random 32-key adversarial cases; earlier ones come
+    // from real tiny-model traces (seq = the model's context window).
+    assert!(cases.iter().any(|c| c.seq == 32));
+    assert!(cases.iter().any(|c| c.seq != 32), "expected real-trace cases too");
+    // Alpha range must include aggressive and permissive ends.
+    let alphas: Vec<f64> = cases.iter().map(|c| c.alpha).collect();
+    assert!(alphas.iter().any(|&a| a <= 0.21));
+    assert!(alphas.iter().any(|&a| a >= 0.79));
+}

@@ -1,0 +1,133 @@
+//! Integration: the PJRT runtime must load, compile and execute the AOT
+//! artifacts, and the numerics must agree with the Rust reference attention.
+//!
+//! Requires `make artifacts` to have produced `artifacts/` (skipped with a
+//! message otherwise, so `cargo test` works on a fresh checkout).
+
+use bitstopper::attention::{attention_int12, rel_err};
+use bitstopper::quant::quantize;
+use bitstopper::quant::IntMatrix;
+use bitstopper::runtime::{default_artifact_dir, ArtifactKind, Runtime};
+use bitstopper::util::SplitMix64;
+
+fn artifacts_available() -> bool {
+    default_artifact_dir().join("manifest.txt").exists()
+}
+
+fn synth(seq: usize, dim: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = SplitMix64::new(seed);
+    let q: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+    let k: Vec<f32> = (0..seq * dim).map(|_| rng.normal() as f32).collect();
+    let v: Vec<f32> = (0..seq * dim).map(|_| rng.normal() as f32).collect();
+    (q, k, v)
+}
+
+#[test]
+fn runtime_loads_all_manifest_artifacts() {
+    if !artifacts_available() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let mut rt = Runtime::new().expect("PJRT CPU client");
+    let n = rt.load_dir(&default_artifact_dir()).expect("load artifacts");
+    assert!(n >= 3, "expected several artifacts, got {n}");
+    assert!(rt.lookup(ArtifactKind::Dense, 256, 64, 0.0).is_some());
+    assert!(rt.lookup(ArtifactKind::BitStopper, 256, 64, 0.6).is_some());
+}
+
+#[test]
+fn dense_artifact_matches_rust_int12_reference() {
+    if !artifacts_available() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let mut rt = Runtime::new().unwrap();
+    rt.load_dir(&default_artifact_dir()).unwrap();
+    let art = rt.lookup(ArtifactKind::Dense, 256, 64, 0.0).expect("dense 256x64");
+    let (q, k, v) = synth(256, 64, 0xAA);
+    let valid = vec![1.0f32; 256];
+    let out = art.run(&q, &k, &v, &valid).expect("execute");
+    assert_eq!(out.out.len(), 64);
+    assert_eq!(out.kept(), 256, "dense keeps everything");
+
+    // Rust INT12 reference (V unquantized in the artifact → compare loosely).
+    let (qi, qp) = quantize(&q);
+    let (ki, kp) = quantize(&k);
+    let (vi, vp) = quantize(&v);
+    let km = IntMatrix::new(256, 64, ki);
+    let vm = IntMatrix::new(256, 64, vi);
+    let want = attention_int12(&qi, &km, &vm, qp, kp, vp);
+    let err = rel_err(&out.out, &want);
+    assert!(err < 5e-3, "artifact vs rust reference rel err {err}");
+}
+
+#[test]
+fn bitstopper_artifact_prunes_and_tracks_dense() {
+    if !artifacts_available() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let mut rt = Runtime::new().unwrap();
+    rt.load_dir(&default_artifact_dir()).unwrap();
+    let dense = rt.lookup(ArtifactKind::Dense, 256, 64, 0.0).unwrap();
+    let sparse = rt.lookup(ArtifactKind::BitStopper, 256, 64, 0.6).unwrap();
+    assert!((sparse.info.alpha - 0.6).abs() < 1e-9);
+
+    let (q, k, v) = synth(256, 64, 0xBB);
+    let valid = vec![1.0f32; 256];
+    let d = dense.run(&q, &k, &v, &valid).unwrap();
+    let s = sparse.run(&q, &k, &v, &valid).unwrap();
+    assert!(s.kept() < 256, "BESF/LATS must prune gaussian QKV");
+    assert!(s.kept() >= 1);
+    // Unstructured gaussian attention is near-uniform — the hardest case for
+    // any top-band policy — so only a loose tracking bound applies here (the
+    // realistic-distribution quality bound lives in tests/integration.rs).
+    let err = rel_err(&s.out, &d.out);
+    assert!(err < 0.5, "sparse output should roughly track dense, rel err {err}");
+    assert!(s.out.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn bitstopper_artifact_selection_matches_rust_besf() {
+    if !artifacts_available() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    use bitstopper::algo::{besf_select, Lats};
+    use bitstopper::config::LatsConfig;
+    use bitstopper::quant::{margin::BitMargins, BitPlanes};
+
+    let mut rt = Runtime::new().unwrap();
+    rt.load_dir(&default_artifact_dir()).unwrap();
+    let art = rt.lookup(ArtifactKind::BitStopper, 128, 32, 0.6).expect("128x32 artifact");
+
+    let (q, k, v) = synth(128, 32, 0xCC);
+    let valid = vec![1.0f32; 128];
+    let got = art.run(&q, &k, &v, &valid).unwrap();
+
+    // Reproduce the in-graph selection with the Rust functional model.
+    let (qi, qp) = quantize(&q);
+    let (ki, kp) = quantize(&k);
+    let km = IntMatrix::new(128, 32, ki);
+    let planes = BitPlanes::decompose(&km);
+    let margins = BitMargins::generate(&qi);
+    let lats = Lats::new(LatsConfig { alpha: 0.6, radius: 5.0 }, 32, qp.scale, kp.scale);
+    let want = besf_select(&qi, &planes, &margins, &lats);
+
+    let got_set: Vec<usize> =
+        got.mask.iter().enumerate().filter(|(_, &m)| m > 0.5).map(|(j, _)| j).collect();
+    assert_eq!(got_set, want.survivors, "cross-layer BESF agreement (JAX vs Rust)");
+}
+
+#[test]
+fn invalid_shape_rejected() {
+    if !artifacts_available() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let mut rt = Runtime::new().unwrap();
+    rt.load_dir(&default_artifact_dir()).unwrap();
+    let art = rt.lookup(ArtifactKind::Dense, 256, 64, 0.0).unwrap();
+    let bad = art.run(&[0.0; 8], &[0.0; 8], &[0.0; 8], &[0.0; 8]);
+    assert!(bad.is_err());
+}
