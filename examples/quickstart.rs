@@ -1,17 +1,16 @@
-//! Quickstart: run BitStopper's BESF/LATS attention on a synthetic workload,
-//! compare against dense INT12 attention, and show the cycle-level simulator's
-//! speedup/energy report.
+//! Quickstart: run BitStopper's BESF/LATS attention through the shared
+//! [`AttentionEngine`] on a synthetic workload, compare against dense INT12
+//! attention, and show the cycle-level simulator's speedup/energy report.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use bitstopper::algo::{besf_select, Lats};
-use bitstopper::attention::{attention_int12, attention_int12_sparse, rel_err};
+use bitstopper::attention::{attention_int12, rel_err};
 use bitstopper::config::{Features, LatsConfig, SimConfig};
-use bitstopper::quant::{margin::BitMargins, BitPlanes};
+use bitstopper::engine::{AttentionEngine, SelectionPolicy};
 use bitstopper::sim::simulate_attention;
-use bitstopper::workload::{AttnWorkload, QuantAttn, SynthConfig};
+use bitstopper::workload::QuantAttn;
 
 fn main() {
     let (seq, dim, queries) = (1024, 64, 8);
@@ -19,30 +18,28 @@ fn main() {
 
     // 1. Synthesize an attention workload with realistic score diversity and
     //    quantize it to INT12 (the paper's PTQ baseline).
-    let w = AttnWorkload::generate(SynthConfig::new(seq, dim, queries, 42));
-    let qs: Vec<Vec<f32>> = (0..queries).map(|i| w.query(i).to_vec()).collect();
-    let qa = QuantAttn::quantize(&qs, &w.k, &w.v, seq, dim);
+    let qa = QuantAttn::synth(seq, dim, queries, 42);
 
-    // 2. Functional BESF/LATS: bit-incremental pruning with margin bounds.
-    let planes = BitPlanes::decompose(&qa.k);
-    let lats = Lats::new(LatsConfig::default(), dim, qa.qp.scale, qa.kp.scale);
-    println!("LATS: alpha=0.6 radius(int)={}\n", lats.radius_int);
+    // 2. The engine owns the whole functional pipeline: bit-plane
+    //    decomposition, margin generation, BESF selection and sparse V
+    //    accumulation (one line per query instead of four plumbing calls).
+    let engine = AttentionEngine::single(&qa, LatsConfig::default());
+    let head = &engine.heads[0];
+    println!("LATS: alpha={} radius(int)={}\n", head.lats.alpha, head.lats.radius_int);
     println!("query | kept/seq | K-bits fetched (vs dense) | output rel-err vs dense");
-    for (i, q) in qa.queries.iter().enumerate() {
-        let margins = BitMargins::generate(q);
-        let sel = besf_select(q, &planes, &margins, &lats);
-        let dense = attention_int12(q, &qa.k, &qa.v, qa.qp, qa.kp, qa.vp);
-        let sparse =
-            attention_int12_sparse(q, &qa.k, &qa.v, qa.qp, qa.kp, qa.vp, &sel.survivors);
+    for qi in 0..queries {
+        let r = head.run_query(qi, SelectionPolicy::Lats);
+        let dense = attention_int12(&qa.queries[qi], &qa.k, &qa.v, qa.qp, qa.kp, qa.vp);
         println!(
-            "  Q{i}  | {:>4}/{seq} | {:>5.1}%                     | {:.4}",
-            sel.survivors.len(),
-            100.0 * sel.k_traffic_fraction(),
-            rel_err(&sparse, &dense)
+            "  Q{qi}  | {:>4}/{seq} | {:>5.1}%                     | {:.4}",
+            r.sel.survivors.len(),
+            100.0 * r.sel.k_traffic_fraction(),
+            rel_err(&r.out, &dense)
         );
     }
 
-    // 3. Cycle-level simulation: BitStopper vs the dense baseline.
+    // 3. Cycle-level simulation: BitStopper vs the dense baseline (the
+    //    simulator layers timing over the same engine decisions).
     let cfg = SimConfig::default();
     let mut dense_cfg = cfg.clone();
     dense_cfg.features = Features::DENSE;

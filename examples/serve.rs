@@ -1,220 +1,129 @@
-//! **End-to-end serving driver** (the repo's full-system validation): load
-//! the trained tiny transformer + the AOT HLO artifacts, serve batched
-//! autoregressive generation requests through the Layer-3 coordinator with
-//! attention executed by the PJRT runtime (BitStopper artifact on the decode
-//! path), and report latency / throughput plus the cycle-simulator's
-//! projected speedup & energy for the same attention workload.
+//! **End-to-end serving driver** (the repo's full-system validation, pure
+//! Rust): a multi-head attention workload is served through the Layer-3
+//! coordinator — dynamic batching ([`Batcher`]) + least-loaded routing
+//! ([`Router`]) — with the sparse **BitStopper executor** on the request
+//! path, so BESF/LATS runs behind the same machinery a production deployment
+//! would use. The same tensors then go through the multi-head
+//! [`AttentionEngine`] directly to demonstrate head/query-parallel
+//! throughput scaling, and through the cycle simulator for projected silicon
+//! numbers.
 //!
-//! All three layers compose here:
-//!   L1 Pallas bit-plane kernels → (AOT) → L2 fused BESF attention HLO →
-//!   L3 Rust coordinator batching requests onto the PJRT executable.
+//! (The PJRT/XLA artifact path is feature-gated — see
+//! `rust/src/runtime/mod.rs`; this driver does not need it.)
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve -- [n_requests] [decode_steps]
+//! cargo run --release --example serve -- [n_heads] [seq] [queries_per_head]
 //! ```
 
-use bitstopper::config::{Features, SimConfig};
-use bitstopper::coordinator::{AttnExecutor, AttnRequest, BatchConfig, Engine};
-use bitstopper::model::loader::{load_tokens, load_weights};
-use bitstopper::model::{AttnPolicy, TinyTransformer};
-use bitstopper::runtime::{default_artifact_dir, ArtifactKind, Runtime};
-use bitstopper::sim::simulate_attention;
-use bitstopper::workload::QuantAttn;
-use std::sync::mpsc::Receiver;
+use bitstopper::config::{Features, LatsConfig, SimConfig};
+use bitstopper::coordinator::{AttnRequest, BatchConfig, BesfExecutor, Engine};
+use bitstopper::engine::{default_threads, AttentionEngine, SelectionPolicy};
+use bitstopper::runtime::ArtifactKind;
+use bitstopper::sim::simulate_multi_head;
+use bitstopper::workload::{head_seed, AttnWorkload, MultiHeadAttn, QuantAttn, SynthConfig};
 use std::time::{Duration, Instant};
 
-struct PjrtExecutor {
-    rt: Option<Runtime>,
-}
+const ALPHA: f64 = 0.6;
 
-impl AttnExecutor for PjrtExecutor {
-    fn execute(&mut self, req: &AttnRequest) -> anyhow::Result<(Vec<f32>, usize)> {
-        if self.rt.is_none() {
-            let mut rt = Runtime::new()?;
-            let n = rt.load_dir(&default_artifact_dir())?;
-            eprintln!("[worker] PJRT {} ready, {} artifacts", rt.platform(), n);
-            self.rt = Some(rt);
-        }
-        let rt = self.rt.as_ref().unwrap();
-        let art = rt
-            .lookup(req.kind, req.seq, req.dim, req.alpha)
-            .ok_or_else(|| anyhow::anyhow!("no artifact {:?} {}x{}", req.kind, req.seq, req.dim))?;
-        let out = art.run(&req.q, &req.k, &req.v, &req.valid)?;
-        let kept = out.kept();
-        Ok((out.out, kept))
-    }
-}
-
-fn main() -> anyhow::Result<()> {
+fn main() {
     let args: Vec<String> = std::env::args().collect();
-    let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(16);
-    let decode_steps: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(24);
-
-    let dir = default_artifact_dir();
-    if !dir.join("manifest.txt").exists() || !dir.join("tiny_model/weights.bin").exists() {
-        eprintln!("artifacts missing — run `make artifacts` first");
-        std::process::exit(1);
-    }
-
-    // --- load model + prompts ---
-    let (cfg, w) = load_weights(&dir.join("tiny_model/weights.bin"))?;
-    let model = TinyTransformer::new(cfg, w);
-    let val = load_tokens(&dir.join("tiny_model/val_tokens.bin"))?;
+    let n_heads: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let seq: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(512);
+    let queries: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let dim = 64usize;
     println!(
-        "model: vocab={} d={} layers={} heads={} | serving {n_requests} generation \
-         requests × {decode_steps} decode steps",
-        cfg.vocab, cfg.d_model, cfg.n_layers, cfg.n_heads
+        "== BitStopper serving demo: {n_heads} heads x {queries} queries, context {seq}x{dim} =="
     );
 
-    // The attention artifact shape is the tiny model's head: seq=128, dim=32.
-    let (art_seq, art_dim) = (128usize, cfg.d_model / cfg.n_heads);
+    // --- synthesize one float workload per head; quantize for the engine ---
+    let mut float_heads: Vec<AttnWorkload> = Vec::with_capacity(n_heads);
+    let mut quant_heads: Vec<QuantAttn> = Vec::with_capacity(n_heads);
+    for h in 0..n_heads {
+        let w = AttnWorkload::generate(SynthConfig::new(seq, dim, queries, head_seed(42, h)));
+        let qs: Vec<Vec<f32>> = (0..queries).map(|i| w.query(i).to_vec()).collect();
+        quant_heads.push(QuantAttn::quantize(&qs, &w.k, &w.v, seq, dim));
+        float_heads.push(w);
+    }
+    let mha = MultiHeadAttn::from_heads(quant_heads);
 
-    // --- start the coordinator (2 workers, dynamic batching) ---
+    // --- serving path: every (head, query) as a request through the
+    //     coordinator (shape-batched, least-loaded-routed, BESF-executed) ---
+    let workers = default_threads().min(4).max(2);
     let engine = Engine::start(
-        2,
+        workers,
         BatchConfig { max_batch: 8, max_wait: Duration::from_micros(500) },
-        || PjrtExecutor { rt: None },
+        BesfExecutor::default,
     );
-
-    // --- drive generation: each request decodes tokens; at every decode step
-    //     the *hot head's* attention runs through the BitStopper artifact. ---
     let t0 = Instant::now();
-    let mut total_tokens = 0usize;
-    let mut kept_sum = 0usize;
-    let mut kept_n = 0usize;
-    let mut sample_q: Vec<Vec<f32>> = vec![];
-    let mut sample_kv: Option<(Vec<f32>, Vec<f32>)> = None;
-
-    for r in 0..n_requests {
-        // Prompt: a slice of validation text.
-        let start = (r * 37) % (val.len() - 64);
-        let mut ctx: Vec<u16> = val[start..start + 32].to_vec();
-        for _ in 0..decode_steps {
-            // Full forward for logits (Rust datapath)…
-            let logits = model.forward(&ctx, &AttnPolicy::Dense);
-            let vlen = model.cfg.vocab;
-            let last = &logits[(ctx.len() - 1) * vlen..ctx.len() * vlen];
-            let next = last
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0 as u16;
-
-            // …and the decode-position attention of layer 0 / head 0 through
-            // the coordinator + PJRT BitStopper artifact (padded to art_seq).
-            let (q, k, v) = head_qkv(&model, &ctx, art_dim);
-            let mut kp = vec![0f32; art_seq * art_dim];
-            let mut vp = vec![0f32; art_seq * art_dim];
-            let mut valid = vec![0f32; art_seq];
-            let live = ctx.len().min(art_seq);
-            kp[..live * art_dim].copy_from_slice(&k[..live * art_dim]);
-            vp[..live * art_dim].copy_from_slice(&v[..live * art_dim]);
-            for x in valid.iter_mut().take(live) {
-                *x = 1.0;
-            }
-            if sample_q.len() < 8 {
-                sample_q.push(q.clone());
-                sample_kv = Some((kp.clone(), vp.clone()));
-            }
-            let rx: Receiver<_> = engine.submit(AttnRequest {
+    let mut rxs = Vec::with_capacity(n_heads * queries);
+    for w in &float_heads {
+        for qi in 0..queries {
+            rxs.push(engine.submit(AttnRequest {
                 id: 0,
                 kind: ArtifactKind::BitStopper,
-                alpha: 0.6,
-                seq: art_seq,
-                dim: art_dim,
-                q,
-                k: kp,
-                v: vp,
-                valid,
-            });
-            let resp = rx.recv().expect("attention response");
-            kept_sum += resp.kept;
-            kept_n += live;
-
-            ctx.push(next);
-            if ctx.len() > model.cfg.max_seq {
-                ctx.remove(0);
-            }
-            total_tokens += 1;
+                alpha: ALPHA,
+                seq,
+                dim,
+                q: w.query(qi).to_vec(),
+                k: w.k.clone(),
+                v: w.v.clone(),
+                valid: vec![1.0; seq],
+            }));
         }
+    }
+    let mut kept_sum = 0usize;
+    for rx in rxs {
+        let resp = rx.recv().expect("attention response");
+        assert_eq!(resp.out.len(), dim);
+        kept_sum += resp.kept;
     }
     let wall = t0.elapsed();
     let m = engine.metrics();
     engine.shutdown();
 
-    println!("\n== serving results ==");
-    println!("decoded tokens          : {total_tokens}");
-    println!("wall time               : {:.2}s  ({:.1} tok/s)", wall.as_secs_f64(), total_tokens as f64 / wall.as_secs_f64());
+    println!("\n== serving results ({workers} executor workers) ==");
     println!("attention requests      : {} (errors {})", m.completed, m.errors);
+    println!("wall time               : {:.3}s  ({:.0} req/s)", wall.as_secs_f64(), m.completed as f64 / wall.as_secs_f64());
     println!("mean batch size         : {:.2}", m.mean_batch_size);
-    println!("attention mean latency  : {:.0} µs (p95 {:.0} µs)", m.mean_latency_us, m.p95_latency_us);
-    println!("attention throughput    : {:.0} req/s", m.throughput_rps);
-    println!("mean tokens kept (BESF) : {:.1}% of live context", 100.0 * kept_sum as f64 / kept_n.max(1) as f64);
+    println!("mean latency            : {:.0} us (p95 {:.0} us)", m.mean_latency_us, m.p95_latency_us);
+    println!(
+        "mean tokens kept (BESF) : {:.1}% of context",
+        100.0 * kept_sum as f64 / ((n_heads * queries * seq) as f64)
+    );
 
-    // --- projected accelerator performance on the same attention workload ---
-    if let Some((k, v)) = sample_kv {
-        let qa = QuantAttn::quantize(&sample_q, &k, &v, art_seq, art_dim);
-        let cfg_sim = SimConfig::default();
-        let mut dense_cfg = cfg_sim.clone();
-        dense_cfg.features = Features::DENSE;
-        let bs = simulate_attention(&qa, &cfg_sim);
-        let dn = simulate_attention(&qa, &dense_cfg);
-        println!("\n== projected BitStopper silicon (cycle sim on served tensors) ==");
+    // --- multi-head engine throughput scaling (the tentpole demo) ---
+    let lats_cfg = LatsConfig { alpha: ALPHA, radius: 5.0 };
+    let eng = AttentionEngine::new(&mha, lats_cfg);
+    println!("\n== engine head/query-parallel scaling ==");
+    let mut t1 = 0f64;
+    for threads in [1usize, default_threads()] {
+        let t = Instant::now();
+        let results = eng.run_all_threads(SelectionPolicy::Lats, threads);
+        let secs = t.elapsed().as_secs_f64();
+        if threads == 1 {
+            t1 = secs;
+        }
+        let n_q: usize = results.iter().map(|h| h.len()).sum();
         println!(
-            "speedup vs dense {:.2}x | energy eff {:.2}x | utilization {:.0}% | DRAM traffic {:.1}%",
-            bs.speedup_over(&dn),
-            dn.energy.total_pj() / bs.energy.total_pj(),
-            100.0 * bs.utilization,
-            100.0 * bs.complexity.dram_bits() as f64 / dn.complexity.dram_bits() as f64,
+            "  {threads:>2} thread(s): {secs:.3}s for {n_q} (head,query) selections \
+             ({:.0}/s, speedup {:.2}x)",
+            n_q as f64 / secs.max(1e-9),
+            t1 / secs.max(1e-9)
         );
     }
-    Ok(())
-}
 
-/// Layer-0/head-0 QKV of the current context (decode query = last position).
-fn head_qkv(model: &TinyTransformer, ctx: &[u16], hd: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-    // Recompute embeddings + layer-0 projections (cheap at tiny scale).
-    let d = model.cfg.d_model;
-    let s = ctx.len();
-    let mut x = vec![0f32; s * d];
-    for (i, &t) in ctx.iter().enumerate() {
-        for c in 0..d {
-            x[i * d + c] =
-                model.w.tok_emb[t as usize * d + c] + model.w.pos_emb[i * d + c];
-        }
-    }
-    // LN1 + projections of layer 0.
-    let layer = &model.w.layers[0];
-    for row in x.chunks_exact_mut(d) {
-        let mean: f32 = row.iter().sum::<f32>() / d as f32;
-        let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
-        let inv = 1.0 / (var + 1e-5).sqrt();
-        for (i, v) in row.iter_mut().enumerate() {
-            *v = (*v - mean) * inv * layer.ln1_g[i] + layer.ln1_b[i];
-        }
-    }
-    let proj = |w: &[f32]| -> Vec<f32> {
-        let mut out = vec![0f32; s * d];
-        for i in 0..s {
-            for p in 0..d {
-                let xv = x[i * d + p];
-                for c in 0..d {
-                    out[i * d + c] += xv * w[p * d + c];
-                }
-            }
-        }
-        out
-    };
-    let q_all = proj(&layer.wq);
-    let k_all = proj(&layer.wk);
-    let v_all = proj(&layer.wv);
-    let q = q_all[(s - 1) * d..(s - 1) * d + hd].to_vec();
-    let mut k = vec![0f32; s * hd];
-    let mut v = vec![0f32; s * hd];
-    for i in 0..s {
-        k[i * hd..(i + 1) * hd].copy_from_slice(&k_all[i * d..i * d + hd]);
-        v[i * hd..(i + 1) * hd].copy_from_slice(&v_all[i * d..i * d + hd]);
-    }
-    (q, k, v)
+    // --- projected accelerator performance on the same tensors ---
+    let cfg_sim = SimConfig::default();
+    let mut dense_cfg = cfg_sim.clone();
+    dense_cfg.features = Features::DENSE;
+    let bs = simulate_multi_head(&mha, &cfg_sim);
+    let dn = simulate_multi_head(&mha, &dense_cfg);
+    println!("\n== projected BitStopper silicon (cycle sim, all heads) ==");
+    println!(
+        "speedup vs dense {:.2}x | energy eff {:.2}x | utilization {:.0}% | DRAM traffic {:.1}%",
+        bs.speedup_over(&dn),
+        dn.energy.total_pj() / bs.energy.total_pj(),
+        100.0 * bs.utilization,
+        100.0 * bs.complexity.dram_bits() as f64 / dn.complexity.dram_bits() as f64,
+    );
 }

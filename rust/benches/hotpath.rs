@@ -7,12 +7,13 @@
 
 use bitstopper::algo::{besf_select, Lats};
 use bitstopper::config::LatsConfig;
+use bitstopper::engine::{default_threads, AttentionEngine, SelectionPolicy};
 use bitstopper::quant::{margin::BitMargins, BitPlanes};
 use bitstopper::sim::dram::{Dram, DramConfig};
 use bitstopper::sim::qkpu::{assign_round_robin, simulate_lanes, ChainTask, FetchSpec};
 use bitstopper::util::stats::Summary;
 use bitstopper::util::SplitMix64;
-use bitstopper::workload::{AttnWorkload, QuantAttn, SynthConfig};
+use bitstopper::workload::{MultiHeadAttn, QuantAttn};
 use std::time::Instant;
 
 fn time_it<F: FnMut() -> u64>(name: &str, iters: usize, mut f: F) {
@@ -35,9 +36,7 @@ fn time_it<F: FnMut() -> u64>(name: &str, iters: usize, mut f: F) {
 fn main() {
     println!("== BitStopper hot-path microbenches ==\n");
     let (seq, dim) = (2048usize, 128usize);
-    let w = AttnWorkload::generate(SynthConfig::new(seq, dim, 8, 7));
-    let qs: Vec<Vec<f32>> = (0..8).map(|i| w.query(i).to_vec()).collect();
-    let qa = QuantAttn::quantize(&qs, &w.k, &w.v, seq, dim);
+    let qa = QuantAttn::synth(seq, dim, 8, 7);
     let planes = BitPlanes::decompose(&qa.k);
     let lats = Lats::new(LatsConfig::default(), dim, qa.qp.scale, qa.kp.scale);
 
@@ -94,4 +93,20 @@ fn main() {
         let cfg = bitstopper::config::SimConfig::default();
         bitstopper::sim::simulate_attention(&qa, &cfg).cycles
     });
+
+    // Multi-head engine: head/query-parallel BESF + sparse V across all
+    // cores vs one thread (the AttentionEngine throughput-scaling claim).
+    let mha = MultiHeadAttn::synth(8, 1024, 64, 4, 11);
+    let eng = AttentionEngine::new(&mha, LatsConfig::default());
+    let survivors_of = |r: &Vec<Vec<bitstopper::engine::QueryResult>>| -> u64 {
+        r.iter().flatten().map(|q| q.sel.survivors.len() as u64).sum()
+    };
+    time_it("engine_8hx4q_1thread", 5, || {
+        survivors_of(&eng.run_all_threads(SelectionPolicy::Lats, 1))
+    });
+    let cores = default_threads();
+    time_it("engine_8hx4q_all_cores", 5, || {
+        survivors_of(&eng.run_all_threads(SelectionPolicy::Lats, cores))
+    });
+    println!("  (all-cores ran on {cores} threads)");
 }

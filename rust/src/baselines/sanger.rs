@@ -194,12 +194,9 @@ mod tests {
     use super::*;
     use crate::config::{Features, SimConfig};
     use crate::sim::accelerator::simulate_attention;
-    use crate::workload::{AttnWorkload, SynthConfig};
 
     fn workload(seq: usize, queries: usize, seed: u64) -> QuantAttn {
-        let w = AttnWorkload::generate(SynthConfig::new(seq, 64, queries, seed));
-        let qs: Vec<Vec<f32>> = (0..queries).map(|i| w.query(i).to_vec()).collect();
-        QuantAttn::quantize(&qs, &w.k, &w.v, seq, 64)
+        QuantAttn::synth(seq, 64, queries, seed)
     }
 
     #[test]

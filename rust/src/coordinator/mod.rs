@@ -18,8 +18,12 @@ pub use batch::{Batcher, BatchConfig};
 pub use router::Router;
 
 use crate::attention::attention_f32;
+use crate::config::LatsConfig;
+use crate::engine::{HeadContext, SelectionPolicy};
 use crate::runtime::ArtifactKind;
+use crate::workload::QuantAttn;
 use anyhow::Result;
+use std::borrow::Cow;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -66,15 +70,91 @@ pub trait AttnExecutor: 'static {
     fn execute(&mut self, req: &AttnRequest) -> Result<(Vec<f32>, usize)>;
 }
 
-/// Pure-Rust dense-attention executor (fallback / tests).
+/// Shape checks shared by the pure-Rust executors: a malformed hand-built
+/// request must surface as a counted per-request error, not a slice panic
+/// that kills the worker (and with it the whole engine).
+fn check_shapes(req: &AttnRequest) -> Result<()> {
+    anyhow::ensure!(req.valid.len() == req.seq, "valid mask length != seq");
+    anyhow::ensure!(req.q.len() == req.dim, "query length != dim");
+    anyhow::ensure!(req.k.len() == req.seq * req.dim, "k length != seq*dim");
+    anyhow::ensure!(req.v.len() == req.seq * req.dim, "v length != seq*dim");
+    Ok(())
+}
+
+/// Gather the rows of `k`/`v` whose `valid` entry is set (arbitrary masks,
+/// not just prefixes). Returns (live row count, live K, live V). Prefix
+/// masks — including the common all-valid case — borrow the request's
+/// buffers directly; only genuinely sparse masks pay for a gather copy.
+fn gather_valid(req: &AttnRequest) -> (usize, Cow<'_, [f32]>, Cow<'_, [f32]>) {
+    let dim = req.dim;
+    let live: Vec<usize> = req
+        .valid
+        .iter()
+        .enumerate()
+        .filter(|(_, &v)| v > 0.5)
+        .map(|(j, _)| j)
+        .collect();
+    let n = live.len();
+    // `live` is ascending and unique, so last == n-1 ⇔ it is exactly 0..n.
+    if live.last().map_or(true, |&l| l + 1 == n) {
+        return (n, Cow::Borrowed(&req.k[..n * dim]), Cow::Borrowed(&req.v[..n * dim]));
+    }
+    let mut k = Vec::with_capacity(n * dim);
+    let mut v = Vec::with_capacity(n * dim);
+    for &j in &live {
+        k.extend_from_slice(&req.k[j * dim..(j + 1) * dim]);
+        v.extend_from_slice(&req.v[j * dim..(j + 1) * dim]);
+    }
+    (n, Cow::Owned(k), Cow::Owned(v))
+}
+
+/// Pure-Rust dense-attention executor (fallback / tests). Honors arbitrary
+/// `valid` masks by gathering live rows (a non-prefix mask used to be
+/// silently truncated).
 pub struct RustExecutor;
 
 impl AttnExecutor for RustExecutor {
     fn execute(&mut self, req: &AttnRequest) -> Result<(Vec<f32>, usize)> {
-        // Respect `valid` by truncation when it is a prefix mask.
-        let live = req.valid.iter().filter(|&&v| v > 0.5).count();
-        let out = attention_f32(&req.q, &req.k[..live * req.dim], &req.v[..live * req.dim], live, req.dim, req.dim);
+        check_shapes(req)?;
+        let (live, k, v) = gather_valid(req);
+        let out = attention_f32(&req.q, &k, &v, live, req.dim, req.dim);
         Ok((out, live))
+    }
+}
+
+/// BitStopper executor: the engine's BESF/LATS pipeline on the real request
+/// path. BitStopper-tagged requests are quantized (per-request calibration,
+/// matching the per-tensor PTQ protocol), selected with the request's own
+/// `alpha`, and accumulated over survivors only; `kept` reports **true**
+/// survivor counts from [`crate::algo::besf::besf_select`]. Dense-tagged
+/// requests fall back to dense f32 attention (kept = all live rows), so one
+/// executor serves both artifact kinds.
+pub struct BesfExecutor {
+    /// Logit-domain LATS radius (paper Eq. 2: 5.0).
+    pub radius: f64,
+}
+
+impl Default for BesfExecutor {
+    fn default() -> Self {
+        Self { radius: 5.0 }
+    }
+}
+
+impl AttnExecutor for BesfExecutor {
+    fn execute(&mut self, req: &AttnRequest) -> Result<(Vec<f32>, usize)> {
+        check_shapes(req)?;
+        let (live, k, v) = gather_valid(req);
+        if live == 0 {
+            return Ok((vec![0.0; req.dim], 0));
+        }
+        if req.kind == ArtifactKind::Dense {
+            let out = attention_f32(&req.q, &k, &v, live, req.dim, req.dim);
+            return Ok((out, live));
+        }
+        let qa = QuantAttn::quantize(&[req.q.clone()], &k, &v, live, req.dim);
+        let head = HeadContext::new(&qa, LatsConfig { alpha: req.alpha, radius: self.radius });
+        let qr = head.run_query(0, SelectionPolicy::Lats);
+        Ok((qr.out, qr.sel.survivors.len()))
     }
 }
 
@@ -338,6 +418,89 @@ mod tests {
         let resp = engine.submit_blocking(req).unwrap();
         assert_eq!(resp.kept, 4);
         engine.shutdown();
+    }
+
+    #[test]
+    fn valid_non_prefix_mask_gathers_live_rows() {
+        // Regression: a non-prefix mask used to be silently truncated to its
+        // popcount prefix. The executor must gather the actual live rows.
+        let engine = Engine::start(1, BatchConfig::default(), || RustExecutor);
+        let mut req = mk_request(8, 4, 31);
+        for j in 0..8 {
+            req.valid[j] = if j % 2 == 0 { 1.0 } else { 0.0 };
+        }
+        let (live, k, v) = super::gather_valid(&req);
+        assert_eq!(live, 4);
+        let want = attention_f32(&req.q, &k, &v, 4, 4, 4);
+        let resp = engine.submit_blocking(req).unwrap();
+        assert_eq!(resp.kept, 4);
+        assert_eq!(resp.out, want);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn besf_executor_prunes_and_reports_true_survivors() {
+        let mut exec = BesfExecutor::default();
+        let mut req = mk_request(64, 16, 55);
+        req.kind = ArtifactKind::BitStopper;
+        let (out, kept) = exec.execute(&req).unwrap();
+        assert_eq!(out.len(), 16);
+        assert!(out.iter().all(|x| x.is_finite()));
+        assert!(kept >= 1 && kept <= 64);
+        // Reproduce the executor's decision out-of-band: same quantization,
+        // same engine path, same survivor count.
+        let (live, k, v) = super::gather_valid(&req);
+        let qa = QuantAttn::quantize(&[req.q.clone()], &k, &v, live, req.dim);
+        let head = HeadContext::new(&qa, LatsConfig { alpha: req.alpha, radius: 5.0 });
+        let sel = head.select(0, SelectionPolicy::Lats);
+        assert_eq!(kept, sel.survivors.len());
+    }
+
+    #[test]
+    fn malformed_request_is_counted_error_not_engine_death() {
+        let engine = Engine::start(1, BatchConfig::default(), || RustExecutor);
+        let mut bad = mk_request(8, 4, 13);
+        bad.k.truncate(3); // k shorter than seq*dim: must error, not panic
+        let rx = engine.submit(bad);
+        // Errored requests get no response; the channel must resolve
+        // (sender dropped), not hang.
+        assert!(rx.recv_timeout(Duration::from_secs(5)).is_err());
+        // The worker survived: subsequent requests are still served.
+        let ok = engine.submit_blocking(mk_request(8, 4, 14)).unwrap();
+        assert_eq!(ok.out.len(), 4);
+        let m = engine.metrics();
+        assert_eq!(m.errors, 1);
+        assert_eq!(m.completed, 1);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn besf_executor_serves_dense_requests_densely() {
+        // A Dense-tagged request must not be pruned: same result as the
+        // dense executor, kept = every live row.
+        let mut exec = BesfExecutor::default();
+        let req = mk_request(16, 8, 91); // mk_request tags ArtifactKind::Dense
+        let (live, k, v) = super::gather_valid(&req);
+        let want = attention_f32(&req.q, &k, &v, live, 8, 8);
+        let (out, kept) = exec.execute(&req).unwrap();
+        assert_eq!(kept, 16);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn besf_executor_handles_masked_and_empty_contexts() {
+        let mut exec = BesfExecutor::default();
+        let mut req = mk_request(8, 4, 77);
+        req.kind = ArtifactKind::BitStopper;
+        for j in [1usize, 3, 6] {
+            req.valid[j] = 0.0;
+        }
+        let (_, kept) = exec.execute(&req).unwrap();
+        assert!(kept <= 5, "kept {kept} of 5 live rows");
+        req.valid = vec![0.0; 8];
+        let (out, kept) = exec.execute(&req).unwrap();
+        assert_eq!(kept, 0);
+        assert_eq!(out, vec![0.0; 4]);
     }
 
     #[test]

@@ -1,0 +1,345 @@
+//! The shared multi-head **AttentionEngine** (DESIGN.md §3) — the single
+//! functional owner of the BESF/LATS hot path.
+//!
+//! One engine layer, three consumers:
+//!
+//! * the cycle simulator ([`crate::sim::accelerator`]) takes selection
+//!   decisions ([`BesfResult`]) from here and layers *timing* on top;
+//! * the figure/baseline harness takes decisions and sparse outputs instead
+//!   of re-deriving the decompose → margin → select → accumulate plumbing;
+//! * the serving coordinator's [`crate::coordinator::BesfExecutor`] runs the
+//!   same path per request, so the paper's algorithm sits on the real
+//!   request path (batching + routing) rather than only inside experiments.
+//!
+//! Per head the engine owns quantization scales, the bit-plane decomposition
+//! of K, margin generation, BESF selection and sparse V accumulation; across
+//! heads and queries it parallelizes with `std::thread::scope` (the offline
+//! build has no rayon), deterministically: results are returned in
+//! `[head][query]` order regardless of thread count.
+
+use crate::algo::besf::{besf_select, besf_select_with, BesfResult};
+use crate::algo::complexity::Complexity;
+use crate::algo::lats::Lats;
+use crate::attention::attention_int12_sparse;
+use crate::config::LatsConfig;
+use crate::quant::bitplane::BitPlanes;
+use crate::quant::margin::BitMargins;
+use crate::workload::{MultiHeadAttn, QuantAttn};
+
+/// Which selection rule the engine applies (the Fig. 13 (b) ablation axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SelectionPolicy {
+    /// No pruning: every token survives (complexity is zeroed; dense
+    /// accounting is the caller's, since it depends on the fetch layout).
+    Dense,
+    /// BESF early termination under a fixed threshold (the BESF-without-LATS
+    /// ablation point; calibrate with [`HeadContext::static_threshold`]).
+    Static(i64),
+    /// Full BitStopper: BESF under the adaptive LATS threshold.
+    Lats,
+}
+
+/// Selection + sparse output for one query.
+#[derive(Debug, Clone)]
+pub struct QueryResult {
+    pub sel: BesfResult,
+    /// Sparse attention output (softmax over survivors, dequantized V).
+    pub out: Vec<f32>,
+}
+
+/// Prepared per-head state: the quantized problem, its 12-plane K
+/// decomposition, and the LATS threshold in the integer score domain.
+pub struct HeadContext<'a> {
+    pub qa: &'a QuantAttn,
+    pub planes: BitPlanes,
+    pub lats: Lats,
+}
+
+impl<'a> HeadContext<'a> {
+    /// Decompose K and derive the integer-domain LATS radius for this head's
+    /// quantization scales.
+    pub fn new(qa: &'a QuantAttn, cfg: LatsConfig) -> Self {
+        let lats = Lats::new(cfg, qa.dim(), qa.qp.scale, qa.kp.scale);
+        Self { qa, planes: BitPlanes::decompose(&qa.k), lats }
+    }
+
+    pub fn queries(&self) -> usize {
+        self.qa.queries.len()
+    }
+
+    /// Run BESF selection for query `qi` under `policy` (margin generation —
+    /// the Bit Margin Generator — happens here, per query).
+    pub fn select(&self, qi: usize, policy: SelectionPolicy) -> BesfResult {
+        let q = &self.qa.queries[qi];
+        let margins = BitMargins::generate(q);
+        match policy {
+            SelectionPolicy::Lats => besf_select(q, &self.planes, &margins, &self.lats),
+            SelectionPolicy::Static(eta) => {
+                besf_select_with(q, &self.planes, &margins, move |_r, _ml| eta)
+            }
+            SelectionPolicy::Dense => {
+                let mut r = besf_select_with(q, &self.planes, &margins, |_r, _ml| i64::MIN);
+                // Dense traffic accounting depends on the fetch layout and is
+                // owned by the caller (e.g. the simulator's full-row fetches).
+                r.complexity = Complexity::default();
+                r
+            }
+        }
+    }
+
+    /// Sparse V accumulation over a selection's survivors.
+    pub fn accumulate(&self, qi: usize, sel: &BesfResult) -> Vec<f32> {
+        let qa = self.qa;
+        attention_int12_sparse(
+            &qa.queries[qi],
+            &qa.k,
+            &qa.v,
+            qa.qp,
+            qa.kp,
+            qa.vp,
+            &sel.survivors,
+        )
+    }
+
+    /// Select, then accumulate: the full functional pipeline for one query.
+    pub fn run_query(&self, qi: usize, policy: SelectionPolicy) -> QueryResult {
+        let sel = self.select(qi, policy);
+        let out = self.accumulate(qi, &sel);
+        QueryResult { sel, out }
+    }
+
+    /// Calibrate the best static threshold a non-adaptive design can deploy
+    /// (the BESF-only ablation): the mean-final threshold of the weakest of
+    /// the first few queries — a static design must not lose vital tokens on
+    /// ANY query, which is exactly why Fig. 13 (b) shows LATS adding speedup
+    /// on top of it.
+    pub fn static_threshold(&self) -> i64 {
+        let qa = self.qa;
+        let seq = qa.seq();
+        let n_cal = qa.queries.len().min(4).max(1);
+        qa.queries
+            .iter()
+            .take(n_cal)
+            .map(|q| {
+                let exact_max = (0..seq).map(|j| qa.k.dot_row(j, q)).max().unwrap_or(0);
+                exact_max - self.lats.band()
+            })
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// Round-`r` partial-score increment of key `j` for query `qi` — one BRAT
+    /// pass. Exposed so the simulator's Scoreboard replay reuses the engine's
+    /// bit-plane math instead of duplicating it.
+    #[inline]
+    pub fn plane_delta(&self, qi: usize, j: usize, r: usize) -> i64 {
+        self.planes.weighted_plane_dot(r, j, &self.qa.queries[qi])
+    }
+
+    /// Exact integer score of key `j` for query `qi` (stage-fusion oracle).
+    #[inline]
+    pub fn exact_score(&self, qi: usize, j: usize) -> i64 {
+        self.qa.k.dot_row(j, &self.qa.queries[qi])
+    }
+}
+
+/// The multi-head engine: prepared [`HeadContext`]s plus head/query-parallel
+/// execution.
+pub struct AttentionEngine<'a> {
+    pub heads: Vec<HeadContext<'a>>,
+}
+
+impl<'a> AttentionEngine<'a> {
+    /// Prepare every head of a multi-head problem.
+    pub fn new(mha: &'a MultiHeadAttn, cfg: LatsConfig) -> Self {
+        Self { heads: mha.heads.iter().map(|h| HeadContext::new(h, cfg)).collect() }
+    }
+
+    /// Prepare a legacy single-head problem.
+    pub fn single(qa: &'a QuantAttn, cfg: LatsConfig) -> Self {
+        Self { heads: vec![HeadContext::new(qa, cfg)] }
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.heads.len()
+    }
+
+    /// Selection decisions for every (head, query), parallel across all cores.
+    pub fn select_all(&self, policy: SelectionPolicy) -> Vec<Vec<BesfResult>> {
+        self.par_map(default_threads(), move |hc, qi| hc.select(qi, policy))
+    }
+
+    /// Full select + accumulate for every (head, query), parallel.
+    pub fn run_all(&self, policy: SelectionPolicy) -> Vec<Vec<QueryResult>> {
+        self.run_all_threads(policy, default_threads())
+    }
+
+    /// [`AttentionEngine::run_all`] with an explicit worker count (used by
+    /// benches to demonstrate multi-head throughput scaling).
+    pub fn run_all_threads(
+        &self,
+        policy: SelectionPolicy,
+        threads: usize,
+    ) -> Vec<Vec<QueryResult>> {
+        self.par_map(threads, move |hc, qi| hc.run_query(qi, policy))
+    }
+
+    /// Map `f` over every (head, query) pair on `threads` scoped workers,
+    /// returning results grouped `[head][query]` in deterministic order.
+    fn par_map<T, F>(&self, threads: usize, f: F) -> Vec<Vec<T>>
+    where
+        T: Send,
+        F: Fn(&HeadContext<'a>, usize) -> T + Sync,
+    {
+        let tasks: Vec<(usize, usize)> = self
+            .heads
+            .iter()
+            .enumerate()
+            .flat_map(|(h, hc)| (0..hc.queries()).map(move |qi| (h, qi)))
+            .collect();
+        let mut flat: Vec<Option<T>> = Vec::with_capacity(tasks.len());
+        flat.resize_with(tasks.len(), || None);
+
+        let threads = threads.max(1).min(tasks.len().max(1));
+        let chunk = tasks.len().div_ceil(threads).max(1);
+        let f = &f;
+        let heads = &self.heads;
+        std::thread::scope(|s| {
+            for (slot_chunk, task_chunk) in flat.chunks_mut(chunk).zip(tasks.chunks(chunk)) {
+                s.spawn(move || {
+                    for (slot, &(h, qi)) in slot_chunk.iter_mut().zip(task_chunk) {
+                        *slot = Some(f(&heads[h], qi));
+                    }
+                });
+            }
+        });
+
+        let mut out: Vec<Vec<T>> =
+            self.heads.iter().map(|hc| Vec::with_capacity(hc.queries())).collect();
+        for (slot, &(h, _)) in flat.into_iter().zip(&tasks) {
+            out[h].push(slot.expect("scoped worker filled its slots"));
+        }
+        out
+    }
+}
+
+/// Worker count for the parallel drivers (all cores, at least one).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::rel_err;
+
+    fn head(seq: usize, dim: usize, queries: usize, seed: u64) -> QuantAttn {
+        QuantAttn::synth(seq, dim, queries, seed)
+    }
+
+    #[test]
+    fn engine_lats_matches_direct_besf() {
+        let qa = head(128, 64, 4, 0xE1);
+        let hc = HeadContext::new(&qa, LatsConfig::default());
+        for qi in 0..4 {
+            let direct = {
+                let margins = BitMargins::generate(&qa.queries[qi]);
+                besf_select(&qa.queries[qi], &hc.planes, &margins, &hc.lats)
+            };
+            let via_engine = hc.select(qi, SelectionPolicy::Lats);
+            assert_eq!(via_engine.survivors, direct.survivors);
+            assert_eq!(via_engine.death_round, direct.death_round);
+            assert_eq!(via_engine.complexity, direct.complexity);
+        }
+    }
+
+    #[test]
+    fn dense_policy_keeps_everything_with_zero_complexity() {
+        let qa = head(64, 32, 2, 0xE2);
+        let hc = HeadContext::new(&qa, LatsConfig::default());
+        let r = hc.select(0, SelectionPolicy::Dense);
+        assert_eq!(r.survivors.len(), 64);
+        assert_eq!(r.complexity, Complexity::default());
+    }
+
+    #[test]
+    fn run_query_output_matches_sparse_reference() {
+        let qa = head(128, 32, 3, 0xE3);
+        let hc = HeadContext::new(&qa, LatsConfig::default());
+        let qr = hc.run_query(1, SelectionPolicy::Lats);
+        let want = attention_int12_sparse(
+            &qa.queries[1],
+            &qa.k,
+            &qa.v,
+            qa.qp,
+            qa.kp,
+            qa.vp,
+            &qr.sel.survivors,
+        );
+        assert_eq!(qr.out, want);
+        assert!(qr.out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn parallel_results_are_deterministic_across_thread_counts() {
+        let mha = MultiHeadAttn::synth(3, 96, 32, 4, 0xE4);
+        let eng = AttentionEngine::new(&mha, LatsConfig::default());
+        let serial = eng.run_all_threads(SelectionPolicy::Lats, 1);
+        let parallel = eng.run_all_threads(SelectionPolicy::Lats, 8);
+        assert_eq!(serial.len(), parallel.len());
+        for (hs, hp) in serial.iter().zip(&parallel) {
+            assert_eq!(hs.len(), hp.len());
+            for (a, b) in hs.iter().zip(hp) {
+                assert_eq!(a.sel.survivors, b.sel.survivors);
+                assert_eq!(a.out, b.out);
+            }
+        }
+    }
+
+    #[test]
+    fn static_threshold_is_no_looser_than_lats_on_calibration_queries() {
+        // The static threshold is the min over calibration queries, so on
+        // those queries it keeps at least as many tokens as per-query LATS.
+        let qa = head(256, 64, 4, 0xE5);
+        let hc = HeadContext::new(&qa, LatsConfig::default());
+        let eta = hc.static_threshold();
+        for qi in 0..4 {
+            let st = hc.select(qi, SelectionPolicy::Static(eta));
+            let ad = hc.select(qi, SelectionPolicy::Lats);
+            assert!(
+                st.survivors.len() >= ad.survivors.len(),
+                "query {qi}: static {} < lats {}",
+                st.survivors.len(),
+                ad.survivors.len()
+            );
+        }
+    }
+
+    #[test]
+    fn sparse_output_tracks_quality_on_realistic_workload() {
+        let mha = MultiHeadAttn::synth(2, 256, 64, 4, 0xE6);
+        let eng = AttentionEngine::new(&mha, LatsConfig::default());
+        let results = eng.run_all(SelectionPolicy::Lats);
+        let mut errs: Vec<f64> = vec![];
+        for (hc, hr) in eng.heads.iter().zip(&results) {
+            for (qi, qr) in hr.iter().enumerate() {
+                let all: Vec<usize> = (0..hc.qa.seq()).collect();
+                let dense_sel = BesfResult { survivors: all, ..qr.sel.clone() };
+                let dense = hc.accumulate(qi, &dense_sel);
+                errs.push(rel_err(&qr.out, &dense) as f64);
+            }
+        }
+        let mean = errs.iter().sum::<f64>() / errs.len() as f64;
+        assert!(mean < 0.2, "mean rel err {mean}");
+    }
+
+    #[test]
+    fn plane_delta_and_exact_score_are_consistent() {
+        let qa = head(16, 24, 1, 0xE7);
+        let hc = HeadContext::new(&qa, LatsConfig::default());
+        for j in 0..16 {
+            let sum: i64 = (0..crate::quant::N_BITS).map(|r| hc.plane_delta(0, j, r)).sum();
+            assert_eq!(sum, hc.exact_score(0, j));
+        }
+    }
+}

@@ -22,9 +22,7 @@ use crate::workload::{AttnWorkload, QuantAttn, SynthConfig};
 const N_QUERIES: usize = 8;
 
 fn workload(seq: usize, dim: usize, queries: usize, seed: u64) -> QuantAttn {
-    let w = AttnWorkload::generate(SynthConfig::new(seq, dim, queries, seed));
-    let qs: Vec<Vec<f32>> = (0..queries).map(|i| w.query(i).to_vec()).collect();
-    QuantAttn::quantize(&qs, &w.k, &w.v, seq, dim)
+    QuantAttn::synth(seq, dim, queries, seed)
 }
 
 fn dense_cfg() -> SimConfig {
@@ -373,6 +371,12 @@ impl crate::energy::EnergyBreakdown {
 }
 
 /// All figures in order; `which = None` runs everything.
+///
+/// Figures are independent simulations, so they run **in parallel** on scoped
+/// threads (the engine layer already parallelizes within a simulation; this
+/// parallelizes across figures — the harness used to be fully serial).
+/// Output stays deterministic: tables print in declaration order, each with
+/// its own wall-clock time.
 pub fn run_all(which: Option<&str>, out_dir: Option<&std::path::Path>) -> anyhow::Result<Vec<Table>> {
     let all: Vec<(&str, fn() -> Table)> = vec![
         ("table1", table1),
@@ -390,21 +394,50 @@ pub fn run_all(which: Option<&str>, out_dir: Option<&std::path::Path>) -> anyhow
         ("ablation-radius", ablations::ablation_radius),
         ("ablation-lanes", ablations::ablation_lanes),
     ];
-    let mut out = vec![];
-    for (name, func) in all {
-        if let Some(w) = which {
-            if w != name && !(w == "ablations" && name.starts_with("ablation")) {
-                continue;
-            }
+    let selected: Vec<(&str, fn() -> Table)> = all
+        .into_iter()
+        .filter(|(name, _)| match which {
+            Some(w) => w == *name || (w == "ablations" && name.starts_with("ablation")),
+            None => true,
+        })
+        .collect();
+    anyhow::ensure!(!selected.is_empty(), "unknown figure `{which:?}`");
+
+    let t_all = std::time::Instant::now();
+    let mut results: Vec<(Table, f64)> = Vec::with_capacity(selected.len());
+    std::thread::scope(|s| {
+        let handles: Vec<_> = selected
+            .iter()
+            .map(|&(_, func)| {
+                s.spawn(move || {
+                    let t0 = std::time::Instant::now();
+                    let table = func();
+                    (table, t0.elapsed().as_secs_f64())
+                })
+            })
+            .collect();
+        for h in handles {
+            results.push(h.join().expect("figure thread"));
         }
-        let table = func();
+    });
+    let total = t_all.elapsed().as_secs_f64();
+    let serial_sum: f64 = results.iter().map(|(_, secs)| secs).sum();
+
+    let mut out = Vec::with_capacity(results.len());
+    for ((name, _), (table, secs)) in selected.iter().zip(results) {
+        println!("[figures] {name}: {secs:.2}s");
         println!("{}", table.render());
         if let Some(dir) = out_dir {
             crate::report::save(dir, &format!("fig{name}"), &table)?;
         }
         out.push(table);
     }
-    anyhow::ensure!(!out.is_empty(), "unknown figure `{which:?}`");
+    println!(
+        "[figures] {} figure(s) in {total:.2}s wall-clock ({serial_sum:.2}s of figure time — \
+         {:.1}x parallel speedup)",
+        out.len(),
+        serial_sum / total.max(1e-9)
+    );
     Ok(out)
 }
 

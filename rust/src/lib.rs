@@ -25,6 +25,7 @@ pub mod attention;
 pub mod algo;
 pub mod energy;
 pub mod workload;
+pub mod engine;
 pub mod sim;
 pub mod baselines;
 pub mod model;
@@ -32,6 +33,6 @@ pub mod runtime;
 pub mod coordinator;
 pub mod figures;
 pub mod report;
-// Modules below are added incrementally (see DESIGN.md §6):
-// algo, energy, workload, sim, baselines, model, runtime, coordinator,
-// figures, report.
+// Module inventory and layering: DESIGN.md §6. The `engine` module is the
+// shared multi-head BESF/LATS layer consumed by `sim`, `figures`,
+// `baselines` tests and the `coordinator` (DESIGN.md §3).

@@ -13,7 +13,7 @@ use bitstopper::config::{parse_toml, SimConfig};
 use bitstopper::figures;
 use bitstopper::runtime::{default_artifact_dir, Runtime};
 use bitstopper::sim::simulate_attention;
-use bitstopper::workload::{AttnWorkload, QuantAttn, SynthConfig};
+use bitstopper::workload::QuantAttn;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -49,9 +49,7 @@ fn main() {
             if let Some(a) = get("--alpha").and_then(|s| s.parse::<f64>().ok()) {
                 cfg.lats.alpha = a;
             }
-            let w = AttnWorkload::generate(SynthConfig::new(seq, dim, queries, cfg.seed));
-            let qs: Vec<Vec<f32>> = (0..queries).map(|i| w.query(i).to_vec()).collect();
-            let qa = QuantAttn::quantize(&qs, &w.k, &w.v, seq, dim);
+            let qa = QuantAttn::synth(seq, dim, queries, cfg.seed);
             let r = simulate_attention(&qa, &cfg);
             println!("workload  : {queries} queries x {seq} keys x {dim} dims (INT12)");
             println!("features  : {:?}  alpha={}", cfg.features, cfg.lats.alpha);
@@ -98,11 +96,7 @@ fn main() {
                 .validate()
                 .map_err(|e| anyhow::anyhow!(e))?;
             println!("hw config OK");
-            let qa = {
-                let w = AttnWorkload::generate(SynthConfig::new(128, 32, 2, 1));
-                let qs: Vec<Vec<f32>> = (0..2).map(|i| w.query(i).to_vec()).collect();
-                QuantAttn::quantize(&qs, &w.k, &w.v, 128, 32)
-            };
+            let qa = QuantAttn::synth(128, 32, 2, 1);
             let r = simulate_attention(&qa, &SimConfig::default());
             anyhow::ensure!(r.cycles > 0, "simulator produced zero cycles");
             println!("simulator OK ({} cycles)", r.cycles);

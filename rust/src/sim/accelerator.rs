@@ -1,11 +1,16 @@
 //! The BitStopper accelerator top level (paper Fig. 9 (a)).
 //!
 //! For each query:
-//! ❶ the Bit Margin Generator produces the 12 margin pairs (functional model:
-//!    [`BitMargins`]); ❷ the 32 PE lanes run bit-serial QK with early
-//!    termination (decisions from the functional BESF model, timing from the
-//!    chain engine with sync or BAP scheduling); ❸/❹ LATS thresholds gate
-//!    survival; the surviving scores then drive the V-PU.
+//! ❶ the Bit Margin Generator produces the 12 margin pairs; ❷ the 32 PE lanes
+//! run bit-serial QK with early termination; ❸/❹ LATS thresholds gate
+//! survival; the surviving scores then drive the V-PU.
+//!
+//! Since the AttentionEngine refactor (DESIGN.md §3) this module is a pure
+//! **timing model**: all functional decisions — margin generation, BESF
+//! selection, static-threshold calibration, exact-score reconstruction —
+//! come from [`crate::engine::HeadContext`]; this file only schedules
+//! fetches/compute on the lane engine and accounts cycles, traffic and
+//! energy for the decisions the engine made.
 //!
 //! Queries stream through a two-stage pipeline: query *i*'s V-stage overlaps
 //! query *i+1*'s QK-stage (both contend for the same DRAM object).
@@ -17,21 +22,18 @@
 //! * `Features::BESF_BAP` — + asynchronous plane scheduling.
 //! * `Features::ALL`      — + LATS adaptive thresholds (full BitStopper).
 
-use crate::algo::besf::{besf_select, besf_select_with, BesfResult, SURVIVED};
+use crate::algo::besf::{BesfResult, SURVIVED};
 use crate::algo::complexity::Complexity;
-use crate::algo::lats::Lats;
 use crate::config::SimConfig;
-#[cfg(test)]
-use crate::config::Features;
 use crate::energy::{EnergyBreakdown, EnergyModel};
-use crate::quant::bitplane::{BitPlanes, N_BITS};
-use crate::quant::margin::BitMargins;
+use crate::engine::{HeadContext, SelectionPolicy};
+use crate::quant::bitplane::N_BITS;
 use crate::sim::dram::{Dram, DramConfig, DramStats};
 use crate::sim::qkpu::{assign_round_robin, simulate_lanes, ChainTask, FetchSpec};
 use crate::sim::scoreboard::{Scoreboard, ScoreboardStats};
 use crate::sim::vpu::simulate_vpu;
 use crate::sim::Cycle;
-use crate::workload::QuantAttn;
+use crate::workload::{MultiHeadAttn, QuantAttn};
 
 /// Everything a paper figure needs from one simulated workload.
 #[derive(Debug, Clone)]
@@ -79,8 +81,10 @@ pub fn simulate_attention(qa: &QuantAttn, cfg: &SimConfig) -> SimReport {
     let dim = qa.dim();
     let hw = &cfg.hw;
     let mut dram = Dram::new(DramConfig::hbm2_from(hw));
-    let planes = BitPlanes::decompose(&qa.k);
-    let plane_bytes = planes.plane_bytes().max(1);
+    // ❶–❹ functional pipeline: the engine owns decomposition, margins,
+    // thresholds and selection; this function owns only timing.
+    let head = HeadContext::new(qa, cfg.lats);
+    let plane_bytes = head.planes.plane_bytes().max(1);
     // Address map: K planes (plane-major) first, V rows after.
     let k_region = N_BITS as u64 * seq as u64 * plane_bytes;
     let v_base = k_region;
@@ -96,30 +100,13 @@ pub fn simulate_attention(qa: &QuantAttn, cfg: &SimConfig) -> SimReport {
     // latency that caps utilization at ~48 % in Fig. 13 (b).
     let outstanding = if !cfg.features.besf { 16 } else { hw.scoreboard_entries };
 
-    let lats = Lats::new(cfg.lats, dim, qa.qp.scale, qa.kp.scale);
-    // Static threshold for the BESF-without-LATS ablation: the best single
-    // threshold a non-adaptive design can deploy — calibrated as the mean
-    // final threshold over a few leading queries, with a 2× safety band
-    // (static designs must be conservative or they destroy accuracy).
-    let static_eta = if cfg.features.besf && !cfg.features.lats {
-        // A static design must not lose vital tokens on ANY query, so the
-        // single threshold is set from the weakest calibration query (minus
-        // the band) — conservative on every other query, which is exactly
-        // why the paper's Fig. 13 (b) shows LATS adding speedup on top.
-        let n_cal = qa.queries.len().min(4).max(1);
-        let eta = qa
-            .queries
-            .iter()
-            .take(n_cal)
-            .map(|q| {
-                let exact_max = (0..seq).map(|j| qa.k.dot_row(j, q)).max().unwrap_or(0);
-                exact_max - lats.band()
-            })
-            .min()
-            .unwrap_or(0);
-        Some(eta)
+    // Per-query selection policy for this feature stack.
+    let policy = if !cfg.features.besf {
+        SelectionPolicy::Dense
+    } else if cfg.features.lats {
+        SelectionPolicy::Lats
     } else {
-        None
+        SelectionPolicy::Static(head.static_threshold())
     };
 
     let mut cx = Complexity::default();
@@ -132,23 +119,12 @@ pub fn simulate_attention(qa: &QuantAttn, cfg: &SimConfig) -> SimReport {
     let mut planes_fetched = 0u64;
     let mut scoreboard_rounds = 0u64;
 
-    for q in &qa.queries {
-        // ❶ Bit Margin Generator (12 LUT entries from pos/neg sums of Q).
-        let margins = BitMargins::generate(q);
-
-        // ❷–❹ selection decisions (functional; identical for sync/async).
-        let sel: BesfResult = if cfg.features.besf {
-            match static_eta {
-                Some(eta) => besf_select_with(q, &planes, &margins, |_r, _ml| eta),
-                None => besf_select(q, &planes, &margins, &lats),
-            }
-        } else {
-            // Dense: everything survives; complexity counted below.
-            let mut r = besf_select_with(q, &planes, &margins, |_r, _ml| i64::MIN);
-            debug_assert_eq!(r.survivors.len(), seq);
-            r.complexity = Complexity::default(); // replaced by dense accounting
-            r
-        };
+    for qi in 0..qa.queries.len() {
+        // ❶–❹ selection decisions (functional; identical for sync/async).
+        let sel: BesfResult = head.select(qi, policy);
+        if let SelectionPolicy::Dense = policy {
+            debug_assert_eq!(sel.survivors.len(), seq);
+        }
 
         // --- QK-stage timing ---
         let rounds_of = |j: usize| -> usize {
@@ -239,7 +215,8 @@ pub fn simulate_attention(qa: &QuantAttn, cfg: &SimConfig) -> SimReport {
         // Exact value replay (insert → accumulate per plane → evict, checking
         // that reused partials reconstruct the exact score) runs in debug
         // builds; release builds take the equivalent analytic counts — the
-        // replay would double the whole simulation's compute (§Perf).
+        // replay would double the whole simulation's compute (§Perf). The
+        // bit-plane math comes from the engine (plane_delta/exact_score).
         if cfg.features.besf {
             if cfg!(debug_assertions) {
                 let window = hw.scoreboard_entries;
@@ -248,16 +225,20 @@ pub fn simulate_attention(qa: &QuantAttn, cfg: &SimConfig) -> SimReport {
                     let end = (idx + window).min(seq);
                     for j in idx..end {
                         let rounds = rounds_of(j);
-                        let mut partial = planes.weighted_plane_dot(0, j, q);
+                        let mut partial = head.plane_delta(qi, j, 0);
                         sb.insert(j, partial).expect("scheduler bounds occupancy");
                         for r in 1..rounds {
-                            let delta = planes.weighted_plane_dot(r, j, q);
+                            let delta = head.plane_delta(qi, j, r);
                             partial = sb.accumulate(j, delta).expect("entry present");
                         }
                         scoreboard_rounds += rounds as u64;
                         let drained = sb.evict(j).expect("entry present");
                         if sel.death_round[j] == SURVIVED {
-                            debug_assert_eq!(drained, qa.k.dot_row(j, q), "reused partials exact");
+                            debug_assert_eq!(
+                                drained,
+                                head.exact_score(qi, j),
+                                "reused partials exact"
+                            );
                         }
                         let _ = partial;
                     }
@@ -331,18 +312,55 @@ pub fn simulate_attention(qa: &QuantAttn, cfg: &SimConfig) -> SimReport {
     }
 }
 
+/// Simulate a multi-head workload on one accelerator: heads are processed
+/// back-to-back (the device holds one head's K planes at a time), so cycles
+/// add across heads while work/traffic counters aggregate. A single-head
+/// [`MultiHeadAttn`] reproduces [`simulate_attention`] cycle-for-cycle
+/// (tested in `tests/engine_e2e.rs`).
+pub fn simulate_multi_head(mha: &MultiHeadAttn, cfg: &SimConfig) -> SimReport {
+    assert!(!mha.heads.is_empty());
+    let per_head: Vec<SimReport> = mha.heads.iter().map(|qa| simulate_attention(qa, cfg)).collect();
+
+    let mut agg = per_head[0].clone();
+    for r in &per_head[1..] {
+        agg.queries += r.queries;
+        agg.cycles += r.cycles;
+        agg.qk_busy += r.qk_busy;
+        agg.qk_span += r.qk_span;
+        agg.complexity.add(&r.complexity);
+        agg.energy.add(&r.energy);
+        agg.dram.reads += r.dram.reads;
+        agg.dram.bytes += r.dram.bytes;
+        agg.dram.row_hits += r.dram.row_hits;
+        agg.dram.row_misses += r.dram.row_misses;
+        agg.dram.busy_cycles += r.dram.busy_cycles;
+        agg.scoreboard.inserts += r.scoreboard.inserts;
+        agg.scoreboard.hits += r.scoreboard.hits;
+        agg.scoreboard.misses += r.scoreboard.misses;
+        agg.scoreboard.evictions += r.scoreboard.evictions;
+        agg.scoreboard.peak_occupancy =
+            agg.scoreboard.peak_occupancy.max(r.scoreboard.peak_occupancy);
+    }
+    // Rate metrics re-derived over the aggregate span / population.
+    agg.utilization = if agg.qk_span > 0 {
+        agg.qk_busy as f64 / (cfg.hw.pe_lanes as f64 * agg.qk_span as f64)
+    } else {
+        0.0
+    };
+    let n = per_head.len() as f64;
+    agg.keep_rate = per_head.iter().map(|r| r.keep_rate).sum::<f64>() / n;
+    agg.k_traffic_fraction = per_head.iter().map(|r| r.k_traffic_fraction).sum::<f64>() / n;
+    agg
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::SimConfig;
-#[cfg(test)]
-use crate::config::Features;
-    use crate::workload::{AttnWorkload, QuantAttn, SynthConfig};
+    use crate::config::{Features, SimConfig};
+    use crate::workload::QuantAttn;
 
     fn workload(seq: usize, dim: usize, queries: usize, seed: u64) -> QuantAttn {
-        let w = AttnWorkload::generate(SynthConfig::new(seq, dim, queries, seed));
-        let qs: Vec<Vec<f32>> = (0..queries).map(|i| w.query(i).to_vec()).collect();
-        QuantAttn::quantize(&qs, &w.k, &w.v, seq, dim)
+        QuantAttn::synth(seq, dim, queries, seed)
     }
 
     fn cfg_with(features: Features) -> SimConfig {
@@ -434,6 +452,21 @@ use crate::config::Features;
             "long {} vs short {}",
             l_f.speedup_over(&l_d),
             s_f.speedup_over(&s_d)
+        );
+    }
+
+    #[test]
+    fn multi_head_aggregates_across_heads() {
+        let mha = crate::workload::MultiHeadAttn::synth(3, 128, 32, 2, 8);
+        let cfg = cfg_with(Features::ALL);
+        let agg = simulate_multi_head(&mha, &cfg);
+        let per: Vec<SimReport> =
+            mha.heads.iter().map(|h| simulate_attention(h, &cfg)).collect();
+        assert_eq!(agg.queries, 3 * 2);
+        assert_eq!(agg.cycles, per.iter().map(|r| r.cycles).sum::<u64>());
+        assert_eq!(
+            agg.complexity.k_bits,
+            per.iter().map(|r| r.complexity.k_bits).sum::<u64>()
         );
     }
 }

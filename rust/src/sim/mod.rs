@@ -23,7 +23,7 @@ pub mod qkpu;
 pub mod vpu;
 pub mod accelerator;
 
-pub use accelerator::{simulate_attention, SimReport};
+pub use accelerator::{simulate_attention, simulate_multi_head, SimReport};
 pub use dram::{Dram, DramConfig, DramStats};
 
 /// Cycle type: core clock cycles at 1 GHz.

@@ -108,11 +108,18 @@ impl Scoreboard {
 }
 
 /// Scheduler contract violation: attempted to track more tokens than entries.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
-#[error("scoreboard full inserting token {token}")]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ScoreboardFull {
     pub token: usize,
 }
+
+impl std::fmt::Display for ScoreboardFull {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "scoreboard full inserting token {}", self.token)
+    }
+}
+
+impl std::error::Error for ScoreboardFull {}
 
 #[cfg(test)]
 mod tests {

@@ -53,12 +53,84 @@ impl QuantAttn {
         }
     }
 
+    /// Synthesize a calibrated workload and quantize it — the shared helper
+    /// behind figures, ablations, benches and tests (previously copy-pasted
+    /// into each of them).
+    pub fn synth(seq: usize, dim: usize, queries: usize, seed: u64) -> Self {
+        let w = AttnWorkload::generate(SynthConfig::new(seq, dim, queries, seed));
+        let qs: Vec<Vec<f32>> = (0..queries).map(|i| w.query(i).to_vec()).collect();
+        Self::quantize(&qs, &w.k, &w.v, seq, dim)
+    }
+
     pub fn seq(&self) -> usize {
         self.k.rows
     }
 
     pub fn dim(&self) -> usize {
         self.k.cols
+    }
+}
+
+/// Decorrelated per-head seed (head 0 keeps the base seed) — shared by
+/// [`MultiHeadAttn::synth`] and the serving demos/tests that need the float
+/// tensors alongside the quantized heads.
+pub fn head_seed(seed: u64, head: usize) -> u64 {
+    seed ^ (head as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// A multi-head quantized attention problem: one [`QuantAttn`] per head.
+/// Heads share only their shape — K/V contents and quantization scales are
+/// per-head, exactly as in a real decoder layer. The engine layer
+/// ([`crate::engine::AttentionEngine`]) runs heads and queries in parallel.
+#[derive(Debug, Clone)]
+pub struct MultiHeadAttn {
+    pub heads: Vec<QuantAttn>,
+}
+
+impl MultiHeadAttn {
+    /// Build from per-head problems; all heads must share (seq, dim, queries).
+    pub fn from_heads(heads: Vec<QuantAttn>) -> Self {
+        assert!(!heads.is_empty(), "at least one head");
+        let shape = (heads[0].seq(), heads[0].dim(), heads[0].queries.len());
+        for h in &heads {
+            assert_eq!(
+                (h.seq(), h.dim(), h.queries.len()),
+                shape,
+                "heads must share (seq, dim, queries)"
+            );
+        }
+        Self { heads }
+    }
+
+    /// Wrap a legacy single-head problem.
+    pub fn from_single(qa: QuantAttn) -> Self {
+        Self { heads: vec![qa] }
+    }
+
+    /// Synthesize `n_heads` decorrelated heads (head 0 is bit-identical to
+    /// `QuantAttn::synth(seq, dim, queries, seed)`).
+    pub fn synth(n_heads: usize, seq: usize, dim: usize, queries: usize, seed: u64) -> Self {
+        Self::from_heads(
+            (0..n_heads)
+                .map(|h| QuantAttn::synth(seq, dim, queries, head_seed(seed, h)))
+                .collect(),
+        )
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.heads.len()
+    }
+
+    pub fn seq(&self) -> usize {
+        self.heads[0].seq()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.heads[0].dim()
+    }
+
+    pub fn queries_per_head(&self) -> usize {
+        self.heads[0].queries.len()
     }
 }
 
@@ -80,5 +152,28 @@ mod tests {
         // Shared query scale: ±0.5 both map to ±2047.
         assert_eq!(qa.queries[0][0], 2047);
         assert_eq!(qa.queries[1][0], -2047);
+    }
+
+    #[test]
+    fn multi_head_shapes_and_head0_determinism() {
+        let mha = MultiHeadAttn::synth(4, 32, 16, 3, 99);
+        assert_eq!(mha.n_heads(), 4);
+        assert_eq!(mha.seq(), 32);
+        assert_eq!(mha.dim(), 16);
+        assert_eq!(mha.queries_per_head(), 3);
+        // Head 0 must reproduce the single-head synth exactly.
+        let single = QuantAttn::synth(32, 16, 3, 99);
+        assert_eq!(mha.heads[0].queries, single.queries);
+        assert_eq!(mha.heads[0].k, single.k);
+        // Other heads must be decorrelated.
+        assert_ne!(mha.heads[1].k, mha.heads[0].k);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_head_shapes_rejected() {
+        let a = QuantAttn::synth(16, 8, 2, 1);
+        let b = QuantAttn::synth(32, 8, 2, 1);
+        let _ = MultiHeadAttn::from_heads(vec![a, b]);
     }
 }

@@ -1,0 +1,141 @@
+//! Acceptance tests of the AttentionEngine refactor (DESIGN.md §3):
+//!
+//! 1. property: the coordinator's `BesfExecutor` output matches dense f32
+//!    attention restricted to the kept tokens;
+//! 2. a single-head `MultiHeadAttn` reproduces the legacy `QuantAttn`
+//!    simulator report cycle-for-cycle;
+//! 3. end-to-end: `BesfExecutor` driven through `Batcher`/`Router` with
+//!    multi-head requests, with `kept` equal to `besf_select` survivors.
+
+use bitstopper::attention::{attention_f32, rel_err};
+use bitstopper::config::{Features, LatsConfig, SimConfig};
+use bitstopper::coordinator::{AttnExecutor, AttnRequest, BatchConfig, BesfExecutor, Engine};
+use bitstopper::engine::{HeadContext, SelectionPolicy};
+use bitstopper::runtime::ArtifactKind;
+use bitstopper::sim::{simulate_attention, simulate_multi_head};
+use bitstopper::util::SplitMix64;
+use bitstopper::workload::{head_seed, AttnWorkload, MultiHeadAttn, QuantAttn, SynthConfig};
+use std::time::Duration;
+
+fn gaussian_request(seq: usize, dim: usize, alpha: f64, seed: u64) -> AttnRequest {
+    let mut rng = SplitMix64::new(seed);
+    AttnRequest {
+        id: 0,
+        kind: ArtifactKind::BitStopper,
+        alpha,
+        seq,
+        dim,
+        q: (0..dim).map(|_| rng.normal() as f32).collect(),
+        k: (0..seq * dim).map(|_| rng.normal() as f32).collect(),
+        v: (0..seq * dim).map(|_| rng.normal() as f32).collect(),
+        valid: vec![1.0; seq],
+    }
+}
+
+/// Reproduce the executor's quantization + selection out-of-band.
+fn reference_selection(req: &AttnRequest) -> Vec<usize> {
+    let qa = QuantAttn::quantize(&[req.q.clone()], &req.k, &req.v, req.seq, req.dim);
+    let head = HeadContext::new(&qa, LatsConfig { alpha: req.alpha, radius: 5.0 });
+    head.select(0, SelectionPolicy::Lats).survivors
+}
+
+#[test]
+fn prop_besf_executor_matches_dense_f32_on_kept_tokens() {
+    // Property over seeds: on the tokens BESF keeps, the sparse INT12 output
+    // must track a dense f32 attention computed over exactly those tokens.
+    let (seq, dim) = (96usize, 32usize);
+    for case in 0..12u64 {
+        let req = gaussian_request(seq, dim, 0.6, 0x5EED + case);
+        let mut exec = BesfExecutor::default();
+        let (out, kept) = exec.execute(&req).expect("execute");
+
+        let survivors = reference_selection(&req);
+        assert_eq!(kept, survivors.len(), "case {case}: kept != besf survivors");
+        assert!(kept >= 1, "case {case}: argmax must survive");
+
+        // Dense f32 attention restricted to the kept tokens.
+        let mut kg = Vec::with_capacity(kept * dim);
+        let mut vg = Vec::with_capacity(kept * dim);
+        for &j in &survivors {
+            kg.extend_from_slice(&req.k[j * dim..(j + 1) * dim]);
+            vg.extend_from_slice(&req.v[j * dim..(j + 1) * dim]);
+        }
+        let want = attention_f32(&req.q, &kg, &vg, kept, dim, dim);
+        let err = rel_err(&out, &want);
+        assert!(err < 0.05, "case {case}: INT12 sparse vs f32 sparse rel err {err}");
+    }
+}
+
+#[test]
+fn single_head_multihead_reproduces_legacy_sim_cycle_for_cycle() {
+    for features in [Features::ALL, Features::BESF_BAP, Features::BESF_ONLY, Features::DENSE] {
+        let mut cfg = SimConfig::default();
+        cfg.features = features;
+        let qa = QuantAttn::synth(192, 64, 3, 0xC1C);
+        let mha = MultiHeadAttn::from_single(qa.clone());
+        let legacy = simulate_attention(&qa, &cfg);
+        let multi = simulate_multi_head(&mha, &cfg);
+        assert_eq!(legacy.cycles, multi.cycles, "{features:?}: cycles");
+        assert_eq!(legacy.qk_busy, multi.qk_busy, "{features:?}: qk_busy");
+        assert_eq!(legacy.qk_span, multi.qk_span, "{features:?}: qk_span");
+        assert_eq!(legacy.complexity, multi.complexity, "{features:?}: complexity");
+        assert_eq!(legacy.queries, multi.queries);
+        assert!((legacy.keep_rate - multi.keep_rate).abs() < 1e-15);
+        assert!((legacy.utilization - multi.utilization).abs() < 1e-15);
+        assert!((legacy.energy.total_pj() - multi.energy.total_pj()).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn coordinator_e2e_besf_through_batcher_and_router() {
+    // Multi-head requests (one request per head x query of a 3-head
+    // workload) through the full coordinator: shape-grouped by the Batcher,
+    // dispatched by the Router, executed sparsely by BesfExecutor. Every
+    // response's `kept` must equal the besf_select survivor count for that
+    // exact (head, query) problem.
+    let (n_heads, queries, seq, dim, alpha) = (3usize, 4usize, 128usize, 32usize, 0.6f64);
+    let mut requests: Vec<AttnRequest> = Vec::new();
+    for h in 0..n_heads {
+        let w = AttnWorkload::generate(SynthConfig::new(seq, dim, queries, head_seed(0xA11, h)));
+        for qi in 0..queries {
+            requests.push(AttnRequest {
+                id: 0,
+                kind: ArtifactKind::BitStopper,
+                alpha,
+                seq,
+                dim,
+                q: w.query(qi).to_vec(),
+                k: w.k.clone(),
+                v: w.v.clone(),
+                valid: vec![1.0; seq],
+            });
+        }
+    }
+    let expected_kept: Vec<usize> =
+        requests.iter().map(|r| reference_selection(r).len()).collect();
+
+    let engine = Engine::start(
+        2,
+        BatchConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+        BesfExecutor::default,
+    );
+    let rxs: Vec<_> = requests.into_iter().map(|r| engine.submit(r)).collect();
+    let mut pruned_any = false;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).expect("response");
+        assert_eq!(resp.out.len(), dim);
+        assert!(resp.out.iter().all(|x| x.is_finite()));
+        assert_eq!(
+            resp.kept, expected_kept[i],
+            "request {i}: kept must equal besf_select survivors"
+        );
+        pruned_any |= resp.kept < seq;
+    }
+    assert!(pruned_any, "realistic workload must actually prune");
+
+    let m = engine.metrics();
+    assert_eq!(m.completed, (n_heads * queries) as u64);
+    assert_eq!(m.errors, 0);
+    assert!(m.batches >= 1);
+    engine.shutdown();
+}

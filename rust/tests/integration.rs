@@ -9,12 +9,10 @@ use bitstopper::config::{Features, LatsConfig, SimConfig};
 use bitstopper::config::ModelShape;
 use bitstopper::quant::{margin::BitMargins, BitPlanes};
 use bitstopper::sim::simulate_attention;
-use bitstopper::workload::{AttnWorkload, QuantAttn, SynthConfig};
+use bitstopper::workload::QuantAttn;
 
 fn workload(seq: usize, dim: usize, queries: usize, seed: u64) -> QuantAttn {
-    let w = AttnWorkload::generate(SynthConfig::new(seq, dim, queries, seed));
-    let qs: Vec<Vec<f32>> = (0..queries).map(|i| w.query(i).to_vec()).collect();
-    QuantAttn::quantize(&qs, &w.k, &w.v, seq, dim)
+    QuantAttn::synth(seq, dim, queries, seed)
 }
 
 /// The end-to-end ordering the paper's headline claims rest on:

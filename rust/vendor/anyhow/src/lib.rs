@@ -1,0 +1,220 @@
+//! Minimal offline stand-in for the `anyhow` crate (the build image has no
+//! crates.io access). Implements exactly the subset this workspace uses:
+//! [`Error`], [`Result`], [`anyhow!`], [`bail!`], [`ensure!`] and the
+//! [`Context`] extension trait for `Result` and `Option`.
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error` — that is what makes the blanket
+//! `impl From<E: std::error::Error> for Error` coherent, which in turn makes
+//! `?` work on any std error inside an `anyhow::Result` function.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the same default-parameter shape as the
+/// real crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-backed error carrying a cause chain (outermost message first in
+/// [`Display`], causes listed in order).
+pub struct Error {
+    msg: String,
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from anything printable.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Self { msg: m.to_string(), chain: Vec::new() }
+    }
+
+    /// Wrap with an outer context message (the previous message becomes the
+    /// first cause).
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        let mut chain = Vec::with_capacity(self.chain.len() + 1);
+        chain.push(self.msg);
+        chain.extend(self.chain);
+        Self { msg: c.to_string(), chain }
+    }
+
+    /// The cause chain, outermost first (does not include the top message).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        // `{:#}` renders the full chain inline, as the real crate does.
+        if f.alternate() {
+            for c in &self.chain {
+                write!(f, ": {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if !self.chain.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in &self.chain {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = Vec::new();
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Self { msg: e.to_string(), chain }
+    }
+}
+
+/// Context-attaching extension for `Result` and `Option`.
+pub trait Context<T> {
+    /// Attach a context message, converting the error to [`Error`].
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T>;
+    /// Attach a lazily-built context message.
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(c))
+    }
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a message literal, a printable expression, or a
+/// format string with arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// `return Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Early-return with an error when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!("condition failed: `{}`", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.to_string(), "gone");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e: Error = Error::from(io_err()).context("opening file").context("loading model");
+        assert_eq!(e.to_string(), "loading model");
+        let full = format!("{e:#}");
+        assert_eq!(full, "loading model: opening file: gone");
+    }
+
+    #[test]
+    fn context_on_option() {
+        let x: Option<u32> = None;
+        let e = x.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        let y: Option<u32> = Some(3);
+        assert_eq!(y.with_context(|| "unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_cover_all_arms() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let msg = String::from("dynamic");
+        let b = anyhow!(msg);
+        assert_eq!(b.to_string(), "dynamic");
+        let c = anyhow!("x = {}", 42);
+        assert_eq!(c.to_string(), "x = 42");
+
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {}", flag);
+            if !flag {
+                bail!("unreachable");
+            }
+            Ok(1)
+        }
+        assert!(f(true).is_ok());
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = Error::from(io_err()).context("outer");
+        let d = format!("{e:?}");
+        assert!(d.contains("outer"));
+        assert!(d.contains("Caused by"));
+        assert!(d.contains("gone"));
+    }
+}
