@@ -1,14 +1,20 @@
 //! Hot-path microbenchmarks (custom harness): the L3 kernels whose
-//! performance bounds the whole-figure suite — bit-plane dot products, BESF
-//! selection, the DRAM model and the lane engine. Used by the §Perf pass in
-//! EXPERIMENTS.md.
+//! performance bounds the whole-figure suite — bit-plane dot products (scalar
+//! reference vs the bit-sliced AND+popcount kernel), BESF selection (one-shot
+//! vs scratch-reuse), the DRAM model, the lane engine and the multi-head
+//! engine. Used by the §Perf pass in EXPERIMENTS.md.
 //!
 //! Run: `cargo bench --bench hotpath`
+//!
+//! Besides the human-readable table, results are persisted to
+//! `BENCH_hotpath.json` in the working directory (one row per bench plus
+//! derived speedup ratios) so the perf trajectory is machine-trackable across
+//! PRs.
 
-use bitstopper::algo::{besf_select, Lats};
+use bitstopper::algo::{besf_select, BesfScratch, Lats};
 use bitstopper::config::LatsConfig;
 use bitstopper::engine::{default_threads, AttentionEngine, SelectionPolicy};
-use bitstopper::quant::{margin::BitMargins, BitPlanes};
+use bitstopper::quant::{margin::BitMargins, BitPlanes, QueryPlanes};
 use bitstopper::sim::dram::{Dram, DramConfig};
 use bitstopper::sim::qkpu::{assign_round_robin, simulate_lanes, ChainTask, FetchSpec};
 use bitstopper::util::stats::Summary;
@@ -16,7 +22,12 @@ use bitstopper::util::SplitMix64;
 use bitstopper::workload::{MultiHeadAttn, QuantAttn};
 use std::time::Instant;
 
-fn time_it<F: FnMut() -> u64>(name: &str, iters: usize, mut f: F) {
+fn time_it<F: FnMut() -> u64>(
+    rows: &mut Vec<(String, Summary)>,
+    name: &str,
+    iters: usize,
+    mut f: F,
+) {
     let mut acc = 0u64;
     acc = acc.wrapping_add(f()); // warmup
     let mut times = Vec::with_capacity(iters);
@@ -28,26 +39,79 @@ fn time_it<F: FnMut() -> u64>(name: &str, iters: usize, mut f: F) {
     std::hint::black_box(acc);
     let s = Summary::of(&times);
     println!(
-        "bench {name:<28} {:>9.3} ms/iter (p50 {:>9.3}, p95 {:>9.3}, n={})",
+        "bench {name:<32} {:>9.3} ms/iter (p50 {:>9.3}, p95 {:>9.3}, n={})",
         s.mean, s.p50, s.p95, s.n
     );
+    rows.push((name.to_string(), s));
+}
+
+fn mean_of(rows: &[(String, Summary)], name: &str) -> f64 {
+    rows.iter().find(|(n, _)| n == name).map(|(_, s)| s.mean).unwrap_or(f64::NAN)
+}
+
+/// Serialize the rows + derived ratios as JSON (no serde in the offline
+/// build; every value we emit is a finite f64 or usize, so hand-formatting
+/// is safe).
+fn write_json(path: &str, rows: &[(String, Summary)], derived: &[(String, f64)]) {
+    let mut out = String::from("{\n  \"bench\": \"hotpath\",\n  \"unit\": \"ms/iter\",\n  \"rows\": [\n");
+    for (i, (name, s)) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"mean\": {:.6}, \"p50\": {:.6}, \"p95\": {:.6}, \"min\": {:.6}, \"max\": {:.6}, \"n\": {}}}{}\n",
+            name,
+            s.mean,
+            s.p50,
+            s.p95,
+            s.min,
+            s.max,
+            s.n,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n  \"derived\": {\n");
+    for (i, (name, v)) in derived.iter().enumerate() {
+        out.push_str(&format!(
+            "    \"{}\": {:.4}{}\n",
+            name,
+            v,
+            if i + 1 < derived.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  }\n}\n");
+    match std::fs::write(path, out) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
 }
 
 fn main() {
     println!("== BitStopper hot-path microbenches ==\n");
+    let mut rows: Vec<(String, Summary)> = Vec::new();
     let (seq, dim) = (2048usize, 128usize);
     let qa = QuantAttn::synth(seq, dim, 8, 7);
     let planes = BitPlanes::decompose(&qa.k);
     let lats = Lats::new(LatsConfig::default(), dim, qa.qp.scale, qa.kp.scale);
 
     // L3 hot path #1: bit-plane decomposition (build-time per context).
-    time_it("bitplane_decompose_2kx128", 10, || {
+    time_it(&mut rows, "bitplane_decompose_2kx128", 10, || {
         let p = BitPlanes::decompose(&qa.k);
         p.keys as u64
     });
 
-    // L3 hot path #2: one plane pass over all keys (the BRAT inner loop).
-    time_it("plane_dot_round0_all_keys", 20, || {
+    // Query decomposition: the once-per-query cost the sliced kernel adds
+    // (the row decomposes all 8 queries per iteration — divide by 8 for the
+    // per-query number).
+    time_it(&mut rows, "query_planes_decompose_8x128d", 20, || {
+        let mut acc = 0u64;
+        for q in &qa.queries {
+            let qp = QueryPlanes::decompose(q);
+            acc = acc.wrapping_add(qp.dim as u64);
+        }
+        acc
+    });
+
+    // L3 hot path #2a: one plane pass over all keys — scalar reference
+    // (trailing-zeros walk + per-element query gathers).
+    time_it(&mut rows, "plane_dot_round0_all_keys", 20, || {
         let q = &qa.queries[0];
         let mut acc = 0i64;
         for j in 0..seq {
@@ -56,15 +120,36 @@ fn main() {
         acc as u64
     });
 
-    // L3 hot path #3: full BESF selection for one query.
-    time_it("besf_select_2kx128", 10, || {
+    // L3 hot path #2b: the same pass through the bit-sliced AND+popcount
+    // kernel (what BESF/the engine actually run). Acceptance: ≥3× vs #2a.
+    let qp0 = QueryPlanes::decompose(&qa.queries[0]);
+    time_it(&mut rows, "plane_dot_sliced_round0_all_keys", 20, || {
+        let mut acc = 0i64;
+        for j in 0..seq {
+            acc += planes.plane_dot_sliced(0, j, &qp0);
+        }
+        acc as u64
+    });
+
+    // L3 hot path #3a: full BESF selection for one query, one-shot API
+    // (allocates its scratch per call).
+    time_it(&mut rows, "besf_select_2kx128", 10, || {
         let margins = BitMargins::generate(&qa.queries[0]);
         let r = besf_select(&qa.queries[0], &planes, &margins, &lats);
         r.survivors.len() as u64
     });
 
+    // L3 hot path #3b: the steady-state serving shape — reused scratch,
+    // zero per-query heap allocation in the select loop.
+    let mut scratch = BesfScratch::new();
+    time_it(&mut rows, "besf_select_scratch_2kx128", 10, || {
+        let margins = BitMargins::generate(&qa.queries[0]);
+        let r = scratch.select(&qa.queries[0], &planes, &margins, &lats);
+        r.survivors.len() as u64
+    });
+
     // L3 hot path #4: DRAM model throughput (100k requests).
-    time_it("dram_model_100k_reads", 10, || {
+    time_it(&mut rows, "dram_model_100k_reads", 10, || {
         let mut d = Dram::new(DramConfig::default());
         let mut rng = SplitMix64::new(3);
         let mut t = 0;
@@ -83,30 +168,57 @@ fn main() {
         })
         .collect();
     let lanes = assign_round_robin(chains, 32);
-    time_it("lane_engine_2k_chains", 10, || {
+    time_it(&mut rows, "lane_engine_2k_chains", 10, || {
         let mut d = Dram::new(DramConfig::default());
         simulate_lanes(&lanes, &mut d, 0, 64).finish
     });
 
     // End-to-end: one full accelerator simulation.
-    time_it("simulate_attention_2kx128x8q", 5, || {
+    time_it(&mut rows, "simulate_attention_2kx128x8q", 5, || {
         let cfg = bitstopper::config::SimConfig::default();
         bitstopper::sim::simulate_attention(&qa, &cfg).cycles
     });
 
     // Multi-head engine: head/query-parallel BESF + sparse V across all
     // cores vs one thread (the AttentionEngine throughput-scaling claim).
+    // Workers reuse one scratch each, so this is the allocation-free path.
     let mha = MultiHeadAttn::synth(8, 1024, 64, 4, 11);
     let eng = AttentionEngine::new(&mha, LatsConfig::default());
     let survivors_of = |r: &Vec<Vec<bitstopper::engine::QueryResult>>| -> u64 {
         r.iter().flatten().map(|q| q.sel.survivors.len() as u64).sum()
     };
-    time_it("engine_8hx4q_1thread", 5, || {
+    time_it(&mut rows, "engine_8hx4q_1thread", 5, || {
         survivors_of(&eng.run_all_threads(SelectionPolicy::Lats, 1))
     });
     let cores = default_threads();
-    time_it("engine_8hx4q_all_cores", 5, || {
+    time_it(&mut rows, "engine_8hx4q_all_cores", 5, || {
         survivors_of(&eng.run_all_threads(SelectionPolicy::Lats, cores))
     });
     println!("  (all-cores ran on {cores} threads)");
+
+    // Dense fast path vs the 12-round keep-all it replaced.
+    time_it(&mut rows, "engine_dense_8hx4q_all_cores", 5, || {
+        survivors_of(&eng.run_all_threads(SelectionPolicy::Dense, cores))
+    });
+
+    let derived = vec![
+        (
+            "sliced_speedup_round0".to_string(),
+            mean_of(&rows, "plane_dot_round0_all_keys")
+                / mean_of(&rows, "plane_dot_sliced_round0_all_keys"),
+        ),
+        (
+            "scratch_speedup_besf_select".to_string(),
+            mean_of(&rows, "besf_select_2kx128") / mean_of(&rows, "besf_select_scratch_2kx128"),
+        ),
+        (
+            "engine_thread_scaling".to_string(),
+            mean_of(&rows, "engine_8hx4q_1thread") / mean_of(&rows, "engine_8hx4q_all_cores"),
+        ),
+        ("threads".to_string(), cores as f64),
+    ];
+    for (name, v) in &derived {
+        println!("derived {name:<32} {v:>9.3}");
+    }
+    write_json("BENCH_hotpath.json", &rows, &derived);
 }

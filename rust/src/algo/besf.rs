@@ -15,7 +15,7 @@
 
 use crate::algo::complexity::Complexity;
 use crate::algo::lats::Lats;
-use crate::quant::bitplane::{BitPlanes, N_BITS};
+use crate::quant::bitplane::{plane_weight, BitPlanes, QueryPlanes, N_BITS};
 use crate::quant::margin::BitMargins;
 
 /// Sentinel death round for tokens that survive all 12 rounds.
@@ -80,17 +80,120 @@ pub fn besf_select(
 /// `policy(round, max_lower_bound) -> η` — [`besf_select`] passes the LATS
 /// rule; the BESF-only ablation (Fig. 13 (b)) passes a *static* threshold that
 /// ignores `max_lower`. Survival is always `upper ≥ η`.
+///
+/// Convenience wrapper that pays one-off scratch construction; steady-state
+/// callers (the engine workers, the serving coordinator) hold a
+/// [`BesfScratch`] instead and go through [`BesfScratch::select_with`].
 pub fn besf_select_with<P: Fn(usize, i64) -> i64>(
     q: &[i16],
     planes: &BitPlanes,
     margins: &BitMargins,
     policy: P,
 ) -> BesfResult {
+    let mut scratch = BesfScratch::new();
+    scratch.select_with(q, planes, margins, policy)
+}
+
+/// Reusable working state for BESF selection — everything the inner loop
+/// touches besides the operands, so that steady-state selection performs **no
+/// heap allocation** (the returned [`BesfResult`]'s output vectors are the
+/// only allocations, made once after the loop from the final buffers).
+///
+/// One scratch per worker thread: `AttentionEngine::par_map` constructs one
+/// per scoped worker, the coordinator's `BesfExecutor` owns one per executor
+/// (worker threads construct executors locally), and each buffer grows to the
+/// workload's high-water mark on first use and is then reused verbatim.
+///
+/// Active tokens are kept structure-of-arrays compacted: `idx[p]` is the
+/// token id whose running partial is `partials[p]`, so the per-round
+/// accumulate/threshold/prune pass streams two dense arrays instead of
+/// indexing a full-length `partial[j]` table through a shrinking id list.
+#[derive(Debug, Default)]
+pub struct BesfScratch {
+    /// Sliced decomposition of the current query (reused buffer).
+    qplanes: QueryPlanes,
+    /// Margin LUT slot for [`BesfScratch::select_into`] callers.
+    margins: BitMargins,
+    /// Running partial scores of active tokens, parallel to `idx`.
+    partials: Vec<i64>,
+    /// Token ids of active tokens, ascending (compacted in place).
+    idx: Vec<usize>,
+    /// Per-token death round, `SURVIVED` while alive.
+    death: Vec<u8>,
+}
+
+impl BesfScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drop-in replacement for [`besf_select_with`] that reuses this
+    /// scratch's buffers: decomposes `q` into the internal [`QueryPlanes`]
+    /// and selects. Bit-identical results (property-tested).
+    pub fn select_with<P: Fn(usize, i64) -> i64>(
+        &mut self,
+        q: &[i16],
+        planes: &BitPlanes,
+        margins: &BitMargins,
+        policy: P,
+    ) -> BesfResult {
+        self.qplanes.decompose_into(q);
+        let Self { qplanes, partials, idx, death, .. } = self;
+        select_core(qplanes, planes, margins, policy, partials, idx, death)
+    }
+
+    /// [`besf_select`] against this scratch (LATS threshold rule).
+    pub fn select(
+        &mut self,
+        q: &[i16],
+        planes: &BitPlanes,
+        margins: &BitMargins,
+        lats: &Lats,
+    ) -> BesfResult {
+        self.select_with(q, planes, margins, |_round, max_lower| lats.threshold(max_lower))
+    }
+
+    /// Engine entry point: select with a query that is *already* decomposed
+    /// (the engine caches one [`QueryPlanes`] per query), regenerating the
+    /// margin LUT into the scratch's slot from the raw query.
+    pub fn select_into<P: Fn(usize, i64) -> i64>(
+        &mut self,
+        qp: &QueryPlanes,
+        q: &[i16],
+        planes: &BitPlanes,
+        policy: P,
+    ) -> BesfResult {
+        debug_assert_eq!(q.len(), qp.dim);
+        self.margins.generate_into(q);
+        let Self { margins, partials, idx, death, .. } = self;
+        select_core(qp, planes, margins, policy, partials, idx, death)
+    }
+}
+
+/// The allocation-free BESF inner loop over a bit-sliced query.
+///
+/// Identical decisions to the historical scalar/retain implementation (the
+/// sliced dot is exact, max/prune order is preserved), reorganized so the
+/// round body is three linear passes over compacted arrays:
+/// accumulate → max-lower reduce → in-place keep-compaction.
+fn select_core<P: Fn(usize, i64) -> i64>(
+    qp: &QueryPlanes,
+    planes: &BitPlanes,
+    margins: &BitMargins,
+    policy: P,
+    partials: &mut Vec<i64>,
+    idx: &mut Vec<usize>,
+    death: &mut Vec<u8>,
+) -> BesfResult {
     let s = planes.keys;
     let dim = planes.dim;
-    let mut partial = vec![0i64; s];
-    let mut death_round = vec![SURVIVED; s];
-    let mut active: Vec<usize> = (0..s).collect();
+    debug_assert_eq!(qp.dim, dim, "query planes built for a different dim");
+    partials.clear();
+    partials.resize(s, 0);
+    death.clear();
+    death.resize(s, SURVIVED);
+    idx.clear();
+    idx.extend(0..s);
     let mut active_per_round = [0usize; N_BITS];
     let mut cx = Complexity::default();
 
@@ -98,40 +201,49 @@ pub fn besf_select_with<P: Fn(usize, i64) -> i64>(
     cx.q_bits += (dim * N_BITS) as u64;
 
     for r in 0..N_BITS {
-        active_per_round[r] = active.len();
+        let n_active = idx.len();
+        active_per_round[r] = n_active;
         // --- fetch + accumulate this round's plane for every active token ---
-        for &j in &active {
-            partial[j] += planes.weighted_plane_dot(r, j, q);
+        let w_r = plane_weight(r);
+        for (p, &j) in idx.iter().enumerate() {
+            partials[p] += w_r * qp.plane_dot_sliced(planes.row_words(r, j));
         }
-        cx.k_bits += (active.len() * dim) as u64;
-        cx.bit_ops += (active.len() * dim) as u64;
+        cx.k_bits += (n_active * dim) as u64;
+        cx.bit_ops += (n_active * dim) as u64;
 
         // --- derive threshold from lower bounds (Fig. 7) ---
         let m = margins.at(r);
-        let max_lower = active.iter().map(|&j| partial[j] + m.min).max().unwrap_or(0);
+        let max_lower = partials[..n_active].iter().map(|&a| a + m.min).max().unwrap_or(0);
         let eta = policy(r, max_lower);
 
-        // --- prune tokens whose upper bound cannot reach the threshold ---
-        active.retain(|&j| {
-            let upper = partial[j] + m.max;
-            if upper >= eta {
-                true
+        // --- prune: compact survivors to the front of both arrays ---
+        let mut keep = 0usize;
+        for p in 0..n_active {
+            if partials[p] + m.max >= eta {
+                idx[keep] = idx[p];
+                partials[keep] = partials[p];
+                keep += 1;
             } else {
-                death_round[j] = r as u8;
-                false
+                death[idx[p]] = r as u8;
             }
-        });
+        }
+        idx.truncate(keep);
+        partials.truncate(keep);
 
-        if active.is_empty() {
+        if idx.is_empty() {
             // Cannot happen (the max-lower-bound token always survives), but
             // stay defensive for degenerate S = 0.
             break;
         }
     }
 
-    let survivors = active;
-    let scores = survivors.iter().map(|&j| partial[j]).collect();
-    BesfResult { survivors, death_round, scores, active_per_round, complexity: cx }
+    BesfResult {
+        survivors: idx.clone(),
+        death_round: death.clone(),
+        scores: partials.clone(),
+        active_per_round,
+        complexity: cx,
+    }
 }
 
 /// Brute-force reference of the final selection rule: keep exactly the tokens
@@ -275,6 +387,70 @@ mod tests {
             let lats = Lats::from_int(alpha, radius);
             assert_eq!(res.survivors, brute_force_select(&exact, &lats));
         });
+    }
+
+    fn assert_results_identical(a: &BesfResult, b: &BesfResult, what: &str) {
+        assert_eq!(a.survivors, b.survivors, "{what}: survivors");
+        assert_eq!(a.death_round, b.death_round, "{what}: death rounds");
+        assert_eq!(a.scores, b.scores, "{what}: scores");
+        assert_eq!(a.active_per_round, b.active_per_round, "{what}: active/round");
+        assert_eq!(a.complexity, b.complexity, "{what}: complexity");
+    }
+
+    #[test]
+    fn prop_scratch_reuse_is_bit_identical_to_allocating_path() {
+        // One scratch reused across many random problems (dims crossing the
+        // 64/128 word edges, varying S) must reproduce the one-shot wrapper
+        // field-for-field — stale buffer contents must never leak.
+        let mut scratch = BesfScratch::new();
+        check("scratch-reuse BESF == allocating BESF", 60, |rng| {
+            let s = 1 + rng.below(80) as usize;
+            let dim = 1 + rng.below(160) as usize;
+            let (q, k) = rand_qk(rng, s, dim);
+            let alpha = rng.uniform(0.0, 1.0);
+            let radius = 1 + rng.below(1_000_000) as i64;
+            let planes = BitPlanes::decompose(&k);
+            let margins = BitMargins::generate(&q);
+            let lats = Lats::from_int(alpha, radius);
+            let fresh = besf_select(&q, &planes, &margins, &lats);
+            let reused = scratch.select(&q, &planes, &margins, &lats);
+            assert_results_identical(&reused, &fresh, "select");
+            // The precomposed-query engine entry point must agree too.
+            let qp = crate::quant::QueryPlanes::decompose(&q);
+            let via_qp =
+                scratch.select_into(&qp, &q, &planes, |_r, ml| lats.threshold(ml));
+            assert_results_identical(&via_qp, &fresh, "select_into");
+        });
+    }
+
+    #[test]
+    fn scratch_handles_all_negative_query_and_ragged_dims() {
+        // Sign-plane-heavy operands across tail-word widths.
+        let mut scratch = BesfScratch::new();
+        for dim in [63usize, 64, 65, 127, 128, 129] {
+            let q = vec![-1000i16; dim];
+            let k: Vec<i16> = (0..8 * dim).map(|i| ((i % 7) as i16) - 3).collect();
+            let k = IntMatrix::new(8, dim, k);
+            let planes = BitPlanes::decompose(&k);
+            let margins = BitMargins::generate(&q);
+            let lats = Lats::from_int(0.5, 10_000);
+            let fresh = besf_select(&q, &planes, &margins, &lats);
+            let reused = scratch.select(&q, &planes, &margins, &lats);
+            assert_results_identical(&reused, &fresh, "ragged dim");
+        }
+    }
+
+    #[test]
+    fn scratch_empty_key_set_is_handled() {
+        let mut scratch = BesfScratch::new();
+        let k = IntMatrix::zeros(0, 8);
+        let planes = BitPlanes::decompose(&k);
+        let q = vec![1i16; 8];
+        let margins = BitMargins::generate(&q);
+        let lats = Lats::from_int(0.5, 100);
+        let res = scratch.select(&q, &planes, &margins, &lats);
+        assert!(res.survivors.is_empty());
+        assert_eq!(res.active_per_round, [0usize; N_BITS]);
     }
 
     #[test]

@@ -12,6 +12,6 @@ pub mod lats;
 pub mod besf;
 pub mod selection;
 
-pub use besf::{besf_select, BesfResult};
+pub use besf::{besf_select, BesfResult, BesfScratch};
 pub use complexity::Complexity;
 pub use lats::Lats;

@@ -17,6 +17,7 @@ pub mod router;
 pub use batch::{Batcher, BatchConfig};
 pub use router::Router;
 
+use crate::algo::BesfScratch;
 use crate::attention::attention_f32;
 use crate::config::LatsConfig;
 use crate::engine::{HeadContext, SelectionPolicy};
@@ -132,11 +133,16 @@ impl AttnExecutor for RustExecutor {
 pub struct BesfExecutor {
     /// Logit-domain LATS radius (paper Eq. 2: 5.0).
     pub radius: f64,
+    /// Per-executor BESF working buffers, reused across requests so the
+    /// steady-state select loop on the serving path allocates nothing
+    /// (executors are constructed inside their worker thread — one scratch
+    /// per worker).
+    scratch: BesfScratch,
 }
 
 impl Default for BesfExecutor {
     fn default() -> Self {
-        Self { radius: 5.0 }
+        Self { radius: 5.0, scratch: BesfScratch::new() }
     }
 }
 
@@ -153,7 +159,7 @@ impl AttnExecutor for BesfExecutor {
         }
         let qa = QuantAttn::quantize(&[req.q.clone()], &k, &v, live, req.dim);
         let head = HeadContext::new(&qa, LatsConfig { alpha: req.alpha, radius: self.radius });
-        let qr = head.run_query(0, SelectionPolicy::Lats);
+        let qr = head.run_query_scratch(0, SelectionPolicy::Lats, &mut self.scratch);
         Ok((qr.out, qr.sel.survivors.len()))
     }
 }

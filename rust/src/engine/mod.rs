@@ -12,18 +12,20 @@
 //!   request path (batching + routing) rather than only inside experiments.
 //!
 //! Per head the engine owns quantization scales, the bit-plane decomposition
-//! of K, margin generation, BESF selection and sparse V accumulation; across
-//! heads and queries it parallelizes with `std::thread::scope` (the offline
-//! build has no rayon), deterministically: results are returned in
-//! `[head][query]` order regardless of thread count.
+//! of K *and* of every query ([`QueryPlanes`], so the BESF hot loop runs the
+//! bit-sliced AND+popcount kernel), margin generation, BESF selection and
+//! sparse V accumulation; across heads and queries it parallelizes with
+//! `std::thread::scope` (the offline build has no rayon), deterministically:
+//! results are returned in `[head][query]` order regardless of thread count.
+//! Each scoped worker owns one [`BesfScratch`], so steady-state selection
+//! allocates nothing per query (DESIGN.md §3).
 
-use crate::algo::besf::{besf_select, besf_select_with, BesfResult};
+use crate::algo::besf::{BesfResult, BesfScratch, SURVIVED};
 use crate::algo::complexity::Complexity;
 use crate::algo::lats::Lats;
 use crate::attention::attention_int12_sparse;
 use crate::config::LatsConfig;
-use crate::quant::bitplane::BitPlanes;
-use crate::quant::margin::BitMargins;
+use crate::quant::bitplane::{plane_weight, BitPlanes, QueryPlanes, N_BITS};
 use crate::workload::{MultiHeadAttn, QuantAttn};
 
 /// Which selection rule the engine applies (the Fig. 13 (b) ablation axis).
@@ -48,42 +50,80 @@ pub struct QueryResult {
 }
 
 /// Prepared per-head state: the quantized problem, its 12-plane K
-/// decomposition, and the LATS threshold in the integer score domain.
+/// decomposition, the per-query sliced decompositions, and the LATS threshold
+/// in the integer score domain.
 pub struct HeadContext<'a> {
     pub qa: &'a QuantAttn,
     pub planes: BitPlanes,
+    /// Sliced decomposition of each query, built once at context creation so
+    /// every select/replay (`plane_delta`) runs the word-parallel kernel.
+    pub qplanes: Vec<QueryPlanes>,
     pub lats: Lats,
 }
 
 impl<'a> HeadContext<'a> {
-    /// Decompose K and derive the integer-domain LATS radius for this head's
-    /// quantization scales.
+    /// Decompose K (and every query) and derive the integer-domain LATS
+    /// radius for this head's quantization scales.
     pub fn new(qa: &'a QuantAttn, cfg: LatsConfig) -> Self {
         let lats = Lats::new(cfg, qa.dim(), qa.qp.scale, qa.kp.scale);
-        Self { qa, planes: BitPlanes::decompose(&qa.k), lats }
+        let qplanes = qa.queries.iter().map(|q| QueryPlanes::decompose(q)).collect();
+        Self { qa, planes: BitPlanes::decompose(&qa.k), qplanes, lats }
     }
 
     pub fn queries(&self) -> usize {
         self.qa.queries.len()
     }
 
-    /// Run BESF selection for query `qi` under `policy` (margin generation —
-    /// the Bit Margin Generator — happens here, per query).
+    /// Run BESF selection for query `qi` under `policy`. One-shot convenience
+    /// wrapper over [`HeadContext::select_scratch`] (constructs a throwaway
+    /// scratch; hot callers thread a per-worker one instead).
     pub fn select(&self, qi: usize, policy: SelectionPolicy) -> BesfResult {
+        let mut scratch = BesfScratch::new();
+        self.select_scratch(qi, policy, &mut scratch)
+    }
+
+    /// Run BESF selection for query `qi` under `policy`, reusing `scratch`
+    /// (margin generation — the Bit Margin Generator — happens here, into the
+    /// scratch's LUT slot, per query).
+    pub fn select_scratch(
+        &self,
+        qi: usize,
+        policy: SelectionPolicy,
+        scratch: &mut BesfScratch,
+    ) -> BesfResult {
         let q = &self.qa.queries[qi];
-        let margins = BitMargins::generate(q);
         match policy {
-            SelectionPolicy::Lats => besf_select(q, &self.planes, &margins, &self.lats),
+            SelectionPolicy::Lats => {
+                let lats = self.lats;
+                scratch.select_into(&self.qplanes[qi], q, &self.planes, move |_r, ml| {
+                    lats.threshold(ml)
+                })
+            }
             SelectionPolicy::Static(eta) => {
-                besf_select_with(q, &self.planes, &margins, move |_r, _ml| eta)
+                scratch.select_into(&self.qplanes[qi], q, &self.planes, move |_r, _ml| eta)
             }
-            SelectionPolicy::Dense => {
-                let mut r = besf_select_with(q, &self.planes, &margins, |_r, _ml| i64::MIN);
-                // Dense traffic accounting depends on the fetch layout and is
-                // owned by the caller (e.g. the simulator's full-row fetches).
-                r.complexity = Complexity::default();
-                r
-            }
+            // Dense keeps everything — skip the 12-round machinery entirely
+            // and reconstruct the (exact) scores directly; bit-identical to
+            // running BESF with an unreachable threshold, at O(S·dim) instead
+            // of 12 bit-plane passes. Dense traffic accounting depends on the
+            // fetch layout and is owned by the caller (e.g. the simulator's
+            // full-row fetches), hence the zeroed complexity.
+            SelectionPolicy::Dense => self.dense_keep_all(qi),
+        }
+    }
+
+    /// Fast path for [`SelectionPolicy::Dense`]: every token survives every
+    /// round, scores are the exact integer dots (what 12 accumulated planes
+    /// reconstruct — `full_dot == dot_row`, tested in `quant::bitplane`).
+    fn dense_keep_all(&self, qi: usize) -> BesfResult {
+        let s = self.planes.keys;
+        let q = &self.qa.queries[qi];
+        BesfResult {
+            survivors: (0..s).collect(),
+            death_round: vec![SURVIVED; s],
+            scores: (0..s).map(|j| self.qa.k.dot_row(j, q)).collect(),
+            active_per_round: [s; N_BITS],
+            complexity: Complexity::default(),
         }
     }
 
@@ -103,7 +143,19 @@ impl<'a> HeadContext<'a> {
 
     /// Select, then accumulate: the full functional pipeline for one query.
     pub fn run_query(&self, qi: usize, policy: SelectionPolicy) -> QueryResult {
-        let sel = self.select(qi, policy);
+        let mut scratch = BesfScratch::new();
+        self.run_query_scratch(qi, policy, &mut scratch)
+    }
+
+    /// [`HeadContext::run_query`] with a caller-owned scratch (the
+    /// steady-state serving path: coordinator executors and engine workers).
+    pub fn run_query_scratch(
+        &self,
+        qi: usize,
+        policy: SelectionPolicy,
+        scratch: &mut BesfScratch,
+    ) -> QueryResult {
+        let sel = self.select_scratch(qi, policy, scratch);
         let out = self.accumulate(qi, &sel);
         QueryResult { sel, out }
     }
@@ -129,11 +181,12 @@ impl<'a> HeadContext<'a> {
     }
 
     /// Round-`r` partial-score increment of key `j` for query `qi` — one BRAT
-    /// pass. Exposed so the simulator's Scoreboard replay reuses the engine's
-    /// bit-plane math instead of duplicating it.
+    /// pass, computed with the bit-sliced kernel against the cached
+    /// [`QueryPlanes`]. Exposed so the simulator's Scoreboard replay reuses
+    /// the engine's bit-plane math instead of duplicating it.
     #[inline]
     pub fn plane_delta(&self, qi: usize, j: usize, r: usize) -> i64 {
-        self.planes.weighted_plane_dot(r, j, &self.qa.queries[qi])
+        plane_weight(r) * self.qplanes[qi].plane_dot_sliced(self.planes.row_words(r, j))
     }
 
     /// Exact integer score of key `j` for query `qi` (stage-fusion oracle).
@@ -166,7 +219,9 @@ impl<'a> AttentionEngine<'a> {
 
     /// Selection decisions for every (head, query), parallel across all cores.
     pub fn select_all(&self, policy: SelectionPolicy) -> Vec<Vec<BesfResult>> {
-        self.par_map(default_threads(), move |hc, qi| hc.select(qi, policy))
+        self.par_map(default_threads(), move |hc, qi, scratch| {
+            hc.select_scratch(qi, policy, scratch)
+        })
     }
 
     /// Full select + accumulate for every (head, query), parallel.
@@ -181,15 +236,17 @@ impl<'a> AttentionEngine<'a> {
         policy: SelectionPolicy,
         threads: usize,
     ) -> Vec<Vec<QueryResult>> {
-        self.par_map(threads, move |hc, qi| hc.run_query(qi, policy))
+        self.par_map(threads, move |hc, qi, scratch| hc.run_query_scratch(qi, policy, scratch))
     }
 
     /// Map `f` over every (head, query) pair on `threads` scoped workers,
     /// returning results grouped `[head][query]` in deterministic order.
+    /// Each worker owns one [`BesfScratch`] for its whole task chunk, so the
+    /// steady-state select loop performs no per-query heap allocation.
     fn par_map<T, F>(&self, threads: usize, f: F) -> Vec<Vec<T>>
     where
         T: Send,
-        F: Fn(&HeadContext<'a>, usize) -> T + Sync,
+        F: Fn(&HeadContext<'a>, usize, &mut BesfScratch) -> T + Sync,
     {
         let tasks: Vec<(usize, usize)> = self
             .heads
@@ -207,8 +264,9 @@ impl<'a> AttentionEngine<'a> {
         std::thread::scope(|s| {
             for (slot_chunk, task_chunk) in flat.chunks_mut(chunk).zip(tasks.chunks(chunk)) {
                 s.spawn(move || {
+                    let mut scratch = BesfScratch::new();
                     for (slot, &(h, qi)) in slot_chunk.iter_mut().zip(task_chunk) {
-                        *slot = Some(f(&heads[h], qi));
+                        *slot = Some(f(&heads[h], qi, &mut scratch));
                     }
                 });
             }
@@ -231,7 +289,9 @@ pub fn default_threads() -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::algo::besf::{besf_select, besf_select_with};
     use crate::attention::rel_err;
+    use crate::quant::margin::BitMargins;
 
     fn head(seq: usize, dim: usize, queries: usize, seed: u64) -> QuantAttn {
         QuantAttn::synth(seq, dim, queries, seed)
@@ -260,6 +320,50 @@ mod tests {
         let r = hc.select(0, SelectionPolicy::Dense);
         assert_eq!(r.survivors.len(), 64);
         assert_eq!(r.complexity, Complexity::default());
+    }
+
+    #[test]
+    fn dense_fast_path_matches_full_besf_run() {
+        // The keep-all fast path must be field-for-field identical to what
+        // Dense used to do: run full BESF with an unreachable threshold and
+        // zero out the complexity.
+        for (seq, dim, seed) in [(64usize, 32usize, 0xD1u64), (100, 65, 0xD2), (1, 7, 0xD3)] {
+            let qa = head(seq, dim, 2, seed);
+            let hc = HeadContext::new(&qa, LatsConfig::default());
+            for qi in 0..2 {
+                let q = &qa.queries[qi];
+                let margins = BitMargins::generate(q);
+                let mut legacy = besf_select_with(q, &hc.planes, &margins, |_r, _ml| i64::MIN);
+                legacy.complexity = Complexity::default();
+                let fast = hc.select(qi, SelectionPolicy::Dense);
+                assert_eq!(fast.survivors, legacy.survivors, "{seq}x{dim} q{qi}");
+                assert_eq!(fast.death_round, legacy.death_round, "{seq}x{dim} q{qi}");
+                assert_eq!(fast.scores, legacy.scores, "{seq}x{dim} q{qi}");
+                assert_eq!(fast.active_per_round, legacy.active_per_round, "{seq}x{dim} q{qi}");
+                assert_eq!(fast.complexity, legacy.complexity, "{seq}x{dim} q{qi}");
+                // The sparse output over the keep-all selection must match too.
+                let out_fast = hc.accumulate(qi, &fast);
+                let out_legacy = hc.accumulate(qi, &legacy);
+                assert_eq!(out_fast, out_legacy);
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_queries_matches_one_shot_select() {
+        let qa = head(128, 96, 4, 0xD4);
+        let hc = HeadContext::new(&qa, LatsConfig::default());
+        let mut scratch = BesfScratch::new();
+        for qi in 0..4 {
+            for policy in [SelectionPolicy::Lats, SelectionPolicy::Static(0)] {
+                let reused = hc.select_scratch(qi, policy, &mut scratch);
+                let fresh = hc.select(qi, policy);
+                assert_eq!(reused.survivors, fresh.survivors);
+                assert_eq!(reused.death_round, fresh.death_round);
+                assert_eq!(reused.scores, fresh.scores);
+                assert_eq!(reused.complexity, fresh.complexity);
+            }
+        }
     }
 
     #[test]

@@ -11,7 +11,28 @@
 //! Planes are bit-packed (one `u64` word per 64 dims) per key row; the partial
 //! dot product of a 12-bit query with a 1-bit plane — what the paper's BRAT
 //! (bit-serial reusable ANDer tree) computes in one cycle — is
-//! [`BitPlanes::plane_dot`].
+//! [`BitPlanes::plane_dot`] (scalar reference) and
+//! [`QueryPlanes::plane_dot_sliced`] (the word-parallel production kernel).
+//!
+//! ## Bit-sliced kernel
+//!
+//! The scalar `plane_dot` walks the set bits of the K plane one at a time and
+//! gathers `q[d]` scalar-by-scalar — data-dependent branches and a
+//! loop-carried `bits &= bits - 1` chain. The sliced kernel instead decomposes
+//! the *query* into its own 12 packed bit-planes once per query
+//! ([`QueryPlanes`]), after which the round-`r` unweighted dot becomes
+//!
+//! ```text
+//! Σ_d q[d]·kbit_r(d) = Σ_b w_b · popcount(qplane_b & kplane_r)
+//! ```
+//!
+//! — 12 AND+popcount word ops per 64 dims, branch-free, exactly the ANDer-tree
+//! shape of the paper's BRAT. Both operands zero-fill bits past `dim` in the
+//! tail word (the decompositions only ever set bits for real dims), so the AND
+//! needs no explicit tail mask even when `dim % 64 != 0`; the sign plane
+//! (`b = 0`, weight `-2^11`) folds in through the same signed `w_b` sum.
+//! Equivalence with the scalar walk is property-tested below and in
+//! `algo::besf` (see EXPERIMENTS.md §Perf for the measured speedup).
 
 use super::IntMatrix;
 
@@ -37,6 +58,26 @@ pub fn plane_weight(r: usize) -> i64 {
 pub fn remaining_weight(r: usize) -> i64 {
     debug_assert!(r < N_BITS);
     (1i64 << (N_BITS - 1 - r)) - 1
+}
+
+/// Pack one ≤64-dim chunk of INT12 values into its twelve plane words
+/// (round-indexed, MSB/sign plane first): word `r` holds bit `(11 - r)` of
+/// each value's 12-bit 2's-complement pattern at the value's chunk position.
+/// Shared by the K ([`BitPlanes`]) and query ([`QueryPlanes`]) decompositions
+/// so the plane layout convention lives in exactly one place; bits past the
+/// chunk's length stay zero, which is what lets the sliced AND skip an
+/// explicit tail mask.
+#[inline]
+fn slice_chunk(chunk: &[i16]) -> [u64; N_BITS] {
+    debug_assert!(chunk.len() <= 64);
+    let mut words = [0u64; N_BITS];
+    for (d, &v) in chunk.iter().enumerate() {
+        let bits = (v as i32 & 0xFFF) as u32;
+        for (r, word) in words.iter_mut().enumerate() {
+            *word |= (((bits >> (N_BITS - 1 - r)) & 1) as u64) << d;
+        }
+    }
+    words
 }
 
 /// Bit-packed 1-bit planes of a Key matrix `K ∈ INT12^{S×H}`.
@@ -70,15 +111,7 @@ impl BitPlanes {
         for j in 0..keys {
             let row = k.row(j);
             for (w, chunk) in row.chunks(64).enumerate() {
-                let mut words = [0u64; N_BITS];
-                for (d, &v) in chunk.iter().enumerate() {
-                    // 12-bit 2's complement pattern; round r carries bit
-                    // (11 - r): MSB first.
-                    let bits = (v as i32 & 0xFFF) as u32;
-                    for (r, word) in words.iter_mut().enumerate() {
-                        *word |= (((bits >> (N_BITS - 1 - r)) & 1) as u64) << d;
-                    }
-                }
+                let words = slice_chunk(chunk);
                 for (r, &word) in words.iter().enumerate() {
                     planes[r][j * wpr + w] = word;
                 }
@@ -138,6 +171,103 @@ impl BitPlanes {
     #[inline]
     pub fn plane_bytes(&self) -> u64 {
         ((self.dim + 7) / 8) as u64
+    }
+
+    /// Sliced counterpart of [`BitPlanes::plane_dot`]: the same unweighted
+    /// round-`r` dot, computed word-parallel against a pre-decomposed query.
+    /// Bit-identical to the scalar walk (property-tested).
+    #[inline]
+    pub fn plane_dot_sliced(&self, r: usize, j: usize, qp: &QueryPlanes) -> i64 {
+        qp.plane_dot_sliced(self.row_words(r, j))
+    }
+
+    /// Sliced counterpart of [`BitPlanes::weighted_plane_dot`].
+    #[inline]
+    pub fn weighted_plane_dot_sliced(&self, r: usize, j: usize, qp: &QueryPlanes) -> i64 {
+        plane_weight(r) * self.plane_dot_sliced(r, j, qp)
+    }
+}
+
+/// Bit-packed 1-bit planes of a single INT12 *query* vector — the other
+/// operand of the bit-sliced BRAT kernel.
+///
+/// Layout mirrors [`BitPlanes`]: `plane_words(b)[w]` holds dims
+/// `64w..64w+63` of plane `b` (round-indexed, MSB/sign first). Decomposition
+/// happens once per query; every subsequent round-`r` partial score is then
+/// `plane_weight(r) · plane_dot_sliced(kplane_r)` — pure AND+popcount, no
+/// per-element gathers. `decompose_into` reuses the internal buffer so a
+/// long-lived instance (e.g. inside `algo::besf::BesfScratch`) never
+/// reallocates in steady state.
+#[derive(Debug, Clone, Default)]
+pub struct QueryPlanes {
+    /// Head dimension the planes were built for.
+    pub dim: usize,
+    words_per_row: usize,
+    /// `N_BITS * words_per_row` words, plane-major.
+    words: Vec<u64>,
+}
+
+impl QueryPlanes {
+    /// Empty instance; fill with [`QueryPlanes::decompose_into`].
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Decompose a query into fresh planes.
+    pub fn decompose(q: &[i16]) -> Self {
+        let mut qp = Self::new();
+        qp.decompose_into(q);
+        qp
+    }
+
+    /// Decompose a query, reusing this instance's buffer (allocation-free
+    /// once the buffer has grown to the workload's dim).
+    pub fn decompose_into(&mut self, q: &[i16]) {
+        let dim = q.len();
+        let wpr = (dim + 63) / 64;
+        self.dim = dim;
+        self.words_per_row = wpr;
+        self.words.clear();
+        self.words.resize(N_BITS * wpr, 0);
+        for (w, chunk) in q.chunks(64).enumerate() {
+            let words = slice_chunk(chunk);
+            for (b, &word) in words.iter().enumerate() {
+                self.words[b * wpr + w] = word;
+            }
+        }
+    }
+
+    /// Packed words of query plane `b` (round-indexed, sign plane first).
+    #[inline]
+    pub fn plane_words(&self, b: usize) -> &[u64] {
+        let w = self.words_per_row;
+        &self.words[b * w..(b + 1) * w]
+    }
+
+    /// `Σ_d q[d]·kbit(d)` against one packed K-plane row, word-parallel:
+    /// `Σ_b plane_weight(b) · popcount(qplane_b & k_row)`.
+    ///
+    /// K-word-major so each `k_row` word is loaded once and ANDed against all
+    /// twelve query planes; per-plane popcounts accumulate in a register
+    /// array and fold through the signed weights once at the end. A per-plane
+    /// count is at most `dim` so `u32` never overflows.
+    pub fn plane_dot_sliced(&self, k_row: &[u64]) -> i64 {
+        debug_assert_eq!(k_row.len(), self.words_per_row);
+        let wpr = self.words_per_row;
+        let mut counts = [0u32; N_BITS];
+        for (w, &kw) in k_row.iter().enumerate() {
+            if kw == 0 {
+                continue;
+            }
+            for (b, c) in counts.iter_mut().enumerate() {
+                *c += (self.words[b * wpr + w] & kw).count_ones();
+            }
+        }
+        let mut acc: i64 = 0;
+        for (b, &c) in counts.iter().enumerate() {
+            acc += plane_weight(b) * c as i64;
+        }
+        acc
     }
 }
 
@@ -225,5 +355,73 @@ mod tests {
         let m = IntMatrix::zeros(1, 65);
         let bp = BitPlanes::decompose(&m);
         assert_eq!(bp.plane_bytes(), 9);
+    }
+
+    #[test]
+    fn prop_sliced_equals_scalar_equals_direct() {
+        // The sliced kernel, the scalar reference walk, and the direct integer
+        // dot must agree exactly for shapes crossing the 64/128 word edges.
+        check("sliced == scalar plane_dot == dot_row", 80, |rng| {
+            let keys = 1 + rng.below(8) as usize;
+            let dim = 1 + rng.below(200) as usize; // crosses 64, 128, 192
+            let k = rand_matrix(rng, keys, dim);
+            let bp = BitPlanes::decompose(&k);
+            let q: Vec<i16> =
+                (0..dim).map(|_| rng.range_i64(QMIN as i64, QMAX as i64) as i16).collect();
+            let qp = QueryPlanes::decompose(&q);
+            let j = rng.below(keys as u64) as usize;
+            let mut full = 0i64;
+            for r in 0..N_BITS {
+                let scalar = bp.plane_dot(r, j, &q);
+                assert_eq!(bp.plane_dot_sliced(r, j, &qp), scalar, "round {r}");
+                assert_eq!(
+                    bp.weighted_plane_dot_sliced(r, j, &qp),
+                    bp.weighted_plane_dot(r, j, &q),
+                    "round {r} weighted"
+                );
+                full += bp.weighted_plane_dot_sliced(r, j, &qp);
+            }
+            assert_eq!(full, k.dot_row(j, &q), "12-round sliced sum == direct dot");
+        });
+    }
+
+    #[test]
+    fn sliced_handles_all_negative_and_ragged_dims() {
+        // All-negative values exercise every sign-plane word; dims 63/65/127
+        // exercise the tail word on both sides of the 64/128 edges.
+        for dim in [1usize, 63, 64, 65, 127, 128, 129] {
+            let kvals = vec![QMIN as i16; dim];
+            let k = IntMatrix::new(1, dim, kvals);
+            let bp = BitPlanes::decompose(&k);
+            let q = vec![QMIN as i16; dim];
+            let qp = QueryPlanes::decompose(&q);
+            for r in 0..N_BITS {
+                assert_eq!(
+                    bp.plane_dot_sliced(r, 0, &qp),
+                    bp.plane_dot(r, 0, &q),
+                    "dim {dim} round {r}"
+                );
+            }
+            let full: i64 = (0..N_BITS).map(|r| bp.weighted_plane_dot_sliced(r, 0, &qp)).sum();
+            assert_eq!(full, k.dot_row(0, &q), "dim {dim}");
+        }
+    }
+
+    #[test]
+    fn decompose_into_reuse_matches_fresh_decompose() {
+        // Buffer reuse across queries of different dims must be equivalent to
+        // a fresh decomposition (shrinking dim must not leak stale words).
+        let mut rng = crate::util::SplitMix64::new(0x51CE);
+        let mut reused = QueryPlanes::new();
+        for dim in [130usize, 64, 7, 128, 65] {
+            let q: Vec<i16> =
+                (0..dim).map(|_| rng.range_i64(QMIN as i64, QMAX as i64) as i16).collect();
+            reused.decompose_into(&q);
+            let fresh = QueryPlanes::decompose(&q);
+            assert_eq!(reused.dim, fresh.dim);
+            for b in 0..N_BITS {
+                assert_eq!(reused.plane_words(b), fresh.plane_words(b), "dim {dim} plane {b}");
+            }
+        }
     }
 }

@@ -38,6 +38,14 @@ pub struct BitMargins {
     pub neg_sum: i64,
 }
 
+impl Default for BitMargins {
+    /// Empty-query LUT (all margins zero) — the initial state of a reusable
+    /// scratch slot before its first `generate_into`.
+    fn default() -> Self {
+        Self::generate(&[])
+    }
+}
+
 impl BitMargins {
     /// Build the margin LUT from a full-precision INT12 query vector.
     pub fn generate(q: &[i16]) -> Self {
@@ -57,6 +65,16 @@ impl BitMargins {
             p.max = rem * pos_sum;
         }
         Self { pairs, pos_sum, neg_sum }
+    }
+
+    /// Rebuild the LUT for a new query in place. `BitMargins` is heap-free
+    /// (a fixed 12-entry array plus two sums), so this is a plain overwrite —
+    /// it exists so `algo::besf::BesfScratch` can keep one LUT slot alive
+    /// across queries without any per-query construction showing up in
+    /// profiles.
+    #[inline]
+    pub fn generate_into(&mut self, q: &[i16]) {
+        *self = Self::generate(q);
     }
 
     /// Margin pair after processing rounds `0..=r`.

@@ -7,12 +7,14 @@
 //! * [`QuantParams`] / [`quantize`] — symmetric per-tensor INT12 PTQ.
 //! * [`IntMatrix`] — row-major i16 matrix (values within [-2048, 2047]).
 //! * [`bitplane::BitPlanes`] — packed 1-bit planes of a Key matrix.
+//! * [`bitplane::QueryPlanes`] — packed 1-bit planes of a query vector (the
+//!   second operand of the bit-sliced AND+popcount BRAT kernel).
 //! * [`margin`] — bit-level uncertainty margins (paper Eq. 4 / Fig. 6).
 
 pub mod bitplane;
 pub mod margin;
 
-pub use bitplane::{BitPlanes, N_BITS};
+pub use bitplane::{BitPlanes, QueryPlanes, N_BITS};
 pub use margin::{BitMargins, MarginPair};
 
 /// Number of quantization levels on each side of zero for INT12.

@@ -110,6 +110,9 @@ pub fn simulate_attention(qa: &QuantAttn, cfg: &SimConfig) -> SimReport {
     };
 
     let mut cx = Complexity::default();
+    // One scratch for the whole workload: selection in the per-query loop
+    // below reuses it, same as the engine's parallel workers (DESIGN.md §3).
+    let mut scratch = crate::algo::BesfScratch::new();
     let mut sb = Scoreboard::new(hw.scoreboard_entries);
     let mut qk_free: Cycle = 0;
     let mut vpu_free: Cycle = 0;
@@ -121,7 +124,7 @@ pub fn simulate_attention(qa: &QuantAttn, cfg: &SimConfig) -> SimReport {
 
     for qi in 0..qa.queries.len() {
         // ❶–❹ selection decisions (functional; identical for sync/async).
-        let sel: BesfResult = head.select(qi, policy);
+        let sel: BesfResult = head.select_scratch(qi, policy, &mut scratch);
         if let SelectionPolicy::Dense = policy {
             debug_assert_eq!(sel.survivors.len(), seq);
         }
@@ -216,7 +219,9 @@ pub fn simulate_attention(qa: &QuantAttn, cfg: &SimConfig) -> SimReport {
         // that reused partials reconstruct the exact score) runs in debug
         // builds; release builds take the equivalent analytic counts — the
         // replay would double the whole simulation's compute (§Perf). The
-        // bit-plane math comes from the engine (plane_delta/exact_score).
+        // bit-plane math comes from the engine's shared bit-sliced kernel
+        // (plane_delta over the cached QueryPlanes / exact_score), so replay
+        // and selection can never drift apart.
         if cfg.features.besf {
             if cfg!(debug_assertions) {
                 let window = hw.scoreboard_entries;

@@ -4,7 +4,10 @@
 //! bit rounds can *reuse* them (the essence of stage fusion). An entry is
 //! allocated on a token's first (MSB) plane, updated on every subsequent
 //! plane, and evicted when the Pruning Engine kills the token or its final
-//! score is handed to the V-PU.
+//! score is handed to the V-PU. The per-plane deltas fed through
+//! [`Scoreboard::accumulate`] by the simulator's replay come from the
+//! engine's bit-sliced BRAT kernel (`HeadContext::plane_delta`), never from a
+//! duplicate scalar implementation.
 //!
 //! Capacity bounds the number of tokens a lane may keep in flight under BAP —
 //! the accelerator's scheduler never exceeds it, so `insert` failures indicate
