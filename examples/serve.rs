@@ -20,7 +20,9 @@ use bitstopper::coordinator::{AttnRequest, BatchConfig, BesfExecutor, Engine};
 use bitstopper::engine::{default_threads, AttentionEngine, SelectionPolicy};
 use bitstopper::runtime::ArtifactKind;
 use bitstopper::sim::simulate_multi_head;
-use bitstopper::workload::{head_seed, AttnWorkload, MultiHeadAttn, QuantAttn, SynthConfig};
+use bitstopper::workload::{
+    head_seed, AttnWorkload, DecodeTrace, MultiHeadAttn, QuantAttn, SynthConfig,
+};
 use std::time::{Duration, Instant};
 
 const ALPHA: f64 = 0.6;
@@ -48,7 +50,7 @@ fn main() {
 
     // --- serving path: every (head, query) as a request through the
     //     coordinator (shape-batched, least-loaded-routed, BESF-executed) ---
-    let workers = default_threads().min(4).max(2);
+    let workers = default_threads().clamp(2, 4);
     let engine = Engine::start(
         workers,
         BatchConfig { max_batch: 8, max_wait: Duration::from_micros(500) },
@@ -83,12 +85,63 @@ fn main() {
 
     println!("\n== serving results ({workers} executor workers) ==");
     println!("attention requests      : {} (errors {})", m.completed, m.errors);
-    println!("wall time               : {:.3}s  ({:.0} req/s)", wall.as_secs_f64(), m.completed as f64 / wall.as_secs_f64());
+    println!(
+        "wall time               : {:.3}s  ({:.0} req/s)",
+        wall.as_secs_f64(),
+        m.completed as f64 / wall.as_secs_f64()
+    );
     println!("mean batch size         : {:.2}", m.mean_batch_size);
-    println!("mean latency            : {:.0} us (p95 {:.0} us)", m.mean_latency_us, m.p95_latency_us);
+    println!(
+        "mean latency            : {:.0} us (p95 {:.0} us)",
+        m.mean_latency_us, m.p95_latency_us
+    );
     println!(
         "mean tokens kept (BESF) : {:.1}% of context",
         100.0 * kept_sum as f64 / ((n_heads * queries * seq) as f64)
+    );
+
+    // --- session decode path: multi-turn autoregressive serving over the
+    //     KV-cache (open → append/decode per token → close), cache pinned to
+    //     one worker by sticky routing; per-token cost is O(dim) append +
+    //     one selection, with no context re-shipping or re-decomposition ---
+    let decode_steps = 32usize;
+    let trace = DecodeTrace::synth(seq, decode_steps, dim, 4242);
+    let session_engine = Engine::start(2, BatchConfig::default(), BesfExecutor::default);
+    let t_open = Instant::now();
+    let (sid, rx) = session_engine.open_session(
+        ALPHA,
+        trace.prompt_len,
+        dim,
+        trace.prompt_k.clone(),
+        trace.prompt_v.clone(),
+    );
+    rx.recv().expect("open ack");
+    let prefill = t_open.elapsed();
+    let t_decode = Instant::now();
+    let mut decode_kept = 0usize;
+    for step in &trace.steps {
+        session_engine
+            .session_append(sid, step.k_row.clone(), step.v_row.clone())
+            .recv()
+            .expect("append ack");
+        let d = session_engine.session_decode(sid, step.q.clone()).recv().expect("decode");
+        assert_eq!(d.out.len(), dim);
+        decode_kept += d.kept;
+    }
+    let decode_wall = t_decode.elapsed();
+    session_engine.close_session(sid).recv().expect("close ack");
+    let sm = session_engine.metrics();
+    session_engine.shutdown();
+    println!("\n== session decode (KV-cache) ==");
+    println!("prefill (open {seq}-token context) : {:.1} ms", prefill.as_secs_f64() * 1e3);
+    println!(
+        "decode ({decode_steps} tokens)             : {:.3} ms/token (append+select+sparse V)",
+        decode_wall.as_secs_f64() * 1e3 / decode_steps as f64
+    );
+    println!(
+        "mean tokens kept (decode)       : {:.1}% of context (errors {})",
+        100.0 * decode_kept as f64 / (decode_steps as f64 * (seq + decode_steps / 2) as f64),
+        sm.errors
     );
 
     // --- multi-head engine throughput scaling (the tentpole demo) ---

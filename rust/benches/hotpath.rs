@@ -1,8 +1,10 @@
 //! Hot-path microbenchmarks (custom harness): the L3 kernels whose
 //! performance bounds the whole-figure suite — bit-plane dot products (scalar
 //! reference vs the bit-sliced AND+popcount kernel), BESF selection (one-shot
-//! vs scratch-reuse), the DRAM model, the lane engine and the multi-head
-//! engine. Used by the §Perf pass in EXPERIMENTS.md.
+//! vs scratch-reuse), the DRAM model, the lane engine, the multi-head
+//! engine, and the decode-step rows (session KV-cache append+select vs the
+//! per-token full-context rebuild, across context lengths 128→2048). Used by
+//! the §Perf pass in EXPERIMENTS.md.
 //!
 //! Run: `cargo bench --bench hotpath`
 //!
@@ -13,13 +15,13 @@
 
 use bitstopper::algo::{besf_select, BesfScratch, Lats};
 use bitstopper::config::LatsConfig;
-use bitstopper::engine::{default_threads, AttentionEngine, SelectionPolicy};
+use bitstopper::engine::{default_threads, AttentionEngine, HeadContext, SelectionPolicy};
 use bitstopper::quant::{margin::BitMargins, BitPlanes, QueryPlanes};
 use bitstopper::sim::dram::{Dram, DramConfig};
 use bitstopper::sim::qkpu::{assign_round_robin, simulate_lanes, ChainTask, FetchSpec};
 use bitstopper::util::stats::Summary;
 use bitstopper::util::SplitMix64;
-use bitstopper::workload::{MultiHeadAttn, QuantAttn};
+use bitstopper::workload::{DecodeTrace, MultiHeadAttn, QuantAttn};
 use std::time::Instant;
 
 fn time_it<F: FnMut() -> u64>(
@@ -53,7 +55,8 @@ fn mean_of(rows: &[(String, Summary)], name: &str) -> f64 {
 /// build; every value we emit is a finite f64 or usize, so hand-formatting
 /// is safe).
 fn write_json(path: &str, rows: &[(String, Summary)], derived: &[(String, f64)]) {
-    let mut out = String::from("{\n  \"bench\": \"hotpath\",\n  \"unit\": \"ms/iter\",\n  \"rows\": [\n");
+    let mut out =
+        String::from("{\n  \"bench\": \"hotpath\",\n  \"unit\": \"ms/iter\",\n  \"rows\": [\n");
     for (i, (name, s)) in rows.iter().enumerate() {
         out.push_str(&format!(
             "    {{\"name\": \"{}\", \"mean\": {:.6}, \"p50\": {:.6}, \"p95\": {:.6}, \"min\": {:.6}, \"max\": {:.6}, \"n\": {}}}{}\n",
@@ -201,6 +204,49 @@ fn main() {
         survivors_of(&eng.run_all_threads(SelectionPolicy::Dense, cores))
     });
 
+    // Decode-step cost vs context length: the session KV-cache path (one
+    // O(dim) append + one selection against cached planes) against the
+    // rebuild path (per-token re-quantization of the full K/V context +
+    // full 12-plane re-decomposition — what a one-shot request pays). The
+    // cached rows must stay ~flat from 128 → 2048 while rebuild grows
+    // linearly; acceptance ratios land in the derived block.
+    println!();
+    // 1 warmup + DECODE_ITERS timed iterations per row; both paths consume
+    // the SAME decode steps, so each iteration i of either row measures the
+    // identical context length ctx+i+1 — the labeled ctx drifts ≤ DECODE_STEPS
+    // tokens for both, symmetrically, keeping the derived ratios unbiased.
+    const DECODE_ITERS: usize = 16;
+    const DECODE_STEPS: usize = DECODE_ITERS + 1; // every time_it call consumes one step
+    for &ctx in &[128usize, 512, 2048] {
+        let trace = DecodeTrace::synth(ctx, DECODE_STEPS, 128, 0xDEC + ctx as u64);
+        let qa0 = QuantAttn::quantize(&[], &trace.prompt_k, &trace.prompt_v, ctx, 128);
+        let mut cached = HeadContext::from_owned(qa0, LatsConfig::default());
+        let mut dscratch = BesfScratch::new();
+        let mut i_cached = 0usize;
+        time_it(&mut rows, &format!("decode_step_cached_ctx{ctx}"), DECODE_ITERS, || {
+            let step = &trace.steps[i_cached];
+            i_cached += 1;
+            cached.append_token(&step.k_row, &step.v_row);
+            let qr = cached.decode_scratch(&step.q, &mut dscratch);
+            qr.sel.survivors.len() as u64
+        });
+
+        let mut k_full = trace.prompt_k.clone();
+        let mut v_full = trace.prompt_v.clone();
+        let mut i_rebuild = 0usize;
+        time_it(&mut rows, &format!("decode_step_rebuild_ctx{ctx}"), DECODE_ITERS, || {
+            let step = &trace.steps[i_rebuild];
+            i_rebuild += 1;
+            k_full.extend_from_slice(&step.k_row);
+            v_full.extend_from_slice(&step.v_row);
+            let n = ctx + i_rebuild;
+            let qa = QuantAttn::quantize(&[step.q.clone()], &k_full, &v_full, n, 128);
+            let head = HeadContext::new(&qa, LatsConfig::default());
+            let qr = head.run_query_scratch(0, SelectionPolicy::Lats, &mut dscratch);
+            qr.sel.survivors.len() as u64
+        });
+    }
+
     let derived = vec![
         (
             "sliced_speedup_round0".to_string(),
@@ -216,6 +262,23 @@ fn main() {
             mean_of(&rows, "engine_8hx4q_1thread") / mean_of(&rows, "engine_8hx4q_all_cores"),
         ),
         ("threads".to_string(), cores as f64),
+        // Per-token decode cost growth 128 → 2048: cached must stay near 1
+        // (flat in context length), rebuild grows ~linearly (~16x).
+        (
+            "decode_cached_growth_128_to_2048".to_string(),
+            mean_of(&rows, "decode_step_cached_ctx2048")
+                / mean_of(&rows, "decode_step_cached_ctx128"),
+        ),
+        (
+            "decode_rebuild_growth_128_to_2048".to_string(),
+            mean_of(&rows, "decode_step_rebuild_ctx2048")
+                / mean_of(&rows, "decode_step_rebuild_ctx128"),
+        ),
+        (
+            "decode_session_speedup_ctx2048".to_string(),
+            mean_of(&rows, "decode_step_rebuild_ctx2048")
+                / mean_of(&rows, "decode_step_cached_ctx2048"),
+        ),
     ];
     for (name, v) in &derived {
         println!("derived {name:<32} {v:>9.3}");

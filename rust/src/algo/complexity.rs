@@ -75,10 +75,17 @@ mod tests {
 
     #[test]
     fn add_accumulates_all_fields() {
-        let mut a = Complexity { k_bits: 1, v_bits: 2, q_bits: 3, bit_ops: 4, mac_ops: 5, softmax_ops: 6 };
-        let b = Complexity { k_bits: 10, v_bits: 20, q_bits: 30, bit_ops: 40, mac_ops: 50, softmax_ops: 60 };
-        a.add(&b);
-        assert_eq!(a, Complexity { k_bits: 11, v_bits: 22, q_bits: 33, bit_ops: 44, mac_ops: 55, softmax_ops: 66 });
+        let mk = |s: u64| Complexity {
+            k_bits: s,
+            v_bits: 2 * s,
+            q_bits: 3 * s,
+            bit_ops: 4 * s,
+            mac_ops: 5 * s,
+            softmax_ops: 6 * s,
+        };
+        let mut a = mk(1);
+        a.add(&mk(10));
+        assert_eq!(a, mk(11));
     }
 
     #[test]

@@ -16,8 +16,18 @@ use crate::attention::softmax_inplace;
 pub fn vital_set(logits: &[f32], mass: f32) -> Vec<usize> {
     let mut p = logits.to_vec();
     softmax_inplace(&mut p);
+    // A single NaN logit poisons the whole softmax (NaN sum → every weight
+    // NaN). Zero non-finite weights so the descending sort is total (NaN
+    // sorts *above* +inf under total_cmp, which would put poisoned entries
+    // first) and the cumulative cover terminates deterministically: an
+    // all-NaN softmax degrades to "every token is vital", never a panic.
+    for x in p.iter_mut() {
+        if !x.is_finite() {
+            *x = 0.0;
+        }
+    }
     let mut idx: Vec<usize> = (0..p.len()).collect();
-    idx.sort_by(|&a, &b| p[b].partial_cmp(&p[a]).unwrap());
+    idx.sort_by(|&a, &b| p[b].total_cmp(&p[a]));
     let mut cum = 0f32;
     let mut out = vec![];
     for j in idx {
@@ -41,10 +51,12 @@ pub fn static_threshold_select(logits: &[f32], theta: f32) -> Vec<usize> {
         .collect()
 }
 
-/// Fixed top-k in the logit domain (SOFA-style).
+/// Fixed top-k in the logit domain (SOFA-style). NaN logits cannot panic the
+/// sort (`total_cmp`); they rank above +inf in the descending order, which is
+/// irrelevant for the accuracy experiments and harmless for robustness.
 pub fn topk_select(logits: &[f32], k: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..logits.len()).collect();
-    idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+    idx.sort_by(|&a, &b| logits[b].total_cmp(&logits[a]));
     idx.truncate(k);
     idx.sort_unstable();
     idx
@@ -202,6 +214,36 @@ mod tests {
         assert_eq!(selection_recall(&[1, 2, 3, 4], &[1, 2]), 1.0);
         assert_eq!(selection_recall(&[1], &[1, 2]), 0.5);
         assert_eq!(selection_recall(&[], &[]), 1.0);
+    }
+
+    /// Regression for the NaN-unsafe sorts: a NaN logit used to panic the
+    /// worker via `partial_cmp(..).unwrap()` in `vital_set` / `topk_select`.
+    #[test]
+    fn nan_bearing_query_flows_through_strategy_accuracy_without_panic() {
+        let mut batch = vec![
+            vec![1.0f32, 2.0, 3.0, 4.0],
+            vec![0.5f32, -1.0, 2.5, 0.0],
+            vec![2.0f32, 0.0, 1.0, -2.0],
+        ];
+        batch[1][2] = f32::NAN;
+        let acc = strategy_accuracy(&batch, 0.5, 5.0, 0.9);
+        assert!(acc.lats.is_finite(), "lats {}", acc.lats);
+        assert!(acc.static_threshold.is_finite(), "static {}", acc.static_threshold);
+        assert!(acc.topk.is_finite(), "topk {}", acc.topk);
+    }
+
+    #[test]
+    fn nan_softmax_degrades_vital_set_to_keep_everything() {
+        // One NaN logit poisons the whole softmax; the guarded vital_set
+        // must return every index (nothing provably non-vital), not panic
+        // or loop.
+        let logits = vec![1.0f32, f32::NAN, 3.0, -1.0];
+        let v = vital_set(&logits, 0.9);
+        assert_eq!(v, vec![0, 1, 2, 3]);
+        // And the individual selectors stay panic-free too.
+        let _ = topk_select(&logits, 2);
+        let _ = static_threshold_select(&logits, 0.0);
+        let _ = lats_select_logits(&logits, 0.5, 5.0);
     }
 
     /// Reproduces the *mechanism* of Fig. 4: two distributions where no single

@@ -30,7 +30,14 @@ pub fn softmax_inplace(xs: &mut [f32]) {
 /// Dense f32 attention for a single query: `softmax(q·Kᵀ/√d)·V`.
 ///
 /// `k` and `v` are row-major `[seq × dim]` / `[seq × dim_v]`.
-pub fn attention_f32(q: &[f32], k: &[f32], v: &[f32], seq: usize, dim: usize, dim_v: usize) -> Vec<f32> {
+pub fn attention_f32(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    seq: usize,
+    dim: usize,
+    dim_v: usize,
+) -> Vec<f32> {
     assert_eq!(q.len(), dim);
     assert_eq!(k.len(), seq * dim);
     assert_eq!(v.len(), seq * dim_v);

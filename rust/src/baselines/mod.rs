@@ -65,7 +65,8 @@ pub fn vital_set_int(q: &[i16], k: &IntMatrix, scale: f32, mass: f32) -> Vec<usi
     let mut logits: Vec<f32> = (0..k.rows).map(|j| k.dot_row(j, q) as f32 * scale).collect();
     let idx_sorted = {
         let mut idx: Vec<usize> = (0..logits.len()).collect();
-        idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        // total_cmp: never panic on a NaN logit (degenerate scales).
+        idx.sort_by(|&a, &b| logits[b].total_cmp(&logits[a]));
         idx
     };
     softmax_inplace(&mut logits);

@@ -146,8 +146,8 @@ pub fn simulate_sofa(qa: &QuantAttn, cfg: &SimConfig, mode: SofaMode) -> SimRepo
                 }],
             })
             .collect();
-        let pred =
-            simulate_lanes(&assign_round_robin(pred_chains, hw.pe_lanes), &mut dram, stage_free, 16);
+        let pred_lanes = assign_round_robin(pred_chains, hw.pe_lanes);
+        let pred = simulate_lanes(&pred_lanes, &mut dram, stage_free, 16);
         busy += pred.busy_cycles;
         cx.q_bits += (dim * N_BITS) as u64;
         cx.k_bits += (seq * dim * N_BITS) as u64;

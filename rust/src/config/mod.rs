@@ -200,7 +200,12 @@ pub struct SimConfig {
 
 impl Default for SimConfig {
     fn default() -> Self {
-        Self { hw: HwConfig::default(), features: Features::ALL, lats: LatsConfig::default(), seed: 1 }
+        Self {
+            hw: HwConfig::default(),
+            features: Features::ALL,
+            lats: LatsConfig::default(),
+            seed: 1,
+        }
     }
 }
 

@@ -169,6 +169,25 @@ mod tests {
     }
 
     #[test]
+    fn full_batch_and_timed_out_remainder_released_in_same_tick() {
+        // A group can go full AND leave a timed-out remainder in one
+        // take_ready call: the full batch must come out at max_batch and the
+        // remainder (whose oldest member is past max_wait) must come out
+        // with it — not sit for another tick.
+        let cfg = BatchConfig { max_batch: 4, max_wait: Duration::from_millis(10) };
+        let mut b = Batcher::new(cfg);
+        let t0 = Instant::now();
+        for _ in 0..6 {
+            push(&mut b, req(ArtifactKind::Dense, 8), t0);
+        }
+        let ready = b.take_ready(t0 + Duration::from_millis(11));
+        let mut sizes: Vec<usize> = ready.iter().map(|v| v.len()).collect();
+        sizes.sort_unstable();
+        assert_eq!(sizes, vec![2, 4], "one full batch plus the timed-out remainder");
+        assert!(b.is_empty(), "nothing may be left behind");
+    }
+
+    #[test]
     fn take_all_drains() {
         let mut b = Batcher::new(BatchConfig::default());
         let t = Instant::now();

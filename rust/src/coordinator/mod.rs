@@ -8,14 +8,22 @@
 //! PJRT runtime (AOT artifacts — the production path) or through a pure-Rust
 //! fallback executor (used in tests and when artifacts are absent).
 //!
+//! Alongside the one-shot path runs the **session path** (DESIGN.md §7):
+//! [`SessionRequest`]s (`Open`/`Append`/`Decode`/`Close`) bypass the shape
+//! batcher and are routed *sticky* — a session's KV-cache lives inside
+//! exactly one executor worker ([`session::SessionStore`]), so decode never
+//! re-ships or re-decomposes its context.
+//!
 //! Python is never on this path; the only Python involvement was the one-time
 //! `make artifacts`.
 
 pub mod batch;
 pub mod router;
+pub mod session;
 
 pub use batch::{Batcher, BatchConfig};
 pub use router::Router;
+pub use session::SessionStore;
 
 use crate::algo::BesfScratch;
 use crate::attention::attention_f32;
@@ -27,7 +35,7 @@ use anyhow::Result;
 use std::borrow::Cow;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 /// One attention request (single query against a K/V context).
@@ -46,9 +54,39 @@ pub struct AttnRequest {
 
 impl AttnRequest {
     /// Shape key used for batching (requests in a batch share an artifact).
+    ///
+    /// Alpha participates via its exact f32 bit pattern. The previous
+    /// `(alpha * 100).round() as u32` bucketing collided alphas closer than
+    /// 0.005 and saturated negative or NaN alphas to bucket 0, silently
+    /// batching them with `alpha == 0.0`. Non-finite/negative alphas never
+    /// reach the batcher at all: [`Engine::submit`] rejects them as counted
+    /// per-request errors.
     pub fn shape_key(&self) -> (ArtifactKind, usize, usize, u32) {
-        (self.kind, self.seq, self.dim, (self.alpha * 100.0).round() as u32)
+        (self.kind, self.seq, self.dim, (self.alpha as f32).to_bits())
     }
+}
+
+/// One operation on a decode session (the KV-cache serving path).
+#[derive(Debug, Clone)]
+pub enum SessionOp {
+    /// Open a session over a prompt context. Quantization scales, the K
+    /// bit-plane decomposition and the LATS α are fixed here (prefill-time
+    /// calibration).
+    Open { alpha: f64, seq: usize, dim: usize, k: Vec<f32>, v: Vec<f32> },
+    /// Append one generated token's K/V row to the cached context.
+    Append { k_row: Vec<f32>, v_row: Vec<f32> },
+    /// Run one decode step (BESF/LATS selection + sparse V) for a fresh
+    /// query against the cached context.
+    Decode { q: Vec<f32> },
+    /// Drop the session, freeing its cached planes.
+    Close,
+}
+
+/// A session-addressed request, routed sticky to the worker owning the cache.
+#[derive(Debug, Clone)]
+pub struct SessionRequest {
+    pub session: u64,
+    pub op: SessionOp,
 }
 
 /// Completed response.
@@ -69,6 +107,15 @@ pub struct AttnResponse {
 /// is not `Send`), so implementations need not be thread-safe.
 pub trait AttnExecutor: 'static {
     fn execute(&mut self, req: &AttnRequest) -> Result<(Vec<f32>, usize)>;
+
+    /// Execute one session operation, returning `(output, kept)` — output is
+    /// empty and `kept` is the context length for non-decode ops. Executors
+    /// without session support (the dense fallback, PJRT) reject it; the
+    /// worker loop counts the rejection as a per-request error instead of
+    /// dying.
+    fn execute_session(&mut self, req: &SessionRequest) -> Result<(Vec<f32>, usize)> {
+        anyhow::bail!("executor does not support sessions (session {})", req.session)
+    }
 }
 
 /// Shape checks shared by the pure-Rust executors: a malformed hand-built
@@ -97,7 +144,7 @@ fn gather_valid(req: &AttnRequest) -> (usize, Cow<'_, [f32]>, Cow<'_, [f32]>) {
         .collect();
     let n = live.len();
     // `live` is ascending and unique, so last == n-1 ⇔ it is exactly 0..n.
-    if live.last().map_or(true, |&l| l + 1 == n) {
+    if live.last().is_none_or(|&l| l + 1 == n) {
         return (n, Cow::Borrowed(&req.k[..n * dim]), Cow::Borrowed(&req.v[..n * dim]));
     }
     let mut k = Vec::with_capacity(n * dim);
@@ -138,11 +185,14 @@ pub struct BesfExecutor {
     /// (executors are constructed inside their worker thread — one scratch
     /// per worker).
     scratch: BesfScratch,
+    /// This worker's session KV-caches; the router pins a session's ops
+    /// here for the session's whole life (DESIGN.md §7).
+    sessions: SessionStore,
 }
 
 impl Default for BesfExecutor {
     fn default() -> Self {
-        Self { radius: 5.0, scratch: BesfScratch::new() }
+        Self { radius: 5.0, scratch: BesfScratch::new(), sessions: SessionStore::new() }
     }
 }
 
@@ -162,6 +212,25 @@ impl AttnExecutor for BesfExecutor {
         let qr = head.run_query_scratch(0, SelectionPolicy::Lats, &mut self.scratch);
         Ok((qr.out, qr.sel.survivors.len()))
     }
+
+    fn execute_session(&mut self, req: &SessionRequest) -> Result<(Vec<f32>, usize)> {
+        match &req.op {
+            SessionOp::Open { alpha, seq, dim, k, v } => {
+                let cfg = LatsConfig { alpha: *alpha, radius: self.radius };
+                self.sessions.open(req.session, cfg, k, v, *seq, *dim)?;
+                Ok((Vec::new(), *seq))
+            }
+            SessionOp::Append { k_row, v_row } => {
+                let len = self.sessions.append(req.session, k_row, v_row)?;
+                Ok((Vec::new(), len))
+            }
+            SessionOp::Decode { q } => self.sessions.decode(req.session, q, &mut self.scratch),
+            SessionOp::Close => {
+                self.sessions.close(req.session)?;
+                Ok((Vec::new(), 0))
+            }
+        }
+    }
 }
 
 /// Aggregated serving metrics.
@@ -169,6 +238,10 @@ impl AttnExecutor for BesfExecutor {
 pub struct Metrics {
     pub completed: u64,
     pub errors: u64,
+    /// Responses whose client had already dropped its receiver. Counted,
+    /// never propagated: a disconnected client must not take down a worker
+    /// (or the session caches it holds).
+    pub dropped: u64,
     pub batches: u64,
     pub mean_batch_size: f64,
     pub mean_latency_us: f64,
@@ -180,6 +253,7 @@ pub struct Metrics {
 struct MetricsInner {
     completed: u64,
     errors: u64,
+    dropped: u64,
     batches: u64,
     batch_size_sum: u64,
     latencies_us: Vec<f64>,
@@ -187,11 +261,57 @@ struct MetricsInner {
     finished: Option<Instant>,
 }
 
+/// Poison-tolerant metrics lock. A worker that panicked while holding the
+/// lock must not cascade `lock().unwrap()` panics into every other worker
+/// and metrics reader — the counters inside are plain integers, safe to
+/// keep using after a poisoning.
+fn lock_metrics(m: &Mutex<MetricsInner>) -> MutexGuard<'_, MetricsInner> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Record a completion and send the response. Metrics update BEFORE the
+/// send (a caller that has all its responses must see all counts); a send
+/// to a dropped receiver is counted, not propagated.
+fn deliver(
+    m: &Mutex<MetricsInner>,
+    t0: Instant,
+    resp: AttnResponse,
+    resp_tx: &Sender<AttnResponse>,
+) {
+    {
+        let mut mi = lock_metrics(m);
+        mi.completed += 1;
+        mi.latencies_us.push(resp.latency.as_secs_f64() * 1e6);
+        if mi.started.is_none() {
+            mi.started = Some(t0);
+        }
+        mi.finished = Some(Instant::now());
+    }
+    if resp_tx.send(resp).is_err() {
+        lock_metrics(m).dropped += 1;
+    }
+}
+
+/// Unit of work handed to an executor worker.
+enum Job {
+    /// A shape-homogeneous batch from the [`Batcher`].
+    Batch(Vec<(AttnRequest, Instant, Sender<AttnResponse>)>),
+    /// A single session op (sticky-routed, never shape-batched).
+    Session(SessionRequest, Instant, Sender<AttnResponse>),
+}
+
+/// What `Engine::submit*` enqueues to the batcher thread.
+enum Submission {
+    OneShot(AttnRequest, Sender<AttnResponse>),
+    Session(SessionRequest, Sender<AttnResponse>),
+}
+
 /// The serving engine: batcher thread + N executor workers.
 pub struct Engine {
-    tx: Sender<(AttnRequest, Sender<AttnResponse>)>,
+    tx: Sender<Submission>,
     metrics: Arc<Mutex<MetricsInner>>,
     next_id: AtomicU64,
+    next_session: AtomicU64,
     workers: Vec<std::thread::JoinHandle<()>>,
     batcher: Option<std::thread::JoinHandle<()>>,
 }
@@ -207,78 +327,131 @@ impl Engine {
         assert!(n_workers >= 1);
         let metrics = Arc::new(Mutex::new(MetricsInner::default()));
 
+        // Feedback path worker → batcher: a rejected `Open` (store at cap,
+        // bad shapes, duplicate id, sessionless executor) must release its
+        // router pin, or every failed open would leak a `Router::sessions`
+        // entry forever (the client only sees a disconnected receiver and
+        // has nothing to Close). Session ids are never reused, so a late
+        // unbind can't clash with a rebind.
+        let (unbind_tx, unbind_rx): (Sender<u64>, Receiver<u64>) = channel();
+
         // Worker channels.
         let mut worker_txs = Vec::new();
         let mut workers = Vec::new();
         for _ in 0..n_workers {
-            let (wtx, wrx): (
-                Sender<Vec<(AttnRequest, Instant, Sender<AttnResponse>)>>,
-                Receiver<Vec<(AttnRequest, Instant, Sender<AttnResponse>)>>,
-            ) = channel();
+            let (wtx, wrx): (Sender<Job>, Receiver<Job>) = channel();
             let factory = make_executor.clone();
             let m = Arc::clone(&metrics);
+            let unbind = unbind_tx.clone();
             workers.push(std::thread::spawn(move || {
                 let mut exec = factory();
-                while let Ok(batch) = wrx.recv() {
-                    let bsize = batch.len() as u64;
-                    for (req, submitted, resp_tx) in batch {
-                        let t0 = Instant::now();
-                        match exec.execute(&req) {
-                            Ok((out, kept)) => {
-                                let latency = submitted.elapsed();
-                                // Metrics BEFORE the response: a caller that
-                                // has all its responses must see all counts.
-                                {
-                                    let mut mi = m.lock().unwrap();
-                                    mi.completed += 1;
-                                    mi.latencies_us.push(latency.as_secs_f64() * 1e6);
-                                    if mi.started.is_none() {
-                                        mi.started = Some(t0);
+                while let Ok(job) = wrx.recv() {
+                    match job {
+                        Job::Batch(batch) => {
+                            let bsize = batch.len() as u64;
+                            for (req, submitted, resp_tx) in batch {
+                                let t0 = Instant::now();
+                                match exec.execute(&req) {
+                                    Ok((out, kept)) => {
+                                        let latency = submitted.elapsed();
+                                        let resp =
+                                            AttnResponse { id: req.id, out, kept, latency };
+                                        deliver(&m, t0, resp, &resp_tx);
                                     }
-                                    mi.finished = Some(Instant::now());
+                                    Err(_) => lock_metrics(&m).errors += 1,
                                 }
-                                let _ = resp_tx.send(AttnResponse {
-                                    id: req.id,
-                                    out,
-                                    kept,
-                                    latency,
-                                });
                             }
-                            Err(_) => {
-                                let mut mi = m.lock().unwrap();
-                                mi.errors += 1;
+                            let mut mi = lock_metrics(&m);
+                            mi.batches += 1;
+                            mi.batch_size_sum += bsize;
+                        }
+                        Job::Session(req, submitted, resp_tx) => {
+                            let t0 = Instant::now();
+                            match exec.execute_session(&req) {
+                                Ok((out, kept)) => {
+                                    let latency = submitted.elapsed();
+                                    let resp =
+                                        AttnResponse { id: req.session, out, kept, latency };
+                                    deliver(&m, t0, resp, &resp_tx);
+                                }
+                                Err(_) => {
+                                    lock_metrics(&m).errors += 1;
+                                    // A failed Open never produced a cache:
+                                    // tell the batcher to drop the pin.
+                                    if matches!(req.op, SessionOp::Open { .. }) {
+                                        let _ = unbind.send(req.session);
+                                    }
+                                }
                             }
                         }
                     }
-                    let mut mi = m.lock().unwrap();
-                    mi.batches += 1;
-                    mi.batch_size_sum += bsize;
                 }
             }));
             worker_txs.push(wtx);
         }
 
-        // Batcher thread: shape-group then route to least-loaded worker.
-        let (tx, rx): (
-            Sender<(AttnRequest, Sender<AttnResponse>)>,
-            Receiver<(AttnRequest, Sender<AttnResponse>)>,
-        ) = channel();
+        // The batcher holds the receive side; drop the engine's own sender
+        // so the channel closes when the workers exit.
+        drop(unbind_tx);
+
+        // Batcher thread: shape-group one-shots, dispatch session ops
+        // immediately (sticky-routed, order-preserving per session).
+        let (tx, rx): (Sender<Submission>, Receiver<Submission>) = channel();
         let batcher = {
             std::thread::spawn(move || {
                 let mut batcher = Batcher::new(cfg);
                 let mut router = Router::new(worker_txs.len());
+                // Session ops bind on Open, follow the pin thereafter, and
+                // unbind after routing Close. Returns false when workers are
+                // gone (shutdown).
+                let dispatch_session =
+                    |router: &mut Router, req: SessionRequest, resp: Sender<AttnResponse>| {
+                        let w = match req.op {
+                            SessionOp::Open { .. } => router.bind_session(req.session),
+                            SessionOp::Close => {
+                                let w = router.route_session(req.session);
+                                router.unbind_session(req.session);
+                                w
+                            }
+                            _ => router.route_session(req.session),
+                        };
+                        router.note_dispatch(w, 1);
+                        worker_txs[w].send(Job::Session(req, Instant::now(), resp)).is_ok()
+                    };
                 loop {
-                    // Block for the first request, then drain within the window.
+                    // Release pins of sessions whose Open a worker rejected.
+                    while let Ok(sid) = unbind_rx.try_recv() {
+                        router.unbind_session(sid);
+                    }
+                    // Block for the first submission, then drain the window.
                     let first = match rx.recv_timeout(Duration::from_millis(5)) {
                         Ok(r) => Some(r),
                         Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
                         Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
                     };
-                    if let Some((req, resp)) = first {
-                        batcher.push(req, Instant::now(), resp);
+                    if let Some(sub) = first {
+                        match sub {
+                            Submission::OneShot(req, resp) => {
+                                batcher.push(req, Instant::now(), resp)
+                            }
+                            Submission::Session(req, resp) => {
+                                if !dispatch_session(&mut router, req, resp) {
+                                    return;
+                                }
+                            }
+                        }
                         // Greedy drain without blocking.
-                        while let Ok((req, resp)) = rx.try_recv() {
-                            batcher.push(req, Instant::now(), resp);
+                        while let Ok(sub) = rx.try_recv() {
+                            match sub {
+                                Submission::OneShot(req, resp) => {
+                                    batcher.push(req, Instant::now(), resp)
+                                }
+                                Submission::Session(req, resp) => {
+                                    if !dispatch_session(&mut router, req, resp) {
+                                        return;
+                                    }
+                                }
+                            }
                             if batcher.any_full() {
                                 break;
                             }
@@ -287,7 +460,7 @@ impl Engine {
                     for batch in batcher.take_ready(Instant::now()) {
                         let w = router.pick();
                         router.note_dispatch(w, batch.len());
-                        if worker_txs[w].send(batch).is_err() {
+                        if worker_txs[w].send(Job::Batch(batch)).is_err() {
                             return;
                         }
                     }
@@ -295,21 +468,89 @@ impl Engine {
                 // Drain leftovers on shutdown.
                 for batch in batcher.take_all() {
                     let w = router.pick();
-                    let _ = worker_txs[w].send(batch);
+                    let _ = worker_txs[w].send(Job::Batch(batch));
                 }
             })
         };
 
-        Self { tx, metrics, next_id: AtomicU64::new(1), workers, batcher: Some(batcher) }
+        Self {
+            tx,
+            metrics,
+            next_id: AtomicU64::new(1),
+            next_session: AtomicU64::new(1),
+            workers,
+            batcher: Some(batcher),
+        }
     }
 
     /// Submit a request; returns a receiver for its response.
+    ///
+    /// A non-finite or negative `alpha` is rejected here as a counted
+    /// per-request error (the receiver resolves disconnected) — it must
+    /// never reach the batcher, where its shape key would otherwise alias a
+    /// legitimate alpha's batch.
     pub fn submit(&self, mut req: AttnRequest) -> Receiver<AttnResponse> {
         req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = channel();
+        if !req.alpha.is_finite() || req.alpha < 0.0 {
+            lock_metrics(&self.metrics).errors += 1;
+            return rrx;
+        }
         // Engine shutdown mid-submit simply drops the sender; callers see a
         // disconnected receiver.
-        let _ = self.tx.send((req, rtx));
+        let _ = self.tx.send(Submission::OneShot(req, rtx));
+        rrx
+    }
+
+    /// Open a decode session over a prompt context (the prefill step);
+    /// returns the session id plus a receiver for the ack (`kept` = context
+    /// length). Quantization scales are calibrated on this prompt and fixed
+    /// for the session's life; all subsequent ops for the id land on the
+    /// worker that holds the cache. Alpha is validated like
+    /// [`Engine::submit`].
+    pub fn open_session(
+        &self,
+        alpha: f64,
+        seq: usize,
+        dim: usize,
+        k: Vec<f32>,
+        v: Vec<f32>,
+    ) -> (u64, Receiver<AttnResponse>) {
+        let session = self.next_session.fetch_add(1, Ordering::Relaxed);
+        if !alpha.is_finite() || alpha < 0.0 {
+            lock_metrics(&self.metrics).errors += 1;
+            let (_, rrx) = channel();
+            return (session, rrx);
+        }
+        let rx = self.session_op(session, SessionOp::Open { alpha, seq, dim, k, v });
+        (session, rx)
+    }
+
+    /// Append one generated token's K/V row to a session's cached context
+    /// (ack's `kept` = new context length).
+    pub fn session_append(
+        &self,
+        session: u64,
+        k_row: Vec<f32>,
+        v_row: Vec<f32>,
+    ) -> Receiver<AttnResponse> {
+        self.session_op(session, SessionOp::Append { k_row, v_row })
+    }
+
+    /// Run one decode step against a session's cached context.
+    pub fn session_decode(&self, session: u64, q: Vec<f32>) -> Receiver<AttnResponse> {
+        self.session_op(session, SessionOp::Decode { q })
+    }
+
+    /// Close a session, freeing its cache. Later ops on the id are counted
+    /// errors.
+    pub fn close_session(&self, session: u64) -> Receiver<AttnResponse> {
+        self.session_op(session, SessionOp::Close)
+    }
+
+    fn session_op(&self, session: u64, op: SessionOp) -> Receiver<AttnResponse> {
+        let (rtx, rrx) = channel();
+        let _ = self.tx.send(Submission::Session(SessionRequest { session, op }, rtx));
         rrx
     }
 
@@ -321,7 +562,7 @@ impl Engine {
 
     /// Snapshot current metrics.
     pub fn metrics(&self) -> Metrics {
-        let mi = self.metrics.lock().unwrap();
+        let mi = lock_metrics(&self.metrics);
         let mean_lat = crate::util::stats::mean(&mi.latencies_us);
         let p95 = crate::util::stats::percentile(&mi.latencies_us, 95.0);
         let elapsed = match (mi.started, mi.finished) {
@@ -331,6 +572,7 @@ impl Engine {
         Metrics {
             completed: mi.completed,
             errors: mi.errors,
+            dropped: mi.dropped,
             batches: mi.batches,
             mean_batch_size: if mi.batches == 0 {
                 0.0
@@ -359,6 +601,7 @@ impl Engine {
 mod tests {
     use super::*;
     use crate::util::SplitMix64;
+    use crate::workload::DecodeTrace;
 
     fn mk_request(seq: usize, dim: usize, seed: u64) -> AttnRequest {
         let mut rng = SplitMix64::new(seed);
@@ -517,5 +760,164 @@ mod tests {
         // The response may or may not have been delivered before shutdown —
         // but the channel must be resolved either way (no hang).
         let _ = rx.try_recv();
+    }
+
+    /// Poll metrics until `pred` holds (or a 5 s deadline passes).
+    fn wait_metrics<F: Fn(&Metrics) -> bool>(engine: &Engine, pred: F) -> Metrics {
+        let t0 = Instant::now();
+        loop {
+            let m = engine.metrics();
+            if pred(&m) || t0.elapsed() > Duration::from_secs(5) {
+                return m;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    #[test]
+    fn shape_key_separates_alphas_closer_than_half_percent() {
+        // Regression: (alpha*100).round() bucketing collided 0.601 with
+        // 0.604 (both bucket 60), silently batching different artifacts.
+        let mut a = mk_request(8, 4, 1);
+        let mut b = mk_request(8, 4, 2);
+        a.alpha = 0.601;
+        b.alpha = 0.604;
+        assert_ne!(a.shape_key(), b.shape_key());
+        b.alpha = 0.601;
+        assert_eq!(a.shape_key(), b.shape_key());
+    }
+
+    #[test]
+    fn invalid_alpha_is_rejected_at_enqueue_as_counted_error() {
+        // Regression: a NaN or negative alpha saturated to bucket 0 and
+        // batched with alpha == 0.0. Now it never reaches the batcher.
+        let engine = Engine::start(1, BatchConfig::default(), || RustExecutor);
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -0.5] {
+            let mut req = mk_request(4, 4, 7);
+            req.alpha = bad;
+            let rx = engine.submit(req);
+            assert!(rx.recv_timeout(Duration::from_secs(1)).is_err(), "alpha {bad}");
+        }
+        let (_sid, rx) = engine.open_session(f64::NAN, 1, 4, vec![0.0; 4], vec![0.0; 4]);
+        assert!(rx.recv_timeout(Duration::from_secs(1)).is_err());
+        let m = engine.metrics();
+        assert_eq!(m.errors, 5);
+        assert_eq!(m.completed, 0);
+        // Valid requests still flow.
+        let ok = engine.submit_blocking(mk_request(4, 4, 8)).unwrap();
+        assert_eq!(ok.out.len(), 4);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn dropped_response_receiver_is_counted_not_fatal() {
+        // A client that walks away must show up in `dropped`, and the worker
+        // must keep serving (it may hold other clients' session caches).
+        let cfg = BatchConfig { max_batch: 16, max_wait: Duration::from_millis(50) };
+        let engine = Engine::start(1, cfg, || RustExecutor);
+        drop(engine.submit(mk_request(8, 4, 21)));
+        // The request executes after the 50 ms batching window, long after
+        // its receiver is gone.
+        let m = wait_metrics(&engine, |m| m.completed == 1 && m.dropped == 1);
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.dropped, 1);
+        assert_eq!(m.errors, 0);
+        let ok = engine.submit_blocking(mk_request(8, 4, 22)).unwrap();
+        assert_eq!(ok.out.len(), 4);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn session_decode_is_bit_identical_to_one_shot_requests() {
+        // The tentpole acceptance: a decode step through the session path
+        // (cached quantization + incrementally appended planes, sticky
+        // routing across 3 workers) must be bit-identical to a one-shot
+        // request carrying the same full context.
+        let trace = DecodeTrace::synth(48, 4, 16, 0x5E55);
+        let engine = Engine::start(3, BatchConfig::default(), BesfExecutor::default);
+        let (sid, rx) = engine.open_session(
+            0.6,
+            trace.prompt_len,
+            trace.dim,
+            trace.prompt_k.clone(),
+            trace.prompt_v.clone(),
+        );
+        let ack = rx.recv_timeout(Duration::from_secs(5)).expect("open ack");
+        assert_eq!(ack.kept, trace.prompt_len);
+        for (i, step) in trace.steps.iter().enumerate() {
+            let ack = engine
+                .session_append(sid, step.k_row.clone(), step.v_row.clone())
+                .recv_timeout(Duration::from_secs(5))
+                .expect("append ack");
+            assert_eq!(ack.kept, trace.prompt_len + i + 1, "step {i} context length");
+            let dec = engine
+                .session_decode(sid, step.q.clone())
+                .recv_timeout(Duration::from_secs(5))
+                .expect("decode");
+            let (k_full, v_full, n) = trace.context_after(i + 1);
+            let one_shot = engine
+                .submit_blocking(AttnRequest {
+                    id: 0,
+                    kind: ArtifactKind::BitStopper,
+                    alpha: 0.6,
+                    seq: n,
+                    dim: trace.dim,
+                    q: step.q.clone(),
+                    k: k_full,
+                    v: v_full,
+                    valid: vec![1.0; n],
+                })
+                .unwrap();
+            assert_eq!(dec.out, one_shot.out, "step {i}: outputs must be bit-identical");
+            assert_eq!(dec.kept, one_shot.kept, "step {i}: survivor counts");
+            assert!(dec.kept >= 1);
+        }
+        engine.close_session(sid).recv_timeout(Duration::from_secs(5)).expect("close ack");
+        // If routing were not sticky, appends/decodes would have landed on
+        // workers without the cache and shown up here as errors.
+        let m = engine.metrics();
+        assert_eq!(m.errors, 0);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn stale_session_ops_are_counted_errors_and_worker_survives() {
+        let engine = Engine::start(1, BatchConfig::default(), BesfExecutor::default);
+        let trace = DecodeTrace::synth(8, 1, 4, 0x5E66);
+        let (sid, rx) = engine.open_session(
+            0.6,
+            trace.prompt_len,
+            trace.dim,
+            trace.prompt_k.clone(),
+            trace.prompt_v.clone(),
+        );
+        rx.recv_timeout(Duration::from_secs(5)).expect("open ack");
+        engine.close_session(sid).recv_timeout(Duration::from_secs(5)).expect("close ack");
+        // Decode against the closed session: counted error, receiver
+        // resolves disconnected, worker survives.
+        let rx = engine.session_decode(sid, trace.steps[0].q.clone());
+        assert!(rx.recv_timeout(Duration::from_secs(5)).is_err());
+        // Ops on a never-opened session behave the same.
+        let rx = engine.session_append(999, vec![0.0; 4], vec![0.0; 4]);
+        assert!(rx.recv_timeout(Duration::from_secs(5)).is_err());
+        let m = engine.metrics();
+        assert_eq!(m.errors, 2);
+        let ok = engine.submit_blocking(mk_request(8, 4, 31)).unwrap();
+        assert_eq!(ok.out.len(), 4);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn session_ops_on_sessionless_executor_are_counted_errors() {
+        // The dense fallback executor has no session support: the default
+        // trait impl rejects, the worker counts, nothing dies.
+        let engine = Engine::start(1, BatchConfig::default(), || RustExecutor);
+        let (_sid, rx) = engine.open_session(0.5, 1, 2, vec![0.0; 2], vec![0.0; 2]);
+        assert!(rx.recv_timeout(Duration::from_secs(5)).is_err());
+        let m = engine.metrics();
+        assert_eq!(m.errors, 1);
+        let ok = engine.submit_blocking(mk_request(4, 2, 41)).unwrap();
+        assert_eq!(ok.out.len(), 2);
+        engine.shutdown();
     }
 }

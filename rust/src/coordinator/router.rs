@@ -1,17 +1,23 @@
 //! Worker routing: least-outstanding-work selection with round-robin tie
-//! breaking (the standard replica-routing policy of serving routers).
+//! breaking (the standard replica-routing policy of serving routers), plus
+//! session-sticky bindings for the KV-cache path — a decode session's cached
+//! context lives inside exactly one executor worker, so every op on that
+//! session must land on the worker that holds it (DESIGN.md §7).
 
-/// Tracks estimated outstanding work per worker.
+use std::collections::HashMap;
+
+/// Tracks estimated outstanding work per worker and session→worker pins.
 #[derive(Debug)]
 pub struct Router {
     outstanding: Vec<usize>,
     rr: usize,
+    sessions: HashMap<u64, usize>,
 }
 
 impl Router {
     pub fn new(n_workers: usize) -> Self {
         assert!(n_workers >= 1);
-        Self { outstanding: vec![0; n_workers], rr: 0 }
+        Self { outstanding: vec![0; n_workers], rr: 0, sessions: HashMap::new() }
     }
 
     /// Pick the least-loaded worker (round-robin across ties).
@@ -41,6 +47,41 @@ impl Router {
 
     pub fn n_workers(&self) -> usize {
         self.outstanding.len()
+    }
+
+    /// Pin a new session to the currently least-loaded worker; subsequent
+    /// [`Router::route_session`] calls return the same worker until
+    /// [`Router::unbind_session`].
+    pub fn bind_session(&mut self, session: u64) -> usize {
+        let w = self.pick();
+        self.sessions.insert(session, w);
+        w
+    }
+
+    /// The worker a session's ops must go to. Unknown sessions (never opened
+    /// or already closed) fall back to least-loaded routing — the receiving
+    /// worker's `SessionStore` then rejects the op as a counted error, which
+    /// is the intended failure mode.
+    pub fn route_session(&mut self, session: u64) -> usize {
+        match self.sessions.get(&session) {
+            Some(&w) => w,
+            None => self.pick(),
+        }
+    }
+
+    /// The worker a session is pinned to, if any.
+    pub fn session_worker(&self, session: u64) -> Option<usize> {
+        self.sessions.get(&session).copied()
+    }
+
+    /// Drop a session pin (on `Close`, after routing the close op itself).
+    pub fn unbind_session(&mut self, session: u64) {
+        self.sessions.remove(&session);
+    }
+
+    /// Number of live session pins.
+    pub fn n_sessions(&self) -> usize {
+        self.sessions.len()
     }
 }
 
@@ -83,5 +124,33 @@ mod tests {
         let mut r = Router::new(1);
         r.note_complete(0, 99);
         assert_eq!(r.pick(), 0);
+    }
+
+    #[test]
+    fn session_routing_is_sticky_until_unbind() {
+        let mut r = Router::new(3);
+        let w = r.bind_session(7);
+        // Load the bound worker far above the others: stickiness must win
+        // over least-loaded.
+        r.note_dispatch(w, 100);
+        for _ in 0..5 {
+            assert_eq!(r.route_session(7), w);
+        }
+        assert_eq!(r.session_worker(7), Some(w));
+        assert_eq!(r.n_sessions(), 1);
+        r.unbind_session(7);
+        assert_eq!(r.session_worker(7), None);
+        assert_eq!(r.n_sessions(), 0);
+        // After unbind the loaded worker is avoided again.
+        assert_ne!(r.route_session(7), w);
+    }
+
+    #[test]
+    fn distinct_sessions_spread_over_workers() {
+        let mut r = Router::new(2);
+        let a = r.bind_session(1);
+        r.note_dispatch(a, 1);
+        let b = r.bind_session(2);
+        assert_ne!(a, b, "second session must land on the idle worker");
     }
 }

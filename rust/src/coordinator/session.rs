@@ -1,0 +1,246 @@
+//! Session KV-cache: per-session owned attention contexts for the
+//! autoregressive decode path (DESIGN.md §7).
+//!
+//! A one-shot request ships its whole K/V context, re-quantizes it, and
+//! re-decomposes K into 12 bit planes — O(seq) redundant work per generated
+//! token. A session instead pays that once at [`SessionStore::open`]
+//! (prefill-time calibration: the K/V scales and packed planes are fixed for
+//! the session's life), then grows the cache one token at a time
+//! ([`SessionStore::append`], O(dim) via `BitPlanes::append_row`) and serves
+//! decode steps against it ([`SessionStore::decode`]). The grown planes are
+//! bit-identical to a from-scratch decomposition, so a decode step equals
+//! the one-shot path whenever the prompt calibration covers the appended
+//! rows' value range (out-of-range appends saturate like any PTQ outlier).
+//!
+//! A store lives inside exactly one executor worker; `Router::bind_session`
+//! pins all of a session's ops to that worker. Every failure here is a
+//! *counted per-request error* at the worker loop — a bad or stale session
+//! op must never panic the worker that holds other sessions' caches.
+
+use crate::algo::BesfScratch;
+use crate::config::LatsConfig;
+use crate::engine::HeadContext;
+use crate::workload::QuantAttn;
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Default hard cap on concurrently open sessions per store (i.e. per
+/// worker). Each session pins O(seq·dim) of quantized K/V plus packed
+/// planes, and the store has no idle-TTL eviction yet — without a cap, a
+/// crash-prone client population that opens sessions and never closes them
+/// would grow worker memory without bound.
+pub const DEFAULT_MAX_SESSIONS: usize = 1024;
+
+/// Session id → owned cached context (quantized K/V, packed K planes, LATS
+/// config).
+pub struct SessionStore {
+    sessions: HashMap<u64, HeadContext<'static>>,
+    /// Opens beyond this many live sessions are rejected as counted errors.
+    max_sessions: usize,
+}
+
+impl Default for SessionStore {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_MAX_SESSIONS)
+    }
+}
+
+impl SessionStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Store with an explicit session cap (tests, memory-constrained
+    /// deployments).
+    pub fn with_capacity(max_sessions: usize) -> Self {
+        Self { sessions: HashMap::new(), max_sessions }
+    }
+
+    /// Number of live sessions.
+    pub fn n_open(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn contains(&self, session: u64) -> bool {
+        self.sessions.contains_key(&session)
+    }
+
+    /// Context length (keys) of a live session.
+    pub fn context_len(&self, session: u64) -> Option<usize> {
+        self.sessions.get(&session).map(|ctx| ctx.qa.seq())
+    }
+
+    /// Open a session over a prompt context: quantize K/V (per-tensor PTQ
+    /// calibrated on this prompt), decompose K into planes, fix the LATS
+    /// config. O(seq·dim), paid once per session.
+    pub fn open(
+        &mut self,
+        session: u64,
+        cfg: LatsConfig,
+        k: &[f32],
+        v: &[f32],
+        seq: usize,
+        dim: usize,
+    ) -> Result<()> {
+        anyhow::ensure!(dim > 0, "session dim must be positive");
+        anyhow::ensure!(k.len() == seq * dim, "session k length != seq*dim");
+        anyhow::ensure!(v.len() == seq * dim, "session v length != seq*dim");
+        anyhow::ensure!(!self.sessions.contains_key(&session), "session {session} already open");
+        anyhow::ensure!(
+            self.sessions.len() < self.max_sessions,
+            "session table full ({} live sessions)",
+            self.max_sessions
+        );
+        let qa = QuantAttn::quantize(&[], k, v, seq, dim);
+        self.sessions.insert(session, HeadContext::from_owned(qa, cfg));
+        Ok(())
+    }
+
+    /// Append one generated token's K/V row; returns the new context length.
+    pub fn append(&mut self, session: u64, k_row: &[f32], v_row: &[f32]) -> Result<usize> {
+        let ctx = self
+            .sessions
+            .get_mut(&session)
+            .ok_or_else(|| anyhow::anyhow!("unknown session {session}"))?;
+        anyhow::ensure!(k_row.len() == ctx.qa.dim(), "k_row length != dim");
+        anyhow::ensure!(v_row.len() == ctx.qa.dim(), "v_row length != dim");
+        ctx.append_token(k_row, v_row);
+        Ok(ctx.qa.seq())
+    }
+
+    /// One decode step: BESF/LATS selection + sparse V over the cached
+    /// context. Returns (output, survivors kept).
+    pub fn decode(
+        &self,
+        session: u64,
+        q: &[f32],
+        scratch: &mut BesfScratch,
+    ) -> Result<(Vec<f32>, usize)> {
+        let ctx = self
+            .sessions
+            .get(&session)
+            .ok_or_else(|| anyhow::anyhow!("unknown session {session}"))?;
+        anyhow::ensure!(q.len() == ctx.qa.dim(), "query length != dim");
+        let qr = ctx.decode_scratch(q, scratch);
+        Ok((qr.out, qr.sel.survivors.len()))
+    }
+
+    /// Close a session, freeing its quantized K/V and packed planes.
+    pub fn close(&mut self, session: u64) -> Result<()> {
+        self.sessions
+            .remove(&session)
+            .map(|_| ())
+            .ok_or_else(|| anyhow::anyhow!("unknown session {session}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::DecodeTrace;
+
+    fn store_with_session(sid: u64, trace: &DecodeTrace) -> SessionStore {
+        let mut store = SessionStore::new();
+        store
+            .open(
+                sid,
+                LatsConfig::default(),
+                &trace.prompt_k,
+                &trace.prompt_v,
+                trace.prompt_len,
+                trace.dim,
+            )
+            .unwrap();
+        store
+    }
+
+    #[test]
+    fn open_append_decode_close_lifecycle() {
+        let trace = DecodeTrace::synth(16, 2, 8, 0x5E01);
+        let mut store = store_with_session(9, &trace);
+        assert!(store.contains(9));
+        assert_eq!(store.context_len(9), Some(16));
+
+        let step = &trace.steps[0];
+        assert_eq!(store.append(9, &step.k_row, &step.v_row).unwrap(), 17);
+        let mut scratch = BesfScratch::new();
+        let (out, kept) = store.decode(9, &step.q, &mut scratch).unwrap();
+        assert_eq!(out.len(), 8);
+        assert!(out.iter().all(|x| x.is_finite()));
+        assert!(kept >= 1 && kept <= 17);
+
+        store.close(9).unwrap();
+        assert_eq!(store.n_open(), 0);
+    }
+
+    #[test]
+    fn close_frees_and_stale_ops_are_errors_not_panics() {
+        // The eviction contract: closing drops the cached planes; every op
+        // against a closed (or never-opened) session is a plain Err.
+        let trace = DecodeTrace::synth(8, 1, 4, 0x5E02);
+        let mut store = store_with_session(1, &trace);
+        store.close(1).unwrap();
+        assert!(!store.contains(1));
+        assert_eq!(store.context_len(1), None);
+
+        let step = &trace.steps[0];
+        let mut scratch = BesfScratch::new();
+        assert!(store.decode(1, &step.q, &mut scratch).is_err());
+        assert!(store.append(1, &step.k_row, &step.v_row).is_err());
+        assert!(store.close(1).is_err(), "double close is an error");
+        assert!(store.decode(77, &step.q, &mut scratch).is_err(), "unknown session");
+    }
+
+    #[test]
+    fn open_validates_shapes_and_duplicates() {
+        let mut store = SessionStore::new();
+        let cfg = LatsConfig::default();
+        assert!(store.open(1, cfg, &[0.0; 8], &[0.0; 8], 2, 4).is_ok());
+        assert!(store.open(1, cfg, &[0.0; 8], &[0.0; 8], 2, 4).is_err(), "duplicate id");
+        assert!(store.open(2, cfg, &[0.0; 7], &[0.0; 8], 2, 4).is_err(), "bad k length");
+        assert!(store.open(3, cfg, &[0.0; 8], &[0.0; 9], 2, 4).is_err(), "bad v length");
+        assert!(store.open(4, cfg, &[], &[], 0, 0).is_err(), "zero dim");
+        assert_eq!(store.n_open(), 1);
+    }
+
+    #[test]
+    fn session_cap_bounds_store_and_frees_on_close() {
+        // Abandoned sessions can't grow a worker without bound: opens beyond
+        // the cap are counted errors, and closing makes room again.
+        let mut store = SessionStore::with_capacity(2);
+        let cfg = LatsConfig::default();
+        assert!(store.open(1, cfg, &[0.5; 4], &[0.5; 4], 1, 4).is_ok());
+        assert!(store.open(2, cfg, &[0.5; 4], &[0.5; 4], 1, 4).is_ok());
+        assert!(store.open(3, cfg, &[0.5; 4], &[0.5; 4], 1, 4).is_err(), "over cap");
+        assert_eq!(store.n_open(), 2);
+        store.close(1).unwrap();
+        assert!(store.open(3, cfg, &[0.5; 4], &[0.5; 4], 1, 4).is_ok(), "cap freed by close");
+    }
+
+    #[test]
+    fn append_validates_row_widths() {
+        let trace = DecodeTrace::synth(8, 1, 4, 0x5E03);
+        let mut store = store_with_session(5, &trace);
+        assert!(store.append(5, &[0.0; 3], &[0.0; 4]).is_err());
+        assert!(store.append(5, &[0.0; 4], &[0.0; 5]).is_err());
+        assert_eq!(store.context_len(5), Some(8), "failed appends must not grow");
+    }
+
+    #[test]
+    fn independent_sessions_do_not_interfere() {
+        let a = DecodeTrace::synth(12, 2, 4, 0x5E04);
+        let b = DecodeTrace::synth(20, 2, 4, 0x5E05);
+        let mut store = SessionStore::new();
+        let cfg = LatsConfig::default();
+        store.open(1, cfg, &a.prompt_k, &a.prompt_v, a.prompt_len, a.dim).unwrap();
+        store.open(2, cfg, &b.prompt_k, &b.prompt_v, b.prompt_len, b.dim).unwrap();
+        store.append(1, &a.steps[0].k_row, &a.steps[0].v_row).unwrap();
+        assert_eq!(store.context_len(1), Some(13));
+        assert_eq!(store.context_len(2), Some(20));
+        store.close(1).unwrap();
+        let mut scratch = BesfScratch::new();
+        let (out, _) = store.decode(2, &b.steps[0].q, &mut scratch).unwrap();
+        assert_eq!(out.len(), 4);
+        assert_eq!(store.n_open(), 1);
+    }
+}

@@ -119,7 +119,12 @@ impl EnergyModel {
     /// and read at least once on chip; callers that model tiling pass their
     /// own counts, functional models use [`EnergyModel::default_sram_bits`]).
     /// `scoreboard_rounds` — number of (token, round) partial-score updates.
-    pub fn energy(&self, cx: &Complexity, sram_bits: u64, scoreboard_rounds: u64) -> EnergyBreakdown {
+    pub fn energy(
+        &self,
+        cx: &Complexity,
+        sram_bits: u64,
+        scoreboard_rounds: u64,
+    ) -> EnergyBreakdown {
         let compute_pj = cx.bit_ops as f64 * self.ops.bitop_pj
             + cx.mac_ops as f64 * self.ops.mac12_pj
             + cx.softmax_ops as f64 * self.ops.softmax_pj
@@ -175,7 +180,13 @@ mod tests {
     #[test]
     fn energy_scales_linearly_with_work() {
         let m = EnergyModel::default();
-        let cx1 = Complexity { k_bits: 1000, bit_ops: 500, mac_ops: 20, softmax_ops: 5, ..Default::default() };
+        let cx1 = Complexity {
+            k_bits: 1000,
+            bit_ops: 500,
+            mac_ops: 20,
+            softmax_ops: 5,
+            ..Default::default()
+        };
         let cx2 = cx1.scaled(3);
         let e1 = m.energy(&cx1, 2000, 10);
         let e2 = m.energy(&cx2, 6000, 30);

@@ -26,7 +26,9 @@ use crate::algo::lats::Lats;
 use crate::attention::attention_int12_sparse;
 use crate::config::LatsConfig;
 use crate::quant::bitplane::{plane_weight, BitPlanes, QueryPlanes, N_BITS};
+use crate::quant::margin::BitMargins;
 use crate::workload::{MultiHeadAttn, QuantAttn};
+use std::borrow::Cow;
 
 /// Which selection rule the engine applies (the Fig. 13 (b) ablation axis).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -52,8 +54,17 @@ pub struct QueryResult {
 /// Prepared per-head state: the quantized problem, its 12-plane K
 /// decomposition, the per-query sliced decompositions, and the LATS threshold
 /// in the integer score domain.
+///
+/// The quantized problem is held in a [`Cow`]: one-shot consumers (simulator,
+/// figures, the per-request executor) borrow a caller-owned [`QuantAttn`]
+/// exactly as before, while the session KV-cache path
+/// ([`HeadContext::from_owned`]) owns its state so the context can outlive
+/// any request and grow in place via [`HeadContext::append_token`].
 pub struct HeadContext<'a> {
-    pub qa: &'a QuantAttn,
+    pub qa: Cow<'a, QuantAttn>,
+    /// The LATS config the context was built with (reused per decode step to
+    /// re-derive the integer radius under the step's query scale).
+    pub cfg: LatsConfig,
     pub planes: BitPlanes,
     /// Sliced decomposition of each query, built once at context creation so
     /// every select/replay (`plane_delta`) runs the word-parallel kernel.
@@ -65,9 +76,66 @@ impl<'a> HeadContext<'a> {
     /// Decompose K (and every query) and derive the integer-domain LATS
     /// radius for this head's quantization scales.
     pub fn new(qa: &'a QuantAttn, cfg: LatsConfig) -> Self {
+        Self::build(Cow::Borrowed(qa), cfg)
+    }
+
+    /// Owning variant of [`HeadContext::new`] — the session KV-cache path:
+    /// the context owns its quantized K/V and packed planes, with scales and
+    /// the plane decomposition fixed at construction (prefill calibration)
+    /// and grown incrementally by [`HeadContext::append_token`].
+    pub fn from_owned(qa: QuantAttn, cfg: LatsConfig) -> HeadContext<'static> {
+        HeadContext::build(Cow::Owned(qa), cfg)
+    }
+
+    fn build(qa: Cow<'a, QuantAttn>, cfg: LatsConfig) -> Self {
         let lats = Lats::new(cfg, qa.dim(), qa.qp.scale, qa.kp.scale);
         let qplanes = qa.queries.iter().map(|q| QueryPlanes::decompose(q)).collect();
-        Self { qa, planes: BitPlanes::decompose(&qa.k), qplanes, lats }
+        let planes = BitPlanes::decompose(&qa.k);
+        Self { qa, cfg, planes, qplanes, lats }
+    }
+
+    /// Append one generated token's K/V row to the cached context — O(dim)
+    /// work, no rebuild: the row is quantized with the context's *fixed*
+    /// scales (out-of-range values saturate like any PTQ outlier), pushed
+    /// onto the K/V matrices, and its twelve plane words are appended in
+    /// place ([`BitPlanes::append_row`]). The LATS radius depends only on
+    /// dim and the fixed scales, so it stays coherent untouched.
+    ///
+    /// On a borrowed context the first append clones the quantized state
+    /// once (`Cow::to_mut`); session callers construct with
+    /// [`HeadContext::from_owned`] and never pay that.
+    pub fn append_token(&mut self, k_row: &[f32], v_row: &[f32]) {
+        let qa = self.qa.to_mut();
+        assert_eq!(k_row.len(), qa.k.cols, "k_row length != dim");
+        assert_eq!(v_row.len(), qa.v.cols, "v_row length != v dim");
+        let ki: Vec<i16> = k_row.iter().map(|&x| qa.kp.q(x)).collect();
+        let vi: Vec<i16> = v_row.iter().map(|&x| qa.vp.q(x)).collect();
+        qa.k.push_row(&ki);
+        qa.v.push_row(&vi);
+        self.planes.append_row(&ki);
+    }
+
+    /// One decode step against the cached context: quantize a fresh query
+    /// (per-step calibration, matching the one-shot request path), select
+    /// under this context's LATS config, and accumulate sparse V — without
+    /// touching the cached planes or re-quantizing K/V.
+    ///
+    /// Bit-identity contract (tested here and end-to-end in `coordinator`):
+    /// the result equals a from-scratch one-shot run over the grown context
+    /// whenever the construction-time K/V calibration covers the appended
+    /// rows' value range (prefill calibration guarantees this for real
+    /// traffic; otherwise appended outliers saturate and the two paths may
+    /// differ exactly where per-request recalibration would have rescaled).
+    pub fn decode_scratch(&self, q: &[f32], scratch: &mut BesfScratch) -> QueryResult {
+        let qa = self.qa.as_ref();
+        assert_eq!(q.len(), qa.dim(), "query length != dim");
+        let (qi, qp) = crate::quant::quantize(q);
+        let lats = Lats::new(self.cfg, qa.dim(), qp.scale, qa.kp.scale);
+        let margins = BitMargins::generate(&qi);
+        let sel =
+            scratch.select_with(&qi, &self.planes, &margins, move |_r, ml| lats.threshold(ml));
+        let out = attention_int12_sparse(&qi, &qa.k, &qa.v, qp, qa.kp, qa.vp, &sel.survivors);
+        QueryResult { sel, out }
     }
 
     pub fn queries(&self) -> usize {
@@ -129,7 +197,7 @@ impl<'a> HeadContext<'a> {
 
     /// Sparse V accumulation over a selection's survivors.
     pub fn accumulate(&self, qi: usize, sel: &BesfResult) -> Vec<f32> {
-        let qa = self.qa;
+        let qa = self.qa.as_ref();
         attention_int12_sparse(
             &qa.queries[qi],
             &qa.k,
@@ -166,9 +234,9 @@ impl<'a> HeadContext<'a> {
     /// ANY query, which is exactly why Fig. 13 (b) shows LATS adding speedup
     /// on top of it.
     pub fn static_threshold(&self) -> i64 {
-        let qa = self.qa;
+        let qa = self.qa.as_ref();
         let seq = qa.seq();
-        let n_cal = qa.queries.len().min(4).max(1);
+        let n_cal = qa.queries.len().clamp(1, 4);
         qa.queries
             .iter()
             .take(n_cal)
@@ -257,7 +325,7 @@ impl<'a> AttentionEngine<'a> {
         let mut flat: Vec<Option<T>> = Vec::with_capacity(tasks.len());
         flat.resize_with(tasks.len(), || None);
 
-        let threads = threads.max(1).min(tasks.len().max(1));
+        let threads = threads.clamp(1, tasks.len().max(1));
         let chunk = tasks.len().div_ceil(threads).max(1);
         let f = &f;
         let heads = &self.heads;
@@ -435,6 +503,65 @@ mod tests {
         }
         let mean = errs.iter().sum::<f64>() / errs.len() as f64;
         assert!(mean < 0.2, "mean rel err {mean}");
+    }
+
+    #[test]
+    fn owned_context_append_and_decode_match_one_shot_rebuild() {
+        // The session KV-cache contract: growing an owned context one token
+        // at a time and decoding against it must be bit-identical to the
+        // one-shot path (re-quantize + re-decompose the full grown context
+        // per request) — selection, scores, and sparse output.
+        let trace = crate::workload::DecodeTrace::synth(40, 6, 24, 0xDEC0);
+        let cfg = LatsConfig::default();
+        let qa0 = QuantAttn::quantize(
+            &[],
+            &trace.prompt_k,
+            &trace.prompt_v,
+            trace.prompt_len,
+            trace.dim,
+        );
+        let mut cached = HeadContext::from_owned(qa0, cfg);
+        let mut scratch = BesfScratch::new();
+        for (i, step) in trace.steps.iter().enumerate() {
+            cached.append_token(&step.k_row, &step.v_row);
+            let got = cached.decode_scratch(&step.q, &mut scratch);
+
+            let (k_full, v_full, n) = trace.context_after(i + 1);
+            assert_eq!(cached.qa.seq(), n);
+            let qa = QuantAttn::quantize(&[step.q.clone()], &k_full, &v_full, n, trace.dim);
+            let head = HeadContext::new(&qa, cfg);
+            let want = head.run_query(0, SelectionPolicy::Lats);
+            assert_eq!(got.sel.survivors, want.sel.survivors, "step {i}");
+            assert_eq!(got.sel.death_round, want.sel.death_round, "step {i}");
+            assert_eq!(got.sel.scores, want.sel.scores, "step {i}");
+            assert_eq!(got.out, want.out, "step {i}");
+        }
+    }
+
+    #[test]
+    fn append_token_on_borrowed_context_copies_then_grows() {
+        // Appending to a borrowed context must clone once (Cow) and leave
+        // the caller's QuantAttn untouched.
+        let qa = head(16, 8, 1, 0xC0E);
+        let mut hc = HeadContext::new(&qa, LatsConfig::default());
+        hc.append_token(&[0.25; 8], &[0.5; 8]);
+        hc.append_token(&[-0.25; 8], &[0.0; 8]);
+        assert_eq!(hc.qa.seq(), 18);
+        assert_eq!(hc.planes.keys, 18);
+        assert_eq!(qa.seq(), 16, "borrowed source must not grow");
+        // The grown planes must equal a from-scratch decomposition of the
+        // grown K matrix.
+        assert_eq!(hc.planes, BitPlanes::decompose(&hc.qa.k));
+    }
+
+    #[test]
+    fn decode_on_empty_context_returns_zero_output() {
+        let qa0 = QuantAttn::quantize(&[], &[], &[], 0, 4);
+        let cached = HeadContext::from_owned(qa0, LatsConfig::default());
+        let mut scratch = BesfScratch::new();
+        let qr = cached.decode_scratch(&[1.0, -1.0, 0.5, 0.0], &mut scratch);
+        assert!(qr.sel.survivors.is_empty());
+        assert_eq!(qr.out, vec![0.0; 4]);
     }
 
     #[test]

@@ -151,7 +151,16 @@ pub fn fig10() -> Table {
 pub fn fig11() -> Table {
     let mut t = Table::new(
         "Fig.11 — normalized DRAM access (dense = 1.0), Llama-shape head",
-        &["seq", "sanger", "sofa", "sofa*", "tokenpicker", "bitstopper", "bs gain vs sanger", "bs gain vs sofa*"],
+        &[
+            "seq",
+            "sanger",
+            "sofa",
+            "sofa*",
+            "tokenpicker",
+            "bitstopper",
+            "bs gain vs sanger",
+            "bs gain vs sofa*",
+        ],
     );
     for &seq in &[1024usize, 2048, 4096] {
         let s = sweep(seq, 128, 0x11 + seq as u64);
@@ -237,7 +246,13 @@ pub fn fig13a() -> Table {
             ]);
         }
     } else {
-        t.row(&["(tiny model missing — run `make artifacts`)".into(), "-".into(), "-".into(), "-".into(), "-".into()]);
+        t.row(&[
+            "(tiny model missing — run `make artifacts`)".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+        ]);
     }
     t
 }
@@ -319,12 +334,24 @@ pub fn table1() -> Table {
     let hw = crate::config::HwConfig::default();
     let mut t = Table::new("Table I — hardware configuration", &["parameter", "value"]);
     let rows: Vec<(&str, String)> = vec![
-        ("Main memory", format!("HBM2, {} ch x {}-bit @ {} Gbps ({} GB/s)", hw.dram_channels, hw.dram_bus_bits, hw.dram_gbps, hw.dram_bandwidth_bps() / 1e9)),
+        (
+            "Main memory",
+            format!(
+                "HBM2, {} ch x {}-bit @ {} Gbps ({} GB/s)",
+                hw.dram_channels,
+                hw.dram_bus_bits,
+                hw.dram_gbps,
+                hw.dram_bandwidth_bps() / 1e9
+            ),
+        ),
         ("K/V buffer", format!("{} KB SRAM", hw.kv_buffer_bytes / 1024)),
         ("Q buffer", format!("{} KB SRAM", hw.q_buffer_bytes / 1024)),
         ("PE lanes", format!("{} bit-level lanes", hw.pe_lanes)),
         ("BRAT", format!("{}-dim x {}-bit x 1-bit per cycle", hw.brat_dim, hw.bits)),
-        ("Scoreboard", format!("{} entries x {} bit / lane", hw.scoreboard_entries, hw.scoreboard_bits)),
+        (
+            "Scoreboard",
+            format!("{} entries x {} bit / lane", hw.scoreboard_entries, hw.scoreboard_bits),
+        ),
         ("V-PU", format!("{}-way INT12 MAC + 18-bit LUT softmax", hw.vpu_macs)),
         ("Clock", format!("{} GHz", hw.clock_hz / 1e9)),
     ];
@@ -357,9 +384,12 @@ pub fn headline() -> Table {
         ee_so.push(s.sofa_ft.energy.total_pj() / bs.energy.total_pj());
     }
     use crate::util::stats::geomean;
-    t.row(&["dense".into(), "3.20".into(), f(geomean(&sp_d), 2), "3.70".into(), f(geomean(&ee_d), 2)]);
-    t.row(&["sanger".into(), "2.03".into(), f(geomean(&sp_sa), 2), "2.40".into(), f(geomean(&ee_sa), 2)]);
-    t.row(&["sofa*".into(), "1.89".into(), f(geomean(&sp_so), 2), "2.10".into(), f(geomean(&ee_so), 2)]);
+    let headline_row = |name: &str, paper_sp: &str, sp: &[f64], paper_ee: &str, ee: &[f64]| {
+        [name.into(), paper_sp.into(), f(geomean(sp), 2), paper_ee.into(), f(geomean(ee), 2)]
+    };
+    t.row(&headline_row("dense", "3.20", &sp_d, "3.70", &ee_d));
+    t.row(&headline_row("sanger", "2.03", &sp_sa, "2.40", &ee_sa));
+    t.row(&headline_row("sofa*", "1.89", &sp_so, "2.10", &ee_so));
     t
 }
 
@@ -377,7 +407,10 @@ impl crate::energy::EnergyBreakdown {
 /// parallelizes across figures — the harness used to be fully serial).
 /// Output stays deterministic: tables print in declaration order, each with
 /// its own wall-clock time.
-pub fn run_all(which: Option<&str>, out_dir: Option<&std::path::Path>) -> anyhow::Result<Vec<Table>> {
+pub fn run_all(
+    which: Option<&str>,
+    out_dir: Option<&std::path::Path>,
+) -> anyhow::Result<Vec<Table>> {
     let all: Vec<(&str, fn() -> Table)> = vec![
         ("table1", table1),
         ("3a", fig3a),

@@ -57,8 +57,16 @@ fn main() {
             println!("throughput: {:.0} queries/s @1GHz", r.throughput_qps(1e9));
             println!("keep rate : {:.2}%", 100.0 * r.keep_rate);
             println!("K traffic : {:.1}% of dense", 100.0 * r.k_traffic_fraction);
-            println!("DRAM      : {:.1} KB (row-hit {:.0}%)", r.complexity.dram_bytes() / 1024.0, 100.0 * r.dram.row_hit_rate());
-            println!("energy    : {:.2} uJ ({:.0}% dram)", r.energy.total_pj() / 1e6, 100.0 * r.energy.dram_fraction());
+            println!(
+                "DRAM      : {:.1} KB (row-hit {:.0}%)",
+                r.complexity.dram_bytes() / 1024.0,
+                100.0 * r.dram.row_hit_rate()
+            );
+            println!(
+                "energy    : {:.2} uJ ({:.0}% dram)",
+                r.energy.total_pj() / 1e6,
+                100.0 * r.energy.dram_fraction()
+            );
             println!("QK util   : {:.1}%", 100.0 * r.utilization);
             Ok(())
         }
@@ -71,14 +79,23 @@ fn main() {
                 let model = bitstopper::model::TinyTransformer::new(cfg, w);
                 let eval = &tokens[..tokens.len().min(2048)];
                 let dense = bitstopper::model::evaluate_ppl(
-                    &model, eval, cfg.max_seq, &bitstopper::model::AttnPolicy::Dense,
+                    &model,
+                    eval,
+                    cfg.max_seq,
+                    &bitstopper::model::AttnPolicy::Dense,
                 );
                 let lats = bitstopper::model::evaluate_ppl(
-                    &model, eval, cfg.max_seq,
+                    &model,
+                    eval,
+                    cfg.max_seq,
                     &bitstopper::model::AttnPolicy::Lats { alpha, radius: 5.0 },
                 );
                 println!("dense PPL        : {:.4}", dense.ppl);
-                println!("LATS(a={alpha}) PPL: {:.4} (delta {:+.4})", lats.ppl, lats.ppl - dense.ppl);
+                println!(
+                    "LATS(a={alpha}) PPL: {:.4} (delta {:+.4})",
+                    lats.ppl,
+                    lats.ppl - dense.ppl
+                );
                 Ok(())
             })()
         }
@@ -103,7 +120,9 @@ fn main() {
             match Runtime::new() {
                 Ok(mut rt) => match rt.load_dir(&default_artifact_dir()) {
                     Ok(n) => println!("runtime OK ({n} artifacts)"),
-                    Err(e) => println!("runtime: artifacts unavailable ({e}) — run `make artifacts`"),
+                    Err(e) => {
+                        println!("runtime: artifacts unavailable ({e}) — run `make artifacts`")
+                    }
                 },
                 Err(e) => println!("runtime: PJRT unavailable ({e})"),
             }

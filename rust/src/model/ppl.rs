@@ -120,7 +120,8 @@ mod tests {
         let toks = tokens(200, 32, 21);
         let r = evaluate_ppl(&m, &toks, 24, &AttnPolicy::Dense);
         assert!(r.ppl > 16.0 && r.ppl < 70.0, "ppl {}", r.ppl);
-        assert_eq!(r.tokens, 200 - 200usize.div_ceil(24).max(200 / 24)); // windows lose 1 token each
+        // Windows lose 1 token each.
+        assert_eq!(r.tokens, 200 - 200usize.div_ceil(24).max(200 / 24));
     }
 
     #[test]

@@ -84,7 +84,12 @@ fn slice_chunk(chunk: &[i16]) -> [u64; N_BITS] {
 ///
 /// `planes[r]` holds S rows of `words_per_row` u64 words; bit `d` of key `j`'s
 /// row is `(planes[r][j*wpr + d/64] >> (d%64)) & 1`.
-#[derive(Debug, Clone)]
+///
+/// Contexts can be built in one shot ([`BitPlanes::decompose`]) or grown one
+/// key at a time ([`BitPlanes::append_row`], the session KV-cache path) —
+/// the two are bit-identical (property-tested), which is what lets a decode
+/// session avoid re-decomposing O(seq) context per generated token.
+#[derive(Debug, Clone, PartialEq)]
 pub struct BitPlanes {
     /// Number of keys (S).
     pub keys: usize,
@@ -102,7 +107,7 @@ impl BitPlanes {
     pub fn decompose(k: &IntMatrix) -> Self {
         let keys = k.rows;
         let dim = k.cols;
-        let wpr = (dim + 63) / 64;
+        let wpr = dim.div_ceil(64);
         let mut planes = vec![vec![0u64; keys * wpr]; N_BITS];
         // Hot path (called once per context): accumulate each 64-dim chunk's
         // twelve plane words in registers and store once per plane — ~3×
@@ -118,6 +123,31 @@ impl BitPlanes {
             }
         }
         Self { keys, dim, words_per_row: wpr, planes }
+    }
+
+    /// Planes of an empty context (`keys == 0`) at a fixed `dim` — the seed
+    /// for incremental construction via [`BitPlanes::append_row`].
+    pub fn empty(dim: usize) -> Self {
+        Self { keys: 0, dim, words_per_row: dim.div_ceil(64), planes: vec![Vec::new(); N_BITS] }
+    }
+
+    /// Append one key row in place — the KV-cache grow path.
+    ///
+    /// Plane storage is row-major per key (`planes[r][j*wpr..(j+1)*wpr]`), so
+    /// appending token `j == keys` pushes exactly `words_per_row` fresh words
+    /// onto each plane's tail; existing words are never touched or
+    /// recomputed. The result is bit-identical to a from-scratch
+    /// [`BitPlanes::decompose`] of the grown matrix (property-tested below),
+    /// which is the invariant the session decode path rests on.
+    pub fn append_row(&mut self, row: &[i16]) {
+        assert_eq!(row.len(), self.dim, "appended row length != dim");
+        for chunk in row.chunks(64) {
+            let words = slice_chunk(chunk);
+            for (r, &word) in words.iter().enumerate() {
+                self.planes[r].push(word);
+            }
+        }
+        self.keys += 1;
     }
 
     /// Bit `d` of key `j` in round-`r` plane.
@@ -170,7 +200,7 @@ impl BitPlanes {
     /// (dim bits, rounded up to bytes).
     #[inline]
     pub fn plane_bytes(&self) -> u64 {
-        ((self.dim + 7) / 8) as u64
+        self.dim.div_ceil(8) as u64
     }
 
     /// Sliced counterpart of [`BitPlanes::plane_dot`]: the same unweighted
@@ -224,7 +254,7 @@ impl QueryPlanes {
     /// once the buffer has grown to the workload's dim).
     pub fn decompose_into(&mut self, q: &[i16]) {
         let dim = q.len();
-        let wpr = (dim + 63) / 64;
+        let wpr = dim.div_ceil(64);
         self.dim = dim;
         self.words_per_row = wpr;
         self.words.clear();
@@ -404,6 +434,56 @@ mod tests {
             }
             let full: i64 = (0..N_BITS).map(|r| bp.weighted_plane_dot_sliced(r, 0, &qp)).sum();
             assert_eq!(full, k.dot_row(0, &q), "dim {dim}");
+        }
+    }
+
+    #[test]
+    fn prop_append_row_bit_identical_to_from_scratch_decompose() {
+        // The session KV-cache invariant (ISSUE 3): growing planes one token
+        // at a time — from any split point, including empty — must reproduce
+        // a from-scratch decomposition of the full matrix bit-for-bit.
+        check("append(decompose(K[..n]), k_n) == decompose(K[..n+1])", 60, |rng| {
+            let keys = 1 + rng.below(16) as usize;
+            let dim = 1 + rng.below(150) as usize; // crosses the 64/128 word edges
+            let k = rand_matrix(rng, keys, dim);
+            let full = BitPlanes::decompose(&k);
+
+            // Grow from a random prefix (the prompt) one row at a time.
+            let split = rng.below(keys as u64 + 1) as usize;
+            let prefix = IntMatrix::new(split, dim, k.data[..split * dim].to_vec());
+            let mut grown = BitPlanes::decompose(&prefix);
+            for j in split..keys {
+                grown.append_row(k.row(j));
+            }
+            assert_eq!(grown, full, "grown from split {split}");
+
+            // And from an empty context.
+            let mut from_empty = BitPlanes::empty(dim);
+            for j in 0..keys {
+                from_empty.append_row(k.row(j));
+            }
+            assert_eq!(from_empty, full, "grown from empty");
+        });
+    }
+
+    #[test]
+    fn appended_rows_serve_the_sliced_kernel_identically() {
+        // Sliced dots against appended planes must equal the exact integer
+        // dot — the appended tail words feed the same AND+popcount path.
+        let mut rng = crate::util::SplitMix64::new(0xA99);
+        for dim in [1usize, 63, 64, 65, 127, 129] {
+            let k = rand_matrix(&mut rng, 6, dim);
+            let mut bp = BitPlanes::decompose(&IntMatrix::new(3, dim, k.data[..3 * dim].to_vec()));
+            for j in 3..6 {
+                bp.append_row(k.row(j));
+            }
+            let q: Vec<i16> =
+                (0..dim).map(|_| rng.range_i64(QMIN as i64, QMAX as i64) as i16).collect();
+            let qp = QueryPlanes::decompose(&q);
+            for j in 0..6 {
+                let full: i64 = (0..N_BITS).map(|r| bp.weighted_plane_dot_sliced(r, j, &qp)).sum();
+                assert_eq!(full, k.dot_row(j, &q), "dim {dim} key {j}");
+            }
         }
     }
 

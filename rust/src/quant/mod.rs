@@ -97,6 +97,18 @@ impl IntMatrix {
         self.data[r * self.cols + c]
     }
 
+    /// Append one row in place — the KV-cache grow path (session decode
+    /// appends one quantized K/V row per generated token).
+    pub fn push_row(&mut self, row: &[i16]) {
+        assert_eq!(row.len(), self.cols, "appended row length != cols");
+        debug_assert!(
+            row.iter().all(|&v| (QMIN..=QMAX as i32).contains(&(v as i32))),
+            "values must fit INT12"
+        );
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
     /// Exact integer dot product of row `r` with another vector (i64 to hold
     /// the 45-bit dynamic range the paper's Scoreboard stores).
     pub fn dot_row(&self, r: usize, v: &[i16]) -> i64 {
@@ -152,6 +164,22 @@ mod tests {
     #[should_panic]
     fn int_matrix_shape_mismatch_panics() {
         let _ = IntMatrix::new(2, 2, vec![0; 3]);
+    }
+
+    #[test]
+    fn push_row_grows_matrix_identically_to_batch_construction() {
+        let mut grown = IntMatrix::new(1, 3, vec![1, -2, 3]);
+        grown.push_row(&[4, 5, -6]);
+        assert_eq!(grown, IntMatrix::new(2, 3, vec![1, -2, 3, 4, 5, -6]));
+        let v = vec![7i16, 8, 9];
+        assert_eq!(grown.dot_row(1, &v), 4 * 7 + 5 * 8 - 6 * 9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn push_row_wrong_width_panics() {
+        let mut m = IntMatrix::zeros(1, 3);
+        m.push_row(&[0, 0]);
     }
 
     #[test]

@@ -28,7 +28,7 @@ use std::path::Path;
 compile_error!(
     "the `pjrt` feature additionally requires the `xla` crate, which the \
      offline build image cannot fetch: add it to [dependencies] in Cargo.toml \
-     and delete this compile_error (see DESIGN.md §7)"
+     and delete this compile_error (see DESIGN.md §8)"
 );
 
 /// Which pipeline an artifact implements.
@@ -110,12 +110,9 @@ pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactInfo>> {
 /// Pick, among artifacts matching (kind, seq, dim), the one whose α is
 /// closest to the requested value (shared by both backends).
 fn closest_alpha<'a, I: Iterator<Item = &'a Artifact>>(it: I, alpha: f64) -> Option<&'a Artifact> {
-    it.min_by(|a, b| {
-        (a.info.alpha - alpha)
-            .abs()
-            .partial_cmp(&(b.info.alpha - alpha).abs())
-            .unwrap()
-    })
+    // total_cmp: a manifest with a non-finite alpha (NaN parses Ok) must not
+    // panic the serving worker — NaN distances simply rank last.
+    it.min_by(|a, b| (a.info.alpha - alpha).abs().total_cmp(&(b.info.alpha - alpha).abs()))
 }
 
 // ---------------------------------------------------------------------------
@@ -250,7 +247,7 @@ impl Runtime {
     pub fn new() -> Result<Self> {
         bail!(
             "PJRT runtime unavailable: this build has no XLA backend (offline image, \
-             see DESIGN.md §7); the coordinator's pure-Rust executors cover the request path"
+             see DESIGN.md §8); the coordinator's pure-Rust executors cover the request path"
         )
     }
 
@@ -276,7 +273,13 @@ impl Runtime {
 impl Runtime {
     /// Look up the artifact for (kind, seq, dim); for BitStopper artifacts,
     /// picks the one with α closest to `alpha`.
-    pub fn lookup(&self, kind: ArtifactKind, seq: usize, dim: usize, alpha: f64) -> Option<&Artifact> {
+    pub fn lookup(
+        &self,
+        kind: ArtifactKind,
+        seq: usize,
+        dim: usize,
+        alpha: f64,
+    ) -> Option<&Artifact> {
         closest_alpha(
             self.artifacts
                 .values()

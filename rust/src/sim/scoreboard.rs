@@ -42,7 +42,11 @@ struct Entry {
 impl Scoreboard {
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0);
-        Self { capacity, entries: HashMap::with_capacity(capacity), stats: ScoreboardStats::default() }
+        Self {
+            capacity,
+            entries: HashMap::with_capacity(capacity),
+            stats: ScoreboardStats::default(),
+        }
     }
 
     pub fn capacity(&self) -> usize {

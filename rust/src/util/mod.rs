@@ -16,13 +16,13 @@ pub use stats::{mean, percentile, stddev, Summary};
 #[inline]
 pub fn ceil_div(a: u64, b: u64) -> u64 {
     debug_assert!(b > 0);
-    (a + b - 1) / b
+    a.div_ceil(b)
 }
 
 /// Clamp a float into `[lo, hi]`.
 #[inline]
 pub fn clampf(x: f64, lo: f64, hi: f64) -> f64 {
-    x.max(lo).min(hi)
+    x.clamp(lo, hi)
 }
 
 #[cfg(test)]

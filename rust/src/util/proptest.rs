@@ -29,7 +29,10 @@ pub fn check<F: FnMut(&mut SplitMix64)>(name: &str, cases: u32, mut prop: F) {
         let mut rng = SplitMix64::new(seed);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
         if let Err(e) = result {
-            eprintln!("property `{name}` failed at case {i} (seed {seed:#x}); replay with util::proptest::replay({seed:#x}, ..)");
+            eprintln!(
+                "property `{name}` failed at case {i} (seed {seed:#x}); \
+                 replay with util::proptest::replay({seed:#x}, ..)"
+            );
             std::panic::resume_unwind(e);
         }
     }

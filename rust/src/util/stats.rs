@@ -24,7 +24,10 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a NaN sample (e.g. a poisoned latency) must not panic the
+    // metrics path — NaNs sort to the ends and at worst surface as a NaN
+    // percentile, which is honest.
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -114,6 +117,15 @@ mod tests {
         assert!((percentile(&xs, 0.0) - 10.0).abs() < 1e-12);
         assert!((percentile(&xs, 100.0) - 40.0).abs() < 1e-12);
         assert!((percentile(&xs, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_with_nan_sample_does_not_panic() {
+        // Regression: partial_cmp(..).unwrap() panicked on NaN latencies.
+        let xs = [10.0, f64::NAN, 30.0];
+        let p = percentile(&xs, 0.0);
+        assert_eq!(p, 10.0, "NaN sorts above the finite samples under total_cmp");
+        let _ = percentile(&xs, 100.0); // may be NaN; must not panic
     }
 
     #[test]

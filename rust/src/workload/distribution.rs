@@ -107,9 +107,7 @@ impl AttnWorkload {
                 // feature directions — and this keeps Σ|q| small, which is
                 // what makes the paper's bit-margins tighten quickly).
                 let mut idx: Vec<usize> = (0..dim).collect();
-                idx.sort_by(|&a, &b| {
-                    krow[b].abs().partial_cmp(&krow[a].abs()).unwrap()
-                });
+                idx.sort_by(|&a, &b| krow[b].abs().total_cmp(&krow[a].abs()));
                 idx.truncate((dim / 8).max(1));
                 let norm2: f64 =
                     idx.iter().map(|&d| (krow[d] as f64) * (krow[d] as f64)).sum();
@@ -228,8 +226,11 @@ mod tests {
         };
         assert!(mean_top1(&sharp) > 0.25, "sharp top1 {}", mean_top1(&sharp));
         assert!(mean_top1(&flat) > 0.15, "flat top1 {}", mean_top1(&flat));
-        let vs = (0..16).map(|i| vital_set(&sharp.logits(i), 0.8).len()).sum::<usize>() as f64 / 16.0;
-        let vf = (0..16).map(|i| vital_set(&flat.logits(i), 0.8).len()).sum::<usize>() as f64 / 16.0;
+        let vital_mean = |w: &AttnWorkload| {
+            (0..16).map(|i| vital_set(&w.logits(i), 0.8).len()).sum::<usize>() as f64 / 16.0
+        };
+        let vs = vital_mean(&sharp);
+        let vf = vital_mean(&flat);
         assert!(vs < 32.0, "sharp vital sets should be small, got {vs}");
         assert!(vf < 64.0, "flat vital sets should stay sparse, got {vf}");
     }

@@ -71,6 +71,78 @@ impl QuantAttn {
     }
 }
 
+/// One autoregressive decode step: the step's query plus the newly generated
+/// token's K/V row (appended to the context *before* the query runs, as in
+/// causal self-attention where a token attends to itself).
+#[derive(Debug, Clone)]
+pub struct DecodeStep {
+    pub q: Vec<f32>,
+    pub k_row: Vec<f32>,
+    pub v_row: Vec<f32>,
+}
+
+/// An autoregressive decode workload: a prompt context (the prefill) plus a
+/// stream of per-token [`DecodeStep`]s — the shape the session KV-cache
+/// serves (DESIGN.md §7). Float-domain, single head; quantization happens at
+/// session open / request time.
+#[derive(Debug, Clone)]
+pub struct DecodeTrace {
+    pub dim: usize,
+    pub prompt_len: usize,
+    /// Row-major `[prompt_len × dim]` prompt keys/values.
+    pub prompt_k: Vec<f32>,
+    pub prompt_v: Vec<f32>,
+    pub steps: Vec<DecodeStep>,
+}
+
+impl DecodeTrace {
+    /// Synthesize a decode trace: `prompt_len + steps` keys from the
+    /// calibrated generator ([`AttnWorkload`]), one query per step; the last
+    /// `steps` K/V rows become the appended tokens.
+    ///
+    /// The K and V elements of globally maximal magnitude are planted in the
+    /// prompt's first row — mirroring real prefill calibration, where the
+    /// scales derived from a long prompt cover later decode tokens. This is
+    /// also what makes a session decode step *bit-identical* to a one-shot
+    /// request over the grown context (same per-tensor scales on both
+    /// paths), which the engine/coordinator equivalence tests assert.
+    pub fn synth(prompt_len: usize, steps: usize, dim: usize, seed: u64) -> Self {
+        assert!(prompt_len >= 1 && steps >= 1 && dim >= 1);
+        let total = prompt_len + steps;
+        let w = AttnWorkload::generate(SynthConfig::new(total, dim, steps, seed));
+        let mut k = w.k;
+        let mut v = w.v;
+        for buf in [&mut k, &mut v] {
+            let max_abs = buf.iter().fold(0f32, |m, &x| m.max(x.abs()));
+            buf[0] = max_abs;
+        }
+        let row = |buf: &[f32], r: usize| buf[r * dim..(r + 1) * dim].to_vec();
+        let steps: Vec<DecodeStep> = (0..steps)
+            .map(|i| DecodeStep {
+                q: row(&w.q, i),
+                k_row: row(&k, prompt_len + i),
+                v_row: row(&v, prompt_len + i),
+            })
+            .collect();
+        let prompt_k = k[..prompt_len * dim].to_vec();
+        let prompt_v = v[..prompt_len * dim].to_vec();
+        Self { dim, prompt_len, prompt_k, prompt_v, steps }
+    }
+
+    /// The full grown context after `n` steps (prompt + first `n` appended
+    /// rows) — what an equivalent one-shot request would carry.
+    pub fn context_after(&self, n: usize) -> (Vec<f32>, Vec<f32>, usize) {
+        assert!(n <= self.steps.len());
+        let mut k = self.prompt_k.clone();
+        let mut v = self.prompt_v.clone();
+        for step in &self.steps[..n] {
+            k.extend_from_slice(&step.k_row);
+            v.extend_from_slice(&step.v_row);
+        }
+        (k, v, self.prompt_len + n)
+    }
+}
+
 /// Decorrelated per-head seed (head 0 keeps the base seed) — shared by
 /// [`MultiHeadAttn::synth`] and the serving demos/tests that need the float
 /// tensors alongside the quantized heads.
@@ -167,6 +239,38 @@ mod tests {
         assert_eq!(mha.heads[0].k, single.k);
         // Other heads must be decorrelated.
         assert_ne!(mha.heads[1].k, mha.heads[0].k);
+    }
+
+    #[test]
+    fn decode_trace_shapes_and_calibration_anchor() {
+        let t = DecodeTrace::synth(32, 5, 8, 17);
+        assert_eq!(t.prompt_k.len(), 32 * 8);
+        assert_eq!(t.prompt_v.len(), 32 * 8);
+        assert_eq!(t.steps.len(), 5);
+        for s in &t.steps {
+            assert_eq!(s.q.len(), 8);
+            assert_eq!(s.k_row.len(), 8);
+            assert_eq!(s.v_row.len(), 8);
+        }
+        // The prompt must contain the global max-abs K and V elements, so
+        // prefill calibration covers every appended row (the bit-identity
+        // precondition for session == one-shot).
+        let (k_full, v_full, n) = t.context_after(5);
+        assert_eq!(n, 37);
+        let max_abs = |xs: &[f32]| xs.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        assert_eq!(max_abs(&t.prompt_k), max_abs(&k_full));
+        assert_eq!(max_abs(&t.prompt_v), max_abs(&v_full));
+    }
+
+    #[test]
+    fn decode_trace_context_after_concatenates_steps_in_order() {
+        let t = DecodeTrace::synth(4, 3, 2, 23);
+        let (k, v, n) = t.context_after(2);
+        assert_eq!(n, 6);
+        assert_eq!(k.len(), 6 * 2);
+        assert_eq!(&k[..4 * 2], &t.prompt_k[..]);
+        assert_eq!(&k[4 * 2..5 * 2], &t.steps[0].k_row[..]);
+        assert_eq!(&v[5 * 2..], &t.steps[1].v_row[..]);
     }
 
     #[test]
