@@ -16,12 +16,14 @@
 //! ```
 
 use bitstopper::config::{Features, LatsConfig, SimConfig};
-use bitstopper::coordinator::{AttnRequest, BatchConfig, BesfExecutor, Engine};
+use bitstopper::coordinator::{
+    AttnRequest, BatchConfig, BesfExecutor, Engine, ModelPrompt, ModelStep, SchedConfig,
+};
 use bitstopper::engine::{default_threads, AttentionEngine, SelectionPolicy};
 use bitstopper::runtime::ArtifactKind;
 use bitstopper::sim::simulate_multi_head;
 use bitstopper::workload::{
-    head_seed, AttnWorkload, DecodeTrace, MultiHeadAttn, QuantAttn, SynthConfig,
+    head_seed, AttnWorkload, ModelDecodeTrace, MultiHeadAttn, QuantAttn, SynthConfig,
 };
 use std::time::{Duration, Instant};
 
@@ -100,49 +102,87 @@ fn main() {
         100.0 * kept_sum as f64 / ((n_heads * queries * seq) as f64)
     );
 
-    // --- session decode path: multi-turn autoregressive serving over the
-    //     KV-cache (open → append/decode per token → close), cache pinned to
-    //     one worker by sticky routing; per-token cost is O(dim) append +
-    //     one selection, with no context re-shipping or re-decomposition ---
-    let decode_steps = 32usize;
-    let trace = DecodeTrace::synth(seq, decode_steps, dim, 4242);
-    let session_engine = Engine::start(2, BatchConfig::default(), BesfExecutor::default);
-    let t_open = Instant::now();
-    let (sid, rx) = session_engine.open_session(
-        ALPHA,
-        trace.prompt_len,
-        dim,
-        trace.prompt_k.clone(),
-        trace.prompt_v.clone(),
+    // --- continuous-batching model serving: N concurrent model-level
+    //     sessions (n_layers × n_heads KV-caches), prompts admitted as
+    //     chunked prefills, one fused model step per session per scheduler
+    //     tick — the whole-model autoregressive path (DESIGN.md §8) ---
+    let (layers, heads_per_layer, model_dim) = (2usize, 4usize, dim);
+    let decode_steps = 16usize;
+    let prompt_len = seq.min(512);
+    println!(
+        "\n== continuous-batching decode ({layers}x{heads_per_layer} lanes, \
+         {prompt_len}-token prompts, {decode_steps} tokens/session) =="
     );
-    rx.recv().expect("open ack");
-    let prefill = t_open.elapsed();
-    let t_decode = Instant::now();
-    let mut decode_kept = 0usize;
-    for step in &trace.steps {
-        session_engine
-            .session_append(sid, step.k_row.clone(), step.v_row.clone())
-            .recv()
-            .expect("append ack");
-        let d = session_engine.session_decode(sid, step.q.clone()).recv().expect("decode");
-        assert_eq!(d.out.len(), dim);
-        decode_kept += d.kept;
+    for batch_sessions in [1usize, 4, 8] {
+        let engine = Engine::start_with(
+            default_threads().clamp(2, 4),
+            BatchConfig::default(),
+            SchedConfig { prefill_chunk: 128, max_inflight_per_worker: 2 },
+            BesfExecutor::default,
+        );
+        let traces: Vec<ModelDecodeTrace> = (0..batch_sessions)
+            .map(|s| {
+                ModelDecodeTrace::synth(
+                    layers,
+                    heads_per_layer,
+                    prompt_len,
+                    decode_steps,
+                    model_dim,
+                    9000 + s as u64,
+                )
+            })
+            .collect();
+        let t_open = Instant::now();
+        let sids: Vec<u64> = traces
+            .iter()
+            .map(|mt| {
+                let (pk, pv) = mt.prompt();
+                let (sid, rx) = engine.open_model_session(
+                    ALPHA,
+                    ModelPrompt { shape: mt.shape(), prompt_len: mt.prompt_len, k: pk, v: pv },
+                );
+                rx.recv().expect("prefill ack");
+                sid
+            })
+            .collect();
+        let prefill = t_open.elapsed();
+        // Queue every session's full decode stream up front; the scheduler
+        // interleaves them one model step per session per tick.
+        let t_decode = Instant::now();
+        let mut rxs = Vec::new();
+        for (s, mt) in traces.iter().enumerate() {
+            for i in 0..mt.n_steps() {
+                let (qs, ks, vs) = mt.step_rows(i);
+                rxs.push(engine.model_step(sids[s], ModelStep::token(ks, vs, qs)));
+            }
+        }
+        let mut kept = 0usize;
+        let mut lanes_ctx = 0usize;
+        for rx in rxs {
+            let r = rx.recv().expect("model step");
+            kept += r.kept_total();
+            lanes_ctx += r.kept.len() * r.context_len;
+        }
+        let decode_wall = t_decode.elapsed();
+        for sid in sids {
+            engine.close_model_session(sid).recv().expect("close ack");
+        }
+        let m = engine.metrics();
+        engine.shutdown();
+        let tokens = (batch_sessions * decode_steps) as f64;
+        println!(
+            "  batch {batch_sessions:>2}: prefill {:>7.1} ms | decode {:>8.3} ms/token \
+             ({:.0} tok/s) | kept {:>4.1}% | ticks {} chunks {} deferred {} (errors {})",
+            prefill.as_secs_f64() * 1e3,
+            decode_wall.as_secs_f64() * 1e3 / tokens,
+            tokens / decode_wall.as_secs_f64().max(1e-9),
+            100.0 * kept as f64 / lanes_ctx.max(1) as f64,
+            m.ticks,
+            m.prefill_chunks,
+            m.deferred,
+            m.errors,
+        );
     }
-    let decode_wall = t_decode.elapsed();
-    session_engine.close_session(sid).recv().expect("close ack");
-    let sm = session_engine.metrics();
-    session_engine.shutdown();
-    println!("\n== session decode (KV-cache) ==");
-    println!("prefill (open {seq}-token context) : {:.1} ms", prefill.as_secs_f64() * 1e3);
-    println!(
-        "decode ({decode_steps} tokens)             : {:.3} ms/token (append+select+sparse V)",
-        decode_wall.as_secs_f64() * 1e3 / decode_steps as f64
-    );
-    println!(
-        "mean tokens kept (decode)       : {:.1}% of context (errors {})",
-        100.0 * decode_kept as f64 / (decode_steps as f64 * (seq + decode_steps / 2) as f64),
-        sm.errors
-    );
 
     // --- multi-head engine throughput scaling (the tentpole demo) ---
     let lats_cfg = LatsConfig { alpha: ALPHA, radius: 5.0 };

@@ -11,7 +11,9 @@
 //! Besides the human-readable table, results are persisted to
 //! `BENCH_hotpath.json` in the working directory (one row per bench plus
 //! derived speedup ratios) so the perf trajectory is machine-trackable across
-//! PRs.
+//! PRs. A second suite measures continuous-batching decode cost/token at
+//! batch sizes {1, 4, 16} through the scheduler and persists to
+//! `BENCH_serve.json`.
 
 use bitstopper::algo::{besf_select, BesfScratch, Lats};
 use bitstopper::config::LatsConfig;
@@ -54,9 +56,15 @@ fn mean_of(rows: &[(String, Summary)], name: &str) -> f64 {
 /// Serialize the rows + derived ratios as JSON (no serde in the offline
 /// build; every value we emit is a finite f64 or usize, so hand-formatting
 /// is safe).
-fn write_json(path: &str, rows: &[(String, Summary)], derived: &[(String, f64)]) {
+fn write_json(
+    path: &str,
+    bench: &str,
+    unit: &str,
+    rows: &[(String, Summary)],
+    derived: &[(String, f64)],
+) {
     let mut out =
-        String::from("{\n  \"bench\": \"hotpath\",\n  \"unit\": \"ms/iter\",\n  \"rows\": [\n");
+        format!("{{\n  \"bench\": \"{bench}\",\n  \"unit\": \"{unit}\",\n  \"rows\": [\n");
     for (i, (name, s)) in rows.iter().enumerate() {
         out.push_str(&format!(
             "    {{\"name\": \"{}\", \"mean\": {:.6}, \"p50\": {:.6}, \"p95\": {:.6}, \"min\": {:.6}, \"max\": {:.6}, \"n\": {}}}{}\n",
@@ -283,5 +291,100 @@ fn main() {
     for (name, v) in &derived {
         println!("derived {name:<32} {v:>9.3}");
     }
-    write_json("BENCH_hotpath.json", &rows, &derived);
+    write_json("BENCH_hotpath.json", "hotpath", "ms/iter", &rows, &derived);
+
+    serve_bench();
+}
+
+/// Continuous-batching decode throughput vs batch size (DESIGN.md §8): B
+/// model sessions (2 layers × 2 heads, 256-token prompts) stream their
+/// decode steps through the scheduler concurrently; per-token steady-state
+/// cost is wall time / tokens. Batched cost/token must land strictly below
+/// batch-1 — the whole point of iteration-level batching (idle workers +
+/// tick amortization). Rows persist to `BENCH_serve.json`.
+fn serve_bench() {
+    use bitstopper::coordinator::{
+        BatchConfig, BesfExecutor, Engine, ModelPrompt, ModelStep, SchedConfig,
+    };
+    use bitstopper::workload::ModelDecodeTrace;
+
+    println!("\n== continuous-batching serve bench ==\n");
+    let (layers, heads, dim, ctx, steps) = (2usize, 2usize, 64usize, 256usize, 12usize);
+    let reps = 3usize;
+    let mut rows: Vec<(String, Summary)> = Vec::new();
+    for &batch in &[1usize, 4, 16] {
+        let mut per_token_ms = Vec::with_capacity(reps);
+        for rep in 0..reps {
+            let engine = Engine::start_with(
+                4,
+                BatchConfig::default(),
+                SchedConfig { prefill_chunk: 512, max_inflight_per_worker: 2 },
+                BesfExecutor::default,
+            );
+            let traces: Vec<ModelDecodeTrace> = (0..batch)
+                .map(|s| {
+                    ModelDecodeTrace::synth(
+                        layers,
+                        heads,
+                        ctx,
+                        steps,
+                        dim,
+                        0x5EA0 + (rep * 100 + s) as u64,
+                    )
+                })
+                .collect();
+            let sids: Vec<u64> = traces
+                .iter()
+                .map(|mt| {
+                    let (pk, pv) = mt.prompt();
+                    let (sid, rx) = engine.open_model_session(
+                        0.6,
+                        ModelPrompt {
+                            shape: mt.shape(),
+                            prompt_len: mt.prompt_len,
+                            k: pk,
+                            v: pv,
+                        },
+                    );
+                    rx.recv().expect("prefill ack");
+                    sid
+                })
+                .collect();
+            // Steady state: every session's stream queued; the scheduler
+            // interleaves one model step per session per tick.
+            let t0 = Instant::now();
+            let mut rxs = Vec::new();
+            for (s, mt) in traces.iter().enumerate() {
+                for i in 0..steps {
+                    let (qs, ks, vs) = mt.step_rows(i);
+                    rxs.push(engine.model_step(sids[s], ModelStep::token(ks, vs, qs)));
+                }
+            }
+            for rx in rxs {
+                rx.recv().expect("model step");
+            }
+            per_token_ms.push(t0.elapsed().as_secs_f64() * 1e3 / (batch * steps) as f64);
+            engine.shutdown();
+        }
+        let s = Summary::of(&per_token_ms);
+        println!(
+            "bench serve_decode_b{batch:<26} {:>9.3} ms/token (p50 {:>9.3}, n={})",
+            s.mean, s.p50, s.n
+        );
+        rows.push((format!("serve_decode_b{batch}"), s));
+    }
+    let derived = vec![
+        (
+            "batched_speedup_b4_vs_b1".to_string(),
+            mean_of(&rows, "serve_decode_b1") / mean_of(&rows, "serve_decode_b4"),
+        ),
+        (
+            "batched_speedup_b16_vs_b1".to_string(),
+            mean_of(&rows, "serve_decode_b1") / mean_of(&rows, "serve_decode_b16"),
+        ),
+    ];
+    for (name, v) in &derived {
+        println!("derived {name:<32} {v:>9.3}");
+    }
+    write_json("BENCH_serve.json", "serve", "ms/token", &rows, &derived);
 }

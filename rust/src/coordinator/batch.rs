@@ -1,6 +1,8 @@
-//! Dynamic batching policy: group requests by artifact shape, release a
-//! batch when it reaches `max_batch` or its oldest member has waited
-//! `max_wait`.
+//! Dynamic batching policy for **one-shot** requests: group by artifact
+//! shape, release a batch when it reaches `max_batch` or its oldest member
+//! has waited `max_wait`. Model-session traffic never passes through here —
+//! it is iteration-batched by the [`super::scheduler`] (DESIGN.md §8); both
+//! feed the same worker pool from the same coordinator thread.
 
 use super::{AttnRequest, AttnResponse};
 use std::collections::HashMap;

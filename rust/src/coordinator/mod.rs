@@ -1,40 +1,51 @@
-//! Layer-3 serving coordinator: request queue → dynamic batcher → executor
-//! workers (vLLM-router-style, std-thread based — the offline environment has
-//! no tokio; see DESIGN.md §2).
+//! Layer-3 serving coordinator: request queue → dynamic batcher + model-step
+//! scheduler → executor workers (vLLM-style, std-thread based — the offline
+//! environment has no tokio; see DESIGN.md §2).
 //!
-//! The coordinator owns the *request path*: attention requests are grouped by
-//! artifact shape by the [`batch::Batcher`], routed to executor workers by
-//! least-queue-depth ([`router::Router`]), and executed either through the
-//! PJRT runtime (AOT artifacts — the production path) or through a pure-Rust
-//! fallback executor (used in tests and when artifacts are absent).
+//! The coordinator owns the *request path*. Two kinds of traffic flow
+//! through it:
 //!
-//! Alongside the one-shot path runs the **session path** (DESIGN.md §7):
-//! [`SessionRequest`]s (`Open`/`Append`/`Decode`/`Close`) bypass the shape
-//! batcher and are routed *sticky* — a session's KV-cache lives inside
-//! exactly one executor worker ([`session::SessionStore`]), so decode never
-//! re-ships or re-decomposes its context.
+//! * **One-shot attention ops** ([`AttnRequest`]) are grouped by artifact
+//!   shape by the [`batch::Batcher`], routed to executor workers by
+//!   least-queue-depth ([`router::Router`]), and executed either through the
+//!   PJRT runtime (AOT artifacts — the production path) or through a
+//!   pure-Rust fallback executor (used in tests and when artifacts are
+//!   absent).
+//! * **Model sessions** (DESIGN.md §7–8) carry whole-model autoregressive
+//!   decode: an `n_layers × n_heads` KV-cache per session
+//!   ([`crate::engine::ModelContext`], held by the pinned worker's
+//!   [`session::SessionStore`]), driven by the continuous-batching
+//!   [`scheduler::Scheduler`] — each tick assembles one iteration batch from
+//!   all runnable sessions, admits prefills chunk-wise alongside in-flight
+//!   decodes, and streams per-token [`StepResponse`]s. The legacy
+//!   single-head session API is served as the degenerate 1-layer/1-head
+//!   case of the same machinery.
 //!
-//! Python is never on this path; the only Python involvement was the one-time
-//! `make artifacts`.
+//! Python is never on this path; the only Python involvement was the
+//! one-time `make artifacts`.
 
 pub mod batch;
 pub mod router;
+pub mod scheduler;
 pub mod session;
 
 pub use batch::{Batcher, BatchConfig};
 pub use router::Router;
+pub use scheduler::{
+    Feedback, ModelJob, ModelPrompt, ModelStep, SchedConfig, SchedStats, Scheduler, StepResponse,
+};
 pub use session::SessionStore;
 
 use crate::algo::BesfScratch;
 use crate::attention::attention_f32;
 use crate::config::LatsConfig;
-use crate::engine::{HeadContext, SelectionPolicy};
+use crate::engine::{HeadContext, ModelStepOutput, SelectionPolicy};
 use crate::runtime::ArtifactKind;
 use crate::workload::QuantAttn;
 use anyhow::Result;
 use std::borrow::Cow;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
@@ -66,30 +77,7 @@ impl AttnRequest {
     }
 }
 
-/// One operation on a decode session (the KV-cache serving path).
-#[derive(Debug, Clone)]
-pub enum SessionOp {
-    /// Open a session over a prompt context. Quantization scales, the K
-    /// bit-plane decomposition and the LATS α are fixed here (prefill-time
-    /// calibration).
-    Open { alpha: f64, seq: usize, dim: usize, k: Vec<f32>, v: Vec<f32> },
-    /// Append one generated token's K/V row to the cached context.
-    Append { k_row: Vec<f32>, v_row: Vec<f32> },
-    /// Run one decode step (BESF/LATS selection + sparse V) for a fresh
-    /// query against the cached context.
-    Decode { q: Vec<f32> },
-    /// Drop the session, freeing its cached planes.
-    Close,
-}
-
-/// A session-addressed request, routed sticky to the worker owning the cache.
-#[derive(Debug, Clone)]
-pub struct SessionRequest {
-    pub session: u64,
-    pub op: SessionOp,
-}
-
-/// Completed response.
+/// Completed one-shot response.
 #[derive(Debug, Clone)]
 pub struct AttnResponse {
     pub id: u64,
@@ -108,13 +96,14 @@ pub struct AttnResponse {
 pub trait AttnExecutor: 'static {
     fn execute(&mut self, req: &AttnRequest) -> Result<(Vec<f32>, usize)>;
 
-    /// Execute one session operation, returning `(output, kept)` — output is
-    /// empty and `kept` is the context length for non-decode ops. Executors
-    /// without session support (the dense fallback, PJRT) reject it; the
-    /// worker loop counts the rejection as a per-request error instead of
-    /// dying.
-    fn execute_session(&mut self, req: &SessionRequest) -> Result<(Vec<f32>, usize)> {
-        anyhow::bail!("executor does not support sessions (session {})", req.session)
+    /// Execute one scheduler-dispatched model job, returning its output plus
+    /// any session ids the worker's store evicted to make room (the worker
+    /// loop reports those upstream so the scheduler releases their pins).
+    /// Executors without session support (the dense fallback, PJRT) reject
+    /// it; the worker loop counts the rejection as a per-request error
+    /// instead of dying.
+    fn execute_model(&mut self, job: &ModelJob) -> Result<(ModelStepOutput, Vec<u64>)> {
+        anyhow::bail!("executor does not support model sessions (session {})", job.session())
     }
 }
 
@@ -176,23 +165,31 @@ impl AttnExecutor for RustExecutor {
 /// `alpha`, and accumulated over survivors only; `kept` reports **true**
 /// survivor counts from [`crate::algo::besf::besf_select`]. Dense-tagged
 /// requests fall back to dense f32 attention (kept = all live rows), so one
-/// executor serves both artifact kinds.
+/// executor serves both artifact kinds. Model jobs run against this worker's
+/// [`SessionStore`] through the same one scratch.
 pub struct BesfExecutor {
     /// Logit-domain LATS radius (paper Eq. 2: 5.0).
     pub radius: f64,
-    /// Per-executor BESF working buffers, reused across requests so the
-    /// steady-state select loop on the serving path allocates nothing
-    /// (executors are constructed inside their worker thread — one scratch
-    /// per worker).
+    /// Per-executor BESF working buffers, reused across requests AND across
+    /// every (layer, head) lane of a model step, so the steady-state select
+    /// loop on the serving path allocates nothing (executors are constructed
+    /// inside their worker thread — one scratch per worker).
     scratch: BesfScratch,
-    /// This worker's session KV-caches; the router pins a session's ops
-    /// here for the session's whole life (DESIGN.md §7).
+    /// This worker's model-session KV-caches; the scheduler pins a session's
+    /// work here for the session's whole life (DESIGN.md §7–8).
     sessions: SessionStore,
 }
 
 impl Default for BesfExecutor {
     fn default() -> Self {
-        Self { radius: 5.0, scratch: BesfScratch::new(), sessions: SessionStore::new() }
+        Self::with_sessions(SessionStore::new())
+    }
+}
+
+impl BesfExecutor {
+    /// Executor with an explicit session store (capacity / TTL policy).
+    pub fn with_sessions(sessions: SessionStore) -> Self {
+        Self { radius: 5.0, scratch: BesfScratch::new(), sessions }
     }
 }
 
@@ -213,21 +210,34 @@ impl AttnExecutor for BesfExecutor {
         Ok((qr.out, qr.sel.survivors.len()))
     }
 
-    fn execute_session(&mut self, req: &SessionRequest) -> Result<(Vec<f32>, usize)> {
-        match &req.op {
-            SessionOp::Open { alpha, seq, dim, k, v } => {
+    fn execute_model(&mut self, job: &ModelJob) -> Result<(ModelStepOutput, Vec<u64>)> {
+        let now = Instant::now();
+        let ack = |context_len: usize| ModelStepOutput {
+            outs: Vec::new(),
+            kept: Vec::new(),
+            context_len,
+        };
+        match job {
+            ModelJob::Open { session, alpha, shape, k, v, rows } => {
+                anyhow::ensure!(
+                    alpha.is_finite() && *alpha >= 0.0,
+                    "non-finite or negative alpha"
+                );
                 let cfg = LatsConfig { alpha: *alpha, radius: self.radius };
-                self.sessions.open(req.session, cfg, k, v, *seq, *dim)?;
-                Ok((Vec::new(), *seq))
+                let evicted = self.sessions.open(*session, cfg, *shape, k, v, *rows, now)?;
+                Ok((ack(*rows), evicted))
             }
-            SessionOp::Append { k_row, v_row } => {
-                let len = self.sessions.append(req.session, k_row, v_row)?;
-                Ok((Vec::new(), len))
+            ModelJob::Prefill { session, k, v, rows } => {
+                let len = self.sessions.append_rows(*session, k, v, *rows, now)?;
+                Ok((ack(len), Vec::new()))
             }
-            SessionOp::Decode { q } => self.sessions.decode(req.session, q, &mut self.scratch),
-            SessionOp::Close => {
-                self.sessions.close(req.session)?;
-                Ok((Vec::new(), 0))
+            ModelJob::Step { session, step } => {
+                let out = self.sessions.step(*session, step, &mut self.scratch, now)?;
+                Ok((out, Vec::new()))
+            }
+            ModelJob::Close { session } => {
+                self.sessions.close(*session)?;
+                Ok((ack(0), Vec::new()))
             }
         }
     }
@@ -247,6 +257,21 @@ pub struct Metrics {
     pub mean_latency_us: f64,
     pub p95_latency_us: f64,
     pub throughput_rps: f64,
+    /// Scheduler ticks that had at least one runnable session (DESIGN.md
+    /// §8).
+    pub ticks: u64,
+    /// Model steps dispatched by the scheduler.
+    pub model_steps: u64,
+    /// Prefill chunks dispatched (including opening chunks).
+    pub prefill_chunks: u64,
+    /// Sessions evicted by worker stores (idle-TTL / LRU).
+    pub evictions: u64,
+    /// Dispatch opportunities deferred by worker backpressure.
+    pub deferred: u64,
+    /// Live session→worker pins (gauge).
+    pub session_pins: u64,
+    /// Mean decode keep rate across completed model decode steps.
+    pub decode_keep_rate: f64,
 }
 
 #[derive(Default)]
@@ -259,6 +284,8 @@ struct MetricsInner {
     latencies_us: Vec<f64>,
     started: Option<Instant>,
     finished: Option<Instant>,
+    sched: SchedStats,
+    session_pins: u64,
 }
 
 /// Poison-tolerant metrics lock. A worker that panicked while holding the
@@ -272,16 +299,17 @@ fn lock_metrics(m: &Mutex<MetricsInner>) -> MutexGuard<'_, MetricsInner> {
 /// Record a completion and send the response. Metrics update BEFORE the
 /// send (a caller that has all its responses must see all counts); a send
 /// to a dropped receiver is counted, not propagated.
-fn deliver(
+fn deliver<T>(
     m: &Mutex<MetricsInner>,
     t0: Instant,
-    resp: AttnResponse,
-    resp_tx: &Sender<AttnResponse>,
+    latency: Duration,
+    resp: T,
+    resp_tx: &Sender<T>,
 ) {
     {
         let mut mi = lock_metrics(m);
         mi.completed += 1;
-        mi.latencies_us.push(resp.latency.as_secs_f64() * 1e6);
+        mi.latencies_us.push(latency.as_secs_f64() * 1e6);
         if mi.started.is_none() {
             mi.started = Some(t0);
         }
@@ -296,17 +324,20 @@ fn deliver(
 enum Job {
     /// A shape-homogeneous batch from the [`Batcher`].
     Batch(Vec<(AttnRequest, Instant, Sender<AttnResponse>)>),
-    /// A single session op (sticky-routed, never shape-batched).
-    Session(SessionRequest, Instant, Sender<AttnResponse>),
+    /// One scheduler-dispatched model job. The responder is present only on
+    /// client-visible units (steps, closes, the last prefill chunk).
+    Model(ModelJob, Option<(Sender<StepResponse>, Instant)>),
 }
 
-/// What `Engine::submit*` enqueues to the batcher thread.
+/// What `Engine` methods enqueue to the scheduler thread.
 enum Submission {
     OneShot(AttnRequest, Sender<AttnResponse>),
-    Session(SessionRequest, Sender<AttnResponse>),
+    Open { session: u64, alpha: f64, prompt: ModelPrompt, resp: Sender<StepResponse> },
+    Step { session: u64, step: ModelStep, resp: Sender<StepResponse> },
+    Close { session: u64, resp: Sender<StepResponse> },
 }
 
-/// The serving engine: batcher thread + N executor workers.
+/// The serving engine: scheduler/batcher thread + N executor workers.
 pub struct Engine {
     tx: Sender<Submission>,
     metrics: Arc<Mutex<MetricsInner>>,
@@ -317,9 +348,25 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Start an engine. `make_executor` is cloned into and invoked **inside**
-    /// each worker thread (the PJRT client is not `Send`).
+    /// Start an engine with default scheduler knobs. `make_executor` is
+    /// cloned into and invoked **inside** each worker thread (the PJRT
+    /// client is not `Send`).
     pub fn start<F, E>(n_workers: usize, cfg: BatchConfig, make_executor: F) -> Self
+    where
+        F: Fn() -> E + Send + Clone + 'static,
+        E: AttnExecutor,
+    {
+        Self::start_with(n_workers, cfg, SchedConfig::default(), make_executor)
+    }
+
+    /// [`Engine::start`] with explicit continuous-batching scheduler knobs
+    /// (prefill chunk size, per-worker in-flight cap).
+    pub fn start_with<F, E>(
+        n_workers: usize,
+        cfg: BatchConfig,
+        sched_cfg: SchedConfig,
+        make_executor: F,
+    ) -> Self
     where
         F: Fn() -> E + Send + Clone + 'static,
         E: AttnExecutor,
@@ -327,22 +374,20 @@ impl Engine {
         assert!(n_workers >= 1);
         let metrics = Arc::new(Mutex::new(MetricsInner::default()));
 
-        // Feedback path worker → batcher: a rejected `Open` (store at cap,
-        // bad shapes, duplicate id, sessionless executor) must release its
-        // router pin, or every failed open would leak a `Router::sessions`
-        // entry forever (the client only sees a disconnected receiver and
-        // has nothing to Close). Session ids are never reused, so a late
-        // unbind can't clash with a rebind.
-        let (unbind_tx, unbind_rx): (Sender<u64>, Receiver<u64>) = channel();
+        // Feedback path worker → scheduler: completions (for in-flight
+        // accounting), rejected opens (pin release), and store evictions
+        // (pin release). Session ids are never reused, so a late unbind
+        // can't clash with a rebind.
+        let (fb_tx, fb_rx): (Sender<Feedback>, Receiver<Feedback>) = channel();
 
         // Worker channels.
         let mut worker_txs = Vec::new();
         let mut workers = Vec::new();
-        for _ in 0..n_workers {
+        for widx in 0..n_workers {
             let (wtx, wrx): (Sender<Job>, Receiver<Job>) = channel();
             let factory = make_executor.clone();
             let m = Arc::clone(&metrics);
-            let unbind = unbind_tx.clone();
+            let fb = fb_tx.clone();
             workers.push(std::thread::spawn(move || {
                 let mut exec = factory();
                 while let Ok(job) = wrx.recv() {
@@ -356,7 +401,7 @@ impl Engine {
                                         let latency = submitted.elapsed();
                                         let resp =
                                             AttnResponse { id: req.id, out, kept, latency };
-                                        deliver(&m, t0, resp, &resp_tx);
+                                        deliver(&m, t0, latency, resp, &resp_tx);
                                     }
                                     Err(_) => lock_metrics(&m).errors += 1,
                                 }
@@ -364,23 +409,59 @@ impl Engine {
                             let mut mi = lock_metrics(&m);
                             mi.batches += 1;
                             mi.batch_size_sum += bsize;
+                            drop(mi);
+                            let _ = fb.send(Feedback::BatchDone {
+                                worker: widx,
+                                n: bsize as usize,
+                            });
                         }
-                        Job::Session(req, submitted, resp_tx) => {
+                        Job::Model(mj, resp) => {
                             let t0 = Instant::now();
-                            match exec.execute_session(&req) {
-                                Ok((out, kept)) => {
-                                    let latency = submitted.elapsed();
-                                    let resp =
-                                        AttnResponse { id: req.session, out, kept, latency };
-                                    deliver(&m, t0, resp, &resp_tx);
+                            let session = mj.session();
+                            match exec.execute_model(&mj) {
+                                Ok((out, evicted)) => {
+                                    if !evicted.is_empty() {
+                                        let _ = fb.send(Feedback::Evicted {
+                                            worker: widx,
+                                            sessions: evicted,
+                                        });
+                                    }
+                                    let (kept, context) = scheduler::keep_totals(&out);
+                                    if let Some((rtx, submitted)) = resp {
+                                        let latency = submitted.elapsed();
+                                        let sr = StepResponse {
+                                            session,
+                                            outs: out.outs,
+                                            kept: out.kept,
+                                            context_len: out.context_len,
+                                            latency,
+                                        };
+                                        deliver(&m, t0, latency, sr, &rtx);
+                                    }
+                                    let _ = fb.send(Feedback::Done {
+                                        worker: widx,
+                                        session,
+                                        kept,
+                                        context,
+                                    });
                                 }
                                 Err(_) => {
                                     lock_metrics(&m).errors += 1;
                                     // A failed Open never produced a cache:
-                                    // tell the batcher to drop the pin.
-                                    if matches!(req.op, SessionOp::Open { .. }) {
-                                        let _ = unbind.send(req.session);
-                                    }
+                                    // the scheduler must drop the pin and
+                                    // fail the session's queued work. Other
+                                    // failures just complete the unit.
+                                    let msg = if matches!(mj, ModelJob::Open { .. }) {
+                                        Feedback::OpenFailed { worker: widx, session }
+                                    } else {
+                                        Feedback::Done {
+                                            worker: widx,
+                                            session,
+                                            kept: 0,
+                                            context: 0,
+                                        }
+                                    };
+                                    let _ = fb.send(msg);
                                 }
                             }
                         }
@@ -390,73 +471,86 @@ impl Engine {
             worker_txs.push(wtx);
         }
 
-        // The batcher holds the receive side; drop the engine's own sender
-        // so the channel closes when the workers exit.
-        drop(unbind_tx);
+        // The scheduler thread holds the receive side; drop the engine's own
+        // sender so the channel closes when the workers exit.
+        drop(fb_tx);
 
-        // Batcher thread: shape-group one-shots, dispatch session ops
-        // immediately (sticky-routed, order-preserving per session).
+        // Scheduler/batcher thread: shape-group one-shots; drive the
+        // continuous-batching scheduler one tick per loop iteration.
         let (tx, rx): (Sender<Submission>, Receiver<Submission>) = channel();
+        let m_thread = Arc::clone(&metrics);
         let batcher = {
             std::thread::spawn(move || {
                 let mut batcher = Batcher::new(cfg);
                 let mut router = Router::new(worker_txs.len());
-                // Session ops bind on Open, follow the pin thereafter, and
-                // unbind after routing Close. Returns false when workers are
-                // gone (shutdown).
-                let dispatch_session =
-                    |router: &mut Router, req: SessionRequest, resp: Sender<AttnResponse>| {
-                        let w = match req.op {
-                            SessionOp::Open { .. } => router.bind_session(req.session),
-                            SessionOp::Close => {
-                                let w = router.route_session(req.session);
-                                router.unbind_session(req.session);
-                                w
-                            }
-                            _ => router.route_session(req.session),
-                        };
-                        router.note_dispatch(w, 1);
-                        worker_txs[w].send(Job::Session(req, Instant::now(), resp)).is_ok()
-                    };
+                let mut sched = Scheduler::new(sched_cfg, worker_txs.len());
+                // A tick can only produce new dispatches after a state
+                // change (feedback or submissions); gating on this keeps
+                // the ~200 µs busy-poll from counting phantom ticks and
+                // deferrals while workers are merely executing.
+                let mut need_tick = false;
                 loop {
-                    // Release pins of sessions whose Open a worker rejected.
-                    while let Ok(sid) = unbind_rx.try_recv() {
-                        router.unbind_session(sid);
-                    }
-                    // Block for the first submission, then drain the window.
-                    let first = match rx.recv_timeout(Duration::from_millis(5)) {
-                        Ok(r) => Some(r),
-                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
-                        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
-                    };
-                    if let Some(sub) = first {
-                        match sub {
-                            Submission::OneShot(req, resp) => {
-                                batcher.push(req, Instant::now(), resp)
+                    let mut dropped_ops = 0usize;
+                    let mut dirty = false;
+                    // 1. Worker feedback → router/scheduler (in-flight
+                    //    accounting, pin releases for failed opens and
+                    //    evictions, one-shot load decay).
+                    while let Ok(fb) = fb_rx.try_recv() {
+                        match fb {
+                            Feedback::BatchDone { worker, n } => {
+                                router.note_complete(worker, n);
                             }
-                            Submission::Session(req, resp) => {
-                                if !dispatch_session(&mut router, req, resp) {
-                                    return;
+                            fb => {
+                                // Done AND OpenFailed both complete one
+                                // dispatched unit; only evictions carry no
+                                // dispatch of their own.
+                                let done_worker = match fb {
+                                    Feedback::Done { worker, .. } => Some(worker),
+                                    Feedback::OpenFailed { worker, .. } => Some(worker),
+                                    _ => None,
+                                };
+                                if let Some(w) = done_worker {
+                                    router.note_complete(w, 1);
                                 }
+                                dropped_ops += sched.on_feedback(fb, &mut router);
+                                need_tick = true;
                             }
                         }
+                        dirty = true;
+                    }
+                    // 2. Block briefly for submissions, then drain the
+                    //    window. Poll tighter while model work is in flight
+                    //    so completions turn into next-tick dispatches
+                    //    promptly.
+                    let timeout = if sched.busy() {
+                        Duration::from_micros(200)
+                    } else {
+                        Duration::from_millis(5)
+                    };
+                    let first = match rx.recv_timeout(timeout) {
+                        Ok(r) => Some(r),
+                        Err(RecvTimeoutError::Timeout) => None,
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    };
+                    if let Some(sub) = first {
+                        dirty = true;
+                        need_tick = true;
+                        Self::admit(sub, &mut batcher, &mut sched, &mut router, &mut dropped_ops);
                         // Greedy drain without blocking.
                         while let Ok(sub) = rx.try_recv() {
-                            match sub {
-                                Submission::OneShot(req, resp) => {
-                                    batcher.push(req, Instant::now(), resp)
-                                }
-                                Submission::Session(req, resp) => {
-                                    if !dispatch_session(&mut router, req, resp) {
-                                        return;
-                                    }
-                                }
-                            }
+                            Self::admit(
+                                sub,
+                                &mut batcher,
+                                &mut sched,
+                                &mut router,
+                                &mut dropped_ops,
+                            );
                             if batcher.any_full() {
                                 break;
                             }
                         }
                     }
+                    // 3. Release ready one-shot batches.
                     for batch in batcher.take_ready(Instant::now()) {
                         let w = router.pick();
                         router.note_dispatch(w, batch.len());
@@ -464,11 +558,51 @@ impl Engine {
                             return;
                         }
                     }
+                    // 4. One scheduler tick (only when state changed):
+                    //    assemble and dispatch the iteration batch.
+                    if need_tick {
+                        need_tick = false;
+                        let dispatches = sched.plan_tick(&mut router);
+                        dirty |= !dispatches.is_empty();
+                        for d in dispatches {
+                            router.note_dispatch(d.worker, 1);
+                            if worker_txs[d.worker].send(Job::Model(d.job, d.resp)).is_err() {
+                                return;
+                            }
+                        }
+                    }
+                    // 5. Publish scheduler gauges.
+                    if dirty || dropped_ops > 0 {
+                        let mut mi = lock_metrics(&m_thread);
+                        mi.errors += dropped_ops as u64;
+                        mi.sched = sched.stats;
+                        mi.session_pins = router.n_sessions() as u64;
+                    }
                 }
-                // Drain leftovers on shutdown.
+                // Shutdown: drain leftover one-shots, then run the scheduler
+                // dry (bounded — workers may already be gone).
                 for batch in batcher.take_all() {
                     let w = router.pick();
                     let _ = worker_txs[w].send(Job::Batch(batch));
+                }
+                let deadline = Instant::now() + Duration::from_secs(5);
+                while sched.busy() && Instant::now() < deadline {
+                    for d in sched.plan_tick(&mut router) {
+                        router.note_dispatch(d.worker, 1);
+                        if worker_txs[d.worker].send(Job::Model(d.job, d.resp)).is_err() {
+                            return;
+                        }
+                    }
+                    match fb_rx.recv_timeout(Duration::from_millis(100)) {
+                        Ok(fb) => {
+                            sched.on_feedback(fb, &mut router);
+                            while let Ok(fb) = fb_rx.try_recv() {
+                                sched.on_feedback(fb, &mut router);
+                            }
+                        }
+                        Err(RecvTimeoutError::Timeout) => {}
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
                 }
             })
         };
@@ -483,7 +617,36 @@ impl Engine {
         }
     }
 
-    /// Submit a request; returns a receiver for its response.
+    /// Route one submission into the batcher or the scheduler (scheduler
+    /// thread only). Rejected admissions are counted; dropping the responder
+    /// resolves the client's receiver disconnected.
+    fn admit(
+        sub: Submission,
+        batcher: &mut Batcher,
+        sched: &mut Scheduler,
+        router: &mut Router,
+        dropped_ops: &mut usize,
+    ) {
+        let now = Instant::now();
+        let rejected = match sub {
+            Submission::OneShot(req, resp) => {
+                batcher.push(req, now, resp);
+                false
+            }
+            Submission::Open { session, alpha, prompt, resp } => {
+                sched.admit_open(session, alpha, prompt, resp, now, router).is_err()
+            }
+            Submission::Step { session, step, resp } => {
+                sched.enqueue_step(session, step, resp, now).is_err()
+            }
+            Submission::Close { session, resp } => sched.enqueue_close(session, resp, now).is_err(),
+        };
+        if rejected {
+            *dropped_ops += 1;
+        }
+    }
+
+    /// Submit a one-shot request; returns a receiver for its response.
     ///
     /// A non-finite or negative `alpha` is rejected here as a counted
     /// per-request error (the receiver resolves disconnected) — it must
@@ -502,12 +665,47 @@ impl Engine {
         rrx
     }
 
-    /// Open a decode session over a prompt context (the prefill step);
-    /// returns the session id plus a receiver for the ack (`kept` = context
-    /// length). Quantization scales are calibrated on this prompt and fixed
-    /// for the session's life; all subsequent ops for the id land on the
-    /// worker that holds the cache. Alpha is validated like
-    /// [`Engine::submit`].
+    /// Open a model-level decode session (the prefill): the prompt is
+    /// admitted **chunk-wise** by the scheduler alongside in-flight decodes;
+    /// the returned receiver resolves once the whole prompt is applied
+    /// (`context_len` = prompt length). Per-lane quantization scales are
+    /// calibrated on the first chunk and fixed for the session's life; all
+    /// subsequent work for the id lands on the worker that holds the cache.
+    /// Alpha is validated like [`Engine::submit`].
+    pub fn open_model_session(
+        &self,
+        alpha: f64,
+        prompt: ModelPrompt,
+    ) -> (u64, Receiver<StepResponse>) {
+        let session = self.next_session.fetch_add(1, Ordering::Relaxed);
+        let (rtx, rrx) = channel();
+        if !alpha.is_finite() || alpha < 0.0 {
+            lock_metrics(&self.metrics).errors += 1;
+            return (session, rrx);
+        }
+        let _ = self.tx.send(Submission::Open { session, alpha, prompt, resp: rtx });
+        (session, rrx)
+    }
+
+    /// Queue one model step (append the generated token's K/V rows and/or
+    /// decode one query per lane). Steps run in submission order, one per
+    /// scheduler tick.
+    pub fn model_step(&self, session: u64, step: ModelStep) -> Receiver<StepResponse> {
+        let (rtx, rrx) = channel();
+        let _ = self.tx.send(Submission::Step { session, step, resp: rtx });
+        rrx
+    }
+
+    /// Close a model session after its queued steps drain, freeing its
+    /// cache. Later ops on the id are counted errors.
+    pub fn close_model_session(&self, session: u64) -> Receiver<StepResponse> {
+        let (rtx, rrx) = channel();
+        let _ = self.tx.send(Submission::Close { session, resp: rtx });
+        rrx
+    }
+
+    /// Legacy single-head session open — the degenerate 1-layer/1-head model
+    /// session (`context_len` in the ack = prompt length).
     pub fn open_session(
         &self,
         alpha: f64,
@@ -515,43 +713,29 @@ impl Engine {
         dim: usize,
         k: Vec<f32>,
         v: Vec<f32>,
-    ) -> (u64, Receiver<AttnResponse>) {
-        let session = self.next_session.fetch_add(1, Ordering::Relaxed);
-        if !alpha.is_finite() || alpha < 0.0 {
-            lock_metrics(&self.metrics).errors += 1;
-            let (_, rrx) = channel();
-            return (session, rrx);
-        }
-        let rx = self.session_op(session, SessionOp::Open { alpha, seq, dim, k, v });
-        (session, rx)
+    ) -> (u64, Receiver<StepResponse>) {
+        self.open_model_session(alpha, ModelPrompt::single(dim, seq, k, v))
     }
 
-    /// Append one generated token's K/V row to a session's cached context
-    /// (ack's `kept` = new context length).
+    /// Append one generated token's K/V row to a single-head session (ack's
+    /// `context_len` = new context length).
     pub fn session_append(
         &self,
         session: u64,
         k_row: Vec<f32>,
         v_row: Vec<f32>,
-    ) -> Receiver<AttnResponse> {
-        self.session_op(session, SessionOp::Append { k_row, v_row })
+    ) -> Receiver<StepResponse> {
+        self.model_step(session, ModelStep::append_only(vec![k_row], vec![v_row]))
     }
 
-    /// Run one decode step against a session's cached context.
-    pub fn session_decode(&self, session: u64, q: Vec<f32>) -> Receiver<AttnResponse> {
-        self.session_op(session, SessionOp::Decode { q })
+    /// Run one decode step against a single-head session's cached context.
+    pub fn session_decode(&self, session: u64, q: Vec<f32>) -> Receiver<StepResponse> {
+        self.model_step(session, ModelStep::decode_only(vec![q]))
     }
 
-    /// Close a session, freeing its cache. Later ops on the id are counted
-    /// errors.
-    pub fn close_session(&self, session: u64) -> Receiver<AttnResponse> {
-        self.session_op(session, SessionOp::Close)
-    }
-
-    fn session_op(&self, session: u64, op: SessionOp) -> Receiver<AttnResponse> {
-        let (rtx, rrx) = channel();
-        let _ = self.tx.send(Submission::Session(SessionRequest { session, op }, rtx));
-        rrx
+    /// Close a single-head session ([`Engine::close_model_session`]).
+    pub fn close_session(&self, session: u64) -> Receiver<StepResponse> {
+        self.close_model_session(session)
     }
 
     /// Submit and wait.
@@ -582,6 +766,13 @@ impl Engine {
             mean_latency_us: mean_lat,
             p95_latency_us: p95,
             throughput_rps: if elapsed > 0.0 { mi.completed as f64 / elapsed } else { 0.0 },
+            ticks: mi.sched.ticks,
+            model_steps: mi.sched.steps,
+            prefill_chunks: mi.sched.prefill_chunks,
+            evictions: mi.sched.evictions,
+            deferred: mi.sched.deferred,
+            session_pins: mi.session_pins,
+            decode_keep_rate: mi.sched.keep_rate(),
         }
     }
 
@@ -829,10 +1020,12 @@ mod tests {
 
     #[test]
     fn session_decode_is_bit_identical_to_one_shot_requests() {
-        // The tentpole acceptance: a decode step through the session path
-        // (cached quantization + incrementally appended planes, sticky
-        // routing across 3 workers) must be bit-identical to a one-shot
-        // request carrying the same full context.
+        // The degenerate 1-layer/1-head acceptance: a decode step through
+        // the scheduler-driven session path (cached quantization +
+        // incrementally appended planes, sticky pinning across 3 workers)
+        // must be bit-identical to a one-shot request carrying the same full
+        // context. (The full multi-layer variant lives in
+        // tests/scheduler_e2e.rs.)
         let trace = DecodeTrace::synth(48, 4, 16, 0x5E55);
         let engine = Engine::start(3, BatchConfig::default(), BesfExecutor::default);
         let (sid, rx) = engine.open_session(
@@ -843,13 +1036,13 @@ mod tests {
             trace.prompt_v.clone(),
         );
         let ack = rx.recv_timeout(Duration::from_secs(5)).expect("open ack");
-        assert_eq!(ack.kept, trace.prompt_len);
+        assert_eq!(ack.context_len, trace.prompt_len);
         for (i, step) in trace.steps.iter().enumerate() {
             let ack = engine
                 .session_append(sid, step.k_row.clone(), step.v_row.clone())
                 .recv_timeout(Duration::from_secs(5))
                 .expect("append ack");
-            assert_eq!(ack.kept, trace.prompt_len + i + 1, "step {i} context length");
+            assert_eq!(ack.context_len, trace.prompt_len + i + 1, "step {i} context length");
             let dec = engine
                 .session_decode(sid, step.q.clone())
                 .recv_timeout(Duration::from_secs(5))
@@ -868,15 +1061,18 @@ mod tests {
                     valid: vec![1.0; n],
                 })
                 .unwrap();
-            assert_eq!(dec.out, one_shot.out, "step {i}: outputs must be bit-identical");
-            assert_eq!(dec.kept, one_shot.kept, "step {i}: survivor counts");
-            assert!(dec.kept >= 1);
+            assert_eq!(dec.out(), &one_shot.out[..], "step {i}: outputs must be bit-identical");
+            assert_eq!(dec.kept_total(), one_shot.kept, "step {i}: survivor counts");
+            assert!(dec.kept_total() >= 1);
         }
         engine.close_session(sid).recv_timeout(Duration::from_secs(5)).expect("close ack");
-        // If routing were not sticky, appends/decodes would have landed on
-        // workers without the cache and shown up here as errors.
+        // If pinning were not sticky, steps would have landed on workers
+        // without the cache and shown up here as errors.
         let m = engine.metrics();
         assert_eq!(m.errors, 0);
+        assert!(m.model_steps >= 8, "append + decode steps went through the scheduler");
+        assert!(m.prefill_chunks >= 1);
+        assert!(m.ticks >= 1);
         engine.shutdown();
     }
 
@@ -900,8 +1096,9 @@ mod tests {
         // Ops on a never-opened session behave the same.
         let rx = engine.session_append(999, vec![0.0; 4], vec![0.0; 4]);
         assert!(rx.recv_timeout(Duration::from_secs(5)).is_err());
-        let m = engine.metrics();
+        let m = wait_metrics(&engine, |m| m.errors >= 2);
         assert_eq!(m.errors, 2);
+        assert_eq!(m.session_pins, 0, "close released the pin");
         let ok = engine.submit_blocking(mk_request(8, 4, 31)).unwrap();
         assert_eq!(ok.out.len(), 4);
         engine.shutdown();
@@ -909,15 +1106,90 @@ mod tests {
 
     #[test]
     fn session_ops_on_sessionless_executor_are_counted_errors() {
-        // The dense fallback executor has no session support: the default
-        // trait impl rejects, the worker counts, nothing dies.
+        // The dense fallback executor has no model-session support: the
+        // default trait impl rejects, the worker counts, the scheduler
+        // releases the pin, nothing dies.
         let engine = Engine::start(1, BatchConfig::default(), || RustExecutor);
         let (_sid, rx) = engine.open_session(0.5, 1, 2, vec![0.0; 2], vec![0.0; 2]);
         assert!(rx.recv_timeout(Duration::from_secs(5)).is_err());
-        let m = engine.metrics();
+        let m = wait_metrics(&engine, |m| m.errors >= 1 && m.session_pins == 0);
         assert_eq!(m.errors, 1);
+        assert_eq!(m.session_pins, 0, "failed open must not leak its pin");
         let ok = engine.submit_blocking(mk_request(4, 2, 41)).unwrap();
         assert_eq!(ok.out.len(), 2);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn store_eviction_releases_router_pin_end_to_end() {
+        // A capacity-1 store evicts the LRU session when a second one opens;
+        // the eviction must travel back to the scheduler and release the
+        // evicted session's pin (otherwise Router::sessions leaks an entry
+        // per evicted session, forever).
+        let engine = Engine::start(1, BatchConfig::default(), || {
+            BesfExecutor::with_sessions(SessionStore::with_policy(1, None))
+        });
+        let trace = DecodeTrace::synth(8, 1, 4, 0x5E77);
+        let (sid_a, rx) = engine.open_session(
+            0.6,
+            trace.prompt_len,
+            trace.dim,
+            trace.prompt_k.clone(),
+            trace.prompt_v.clone(),
+        );
+        rx.recv_timeout(Duration::from_secs(5)).expect("open A");
+        let (sid_b, rx) = engine.open_session(
+            0.6,
+            trace.prompt_len,
+            trace.dim,
+            trace.prompt_k.clone(),
+            trace.prompt_v.clone(),
+        );
+        rx.recv_timeout(Duration::from_secs(5)).expect("open B evicts A");
+        let m = wait_metrics(&engine, |m| m.evictions == 1 && m.session_pins == 1);
+        assert_eq!(m.evictions, 1);
+        assert_eq!(m.session_pins, 1, "evicted session's pin released, B's kept");
+        // A is gone: ops on it are counted errors; B still decodes.
+        let rx = engine.session_decode(sid_a, trace.steps[0].q.clone());
+        assert!(rx.recv_timeout(Duration::from_secs(5)).is_err());
+        let dec = engine
+            .session_decode(sid_b, trace.steps[0].q.clone())
+            .recv_timeout(Duration::from_secs(5))
+            .expect("B decodes");
+        assert_eq!(dec.out().len(), 4);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn chunked_prefill_spreads_over_ticks_and_acks_once() {
+        // A 32-row prompt with a 8-row chunk: the scheduler must admit it in
+        // 4 chunks (visible in metrics), the client gets exactly ONE ack
+        // with the full context length, and decode afterwards still works.
+        let engine = Engine::start_with(
+            2,
+            BatchConfig::default(),
+            SchedConfig { prefill_chunk: 8, max_inflight_per_worker: 2 },
+            BesfExecutor::default,
+        );
+        let trace = DecodeTrace::synth(32, 1, 8, 0x5E88);
+        let (sid, rx) = engine.open_session(
+            0.6,
+            trace.prompt_len,
+            trace.dim,
+            trace.prompt_k.clone(),
+            trace.prompt_v.clone(),
+        );
+        let ack = rx.recv_timeout(Duration::from_secs(5)).expect("prefill ack");
+        assert_eq!(ack.context_len, 32, "ack reports the whole admitted prompt");
+        assert!(rx.try_recv().is_err(), "exactly one ack per open");
+        let dec = engine
+            .session_decode(sid, trace.steps[0].q.clone())
+            .recv_timeout(Duration::from_secs(5))
+            .expect("decode after chunked prefill");
+        assert_eq!(dec.out().len(), 8);
+        let m = engine.metrics();
+        assert_eq!(m.prefill_chunks, 4);
+        assert_eq!(m.errors, 0);
         engine.shutdown();
     }
 }

@@ -1,8 +1,11 @@
 //! Worker routing: least-outstanding-work selection with round-robin tie
 //! breaking (the standard replica-routing policy of serving routers), plus
-//! session-sticky bindings for the KV-cache path — a decode session's cached
-//! context lives inside exactly one executor worker, so every op on that
-//! session must land on the worker that holds it (DESIGN.md §7).
+//! session-sticky bindings for the KV-cache path — a model session's cached
+//! context lives inside exactly one executor worker, so every unit the
+//! continuous-batching scheduler dispatches for that session must land on
+//! the worker that holds it (DESIGN.md §7–8). The scheduler binds at
+//! admission, follows the pin for every chunk/step, and unbinds on close,
+//! failed open, or store eviction.
 
 use std::collections::HashMap;
 
@@ -39,8 +42,10 @@ impl Router {
         self.outstanding[worker] += n;
     }
 
-    /// Record completion (used when completion feedback is wired; the
-    /// batcher thread also decays optimistically).
+    /// Record completion. The coordinator thread calls this from worker
+    /// feedback for both model jobs (`Feedback::Done`, n = 1) and one-shot
+    /// batches (`Feedback::BatchDone`, n = batch size), so the outstanding
+    /// estimate decays symmetrically for both traffic classes.
     pub fn note_complete(&mut self, worker: usize, n: usize) {
         self.outstanding[worker] = self.outstanding[worker].saturating_sub(n);
     }
@@ -49,32 +54,19 @@ impl Router {
         self.outstanding.len()
     }
 
-    /// Pin a new session to the currently least-loaded worker; subsequent
-    /// [`Router::route_session`] calls return the same worker until
-    /// [`Router::unbind_session`].
+    /// Pin a new session to the currently least-loaded worker. The
+    /// scheduler records the returned worker in its own session state and
+    /// dispatches every subsequent unit there until
+    /// [`Router::unbind_session`]; the pin's purpose here is to keep
+    /// `pick()`'s load estimate and the live-pin count
+    /// ([`Router::n_sessions`], the `session_pins` gauge) coherent.
     pub fn bind_session(&mut self, session: u64) -> usize {
         let w = self.pick();
         self.sessions.insert(session, w);
         w
     }
 
-    /// The worker a session's ops must go to. Unknown sessions (never opened
-    /// or already closed) fall back to least-loaded routing — the receiving
-    /// worker's `SessionStore` then rejects the op as a counted error, which
-    /// is the intended failure mode.
-    pub fn route_session(&mut self, session: u64) -> usize {
-        match self.sessions.get(&session) {
-            Some(&w) => w,
-            None => self.pick(),
-        }
-    }
-
-    /// The worker a session is pinned to, if any.
-    pub fn session_worker(&self, session: u64) -> Option<usize> {
-        self.sessions.get(&session).copied()
-    }
-
-    /// Drop a session pin (on `Close`, after routing the close op itself).
+    /// Drop a session pin (close, failed open, or store eviction).
     pub fn unbind_session(&mut self, session: u64) {
         self.sessions.remove(&session);
     }
@@ -127,22 +119,19 @@ mod tests {
     }
 
     #[test]
-    fn session_routing_is_sticky_until_unbind() {
+    fn session_pins_count_and_release() {
         let mut r = Router::new(3);
         let w = r.bind_session(7);
-        // Load the bound worker far above the others: stickiness must win
-        // over least-loaded.
         r.note_dispatch(w, 100);
-        for _ in 0..5 {
-            assert_eq!(r.route_session(7), w);
-        }
-        assert_eq!(r.session_worker(7), Some(w));
         assert_eq!(r.n_sessions(), 1);
         r.unbind_session(7);
-        assert_eq!(r.session_worker(7), None);
         assert_eq!(r.n_sessions(), 0);
-        // After unbind the loaded worker is avoided again.
-        assert_ne!(r.route_session(7), w);
+        // Unbinding an unknown id is a no-op, not a panic (late unbinds
+        // from eviction feedback may race a close).
+        r.unbind_session(7);
+        assert_eq!(r.n_sessions(), 0);
+        // The loaded worker is avoided by fresh binds.
+        assert_ne!(r.bind_session(8), w);
     }
 
     #[test]

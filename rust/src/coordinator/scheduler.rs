@@ -1,0 +1,828 @@
+//! Model-level **continuous-batching scheduler** (DESIGN.md §8).
+//!
+//! PR 3's session path served one single-head op per dispatch; real
+//! autoregressive traffic needs one **model step** — every layer and head of
+//! a request's stack — per generated token, for every in-flight request. This
+//! module is the vLLM-style iteration-level scheduler that closes that gap:
+//! each *tick* assembles one iteration batch from all runnable sessions
+//! (admitting new prefills chunk-wise alongside in-flight decodes), dispatches
+//! at most one unit of work per session to the session's pinned worker, and
+//! streams per-token responses back as they complete.
+//!
+//! The scheduler is a **pure state machine**: it owns no threads and no
+//! channels' receive sides. The coordinator's batcher thread drives it —
+//! `admit_open`/`enqueue_step`/`enqueue_close` on submissions, `on_feedback`
+//! on worker completions, then one [`Scheduler::plan_tick`] per loop
+//! iteration whose [`Dispatch`]es the thread sends to workers. That split
+//! keeps admission, chunked prefill, fairness, and backpressure
+//! deterministically unit-testable without threads (see tests below); the
+//! thread adds only I/O.
+//!
+//! **Fairness.** One round-robin ring over sessions, cursor-rotated every
+//! tick; each runnable session gets at most one unit (a prefill chunk, a
+//! model step, or a close) per tick, subject to its worker's in-flight cap.
+//! With `S` sessions sharing a worker of capacity `C`, every runnable
+//! session therefore advances within `ceil(S / C)` ticks — a long prefill
+//! cannot starve decodes (it only consumes one chunk-sized unit per tick),
+//! and heavy decode traffic cannot starve an admitted prefill.
+//!
+//! **Backpressure.** `max_inflight_per_worker` bounds dispatched-but-
+//! unfinished units per worker; when the runnable set exceeds capacity the
+//! surplus stays queued (counted in [`SchedStats::deferred`]) and is served
+//! on later ticks by ring order.
+
+use super::router::Router;
+use crate::engine::{ModelShape, ModelStepOutput};
+use anyhow::Result;
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::Sender;
+use std::time::{Duration, Instant};
+
+/// A model-level prompt: per-lane (lh-major) K/V buffers for the prefill.
+#[derive(Debug, Clone)]
+pub struct ModelPrompt {
+    pub shape: ModelShape,
+    pub prompt_len: usize,
+    /// `k[lane]` / `v[lane]` are row-major `[prompt_len × dim]`.
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+}
+
+impl ModelPrompt {
+    /// Degenerate 1-layer/1-head prompt (the legacy single-head session API).
+    pub fn single(dim: usize, seq: usize, k: Vec<f32>, v: Vec<f32>) -> Self {
+        Self { shape: ModelShape::single(dim), prompt_len: seq, k: vec![k], v: vec![v] }
+    }
+
+    fn validate(&self) -> Result<()> {
+        let lanes = self.shape.lanes();
+        anyhow::ensure!(self.shape.dim > 0, "model dim must be positive");
+        anyhow::ensure!(lanes > 0, "model must have at least one lane");
+        anyhow::ensure!(self.prompt_len >= 1, "prompt must contain at least one row");
+        anyhow::ensure!(
+            self.k.len() == lanes && self.v.len() == lanes,
+            "prompt must carry one K and one V buffer per lane ({lanes} lanes)"
+        );
+        let want = self.prompt_len * self.shape.dim;
+        for (kl, vl) in self.k.iter().zip(&self.v) {
+            anyhow::ensure!(kl.len() == want, "lane k length != prompt_len*dim");
+            anyhow::ensure!(vl.len() == want, "lane v length != prompt_len*dim");
+        }
+        Ok(())
+    }
+}
+
+/// One unit of per-session work for a tick: optionally append one K/V row per
+/// lane, optionally decode one query per lane (append happens first — causal
+/// self-attention appends the generated token before its successor's query
+/// runs). Empty vectors mean "skip that half", so the legacy `Append` and
+/// `Decode` ops are the two degenerate single-half cases.
+#[derive(Debug, Clone, Default)]
+pub struct ModelStep {
+    pub k_rows: Vec<Vec<f32>>,
+    pub v_rows: Vec<Vec<f32>>,
+    pub qs: Vec<Vec<f32>>,
+}
+
+impl ModelStep {
+    /// Append + decode: the standard decode-step shape.
+    pub fn token(k_rows: Vec<Vec<f32>>, v_rows: Vec<Vec<f32>>, qs: Vec<Vec<f32>>) -> Self {
+        Self { k_rows, v_rows, qs }
+    }
+
+    /// Append-only step (what the single-head `Engine::session_append`
+    /// wraps).
+    pub fn append_only(k_rows: Vec<Vec<f32>>, v_rows: Vec<Vec<f32>>) -> Self {
+        Self { k_rows, v_rows, qs: Vec::new() }
+    }
+
+    /// Decode-only step (what the single-head `Engine::session_decode`
+    /// wraps).
+    pub fn decode_only(qs: Vec<Vec<f32>>) -> Self {
+        Self { k_rows: Vec::new(), v_rows: Vec::new(), qs }
+    }
+
+    pub fn has_append(&self) -> bool {
+        !self.k_rows.is_empty()
+    }
+
+    pub fn has_decode(&self) -> bool {
+        !self.qs.is_empty()
+    }
+
+    fn validate(&self, shape: &ModelShape) -> Result<()> {
+        let lanes = shape.lanes();
+        anyhow::ensure!(
+            self.k_rows.len() == self.v_rows.len(),
+            "step must carry K and V rows for the same lanes"
+        );
+        if self.has_append() {
+            anyhow::ensure!(self.k_rows.len() == lanes, "step needs one K/V row per lane");
+            for (kr, vr) in self.k_rows.iter().zip(&self.v_rows) {
+                anyhow::ensure!(kr.len() == shape.dim, "k_row length != dim");
+                anyhow::ensure!(vr.len() == shape.dim, "v_row length != dim");
+            }
+        }
+        if self.has_decode() {
+            anyhow::ensure!(self.qs.len() == lanes, "step needs one query per lane");
+            for q in &self.qs {
+                anyhow::ensure!(q.len() == shape.dim, "query length != dim");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-token streaming response for a model session op. For acks (prefill
+/// completion, append-only steps, close) `outs`/`kept` are empty and
+/// `context_len` reports the context length (0 after close).
+#[derive(Debug, Clone)]
+pub struct StepResponse {
+    pub session: u64,
+    /// Per-lane sparse attention outputs (lh-major; empty for acks).
+    pub outs: Vec<Vec<f32>>,
+    /// Per-lane survivor counts.
+    pub kept: Vec<usize>,
+    pub context_len: usize,
+    pub latency: Duration,
+}
+
+impl StepResponse {
+    /// First lane's output — the whole output for 1-layer/1-head sessions.
+    /// Empty for ack-type responses (open/append-only/close), which carry
+    /// no decode output.
+    pub fn out(&self) -> &[f32] {
+        self.outs.first().map_or(&[], |o| o.as_slice())
+    }
+
+    /// Survivors summed over lanes.
+    pub fn kept_total(&self) -> usize {
+        self.kept.iter().sum()
+    }
+}
+
+/// What a worker executes for one session in one tick.
+#[derive(Debug, Clone)]
+pub enum ModelJob {
+    /// First prefill chunk: create the context (fixes per-lane scales).
+    Open {
+        session: u64,
+        alpha: f64,
+        shape: ModelShape,
+        k: Vec<Vec<f32>>,
+        v: Vec<Vec<f32>>,
+        rows: usize,
+    },
+    /// Subsequent prefill chunk.
+    Prefill { session: u64, k: Vec<Vec<f32>>, v: Vec<Vec<f32>>, rows: usize },
+    /// One model step (append and/or decode).
+    Step { session: u64, step: ModelStep },
+    /// Drop the session's cache.
+    Close { session: u64 },
+}
+
+impl ModelJob {
+    pub fn session(&self) -> u64 {
+        match self {
+            ModelJob::Open { session, .. }
+            | ModelJob::Prefill { session, .. }
+            | ModelJob::Step { session, .. }
+            | ModelJob::Close { session } => *session,
+        }
+    }
+}
+
+/// Worker → scheduler completion feedback.
+#[derive(Debug, Clone)]
+pub enum Feedback {
+    /// A model job finished (successfully or as a counted error). `kept` /
+    /// `context` carry decode-step survivor and context token totals for the
+    /// keep-rate metric (zero for acks and errors).
+    Done { worker: usize, session: u64, kept: u64, context: u64 },
+    /// An `Open` was rejected by the worker (bad chunk shapes, duplicate
+    /// id, sessionless executor): the pin must be released and queued work
+    /// for the session failed.
+    OpenFailed { worker: usize, session: u64 },
+    /// Sessions the worker's store evicted (idle-TTL / LRU, DESIGN.md §8):
+    /// their pins must be released.
+    Evicted { worker: usize, sessions: Vec<u64> },
+    /// A one-shot shape batch of `n` requests finished. Carries no session
+    /// state — it exists so the router's outstanding-work estimate decays
+    /// for one-shot traffic exactly as it does for model jobs (otherwise
+    /// mixed traffic would skew `pick`/`bind_session` toward model-busy
+    /// workers forever).
+    BatchDone { worker: usize, n: usize },
+}
+
+/// Scheduler knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedConfig {
+    /// Prompt rows admitted per prefill chunk (per tick, per session).
+    pub prefill_chunk: usize,
+    /// Dispatched-but-unfinished units allowed per worker (backpressure).
+    pub max_inflight_per_worker: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        Self { prefill_chunk: 256, max_inflight_per_worker: 2 }
+    }
+}
+
+/// Cumulative scheduler counters (snapshotted into `Metrics`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SchedStats {
+    /// Ticks that had at least one runnable session.
+    pub ticks: u64,
+    /// Dispatched model steps (append and/or decode units).
+    pub steps: u64,
+    /// Dispatched prefill chunks (including the opening chunk).
+    pub prefill_chunks: u64,
+    pub closes: u64,
+    /// Sessions evicted by worker stores (idle-TTL / LRU).
+    pub evictions: u64,
+    /// Dispatch opportunities deferred by worker backpressure.
+    pub deferred: u64,
+    /// Largest runnable set seen in a single tick.
+    pub peak_runnable: u64,
+    /// Decode-step survivor / context token totals (keep-rate numerator /
+    /// denominator), accumulated from worker feedback.
+    pub kept_tokens: u64,
+    pub context_tokens: u64,
+}
+
+impl SchedStats {
+    /// Mean decode keep rate across all completed decode steps.
+    pub fn keep_rate(&self) -> f64 {
+        if self.context_tokens == 0 {
+            0.0
+        } else {
+            self.kept_tokens as f64 / self.context_tokens as f64
+        }
+    }
+}
+
+/// One planned dispatch: send `job` to `worker`; if `resp` is present the
+/// worker answers the client through it (prefill chunks before the last one
+/// carry no responder).
+pub struct Dispatch {
+    pub worker: usize,
+    pub job: ModelJob,
+    pub resp: Option<(Sender<StepResponse>, Instant)>,
+}
+
+struct Prefill {
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    prompt_len: usize,
+    next_row: usize,
+    opened: bool,
+    resp: Sender<StepResponse>,
+    submitted: Instant,
+}
+
+struct PendingStep {
+    step: ModelStep,
+    resp: Sender<StepResponse>,
+    submitted: Instant,
+}
+
+struct Sess {
+    worker: usize,
+    shape: ModelShape,
+    alpha: f64,
+    prefill: Option<Prefill>,
+    pending: VecDeque<PendingStep>,
+    close: Option<(Sender<StepResponse>, Instant)>,
+    inflight: bool,
+}
+
+impl Sess {
+    fn runnable(&self) -> bool {
+        !self.inflight
+            && (self.prefill.is_some() || !self.pending.is_empty() || self.close.is_some())
+    }
+}
+
+/// The iteration-level scheduler (see module docs).
+pub struct Scheduler {
+    cfg: SchedConfig,
+    sessions: HashMap<u64, Sess>,
+    /// Round-robin ring (admission order); `cursor` rotates every tick.
+    order: Vec<u64>,
+    cursor: usize,
+    /// Dispatched-but-unfinished units per worker.
+    inflight: Vec<usize>,
+    pub stats: SchedStats,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedConfig, n_workers: usize) -> Self {
+        assert!(cfg.prefill_chunk >= 1);
+        assert!(cfg.max_inflight_per_worker >= 1);
+        Self {
+            cfg,
+            sessions: HashMap::new(),
+            order: Vec::new(),
+            cursor: 0,
+            inflight: vec![0; n_workers],
+            stats: SchedStats::default(),
+        }
+    }
+
+    /// Live (admitted, not yet closed/evicted) sessions.
+    pub fn n_sessions(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Is there anything in flight or waiting? The batcher thread polls
+    /// tighter while this holds so completions turn into next-tick dispatches
+    /// promptly.
+    pub fn busy(&self) -> bool {
+        self.inflight.iter().any(|&n| n > 0) || self.sessions.values().any(|s| s.runnable())
+    }
+
+    /// Admit a new session: validate the prompt, pin a worker via the router,
+    /// and queue the prompt for chunk-wise prefill. The client's receiver
+    /// resolves when the *whole* prompt has been admitted and applied.
+    pub fn admit_open(
+        &mut self,
+        session: u64,
+        alpha: f64,
+        prompt: ModelPrompt,
+        resp: Sender<StepResponse>,
+        now: Instant,
+        router: &mut Router,
+    ) -> Result<()> {
+        prompt.validate()?;
+        anyhow::ensure!(
+            !self.sessions.contains_key(&session),
+            "session {session} already admitted"
+        );
+        let worker = router.bind_session(session);
+        self.sessions.insert(
+            session,
+            Sess {
+                worker,
+                shape: prompt.shape,
+                alpha,
+                prefill: Some(Prefill {
+                    k: prompt.k,
+                    v: prompt.v,
+                    prompt_len: prompt.prompt_len,
+                    next_row: 0,
+                    opened: false,
+                    resp,
+                    submitted: now,
+                }),
+                pending: VecDeque::new(),
+                close: None,
+                inflight: false,
+            },
+        );
+        self.order.push(session);
+        Ok(())
+    }
+
+    /// Queue one model step for a session. Steps run strictly in submission
+    /// order, at most one per tick (iteration-level scheduling), after the
+    /// session's prefill completes.
+    pub fn enqueue_step(
+        &mut self,
+        session: u64,
+        step: ModelStep,
+        resp: Sender<StepResponse>,
+        now: Instant,
+    ) -> Result<()> {
+        let s = self
+            .sessions
+            .get_mut(&session)
+            .ok_or_else(|| anyhow::anyhow!("unknown session {session}"))?;
+        anyhow::ensure!(s.close.is_none(), "session {session} is closing");
+        step.validate(&s.shape)?;
+        s.pending.push_back(PendingStep { step, resp, submitted: now });
+        Ok(())
+    }
+
+    /// Request a close. Dispatches only after every queued step has run.
+    pub fn enqueue_close(
+        &mut self,
+        session: u64,
+        resp: Sender<StepResponse>,
+        now: Instant,
+    ) -> Result<()> {
+        let s = self
+            .sessions
+            .get_mut(&session)
+            .ok_or_else(|| anyhow::anyhow!("unknown session {session}"))?;
+        anyhow::ensure!(s.close.is_none(), "session {session} already closing");
+        s.close = Some((resp, now));
+        Ok(())
+    }
+
+    /// Apply worker feedback. Returns the number of queued client ops that
+    /// had to be dropped (their senders are released so receivers resolve
+    /// disconnected); the caller counts them as errors.
+    pub fn on_feedback(&mut self, fb: Feedback, router: &mut Router) -> usize {
+        match fb {
+            Feedback::Done { worker, session, kept, context } => {
+                self.complete_unit(worker);
+                self.stats.kept_tokens += kept;
+                self.stats.context_tokens += context;
+                if let Some(s) = self.sessions.get_mut(&session) {
+                    s.inflight = false;
+                }
+                0
+            }
+            Feedback::OpenFailed { worker, session } => {
+                self.complete_unit(worker);
+                router.unbind_session(session);
+                self.drop_session(session)
+            }
+            Feedback::Evicted { worker: _, sessions } => {
+                let mut dropped = 0;
+                for sid in sessions {
+                    router.unbind_session(sid);
+                    self.stats.evictions += 1;
+                    dropped += self.drop_session(sid);
+                }
+                dropped
+            }
+            // Router-only bookkeeping; handled by the coordinator thread.
+            Feedback::BatchDone { .. } => 0,
+        }
+    }
+
+    fn complete_unit(&mut self, worker: usize) {
+        if let Some(n) = self.inflight.get_mut(worker) {
+            *n = n.saturating_sub(1);
+        }
+    }
+
+    /// Remove a session and fail its queued work; returns dropped-op count.
+    fn drop_session(&mut self, session: u64) -> usize {
+        let Some(s) = self.sessions.remove(&session) else { return 0 };
+        self.order.retain(|&sid| sid != session);
+        // Dropping the senders resolves the clients' receivers disconnected.
+        let mut dropped = s.pending.len();
+        if s.prefill.is_some() {
+            dropped += 1;
+        }
+        if s.close.is_some() {
+            dropped += 1;
+        }
+        dropped
+    }
+
+    /// Assemble one iteration batch: walk the ring from the rotating cursor,
+    /// dispatching at most one unit per runnable session, bounded by each
+    /// worker's in-flight cap.
+    pub fn plan_tick(&mut self, router: &mut Router) -> Vec<Dispatch> {
+        let mut out = Vec::new();
+        let n = self.order.len();
+        if n == 0 {
+            return out;
+        }
+        let runnable = self.sessions.values().filter(|s| s.runnable()).count() as u64;
+        if runnable == 0 {
+            // Idle or fully in-flight: not a scheduling round.
+            return out;
+        }
+        self.stats.ticks += 1;
+        self.stats.peak_runnable = self.stats.peak_runnable.max(runnable);
+        let start = self.cursor % n;
+        self.cursor = self.cursor.wrapping_add(1);
+        let mut closed: Vec<u64> = Vec::new();
+        for i in 0..n {
+            let sid = self.order[(start + i) % n];
+            let Some(s) = self.sessions.get_mut(&sid) else { continue };
+            if !s.runnable() {
+                continue;
+            }
+            if self.inflight[s.worker] >= self.cfg.max_inflight_per_worker {
+                self.stats.deferred += 1;
+                continue;
+            }
+            let worker = s.worker;
+            // Per-session priority: finish prefill, then steps, then close.
+            let dispatch = if let Some(pf) = s.prefill.as_mut() {
+                let rows = self.cfg.prefill_chunk.min(pf.prompt_len - pf.next_row);
+                let (a, b) = (pf.next_row, pf.next_row + rows);
+                let dim = s.shape.dim;
+                let k: Vec<Vec<f32>> =
+                    pf.k.iter().map(|kl| kl[a * dim..b * dim].to_vec()).collect();
+                let v: Vec<Vec<f32>> =
+                    pf.v.iter().map(|vl| vl[a * dim..b * dim].to_vec()).collect();
+                let job = if pf.opened {
+                    ModelJob::Prefill { session: sid, k, v, rows }
+                } else {
+                    pf.opened = true;
+                    ModelJob::Open { session: sid, alpha: s.alpha, shape: s.shape, k, v, rows }
+                };
+                pf.next_row = b;
+                self.stats.prefill_chunks += 1;
+                let resp = if pf.next_row == pf.prompt_len {
+                    // Last chunk: the worker acks the client, and the prompt
+                    // buffers can be released.
+                    let pf = s.prefill.take().unwrap();
+                    Some((pf.resp, pf.submitted))
+                } else {
+                    None
+                };
+                Dispatch { worker, job, resp }
+            } else if let Some(p) = s.pending.pop_front() {
+                self.stats.steps += 1;
+                Dispatch {
+                    worker,
+                    job: ModelJob::Step { session: sid, step: p.step },
+                    resp: Some((p.resp, p.submitted)),
+                }
+            } else {
+                let (resp, submitted) = s.close.take().unwrap();
+                self.stats.closes += 1;
+                closed.push(sid);
+                Dispatch {
+                    worker,
+                    job: ModelJob::Close { session: sid },
+                    resp: Some((resp, submitted)),
+                }
+            };
+            s.inflight = true;
+            self.inflight[worker] += 1;
+            out.push(dispatch);
+        }
+        for sid in closed {
+            // Unbind after routing the close itself (legacy contract); the
+            // state is gone, so a Done for it just decrements the worker.
+            router.unbind_session(sid);
+            self.sessions.remove(&sid);
+            self.order.retain(|&x| x != sid);
+        }
+        out
+    }
+}
+
+/// Build the decode-step totals for [`Feedback::Done`] from a step's output:
+/// `(survivors, context tokens)` summed over lanes; acks report zeros.
+pub fn keep_totals(out: &ModelStepOutput) -> (u64, u64) {
+    if out.outs.is_empty() {
+        (0, 0)
+    } else {
+        let kept: usize = out.kept.iter().sum();
+        (kept as u64, (out.kept.len() * out.context_len) as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::{channel, Receiver};
+
+    fn prompt(lanes: (usize, usize), dim: usize, len: usize) -> ModelPrompt {
+        let shape = ModelShape::new(lanes.0, lanes.1, dim);
+        ModelPrompt {
+            shape,
+            prompt_len: len,
+            k: vec![vec![0.5; len * dim]; shape.lanes()],
+            v: vec![vec![0.5; len * dim]; shape.lanes()],
+        }
+    }
+
+    fn step(shape: &ModelShape) -> ModelStep {
+        ModelStep::token(
+            vec![vec![0.1; shape.dim]; shape.lanes()],
+            vec![vec![0.1; shape.dim]; shape.lanes()],
+            vec![vec![0.2; shape.dim]; shape.lanes()],
+        )
+    }
+
+    fn ack_all(sched: &mut Scheduler, router: &mut Router, batch: &[Dispatch]) {
+        for d in batch {
+            sched.on_feedback(
+                Feedback::Done { worker: d.worker, session: d.job.session(), kept: 0, context: 0 },
+                router,
+            );
+        }
+    }
+
+    fn open(
+        sched: &mut Scheduler,
+        router: &mut Router,
+        sid: u64,
+        p: ModelPrompt,
+    ) -> Receiver<StepResponse> {
+        let (tx, rx) = channel();
+        sched.admit_open(sid, 0.6, p, tx, Instant::now(), router).unwrap();
+        rx
+    }
+
+    #[test]
+    fn prefill_is_chunked_and_acks_on_last_chunk() {
+        let mut router = Router::new(1);
+        let mut sched =
+            Scheduler::new(SchedConfig { prefill_chunk: 4, max_inflight_per_worker: 1 }, 1);
+        let _rx = open(&mut sched, &mut router, 1, prompt((1, 1), 2, 10));
+        let mut rows_seen = vec![];
+        for tick in 0..3 {
+            let batch = sched.plan_tick(&mut router);
+            assert_eq!(batch.len(), 1, "tick {tick}");
+            let d = &batch[0];
+            match (&d.job, tick) {
+                (ModelJob::Open { rows, k, .. }, 0) => {
+                    assert_eq!((*rows, k[0].len()), (4, 8));
+                    assert!(d.resp.is_none(), "not the last chunk");
+                    rows_seen.push(*rows);
+                }
+                (ModelJob::Prefill { rows, .. }, _) => {
+                    rows_seen.push(*rows);
+                    // 10 rows in chunks of 4: last chunk has 2 rows + ack.
+                    assert_eq!(d.resp.is_some(), tick == 2);
+                }
+                other => panic!("unexpected job at tick {tick}: {:?}", other.0),
+            }
+            ack_all(&mut sched, &mut router, &batch);
+        }
+        assert_eq!(rows_seen, vec![4, 4, 2]);
+        assert!(sched.plan_tick(&mut router).is_empty(), "prefill done, nothing queued");
+        assert_eq!(sched.stats.prefill_chunks, 3);
+    }
+
+    #[test]
+    fn round_robin_is_starvation_free_both_ways() {
+        // One worker, capacity 1: a 8-chunk prefill shares the ring with two
+        // decode sessions. Every session must advance within S=3 ticks —
+        // the prefill can't starve decodes AND decodes can't starve the
+        // prefill.
+        let mut router = Router::new(1);
+        let mut sched =
+            Scheduler::new(SchedConfig { prefill_chunk: 4, max_inflight_per_worker: 1 }, 1);
+        let _p = open(&mut sched, &mut router, 10, prompt((1, 1), 2, 32));
+        let shape = ModelShape::single(2);
+        let mut rxs = vec![];
+        for sid in [11u64, 12] {
+            let _ = open(&mut sched, &mut router, sid, prompt((1, 1), 2, 4));
+            // Let the 1-chunk prefill of the decode sessions complete first.
+        }
+        // Tick until the two decode sessions' prefills are done, then queue
+        // their steps.
+        for _ in 0..3 {
+            let batch = sched.plan_tick(&mut router);
+            ack_all(&mut sched, &mut router, &batch);
+        }
+        for sid in [11u64, 12] {
+            for _ in 0..6 {
+                let (tx, rx) = channel();
+                sched.enqueue_step(sid, step(&shape), tx, Instant::now()).unwrap();
+                rxs.push(rx);
+            }
+        }
+        // Drive ticks; record, per session, the gaps between dispatches.
+        let mut last_seen: HashMap<u64, usize> = HashMap::new();
+        let mut max_gap: HashMap<u64, usize> = HashMap::new();
+        for tick in 0..24 {
+            let batch = sched.plan_tick(&mut router);
+            assert!(batch.len() <= 1, "capacity 1");
+            for d in &batch {
+                let sid = d.job.session();
+                if let Some(&prev) = last_seen.get(&sid) {
+                    let gap = tick - prev;
+                    let e = max_gap.entry(sid).or_insert(0);
+                    *e = (*e).max(gap);
+                }
+                last_seen.insert(sid, tick);
+            }
+            ack_all(&mut sched, &mut router, &batch);
+        }
+        // All three sessions kept advancing, none with a gap above S=3.
+        for sid in [10u64, 11, 12] {
+            assert!(last_seen.contains_key(&sid), "session {sid} starved entirely");
+            assert!(
+                *max_gap.get(&sid).unwrap_or(&0) <= 3,
+                "session {sid} starved: gap {:?}",
+                max_gap.get(&sid)
+            );
+        }
+        assert!(sched.stats.peak_runnable >= 3);
+    }
+
+    #[test]
+    fn backpressure_defers_beyond_worker_capacity() {
+        // 1 worker with capacity 2, three runnable sessions: only two units
+        // dispatch per tick; the third is deferred, and nothing more goes
+        // out until completions arrive.
+        let mut router = Router::new(1);
+        let mut sched =
+            Scheduler::new(SchedConfig { prefill_chunk: 8, max_inflight_per_worker: 2 }, 1);
+        for sid in [1u64, 2, 3] {
+            let _ = open(&mut sched, &mut router, sid, prompt((1, 1), 2, 4));
+        }
+        let batch = sched.plan_tick(&mut router);
+        assert_eq!(batch.len(), 2, "capacity bounds the iteration batch");
+        assert_eq!(sched.stats.deferred, 1);
+        assert!(sched.plan_tick(&mut router).is_empty(), "saturated: nothing dispatches");
+        assert!(sched.busy());
+        ack_all(&mut sched, &mut router, &batch);
+        let batch = sched.plan_tick(&mut router);
+        assert_eq!(batch.len(), 1, "freed capacity serves the deferred session");
+        ack_all(&mut sched, &mut router, &batch);
+        assert!(!sched.busy());
+    }
+
+    #[test]
+    fn close_waits_for_queued_steps_and_unbinds() {
+        let mut router = Router::new(2);
+        let mut sched = Scheduler::new(SchedConfig::default(), 2);
+        let shape = ModelShape::single(2);
+        let _o = open(&mut sched, &mut router, 7, prompt((1, 1), 2, 4));
+        let batch = sched.plan_tick(&mut router);
+        ack_all(&mut sched, &mut router, &batch);
+        let (tx, _rx1) = channel();
+        sched.enqueue_step(7, step(&shape), tx, Instant::now()).unwrap();
+        let (tx, _rx2) = channel();
+        sched.enqueue_close(7, tx, Instant::now()).unwrap();
+        // Steps after a close are rejected.
+        let (tx, _rx3) = channel();
+        assert!(sched.enqueue_step(7, step(&shape), tx, Instant::now()).is_err());
+        assert_eq!(router.n_sessions(), 1);
+        let batch = sched.plan_tick(&mut router);
+        assert!(matches!(batch[0].job, ModelJob::Step { .. }), "step before close");
+        ack_all(&mut sched, &mut router, &batch);
+        let batch = sched.plan_tick(&mut router);
+        assert!(matches!(batch[0].job, ModelJob::Close { session: 7 }));
+        assert_eq!(router.n_sessions(), 0, "close releases the pin");
+        assert_eq!(sched.n_sessions(), 0);
+        ack_all(&mut sched, &mut router, &batch);
+        assert_eq!(sched.stats.closes, 1);
+    }
+
+    #[test]
+    fn open_failure_and_eviction_release_pins_and_fail_queued_work() {
+        let mut router = Router::new(1);
+        let mut sched = Scheduler::new(SchedConfig::default(), 1);
+        let shape = ModelShape::single(2);
+        let _o = open(&mut sched, &mut router, 1, prompt((1, 1), 2, 4));
+        let (tx, step_rx) = channel();
+        sched.enqueue_step(1, step(&shape), tx, Instant::now()).unwrap();
+        let batch = sched.plan_tick(&mut router);
+        assert!(matches!(batch[0].job, ModelJob::Open { .. }));
+        assert_eq!(router.n_sessions(), 1);
+        let dropped =
+            sched.on_feedback(Feedback::OpenFailed { worker: 0, session: 1 }, &mut router);
+        assert_eq!(dropped, 1, "the queued step is failed");
+        assert!(step_rx.recv().is_err(), "dropped sender resolves the receiver");
+        assert_eq!(router.n_sessions(), 0, "failed open releases the pin");
+        assert_eq!(sched.n_sessions(), 0);
+
+        // Eviction: same pin/strand cleanup, counted in stats.
+        let _o = open(&mut sched, &mut router, 2, prompt((1, 1), 2, 4));
+        let batch = sched.plan_tick(&mut router);
+        ack_all(&mut sched, &mut router, &batch);
+        assert_eq!(router.n_sessions(), 1);
+        let dropped = sched
+            .on_feedback(Feedback::Evicted { worker: 0, sessions: vec![2] }, &mut router);
+        assert_eq!(dropped, 0, "idle session had nothing queued");
+        assert_eq!(router.n_sessions(), 0);
+        assert_eq!(sched.stats.evictions, 1);
+    }
+
+    #[test]
+    fn admission_validates_prompt_and_step_shapes() {
+        let mut router = Router::new(1);
+        let mut sched = Scheduler::new(SchedConfig::default(), 1);
+        let (tx, _rx) = channel();
+        let mut bad = prompt((1, 2), 4, 4);
+        bad.k[1].truncate(3);
+        assert!(sched.admit_open(1, 0.6, bad, tx, Instant::now(), &mut router).is_err());
+        assert_eq!(router.n_sessions(), 0, "rejected admission takes no pin");
+
+        let _o = open(&mut sched, &mut router, 2, prompt((1, 2), 4, 4));
+        let shape2 = ModelShape::new(1, 2, 4);
+        let (tx, _rx) = channel();
+        assert!(
+            sched.enqueue_step(2, ModelStep::decode_only(vec![vec![0.0; 4]]), tx, Instant::now())
+                .is_err(),
+            "lane count mismatch"
+        );
+        let (tx, _rx) = channel();
+        assert!(sched.enqueue_step(2, step(&shape2), tx, Instant::now()).is_ok());
+        let (tx, _rx) = channel();
+        assert!(
+            sched.enqueue_step(99, step(&shape2), tx, Instant::now()).is_err(),
+            "unknown session"
+        );
+        let (tx, _rx) = channel();
+        assert!(sched.enqueue_close(99, tx, Instant::now()).is_err());
+    }
+
+    #[test]
+    fn keep_totals_report_decode_steps_only() {
+        let ack = ModelStepOutput { outs: vec![], kept: vec![], context_len: 7 };
+        assert_eq!(keep_totals(&ack), (0, 0));
+        let dec = ModelStepOutput {
+            outs: vec![vec![0.0; 2]; 2],
+            kept: vec![3, 5],
+            context_len: 10,
+        };
+        assert_eq!(keep_totals(&dec), (8, 20));
+    }
+}

@@ -1,47 +1,69 @@
-//! Session KV-cache: per-session owned attention contexts for the
-//! autoregressive decode path (DESIGN.md §7).
+//! Session KV-cache: per-session owned **model-level** attention contexts
+//! for the autoregressive decode path (DESIGN.md §7–8).
 //!
 //! A one-shot request ships its whole K/V context, re-quantizes it, and
 //! re-decomposes K into 12 bit planes — O(seq) redundant work per generated
-//! token. A session instead pays that once at [`SessionStore::open`]
-//! (prefill-time calibration: the K/V scales and packed planes are fixed for
-//! the session's life), then grows the cache one token at a time
-//! ([`SessionStore::append`], O(dim) via `BitPlanes::append_row`) and serves
-//! decode steps against it ([`SessionStore::decode`]). The grown planes are
-//! bit-identical to a from-scratch decomposition, so a decode step equals
-//! the one-shot path whenever the prompt calibration covers the appended
-//! rows' value range (out-of-range appends saturate like any PTQ outlier).
+//! token, per layer, per head. A session instead pays that once at
+//! [`SessionStore::open`] (prefill-time calibration on the first admitted
+//! chunk: per-lane K/V scales and packed planes are fixed for the session's
+//! life), grows the cache chunk-wise ([`SessionStore::append_rows`], the
+//! scheduler's chunked prefill) or token-wise (inside
+//! [`SessionStore::step`]), and serves whole model decode steps against it.
 //!
-//! A store lives inside exactly one executor worker; `Router::bind_session`
-//! pins all of a session's ops to that worker. Every failure here is a
-//! *counted per-request error* at the worker loop — a bad or stale session
-//! op must never panic the worker that holds other sessions' caches.
+//! A store lives inside exactly one executor worker; the scheduler pins all
+//! of a session's work to that worker. Every failure here is a *counted
+//! per-request error* at the worker loop — a bad or stale session op must
+//! never panic the worker that holds other sessions' caches.
+//!
+//! **Eviction.** Each session pins O(lanes · seq · dim) of quantized K/V
+//! plus packed planes, so the store bounds itself three ways, all behind the
+//! hard cap `max_sessions`:
+//!
+//! 1. **Close** — the client frees its own session (the normal path).
+//! 2. **Idle TTL** — sessions untouched for longer than `idle_ttl` are
+//!    reclaimed when an open hits the cap (and by [`SessionStore::sweep_idle`],
+//!    which the owner may call opportunistically).
+//! 3. **LRU** — if an open still finds the store full after the TTL sweep,
+//!    the least-recently-used session is evicted, so abandoned-but-young
+//!    sessions cannot wedge the store shut.
+//!
+//! Evicted ids are returned to the caller, which must report them upstream
+//! so the scheduler releases the evicted sessions' router pins (tested here
+//! and end-to-end in `coordinator`).
 
+use super::scheduler::ModelStep;
 use crate::algo::BesfScratch;
 use crate::config::LatsConfig;
-use crate::engine::HeadContext;
-use crate::workload::QuantAttn;
+use crate::engine::{ModelContext, ModelShape, ModelStepOutput};
 use anyhow::Result;
 use std::collections::HashMap;
+use std::time::{Duration, Instant};
 
 /// Default hard cap on concurrently open sessions per store (i.e. per
-/// worker). Each session pins O(seq·dim) of quantized K/V plus packed
-/// planes, and the store has no idle-TTL eviction yet — without a cap, a
-/// crash-prone client population that opens sessions and never closes them
-/// would grow worker memory without bound.
+/// worker).
 pub const DEFAULT_MAX_SESSIONS: usize = 1024;
 
-/// Session id → owned cached context (quantized K/V, packed K planes, LATS
-/// config).
+/// Default idle TTL: a session untouched this long is reclaimable.
+pub const DEFAULT_IDLE_TTL: Duration = Duration::from_secs(600);
+
+struct Entry {
+    ctx: ModelContext,
+    last_used: Instant,
+}
+
+/// Session id → owned cached model context (per-lane quantized K/V, packed K
+/// planes, LATS config), with idle-TTL + LRU eviction behind a hard cap.
 pub struct SessionStore {
-    sessions: HashMap<u64, HeadContext<'static>>,
-    /// Opens beyond this many live sessions are rejected as counted errors.
+    sessions: HashMap<u64, Entry>,
+    /// Hard cap on live sessions; opens at the cap evict (TTL, then LRU).
     max_sessions: usize,
+    /// `None` disables TTL-based eviction (LRU still applies at the cap).
+    idle_ttl: Option<Duration>,
 }
 
 impl Default for SessionStore {
     fn default() -> Self {
-        Self::with_capacity(DEFAULT_MAX_SESSIONS)
+        Self::with_policy(DEFAULT_MAX_SESSIONS, Some(DEFAULT_IDLE_TTL))
     }
 }
 
@@ -50,10 +72,15 @@ impl SessionStore {
         Self::default()
     }
 
-    /// Store with an explicit session cap (tests, memory-constrained
-    /// deployments).
+    /// Store with an explicit session cap and the default idle TTL.
     pub fn with_capacity(max_sessions: usize) -> Self {
-        Self { sessions: HashMap::new(), max_sessions }
+        Self::with_policy(max_sessions, Some(DEFAULT_IDLE_TTL))
+    }
+
+    /// Store with an explicit cap and TTL (`None` = no idle eviction).
+    pub fn with_policy(max_sessions: usize, idle_ttl: Option<Duration>) -> Self {
+        assert!(max_sessions >= 1);
+        Self { sessions: HashMap::new(), max_sessions, idle_ttl }
     }
 
     /// Number of live sessions.
@@ -65,64 +92,110 @@ impl SessionStore {
         self.sessions.contains_key(&session)
     }
 
-    /// Context length (keys) of a live session.
+    /// Context length (keys per lane) of a live session.
     pub fn context_len(&self, session: u64) -> Option<usize> {
-        self.sessions.get(&session).map(|ctx| ctx.qa.seq())
+        self.sessions.get(&session).map(|e| e.ctx.context_len())
     }
 
-    /// Open a session over a prompt context: quantize K/V (per-tensor PTQ
-    /// calibrated on this prompt), decompose K into planes, fix the LATS
-    /// config. O(seq·dim), paid once per session.
+    /// Evict every session idle longer than the TTL at `now`; returns the
+    /// evicted ids (the caller must release their router pins).
+    pub fn sweep_idle(&mut self, now: Instant) -> Vec<u64> {
+        let Some(ttl) = self.idle_ttl else { return Vec::new() };
+        let expired: Vec<u64> = self
+            .sessions
+            .iter()
+            .filter(|(_, e)| now.duration_since(e.last_used) > ttl)
+            .map(|(&sid, _)| sid)
+            .collect();
+        for sid in &expired {
+            self.sessions.remove(sid);
+        }
+        expired
+    }
+
+    /// Open a session over the first prefill chunk: quantize per-lane K/V
+    /// (per-tensor PTQ calibrated on this chunk), decompose K into planes,
+    /// fix the LATS config. Returns the ids evicted to make room; the caller
+    /// must report them upstream so their router pins are released.
+    #[allow(clippy::too_many_arguments)] // mirrors the ModelJob::Open payload
     pub fn open(
         &mut self,
         session: u64,
         cfg: LatsConfig,
-        k: &[f32],
-        v: &[f32],
-        seq: usize,
-        dim: usize,
-    ) -> Result<()> {
-        anyhow::ensure!(dim > 0, "session dim must be positive");
-        anyhow::ensure!(k.len() == seq * dim, "session k length != seq*dim");
-        anyhow::ensure!(v.len() == seq * dim, "session v length != seq*dim");
+        shape: ModelShape,
+        k: &[Vec<f32>],
+        v: &[Vec<f32>],
+        rows: usize,
+        now: Instant,
+    ) -> Result<Vec<u64>> {
         anyhow::ensure!(!self.sessions.contains_key(&session), "session {session} already open");
-        anyhow::ensure!(
-            self.sessions.len() < self.max_sessions,
-            "session table full ({} live sessions)",
-            self.max_sessions
-        );
-        let qa = QuantAttn::quantize(&[], k, v, seq, dim);
-        self.sessions.insert(session, HeadContext::from_owned(qa, cfg));
-        Ok(())
+        // Validate the chunk BEFORE evicting anyone for it.
+        let ctx = ModelContext::open(shape, cfg, k, v, rows)?;
+        let mut evicted = Vec::new();
+        if self.sessions.len() >= self.max_sessions {
+            evicted = self.sweep_idle(now);
+        }
+        if self.sessions.len() >= self.max_sessions {
+            // Still full: reclaim the least-recently-used session.
+            if let Some(&lru) = self
+                .sessions
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(sid, _)| sid)
+            {
+                self.sessions.remove(&lru);
+                evicted.push(lru);
+            }
+        }
+        self.sessions.insert(session, Entry { ctx, last_used: now });
+        Ok(evicted)
     }
 
-    /// Append one generated token's K/V row; returns the new context length.
-    pub fn append(&mut self, session: u64, k_row: &[f32], v_row: &[f32]) -> Result<usize> {
-        let ctx = self
+    /// Append a prefill chunk (`rows` K/V rows per lane); returns the new
+    /// context length.
+    pub fn append_rows(
+        &mut self,
+        session: u64,
+        k: &[Vec<f32>],
+        v: &[Vec<f32>],
+        rows: usize,
+        now: Instant,
+    ) -> Result<usize> {
+        let e = self
             .sessions
             .get_mut(&session)
             .ok_or_else(|| anyhow::anyhow!("unknown session {session}"))?;
-        anyhow::ensure!(k_row.len() == ctx.qa.dim(), "k_row length != dim");
-        anyhow::ensure!(v_row.len() == ctx.qa.dim(), "v_row length != dim");
-        ctx.append_token(k_row, v_row);
-        Ok(ctx.qa.seq())
+        e.last_used = now;
+        e.ctx.append_rows(k, v, rows)
     }
 
-    /// One decode step: BESF/LATS selection + sparse V over the cached
-    /// context. Returns (output, survivors kept).
-    pub fn decode(
-        &self,
+    /// One model step: append the step's K/V rows (if any), then decode its
+    /// queries (if any) — BESF/LATS selection + sparse V over every
+    /// (layer, head) lane, all through the caller's one scratch.
+    pub fn step(
+        &mut self,
         session: u64,
-        q: &[f32],
+        step: &ModelStep,
         scratch: &mut BesfScratch,
-    ) -> Result<(Vec<f32>, usize)> {
-        let ctx = self
+        now: Instant,
+    ) -> Result<ModelStepOutput> {
+        let e = self
             .sessions
-            .get(&session)
+            .get_mut(&session)
             .ok_or_else(|| anyhow::anyhow!("unknown session {session}"))?;
-        anyhow::ensure!(q.len() == ctx.qa.dim(), "query length != dim");
-        let qr = ctx.decode_scratch(q, scratch);
-        Ok((qr.out, qr.sel.survivors.len()))
+        e.last_used = now;
+        if step.has_append() {
+            e.ctx.append_token(&step.k_rows, &step.v_rows)?;
+        }
+        if step.has_decode() {
+            e.ctx.decode_step(&step.qs, scratch)
+        } else {
+            Ok(ModelStepOutput {
+                outs: Vec::new(),
+                kept: Vec::new(),
+                context_len: e.ctx.context_len(),
+            })
+        }
     }
 
     /// Close a session, freeing its quantized K/V and packed planes.
@@ -137,110 +210,191 @@ impl SessionStore {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workload::DecodeTrace;
+    use crate::workload::ModelDecodeTrace;
 
-    fn store_with_session(sid: u64, trace: &DecodeTrace) -> SessionStore {
-        let mut store = SessionStore::new();
+    fn open_trace(
+        store: &mut SessionStore,
+        sid: u64,
+        mt: &ModelDecodeTrace,
+        now: Instant,
+    ) -> Vec<u64> {
+        let (pk, pv) = mt.prompt();
         store
-            .open(
-                sid,
-                LatsConfig::default(),
-                &trace.prompt_k,
-                &trace.prompt_v,
-                trace.prompt_len,
-                trace.dim,
-            )
-            .unwrap();
-        store
+            .open(sid, LatsConfig::default(), mt.shape(), &pk, &pv, mt.prompt_len, now)
+            .unwrap()
+    }
+
+    fn trace() -> ModelDecodeTrace {
+        ModelDecodeTrace::synth(2, 2, 12, 2, 8, 0x5E10)
     }
 
     #[test]
-    fn open_append_decode_close_lifecycle() {
-        let trace = DecodeTrace::synth(16, 2, 8, 0x5E01);
-        let mut store = store_with_session(9, &trace);
+    fn open_step_close_lifecycle() {
+        let mt = trace();
+        let mut store = SessionStore::new();
+        let t0 = Instant::now();
+        assert!(open_trace(&mut store, 9, &mt, t0).is_empty());
         assert!(store.contains(9));
-        assert_eq!(store.context_len(9), Some(16));
+        assert_eq!(store.context_len(9), Some(12));
 
-        let step = &trace.steps[0];
-        assert_eq!(store.append(9, &step.k_row, &step.v_row).unwrap(), 17);
+        let (qs, ks, vs) = mt.step_rows(0);
         let mut scratch = BesfScratch::new();
-        let (out, kept) = store.decode(9, &step.q, &mut scratch).unwrap();
-        assert_eq!(out.len(), 8);
-        assert!(out.iter().all(|x| x.is_finite()));
-        assert!(kept >= 1 && kept <= 17);
+        let out = store
+            .step(9, &ModelStep::token(ks, vs, qs), &mut scratch, t0)
+            .unwrap();
+        assert_eq!(out.outs.len(), 4);
+        assert_eq!(out.context_len, 13);
+        assert!(out.kept.iter().all(|&k| k >= 1 && k <= 13));
+        assert!(out.outs.iter().flatten().all(|x| x.is_finite()));
+
+        // Append-only and decode-only halves work independently.
+        let (qs, ks, vs) = mt.step_rows(1);
+        let ack = store
+            .step(9, &ModelStep::append_only(ks, vs), &mut scratch, t0)
+            .unwrap();
+        assert!(ack.outs.is_empty());
+        assert_eq!(ack.context_len, 14);
+        let dec = store.step(9, &ModelStep::decode_only(qs), &mut scratch, t0).unwrap();
+        assert_eq!(dec.outs.len(), 4);
+        assert_eq!(dec.context_len, 14);
 
         store.close(9).unwrap();
         assert_eq!(store.n_open(), 0);
     }
 
     #[test]
-    fn close_frees_and_stale_ops_are_errors_not_panics() {
-        // The eviction contract: closing drops the cached planes; every op
-        // against a closed (or never-opened) session is a plain Err.
-        let trace = DecodeTrace::synth(8, 1, 4, 0x5E02);
-        let mut store = store_with_session(1, &trace);
+    fn stale_ops_are_errors_not_panics() {
+        let mt = trace();
+        let mut store = SessionStore::new();
+        let t0 = Instant::now();
+        open_trace(&mut store, 1, &mt, t0);
         store.close(1).unwrap();
         assert!(!store.contains(1));
         assert_eq!(store.context_len(1), None);
 
-        let step = &trace.steps[0];
+        let (qs, ks, vs) = mt.step_rows(0);
         let mut scratch = BesfScratch::new();
-        assert!(store.decode(1, &step.q, &mut scratch).is_err());
-        assert!(store.append(1, &step.k_row, &step.v_row).is_err());
+        assert!(store.step(1, &ModelStep::token(ks, vs, qs), &mut scratch, t0).is_err());
         assert!(store.close(1).is_err(), "double close is an error");
-        assert!(store.decode(77, &step.q, &mut scratch).is_err(), "unknown session");
+        assert!(
+            store.step(77, &ModelStep::default(), &mut scratch, t0).is_err(),
+            "unknown session"
+        );
     }
 
     #[test]
     fn open_validates_shapes_and_duplicates() {
         let mut store = SessionStore::new();
         let cfg = LatsConfig::default();
-        assert!(store.open(1, cfg, &[0.0; 8], &[0.0; 8], 2, 4).is_ok());
-        assert!(store.open(1, cfg, &[0.0; 8], &[0.0; 8], 2, 4).is_err(), "duplicate id");
-        assert!(store.open(2, cfg, &[0.0; 7], &[0.0; 8], 2, 4).is_err(), "bad k length");
-        assert!(store.open(3, cfg, &[0.0; 8], &[0.0; 9], 2, 4).is_err(), "bad v length");
-        assert!(store.open(4, cfg, &[], &[], 0, 0).is_err(), "zero dim");
+        let shape = ModelShape::new(1, 1, 4);
+        let k = vec![vec![0.5f32; 8]];
+        let t0 = Instant::now();
+        assert!(store.open(1, cfg, shape, &k, &k, 2, t0).is_ok());
+        assert!(store.open(1, cfg, shape, &k, &k, 2, t0).is_err(), "duplicate id");
+        let short = vec![vec![0.5f32; 7]];
+        assert!(store.open(2, cfg, shape, &short, &k, 2, t0).is_err(), "bad k length");
+        assert!(store.open(3, cfg, shape, &[], &[], 2, t0).is_err(), "missing lanes");
+        assert_eq!(store.n_open(), 1, "failed opens must not insert or evict");
+    }
+
+    #[test]
+    fn at_cap_ttl_expired_sessions_are_swept_first() {
+        let ttl = Duration::from_secs(5);
+        let mut store = SessionStore::with_policy(2, Some(ttl));
+        let mt = trace();
+        let t0 = Instant::now();
+        open_trace(&mut store, 1, &mt, t0);
+        open_trace(&mut store, 2, &mt, t0);
+        // Touch session 2 late so only 1 is TTL-expired at open time.
+        let t1 = t0 + Duration::from_secs(4);
+        let mut scratch = BesfScratch::new();
+        let (qs, _, _) = mt.step_rows(0);
+        store.step(2, &ModelStep::decode_only(qs), &mut scratch, t1).unwrap();
+
+        let t2 = t0 + Duration::from_secs(6); // 1 idle 6s > ttl, 2 idle 2s
+        let (pk, pv) = mt.prompt();
+        let evicted = store
+            .open(3, LatsConfig::default(), mt.shape(), &pk, &pv, mt.prompt_len, t2)
+            .unwrap();
+        assert_eq!(evicted, vec![1], "only the TTL-expired session goes");
+        assert!(store.contains(2) && store.contains(3));
+        assert_eq!(store.n_open(), 2);
+    }
+
+    #[test]
+    fn at_cap_without_expired_sessions_the_lru_is_evicted() {
+        let mut store = SessionStore::with_policy(2, Some(Duration::from_secs(3600)));
+        let mt = trace();
+        let t0 = Instant::now();
+        open_trace(&mut store, 1, &mt, t0);
+        open_trace(&mut store, 2, &mt, t0 + Duration::from_secs(1));
+        // Touch 1 so 2 becomes the LRU despite opening later.
+        let mut scratch = BesfScratch::new();
+        let (qs, _, _) = mt.step_rows(0);
+        store
+            .step(1, &ModelStep::decode_only(qs), &mut scratch, t0 + Duration::from_secs(2))
+            .unwrap();
+        let (pk, pv) = mt.prompt();
+        let evicted = store
+            .open(
+                3,
+                LatsConfig::default(),
+                mt.shape(),
+                &pk,
+                &pv,
+                mt.prompt_len,
+                t0 + Duration::from_secs(3),
+            )
+            .unwrap();
+        assert_eq!(evicted, vec![2], "least-recently-USED goes, not last-opened");
+        assert!(store.contains(1) && store.contains(3));
+    }
+
+    #[test]
+    fn ttl_disabled_still_evicts_lru_at_cap() {
+        let mut store = SessionStore::with_policy(1, None);
+        let mt = trace();
+        let t0 = Instant::now();
+        open_trace(&mut store, 1, &mt, t0);
+        assert!(store.sweep_idle(t0 + Duration::from_secs(1_000_000)).is_empty());
+        let evicted = open_trace(&mut store, 2, &mt, t0 + Duration::from_secs(1));
+        assert_eq!(evicted, vec![1]);
         assert_eq!(store.n_open(), 1);
     }
 
     #[test]
-    fn session_cap_bounds_store_and_frees_on_close() {
-        // Abandoned sessions can't grow a worker without bound: opens beyond
-        // the cap are counted errors, and closing makes room again.
-        let mut store = SessionStore::with_capacity(2);
-        let cfg = LatsConfig::default();
-        assert!(store.open(1, cfg, &[0.5; 4], &[0.5; 4], 1, 4).is_ok());
-        assert!(store.open(2, cfg, &[0.5; 4], &[0.5; 4], 1, 4).is_ok());
-        assert!(store.open(3, cfg, &[0.5; 4], &[0.5; 4], 1, 4).is_err(), "over cap");
-        assert_eq!(store.n_open(), 2);
-        store.close(1).unwrap();
-        assert!(store.open(3, cfg, &[0.5; 4], &[0.5; 4], 1, 4).is_ok(), "cap freed by close");
-    }
-
-    #[test]
-    fn append_validates_row_widths() {
-        let trace = DecodeTrace::synth(8, 1, 4, 0x5E03);
-        let mut store = store_with_session(5, &trace);
-        assert!(store.append(5, &[0.0; 3], &[0.0; 4]).is_err());
-        assert!(store.append(5, &[0.0; 4], &[0.0; 5]).is_err());
-        assert_eq!(store.context_len(5), Some(8), "failed appends must not grow");
+    fn sweep_idle_reclaims_only_expired() {
+        let ttl = Duration::from_secs(10);
+        let mut store = SessionStore::with_policy(8, Some(ttl));
+        let mt = trace();
+        let t0 = Instant::now();
+        open_trace(&mut store, 1, &mt, t0);
+        open_trace(&mut store, 2, &mt, t0 + Duration::from_secs(8));
+        let mut evicted = store.sweep_idle(t0 + Duration::from_secs(11));
+        evicted.sort_unstable();
+        assert_eq!(evicted, vec![1]);
+        assert_eq!(store.n_open(), 1);
+        // Below the cap nothing else is touched by opens.
+        assert!(open_trace(&mut store, 3, &mt, t0 + Duration::from_secs(12)).is_empty());
     }
 
     #[test]
     fn independent_sessions_do_not_interfere() {
-        let a = DecodeTrace::synth(12, 2, 4, 0x5E04);
-        let b = DecodeTrace::synth(20, 2, 4, 0x5E05);
+        let a = ModelDecodeTrace::synth(1, 2, 8, 2, 4, 0x5E21);
+        let b = ModelDecodeTrace::synth(2, 1, 16, 2, 4, 0x5E22);
         let mut store = SessionStore::new();
-        let cfg = LatsConfig::default();
-        store.open(1, cfg, &a.prompt_k, &a.prompt_v, a.prompt_len, a.dim).unwrap();
-        store.open(2, cfg, &b.prompt_k, &b.prompt_v, b.prompt_len, b.dim).unwrap();
-        store.append(1, &a.steps[0].k_row, &a.steps[0].v_row).unwrap();
-        assert_eq!(store.context_len(1), Some(13));
-        assert_eq!(store.context_len(2), Some(20));
-        store.close(1).unwrap();
+        let t0 = Instant::now();
+        open_trace(&mut store, 1, &a, t0);
+        open_trace(&mut store, 2, &b, t0);
+        let (_, ks, vs) = a.step_rows(0);
         let mut scratch = BesfScratch::new();
-        let (out, _) = store.decode(2, &b.steps[0].q, &mut scratch).unwrap();
-        assert_eq!(out.len(), 4);
+        store.step(1, &ModelStep::append_only(ks, vs), &mut scratch, t0).unwrap();
+        assert_eq!(store.context_len(1), Some(9));
+        assert_eq!(store.context_len(2), Some(16));
+        store.close(1).unwrap();
+        let (qs, _, _) = b.step_rows(0);
+        let out = store.step(2, &ModelStep::decode_only(qs), &mut scratch, t0).unwrap();
+        assert_eq!(out.outs.len(), 2);
         assert_eq!(store.n_open(), 1);
     }
 }

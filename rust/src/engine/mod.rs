@@ -20,6 +20,10 @@
 //! Each scoped worker owns one [`BesfScratch`], so steady-state selection
 //! allocates nothing per query (DESIGN.md §3).
 
+pub mod model;
+
+pub use model::{ModelContext, ModelShape, ModelStepOutput};
+
 use crate::algo::besf::{BesfResult, BesfScratch, SURVIVED};
 use crate::algo::complexity::Complexity;
 use crate::algo::lats::Lats;

@@ -1,0 +1,353 @@
+//! **ModelContext** — the model-level unit of serving state (DESIGN.md §8).
+//!
+//! A [`super::HeadContext`] caches one attention head's quantized K/V and
+//! packed bit planes. Real autoregressive traffic touches *every* layer and
+//! *every* head of the model on *every* decode step, so the serving scheduler
+//! works in terms of a `ModelContext`: an `n_layers × n_heads` stack of owned
+//! head contexts that appends one token's K/V rows across the whole stack and
+//! runs one fused BESF/LATS decode step per tick — reusing a single
+//! [`BesfScratch`] across all lanes of the step, so a model step allocates no
+//! per-lane working memory.
+//!
+//! Lanes are stored **lh-major** (`lane = layer * n_heads + head`); every
+//! per-lane slice argument (`prompt K/V chunks, appended rows, queries`)
+//! follows the same order. Per-lane quantization scales and plane
+//! decompositions are independent, exactly as in a real decoder stack.
+//!
+//! Chunked-prefill calibration: [`ModelContext::open`] fixes each lane's
+//! quantization scales on the *first* admitted chunk; later chunks append
+//! with those scales. The model step is bit-identical to a one-shot request
+//! over the full grown context whenever the first chunk covers each lane's
+//! value extremes (arranged by [`crate::workload::DecodeTrace::synth`], which
+//! plants the max-abs K/V elements in the prompt's first row) — otherwise
+//! out-of-range rows saturate like any PTQ outlier, the same contract as
+//! [`super::HeadContext::append_token`].
+
+use super::{HeadContext, QueryResult};
+use crate::algo::besf::BesfScratch;
+use crate::config::LatsConfig;
+use crate::workload::QuantAttn;
+use anyhow::Result;
+
+/// Shape of a model-level session: every decode step carries
+/// `n_layers * n_heads` lanes of `dim`-wide rows/queries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelShape {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub dim: usize,
+}
+
+impl ModelShape {
+    pub fn new(n_layers: usize, n_heads: usize, dim: usize) -> Self {
+        Self { n_layers, n_heads, dim }
+    }
+
+    /// Degenerate single-op shape: one layer, one head (what the legacy
+    /// single-head session API maps onto).
+    pub fn single(dim: usize) -> Self {
+        Self { n_layers: 1, n_heads: 1, dim }
+    }
+
+    /// Number of (layer, head) lanes.
+    pub fn lanes(&self) -> usize {
+        self.n_layers * self.n_heads
+    }
+}
+
+/// Outputs of one model decode step: per-lane sparse attention outputs and
+/// survivor counts (lh-major).
+#[derive(Debug, Clone)]
+pub struct ModelStepOutput {
+    pub outs: Vec<Vec<f32>>,
+    pub kept: Vec<usize>,
+    /// Context length (keys per lane) after the step.
+    pub context_len: usize,
+}
+
+/// An `n_layers × n_heads` stack of owned [`HeadContext`]s — one model-level
+/// KV-cache, grown per token and decoded per step.
+pub struct ModelContext {
+    pub shape: ModelShape,
+    pub cfg: LatsConfig,
+    /// lh-major: `lanes[layer * n_heads + head]`.
+    lanes: Vec<HeadContext<'static>>,
+}
+
+impl ModelContext {
+    /// Open a model context over the first prefill chunk: quantize each
+    /// lane's K/V (per-lane per-tensor PTQ calibrated on this chunk — the
+    /// session's fixed scales), decompose K into planes. `k0[lane]` /
+    /// `v0[lane]` are row-major `[rows × dim]`.
+    pub fn open(
+        shape: ModelShape,
+        cfg: LatsConfig,
+        k0: &[Vec<f32>],
+        v0: &[Vec<f32>],
+        rows: usize,
+    ) -> Result<Self> {
+        anyhow::ensure!(shape.dim > 0, "model dim must be positive");
+        anyhow::ensure!(shape.lanes() > 0, "model must have at least one (layer, head) lane");
+        anyhow::ensure!(rows > 0, "opening chunk must contain at least one row");
+        anyhow::ensure!(
+            k0.len() == shape.lanes() && v0.len() == shape.lanes(),
+            "prompt chunk must carry one K and one V buffer per lane ({} lanes)",
+            shape.lanes()
+        );
+        let mut lanes = Vec::with_capacity(shape.lanes());
+        for (k, v) in k0.iter().zip(v0) {
+            anyhow::ensure!(k.len() == rows * shape.dim, "lane k length != rows*dim");
+            anyhow::ensure!(v.len() == rows * shape.dim, "lane v length != rows*dim");
+            let qa = QuantAttn::quantize(&[], k, v, rows, shape.dim);
+            lanes.push(HeadContext::from_owned(qa, cfg));
+        }
+        Ok(Self { shape, cfg, lanes })
+    }
+
+    /// Context length in keys (identical across lanes by construction).
+    pub fn context_len(&self) -> usize {
+        self.lanes[0].qa.seq()
+    }
+
+    pub fn lanes(&self) -> &[HeadContext<'static>] {
+        &self.lanes
+    }
+
+    /// The cached context of one (layer, head) lane.
+    pub fn lane(&self, layer: usize, head: usize) -> &HeadContext<'static> {
+        &self.lanes[layer * self.shape.n_heads + head]
+    }
+
+    /// Append a chunk of `rows` K/V rows to every lane (`k[lane]` row-major
+    /// `[rows × dim]`) — the chunked-prefill grow path. O(rows·dim) per lane,
+    /// no rebuild; rows quantize with the lane's fixed open-time scales.
+    pub fn append_rows(&mut self, k: &[Vec<f32>], v: &[Vec<f32>], rows: usize) -> Result<usize> {
+        let dim = self.shape.dim;
+        anyhow::ensure!(
+            k.len() == self.lanes.len() && v.len() == self.lanes.len(),
+            "chunk must carry one K and one V buffer per lane ({} lanes)",
+            self.lanes.len()
+        );
+        for (kl, vl) in k.iter().zip(v) {
+            anyhow::ensure!(kl.len() == rows * dim, "lane k chunk length != rows*dim");
+            anyhow::ensure!(vl.len() == rows * dim, "lane v chunk length != rows*dim");
+        }
+        for (lane, (kl, vl)) in self.lanes.iter_mut().zip(k.iter().zip(v)) {
+            for r in 0..rows {
+                lane.append_token(&kl[r * dim..(r + 1) * dim], &vl[r * dim..(r + 1) * dim]);
+            }
+        }
+        Ok(self.context_len())
+    }
+
+    /// Append one generated token's K/V row per lane (`k_rows[lane].len() ==
+    /// dim`) — the per-token decode grow path.
+    pub fn append_token(&mut self, k_rows: &[Vec<f32>], v_rows: &[Vec<f32>]) -> Result<usize> {
+        let dim = self.shape.dim;
+        anyhow::ensure!(
+            k_rows.len() == self.lanes.len() && v_rows.len() == self.lanes.len(),
+            "token append must carry one K and one V row per lane ({} lanes)",
+            self.lanes.len()
+        );
+        for (kr, vr) in k_rows.iter().zip(v_rows) {
+            anyhow::ensure!(kr.len() == dim, "k_row length != dim");
+            anyhow::ensure!(vr.len() == dim, "v_row length != dim");
+        }
+        for (lane, (kr, vr)) in self.lanes.iter_mut().zip(k_rows.iter().zip(v_rows)) {
+            lane.append_token(kr, vr);
+        }
+        Ok(self.context_len())
+    }
+
+    /// Decode one layer of a step: BESF/LATS selection + sparse V for each of
+    /// the layer's heads, reusing the caller's scratch across heads. Exposed
+    /// so a driver that threads activations layer-by-layer (layer `l`'s query
+    /// depends on layer `l-1`'s output) can interleave; [`Self::decode_step`]
+    /// composes it across all layers.
+    pub fn decode_layer(
+        &self,
+        layer: usize,
+        qs: &[Vec<f32>],
+        scratch: &mut BesfScratch,
+    ) -> Result<Vec<QueryResult>> {
+        anyhow::ensure!(layer < self.shape.n_layers, "layer {layer} out of range");
+        anyhow::ensure!(
+            qs.len() == self.shape.n_heads,
+            "layer decode needs one query per head ({} heads)",
+            self.shape.n_heads
+        );
+        let base = layer * self.shape.n_heads;
+        qs.iter()
+            .enumerate()
+            .map(|(h, q)| {
+                anyhow::ensure!(q.len() == self.shape.dim, "query length != dim");
+                Ok(self.lanes[base + h].decode_scratch(q, scratch))
+            })
+            .collect()
+    }
+
+    /// One full model decode step: per-lane query calibration + BESF/LATS
+    /// selection + sparse V over every (layer, head), all through ONE
+    /// scratch. `qs` is lh-major, one query per lane.
+    pub fn decode_step(
+        &self,
+        qs: &[Vec<f32>],
+        scratch: &mut BesfScratch,
+    ) -> Result<ModelStepOutput> {
+        anyhow::ensure!(
+            qs.len() == self.lanes.len(),
+            "model step needs one query per lane ({} lanes)",
+            self.lanes.len()
+        );
+        let mut outs = Vec::with_capacity(qs.len());
+        let mut kept = Vec::with_capacity(qs.len());
+        for layer in 0..self.shape.n_layers {
+            let base = layer * self.shape.n_heads;
+            for qr in self.decode_layer(layer, &qs[base..base + self.shape.n_heads], scratch)? {
+                kept.push(qr.sel.survivors.len());
+                outs.push(qr.out);
+            }
+        }
+        Ok(ModelStepOutput { outs, kept, context_len: self.context_len() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::SelectionPolicy;
+    use crate::workload::ModelDecodeTrace;
+
+    #[test]
+    fn shape_lanes_and_single() {
+        assert_eq!(ModelShape::new(4, 8, 64).lanes(), 32);
+        let s = ModelShape::single(16);
+        assert_eq!((s.n_layers, s.n_heads, s.dim, s.lanes()), (1, 1, 16, 1));
+    }
+
+    #[test]
+    fn open_validates_shapes() {
+        let cfg = LatsConfig::default();
+        let shape = ModelShape::new(1, 2, 4);
+        let ok = vec![vec![0.5f32; 8]; 2];
+        assert!(ModelContext::open(shape, cfg, &ok, &ok, 2).is_ok());
+        assert!(ModelContext::open(shape, cfg, &ok[..1], &ok, 2).is_err(), "missing lane");
+        let short = vec![vec![0.5f32; 7], vec![0.5f32; 8]];
+        assert!(ModelContext::open(shape, cfg, &short, &ok, 2).is_err(), "bad lane len");
+        assert!(ModelContext::open(shape, cfg, &ok, &ok, 0).is_err(), "empty chunk");
+        assert!(
+            ModelContext::open(ModelShape::new(0, 2, 4), cfg, &[], &[], 2).is_err(),
+            "zero lanes"
+        );
+    }
+
+    #[test]
+    fn step_appends_and_decodes_every_lane() {
+        let mt = ModelDecodeTrace::synth(2, 3, 8, 2, 4, 0x31);
+        let (pk, pv) = mt.prompt();
+        let mut ctx =
+            ModelContext::open(mt.shape(), LatsConfig::default(), &pk, &pv, mt.prompt_len).unwrap();
+        assert_eq!(ctx.context_len(), 8);
+        let mut scratch = BesfScratch::new();
+        for i in 0..mt.n_steps() {
+            let (qs, krs, vrs) = mt.step_rows(i);
+            assert_eq!(ctx.append_token(&krs, &vrs).unwrap(), 8 + i + 1);
+            let out = ctx.decode_step(&qs, &mut scratch).unwrap();
+            assert_eq!(out.outs.len(), 6);
+            assert_eq!(out.kept.len(), 6);
+            assert_eq!(out.context_len, 8 + i + 1);
+            for (o, &k) in out.outs.iter().zip(&out.kept) {
+                assert_eq!(o.len(), 4);
+                assert!(o.iter().all(|x| x.is_finite()));
+                assert!(k >= 1 && k <= out.context_len);
+            }
+        }
+    }
+
+    #[test]
+    fn model_step_is_bit_identical_to_per_lane_one_shot() {
+        // The model-level contract is inherited per lane from HeadContext:
+        // every lane of a model step must equal a from-scratch single-head
+        // run over that lane's grown context.
+        let mt = ModelDecodeTrace::synth(2, 2, 12, 3, 8, 0x32);
+        let (pk, pv) = mt.prompt();
+        let mut ctx =
+            ModelContext::open(mt.shape(), LatsConfig::default(), &pk, &pv, mt.prompt_len).unwrap();
+        let mut scratch = BesfScratch::new();
+        for i in 0..mt.n_steps() {
+            let (qs, krs, vrs) = mt.step_rows(i);
+            ctx.append_token(&krs, &vrs).unwrap();
+            let got = ctx.decode_step(&qs, &mut scratch).unwrap();
+            for l in 0..mt.shape().lanes() {
+                let (k_full, v_full, n) = mt.lanes[l].context_after(i + 1);
+                let qa = QuantAttn::quantize(
+                    &[qs[l].clone()],
+                    &k_full,
+                    &v_full,
+                    n,
+                    mt.dim,
+                );
+                let head = HeadContext::new(&qa, LatsConfig::default());
+                let want = head.run_query(0, SelectionPolicy::Lats);
+                assert_eq!(got.outs[l], want.out, "step {i} lane {l}");
+                assert_eq!(got.kept[l], want.sel.survivors.len(), "step {i} lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_open_matches_whole_prompt_open() {
+        // Prefill admitted in chunks must produce the same cached state as a
+        // one-chunk open, provided the first chunk carries the calibration
+        // extremes (DecodeTrace::synth plants them in row 0).
+        let mt = ModelDecodeTrace::synth(1, 2, 12, 1, 4, 0x33);
+        let (pk, pv) = mt.prompt();
+        let whole =
+            ModelContext::open(mt.shape(), LatsConfig::default(), &pk, &pv, mt.prompt_len).unwrap();
+
+        let dim = mt.dim;
+        let slice = |bufs: &[Vec<f32>], a: usize, b: usize| -> Vec<Vec<f32>> {
+            bufs.iter().map(|b_| b_[a * dim..b * dim].to_vec()).collect()
+        };
+        let mut chunked = ModelContext::open(
+            mt.shape(),
+            LatsConfig::default(),
+            &slice(&pk, 0, 5),
+            &slice(&pv, 0, 5),
+            5,
+        )
+        .unwrap();
+        chunked.append_rows(&slice(&pk, 5, 9), &slice(&pv, 5, 9), 4).unwrap();
+        chunked.append_rows(&slice(&pk, 9, 12), &slice(&pv, 9, 12), 3).unwrap();
+        assert_eq!(chunked.context_len(), whole.context_len());
+
+        let (qs, krs, vrs) = mt.step_rows(0);
+        let mut a = whole;
+        let mut b = chunked;
+        a.append_token(&krs, &vrs).unwrap();
+        b.append_token(&krs, &vrs).unwrap();
+        let mut scratch = BesfScratch::new();
+        let ra = a.decode_step(&qs, &mut scratch).unwrap();
+        let rb = b.decode_step(&qs, &mut scratch).unwrap();
+        assert_eq!(ra.outs, rb.outs);
+        assert_eq!(ra.kept, rb.kept);
+    }
+
+    #[test]
+    fn append_validates_lane_count_and_widths() {
+        let mt = ModelDecodeTrace::synth(1, 2, 4, 1, 4, 0x34);
+        let (pk, pv) = mt.prompt();
+        let mut ctx =
+            ModelContext::open(mt.shape(), LatsConfig::default(), &pk, &pv, 4).unwrap();
+        assert!(ctx.append_token(&[vec![0.0; 4]], &[vec![0.0; 4]]).is_err(), "lane count");
+        assert!(
+            ctx.append_token(&[vec![0.0; 3], vec![0.0; 4]], &[vec![0.0; 4], vec![0.0; 4]])
+                .is_err(),
+            "row width"
+        );
+        assert_eq!(ctx.context_len(), 4, "failed appends must not grow");
+        let mut scratch = BesfScratch::new();
+        assert!(ctx.decode_step(&[vec![0.0; 4]], &mut scratch).is_err(), "query lane count");
+        assert!(ctx.decode_layer(5, &[], &mut scratch).is_err(), "layer out of range");
+    }
+}

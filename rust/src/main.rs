@@ -33,16 +33,20 @@ fn main() {
             let which_ref = if has("--all") { None } else { which.as_deref() };
             figures::run_all(which_ref, out.as_deref()).map(|_| ())
         }
-        "simulate" => {
+        "simulate" => (|| -> anyhow::Result<()> {
             let seq: usize = get("--seq").and_then(|s| s.parse().ok()).unwrap_or(1024);
             let dim: usize = get("--dim").and_then(|s| s.parse().ok()).unwrap_or(64);
             let queries: usize = get("--queries").and_then(|s| s.parse().ok()).unwrap_or(8);
+            // A bad --config path or malformed TOML is an ordinary user
+            // error: report it and exit nonzero (this used to panic).
             let mut cfg = match get("--config") {
                 Some(path) => {
                     let text = std::fs::read_to_string(&path)
-                        .unwrap_or_else(|e| panic!("reading {path}: {e}"));
-                    SimConfig::from_toml(&parse_toml(&text).expect("parse config"))
-                        .expect("valid config")
+                        .map_err(|e| anyhow::anyhow!("reading config {path}: {e}"))?;
+                    let doc = parse_toml(&text)
+                        .map_err(|e| anyhow::anyhow!("parsing config {path}: {e}"))?;
+                    SimConfig::from_toml(&doc)
+                        .map_err(|e| anyhow::anyhow!("invalid config {path}: {e}"))?
                 }
                 None => SimConfig::default(),
             };
@@ -69,7 +73,7 @@ fn main() {
             );
             println!("QK util   : {:.1}%", 100.0 * r.utilization);
             Ok(())
-        }
+        })(),
         "ppl" => {
             let alpha: f64 = get("--alpha").and_then(|s| s.parse().ok()).unwrap_or(0.6);
             let dir = default_artifact_dir().join("tiny_model");

@@ -143,6 +143,74 @@ impl DecodeTrace {
     }
 }
 
+/// An autoregressive decode workload for a whole model stack: one
+/// single-head [`DecodeTrace`] per (layer, head) lane, all sharing
+/// `(prompt_len, steps, dim)` — the shape the model-level scheduler serves
+/// (DESIGN.md §8). Lanes are lh-major (`lane = layer * n_heads + head`),
+/// matching [`crate::engine::ModelContext`]; each lane carries its own
+/// queries and appended K/V rows, as in a real decoder stack where every
+/// layer/head sees different activations.
+#[derive(Debug, Clone)]
+pub struct ModelDecodeTrace {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub dim: usize,
+    pub prompt_len: usize,
+    /// lh-major per-(layer, head) traces.
+    pub lanes: Vec<DecodeTrace>,
+}
+
+impl ModelDecodeTrace {
+    /// Synthesize `n_layers × n_heads` decorrelated lanes (lane 0 is
+    /// bit-identical to `DecodeTrace::synth(prompt_len, steps, dim, seed)`).
+    /// Every lane plants its calibration extremes in its prompt's first row
+    /// (see [`DecodeTrace::synth`]), so chunked prefill and per-token appends
+    /// stay bit-identical to one-shot requests over the grown context.
+    pub fn synth(
+        n_layers: usize,
+        n_heads: usize,
+        prompt_len: usize,
+        steps: usize,
+        dim: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(n_layers >= 1 && n_heads >= 1);
+        let lanes = (0..n_layers * n_heads)
+            .map(|l| DecodeTrace::synth(prompt_len, steps, dim, head_seed(seed, l)))
+            .collect();
+        Self { n_layers, n_heads, dim, prompt_len, lanes }
+    }
+
+    pub fn shape(&self) -> crate::engine::ModelShape {
+        crate::engine::ModelShape::new(self.n_layers, self.n_heads, self.dim)
+    }
+
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn n_steps(&self) -> usize {
+        self.lanes[0].steps.len()
+    }
+
+    /// Per-lane prompt K/V buffers (lh-major), the shape
+    /// `ModelContext::open` / the scheduler's `ModelPrompt` consume.
+    pub fn prompt(&self) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let k = self.lanes.iter().map(|l| l.prompt_k.clone()).collect();
+        let v = self.lanes.iter().map(|l| l.prompt_v.clone()).collect();
+        (k, v)
+    }
+
+    /// Step `i`'s per-lane queries and appended K/V rows (lh-major):
+    /// `(qs, k_rows, v_rows)`.
+    pub fn step_rows(&self, i: usize) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let qs = self.lanes.iter().map(|l| l.steps[i].q.clone()).collect();
+        let ks = self.lanes.iter().map(|l| l.steps[i].k_row.clone()).collect();
+        let vs = self.lanes.iter().map(|l| l.steps[i].v_row.clone()).collect();
+        (qs, ks, vs)
+    }
+}
+
 /// Decorrelated per-head seed (head 0 keeps the base seed) — shared by
 /// [`MultiHeadAttn::synth`] and the serving demos/tests that need the float
 /// tensors alongside the quantized heads.
@@ -271,6 +339,25 @@ mod tests {
         assert_eq!(&k[..4 * 2], &t.prompt_k[..]);
         assert_eq!(&k[4 * 2..5 * 2], &t.steps[0].k_row[..]);
         assert_eq!(&v[5 * 2..], &t.steps[1].v_row[..]);
+    }
+
+    #[test]
+    fn model_trace_lanes_are_decorrelated_and_lane0_matches_single() {
+        let mt = ModelDecodeTrace::synth(2, 3, 16, 4, 8, 0x77);
+        assert_eq!(mt.n_lanes(), 6);
+        assert_eq!(mt.n_steps(), 4);
+        let single = DecodeTrace::synth(16, 4, 8, 0x77);
+        assert_eq!(mt.lanes[0].prompt_k, single.prompt_k);
+        assert_eq!(mt.lanes[0].steps[0].q, single.steps[0].q);
+        assert_ne!(mt.lanes[1].prompt_k, mt.lanes[0].prompt_k);
+        let (pk, pv) = mt.prompt();
+        assert_eq!(pk.len(), 6);
+        assert_eq!(pv[5], mt.lanes[5].prompt_v);
+        let (qs, ks, vs) = mt.step_rows(2);
+        assert_eq!(qs[3], mt.lanes[3].steps[2].q);
+        assert_eq!(ks[4], mt.lanes[4].steps[2].k_row);
+        assert_eq!(vs[1], mt.lanes[1].steps[2].v_row);
+        assert_eq!(mt.shape().lanes(), 6);
     }
 
     #[test]
