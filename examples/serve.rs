@@ -1,12 +1,12 @@
 //! **End-to-end serving driver** (the repo's full-system validation, pure
 //! Rust): a multi-head attention workload is served through the Layer-3
-//! coordinator — dynamic batching ([`Batcher`]) + least-loaded routing
-//! ([`Router`]) — with the sparse **BitStopper executor** on the request
-//! path, so BESF/LATS runs behind the same machinery a production deployment
-//! would use. The same tensors then go through the multi-head
-//! [`AttentionEngine`] directly to demonstrate head/query-parallel
-//! throughput scaling, and through the cycle simulator for projected silicon
-//! numbers.
+//! coordinator's typed client surface (`EngineBuilder` → `Client` →
+//! `SessionHandle`, DESIGN.md §5) — dynamic batching + least-loaded routing
+//! with the sparse **BitStopper executor** on the request path, so BESF/LATS
+//! runs behind the same machinery a production deployment would use. The
+//! same tensors then go through the multi-head [`AttentionEngine`] directly
+//! to demonstrate head/query-parallel throughput scaling, and through the
+//! cycle simulator for projected silicon numbers.
 //!
 //! (The PJRT/XLA artifact path is feature-gated — see
 //! `rust/src/runtime/mod.rs`; this driver does not need it.)
@@ -16,9 +16,7 @@
 //! ```
 
 use bitstopper::config::{Features, LatsConfig, SimConfig};
-use bitstopper::coordinator::{
-    AttnRequest, BatchConfig, BesfExecutor, Engine, ModelPrompt, ModelStep, SchedConfig,
-};
+use bitstopper::coordinator::{drive_decode, AttnRequest, BatchConfig, EngineBuilder};
 use bitstopper::engine::{default_threads, AttentionEngine, SelectionPolicy};
 use bitstopper::runtime::ArtifactKind;
 use bitstopper::sim::simulate_multi_head;
@@ -50,40 +48,45 @@ fn main() {
     }
     let mha = MultiHeadAttn::from_heads(quant_heads);
 
-    // --- serving path: every (head, query) as a request through the
-    //     coordinator (shape-batched, least-loaded-routed, BESF-executed) ---
+    // --- serving path: every (head, query) as a request through the typed
+    //     client surface (shape-batched, least-loaded-routed, BESF-executed;
+    //     DESIGN.md §5) ---
     let workers = default_threads().clamp(2, 4);
-    let engine = Engine::start(
-        workers,
-        BatchConfig { max_batch: 8, max_wait: Duration::from_micros(500) },
-        BesfExecutor::default,
-    );
+    let client = EngineBuilder::new()
+        .workers(workers)
+        .batch(BatchConfig { max_batch: 8, max_wait: Duration::from_micros(500) })
+        .build()
+        .expect("engine construction");
     let t0 = Instant::now();
-    let mut rxs = Vec::with_capacity(n_heads * queries);
+    let mut tickets = Vec::with_capacity(n_heads * queries);
     for w in &float_heads {
         for qi in 0..queries {
-            rxs.push(engine.submit(AttnRequest {
-                id: 0,
-                kind: ArtifactKind::BitStopper,
-                alpha: ALPHA,
-                seq,
-                dim,
-                q: w.query(qi).to_vec(),
-                k: w.k.clone(),
-                v: w.v.clone(),
-                valid: vec![1.0; seq],
-            }));
+            tickets.push(
+                client
+                    .submit(AttnRequest {
+                        id: 0,
+                        kind: ArtifactKind::BitStopper,
+                        alpha: ALPHA,
+                        seq,
+                        dim,
+                        q: w.query(qi).to_vec(),
+                        k: w.k.clone(),
+                        v: w.v.clone(),
+                        valid: vec![1.0; seq],
+                    })
+                    .expect("submit"),
+            );
         }
     }
     let mut kept_sum = 0usize;
-    for rx in rxs {
-        let resp = rx.recv().expect("attention response");
+    for t in tickets {
+        let resp = t.recv().expect("attention response");
         assert_eq!(resp.out.len(), dim);
         kept_sum += resp.kept;
     }
     let wall = t0.elapsed();
-    let m = engine.metrics();
-    engine.shutdown();
+    let m = client.metrics();
+    client.shutdown();
 
     println!("\n== serving results ({workers} executor workers) ==");
     println!("attention requests      : {} (errors {})", m.completed, m.errors);
@@ -105,7 +108,7 @@ fn main() {
     // --- continuous-batching model serving: N concurrent model-level
     //     sessions (n_layers × n_heads KV-caches), prompts admitted as
     //     chunked prefills, one fused model step per session per scheduler
-    //     tick — the whole-model autoregressive path (DESIGN.md §8) ---
+    //     tick — the whole-model autoregressive path (DESIGN.md §9) ---
     let (layers, heads_per_layer, model_dim) = (2usize, 4usize, dim);
     let decode_steps = 16usize;
     let prompt_len = seq.min(512);
@@ -114,12 +117,12 @@ fn main() {
          {prompt_len}-token prompts, {decode_steps} tokens/session) =="
     );
     for batch_sessions in [1usize, 4, 8] {
-        let engine = Engine::start_with(
-            default_threads().clamp(2, 4),
-            BatchConfig::default(),
-            SchedConfig { prefill_chunk: 128, max_inflight_per_worker: 2 },
-            BesfExecutor::default,
-        );
+        let client = EngineBuilder::new()
+            .workers(default_threads().clamp(2, 4))
+            .prefill_chunk(128)
+            .max_inflight_per_worker(2)
+            .build()
+            .expect("engine construction");
         let traces: Vec<ModelDecodeTrace> = (0..batch_sessions)
             .map(|s| {
                 ModelDecodeTrace::synth(
@@ -132,51 +135,20 @@ fn main() {
                 )
             })
             .collect();
-        let t_open = Instant::now();
-        let sids: Vec<u64> = traces
-            .iter()
-            .map(|mt| {
-                let (pk, pv) = mt.prompt();
-                let (sid, rx) = engine.open_model_session(
-                    ALPHA,
-                    ModelPrompt { shape: mt.shape(), prompt_len: mt.prompt_len, k: pk, v: pv },
-                );
-                rx.recv().expect("prefill ack");
-                sid
-            })
-            .collect();
-        let prefill = t_open.elapsed();
-        // Queue every session's full decode stream up front; the scheduler
-        // interleaves them one model step per session per tick.
-        let t_decode = Instant::now();
-        let mut rxs = Vec::new();
-        for (s, mt) in traces.iter().enumerate() {
-            for i in 0..mt.n_steps() {
-                let (qs, ks, vs) = mt.step_rows(i);
-                rxs.push(engine.model_step(sids[s], ModelStep::token(ks, vs, qs)));
-            }
-        }
-        let mut kept = 0usize;
-        let mut lanes_ctx = 0usize;
-        for rx in rxs {
-            let r = rx.recv().expect("model step");
-            kept += r.kept_total();
-            lanes_ctx += r.kept.len() * r.context_len;
-        }
-        let decode_wall = t_decode.elapsed();
-        for sid in sids {
-            engine.close_model_session(sid).recv().expect("close ack");
-        }
-        let m = engine.metrics();
-        engine.shutdown();
-        let tokens = (batch_sessions * decode_steps) as f64;
+        // Open + chunked prefill, queue every session's full decode stream,
+        // drain the event streams, close — the shared driver
+        // (`coordinator::drive_decode`) does the whole loop.
+        let report = drive_decode(&client, ALPHA, &traces, Duration::from_secs(60))
+            .expect("continuous-batching drive");
+        let m = client.metrics();
+        client.shutdown();
         println!(
             "  batch {batch_sessions:>2}: prefill {:>7.1} ms | decode {:>8.3} ms/token \
              ({:.0} tok/s) | kept {:>4.1}% | ticks {} chunks {} deferred {} (errors {})",
-            prefill.as_secs_f64() * 1e3,
-            decode_wall.as_secs_f64() * 1e3 / tokens,
-            tokens / decode_wall.as_secs_f64().max(1e-9),
-            100.0 * kept as f64 / lanes_ctx.max(1) as f64,
+            report.prefill.as_secs_f64() * 1e3,
+            report.ms_per_token(),
+            report.tokens_per_sec(),
+            100.0 * report.keep_rate(),
             m.ticks,
             m.prefill_chunks,
             m.deferred,

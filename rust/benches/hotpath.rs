@@ -6,14 +6,16 @@
 //! per-token full-context rebuild, across context lengths 128→2048). Used by
 //! the §Perf pass in EXPERIMENTS.md.
 //!
-//! Run: `cargo bench --bench hotpath`
+//! Run: `cargo bench --bench hotpath` (pass `-- --serve-only` to run just
+//! the continuous-batching serve suite — what the CI trend check uses).
 //!
 //! Besides the human-readable table, results are persisted to
 //! `BENCH_hotpath.json` in the working directory (one row per bench plus
 //! derived speedup ratios) so the perf trajectory is machine-trackable across
 //! PRs. A second suite measures continuous-batching decode cost/token at
 //! batch sizes {1, 4, 16} through the scheduler and persists to
-//! `BENCH_serve.json`.
+//! `BENCH_serve.json`, trend-checked in CI by
+//! `scripts/check_serve_trend.py`.
 
 use bitstopper::algo::{besf_select, BesfScratch, Lats};
 use bitstopper::config::LatsConfig;
@@ -95,6 +97,17 @@ fn write_json(
 }
 
 fn main() {
+    // `cargo bench --bench hotpath -- --serve-only` skips the hot-path rows:
+    // CI runs only the serve suite for the BENCH_serve.json trend check.
+    if std::env::args().any(|a| a == "--serve-only") {
+        serve_bench();
+        return;
+    }
+    hotpath_bench();
+    serve_bench();
+}
+
+fn hotpath_bench() {
     println!("== BitStopper hot-path microbenches ==\n");
     let mut rows: Vec<(String, Summary)> = Vec::new();
     let (seq, dim) = (2048usize, 128usize);
@@ -292,21 +305,19 @@ fn main() {
         println!("derived {name:<32} {v:>9.3}");
     }
     write_json("BENCH_hotpath.json", "hotpath", "ms/iter", &rows, &derived);
-
-    serve_bench();
 }
 
-/// Continuous-batching decode throughput vs batch size (DESIGN.md §8): B
+/// Continuous-batching decode throughput vs batch size (DESIGN.md §9): B
 /// model sessions (2 layers × 2 heads, 256-token prompts) stream their
-/// decode steps through the scheduler concurrently; per-token steady-state
-/// cost is wall time / tokens. Batched cost/token must land strictly below
-/// batch-1 — the whole point of iteration-level batching (idle workers +
-/// tick amortization). Rows persist to `BENCH_serve.json`.
+/// decode steps through the scheduler concurrently via the typed client
+/// surface (DESIGN.md §5); per-token steady-state cost is wall time /
+/// tokens. Batched cost/token must land strictly below batch-1 — the whole
+/// point of iteration-level batching (idle workers + tick amortization).
+/// Rows persist to `BENCH_serve.json` (trend-checked in CI).
 fn serve_bench() {
-    use bitstopper::coordinator::{
-        BatchConfig, BesfExecutor, Engine, ModelPrompt, ModelStep, SchedConfig,
-    };
+    use bitstopper::coordinator::{drive_decode, EngineBuilder};
     use bitstopper::workload::ModelDecodeTrace;
+    use std::time::Duration;
 
     println!("\n== continuous-batching serve bench ==\n");
     let (layers, heads, dim, ctx, steps) = (2usize, 2usize, 64usize, 256usize, 12usize);
@@ -315,12 +326,12 @@ fn serve_bench() {
     for &batch in &[1usize, 4, 16] {
         let mut per_token_ms = Vec::with_capacity(reps);
         for rep in 0..reps {
-            let engine = Engine::start_with(
-                4,
-                BatchConfig::default(),
-                SchedConfig { prefill_chunk: 512, max_inflight_per_worker: 2 },
-                BesfExecutor::default,
-            );
+            let client = EngineBuilder::new()
+                .workers(4)
+                .prefill_chunk(512)
+                .max_inflight_per_worker(2)
+                .build()
+                .expect("engine construction");
             let traces: Vec<ModelDecodeTrace> = (0..batch)
                 .map(|s| {
                     ModelDecodeTrace::synth(
@@ -333,38 +344,14 @@ fn serve_bench() {
                     )
                 })
                 .collect();
-            let sids: Vec<u64> = traces
-                .iter()
-                .map(|mt| {
-                    let (pk, pv) = mt.prompt();
-                    let (sid, rx) = engine.open_model_session(
-                        0.6,
-                        ModelPrompt {
-                            shape: mt.shape(),
-                            prompt_len: mt.prompt_len,
-                            k: pk,
-                            v: pv,
-                        },
-                    );
-                    rx.recv().expect("prefill ack");
-                    sid
-                })
-                .collect();
-            // Steady state: every session's stream queued; the scheduler
-            // interleaves one model step per session per tick.
-            let t0 = Instant::now();
-            let mut rxs = Vec::new();
-            for (s, mt) in traces.iter().enumerate() {
-                for i in 0..steps {
-                    let (qs, ks, vs) = mt.step_rows(i);
-                    rxs.push(engine.model_step(sids[s], ModelStep::token(ks, vs, qs)));
-                }
-            }
-            for rx in rxs {
-                rx.recv().expect("model step");
-            }
-            per_token_ms.push(t0.elapsed().as_secs_f64() * 1e3 / (batch * steps) as f64);
-            engine.shutdown();
+            // Steady state: every session's stream queued up front; the
+            // scheduler interleaves one model step per session per tick.
+            // The shared driver times wall from first queued step to last
+            // StepDone.
+            let report = drive_decode(&client, 0.6, &traces, Duration::from_secs(60))
+                .expect("serve drive");
+            per_token_ms.push(report.ms_per_token());
+            client.shutdown();
         }
         let s = Summary::of(&per_token_ms);
         println!(

@@ -1,0 +1,211 @@
+//! The typed client-facing vocabulary of the serving API (DESIGN.md §5):
+//! the crate-wide [`ServeError`] taxonomy, the per-session [`SessionEvent`]
+//! stream, and the [`StepResponse`] payload a decode step resolves to.
+//!
+//! Before this layer existed, every serving entry point returned a bare
+//! `Receiver` whose *disconnection* was the only error signal, and failures
+//! were stringly `anyhow` payloads that died inside the worker loop as
+//! anonymous counted errors. Production schedulers (vLLM-style iteration
+//! engines — see PAPERS.md) expose typed results precisely so clients can
+//! distinguish "my session was evicted" from "the engine shut down" from
+//! "I sent a malformed tensor"; this module is that contract.
+
+use std::fmt;
+use std::time::Duration;
+
+/// Why a session was reclaimed by its worker's store (DESIGN.md §8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictReason {
+    /// Idle longer than the store's TTL.
+    IdleTtl,
+    /// Store at its hard session cap; this session was the least recently
+    /// used.
+    Capacity,
+}
+
+impl fmt::Display for EvictReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EvictReason::IdleTtl => write!(f, "idle TTL expired"),
+            EvictReason::Capacity => write!(f, "store at capacity (LRU)"),
+        }
+    }
+}
+
+/// Every way a serving request can fail, end to end: client-side validation
+/// ([`super::Client::submit`], [`super::SessionHandle::step`]), scheduler
+/// admission, and worker-side execution all speak this one enum — the
+/// worker→scheduler→router feedback path carries these variants, never
+/// strings (DESIGN.md §5).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// Non-finite or negative LATS α. A malformed α must never reach the
+    /// batcher (its shape key would alias a legitimate α's batch) or fix a
+    /// session's thresholds.
+    InvalidAlpha { alpha: f64 },
+    /// Tensor shape validation failed (empty query, length ≠ dim/seq·dim,
+    /// lane count ≠ the opened session's shape, …).
+    ShapeMismatch { what: String },
+    /// The session id is not live (never opened, closed, or evicted).
+    UnknownSession { session: u64 },
+    /// A step was submitted before any prompt: the session has no context
+    /// to decode against (per-lane scales are calibrated on the first
+    /// prefill chunk, so a prefill must precede the first step).
+    NotPrefilled { session: u64 },
+    /// The session already has a close queued; no further work is accepted.
+    SessionClosing { session: u64 },
+    /// The session id is already live on this engine.
+    DuplicateSession { session: u64 },
+    /// The worker's session store is at its hard cap and configured to
+    /// reject new opens rather than evict a live session
+    /// ([`super::EngineBuilder::reject_at_capacity`]).
+    StoreAtCapacity { capacity: usize },
+    /// The executor serving this worker does not implement the requested
+    /// operation (e.g. model sessions on the dense fallback or the PJRT
+    /// executor — ROADMAP "PJRT executor parity").
+    ExecutorUnsupported { op: &'static str },
+    /// Backend-specific executor failure (PJRT artifact lookup/execution).
+    Backend { what: String },
+    /// Invalid engine construction parameters
+    /// ([`super::EngineBuilder::build`]).
+    InvalidConfig { what: String },
+    /// A blocking wait on the event stream timed out.
+    Timeout,
+    /// The engine has shut down (or is shutting down); the channel behind
+    /// this operation is gone.
+    Shutdown,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::InvalidAlpha { alpha } => {
+                write!(f, "non-finite or negative alpha {alpha}")
+            }
+            ServeError::ShapeMismatch { what } => write!(f, "shape mismatch: {what}"),
+            ServeError::UnknownSession { session } => write!(f, "unknown session {session}"),
+            ServeError::NotPrefilled { session } => {
+                write!(f, "session {session} has no context yet (prefill before stepping)")
+            }
+            ServeError::SessionClosing { session } => write!(f, "session {session} is closing"),
+            ServeError::DuplicateSession { session } => {
+                write!(f, "session {session} already open")
+            }
+            ServeError::StoreAtCapacity { capacity } => {
+                write!(f, "session store at capacity ({capacity})")
+            }
+            ServeError::ExecutorUnsupported { op } => {
+                write!(f, "executor does not support {op}")
+            }
+            ServeError::Backend { what } => write!(f, "executor backend: {what}"),
+            ServeError::InvalidConfig { what } => write!(f, "invalid engine config: {what}"),
+            ServeError::Timeout => write!(f, "timed out waiting on the event stream"),
+            ServeError::Shutdown => write!(f, "engine shut down"),
+        }
+    }
+}
+
+// `std::error::Error` makes `?` interop with the vendored `anyhow` shim free
+// (its blanket `From<E: Error>` impl picks this up).
+impl std::error::Error for ServeError {}
+
+/// One completed model decode step (the payload of
+/// [`SessionEvent::StepDone`]). For append-only steps `outs`/`kept` are
+/// empty and `context_len` reports the grown context.
+#[derive(Debug, Clone)]
+pub struct StepResponse {
+    /// Per-lane sparse attention outputs (lh-major; empty for append-only
+    /// steps).
+    pub outs: Vec<Vec<f32>>,
+    /// Per-lane survivor counts.
+    pub kept: Vec<usize>,
+    /// Context length (keys per lane) after the step.
+    pub context_len: usize,
+    /// Submission-to-completion latency.
+    pub latency: Duration,
+}
+
+impl StepResponse {
+    /// First lane's output — the whole output for 1-layer/1-head sessions.
+    /// Empty for append-only steps, which carry no decode output.
+    pub fn out(&self) -> &[f32] {
+        self.outs.first().map_or(&[], |o| o.as_slice())
+    }
+
+    /// Survivors summed over lanes.
+    pub fn kept_total(&self) -> usize {
+        self.kept.iter().sum()
+    }
+}
+
+/// What a [`super::SessionHandle`]'s event stream delivers. A session's
+/// acks and step outputs arrive in completion (= submission) order;
+/// eviction — previously silent — is a first-class event (the ROADMAP
+/// "eviction-aware clients" item). One caveat: an `Evicted` notice (sent by
+/// the scheduler thread) and the typed `Error` of a step that raced the
+/// eviction in flight (sent by the worker thread) carry no relative
+/// ordering guarantee — treat either as the session's death.
+#[derive(Debug, Clone)]
+pub enum SessionEvent {
+    /// The whole queued prompt has been admitted and applied;
+    /// `context_len` is the resulting context length.
+    PrefillAcked { context_len: usize, latency: Duration },
+    /// One model step completed.
+    StepDone(StepResponse),
+    /// The session closed and its cache was freed.
+    Closed { latency: Duration },
+    /// The worker's store reclaimed this session (idle TTL or LRU at the
+    /// cap); all queued work was dropped and the id is dead.
+    Evicted { reason: EvictReason },
+    /// An operation on this session failed; the session may still be live
+    /// (e.g. a malformed step) or dead (e.g. a failed open).
+    Error(ServeError),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_stable_and_informative() {
+        assert_eq!(
+            ServeError::UnknownSession { session: 7 }.to_string(),
+            "unknown session 7"
+        );
+        assert_eq!(
+            ServeError::StoreAtCapacity { capacity: 2 }.to_string(),
+            "session store at capacity (2)"
+        );
+        assert!(ServeError::InvalidAlpha { alpha: f64::NAN }.to_string().contains("alpha"));
+        assert_eq!(EvictReason::IdleTtl.to_string(), "idle TTL expired");
+    }
+
+    #[test]
+    fn serve_error_interops_with_anyhow() {
+        fn f() -> anyhow::Result<()> {
+            Err(ServeError::Shutdown)?;
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().to_string(), "engine shut down");
+    }
+
+    #[test]
+    fn step_response_helpers() {
+        let ack = StepResponse {
+            outs: vec![],
+            kept: vec![],
+            context_len: 9,
+            latency: Duration::ZERO,
+        };
+        assert!(ack.out().is_empty());
+        assert_eq!(ack.kept_total(), 0);
+        let dec = StepResponse {
+            outs: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
+            kept: vec![3, 5],
+            context_len: 10,
+            latency: Duration::ZERO,
+        };
+        assert_eq!(dec.out(), &[1.0, 2.0]);
+        assert_eq!(dec.kept_total(), 8);
+    }
+}

@@ -1,12 +1,11 @@
 //! Dynamic batching policy for **one-shot** requests: group by artifact
 //! shape, release a batch when it reaches `max_batch` or its oldest member
 //! has waited `max_wait`. Model-session traffic never passes through here —
-//! it is iteration-batched by the [`super::scheduler`] (DESIGN.md §8); both
+//! it is iteration-batched by the [`super::scheduler`] (DESIGN.md §9); both
 //! feed the same worker pool from the same coordinator thread.
 
-use super::{AttnRequest, AttnResponse};
+use super::{AttnRequest, OneShotResponder};
 use std::collections::HashMap;
-use std::sync::mpsc::Sender;
 use std::time::{Duration, Instant};
 
 /// Batching knobs.
@@ -24,7 +23,7 @@ impl Default for BatchConfig {
     }
 }
 
-type Pending = Vec<(AttnRequest, Instant, Sender<AttnResponse>)>;
+type Pending = Vec<(AttnRequest, Instant, OneShotResponder)>;
 
 /// Shape-keyed pending queues.
 pub struct Batcher {
@@ -39,7 +38,7 @@ impl Batcher {
     }
 
     /// Enqueue a request.
-    pub fn push(&mut self, req: AttnRequest, submitted: Instant, resp: Sender<AttnResponse>) {
+    pub fn push(&mut self, req: AttnRequest, submitted: Instant, resp: OneShotResponder) {
         self.pending.entry(req.shape_key()).or_default().push((req, submitted, resp));
     }
 

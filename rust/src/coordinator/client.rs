@@ -1,0 +1,800 @@
+//! The typed client surface of the serving engine (DESIGN.md §5):
+//! [`EngineBuilder`] → [`Client`] → [`SessionHandle`].
+//!
+//! * **[`EngineBuilder`]** replaces the old `start_with` parameter soup with
+//!   a fluent, *validated* construction path — executor factory, worker
+//!   count, batching/scheduler knobs, and per-worker session-store policy
+//!   (capacity, idle TTL, LRU-vs-reject at the cap) — and returns a
+//!   cheaply-clonable [`Client`]. Bad parameters fail at [`EngineBuilder::build`]
+//!   with [`ServeError::InvalidConfig`], not deep inside a thread as an
+//!   assert.
+//! * **[`Client`]** is the engine handle: `Clone` is an `Arc` bump, every
+//!   clone talks to the same worker pool, and the engine shuts down
+//!   gracefully when the last holder drops (or on an explicit
+//!   [`Client::shutdown`]). One-shot submission validates α and tensor
+//!   shapes *synchronously* — malformed requests never reach a worker.
+//! * **[`SessionHandle`]** is the RAII face of a model session: `prefill` /
+//!   `step` / `close` enqueue work, and every outcome — prefill acks, step
+//!   outputs, typed errors, and **eviction notices** — streams back in
+//!   order over the handle's own [`SessionEvent`] channel. Dropping the
+//!   handle closes the session (freeing its worker-side KV-cache and router
+//!   pin), so an early-returning client cannot leak serving state.
+
+use super::api::{ServeError, SessionEvent, StepResponse};
+use super::scheduler::{ModelPrompt, ModelStep, SchedConfig};
+use super::session::{SessionStore, DEFAULT_IDLE_TTL, DEFAULT_MAX_SESSIONS};
+use super::{
+    check_shapes, AttnExecutor, AttnRequest, AttnResponse, BatchConfig, BesfExecutor, EngineCore,
+    Metrics, Submission,
+};
+use crate::engine::ModelShape;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Fluent, validated construction of a serving engine. Defaults: 2 workers,
+/// default batching/scheduler knobs, a [`BesfExecutor`] per worker with a
+/// [`DEFAULT_MAX_SESSIONS`]-cap, [`DEFAULT_IDLE_TTL`]-TTL session store.
+#[derive(Debug, Clone)]
+pub struct EngineBuilder {
+    workers: usize,
+    batch: BatchConfig,
+    sched: SchedConfig,
+    max_sessions: usize,
+    idle_ttl: Option<Duration>,
+    lru_at_cap: bool,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            batch: BatchConfig::default(),
+            sched: SchedConfig::default(),
+            max_sessions: DEFAULT_MAX_SESSIONS,
+            idle_ttl: Some(DEFAULT_IDLE_TTL),
+            lru_at_cap: true,
+        }
+    }
+}
+
+impl EngineBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of executor workers (≥ 1).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
+    }
+
+    /// One-shot dynamic-batching knobs.
+    pub fn batch(mut self, cfg: BatchConfig) -> Self {
+        self.batch = cfg;
+        self
+    }
+
+    /// Continuous-batching scheduler knobs (whole struct).
+    pub fn sched(mut self, cfg: SchedConfig) -> Self {
+        self.sched = cfg;
+        self
+    }
+
+    /// Prompt rows admitted per prefill chunk, per session, per tick.
+    pub fn prefill_chunk(mut self, rows: usize) -> Self {
+        self.sched.prefill_chunk = rows;
+        self
+    }
+
+    /// Dispatched-but-unfinished units allowed per worker (backpressure).
+    pub fn max_inflight_per_worker(mut self, n: usize) -> Self {
+        self.sched.max_inflight_per_worker = n;
+        self
+    }
+
+    /// Hard cap on live sessions per worker store.
+    pub fn session_capacity(mut self, n: usize) -> Self {
+        self.max_sessions = n;
+        self
+    }
+
+    /// Idle TTL for session eviction (`None` disables TTL eviction).
+    pub fn idle_ttl(mut self, ttl: Option<Duration>) -> Self {
+        self.idle_ttl = ttl;
+        self
+    }
+
+    /// Reject new opens with [`ServeError::StoreAtCapacity`] when a worker
+    /// store is full (after its TTL sweep) instead of evicting the LRU
+    /// session — for deployments where killing a live session is worse than
+    /// refusing a new one.
+    pub fn reject_at_capacity(mut self) -> Self {
+        self.lru_at_cap = false;
+        self
+    }
+
+    fn validate(&self) -> Result<(), ServeError> {
+        let fail = |what: &str| Err(ServeError::InvalidConfig { what: what.into() });
+        if self.workers == 0 {
+            return fail("workers must be >= 1");
+        }
+        if self.batch.max_batch == 0 {
+            return fail("batch.max_batch must be >= 1");
+        }
+        if self.sched.prefill_chunk == 0 {
+            return fail("sched.prefill_chunk must be >= 1");
+        }
+        if self.sched.max_inflight_per_worker == 0 {
+            return fail("sched.max_inflight_per_worker must be >= 1");
+        }
+        if self.max_sessions == 0 {
+            return fail("session_capacity must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Build with the default executor: one [`BesfExecutor`] per worker,
+    /// each hosting a session store with this builder's capacity/TTL policy.
+    pub fn build(self) -> Result<Client, ServeError> {
+        let (max_sessions, idle_ttl, lru) = (self.max_sessions, self.idle_ttl, self.lru_at_cap);
+        self.build_with(move || {
+            let store = SessionStore::with_policy(max_sessions, idle_ttl);
+            let store = if lru { store } else { store.reject_at_capacity() };
+            BesfExecutor::with_sessions(store)
+        })
+    }
+
+    /// Build with a custom executor factory, cloned into and invoked
+    /// **inside** each worker thread (the PJRT client is not `Send`). The
+    /// builder's session-store policy only applies to [`EngineBuilder::build`];
+    /// a custom factory owns its own stores.
+    pub fn build_with<F, E>(self, make_executor: F) -> Result<Client, ServeError>
+    where
+        F: Fn() -> E + Send + Clone + 'static,
+        E: AttnExecutor,
+    {
+        self.validate()?;
+        Ok(Client {
+            core: Arc::new(EngineCore::start(self.workers, self.batch, self.sched, make_executor)),
+        })
+    }
+}
+
+/// A handle to a running engine. Cheap to clone (an `Arc` bump); the engine
+/// drains and joins its threads when the last clone (and last
+/// [`SessionHandle`]) drops, or on an explicit [`Client::shutdown`].
+#[derive(Clone)]
+pub struct Client {
+    core: Arc<EngineCore>,
+}
+
+impl Client {
+    /// Submit a one-shot attention request. α and tensor shapes are
+    /// validated **here** — a malformed request fails synchronously with a
+    /// typed error instead of surfacing as a worker-side failure one tick
+    /// later — and the returned [`AttnTicket`] resolves to the response or
+    /// the executor's typed error.
+    pub fn submit(&self, mut req: AttnRequest) -> Result<AttnTicket, ServeError> {
+        req.id = self.core.next_request_id();
+        if !req.alpha.is_finite() || req.alpha < 0.0 {
+            self.core.count_error();
+            return Err(ServeError::InvalidAlpha { alpha: req.alpha });
+        }
+        if let Err(e) = check_shapes(&req) {
+            self.core.count_error();
+            return Err(e);
+        }
+        let (tx, rx) = channel();
+        self.core.send(Submission::OneShot(req, tx))?;
+        Ok(AttnTicket { rx })
+    }
+
+    /// Submit and wait.
+    pub fn submit_blocking(&self, req: AttnRequest) -> Result<AttnResponse, ServeError> {
+        self.submit(req)?.recv()
+    }
+
+    /// Open a model-level decode session of the given shape. The returned
+    /// RAII [`SessionHandle`] queues prompts ([`SessionHandle::prefill`] —
+    /// admitted chunk-wise by the scheduler alongside in-flight decodes) and
+    /// steps, streams typed [`SessionEvent`]s, and closes the session on
+    /// drop. Per-lane quantization scales are calibrated on the first
+    /// prefill chunk and fixed for the session's life; all work for the id
+    /// lands on the worker that holds the cache.
+    pub fn open_model_session(
+        &self,
+        alpha: f64,
+        shape: ModelShape,
+    ) -> Result<SessionHandle, ServeError> {
+        if !alpha.is_finite() || alpha < 0.0 {
+            self.core.count_error();
+            return Err(ServeError::InvalidAlpha { alpha });
+        }
+        if shape.dim == 0 || shape.lanes() == 0 {
+            self.core.count_error();
+            return Err(ServeError::ShapeMismatch {
+                what: "model shape needs a positive dim and at least one lane".into(),
+            });
+        }
+        let session = self.core.next_session_id();
+        let (tx, rx) = channel();
+        self.core
+            .send(Submission::Open { session, alpha, shape, events: tx.clone() })?;
+        Ok(SessionHandle {
+            client: self.clone(),
+            session,
+            shape,
+            events_tx: Some(tx),
+            events: rx,
+            state: HandleState::Live,
+            prefilled: false,
+        })
+    }
+
+    /// Snapshot current metrics.
+    pub fn metrics(&self) -> Metrics {
+        self.core.metrics()
+    }
+
+    /// Crate-internal access for the deprecated legacy shims.
+    pub(crate) fn core(&self) -> &EngineCore {
+        &self.core
+    }
+
+    /// Graceful shutdown: drains in-flight work and joins every engine
+    /// thread. Idempotent; other clones see [`ServeError::Shutdown`]
+    /// afterwards. Also happens automatically when the last clone drops.
+    pub fn shutdown(&self) {
+        self.core.shutdown();
+    }
+}
+
+enum HandleState {
+    Live,
+    Closing,
+    Closed,
+    Evicted,
+    /// The session died engine-side (failed open, store refusal, post-
+    /// eviction error) — observed via a fatal [`SessionEvent::Error`].
+    Failed,
+}
+
+/// Does this error imply the session no longer exists engine-side? (A
+/// `ShapeMismatch`/`Backend` can be a per-operation failure on a session
+/// that lives on; these cannot.)
+fn session_fatal(e: &ServeError) -> bool {
+    matches!(
+        e,
+        ServeError::UnknownSession { .. }
+            | ServeError::StoreAtCapacity { .. }
+            | ServeError::ExecutorUnsupported { .. }
+            | ServeError::DuplicateSession { .. }
+            | ServeError::InvalidAlpha { .. }
+    )
+}
+
+/// RAII handle to one model session (DESIGN.md §5, §8–9).
+///
+/// `prefill`/`step`/`close` validate against the opened [`ModelShape`] and
+/// enqueue; outcomes stream back in order on the handle's own channel
+/// ([`SessionHandle::recv_event`] and the blocking `wait_*` helpers).
+/// Eviction by the worker store arrives as [`SessionEvent::Evicted`] — after
+/// observing it, further calls fail fast with
+/// [`ServeError::UnknownSession`]. Dropping the handle closes the session,
+/// freeing its KV-cache and router pin.
+pub struct SessionHandle {
+    client: Client,
+    session: u64,
+    shape: ModelShape,
+    /// Source of the sender clones each submission carries (typed error
+    /// replies work even after the scheduler forgot the session, e.g.
+    /// post-eviction races). Dropped once the handle goes terminal
+    /// (close submitted / eviction observed) so the stream can disconnect
+    /// when the engine-side senders drain.
+    events_tx: Option<Sender<SessionEvent>>,
+    events: Receiver<SessionEvent>,
+    state: HandleState,
+    /// Has a prompt been queued? Steps before any prefill fail fast with
+    /// [`ServeError::NotPrefilled`] — the worker-side context only exists
+    /// once the first prefill chunk opens it.
+    prefilled: bool,
+}
+
+impl SessionHandle {
+    /// The engine-assigned session id (diagnostics / metrics correlation).
+    pub fn id(&self) -> u64 {
+        self.session
+    }
+
+    pub fn shape(&self) -> ModelShape {
+        self.shape
+    }
+
+    /// False once the handle has observed its own close, eviction, or a
+    /// fatal session error.
+    pub fn is_live(&self) -> bool {
+        matches!(self.state, HandleState::Live)
+    }
+
+    fn check_live(&self) -> Result<(), ServeError> {
+        match self.state {
+            HandleState::Live => Ok(()),
+            HandleState::Evicted | HandleState::Failed => {
+                Err(ServeError::UnknownSession { session: self.session })
+            }
+            HandleState::Closing | HandleState::Closed => {
+                Err(ServeError::SessionClosing { session: self.session })
+            }
+        }
+    }
+
+    fn sender(&self) -> Sender<SessionEvent> {
+        // Only reached after check_live(): a Live handle still owns its
+        // sender (it is dropped exactly when the handle goes terminal).
+        self.events_tx.clone().expect("live session handle has an event sender")
+    }
+
+    /// Queue a prompt for chunk-wise prefill. Validated against the opened
+    /// shape here, at submit time. [`SessionEvent::PrefillAcked`] arrives
+    /// when the whole prompt has been applied ([`SessionHandle::wait_prefilled`]
+    /// blocks for it).
+    pub fn prefill(&mut self, prompt: ModelPrompt) -> Result<(), ServeError> {
+        self.check_live()?;
+        if let Err(e) = self.validate_prompt(&prompt) {
+            self.client.core.count_error();
+            return Err(e);
+        }
+        self.client.core.send(Submission::Prefill {
+            session: self.session,
+            prompt,
+            events: self.sender(),
+        })?;
+        self.prefilled = true;
+        Ok(())
+    }
+
+    fn validate_prompt(&self, prompt: &ModelPrompt) -> Result<(), ServeError> {
+        prompt.validate()?;
+        if prompt.shape != self.shape {
+            return Err(ServeError::ShapeMismatch {
+                what: format!(
+                    "prompt shape {:?} != session shape {:?}",
+                    prompt.shape, self.shape
+                ),
+            });
+        }
+        Ok(())
+    }
+
+    /// Queue one model step (append the generated token's K/V rows and/or
+    /// decode one query per lane). Validated here, at submit time — an
+    /// empty query or a dim mismatch against the opened session fails
+    /// synchronously with [`ServeError::ShapeMismatch`], and a step before
+    /// any [`SessionHandle::prefill`] with [`ServeError::NotPrefilled`].
+    /// Steps run in submission order, one per scheduler tick;
+    /// [`SessionEvent::StepDone`] carries the per-lane outputs.
+    pub fn step(&mut self, step: ModelStep) -> Result<(), ServeError> {
+        self.check_live()?;
+        if !self.prefilled {
+            self.client.core.count_error();
+            return Err(ServeError::NotPrefilled { session: self.session });
+        }
+        if let Err(e) = step.validate(&self.shape) {
+            self.client.core.count_error();
+            return Err(e);
+        }
+        self.client.core.send(Submission::Step {
+            session: self.session,
+            step,
+            events: self.sender(),
+        })
+    }
+
+    /// Request a close; the session's queued steps drain first, then
+    /// [`SessionEvent::Closed`] arrives and the worker frees the cache.
+    /// Idempotent — closing a closed/evicted handle is a no-op. Runs
+    /// automatically on drop.
+    pub fn close(&mut self) -> Result<(), ServeError> {
+        match self.state {
+            HandleState::Live => {
+                self.state = HandleState::Closing;
+                let events = self.sender();
+                // No further submissions are accepted after this point, so
+                // release the handle's own sender clone: once the engine-side
+                // clones drain (after the Closed event), the stream
+                // disconnects instead of blocking readers forever.
+                self.events_tx = None;
+                self.client
+                    .core
+                    .send(Submission::Close { session: self.session, events })
+            }
+            _ => Ok(()),
+        }
+    }
+
+    /// Blocking receive of the next event. [`ServeError::Shutdown`] once the
+    /// stream is terminally disconnected (session dropped engine-side and
+    /// all in-flight work drained) — or once the engine itself has shut
+    /// down, which a still-live handle detects by polling (its own sender
+    /// clone keeps the bare channel from ever disconnecting).
+    pub fn recv_event(&mut self) -> Result<SessionEvent, ServeError> {
+        self.recv_deadline(None)
+    }
+
+    /// [`SessionHandle::recv_event`] with a timeout
+    /// ([`ServeError::Timeout`]).
+    pub fn recv_event_timeout(&mut self, timeout: Duration) -> Result<SessionEvent, ServeError> {
+        self.recv_deadline(Some(Instant::now() + timeout))
+    }
+
+    fn recv_deadline(&mut self, deadline: Option<Instant>) -> Result<SessionEvent, ServeError> {
+        // Block in bounded slices so a reader waiting on a live session
+        // cannot hang across an engine shutdown it has no other way to see.
+        const SLICE: Duration = Duration::from_millis(50);
+        loop {
+            let wait = match deadline {
+                Some(d) => {
+                    let left = d.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        return Err(ServeError::Timeout);
+                    }
+                    left.min(SLICE)
+                }
+                None => SLICE,
+            };
+            match self.events.recv_timeout(wait) {
+                Ok(ev) => {
+                    self.observe(&ev);
+                    return Ok(ev);
+                }
+                Err(RecvTimeoutError::Disconnected) => return Err(ServeError::Shutdown),
+                Err(RecvTimeoutError::Timeout) => {
+                    if self.client.core.is_shut_down() {
+                        // Drain anything that raced in ahead of the shutdown.
+                        if let Some(ev) = self.try_event() {
+                            return Ok(ev);
+                        }
+                        return Err(ServeError::Shutdown);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Non-blocking poll of the event stream.
+    pub fn try_event(&mut self) -> Option<SessionEvent> {
+        match self.events.try_recv() {
+            Ok(ev) => {
+                self.observe(&ev);
+                Some(ev)
+            }
+            Err(_) => None,
+        }
+    }
+
+    fn observe(&mut self, ev: &SessionEvent) {
+        match ev {
+            SessionEvent::Evicted { .. } => {
+                self.state = HandleState::Evicted;
+                self.events_tx = None;
+            }
+            SessionEvent::Closed { .. } => {
+                self.state = HandleState::Closed;
+                self.events_tx = None;
+            }
+            // A fatal error means the session is gone engine-side: go
+            // terminal (and release our sender) so open-ended readers see
+            // the stream disconnect instead of blocking on a dead session.
+            SessionEvent::Error(e) if session_fatal(e) => {
+                self.state = HandleState::Failed;
+                self.events_tx = None;
+            }
+            _ => {}
+        }
+    }
+
+    /// Shared deadline loop behind the `wait_*` helpers: receive events
+    /// until `resolve` maps one to an outcome (`None` skips benign
+    /// intermediate events).
+    fn wait_for<T>(
+        &mut self,
+        timeout: Duration,
+        mut resolve: impl FnMut(SessionEvent, u64) -> Option<Result<T, ServeError>>,
+    ) -> Result<T, ServeError> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            let ev = self.recv_event_timeout(remaining)?;
+            if let Some(out) = resolve(ev, self.session) {
+                return out;
+            }
+        }
+    }
+
+    /// Block until the queued prompt is fully applied; returns the context
+    /// length. Step completions arriving first are skipped (they belong to
+    /// earlier-queued work); errors, eviction, and close surface typed.
+    pub fn wait_prefilled(&mut self, timeout: Duration) -> Result<usize, ServeError> {
+        self.wait_for(timeout, |ev, session| match ev {
+            SessionEvent::PrefillAcked { context_len, .. } => Some(Ok(context_len)),
+            SessionEvent::StepDone(_) => None,
+            SessionEvent::Closed { .. } => Some(Err(ServeError::SessionClosing { session })),
+            SessionEvent::Evicted { .. } => Some(Err(ServeError::UnknownSession { session })),
+            SessionEvent::Error(e) => Some(Err(e)),
+        })
+    }
+
+    /// Block until the next step completes; prefill acks arriving first are
+    /// skipped (benign acks of earlier-queued prompts).
+    pub fn wait_step(&mut self, timeout: Duration) -> Result<StepResponse, ServeError> {
+        self.wait_for(timeout, |ev, session| match ev {
+            SessionEvent::StepDone(sr) => Some(Ok(sr)),
+            SessionEvent::PrefillAcked { .. } => None,
+            SessionEvent::Closed { .. } => Some(Err(ServeError::SessionClosing { session })),
+            SessionEvent::Evicted { .. } => Some(Err(ServeError::UnknownSession { session })),
+            SessionEvent::Error(e) => Some(Err(e)),
+        })
+    }
+
+    /// Block until the close completes (the cache is freed). Earlier acks
+    /// and step outputs are drained; an eviction also resolves the wait
+    /// (the session is equally gone).
+    pub fn wait_closed(&mut self, timeout: Duration) -> Result<(), ServeError> {
+        self.wait_for(timeout, |ev, _| match ev {
+            SessionEvent::Closed { .. } | SessionEvent::Evicted { .. } => Some(Ok(())),
+            SessionEvent::StepDone(_) | SessionEvent::PrefillAcked { .. } => None,
+            SessionEvent::Error(e) => Some(Err(e)),
+        })
+    }
+}
+
+impl Drop for SessionHandle {
+    /// RAII: a dropped handle closes its session, so the worker-side cache
+    /// and router pin are released even if the client bails early.
+    fn drop(&mut self) {
+        let _ = self.close();
+    }
+}
+
+/// Pending one-shot response: resolves to the [`AttnResponse`] or the
+/// executor's typed error. (No public serving entry point hands out a bare
+/// `Receiver` — disconnection is folded into [`ServeError::Shutdown`].)
+pub struct AttnTicket {
+    rx: Receiver<Result<AttnResponse, ServeError>>,
+}
+
+impl AttnTicket {
+    /// Block until the response arrives.
+    pub fn recv(self) -> Result<AttnResponse, ServeError> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(ServeError::Shutdown),
+        }
+    }
+
+    /// [`AttnTicket::recv`] with a timeout ([`ServeError::Timeout`]).
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<AttnResponse, ServeError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => r,
+            Err(RecvTimeoutError::Timeout) => Err(ServeError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => Err(ServeError::Shutdown),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_util::wait_metrics;
+    use super::super::RustExecutor;
+    use super::*;
+    use crate::workload::ModelDecodeTrace;
+
+    const TIMEOUT: Duration = Duration::from_secs(10);
+
+    fn model_prompt(mt: &ModelDecodeTrace) -> ModelPrompt {
+        let (k, v) = mt.prompt();
+        ModelPrompt { shape: mt.shape(), prompt_len: mt.prompt_len, k, v }
+    }
+
+    #[test]
+    fn builder_validates_configuration() {
+        for (builder, what) in [
+            (EngineBuilder::new().workers(0), "workers"),
+            (EngineBuilder::new().prefill_chunk(0), "prefill_chunk"),
+            (EngineBuilder::new().max_inflight_per_worker(0), "max_inflight"),
+            (EngineBuilder::new().session_capacity(0), "session_capacity"),
+            (
+                EngineBuilder::new()
+                    .batch(BatchConfig { max_batch: 0, max_wait: Duration::ZERO }),
+                "max_batch",
+            ),
+        ] {
+            assert!(
+                matches!(builder.build(), Err(ServeError::InvalidConfig { .. })),
+                "{what} must be rejected at build time"
+            );
+        }
+    }
+
+    #[test]
+    fn session_lifecycle_prefill_step_close() {
+        let mt = ModelDecodeTrace::synth(2, 2, 16, 3, 8, 0xC11E);
+        let client = EngineBuilder::new().workers(2).build().expect("build");
+        let mut h = client.open_model_session(0.6, mt.shape()).expect("open");
+        assert!(h.is_live());
+        h.prefill(model_prompt(&mt)).expect("prefill");
+        assert_eq!(h.wait_prefilled(TIMEOUT).expect("prefill ack"), 16);
+        for i in 0..mt.n_steps() {
+            let (qs, ks, vs) = mt.step_rows(i);
+            h.step(ModelStep::token(ks, vs, qs)).expect("step");
+            let sr = h.wait_step(TIMEOUT).expect("step done");
+            assert_eq!(sr.context_len, 17 + i);
+            assert_eq!(sr.outs.len(), mt.n_lanes());
+            assert!(sr.kept_total() >= mt.n_lanes());
+        }
+        h.close().expect("close");
+        h.wait_closed(TIMEOUT).expect("closed");
+        assert!(!h.is_live());
+        // Work after close fails fast, typed, client-side.
+        let (qs, _, _) = mt.step_rows(0);
+        assert_eq!(
+            h.step(ModelStep::decode_only(qs)).unwrap_err(),
+            ServeError::SessionClosing { session: h.id() }
+        );
+        let m = wait_metrics(&client, |m| m.session_pins == 0);
+        assert_eq!(m.errors, 0);
+        assert_eq!(m.session_pins, 0);
+        assert!(m.model_steps >= 3);
+        client.shutdown();
+    }
+
+    #[test]
+    fn submit_time_shape_validation_on_sessions() {
+        let mt = ModelDecodeTrace::synth(1, 2, 8, 2, 4, 0xC12E);
+        let client = EngineBuilder::new().workers(1).build().expect("build");
+        let mut h = client.open_model_session(0.6, mt.shape()).expect("open");
+        // Prompt with the wrong lane count.
+        let mut bad = model_prompt(&mt);
+        bad.k.pop();
+        assert!(matches!(h.prefill(bad).unwrap_err(), ServeError::ShapeMismatch { .. }));
+        // Prompt whose declared shape disagrees with the session's.
+        let mut wrong_shape = model_prompt(&mt);
+        wrong_shape.shape = ModelShape::new(2, 2, 4);
+        wrong_shape.k = vec![wrong_shape.k[0].clone(); 4];
+        wrong_shape.v = vec![wrong_shape.v[0].clone(); 4];
+        assert!(matches!(
+            h.prefill(wrong_shape).unwrap_err(),
+            ServeError::ShapeMismatch { .. }
+        ));
+        // A step before any prompt has no context to decode against.
+        let (qs0, _, _) = mt.step_rows(0);
+        assert_eq!(
+            h.step(ModelStep::decode_only(qs0)).unwrap_err(),
+            ServeError::NotPrefilled { session: h.id() }
+        );
+        h.prefill(model_prompt(&mt)).expect("good prefill");
+        assert_eq!(h.wait_prefilled(TIMEOUT).unwrap(), 8);
+        // Steps: empty step, lane-count mismatch, dim mismatch, empty query.
+        assert!(matches!(
+            h.step(ModelStep::default()).unwrap_err(),
+            ServeError::ShapeMismatch { .. }
+        ));
+        assert!(matches!(
+            h.step(ModelStep::decode_only(vec![vec![0.0; 4]])).unwrap_err(),
+            ServeError::ShapeMismatch { .. }
+        ));
+        assert!(matches!(
+            h.step(ModelStep::decode_only(vec![vec![0.0; 3]; 2])).unwrap_err(),
+            ServeError::ShapeMismatch { .. }
+        ));
+        assert!(matches!(
+            h.step(ModelStep::decode_only(vec![vec![]; 2])).unwrap_err(),
+            ServeError::ShapeMismatch { .. }
+        ));
+        // The session survived every rejected submit.
+        let (qs, ks, vs) = mt.step_rows(0);
+        h.step(ModelStep::token(ks, vs, qs)).expect("valid step");
+        let sr = h.wait_step(TIMEOUT).expect("step done");
+        assert_eq!(sr.context_len, 9);
+        let m = client.metrics();
+        assert_eq!(m.errors, 7, "each rejected submit counted");
+        client.shutdown();
+    }
+
+    #[test]
+    fn executor_without_session_support_fails_open_typed_on_stream() {
+        // The dense fallback executor has no model-session support: the open
+        // chunk is rejected with ExecutorUnsupported, the typed error lands
+        // on the handle's stream, and the scheduler releases the pin.
+        let mt = ModelDecodeTrace::synth(1, 1, 4, 1, 4, 0xC13E);
+        let client = EngineBuilder::new()
+            .workers(1)
+            .build_with(|| RustExecutor)
+            .expect("build");
+        let mut h = client.open_model_session(0.5, mt.shape()).expect("open");
+        h.prefill(model_prompt(&mt)).expect("prefill enqueues fine");
+        assert_eq!(
+            h.wait_prefilled(TIMEOUT).unwrap_err(),
+            ServeError::ExecutorUnsupported { op: "model sessions" }
+        );
+        let m = wait_metrics(&client, |m| m.errors >= 1 && m.session_pins == 0);
+        assert_eq!(m.errors, 1);
+        assert_eq!(m.session_pins, 0, "failed open must not leak its pin");
+        // One-shots still flow.
+        let req = AttnRequest {
+            id: 0,
+            kind: crate::runtime::ArtifactKind::Dense,
+            alpha: 0.0,
+            seq: 4,
+            dim: 2,
+            q: vec![0.1; 2],
+            k: vec![0.1; 8],
+            v: vec![0.1; 8],
+            valid: vec![1.0; 4],
+        };
+        assert_eq!(client.submit_blocking(req).unwrap().out.len(), 2);
+        client.shutdown();
+    }
+
+    #[test]
+    fn chunked_prefill_spreads_over_ticks_and_acks_once() {
+        // A 32-row prompt with an 8-row chunk: the scheduler must admit it
+        // in 4 chunks (visible in metrics), the handle gets exactly ONE
+        // PrefillAcked with the full context length, and decode afterwards
+        // still works.
+        let mt = ModelDecodeTrace::synth(1, 1, 32, 1, 8, 0x5E88);
+        let client = EngineBuilder::new()
+            .workers(2)
+            .prefill_chunk(8)
+            .build()
+            .expect("build");
+        let mut h = client.open_model_session(0.6, mt.shape()).expect("open");
+        h.prefill(model_prompt(&mt)).expect("prefill");
+        assert_eq!(h.wait_prefilled(TIMEOUT).unwrap(), 32, "one ack, whole prompt");
+        assert!(h.try_event().is_none(), "exactly one ack per prefill");
+        let (qs, ks, vs) = mt.step_rows(0);
+        h.step(ModelStep::token(ks, vs, qs)).expect("step");
+        let sr = h.wait_step(TIMEOUT).expect("decode after chunked prefill");
+        assert_eq!(sr.out().len(), 8);
+        let m = wait_metrics(&client, |m| m.prefill_chunks == 4);
+        assert_eq!(m.prefill_chunks, 4);
+        assert_eq!(m.errors, 0);
+        client.shutdown();
+    }
+
+    #[test]
+    fn dropping_a_never_prefilled_handle_is_clean() {
+        // The RAII close of a handle that never prefilled resolves from the
+        // scheduler (no worker ever saw the session): pin released, no
+        // counted error.
+        let client = EngineBuilder::new().workers(1).build().expect("build");
+        {
+            let _h = client.open_model_session(0.6, ModelShape::single(4)).expect("open");
+            let m = wait_metrics(&client, |m| m.session_pins == 1);
+            assert_eq!(m.session_pins, 1, "admission pinned the session");
+        }
+        let m = wait_metrics(&client, |m| m.session_pins == 0);
+        assert_eq!(m.session_pins, 0);
+        assert_eq!(m.errors, 0);
+        client.shutdown();
+    }
+
+    #[test]
+    fn dropping_a_handle_closes_its_session() {
+        let mt = ModelDecodeTrace::synth(1, 1, 8, 1, 4, 0xC14E);
+        let client = EngineBuilder::new().workers(1).build().expect("build");
+        {
+            let mut h = client.open_model_session(0.6, mt.shape()).expect("open");
+            h.prefill(model_prompt(&mt)).expect("prefill");
+            assert_eq!(h.wait_prefilled(TIMEOUT).unwrap(), 8);
+            let m = wait_metrics(&client, |m| m.session_pins == 1);
+            assert_eq!(m.session_pins, 1);
+            // Handle dropped here without an explicit close.
+        }
+        let m = wait_metrics(&client, |m| m.session_pins == 0);
+        assert_eq!(m.session_pins, 0, "drop released the pin");
+        assert_eq!(m.errors, 0);
+        client.shutdown();
+    }
+}

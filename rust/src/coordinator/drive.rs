@@ -1,0 +1,126 @@
+//! Convenience driver over the typed client surface (DESIGN.md §5): run a
+//! batch of [`ModelDecodeTrace`]s as concurrent model sessions — open +
+//! chunked prefill, the full decode stream, then close — and report wall
+//! times and keep totals. The serve drivers (`examples/serve.rs`, the
+//! `serve_bench` suite in `benches/hotpath.rs`, and the `bitstopper serve`
+//! CLI) share this loop instead of hand-rolling three copies of it.
+
+use super::api::ServeError;
+use super::client::{Client, SessionHandle};
+use super::scheduler::{ModelPrompt, ModelStep};
+use crate::workload::ModelDecodeTrace;
+use std::time::{Duration, Instant};
+
+/// Timings and keep totals of one driven decode batch.
+#[derive(Debug, Clone, Copy)]
+pub struct DriveReport {
+    /// Wall time from the first open to the last prefill ack.
+    pub prefill: Duration,
+    /// Wall time from the first queued step to the last
+    /// [`super::SessionEvent::StepDone`].
+    pub decode: Duration,
+    /// Decode tokens served (sessions × steps).
+    pub tokens: usize,
+    /// Survivors summed over every lane of every decode step.
+    pub kept: usize,
+    /// Σ lanes × context length — the keep-rate denominator.
+    pub lane_context: usize,
+}
+
+impl DriveReport {
+    /// Mean keep rate across all decoded lanes.
+    pub fn keep_rate(&self) -> f64 {
+        if self.lane_context == 0 {
+            0.0
+        } else {
+            self.kept as f64 / self.lane_context as f64
+        }
+    }
+
+    /// Steady-state decode cost per token, in milliseconds.
+    pub fn ms_per_token(&self) -> f64 {
+        if self.tokens == 0 {
+            0.0
+        } else {
+            self.decode.as_secs_f64() * 1e3 / self.tokens as f64
+        }
+    }
+
+    /// Steady-state decode throughput in tokens per second.
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens as f64 / self.decode.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Drive every trace as a concurrent model session: open and queue each
+/// whole prompt, wait for all prefill acks, queue every session's full
+/// decode stream up front (the scheduler interleaves one model step per
+/// session per tick), drain each handle's step events, then close and wait.
+/// Any typed failure aborts the drive (remaining handles clean up via their
+/// RAII drop).
+pub fn drive_decode(
+    client: &Client,
+    alpha: f64,
+    traces: &[ModelDecodeTrace],
+    timeout: Duration,
+) -> Result<DriveReport, ServeError> {
+    let t_open = Instant::now();
+    let mut handles: Vec<SessionHandle> = Vec::with_capacity(traces.len());
+    for mt in traces {
+        let mut h = client.open_model_session(alpha, mt.shape())?;
+        let (k, v) = mt.prompt();
+        h.prefill(ModelPrompt { shape: mt.shape(), prompt_len: mt.prompt_len, k, v })?;
+        handles.push(h);
+    }
+    for h in handles.iter_mut() {
+        h.wait_prefilled(timeout)?;
+    }
+    let prefill = t_open.elapsed();
+
+    let t_decode = Instant::now();
+    for (s, mt) in traces.iter().enumerate() {
+        for i in 0..mt.n_steps() {
+            let (qs, ks, vs) = mt.step_rows(i);
+            handles[s].step(ModelStep::token(ks, vs, qs))?;
+        }
+    }
+    let (mut tokens, mut kept, mut lane_context) = (0usize, 0usize, 0usize);
+    for (s, mt) in traces.iter().enumerate() {
+        for _ in 0..mt.n_steps() {
+            let r = handles[s].wait_step(timeout)?;
+            tokens += 1;
+            kept += r.kept_total();
+            lane_context += r.kept.len() * r.context_len;
+        }
+    }
+    let decode = t_decode.elapsed();
+    for h in handles.iter_mut() {
+        h.close()?;
+        h.wait_closed(timeout)?;
+    }
+    Ok(DriveReport { prefill, decode, tokens, kept, lane_context })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::EngineBuilder;
+    use super::*;
+
+    #[test]
+    fn drive_reports_consistent_totals() {
+        let traces: Vec<ModelDecodeTrace> =
+            (0..2).map(|s| ModelDecodeTrace::synth(1, 2, 8, 3, 4, 0xD21E + s as u64)).collect();
+        let client = EngineBuilder::new().workers(2).build().expect("build");
+        let report =
+            drive_decode(&client, 0.6, &traces, Duration::from_secs(10)).expect("drive");
+        assert_eq!(report.tokens, 6, "2 sessions x 3 steps");
+        assert!(report.kept >= report.tokens * 2, "every lane keeps >= 1 token");
+        assert!(report.lane_context >= report.kept);
+        assert!(report.keep_rate() > 0.0 && report.keep_rate() <= 1.0);
+        assert!(report.ms_per_token() >= 0.0);
+        let m = client.metrics();
+        assert_eq!(m.errors, 0);
+        assert_eq!(m.session_pins, 0, "drive closes every session");
+        client.shutdown();
+    }
+}

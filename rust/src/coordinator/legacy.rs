@@ -1,0 +1,505 @@
+//! Deprecated pre-§5 serving entry points, kept compiling as **thin shims
+//! over [`Client`]** during the transition (DESIGN.md §5).
+//!
+//! The old surface returned bare `Receiver`s whose only failure signal was
+//! disconnection. The shims preserve exactly that contract — an op that
+//! fails (typed, on the new path) resolves the legacy receiver
+//! *disconnected* and is counted in [`super::Metrics::errors`] — by pumping
+//! each legacy session's [`SessionEvent`] stream into per-op responders from
+//! a small forwarder thread. New code should use [`super::EngineBuilder`] /
+//! [`Client`] / [`super::SessionHandle`] directly and get typed errors and
+//! eviction events instead.
+
+#![allow(deprecated)]
+
+use super::api::{ServeError, SessionEvent, StepResponse};
+use super::client::{Client, EngineBuilder};
+use super::scheduler::{ModelPrompt, ModelStep, SchedConfig};
+use super::{AttnExecutor, AttnRequest, AttnResponse, BatchConfig, Metrics, Submission};
+use crate::engine::ModelShape;
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+type SessionMap = Arc<Mutex<HashMap<u64, LegacySession>>>;
+
+fn lock_sessions(map: &SessionMap) -> std::sync::MutexGuard<'_, HashMap<u64, LegacySession>> {
+    map.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Per-legacy-session glue: the submit side (`events_tx` rides along with
+/// every submission so even post-mortem ops get their typed reply engine-
+/// side) and the FIFO of per-op responders the pump thread answers.
+struct LegacySession {
+    events_tx: Sender<SessionEvent>,
+    ops_tx: Sender<Sender<StepResponse>>,
+    shape: ModelShape,
+}
+
+/// The legacy engine handle: the pre-builder construction API plus the
+/// single-head session ops, all implemented over [`Client`].
+#[deprecated(
+    since = "0.3.0",
+    note = "use coordinator::EngineBuilder → Client → SessionHandle (typed errors, \
+            eviction events; DESIGN.md §5)"
+)]
+pub struct Engine {
+    client: Client,
+    /// Shared with each session's pump thread, which removes its own entry
+    /// when its stream ends (close, eviction, engine shutdown) — the map
+    /// cannot grow without bound across many short sessions.
+    sessions: SessionMap,
+}
+
+impl Engine {
+    /// Start an engine with default scheduler knobs
+    /// ([`EngineBuilder`] replaces this).
+    pub fn start<F, E>(n_workers: usize, cfg: BatchConfig, make_executor: F) -> Self
+    where
+        F: Fn() -> E + Send + Clone + 'static,
+        E: AttnExecutor,
+    {
+        Self::start_with(n_workers, cfg, SchedConfig::default(), make_executor)
+    }
+
+    /// [`Engine::start`] with explicit continuous-batching scheduler knobs.
+    pub fn start_with<F, E>(
+        n_workers: usize,
+        cfg: BatchConfig,
+        sched_cfg: SchedConfig,
+        make_executor: F,
+    ) -> Self
+    where
+        F: Fn() -> E + Send + Clone + 'static,
+        E: AttnExecutor,
+    {
+        let client = EngineBuilder::new()
+            .workers(n_workers)
+            .batch(cfg)
+            .sched(sched_cfg)
+            .build_with(make_executor)
+            .expect("legacy Engine::start: invalid parameters");
+        Self { client, sessions: Arc::new(Mutex::new(HashMap::new())) }
+    }
+
+    /// The typed handle this shim wraps — the migration path off it.
+    pub fn client(&self) -> &Client {
+        &self.client
+    }
+
+    /// Submit a one-shot request; the receiver resolves disconnected on any
+    /// failure (legacy contract — [`Client::submit`] reports typed errors).
+    pub fn submit(&self, req: AttnRequest) -> Receiver<AttnResponse> {
+        let (tx, rx) = channel();
+        if let Ok(ticket) = self.client.submit(req) {
+            // Deprecated-path forwarder: unwraps the typed result back into
+            // presence/absence. One short-lived thread per request is fine
+            // for a shim.
+            std::thread::spawn(move || {
+                if let Ok(resp) = ticket.recv() {
+                    let _ = tx.send(resp);
+                }
+            });
+        }
+        rx
+    }
+
+    /// Submit and wait.
+    pub fn submit_blocking(&self, req: AttnRequest) -> Result<AttnResponse, ServeError> {
+        self.client.submit_blocking(req)
+    }
+
+    /// Legacy single-head session open — the degenerate 1-layer/1-head model
+    /// session (`context_len` in the ack = prompt length).
+    pub fn open_session(
+        &self,
+        alpha: f64,
+        seq: usize,
+        dim: usize,
+        k: Vec<f32>,
+        v: Vec<f32>,
+    ) -> (u64, Receiver<StepResponse>) {
+        let (resp_tx, resp_rx) = channel();
+        let (events_tx, events_rx) = channel::<SessionEvent>();
+        let (ops_tx, ops_rx) = channel::<Sender<StepResponse>>();
+        let shape = ModelShape::single(dim);
+        let prompt = ModelPrompt::single(dim, seq, k, v);
+
+        // Client-side validation, preserving legacy counting semantics.
+        if !alpha.is_finite() || alpha < 0.0 {
+            self.client.core().count_error();
+            return (0, resp_rx);
+        }
+        if prompt.validate().is_err() {
+            self.client.core().count_error();
+            return (0, resp_rx);
+        }
+        let session = self.client.core().next_session_id();
+        if self
+            .client
+            .core()
+            .send(Submission::Open { session, alpha, shape, events: events_tx.clone() })
+            .is_err()
+        {
+            return (session, resp_rx);
+        }
+        // Queue the ack responder BEFORE the prefill goes out, so the pump
+        // finds it whenever the ack (or its error) arrives.
+        let _ = ops_tx.send(resp_tx);
+        let _ = self.client.core().send(Submission::Prefill {
+            session,
+            prompt,
+            events: events_tx.clone(),
+        });
+        // Insert before spawning the pump: the pump's exit-time removal must
+        // always observe the entry (an eviction racing the open could
+        // otherwise leave a stale entry behind forever).
+        lock_sessions(&self.sessions)
+            .insert(session, LegacySession { events_tx, ops_tx, shape });
+        spawn_pump(session, Arc::clone(&self.sessions), events_rx, ops_rx);
+        (session, resp_rx)
+    }
+
+    /// Append one generated token's K/V row to a single-head session (ack's
+    /// `context_len` = new context length).
+    pub fn session_append(
+        &self,
+        session: u64,
+        k_row: Vec<f32>,
+        v_row: Vec<f32>,
+    ) -> Receiver<StepResponse> {
+        self.session_op(session, ModelStep::append_only(vec![k_row], vec![v_row]))
+    }
+
+    /// Run one decode step against a single-head session's cached context.
+    pub fn session_decode(&self, session: u64, q: Vec<f32>) -> Receiver<StepResponse> {
+        self.session_op(session, ModelStep::decode_only(vec![q]))
+    }
+
+    fn session_op(&self, session: u64, step: ModelStep) -> Receiver<StepResponse> {
+        let (resp_tx, resp_rx) = channel();
+        let sessions = lock_sessions(&self.sessions);
+        let Some(ls) = sessions.get(&session) else {
+            // Unknown or already-closing id at the shim: counted error,
+            // disconnected receiver — the legacy contract for stale ops.
+            // (close_session removes the entry eagerly, so an op racing a
+            // pending close lands here instead of desynchronizing the
+            // pump's responder FIFO with a rejection event.)
+            self.client.core().count_error();
+            return resp_rx;
+        };
+        if step.validate(&ls.shape).is_err() {
+            self.client.core().count_error();
+            return resp_rx;
+        }
+        // Responder first, then the submission (the completion event can
+        // only arrive after the submission, so the pump always finds it).
+        let _ = ls.ops_tx.send(resp_tx);
+        let _ = self.client.core().send(Submission::Step {
+            session,
+            step,
+            events: ls.events_tx.clone(),
+        });
+        resp_rx
+    }
+
+    /// Close a session after its queued steps drain, freeing its cache.
+    /// Later ops on the id are counted errors. The map entry goes eagerly —
+    /// an op submitted while the close is still in flight is rejected at
+    /// the shim (unknown id), so its rejection can never consume the close
+    /// ack's responder.
+    pub fn close_session(&self, session: u64) -> Receiver<StepResponse> {
+        let (resp_tx, resp_rx) = channel();
+        let Some(ls) = lock_sessions(&self.sessions).remove(&session) else {
+            self.client.core().count_error();
+            return resp_rx;
+        };
+        let _ = ls.ops_tx.send(resp_tx);
+        let _ = self.client.core().send(Submission::Close {
+            session,
+            events: ls.events_tx.clone(),
+        });
+        resp_rx
+    }
+
+    /// Snapshot current metrics.
+    pub fn metrics(&self) -> Metrics {
+        self.client.metrics()
+    }
+
+    /// Graceful shutdown: drains in-flight work. (The session map is
+    /// cleared by [`Engine`]'s `Drop`, releasing every pump thread.)
+    pub fn shutdown(self) {
+        self.client.shutdown();
+    }
+}
+
+impl Drop for Engine {
+    /// Release the shim map's event-sender clones so every pump thread's
+    /// stream can disconnect. Without this, a session still open at engine
+    /// teardown would deadlock its pump forever: the pump's own `Arc` of
+    /// the map keeps the entry (and thus the last sender) alive, and the
+    /// exit-time removal that would drop it only runs after `recv` returns.
+    fn drop(&mut self) {
+        lock_sessions(&self.sessions).clear();
+    }
+}
+
+/// Forward a legacy session's event stream into its per-op responder FIFO.
+/// Ordering holds because each shim op queues its responder before its
+/// submission, and events arrive in completion (= submission) order. On
+/// exit the pump removes its session from the shim map, so neither map
+/// entries nor pump threads outlive their session (close, eviction, or
+/// engine shutdown all end the stream).
+fn spawn_pump(
+    session: u64,
+    sessions: SessionMap,
+    events: Receiver<SessionEvent>,
+    ops: Receiver<Sender<StepResponse>>,
+) {
+    std::thread::spawn(move || {
+        let respond = |sr: StepResponse| {
+            if let Ok(tx) = ops.try_recv() {
+                let _ = tx.send(sr);
+            }
+        };
+        while let Ok(ev) = events.recv() {
+            match ev {
+                SessionEvent::PrefillAcked { context_len, latency } => {
+                    respond(StepResponse { outs: vec![], kept: vec![], context_len, latency });
+                }
+                SessionEvent::StepDone(sr) => respond(sr),
+                SessionEvent::Closed { latency } => {
+                    respond(StepResponse { outs: vec![], kept: vec![], context_len: 0, latency });
+                    break;
+                }
+                // Legacy semantics: the failed op's receiver resolves
+                // disconnected (drop the responder). On the legacy surface
+                // every reachable error means the session is dead engine-
+                // side (failed open, post-eviction op, dropped queued work —
+                // shim-side validation prevents the live-session failures),
+                // so stop pumping rather than blocking forever on a stream
+                // kept open only by the shim map's own sender clone.
+                SessionEvent::Error(_) => {
+                    let _ = ops.try_recv();
+                    break;
+                }
+                // Legacy clients had no eviction signal: their next op on
+                // the id becomes a counted error exactly as before. The
+                // session is dead engine-side, so stop pumping (queued
+                // responders resolve disconnected when `ops` drops).
+                SessionEvent::Evicted { .. } => break,
+            }
+        }
+        // Close/eviction/shutdown: this session is gone — drop its shim
+        // entry (a close already removed it eagerly; remove is idempotent).
+        lock_sessions(&sessions).remove(&session);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_util::wait_metrics;
+    use super::super::{BesfExecutor, RustExecutor, SessionStore};
+    use super::*;
+    use crate::runtime::ArtifactKind;
+    use crate::util::SplitMix64;
+    use crate::workload::DecodeTrace;
+    use std::time::Duration;
+
+    fn mk_request(seq: usize, dim: usize, seed: u64) -> AttnRequest {
+        let mut rng = SplitMix64::new(seed);
+        AttnRequest {
+            id: 0,
+            kind: ArtifactKind::Dense,
+            alpha: 0.0,
+            seq,
+            dim,
+            q: (0..dim).map(|_| rng.normal() as f32).collect(),
+            k: (0..seq * dim).map(|_| rng.normal() as f32).collect(),
+            v: (0..seq * dim).map(|_| rng.normal() as f32).collect(),
+            valid: vec![1.0; seq],
+        }
+    }
+
+    #[test]
+    fn legacy_submit_still_delivers_responses() {
+        let engine = Engine::start(2, BatchConfig::default(), || RustExecutor);
+        let mut rxs = vec![];
+        for i in 0..8 {
+            rxs.push(engine.submit(mk_request(16, 8, i)));
+        }
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.out.len(), 8);
+            assert_eq!(resp.kept, 16);
+        }
+        // Malformed request: legacy contract — disconnected receiver,
+        // counted error, engine survives.
+        let mut bad = mk_request(8, 4, 99);
+        bad.k.truncate(3);
+        let rx = engine.submit(bad);
+        assert!(rx.recv_timeout(Duration::from_secs(5)).is_err());
+        let ok = engine.submit_blocking(mk_request(8, 4, 100)).unwrap();
+        assert_eq!(ok.out.len(), 4);
+        let m = engine.metrics();
+        assert_eq!(m.completed, 9);
+        assert_eq!(m.errors, 1);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn legacy_session_decode_is_bit_identical_to_one_shot_requests() {
+        // The degenerate 1-layer/1-head acceptance through the DEPRECATED
+        // shims: a decode step through the scheduler-driven session path
+        // (cached quantization + incrementally appended planes, sticky
+        // pinning across 3 workers) must be bit-identical to a one-shot
+        // request carrying the same full context. (The full multi-layer
+        // variant on the typed API lives in tests/scheduler_e2e.rs.)
+        let trace = DecodeTrace::synth(48, 4, 16, 0x5E55);
+        let engine = Engine::start(3, BatchConfig::default(), BesfExecutor::default);
+        let (sid, rx) = engine.open_session(
+            0.6,
+            trace.prompt_len,
+            trace.dim,
+            trace.prompt_k.clone(),
+            trace.prompt_v.clone(),
+        );
+        let ack = rx.recv_timeout(Duration::from_secs(5)).expect("open ack");
+        assert_eq!(ack.context_len, trace.prompt_len);
+        for (i, step) in trace.steps.iter().enumerate() {
+            let ack = engine
+                .session_append(sid, step.k_row.clone(), step.v_row.clone())
+                .recv_timeout(Duration::from_secs(5))
+                .expect("append ack");
+            assert_eq!(ack.context_len, trace.prompt_len + i + 1, "step {i} context length");
+            let dec = engine
+                .session_decode(sid, step.q.clone())
+                .recv_timeout(Duration::from_secs(5))
+                .expect("decode");
+            let (k_full, v_full, n) = trace.context_after(i + 1);
+            let one_shot = engine
+                .submit_blocking(AttnRequest {
+                    id: 0,
+                    kind: ArtifactKind::BitStopper,
+                    alpha: 0.6,
+                    seq: n,
+                    dim: trace.dim,
+                    q: step.q.clone(),
+                    k: k_full,
+                    v: v_full,
+                    valid: vec![1.0; n],
+                })
+                .unwrap();
+            assert_eq!(dec.out(), &one_shot.out[..], "step {i}: outputs must be bit-identical");
+            assert_eq!(dec.kept_total(), one_shot.kept, "step {i}: survivor counts");
+            assert!(dec.kept_total() >= 1);
+        }
+        engine.close_session(sid).recv_timeout(Duration::from_secs(5)).expect("close ack");
+        // If pinning were not sticky, steps would have landed on workers
+        // without the cache and shown up here as errors.
+        let m = engine.metrics();
+        assert_eq!(m.errors, 0);
+        assert!(m.model_steps >= 8, "append + decode steps went through the scheduler");
+        assert!(m.prefill_chunks >= 1);
+        assert!(m.ticks >= 1);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn legacy_stale_session_ops_are_counted_errors_and_engine_survives() {
+        let engine = Engine::start(1, BatchConfig::default(), BesfExecutor::default);
+        let trace = DecodeTrace::synth(8, 1, 4, 0x5E66);
+        let (sid, rx) = engine.open_session(
+            0.6,
+            trace.prompt_len,
+            trace.dim,
+            trace.prompt_k.clone(),
+            trace.prompt_v.clone(),
+        );
+        rx.recv_timeout(Duration::from_secs(5)).expect("open ack");
+        engine.close_session(sid).recv_timeout(Duration::from_secs(5)).expect("close ack");
+        // Decode against the closed session: counted error, receiver
+        // resolves disconnected, engine survives.
+        let rx = engine.session_decode(sid, trace.steps[0].q.clone());
+        assert!(rx.recv_timeout(Duration::from_secs(5)).is_err());
+        // Ops on a never-opened session behave the same.
+        let rx = engine.session_append(999, vec![0.0; 4], vec![0.0; 4]);
+        assert!(rx.recv_timeout(Duration::from_secs(5)).is_err());
+        let m = wait_metrics(engine.client(), |m| m.errors >= 2);
+        assert_eq!(m.errors, 2);
+        assert_eq!(m.session_pins, 0, "close released the pin");
+        let ok = engine.submit_blocking(mk_request(8, 4, 31)).unwrap();
+        assert_eq!(ok.out.len(), 4);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn legacy_invalid_alpha_is_counted_and_receiver_disconnects() {
+        let engine = Engine::start(1, BatchConfig::default(), || RustExecutor);
+        let mut req = mk_request(4, 4, 7);
+        req.alpha = f64::NAN;
+        let rx = engine.submit(req);
+        assert!(rx.recv_timeout(Duration::from_secs(1)).is_err());
+        let (_sid, rx) = engine.open_session(f64::NAN, 1, 4, vec![0.0; 4], vec![0.0; 4]);
+        assert!(rx.recv_timeout(Duration::from_secs(1)).is_err());
+        let m = engine.metrics();
+        assert_eq!(m.errors, 2);
+        assert_eq!(m.completed, 0);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn legacy_session_on_sessionless_executor_is_counted_error() {
+        // The dense fallback executor rejects the open (typed, engine-side);
+        // the legacy receiver just sees a disconnect.
+        let engine = Engine::start(1, BatchConfig::default(), || RustExecutor);
+        let (_sid, rx) = engine.open_session(0.5, 1, 2, vec![0.0; 2], vec![0.0; 2]);
+        assert!(rx.recv_timeout(Duration::from_secs(5)).is_err());
+        let m = wait_metrics(engine.client(), |m| m.errors >= 1 && m.session_pins == 0);
+        assert_eq!(m.errors, 1);
+        assert_eq!(m.session_pins, 0, "failed open must not leak its pin");
+        let ok = engine.submit_blocking(mk_request(4, 2, 41)).unwrap();
+        assert_eq!(ok.out.len(), 2);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn legacy_eviction_still_invalidates_silently_and_releases_pins() {
+        // A capacity-1 store evicts the LRU session when a second one opens;
+        // legacy clients get no event — their next op is a counted error —
+        // but the pins must still be released end to end.
+        let engine = Engine::start(1, BatchConfig::default(), || {
+            BesfExecutor::with_sessions(SessionStore::with_policy(1, None))
+        });
+        let trace = DecodeTrace::synth(8, 1, 4, 0x5E77);
+        let (sid_a, rx) = engine.open_session(
+            0.6,
+            trace.prompt_len,
+            trace.dim,
+            trace.prompt_k.clone(),
+            trace.prompt_v.clone(),
+        );
+        rx.recv_timeout(Duration::from_secs(5)).expect("open A");
+        let (sid_b, rx) = engine.open_session(
+            0.6,
+            trace.prompt_len,
+            trace.dim,
+            trace.prompt_k.clone(),
+            trace.prompt_v.clone(),
+        );
+        rx.recv_timeout(Duration::from_secs(5)).expect("open B evicts A");
+        let m = wait_metrics(engine.client(), |m| m.evictions == 1 && m.session_pins == 1);
+        assert_eq!(m.evictions, 1);
+        assert_eq!(m.session_pins, 1, "evicted session's pin released, B's kept");
+        // A is gone: ops on it are counted errors; B still decodes.
+        let rx = engine.session_decode(sid_a, trace.steps[0].q.clone());
+        assert!(rx.recv_timeout(Duration::from_secs(5)).is_err());
+        let dec = engine
+            .session_decode(sid_b, trace.steps[0].q.clone())
+            .recv_timeout(Duration::from_secs(5))
+            .expect("B decodes");
+        assert_eq!(dec.out().len(), 4);
+        engine.shutdown();
+    }
+}

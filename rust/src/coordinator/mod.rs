@@ -2,8 +2,16 @@
 //! scheduler → executor workers (vLLM-style, std-thread based — the offline
 //! environment has no tokio; see DESIGN.md §2).
 //!
-//! The coordinator owns the *request path*. Two kinds of traffic flow
-//! through it:
+//! The coordinator owns the *request path*. Clients reach it through the
+//! typed surface in [`client`] (DESIGN.md §5): an [`EngineBuilder`] validates
+//! construction and returns a cheaply-clonable [`Client`]; one-shot attention
+//! ops go through [`Client::submit`] (an [`AttnTicket`] resolving to
+//! `Result<AttnResponse, ServeError>`), and model sessions through
+//! [`Client::open_model_session`] (an RAII [`SessionHandle`] streaming
+//! [`SessionEvent`]s — prefill acks, step outputs, typed errors, and
+//! eviction notices — and closing its session on drop).
+//!
+//! Two kinds of traffic flow through the core:
 //!
 //! * **One-shot attention ops** ([`AttnRequest`]) are grouped by artifact
 //!   shape by the [`batch::Batcher`], routed to executor workers by
@@ -11,38 +19,53 @@
 //!   PJRT runtime (AOT artifacts — the production path) or through a
 //!   pure-Rust fallback executor (used in tests and when artifacts are
 //!   absent).
-//! * **Model sessions** (DESIGN.md §7–8) carry whole-model autoregressive
+//! * **Model sessions** (DESIGN.md §8–9) carry whole-model autoregressive
 //!   decode: an `n_layers × n_heads` KV-cache per session
 //!   ([`crate::engine::ModelContext`], held by the pinned worker's
 //!   [`session::SessionStore`]), driven by the continuous-batching
 //!   [`scheduler::Scheduler`] — each tick assembles one iteration batch from
 //!   all runnable sessions, admits prefills chunk-wise alongside in-flight
-//!   decodes, and streams per-token [`StepResponse`]s. The legacy
-//!   single-head session API is served as the degenerate 1-layer/1-head
-//!   case of the same machinery.
+//!   decodes, and streams per-token [`SessionEvent`]s. The legacy
+//!   single-head session API survives as deprecated shims over [`Client`]
+//!   ([`legacy::Engine`]).
+//!
+//! Every failure on this path is a typed [`ServeError`] end to end — client
+//! validation, scheduler admission, worker execution, and the
+//! worker→scheduler→router feedback loop all speak the same enum; nothing
+//! stringly survives past the executor boundary.
 //!
 //! Python is never on this path; the only Python involvement was the
 //! one-time `make artifacts`.
 
+pub mod api;
 pub mod batch;
+pub mod client;
+pub mod drive;
+pub mod legacy;
+pub mod pjrt;
 pub mod router;
 pub mod scheduler;
 pub mod session;
 
-pub use batch::{Batcher, BatchConfig};
+pub use api::{EvictReason, ServeError, SessionEvent, StepResponse};
+pub use batch::{BatchConfig, Batcher};
+pub use client::{AttnTicket, Client, EngineBuilder, SessionHandle};
+pub use drive::{drive_decode, DriveReport};
+#[allow(deprecated)]
+pub use legacy::Engine;
+pub use pjrt::PjrtExecutor;
 pub use router::Router;
 pub use scheduler::{
-    Feedback, ModelJob, ModelPrompt, ModelStep, SchedConfig, SchedStats, Scheduler, StepResponse,
+    Feedback, ModelJob, ModelPrompt, ModelStep, SchedConfig, SchedStats, Scheduler,
 };
 pub use session::SessionStore;
 
 use crate::algo::BesfScratch;
 use crate::attention::attention_f32;
 use crate::config::LatsConfig;
-use crate::engine::{HeadContext, ModelStepOutput, SelectionPolicy};
+use crate::engine::{HeadContext, ModelShape, ModelStepOutput, SelectionPolicy};
 use crate::runtime::ArtifactKind;
 use crate::workload::QuantAttn;
-use anyhow::Result;
 use std::borrow::Cow;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -70,8 +93,8 @@ impl AttnRequest {
     /// `(alpha * 100).round() as u32` bucketing collided alphas closer than
     /// 0.005 and saturated negative or NaN alphas to bucket 0, silently
     /// batching them with `alpha == 0.0`. Non-finite/negative alphas never
-    /// reach the batcher at all: [`Engine::submit`] rejects them as counted
-    /// per-request errors.
+    /// reach the batcher at all: [`Client::submit`] rejects them with
+    /// [`ServeError::InvalidAlpha`].
     pub fn shape_key(&self) -> (ArtifactKind, usize, usize, u32) {
         (self.kind, self.seq, self.dim, (self.alpha as f32).to_bits())
     }
@@ -87,34 +110,57 @@ pub struct AttnResponse {
     pub latency: Duration,
 }
 
-/// Executor abstraction: the PJRT-backed executor lives in the binary /
-/// examples (it needs a loaded [`crate::runtime::Runtime`]); the pure-Rust
-/// executor makes the coordinator testable without artifacts.
+/// Responder for one one-shot request: resolves to the response or its
+/// typed error.
+pub(crate) type OneShotResponder = Sender<Result<AttnResponse, ServeError>>;
+
+/// Executor abstraction: the PJRT-backed executor ([`PjrtExecutor`]) needs a
+/// loaded [`crate::runtime::Runtime`]; the pure-Rust executors make the
+/// coordinator testable without artifacts. Failures are typed
+/// [`ServeError`]s — the worker loop forwards them to clients verbatim.
 ///
 /// Executors are **constructed inside their worker thread** (the PJRT client
 /// is not `Send`), so implementations need not be thread-safe.
 pub trait AttnExecutor: 'static {
-    fn execute(&mut self, req: &AttnRequest) -> Result<(Vec<f32>, usize)>;
+    fn execute(&mut self, req: &AttnRequest) -> Result<(Vec<f32>, usize), ServeError>;
 
     /// Execute one scheduler-dispatched model job, returning its output plus
-    /// any session ids the worker's store evicted to make room (the worker
-    /// loop reports those upstream so the scheduler releases their pins).
-    /// Executors without session support (the dense fallback, PJRT) reject
-    /// it; the worker loop counts the rejection as a per-request error
-    /// instead of dying.
-    fn execute_model(&mut self, job: &ModelJob) -> Result<(ModelStepOutput, Vec<u64>)> {
-        anyhow::bail!("executor does not support model sessions (session {})", job.session())
+    /// any sessions the worker's store evicted to make room, tagged with the
+    /// reason (the worker loop reports those upstream so the scheduler
+    /// releases their pins and notifies their handles). Executors without
+    /// session support (the dense fallback, PJRT) reject it with
+    /// [`ServeError::ExecutorUnsupported`]; the worker loop delivers the
+    /// typed error instead of dying.
+    fn execute_model(
+        &mut self,
+        job: &ModelJob,
+    ) -> Result<(ModelStepOutput, Vec<(u64, EvictReason)>), ServeError> {
+        let _ = job;
+        Err(ServeError::ExecutorUnsupported { op: "model sessions" })
     }
 }
 
-/// Shape checks shared by the pure-Rust executors: a malformed hand-built
-/// request must surface as a counted per-request error, not a slice panic
-/// that kills the worker (and with it the whole engine).
-fn check_shapes(req: &AttnRequest) -> Result<()> {
-    anyhow::ensure!(req.valid.len() == req.seq, "valid mask length != seq");
-    anyhow::ensure!(req.q.len() == req.dim, "query length != dim");
-    anyhow::ensure!(req.k.len() == req.seq * req.dim, "k length != seq*dim");
-    anyhow::ensure!(req.v.len() == req.seq * req.dim, "v length != seq*dim");
+/// Shape checks shared by [`Client::submit`] (submit-time rejection,
+/// DESIGN.md §5) and the pure-Rust executors (defense in depth): a malformed
+/// request must surface as a typed [`ServeError::ShapeMismatch`], not a
+/// slice panic that kills the worker (and with it the whole engine).
+pub(crate) fn check_shapes(req: &AttnRequest) -> Result<(), ServeError> {
+    let fail = |what: String| Err(ServeError::ShapeMismatch { what });
+    if req.dim == 0 || req.q.is_empty() {
+        return fail("query is empty".into());
+    }
+    if req.q.len() != req.dim {
+        return fail(format!("query length {} != dim {}", req.q.len(), req.dim));
+    }
+    if req.valid.len() != req.seq {
+        return fail(format!("valid mask length {} != seq {}", req.valid.len(), req.seq));
+    }
+    if req.k.len() != req.seq * req.dim {
+        return fail(format!("k length {} != seq*dim {}", req.k.len(), req.seq * req.dim));
+    }
+    if req.v.len() != req.seq * req.dim {
+        return fail(format!("v length {} != seq*dim {}", req.v.len(), req.seq * req.dim));
+    }
     Ok(())
 }
 
@@ -151,7 +197,7 @@ fn gather_valid(req: &AttnRequest) -> (usize, Cow<'_, [f32]>, Cow<'_, [f32]>) {
 pub struct RustExecutor;
 
 impl AttnExecutor for RustExecutor {
-    fn execute(&mut self, req: &AttnRequest) -> Result<(Vec<f32>, usize)> {
+    fn execute(&mut self, req: &AttnRequest) -> Result<(Vec<f32>, usize), ServeError> {
         check_shapes(req)?;
         let (live, k, v) = gather_valid(req);
         let out = attention_f32(&req.q, &k, &v, live, req.dim, req.dim);
@@ -176,7 +222,7 @@ pub struct BesfExecutor {
     /// inside their worker thread — one scratch per worker).
     scratch: BesfScratch,
     /// This worker's model-session KV-caches; the scheduler pins a session's
-    /// work here for the session's whole life (DESIGN.md §7–8).
+    /// work here for the session's whole life (DESIGN.md §8–9).
     sessions: SessionStore,
 }
 
@@ -194,7 +240,7 @@ impl BesfExecutor {
 }
 
 impl AttnExecutor for BesfExecutor {
-    fn execute(&mut self, req: &AttnRequest) -> Result<(Vec<f32>, usize)> {
+    fn execute(&mut self, req: &AttnRequest) -> Result<(Vec<f32>, usize), ServeError> {
         check_shapes(req)?;
         let (live, k, v) = gather_valid(req);
         if live == 0 {
@@ -210,7 +256,10 @@ impl AttnExecutor for BesfExecutor {
         Ok((qr.out, qr.sel.survivors.len()))
     }
 
-    fn execute_model(&mut self, job: &ModelJob) -> Result<(ModelStepOutput, Vec<u64>)> {
+    fn execute_model(
+        &mut self,
+        job: &ModelJob,
+    ) -> Result<(ModelStepOutput, Vec<(u64, EvictReason)>), ServeError> {
         let now = Instant::now();
         let ack = |context_len: usize| ModelStepOutput {
             outs: Vec::new(),
@@ -219,10 +268,9 @@ impl AttnExecutor for BesfExecutor {
         };
         match job {
             ModelJob::Open { session, alpha, shape, k, v, rows } => {
-                anyhow::ensure!(
-                    alpha.is_finite() && *alpha >= 0.0,
-                    "non-finite or negative alpha"
-                );
+                if !alpha.is_finite() || *alpha < 0.0 {
+                    return Err(ServeError::InvalidAlpha { alpha: *alpha });
+                }
                 let cfg = LatsConfig { alpha: *alpha, radius: self.radius };
                 let evicted = self.sessions.open(*session, cfg, *shape, k, v, *rows, now)?;
                 Ok((ack(*rows), evicted))
@@ -258,7 +306,7 @@ pub struct Metrics {
     pub p95_latency_us: f64,
     pub throughput_rps: f64,
     /// Scheduler ticks that had at least one runnable session (DESIGN.md
-    /// §8).
+    /// §9).
     pub ticks: u64,
     /// Model steps dispatched by the scheduler.
     pub model_steps: u64,
@@ -323,45 +371,44 @@ fn deliver<T>(
 /// Unit of work handed to an executor worker.
 enum Job {
     /// A shape-homogeneous batch from the [`Batcher`].
-    Batch(Vec<(AttnRequest, Instant, Sender<AttnResponse>)>),
-    /// One scheduler-dispatched model job. The responder is present only on
-    /// client-visible units (steps, closes, the last prefill chunk).
-    Model(ModelJob, Option<(Sender<StepResponse>, Instant)>),
+    Batch(Vec<(AttnRequest, Instant, OneShotResponder)>),
+    /// One scheduler-dispatched model job. Outcomes — acks and typed
+    /// errors — leave on `events`, the session's own stream; `ack` marks
+    /// client-visible completions and carries their submission time.
+    Model { job: ModelJob, events: Sender<SessionEvent>, ack: Option<Instant> },
 }
 
-/// What `Engine` methods enqueue to the scheduler thread.
-enum Submission {
-    OneShot(AttnRequest, Sender<AttnResponse>),
-    Open { session: u64, alpha: f64, prompt: ModelPrompt, resp: Sender<StepResponse> },
-    Step { session: u64, step: ModelStep, resp: Sender<StepResponse> },
-    Close { session: u64, resp: Sender<StepResponse> },
+/// What [`Client`] methods enqueue to the scheduler thread.
+pub(crate) enum Submission {
+    OneShot(AttnRequest, OneShotResponder),
+    Open { session: u64, alpha: f64, shape: ModelShape, events: Sender<SessionEvent> },
+    Prefill { session: u64, prompt: ModelPrompt, events: Sender<SessionEvent> },
+    Step { session: u64, step: ModelStep, events: Sender<SessionEvent> },
+    Close { session: u64, events: Sender<SessionEvent> },
 }
 
-/// The serving engine: scheduler/batcher thread + N executor workers.
-pub struct Engine {
-    tx: Sender<Submission>,
-    metrics: Arc<Mutex<MetricsInner>>,
-    next_id: AtomicU64,
-    next_session: AtomicU64,
+struct EngineThreads {
     workers: Vec<std::thread::JoinHandle<()>>,
     batcher: Option<std::thread::JoinHandle<()>>,
 }
 
-impl Engine {
-    /// Start an engine with default scheduler knobs. `make_executor` is
-    /// cloned into and invoked **inside** each worker thread (the PJRT
-    /// client is not `Send`).
-    pub fn start<F, E>(n_workers: usize, cfg: BatchConfig, make_executor: F) -> Self
-    where
-        F: Fn() -> E + Send + Clone + 'static,
-        E: AttnExecutor,
-    {
-        Self::start_with(n_workers, cfg, SchedConfig::default(), make_executor)
-    }
+/// The serving engine core: scheduler/batcher thread + N executor workers.
+/// Shared behind an `Arc` by every [`Client`] clone and [`SessionHandle`];
+/// shuts down (drains in-flight work, joins threads) when explicitly asked
+/// or when the last holder drops it.
+pub(crate) struct EngineCore {
+    tx: Mutex<Option<Sender<Submission>>>,
+    metrics: Arc<Mutex<MetricsInner>>,
+    next_id: AtomicU64,
+    next_session: AtomicU64,
+    threads: Mutex<EngineThreads>,
+}
 
-    /// [`Engine::start`] with explicit continuous-batching scheduler knobs
-    /// (prefill chunk size, per-worker in-flight cap).
-    pub fn start_with<F, E>(
+impl EngineCore {
+    /// Start the engine threads. `make_executor` is cloned into and invoked
+    /// **inside** each worker thread (the PJRT client is not `Send`).
+    /// Parameter validation belongs to [`EngineBuilder::build`].
+    pub(crate) fn start<F, E>(
         n_workers: usize,
         cfg: BatchConfig,
         sched_cfg: SchedConfig,
@@ -376,8 +423,8 @@ impl Engine {
 
         // Feedback path worker → scheduler: completions (for in-flight
         // accounting), rejected opens (pin release), and store evictions
-        // (pin release). Session ids are never reused, so a late unbind
-        // can't clash with a rebind.
+        // (pin release + client notification). Session ids are never
+        // reused, so a late unbind can't clash with a rebind.
         let (fb_tx, fb_rx): (Sender<Feedback>, Receiver<Feedback>) = channel();
 
         // Worker channels.
@@ -401,9 +448,17 @@ impl Engine {
                                         let latency = submitted.elapsed();
                                         let resp =
                                             AttnResponse { id: req.id, out, kept, latency };
-                                        deliver(&m, t0, latency, resp, &resp_tx);
+                                        deliver(&m, t0, latency, Ok(resp), &resp_tx);
                                     }
-                                    Err(_) => lock_metrics(&m).errors += 1,
+                                    Err(e) => {
+                                        lock_metrics(&m).errors += 1;
+                                        // The error travels to the client
+                                        // typed; a walked-away client is
+                                        // counted like on the success path.
+                                        if resp_tx.send(Err(e)).is_err() {
+                                            lock_metrics(&m).dropped += 1;
+                                        }
+                                    }
                                 }
                             }
                             let mut mi = lock_metrics(&m);
@@ -415,10 +470,10 @@ impl Engine {
                                 n: bsize as usize,
                             });
                         }
-                        Job::Model(mj, resp) => {
+                        Job::Model { job, events, ack } => {
                             let t0 = Instant::now();
-                            let session = mj.session();
-                            match exec.execute_model(&mj) {
+                            let session = job.session();
+                            match exec.execute_model(&job) {
                                 Ok((out, evicted)) => {
                                     if !evicted.is_empty() {
                                         let _ = fb.send(Feedback::Evicted {
@@ -427,16 +482,28 @@ impl Engine {
                                         });
                                     }
                                     let (kept, context) = scheduler::keep_totals(&out);
-                                    if let Some((rtx, submitted)) = resp {
+                                    if let Some(submitted) = ack {
                                         let latency = submitted.elapsed();
-                                        let sr = StepResponse {
-                                            session,
-                                            outs: out.outs,
-                                            kept: out.kept,
-                                            context_len: out.context_len,
-                                            latency,
+                                        let ev = match &job {
+                                            ModelJob::Open { .. } | ModelJob::Prefill { .. } => {
+                                                SessionEvent::PrefillAcked {
+                                                    context_len: out.context_len,
+                                                    latency,
+                                                }
+                                            }
+                                            ModelJob::Step { .. } => {
+                                                SessionEvent::StepDone(StepResponse {
+                                                    outs: out.outs,
+                                                    kept: out.kept,
+                                                    context_len: out.context_len,
+                                                    latency,
+                                                })
+                                            }
+                                            ModelJob::Close { .. } => {
+                                                SessionEvent::Closed { latency }
+                                            }
                                         };
-                                        deliver(&m, t0, latency, sr, &rtx);
+                                        deliver(&m, t0, latency, ev, &events);
                                     }
                                     let _ = fb.send(Feedback::Done {
                                         worker: widx,
@@ -445,13 +512,39 @@ impl Engine {
                                         context,
                                     });
                                 }
-                                Err(_) => {
-                                    lock_metrics(&m).errors += 1;
+                                Err(e) => {
+                                    // A Close finding the session already
+                                    // gone (an eviction raced it) reached
+                                    // the desired end state: deliver it as
+                                    // a normal Closed — wait_closed must
+                                    // succeed — and count no error.
+                                    let benign_close = matches!(
+                                        (&job, &e),
+                                        (
+                                            ModelJob::Close { .. },
+                                            ServeError::UnknownSession { .. }
+                                        )
+                                    );
+                                    if benign_close {
+                                        if let Some(submitted) = ack {
+                                            let latency = submitted.elapsed();
+                                            let ev = SessionEvent::Closed { latency };
+                                            deliver(&m, t0, latency, ev, &events);
+                                        }
+                                    } else {
+                                        lock_metrics(&m).errors += 1;
+                                        // Typed error onto the session's
+                                        // stream — even for silent prefill
+                                        // chunks, the client must learn.
+                                        if events.send(SessionEvent::Error(e)).is_err() {
+                                            lock_metrics(&m).dropped += 1;
+                                        }
+                                    }
                                     // A failed Open never produced a cache:
                                     // the scheduler must drop the pin and
                                     // fail the session's queued work. Other
                                     // failures just complete the unit.
-                                    let msg = if matches!(mj, ModelJob::Open { .. }) {
+                                    let msg = if matches!(job, ModelJob::Open { .. }) {
                                         Feedback::OpenFailed { worker: widx, session }
                                     } else {
                                         Feedback::Done {
@@ -493,8 +586,8 @@ impl Engine {
                     let mut dropped_ops = 0usize;
                     let mut dirty = false;
                     // 1. Worker feedback → router/scheduler (in-flight
-                    //    accounting, pin releases for failed opens and
-                    //    evictions, one-shot load decay).
+                    //    accounting, pin releases + eviction events for
+                    //    failed opens and evictions, one-shot load decay).
                     while let Ok(fb) = fb_rx.try_recv() {
                         match fb {
                             Feedback::BatchDone { worker, n } => {
@@ -535,16 +628,10 @@ impl Engine {
                     if let Some(sub) = first {
                         dirty = true;
                         need_tick = true;
-                        Self::admit(sub, &mut batcher, &mut sched, &mut router, &mut dropped_ops);
+                        admit(sub, &mut batcher, &mut sched, &mut router, &mut dropped_ops);
                         // Greedy drain without blocking.
                         while let Ok(sub) = rx.try_recv() {
-                            Self::admit(
-                                sub,
-                                &mut batcher,
-                                &mut sched,
-                                &mut router,
-                                &mut dropped_ops,
-                            );
+                            admit(sub, &mut batcher, &mut sched, &mut router, &mut dropped_ops);
                             if batcher.any_full() {
                                 break;
                             }
@@ -566,7 +653,8 @@ impl Engine {
                         dirty |= !dispatches.is_empty();
                         for d in dispatches {
                             router.note_dispatch(d.worker, 1);
-                            if worker_txs[d.worker].send(Job::Model(d.job, d.resp)).is_err() {
+                            let job = Job::Model { job: d.job, events: d.events, ack: d.ack };
+                            if worker_txs[d.worker].send(job).is_err() {
                                 return;
                             }
                         }
@@ -589,7 +677,8 @@ impl Engine {
                 while sched.busy() && Instant::now() < deadline {
                     for d in sched.plan_tick(&mut router) {
                         router.note_dispatch(d.worker, 1);
-                        if worker_txs[d.worker].send(Job::Model(d.job, d.resp)).is_err() {
+                        let job = Job::Model { job: d.job, events: d.events, ack: d.ack };
+                        if worker_txs[d.worker].send(job).is_err() {
                             return;
                         }
                     }
@@ -608,144 +697,47 @@ impl Engine {
         };
 
         Self {
-            tx,
+            tx: Mutex::new(Some(tx)),
             metrics,
             next_id: AtomicU64::new(1),
             next_session: AtomicU64::new(1),
-            workers,
-            batcher: Some(batcher),
+            threads: Mutex::new(EngineThreads { workers, batcher: Some(batcher) }),
         }
     }
 
-    /// Route one submission into the batcher or the scheduler (scheduler
-    /// thread only). Rejected admissions are counted; dropping the responder
-    /// resolves the client's receiver disconnected.
-    fn admit(
-        sub: Submission,
-        batcher: &mut Batcher,
-        sched: &mut Scheduler,
-        router: &mut Router,
-        dropped_ops: &mut usize,
-    ) {
-        let now = Instant::now();
-        let rejected = match sub {
-            Submission::OneShot(req, resp) => {
-                batcher.push(req, now, resp);
-                false
-            }
-            Submission::Open { session, alpha, prompt, resp } => {
-                sched.admit_open(session, alpha, prompt, resp, now, router).is_err()
-            }
-            Submission::Step { session, step, resp } => {
-                sched.enqueue_step(session, step, resp, now).is_err()
-            }
-            Submission::Close { session, resp } => sched.enqueue_close(session, resp, now).is_err(),
-        };
-        if rejected {
-            *dropped_ops += 1;
+    pub(crate) fn next_request_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub(crate) fn next_session_id(&self) -> u64 {
+        self.next_session.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Enqueue a submission; [`ServeError::Shutdown`] once the engine is
+    /// gone.
+    pub(crate) fn send(&self, sub: Submission) -> Result<(), ServeError> {
+        let guard = self.tx.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        match guard.as_ref() {
+            Some(tx) => tx.send(sub).map_err(|_| ServeError::Shutdown),
+            None => Err(ServeError::Shutdown),
         }
     }
 
-    /// Submit a one-shot request; returns a receiver for its response.
-    ///
-    /// A non-finite or negative `alpha` is rejected here as a counted
-    /// per-request error (the receiver resolves disconnected) — it must
-    /// never reach the batcher, where its shape key would otherwise alias a
-    /// legitimate alpha's batch.
-    pub fn submit(&self, mut req: AttnRequest) -> Receiver<AttnResponse> {
-        req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (rtx, rrx) = channel();
-        if !req.alpha.is_finite() || req.alpha < 0.0 {
-            lock_metrics(&self.metrics).errors += 1;
-            return rrx;
-        }
-        // Engine shutdown mid-submit simply drops the sender; callers see a
-        // disconnected receiver.
-        let _ = self.tx.send(Submission::OneShot(req, rtx));
-        rrx
+    /// Count a client-side validation failure (typed errors returned before
+    /// anything is enqueued still show up in [`Metrics::errors`]).
+    pub(crate) fn count_error(&self) {
+        lock_metrics(&self.metrics).errors += 1;
     }
 
-    /// Open a model-level decode session (the prefill): the prompt is
-    /// admitted **chunk-wise** by the scheduler alongside in-flight decodes;
-    /// the returned receiver resolves once the whole prompt is applied
-    /// (`context_len` = prompt length). Per-lane quantization scales are
-    /// calibrated on the first chunk and fixed for the session's life; all
-    /// subsequent work for the id lands on the worker that holds the cache.
-    /// Alpha is validated like [`Engine::submit`].
-    pub fn open_model_session(
-        &self,
-        alpha: f64,
-        prompt: ModelPrompt,
-    ) -> (u64, Receiver<StepResponse>) {
-        let session = self.next_session.fetch_add(1, Ordering::Relaxed);
-        let (rtx, rrx) = channel();
-        if !alpha.is_finite() || alpha < 0.0 {
-            lock_metrics(&self.metrics).errors += 1;
-            return (session, rrx);
-        }
-        let _ = self.tx.send(Submission::Open { session, alpha, prompt, resp: rtx });
-        (session, rrx)
-    }
-
-    /// Queue one model step (append the generated token's K/V rows and/or
-    /// decode one query per lane). Steps run in submission order, one per
-    /// scheduler tick.
-    pub fn model_step(&self, session: u64, step: ModelStep) -> Receiver<StepResponse> {
-        let (rtx, rrx) = channel();
-        let _ = self.tx.send(Submission::Step { session, step, resp: rtx });
-        rrx
-    }
-
-    /// Close a model session after its queued steps drain, freeing its
-    /// cache. Later ops on the id are counted errors.
-    pub fn close_model_session(&self, session: u64) -> Receiver<StepResponse> {
-        let (rtx, rrx) = channel();
-        let _ = self.tx.send(Submission::Close { session, resp: rtx });
-        rrx
-    }
-
-    /// Legacy single-head session open — the degenerate 1-layer/1-head model
-    /// session (`context_len` in the ack = prompt length).
-    pub fn open_session(
-        &self,
-        alpha: f64,
-        seq: usize,
-        dim: usize,
-        k: Vec<f32>,
-        v: Vec<f32>,
-    ) -> (u64, Receiver<StepResponse>) {
-        self.open_model_session(alpha, ModelPrompt::single(dim, seq, k, v))
-    }
-
-    /// Append one generated token's K/V row to a single-head session (ack's
-    /// `context_len` = new context length).
-    pub fn session_append(
-        &self,
-        session: u64,
-        k_row: Vec<f32>,
-        v_row: Vec<f32>,
-    ) -> Receiver<StepResponse> {
-        self.model_step(session, ModelStep::append_only(vec![k_row], vec![v_row]))
-    }
-
-    /// Run one decode step against a single-head session's cached context.
-    pub fn session_decode(&self, session: u64, q: Vec<f32>) -> Receiver<StepResponse> {
-        self.model_step(session, ModelStep::decode_only(vec![q]))
-    }
-
-    /// Close a single-head session ([`Engine::close_model_session`]).
-    pub fn close_session(&self, session: u64) -> Receiver<StepResponse> {
-        self.close_model_session(session)
-    }
-
-    /// Submit and wait.
-    pub fn submit_blocking(&self, req: AttnRequest) -> Result<AttnResponse> {
-        let rx = self.submit(req);
-        rx.recv().map_err(|_| anyhow::anyhow!("engine shut down"))
+    /// Has shutdown begun? (The submission channel is gone.) Lets a blocked
+    /// event-stream reader resolve instead of waiting on a channel its own
+    /// sender clone keeps open.
+    pub(crate) fn is_shut_down(&self) -> bool {
+        self.tx.lock().unwrap_or_else(std::sync::PoisonError::into_inner).is_none()
     }
 
     /// Snapshot current metrics.
-    pub fn metrics(&self) -> Metrics {
+    pub(crate) fn metrics(&self) -> Metrics {
         let mi = lock_metrics(&self.metrics);
         let mean_lat = crate::util::stats::mean(&mi.latencies_us);
         let p95 = crate::util::stats::percentile(&mi.latencies_us, 95.0);
@@ -776,23 +768,98 @@ impl Engine {
         }
     }
 
-    /// Graceful shutdown: drains in-flight work.
-    pub fn shutdown(mut self) {
-        drop(self.tx);
-        if let Some(b) = self.batcher.take() {
+    /// Graceful shutdown: close the submission channel, drain in-flight
+    /// work, join every thread. Idempotent; also runs on drop.
+    pub(crate) fn shutdown(&self) {
+        drop(self.tx.lock().unwrap_or_else(std::sync::PoisonError::into_inner).take());
+        let mut threads = self.threads.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        if let Some(b) = threads.batcher.take() {
             let _ = b.join();
         }
-        for w in self.workers.drain(..) {
+        for w in threads.workers.drain(..) {
             let _ = w.join();
+        }
+    }
+}
+
+impl Drop for EngineCore {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Route one submission into the batcher or the scheduler (scheduler thread
+/// only). Rejections go back to the session's stream as typed
+/// [`SessionEvent::Error`]s and are counted.
+fn admit(
+    sub: Submission,
+    batcher: &mut Batcher,
+    sched: &mut Scheduler,
+    router: &mut Router,
+    dropped_ops: &mut usize,
+) {
+    let now = Instant::now();
+    let rejected = match sub {
+        Submission::OneShot(req, resp) => {
+            batcher.push(req, now, resp);
+            None
+        }
+        Submission::Open { session, alpha, shape, events } => sched
+            .admit_open(session, alpha, shape, events.clone(), router)
+            .err()
+            .map(|e| (e, events)),
+        Submission::Prefill { session, prompt, events } => {
+            sched.enqueue_prefill(session, prompt, now).err().map(|e| (e, events))
+        }
+        Submission::Step { session, step, events } => {
+            sched.enqueue_step(session, step, now).err().map(|e| (e, events))
+        }
+        Submission::Close { session, events } => {
+            if let Err(e) = sched.enqueue_close(session, now) {
+                // Closing a session that is already gone (evicted / failed
+                // open the client has not observed yet — the RAII drop path)
+                // reaches the desired end state: deliver the typed reply but
+                // do NOT count it as an engine error.
+                let benign = matches!(e, ServeError::UnknownSession { .. });
+                let _ = events.send(SessionEvent::Error(e));
+                if !benign {
+                    *dropped_ops += 1;
+                }
+            }
+            None
+        }
+    };
+    if let Some((err, events)) = rejected {
+        let _ = events.send(SessionEvent::Error(err));
+        *dropped_ops += 1;
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_util {
+    use super::{Client, Metrics};
+    use std::time::{Duration, Instant};
+
+    /// Poll metrics until `pred` holds (or a 5 s deadline passes) — gauges
+    /// are published asynchronously by the coordinator thread, so a client
+    /// ack can arrive a few statements before the matching publish.
+    pub(crate) fn wait_metrics<F: Fn(&Metrics) -> bool>(client: &Client, pred: F) -> Metrics {
+        let t0 = Instant::now();
+        loop {
+            let m = client.metrics();
+            if pred(&m) || t0.elapsed() > Duration::from_secs(5) {
+                return m;
+            }
+            std::thread::sleep(Duration::from_millis(2));
         }
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::test_util::wait_metrics;
     use super::*;
     use crate::util::SplitMix64;
-    use crate::workload::DecodeTrace;
 
     fn mk_request(seq: usize, dim: usize, seed: u64) -> AttnRequest {
         let mut rng = SplitMix64::new(seed);
@@ -809,62 +876,69 @@ mod tests {
         }
     }
 
+    fn rust_client(workers: usize) -> Client {
+        EngineBuilder::new()
+            .workers(workers)
+            .build_with(|| RustExecutor)
+            .expect("build")
+    }
+
     #[test]
-    fn engine_serves_requests_through_rust_executor() {
-        let engine = Engine::start(2, BatchConfig::default(), || RustExecutor);
-        let mut rxs = vec![];
+    fn client_serves_requests_through_rust_executor() {
+        let client = rust_client(2);
+        let mut tickets = vec![];
         for i in 0..20 {
-            rxs.push(engine.submit(mk_request(16, 8, i)));
+            tickets.push(client.submit(mk_request(16, 8, i)).expect("submit"));
         }
-        for rx in rxs {
-            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        for t in tickets {
+            let resp = t.recv_timeout(Duration::from_secs(5)).unwrap();
             assert_eq!(resp.out.len(), 8);
             assert_eq!(resp.kept, 16);
             assert!(resp.out.iter().all(|x| x.is_finite()));
         }
-        let m = engine.metrics();
+        let m = client.metrics();
         assert_eq!(m.completed, 20);
         assert_eq!(m.errors, 0);
         assert!(m.batches >= 1);
-        engine.shutdown();
+        client.shutdown();
     }
 
     #[test]
     fn responses_match_direct_attention() {
-        let engine = Engine::start(1, BatchConfig::default(), || RustExecutor);
+        let client = rust_client(1);
         let req = mk_request(12, 6, 42);
         let want = attention_f32(&req.q, &req.k, &req.v, 12, 6, 6);
-        let resp = engine.submit_blocking(req).unwrap();
+        let resp = client.submit_blocking(req).unwrap();
         assert_eq!(resp.out, want);
-        engine.shutdown();
+        client.shutdown();
     }
 
     #[test]
     fn ids_are_unique_and_monotone() {
-        let engine = Engine::start(1, BatchConfig::default(), || RustExecutor);
-        let r1 = engine.submit_blocking(mk_request(4, 4, 1)).unwrap();
-        let r2 = engine.submit_blocking(mk_request(4, 4, 2)).unwrap();
+        let client = rust_client(1);
+        let r1 = client.submit_blocking(mk_request(4, 4, 1)).unwrap();
+        let r2 = client.submit_blocking(mk_request(4, 4, 2)).unwrap();
         assert!(r2.id > r1.id);
-        engine.shutdown();
+        client.shutdown();
     }
 
     #[test]
     fn valid_prefix_mask_respected() {
-        let engine = Engine::start(1, BatchConfig::default(), || RustExecutor);
+        let client = rust_client(1);
         let mut req = mk_request(8, 4, 3);
         for j in 4..8 {
             req.valid[j] = 0.0;
         }
-        let resp = engine.submit_blocking(req).unwrap();
+        let resp = client.submit_blocking(req).unwrap();
         assert_eq!(resp.kept, 4);
-        engine.shutdown();
+        client.shutdown();
     }
 
     #[test]
     fn valid_non_prefix_mask_gathers_live_rows() {
         // Regression: a non-prefix mask used to be silently truncated to its
         // popcount prefix. The executor must gather the actual live rows.
-        let engine = Engine::start(1, BatchConfig::default(), || RustExecutor);
+        let client = rust_client(1);
         let mut req = mk_request(8, 4, 31);
         for j in 0..8 {
             req.valid[j] = if j % 2 == 0 { 1.0 } else { 0.0 };
@@ -872,10 +946,10 @@ mod tests {
         let (live, k, v) = super::gather_valid(&req);
         assert_eq!(live, 4);
         let want = attention_f32(&req.q, &k, &v, 4, 4, 4);
-        let resp = engine.submit_blocking(req).unwrap();
+        let resp = client.submit_blocking(req).unwrap();
         assert_eq!(resp.kept, 4);
         assert_eq!(resp.out, want);
-        engine.shutdown();
+        client.shutdown();
     }
 
     #[test]
@@ -897,21 +971,44 @@ mod tests {
     }
 
     #[test]
-    fn malformed_request_is_counted_error_not_engine_death() {
-        let engine = Engine::start(1, BatchConfig::default(), || RustExecutor);
+    fn malformed_request_is_typed_error_at_submit_time() {
+        // Shape validation moved to the client (DESIGN.md §5): a truncated K
+        // never reaches a worker; the caller gets ShapeMismatch immediately
+        // and the engine keeps serving.
+        let client = rust_client(1);
         let mut bad = mk_request(8, 4, 13);
-        bad.k.truncate(3); // k shorter than seq*dim: must error, not panic
-        let rx = engine.submit(bad);
-        // Errored requests get no response; the channel must resolve
-        // (sender dropped), not hang.
-        assert!(rx.recv_timeout(Duration::from_secs(5)).is_err());
-        // The worker survived: subsequent requests are still served.
-        let ok = engine.submit_blocking(mk_request(8, 4, 14)).unwrap();
+        bad.k.truncate(3);
+        assert!(matches!(
+            client.submit(bad).unwrap_err(),
+            ServeError::ShapeMismatch { .. }
+        ));
+        let mut empty_q = mk_request(8, 4, 13);
+        empty_q.q.clear();
+        assert!(matches!(
+            client.submit(empty_q).unwrap_err(),
+            ServeError::ShapeMismatch { .. }
+        ));
+        // The engine is untouched: subsequent requests are still served.
+        let ok = client.submit_blocking(mk_request(8, 4, 14)).unwrap();
         assert_eq!(ok.out.len(), 4);
-        let m = engine.metrics();
-        assert_eq!(m.errors, 1);
+        let m = client.metrics();
+        assert_eq!(m.errors, 2, "client-side rejections are still counted");
         assert_eq!(m.completed, 1);
-        engine.shutdown();
+        client.shutdown();
+    }
+
+    #[test]
+    fn worker_side_executor_error_arrives_typed() {
+        // Defense in depth: if a malformed request reaches an executor (here
+        // directly, bypassing the client), the failure is a typed
+        // ShapeMismatch — not a panic, not a string.
+        let mut exec = RustExecutor;
+        let mut bad = mk_request(8, 4, 13);
+        bad.k.truncate(3);
+        assert!(matches!(
+            exec.execute(&bad).unwrap_err(),
+            ServeError::ShapeMismatch { .. }
+        ));
     }
 
     #[test]
@@ -944,25 +1041,42 @@ mod tests {
     }
 
     #[test]
-    fn shutdown_drains_cleanly() {
-        let engine = Engine::start(2, BatchConfig::default(), || RustExecutor);
-        let rx = engine.submit(mk_request(8, 4, 9));
-        engine.shutdown();
-        // The response may or may not have been delivered before shutdown —
-        // but the channel must be resolved either way (no hang).
-        let _ = rx.try_recv();
+    fn sessionless_executor_rejects_model_jobs_typed() {
+        let mut exec = RustExecutor;
+        let job = ModelJob::Close { session: 5 };
+        assert_eq!(
+            exec.execute_model(&job).unwrap_err(),
+            ServeError::ExecutorUnsupported { op: "model sessions" }
+        );
     }
 
-    /// Poll metrics until `pred` holds (or a 5 s deadline passes).
-    fn wait_metrics<F: Fn(&Metrics) -> bool>(engine: &Engine, pred: F) -> Metrics {
-        let t0 = Instant::now();
-        loop {
-            let m = engine.metrics();
-            if pred(&m) || t0.elapsed() > Duration::from_secs(5) {
-                return m;
-            }
-            std::thread::sleep(Duration::from_millis(2));
-        }
+    #[test]
+    fn shutdown_drains_cleanly_and_is_idempotent() {
+        let client = rust_client(2);
+        let ticket = client.submit(mk_request(8, 4, 9)).unwrap();
+        client.shutdown();
+        client.shutdown(); // idempotent
+        // The response may or may not have been delivered before shutdown —
+        // but the channel must be resolved either way (no hang).
+        let _ = ticket.recv_timeout(Duration::from_millis(100));
+        // Submissions after shutdown fail typed.
+        assert_eq!(
+            client.submit(mk_request(8, 4, 10)).unwrap_err(),
+            ServeError::Shutdown
+        );
+    }
+
+    #[test]
+    fn dropping_the_last_client_shuts_the_engine_down() {
+        let client = rust_client(1);
+        let clone = client.clone();
+        let resp = clone.submit_blocking(mk_request(8, 4, 12)).unwrap();
+        assert_eq!(resp.out.len(), 4);
+        drop(client);
+        // The clone still works: the core lives until the LAST holder drops.
+        let resp = clone.submit_blocking(mk_request(8, 4, 13)).unwrap();
+        assert_eq!(resp.out.len(), 4);
+        drop(clone); // EngineCore::drop joins every thread here.
     }
 
     #[test]
@@ -979,217 +1093,50 @@ mod tests {
     }
 
     #[test]
-    fn invalid_alpha_is_rejected_at_enqueue_as_counted_error() {
+    fn invalid_alpha_is_rejected_typed_at_submit() {
         // Regression: a NaN or negative alpha saturated to bucket 0 and
-        // batched with alpha == 0.0. Now it never reaches the batcher.
-        let engine = Engine::start(1, BatchConfig::default(), || RustExecutor);
+        // batched with alpha == 0.0. Now it never reaches the batcher — and
+        // the client learns WHY, synchronously.
+        let client = EngineBuilder::new().workers(1).build().expect("build");
         for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -0.5] {
             let mut req = mk_request(4, 4, 7);
             req.alpha = bad;
-            let rx = engine.submit(req);
-            assert!(rx.recv_timeout(Duration::from_secs(1)).is_err(), "alpha {bad}");
+            assert!(
+                matches!(client.submit(req).unwrap_err(), ServeError::InvalidAlpha { .. }),
+                "alpha {bad}"
+            );
         }
-        let (_sid, rx) = engine.open_session(f64::NAN, 1, 4, vec![0.0; 4], vec![0.0; 4]);
-        assert!(rx.recv_timeout(Duration::from_secs(1)).is_err());
-        let m = engine.metrics();
+        assert!(matches!(
+            client.open_model_session(f64::NAN, ModelShape::single(4)).unwrap_err(),
+            ServeError::InvalidAlpha { .. }
+        ));
+        let m = client.metrics();
         assert_eq!(m.errors, 5);
         assert_eq!(m.completed, 0);
         // Valid requests still flow.
-        let ok = engine.submit_blocking(mk_request(4, 4, 8)).unwrap();
+        let ok = client.submit_blocking(mk_request(4, 4, 8)).unwrap();
         assert_eq!(ok.out.len(), 4);
-        engine.shutdown();
+        client.shutdown();
     }
 
     #[test]
     fn dropped_response_receiver_is_counted_not_fatal() {
         // A client that walks away must show up in `dropped`, and the worker
         // must keep serving (it may hold other clients' session caches).
-        let cfg = BatchConfig { max_batch: 16, max_wait: Duration::from_millis(50) };
-        let engine = Engine::start(1, cfg, || RustExecutor);
-        drop(engine.submit(mk_request(8, 4, 21)));
+        let client = EngineBuilder::new()
+            .workers(1)
+            .batch(BatchConfig { max_batch: 16, max_wait: Duration::from_millis(50) })
+            .build_with(|| RustExecutor)
+            .expect("build");
+        drop(client.submit(mk_request(8, 4, 21)).unwrap());
         // The request executes after the 50 ms batching window, long after
         // its receiver is gone.
-        let m = wait_metrics(&engine, |m| m.completed == 1 && m.dropped == 1);
+        let m = wait_metrics(&client, |m| m.completed == 1 && m.dropped == 1);
         assert_eq!(m.completed, 1);
         assert_eq!(m.dropped, 1);
         assert_eq!(m.errors, 0);
-        let ok = engine.submit_blocking(mk_request(8, 4, 22)).unwrap();
+        let ok = client.submit_blocking(mk_request(8, 4, 22)).unwrap();
         assert_eq!(ok.out.len(), 4);
-        engine.shutdown();
-    }
-
-    #[test]
-    fn session_decode_is_bit_identical_to_one_shot_requests() {
-        // The degenerate 1-layer/1-head acceptance: a decode step through
-        // the scheduler-driven session path (cached quantization +
-        // incrementally appended planes, sticky pinning across 3 workers)
-        // must be bit-identical to a one-shot request carrying the same full
-        // context. (The full multi-layer variant lives in
-        // tests/scheduler_e2e.rs.)
-        let trace = DecodeTrace::synth(48, 4, 16, 0x5E55);
-        let engine = Engine::start(3, BatchConfig::default(), BesfExecutor::default);
-        let (sid, rx) = engine.open_session(
-            0.6,
-            trace.prompt_len,
-            trace.dim,
-            trace.prompt_k.clone(),
-            trace.prompt_v.clone(),
-        );
-        let ack = rx.recv_timeout(Duration::from_secs(5)).expect("open ack");
-        assert_eq!(ack.context_len, trace.prompt_len);
-        for (i, step) in trace.steps.iter().enumerate() {
-            let ack = engine
-                .session_append(sid, step.k_row.clone(), step.v_row.clone())
-                .recv_timeout(Duration::from_secs(5))
-                .expect("append ack");
-            assert_eq!(ack.context_len, trace.prompt_len + i + 1, "step {i} context length");
-            let dec = engine
-                .session_decode(sid, step.q.clone())
-                .recv_timeout(Duration::from_secs(5))
-                .expect("decode");
-            let (k_full, v_full, n) = trace.context_after(i + 1);
-            let one_shot = engine
-                .submit_blocking(AttnRequest {
-                    id: 0,
-                    kind: ArtifactKind::BitStopper,
-                    alpha: 0.6,
-                    seq: n,
-                    dim: trace.dim,
-                    q: step.q.clone(),
-                    k: k_full,
-                    v: v_full,
-                    valid: vec![1.0; n],
-                })
-                .unwrap();
-            assert_eq!(dec.out(), &one_shot.out[..], "step {i}: outputs must be bit-identical");
-            assert_eq!(dec.kept_total(), one_shot.kept, "step {i}: survivor counts");
-            assert!(dec.kept_total() >= 1);
-        }
-        engine.close_session(sid).recv_timeout(Duration::from_secs(5)).expect("close ack");
-        // If pinning were not sticky, steps would have landed on workers
-        // without the cache and shown up here as errors.
-        let m = engine.metrics();
-        assert_eq!(m.errors, 0);
-        assert!(m.model_steps >= 8, "append + decode steps went through the scheduler");
-        assert!(m.prefill_chunks >= 1);
-        assert!(m.ticks >= 1);
-        engine.shutdown();
-    }
-
-    #[test]
-    fn stale_session_ops_are_counted_errors_and_worker_survives() {
-        let engine = Engine::start(1, BatchConfig::default(), BesfExecutor::default);
-        let trace = DecodeTrace::synth(8, 1, 4, 0x5E66);
-        let (sid, rx) = engine.open_session(
-            0.6,
-            trace.prompt_len,
-            trace.dim,
-            trace.prompt_k.clone(),
-            trace.prompt_v.clone(),
-        );
-        rx.recv_timeout(Duration::from_secs(5)).expect("open ack");
-        engine.close_session(sid).recv_timeout(Duration::from_secs(5)).expect("close ack");
-        // Decode against the closed session: counted error, receiver
-        // resolves disconnected, worker survives.
-        let rx = engine.session_decode(sid, trace.steps[0].q.clone());
-        assert!(rx.recv_timeout(Duration::from_secs(5)).is_err());
-        // Ops on a never-opened session behave the same.
-        let rx = engine.session_append(999, vec![0.0; 4], vec![0.0; 4]);
-        assert!(rx.recv_timeout(Duration::from_secs(5)).is_err());
-        let m = wait_metrics(&engine, |m| m.errors >= 2);
-        assert_eq!(m.errors, 2);
-        assert_eq!(m.session_pins, 0, "close released the pin");
-        let ok = engine.submit_blocking(mk_request(8, 4, 31)).unwrap();
-        assert_eq!(ok.out.len(), 4);
-        engine.shutdown();
-    }
-
-    #[test]
-    fn session_ops_on_sessionless_executor_are_counted_errors() {
-        // The dense fallback executor has no model-session support: the
-        // default trait impl rejects, the worker counts, the scheduler
-        // releases the pin, nothing dies.
-        let engine = Engine::start(1, BatchConfig::default(), || RustExecutor);
-        let (_sid, rx) = engine.open_session(0.5, 1, 2, vec![0.0; 2], vec![0.0; 2]);
-        assert!(rx.recv_timeout(Duration::from_secs(5)).is_err());
-        let m = wait_metrics(&engine, |m| m.errors >= 1 && m.session_pins == 0);
-        assert_eq!(m.errors, 1);
-        assert_eq!(m.session_pins, 0, "failed open must not leak its pin");
-        let ok = engine.submit_blocking(mk_request(4, 2, 41)).unwrap();
-        assert_eq!(ok.out.len(), 2);
-        engine.shutdown();
-    }
-
-    #[test]
-    fn store_eviction_releases_router_pin_end_to_end() {
-        // A capacity-1 store evicts the LRU session when a second one opens;
-        // the eviction must travel back to the scheduler and release the
-        // evicted session's pin (otherwise Router::sessions leaks an entry
-        // per evicted session, forever).
-        let engine = Engine::start(1, BatchConfig::default(), || {
-            BesfExecutor::with_sessions(SessionStore::with_policy(1, None))
-        });
-        let trace = DecodeTrace::synth(8, 1, 4, 0x5E77);
-        let (sid_a, rx) = engine.open_session(
-            0.6,
-            trace.prompt_len,
-            trace.dim,
-            trace.prompt_k.clone(),
-            trace.prompt_v.clone(),
-        );
-        rx.recv_timeout(Duration::from_secs(5)).expect("open A");
-        let (sid_b, rx) = engine.open_session(
-            0.6,
-            trace.prompt_len,
-            trace.dim,
-            trace.prompt_k.clone(),
-            trace.prompt_v.clone(),
-        );
-        rx.recv_timeout(Duration::from_secs(5)).expect("open B evicts A");
-        let m = wait_metrics(&engine, |m| m.evictions == 1 && m.session_pins == 1);
-        assert_eq!(m.evictions, 1);
-        assert_eq!(m.session_pins, 1, "evicted session's pin released, B's kept");
-        // A is gone: ops on it are counted errors; B still decodes.
-        let rx = engine.session_decode(sid_a, trace.steps[0].q.clone());
-        assert!(rx.recv_timeout(Duration::from_secs(5)).is_err());
-        let dec = engine
-            .session_decode(sid_b, trace.steps[0].q.clone())
-            .recv_timeout(Duration::from_secs(5))
-            .expect("B decodes");
-        assert_eq!(dec.out().len(), 4);
-        engine.shutdown();
-    }
-
-    #[test]
-    fn chunked_prefill_spreads_over_ticks_and_acks_once() {
-        // A 32-row prompt with a 8-row chunk: the scheduler must admit it in
-        // 4 chunks (visible in metrics), the client gets exactly ONE ack
-        // with the full context length, and decode afterwards still works.
-        let engine = Engine::start_with(
-            2,
-            BatchConfig::default(),
-            SchedConfig { prefill_chunk: 8, max_inflight_per_worker: 2 },
-            BesfExecutor::default,
-        );
-        let trace = DecodeTrace::synth(32, 1, 8, 0x5E88);
-        let (sid, rx) = engine.open_session(
-            0.6,
-            trace.prompt_len,
-            trace.dim,
-            trace.prompt_k.clone(),
-            trace.prompt_v.clone(),
-        );
-        let ack = rx.recv_timeout(Duration::from_secs(5)).expect("prefill ack");
-        assert_eq!(ack.context_len, 32, "ack reports the whole admitted prompt");
-        assert!(rx.try_recv().is_err(), "exactly one ack per open");
-        let dec = engine
-            .session_decode(sid, trace.steps[0].q.clone())
-            .recv_timeout(Duration::from_secs(5))
-            .expect("decode after chunked prefill");
-        assert_eq!(dec.out().len(), 8);
-        let m = engine.metrics();
-        assert_eq!(m.prefill_chunks, 4);
-        assert_eq!(m.errors, 0);
-        engine.shutdown();
+        client.shutdown();
     }
 }

@@ -1,0 +1,126 @@
+//! PJRT-backed executor: one-shot attention through the AOT artifact
+//! runtime ([`crate::runtime::Runtime`]), with **typed** rejection of model
+//! jobs — the first concrete step on the ROADMAP "PJRT executor parity"
+//! item.
+//!
+//! The executor is always available (promoted here from an ad-hoc test
+//! helper): under the default offline build the stub runtime fails at first
+//! use with [`ServeError::Backend`], and with the `pjrt` feature it executes
+//! artifacts for real. Either way, `execute_model` rejects session traffic
+//! with [`ServeError::ExecutorUnsupported`] — a typed, client-visible
+//! contract (the scheduler releases the pin, the [`super::SessionHandle`]
+//! stream carries the error) instead of the old anonymous string failure.
+//! When PJRT model-session artifacts land, parity means replacing that
+//! default with a real `execute_model` and deleting the gated test below.
+
+use super::api::ServeError;
+use super::{AttnExecutor, AttnRequest};
+use crate::runtime::{default_artifact_dir, Runtime};
+use std::path::PathBuf;
+
+/// Executes one-shot attention requests against compiled AOT artifacts.
+/// Constructed **lazily inside its worker thread** (the PJRT client is not
+/// `Send`): the runtime loads on first use, so building the factory is free
+/// and artifact problems surface as per-request typed errors.
+pub struct PjrtExecutor {
+    artifact_dir: PathBuf,
+    rt: Option<Runtime>,
+}
+
+impl PjrtExecutor {
+    /// Executor over the repo-default artifact directory.
+    pub fn new() -> Self {
+        Self::with_artifact_dir(default_artifact_dir())
+    }
+
+    /// Executor over an explicit artifact directory.
+    pub fn with_artifact_dir(artifact_dir: PathBuf) -> Self {
+        Self { artifact_dir, rt: None }
+    }
+
+    fn runtime(&mut self) -> Result<&Runtime, ServeError> {
+        if self.rt.is_none() {
+            let mut rt =
+                Runtime::new().map_err(|e| ServeError::Backend { what: e.to_string() })?;
+            rt.load_dir(&self.artifact_dir)
+                .map_err(|e| ServeError::Backend { what: e.to_string() })?;
+            self.rt = Some(rt);
+        }
+        Ok(self.rt.as_ref().unwrap())
+    }
+}
+
+impl Default for PjrtExecutor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AttnExecutor for PjrtExecutor {
+    fn execute(&mut self, req: &AttnRequest) -> Result<(Vec<f32>, usize), ServeError> {
+        super::check_shapes(req)?;
+        let (kind, seq, dim, alpha) = (req.kind, req.seq, req.dim, req.alpha);
+        let rt = self.runtime()?;
+        let art = rt.lookup(kind, seq, dim, alpha).ok_or_else(|| ServeError::Backend {
+            what: format!("no artifact for {kind:?} {seq}x{dim}"),
+        })?;
+        let out = art
+            .run(&req.q, &req.k, &req.v, &req.valid)
+            .map_err(|e| ServeError::Backend { what: e.to_string() })?;
+        let kept = out.kept();
+        Ok((out.out, kept))
+    }
+
+    // `execute_model` deliberately NOT overridden: the trait default rejects
+    // model jobs with `ServeError::ExecutorUnsupported` — the typed parity
+    // gap this module documents (tested below for both backends).
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ModelJob;
+    use super::*;
+
+    fn model_job() -> ModelJob {
+        ModelJob::Close { session: 1 }
+    }
+
+    /// The parity contract under the default (stub) build: model jobs are
+    /// rejected typed, before the runtime is even constructed.
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_pjrt_executor_rejects_model_jobs_typed() {
+        let mut exec = PjrtExecutor::new();
+        assert_eq!(
+            exec.execute_model(&model_job()).unwrap_err(),
+            ServeError::ExecutorUnsupported { op: "model sessions" }
+        );
+        // One-shots fail typed too (no backend in this build) — never a
+        // panic, never a string the client can't match on.
+        let req = AttnRequest {
+            id: 0,
+            kind: crate::runtime::ArtifactKind::Dense,
+            alpha: 0.0,
+            seq: 2,
+            dim: 2,
+            q: vec![0.0; 2],
+            k: vec![0.0; 4],
+            v: vec![0.0; 4],
+            valid: vec![1.0; 2],
+        };
+        assert!(matches!(exec.execute(&req).unwrap_err(), ServeError::Backend { .. }));
+    }
+
+    /// The same contract with the real backend compiled in: even with a live
+    /// PJRT client, model jobs are rejected with the typed variant until
+    /// session artifacts exist (ROADMAP "PJRT executor parity").
+    #[cfg(feature = "pjrt")]
+    #[test]
+    fn pjrt_executor_rejects_model_jobs_typed() {
+        let mut exec = PjrtExecutor::new();
+        assert_eq!(
+            exec.execute_model(&model_job()).unwrap_err(),
+            ServeError::ExecutorUnsupported { op: "model sessions" }
+        );
+    }
+}

@@ -3,7 +3,7 @@
 //! session-sticky bindings for the KV-cache path — a model session's cached
 //! context lives inside exactly one executor worker, so every unit the
 //! continuous-batching scheduler dispatches for that session must land on
-//! the worker that holds it (DESIGN.md §7–8). The scheduler binds at
+//! the worker that holds it (DESIGN.md §8–9). The scheduler binds at
 //! admission, follows the pin for every chunk/step, and unbinds on close,
 //! failed open, or store eviction.
 

@@ -1,4 +1,4 @@
-//! Model-level **continuous-batching scheduler** (DESIGN.md §8).
+//! Model-level **continuous-batching scheduler** (DESIGN.md §9).
 //!
 //! PR 3's session path served one single-head op per dispatch; real
 //! autoregressive traffic needs one **model step** — every layer and head of
@@ -7,16 +7,27 @@
 //! each *tick* assembles one iteration batch from all runnable sessions
 //! (admitting new prefills chunk-wise alongside in-flight decodes), dispatches
 //! at most one unit of work per session to the session's pinned worker, and
-//! streams per-token responses back as they complete.
+//! streams typed [`SessionEvent`]s back over each session's own channel.
 //!
 //! The scheduler is a **pure state machine**: it owns no threads and no
 //! channels' receive sides. The coordinator's batcher thread drives it —
-//! `admit_open`/`enqueue_step`/`enqueue_close` on submissions, `on_feedback`
-//! on worker completions, then one [`Scheduler::plan_tick`] per loop
-//! iteration whose [`Dispatch`]es the thread sends to workers. That split
-//! keeps admission, chunked prefill, fairness, and backpressure
-//! deterministically unit-testable without threads (see tests below); the
-//! thread adds only I/O.
+//! `admit_open`/`enqueue_prefill`/`enqueue_step`/`enqueue_close` on
+//! submissions, `on_feedback` on worker completions, then one
+//! [`Scheduler::plan_tick`] per loop iteration whose [`Dispatch`]es the
+//! thread sends to workers. That split keeps admission, chunked prefill,
+//! fairness, and backpressure deterministically unit-testable without
+//! threads (see tests below); the thread adds only I/O.
+//!
+//! **Per-session ordering.** Each session holds ONE ordered queue of units
+//! (prefill chunks interleave exactly where the prefill was submitted
+//! relative to steps), and unit completions leave on the session's single
+//! [`SessionEvent`] sender in completion (= submission) order — the channel
+//! the client's [`super::SessionHandle`] reads. Every failure travels this
+//! path as a typed [`ServeError`] (DESIGN.md §5); eviction arrives as
+//! [`SessionEvent::Evicted`] instead of silently invalidating the id. (The
+//! eviction notice itself is sent from the scheduler thread and carries no
+//! ordering guarantee against a raced in-flight unit's worker-sent error —
+//! clients treat either as terminal.)
 //!
 //! **Fairness.** One round-robin ring over sessions, cursor-rotated every
 //! tick; each runnable session gets at most one unit (a prefill chunk, a
@@ -31,12 +42,12 @@
 //! surplus stays queued (counted in [`SchedStats::deferred`]) and is served
 //! on later ticks by ring order.
 
+use super::api::{EvictReason, ServeError, SessionEvent};
 use super::router::Router;
 use crate::engine::{ModelShape, ModelStepOutput};
-use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::Sender;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 /// A model-level prompt: per-lane (lh-major) K/V buffers for the prefill.
 #[derive(Debug, Clone)]
@@ -54,19 +65,35 @@ impl ModelPrompt {
         Self { shape: ModelShape::single(dim), prompt_len: seq, k: vec![k], v: vec![v] }
     }
 
-    fn validate(&self) -> Result<()> {
+    /// Shape validation, shared by the client (submit-time rejection,
+    /// DESIGN.md §5) and the scheduler (defense in depth).
+    pub fn validate(&self) -> Result<(), ServeError> {
         let lanes = self.shape.lanes();
-        anyhow::ensure!(self.shape.dim > 0, "model dim must be positive");
-        anyhow::ensure!(lanes > 0, "model must have at least one lane");
-        anyhow::ensure!(self.prompt_len >= 1, "prompt must contain at least one row");
-        anyhow::ensure!(
-            self.k.len() == lanes && self.v.len() == lanes,
-            "prompt must carry one K and one V buffer per lane ({lanes} lanes)"
-        );
+        let fail = |what: String| Err(ServeError::ShapeMismatch { what });
+        if self.shape.dim == 0 {
+            return fail("model dim must be positive".into());
+        }
+        if lanes == 0 {
+            return fail("model must have at least one lane".into());
+        }
+        if self.prompt_len == 0 {
+            return fail("prompt must contain at least one row".into());
+        }
+        if self.k.len() != lanes || self.v.len() != lanes {
+            return fail(format!(
+                "prompt must carry one K and one V buffer per lane ({lanes} lanes, got {}/{})",
+                self.k.len(),
+                self.v.len()
+            ));
+        }
         let want = self.prompt_len * self.shape.dim;
-        for (kl, vl) in self.k.iter().zip(&self.v) {
-            anyhow::ensure!(kl.len() == want, "lane k length != prompt_len*dim");
-            anyhow::ensure!(vl.len() == want, "lane v length != prompt_len*dim");
+        for (l, (kl, vl)) in self.k.iter().zip(&self.v).enumerate() {
+            if kl.len() != want {
+                return fail(format!("lane {l} k length {} != prompt_len*dim {want}", kl.len()));
+            }
+            if vl.len() != want {
+                return fail(format!("lane {l} v length {} != prompt_len*dim {want}", vl.len()));
+            }
         }
         Ok(())
     }
@@ -90,14 +117,12 @@ impl ModelStep {
         Self { k_rows, v_rows, qs }
     }
 
-    /// Append-only step (what the single-head `Engine::session_append`
-    /// wraps).
+    /// Append-only step (what the legacy `Engine::session_append` wraps).
     pub fn append_only(k_rows: Vec<Vec<f32>>, v_rows: Vec<Vec<f32>>) -> Self {
         Self { k_rows, v_rows, qs: Vec::new() }
     }
 
-    /// Decode-only step (what the single-head `Engine::session_decode`
-    /// wraps).
+    /// Decode-only step (what the legacy `Engine::session_decode` wraps).
     pub fn decode_only(qs: Vec<Vec<f32>>) -> Self {
         Self { k_rows: Vec::new(), v_rows: Vec::new(), qs }
     }
@@ -110,54 +135,57 @@ impl ModelStep {
         !self.qs.is_empty()
     }
 
-    fn validate(&self, shape: &ModelShape) -> Result<()> {
+    /// Validate against the session's opened shape — run by the client at
+    /// submit time ([`super::SessionHandle::step`]) so a dim mismatch or an
+    /// empty step surfaces as an immediate typed error, not a worker-side
+    /// failure one tick later.
+    pub fn validate(&self, shape: &ModelShape) -> Result<(), ServeError> {
         let lanes = shape.lanes();
-        anyhow::ensure!(
-            self.k_rows.len() == self.v_rows.len(),
-            "step must carry K and V rows for the same lanes"
-        );
+        let fail = |what: String| Err(ServeError::ShapeMismatch { what });
+        if !self.has_append() && !self.has_decode() {
+            return fail("step carries neither K/V rows nor queries".into());
+        }
+        if self.k_rows.len() != self.v_rows.len() {
+            return fail(format!(
+                "step must carry K and V rows for the same lanes ({} vs {})",
+                self.k_rows.len(),
+                self.v_rows.len()
+            ));
+        }
         if self.has_append() {
-            anyhow::ensure!(self.k_rows.len() == lanes, "step needs one K/V row per lane");
-            for (kr, vr) in self.k_rows.iter().zip(&self.v_rows) {
-                anyhow::ensure!(kr.len() == shape.dim, "k_row length != dim");
-                anyhow::ensure!(vr.len() == shape.dim, "v_row length != dim");
+            if self.k_rows.len() != lanes {
+                return fail(format!(
+                    "step needs one K/V row per lane ({lanes} lanes, got {})",
+                    self.k_rows.len()
+                ));
+            }
+            for (l, (kr, vr)) in self.k_rows.iter().zip(&self.v_rows).enumerate() {
+                if kr.len() != shape.dim || vr.len() != shape.dim {
+                    return fail(format!("lane {l} K/V row length != dim {}", shape.dim));
+                }
             }
         }
         if self.has_decode() {
-            anyhow::ensure!(self.qs.len() == lanes, "step needs one query per lane");
-            for q in &self.qs {
-                anyhow::ensure!(q.len() == shape.dim, "query length != dim");
+            if self.qs.len() != lanes {
+                return fail(format!(
+                    "step needs one query per lane ({lanes} lanes, got {})",
+                    self.qs.len()
+                ));
+            }
+            for (l, q) in self.qs.iter().enumerate() {
+                if q.is_empty() {
+                    return fail(format!("lane {l} query is empty"));
+                }
+                if q.len() != shape.dim {
+                    return fail(format!(
+                        "lane {l} query length {} != dim {}",
+                        q.len(),
+                        shape.dim
+                    ));
+                }
             }
         }
         Ok(())
-    }
-}
-
-/// Per-token streaming response for a model session op. For acks (prefill
-/// completion, append-only steps, close) `outs`/`kept` are empty and
-/// `context_len` reports the context length (0 after close).
-#[derive(Debug, Clone)]
-pub struct StepResponse {
-    pub session: u64,
-    /// Per-lane sparse attention outputs (lh-major; empty for acks).
-    pub outs: Vec<Vec<f32>>,
-    /// Per-lane survivor counts.
-    pub kept: Vec<usize>,
-    pub context_len: usize,
-    pub latency: Duration,
-}
-
-impl StepResponse {
-    /// First lane's output — the whole output for 1-layer/1-head sessions.
-    /// Empty for ack-type responses (open/append-only/close), which carry
-    /// no decode output.
-    pub fn out(&self) -> &[f32] {
-        self.outs.first().map_or(&[], |o| o.as_slice())
-    }
-
-    /// Survivors summed over lanes.
-    pub fn kept_total(&self) -> usize {
-        self.kept.iter().sum()
     }
 }
 
@@ -192,7 +220,8 @@ impl ModelJob {
     }
 }
 
-/// Worker → scheduler completion feedback.
+/// Worker → scheduler completion feedback. Failures ride through here as
+/// typed [`ServeError`]s, never strings.
 #[derive(Debug, Clone)]
 pub enum Feedback {
     /// A model job finished (successfully or as a counted error). `kept` /
@@ -200,12 +229,14 @@ pub enum Feedback {
     /// keep-rate metric (zero for acks and errors).
     Done { worker: usize, session: u64, kept: u64, context: u64 },
     /// An `Open` was rejected by the worker (bad chunk shapes, duplicate
-    /// id, sessionless executor): the pin must be released and queued work
-    /// for the session failed.
+    /// id, sessionless executor, store at capacity): the pin must be
+    /// released and queued work for the session failed. The typed error
+    /// itself travels on the session's event stream (the worker sends it
+    /// before this feedback), so it is not duplicated here.
     OpenFailed { worker: usize, session: u64 },
-    /// Sessions the worker's store evicted (idle-TTL / LRU, DESIGN.md §8):
-    /// their pins must be released.
-    Evicted { worker: usize, sessions: Vec<u64> },
+    /// Sessions the worker's store evicted (idle-TTL / LRU, DESIGN.md §9):
+    /// their pins must be released and each live handle told why.
+    Evicted { worker: usize, sessions: Vec<(u64, EvictReason)> },
     /// A one-shot shape batch of `n` requests finished. Carries no session
     /// state — it exists so the router's outstanding-work estimate decays
     /// for one-shot traffic exactly as it does for model jobs (otherwise
@@ -214,7 +245,7 @@ pub enum Feedback {
     BatchDone { worker: usize, n: usize },
 }
 
-/// Scheduler knobs.
+/// Scheduler knobs (validated by [`super::EngineBuilder::build`]).
 #[derive(Debug, Clone, Copy)]
 pub struct SchedConfig {
     /// Prompt rows admitted per prefill chunk (per tick, per session).
@@ -262,13 +293,15 @@ impl SchedStats {
     }
 }
 
-/// One planned dispatch: send `job` to `worker`; if `resp` is present the
-/// worker answers the client through it (prefill chunks before the last one
-/// carry no responder).
+/// One planned dispatch: send `job` to `worker`. The worker delivers its
+/// outcome — success or typed error — over `events`, the session's own
+/// stream; `ack` marks client-visible completions (the last prefill chunk,
+/// steps, closes) and carries their submission time for latency accounting.
 pub struct Dispatch {
     pub worker: usize,
     pub job: ModelJob,
-    pub resp: Option<(Sender<StepResponse>, Instant)>,
+    pub events: Sender<SessionEvent>,
+    pub ack: Option<Instant>,
 }
 
 struct Prefill {
@@ -276,31 +309,31 @@ struct Prefill {
     v: Vec<Vec<f32>>,
     prompt_len: usize,
     next_row: usize,
-    opened: bool,
-    resp: Sender<StepResponse>,
     submitted: Instant,
 }
 
-struct PendingStep {
-    step: ModelStep,
-    resp: Sender<StepResponse>,
-    submitted: Instant,
+/// One queued unit of session work, in strict submission order.
+enum Unit {
+    Prefill(Prefill),
+    Step { step: ModelStep, submitted: Instant },
 }
 
 struct Sess {
     worker: usize,
     shape: ModelShape,
     alpha: f64,
-    prefill: Option<Prefill>,
-    pending: VecDeque<PendingStep>,
-    close: Option<(Sender<StepResponse>, Instant)>,
+    /// The session's event stream (the client handle holds the receiver).
+    events: Sender<SessionEvent>,
+    /// Has the opening chunk been dispatched (per-lane scales fixed)?
+    opened: bool,
+    queue: VecDeque<Unit>,
+    close: Option<Instant>,
     inflight: bool,
 }
 
 impl Sess {
     fn runnable(&self) -> bool {
-        !self.inflight
-            && (self.prefill.is_some() || !self.pending.is_empty() || self.close.is_some())
+        !self.inflight && (!self.queue.is_empty() || self.close.is_some())
     }
 }
 
@@ -342,40 +375,39 @@ impl Scheduler {
         self.inflight.iter().any(|&n| n > 0) || self.sessions.values().any(|s| s.runnable())
     }
 
-    /// Admit a new session: validate the prompt, pin a worker via the router,
-    /// and queue the prompt for chunk-wise prefill. The client's receiver
-    /// resolves when the *whole* prompt has been admitted and applied.
+    /// Admit a new session: validate, pin a worker via the router, register
+    /// the session's event sender. The prompt arrives separately via
+    /// [`Scheduler::enqueue_prefill`] — a session with no queued work holds
+    /// only its pin.
     pub fn admit_open(
         &mut self,
         session: u64,
         alpha: f64,
-        prompt: ModelPrompt,
-        resp: Sender<StepResponse>,
-        now: Instant,
+        shape: ModelShape,
+        events: Sender<SessionEvent>,
         router: &mut Router,
-    ) -> Result<()> {
-        prompt.validate()?;
-        anyhow::ensure!(
-            !self.sessions.contains_key(&session),
-            "session {session} already admitted"
-        );
+    ) -> Result<(), ServeError> {
+        if !alpha.is_finite() || alpha < 0.0 {
+            return Err(ServeError::InvalidAlpha { alpha });
+        }
+        if shape.dim == 0 || shape.lanes() == 0 {
+            return Err(ServeError::ShapeMismatch {
+                what: "model shape needs a positive dim and at least one lane".into(),
+            });
+        }
+        if self.sessions.contains_key(&session) {
+            return Err(ServeError::DuplicateSession { session });
+        }
         let worker = router.bind_session(session);
         self.sessions.insert(
             session,
             Sess {
                 worker,
-                shape: prompt.shape,
+                shape,
                 alpha,
-                prefill: Some(Prefill {
-                    k: prompt.k,
-                    v: prompt.v,
-                    prompt_len: prompt.prompt_len,
-                    next_row: 0,
-                    opened: false,
-                    resp,
-                    submitted: now,
-                }),
-                pending: VecDeque::new(),
+                events,
+                opened: false,
+                queue: VecDeque::new(),
                 close: None,
                 inflight: false,
             },
@@ -384,45 +416,87 @@ impl Scheduler {
         Ok(())
     }
 
+    /// Queue a prompt for chunk-wise prefill, in submission order relative
+    /// to steps. The first chunk of the session's first prompt opens the
+    /// context (fixing per-lane scales); [`SessionEvent::PrefillAcked`] is
+    /// delivered when the whole prompt has been applied.
+    pub fn enqueue_prefill(
+        &mut self,
+        session: u64,
+        prompt: ModelPrompt,
+        now: Instant,
+    ) -> Result<(), ServeError> {
+        let s = self
+            .sessions
+            .get_mut(&session)
+            .ok_or(ServeError::UnknownSession { session })?;
+        if s.close.is_some() {
+            return Err(ServeError::SessionClosing { session });
+        }
+        prompt.validate()?;
+        if prompt.shape != s.shape {
+            return Err(ServeError::ShapeMismatch {
+                what: format!(
+                    "prompt shape {:?} != session shape {:?}",
+                    prompt.shape, s.shape
+                ),
+            });
+        }
+        s.queue.push_back(Unit::Prefill(Prefill {
+            k: prompt.k,
+            v: prompt.v,
+            prompt_len: prompt.prompt_len,
+            next_row: 0,
+            submitted: now,
+        }));
+        Ok(())
+    }
+
     /// Queue one model step for a session. Steps run strictly in submission
-    /// order, at most one per tick (iteration-level scheduling), after the
-    /// session's prefill completes.
+    /// order, at most one per tick (iteration-level scheduling), after any
+    /// earlier-queued prefill completes.
     pub fn enqueue_step(
         &mut self,
         session: u64,
         step: ModelStep,
-        resp: Sender<StepResponse>,
         now: Instant,
-    ) -> Result<()> {
+    ) -> Result<(), ServeError> {
         let s = self
             .sessions
             .get_mut(&session)
-            .ok_or_else(|| anyhow::anyhow!("unknown session {session}"))?;
-        anyhow::ensure!(s.close.is_none(), "session {session} is closing");
+            .ok_or(ServeError::UnknownSession { session })?;
+        if s.close.is_some() {
+            return Err(ServeError::SessionClosing { session });
+        }
+        // A step with no context ahead of it would reach a worker whose
+        // store never opened the session (the open rides the first prefill
+        // chunk) — reject it typed here instead (defense in depth behind
+        // the client-side check).
+        if !s.opened && !s.queue.iter().any(|u| matches!(u, Unit::Prefill(_))) {
+            return Err(ServeError::NotPrefilled { session });
+        }
         step.validate(&s.shape)?;
-        s.pending.push_back(PendingStep { step, resp, submitted: now });
+        s.queue.push_back(Unit::Step { step, submitted: now });
         Ok(())
     }
 
-    /// Request a close. Dispatches only after every queued step has run.
-    pub fn enqueue_close(
-        &mut self,
-        session: u64,
-        resp: Sender<StepResponse>,
-        now: Instant,
-    ) -> Result<()> {
+    /// Request a close. Dispatches only after every queued unit has run.
+    pub fn enqueue_close(&mut self, session: u64, now: Instant) -> Result<(), ServeError> {
         let s = self
             .sessions
             .get_mut(&session)
-            .ok_or_else(|| anyhow::anyhow!("unknown session {session}"))?;
-        anyhow::ensure!(s.close.is_none(), "session {session} already closing");
-        s.close = Some((resp, now));
+            .ok_or(ServeError::UnknownSession { session })?;
+        if s.close.is_some() {
+            return Err(ServeError::SessionClosing { session });
+        }
+        s.close = Some(now);
         Ok(())
     }
 
     /// Apply worker feedback. Returns the number of queued client ops that
-    /// had to be dropped (their senders are released so receivers resolve
-    /// disconnected); the caller counts them as errors.
+    /// had to be dropped; each one is failed observably with a typed
+    /// [`SessionEvent::Error`] on the session's stream (after the terminal
+    /// `Evicted` / worker-delivered error), and the caller counts them.
     pub fn on_feedback(&mut self, fb: Feedback, router: &mut Router) -> usize {
         match fb {
             Feedback::Done { worker, session, kept, context } => {
@@ -435,13 +509,25 @@ impl Scheduler {
                 0
             }
             Feedback::OpenFailed { worker, session } => {
+                // The worker already delivered the typed error on the
+                // session's stream; here we release the pin and fail the
+                // session's queued work.
                 self.complete_unit(worker);
                 router.unbind_session(session);
                 self.drop_session(session)
             }
             Feedback::Evicted { worker: _, sessions } => {
                 let mut dropped = 0;
-                for sid in sessions {
+                for (sid, reason) in sessions {
+                    // A session the scheduler no longer tracks was already
+                    // closed (a dispatched close raced the store's
+                    // eviction): from the client's perspective nothing was
+                    // evicted, so neither the metric nor an event fires.
+                    let Some(s) = self.sessions.get(&sid) else { continue };
+                    // Eviction is observable at last: the live handle's
+                    // stream gets the reason (ROADMAP "eviction-aware
+                    // clients").
+                    let _ = s.events.send(SessionEvent::Evicted { reason });
                     router.unbind_session(sid);
                     self.stats.evictions += 1;
                     dropped += self.drop_session(sid);
@@ -460,16 +546,19 @@ impl Scheduler {
     }
 
     /// Remove a session and fail its queued work; returns dropped-op count.
+    /// Every dropped unit gets its own typed error on the stream — a client
+    /// that queued work just before an eviction sees `Evicted` followed by
+    /// one `Error(UnknownSession)` per lost unit, never a silent gap.
+    /// Dropping the `Sess` then releases the scheduler's event-sender clone,
+    /// so once in-flight dispatches drain the handle's stream disconnects.
     fn drop_session(&mut self, session: u64) -> usize {
         let Some(s) = self.sessions.remove(&session) else { return 0 };
         self.order.retain(|&sid| sid != session);
-        // Dropping the senders resolves the clients' receivers disconnected.
-        let mut dropped = s.pending.len();
-        if s.prefill.is_some() {
-            dropped += 1;
-        }
-        if s.close.is_some() {
-            dropped += 1;
+        let dropped = s.queue.len() + usize::from(s.close.is_some());
+        for _ in 0..dropped {
+            let _ = s
+                .events
+                .send(SessionEvent::Error(ServeError::UnknownSession { session }));
         }
         dropped
     }
@@ -504,47 +593,66 @@ impl Scheduler {
                 continue;
             }
             let worker = s.worker;
-            // Per-session priority: finish prefill, then steps, then close.
-            let dispatch = if let Some(pf) = s.prefill.as_mut() {
-                let rows = self.cfg.prefill_chunk.min(pf.prompt_len - pf.next_row);
-                let (a, b) = (pf.next_row, pf.next_row + rows);
-                let dim = s.shape.dim;
-                let k: Vec<Vec<f32>> =
-                    pf.k.iter().map(|kl| kl[a * dim..b * dim].to_vec()).collect();
-                let v: Vec<Vec<f32>> =
-                    pf.v.iter().map(|vl| vl[a * dim..b * dim].to_vec()).collect();
-                let job = if pf.opened {
-                    ModelJob::Prefill { session: sid, k, v, rows }
-                } else {
-                    pf.opened = true;
-                    ModelJob::Open { session: sid, alpha: s.alpha, shape: s.shape, k, v, rows }
-                };
-                pf.next_row = b;
-                self.stats.prefill_chunks += 1;
-                let resp = if pf.next_row == pf.prompt_len {
-                    // Last chunk: the worker acks the client, and the prompt
-                    // buffers can be released.
-                    let pf = s.prefill.take().unwrap();
-                    Some((pf.resp, pf.submitted))
-                } else {
-                    None
-                };
-                Dispatch { worker, job, resp }
-            } else if let Some(p) = s.pending.pop_front() {
-                self.stats.steps += 1;
-                Dispatch {
-                    worker,
-                    job: ModelJob::Step { session: sid, step: p.step },
-                    resp: Some((p.resp, p.submitted)),
-                }
-            } else {
-                let (resp, submitted) = s.close.take().unwrap();
+            let events = s.events.clone();
+            // Per-session order: the unit queue front (prefills and steps in
+            // strict submission order), then the close.
+            let dispatch = if s.queue.is_empty() {
+                let submitted = s.close.take().unwrap();
                 self.stats.closes += 1;
                 closed.push(sid);
+                if !s.opened {
+                    // The session never reached a worker (opened but never
+                    // prefilled — e.g. a handle dropped right away): there
+                    // is no cache to free, so ack the close here instead of
+                    // dispatching a job the store would reject.
+                    let _ = s
+                        .events
+                        .send(SessionEvent::Closed { latency: submitted.elapsed() });
+                    continue;
+                }
                 Dispatch {
                     worker,
                     job: ModelJob::Close { session: sid },
-                    resp: Some((resp, submitted)),
+                    events,
+                    ack: Some(submitted),
+                }
+            } else if matches!(s.queue.front(), Some(Unit::Prefill(_))) {
+                let (job, ack) = {
+                    let Some(Unit::Prefill(pf)) = s.queue.front_mut() else { unreachable!() };
+                    let rows = self.cfg.prefill_chunk.min(pf.prompt_len - pf.next_row);
+                    let (a, b) = (pf.next_row, pf.next_row + rows);
+                    let dim = s.shape.dim;
+                    let k: Vec<Vec<f32>> =
+                        pf.k.iter().map(|kl| kl[a * dim..b * dim].to_vec()).collect();
+                    let v: Vec<Vec<f32>> =
+                        pf.v.iter().map(|vl| vl[a * dim..b * dim].to_vec()).collect();
+                    let job = if s.opened {
+                        ModelJob::Prefill { session: sid, k, v, rows }
+                    } else {
+                        ModelJob::Open { session: sid, alpha: s.alpha, shape: s.shape, k, v, rows }
+                    };
+                    pf.next_row = b;
+                    // Last chunk: the worker acks the client and the prompt
+                    // buffers can be released.
+                    let ack = (pf.next_row == pf.prompt_len).then_some(pf.submitted);
+                    (job, ack)
+                };
+                s.opened = true;
+                if ack.is_some() {
+                    s.queue.pop_front();
+                }
+                self.stats.prefill_chunks += 1;
+                Dispatch { worker, job, events, ack }
+            } else {
+                let Some(Unit::Step { step, submitted }) = s.queue.pop_front() else {
+                    unreachable!()
+                };
+                self.stats.steps += 1;
+                Dispatch {
+                    worker,
+                    job: ModelJob::Step { session: sid, step },
+                    events,
+                    ack: Some(submitted),
                 }
             };
             s.inflight = true;
@@ -552,8 +660,8 @@ impl Scheduler {
             out.push(dispatch);
         }
         for sid in closed {
-            // Unbind after routing the close itself (legacy contract); the
-            // state is gone, so a Done for it just decrements the worker.
+            // Unbind after routing the close itself; the state is gone, so a
+            // Done for it just decrements the worker.
             router.unbind_session(sid);
             self.sessions.remove(&sid);
             self.order.retain(|&x| x != sid);
@@ -605,14 +713,16 @@ mod tests {
         }
     }
 
+    /// Admit a session and queue its whole prompt; returns the event stream.
     fn open(
         sched: &mut Scheduler,
         router: &mut Router,
         sid: u64,
         p: ModelPrompt,
-    ) -> Receiver<StepResponse> {
+    ) -> Receiver<SessionEvent> {
         let (tx, rx) = channel();
-        sched.admit_open(sid, 0.6, p, tx, Instant::now(), router).unwrap();
+        sched.admit_open(sid, 0.6, p.shape, tx, router).unwrap();
+        sched.enqueue_prefill(sid, p, Instant::now()).unwrap();
         rx
     }
 
@@ -630,13 +740,13 @@ mod tests {
             match (&d.job, tick) {
                 (ModelJob::Open { rows, k, .. }, 0) => {
                     assert_eq!((*rows, k[0].len()), (4, 8));
-                    assert!(d.resp.is_none(), "not the last chunk");
+                    assert!(d.ack.is_none(), "not the last chunk");
                     rows_seen.push(*rows);
                 }
                 (ModelJob::Prefill { rows, .. }, _) => {
                     rows_seen.push(*rows);
                     // 10 rows in chunks of 4: last chunk has 2 rows + ack.
-                    assert_eq!(d.resp.is_some(), tick == 2);
+                    assert_eq!(d.ack.is_some(), tick == 2);
                 }
                 other => panic!("unexpected job at tick {tick}: {:?}", other.0),
             }
@@ -645,6 +755,33 @@ mod tests {
         assert_eq!(rows_seen, vec![4, 4, 2]);
         assert!(sched.plan_tick(&mut router).is_empty(), "prefill done, nothing queued");
         assert_eq!(sched.stats.prefill_chunks, 3);
+    }
+
+    #[test]
+    fn units_dispatch_in_strict_submission_order() {
+        // A step queued before a second prefill must run before it; the
+        // second prefill must NOT jump the queue (per-session ordering is
+        // the contract the client's event stream relies on).
+        let mut router = Router::new(1);
+        let mut sched =
+            Scheduler::new(SchedConfig { prefill_chunk: 8, max_inflight_per_worker: 1 }, 1);
+        let shape = ModelShape::single(2);
+        let _rx = open(&mut sched, &mut router, 1, prompt((1, 1), 2, 4));
+        sched.enqueue_step(1, step(&shape), Instant::now()).unwrap();
+        sched.enqueue_prefill(1, prompt((1, 1), 2, 4), Instant::now()).unwrap();
+        let mut kinds = Vec::new();
+        for _ in 0..3 {
+            let batch = sched.plan_tick(&mut router);
+            assert_eq!(batch.len(), 1);
+            kinds.push(match &batch[0].job {
+                ModelJob::Open { .. } => "open",
+                ModelJob::Prefill { .. } => "prefill",
+                ModelJob::Step { .. } => "step",
+                ModelJob::Close { .. } => "close",
+            });
+            ack_all(&mut sched, &mut router, &batch);
+        }
+        assert_eq!(kinds, vec!["open", "step", "prefill"]);
     }
 
     #[test]
@@ -658,10 +795,8 @@ mod tests {
             Scheduler::new(SchedConfig { prefill_chunk: 4, max_inflight_per_worker: 1 }, 1);
         let _p = open(&mut sched, &mut router, 10, prompt((1, 1), 2, 32));
         let shape = ModelShape::single(2);
-        let mut rxs = vec![];
         for sid in [11u64, 12] {
             let _ = open(&mut sched, &mut router, sid, prompt((1, 1), 2, 4));
-            // Let the 1-chunk prefill of the decode sessions complete first.
         }
         // Tick until the two decode sessions' prefills are done, then queue
         // their steps.
@@ -671,9 +806,7 @@ mod tests {
         }
         for sid in [11u64, 12] {
             for _ in 0..6 {
-                let (tx, rx) = channel();
-                sched.enqueue_step(sid, step(&shape), tx, Instant::now()).unwrap();
-                rxs.push(rx);
+                sched.enqueue_step(sid, step(&shape), Instant::now()).unwrap();
             }
         }
         // Drive ticks; record, per session, the gaps between dispatches.
@@ -736,13 +869,17 @@ mod tests {
         let _o = open(&mut sched, &mut router, 7, prompt((1, 1), 2, 4));
         let batch = sched.plan_tick(&mut router);
         ack_all(&mut sched, &mut router, &batch);
-        let (tx, _rx1) = channel();
-        sched.enqueue_step(7, step(&shape), tx, Instant::now()).unwrap();
-        let (tx, _rx2) = channel();
-        sched.enqueue_close(7, tx, Instant::now()).unwrap();
-        // Steps after a close are rejected.
-        let (tx, _rx3) = channel();
-        assert!(sched.enqueue_step(7, step(&shape), tx, Instant::now()).is_err());
+        sched.enqueue_step(7, step(&shape), Instant::now()).unwrap();
+        sched.enqueue_close(7, Instant::now()).unwrap();
+        // Work after a close is rejected with typed errors.
+        assert_eq!(
+            sched.enqueue_step(7, step(&shape), Instant::now()),
+            Err(ServeError::SessionClosing { session: 7 })
+        );
+        assert_eq!(
+            sched.enqueue_close(7, Instant::now()),
+            Err(ServeError::SessionClosing { session: 7 })
+        );
         assert_eq!(router.n_sessions(), 1);
         let batch = sched.plan_tick(&mut router);
         assert!(matches!(batch[0].job, ModelJob::Step { .. }), "step before close");
@@ -756,62 +893,115 @@ mod tests {
     }
 
     #[test]
+    fn closing_a_never_prefilled_session_acks_without_dispatch() {
+        // RAII handles may drop (→ close) before ever prefilling: no worker
+        // holds state for the session, so the close must resolve from the
+        // scheduler — Closed event, pin released, nothing dispatched.
+        let mut router = Router::new(1);
+        let mut sched = Scheduler::new(SchedConfig::default(), 1);
+        let (tx, rx) = channel();
+        sched.admit_open(5, 0.6, ModelShape::single(2), tx, &mut router).unwrap();
+        assert_eq!(router.n_sessions(), 1);
+        sched.enqueue_close(5, Instant::now()).unwrap();
+        let batch = sched.plan_tick(&mut router);
+        assert!(batch.is_empty(), "the worker never saw the session: nothing to dispatch");
+        assert!(matches!(rx.try_recv(), Ok(SessionEvent::Closed { .. })));
+        assert_eq!(sched.n_sessions(), 0);
+        assert_eq!(router.n_sessions(), 0, "pin released");
+        assert!(!sched.busy());
+        assert_eq!(sched.stats.closes, 1);
+    }
+
+    #[test]
     fn open_failure_and_eviction_release_pins_and_fail_queued_work() {
         let mut router = Router::new(1);
         let mut sched = Scheduler::new(SchedConfig::default(), 1);
         let shape = ModelShape::single(2);
         let _o = open(&mut sched, &mut router, 1, prompt((1, 1), 2, 4));
-        let (tx, step_rx) = channel();
-        sched.enqueue_step(1, step(&shape), tx, Instant::now()).unwrap();
+        sched.enqueue_step(1, step(&shape), Instant::now()).unwrap();
         let batch = sched.plan_tick(&mut router);
         assert!(matches!(batch[0].job, ModelJob::Open { .. }));
         assert_eq!(router.n_sessions(), 1);
         let dropped =
             sched.on_feedback(Feedback::OpenFailed { worker: 0, session: 1 }, &mut router);
         assert_eq!(dropped, 1, "the queued step is failed");
-        assert!(step_rx.recv().is_err(), "dropped sender resolves the receiver");
         assert_eq!(router.n_sessions(), 0, "failed open releases the pin");
         assert_eq!(sched.n_sessions(), 0);
 
-        // Eviction: same pin/strand cleanup, counted in stats.
-        let _o = open(&mut sched, &mut router, 2, prompt((1, 1), 2, 4));
+        // Eviction: same pin/strand cleanup, counted in stats, and the
+        // session's event stream carries the typed reason.
+        let rx = open(&mut sched, &mut router, 2, prompt((1, 1), 2, 4));
         let batch = sched.plan_tick(&mut router);
         ack_all(&mut sched, &mut router, &batch);
         assert_eq!(router.n_sessions(), 1);
-        let dropped = sched
-            .on_feedback(Feedback::Evicted { worker: 0, sessions: vec![2] }, &mut router);
+        let dropped = sched.on_feedback(
+            Feedback::Evicted { worker: 0, sessions: vec![(2, EvictReason::IdleTtl)] },
+            &mut router,
+        );
         assert_eq!(dropped, 0, "idle session had nothing queued");
+        assert!(
+            matches!(rx.try_recv(), Ok(SessionEvent::Evicted { reason: EvictReason::IdleTtl })),
+            "eviction must be delivered on the session's stream"
+        );
+        assert!(rx.recv().is_err(), "terminal event: the stream then disconnects");
         assert_eq!(router.n_sessions(), 0);
         assert_eq!(sched.stats.evictions, 1);
     }
 
     #[test]
-    fn admission_validates_prompt_and_step_shapes() {
+    fn admission_validates_shapes_and_duplicates_with_typed_errors() {
         let mut router = Router::new(1);
         let mut sched = Scheduler::new(SchedConfig::default(), 1);
         let (tx, _rx) = channel();
-        let mut bad = prompt((1, 2), 4, 4);
-        bad.k[1].truncate(3);
-        assert!(sched.admit_open(1, 0.6, bad, tx, Instant::now(), &mut router).is_err());
+        assert!(matches!(
+            sched.admit_open(1, 0.6, ModelShape::new(0, 1, 4), tx.clone(), &mut router),
+            Err(ServeError::ShapeMismatch { .. })
+        ));
+        assert!(matches!(
+            sched.admit_open(1, f64::NAN, ModelShape::new(1, 1, 4), tx.clone(), &mut router),
+            Err(ServeError::InvalidAlpha { .. })
+        ));
         assert_eq!(router.n_sessions(), 0, "rejected admission takes no pin");
 
-        let _o = open(&mut sched, &mut router, 2, prompt((1, 2), 4, 4));
         let shape2 = ModelShape::new(1, 2, 4);
-        let (tx, _rx) = channel();
-        assert!(
-            sched.enqueue_step(2, ModelStep::decode_only(vec![vec![0.0; 4]]), tx, Instant::now())
-                .is_err(),
-            "lane count mismatch"
+        sched.admit_open(2, 0.6, shape2, tx.clone(), &mut router).unwrap();
+        assert_eq!(
+            sched.admit_open(2, 0.6, shape2, tx.clone(), &mut router),
+            Err(ServeError::DuplicateSession { session: 2 })
         );
-        let (tx, _rx) = channel();
-        assert!(sched.enqueue_step(2, step(&shape2), tx, Instant::now()).is_ok());
-        let (tx, _rx) = channel();
-        assert!(
-            sched.enqueue_step(99, step(&shape2), tx, Instant::now()).is_err(),
-            "unknown session"
+        let mut bad = prompt((1, 2), 4, 4);
+        bad.k[1].truncate(3);
+        assert!(matches!(
+            sched.enqueue_prefill(2, bad, Instant::now()),
+            Err(ServeError::ShapeMismatch { .. })
+        ));
+        assert!(matches!(
+            sched.enqueue_prefill(2, prompt((2, 2), 4, 4), Instant::now()),
+            Err(ServeError::ShapeMismatch { .. })
+        ));
+        // No prompt has been accepted yet: steps have no context to run on.
+        assert_eq!(
+            sched.enqueue_step(2, step(&shape2), Instant::now()),
+            Err(ServeError::NotPrefilled { session: 2 })
         );
-        let (tx, _rx) = channel();
-        assert!(sched.enqueue_close(99, tx, Instant::now()).is_err());
+        sched.enqueue_prefill(2, prompt((1, 2), 4, 4), Instant::now()).unwrap();
+        assert!(matches!(
+            sched.enqueue_step(2, ModelStep::decode_only(vec![vec![0.0; 4]]), Instant::now()),
+            Err(ServeError::ShapeMismatch { .. })
+        ));
+        assert!(matches!(
+            sched.enqueue_step(2, ModelStep::default(), Instant::now()),
+            Err(ServeError::ShapeMismatch { .. })
+        ));
+        sched.enqueue_step(2, step(&shape2), Instant::now()).unwrap();
+        assert_eq!(
+            sched.enqueue_step(99, step(&shape2), Instant::now()),
+            Err(ServeError::UnknownSession { session: 99 })
+        );
+        assert_eq!(
+            sched.enqueue_close(99, Instant::now()),
+            Err(ServeError::UnknownSession { session: 99 })
+        );
     }
 
     #[test]

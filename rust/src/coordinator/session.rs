@@ -1,5 +1,5 @@
 //! Session KV-cache: per-session owned **model-level** attention contexts
-//! for the autoregressive decode path (DESIGN.md §7–8).
+//! for the autoregressive decode path (DESIGN.md §8–9).
 //!
 //! A one-shot request ships its whole K/V context, re-quantizes it, and
 //! re-decomposes K into 12 bit planes — O(seq) redundant work per generated
@@ -11,31 +11,37 @@
 //! [`SessionStore::step`]), and serves whole model decode steps against it.
 //!
 //! A store lives inside exactly one executor worker; the scheduler pins all
-//! of a session's work to that worker. Every failure here is a *counted
-//! per-request error* at the worker loop — a bad or stale session op must
-//! never panic the worker that holds other sessions' caches.
+//! of a session's work to that worker. Every failure here is a **typed**
+//! [`ServeError`] (DESIGN.md §5) — surfaced on the session's event stream by
+//! the worker loop, never a panic that could kill the worker holding other
+//! sessions' caches.
 //!
 //! **Eviction.** Each session pins O(lanes · seq · dim) of quantized K/V
-//! plus packed planes, so the store bounds itself three ways, all behind the
-//! hard cap `max_sessions`:
+//! plus packed planes, so the store bounds itself behind the hard cap
+//! `max_sessions`:
 //!
-//! 1. **Close** — the client frees its own session (the normal path).
+//! 1. **Close** — the client frees its own session (the normal path; RAII
+//!    [`super::SessionHandle`]s do this on drop).
 //! 2. **Idle TTL** — sessions untouched for longer than `idle_ttl` are
 //!    reclaimed when an open hits the cap (and by [`SessionStore::sweep_idle`],
 //!    which the owner may call opportunistically).
 //! 3. **LRU** — if an open still finds the store full after the TTL sweep,
 //!    the least-recently-used session is evicted, so abandoned-but-young
-//!    sessions cannot wedge the store shut.
+//!    sessions cannot wedge the store shut. A store built with
+//!    [`SessionStore::reject_at_capacity`] instead refuses the open with
+//!    [`ServeError::StoreAtCapacity`] — the policy for deployments where
+//!    killing a live session is worse than rejecting a new one.
 //!
-//! Evicted ids are returned to the caller, which must report them upstream
-//! so the scheduler releases the evicted sessions' router pins (tested here
-//! and end-to-end in `coordinator`).
+//! Evicted ids are returned to the caller **with their reason**
+//! ([`EvictReason`]); the worker loop reports them upstream so the scheduler
+//! releases their router pins and delivers [`super::SessionEvent::Evicted`]
+//! to each live handle (tested here and end-to-end in `tests/client_e2e.rs`).
 
+use super::api::{EvictReason, ServeError};
 use super::scheduler::ModelStep;
 use crate::algo::BesfScratch;
 use crate::config::LatsConfig;
 use crate::engine::{ModelContext, ModelShape, ModelStepOutput};
-use anyhow::Result;
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
@@ -55,10 +61,15 @@ struct Entry {
 /// planes, LATS config), with idle-TTL + LRU eviction behind a hard cap.
 pub struct SessionStore {
     sessions: HashMap<u64, Entry>,
-    /// Hard cap on live sessions; opens at the cap evict (TTL, then LRU).
+    /// Hard cap on live sessions; opens at the cap evict (TTL, then LRU) or
+    /// — with `lru_at_cap` off — are rejected.
     max_sessions: usize,
     /// `None` disables TTL-based eviction (LRU still applies at the cap).
     idle_ttl: Option<Duration>,
+    /// Evict the LRU session when an open still finds the store full after
+    /// the TTL sweep; `false` rejects the open with
+    /// [`ServeError::StoreAtCapacity`] instead.
+    lru_at_cap: bool,
 }
 
 impl Default for SessionStore {
@@ -80,7 +91,15 @@ impl SessionStore {
     /// Store with an explicit cap and TTL (`None` = no idle eviction).
     pub fn with_policy(max_sessions: usize, idle_ttl: Option<Duration>) -> Self {
         assert!(max_sessions >= 1);
-        Self { sessions: HashMap::new(), max_sessions, idle_ttl }
+        Self { sessions: HashMap::new(), max_sessions, idle_ttl, lru_at_cap: true }
+    }
+
+    /// Disable LRU eviction at the cap: an open that still finds the store
+    /// full after the TTL sweep fails with [`ServeError::StoreAtCapacity`]
+    /// instead of reclaiming a live session.
+    pub fn reject_at_capacity(mut self) -> Self {
+        self.lru_at_cap = false;
+        self
     }
 
     /// Number of live sessions.
@@ -115,8 +134,9 @@ impl SessionStore {
 
     /// Open a session over the first prefill chunk: quantize per-lane K/V
     /// (per-tensor PTQ calibrated on this chunk), decompose K into planes,
-    /// fix the LATS config. Returns the ids evicted to make room; the caller
-    /// must report them upstream so their router pins are released.
+    /// fix the LATS config. Returns the `(id, reason)` pairs evicted to make
+    /// room; the caller must report them upstream so their router pins are
+    /// released and their handles told.
     #[allow(clippy::too_many_arguments)] // mirrors the ModelJob::Open payload
     pub fn open(
         &mut self,
@@ -127,15 +147,25 @@ impl SessionStore {
         v: &[Vec<f32>],
         rows: usize,
         now: Instant,
-    ) -> Result<Vec<u64>> {
-        anyhow::ensure!(!self.sessions.contains_key(&session), "session {session} already open");
+    ) -> Result<Vec<(u64, EvictReason)>, ServeError> {
+        if self.sessions.contains_key(&session) {
+            return Err(ServeError::DuplicateSession { session });
+        }
         // Validate the chunk BEFORE evicting anyone for it.
-        let ctx = ModelContext::open(shape, cfg, k, v, rows)?;
-        let mut evicted = Vec::new();
+        let ctx = ModelContext::open(shape, cfg, k, v, rows)
+            .map_err(|e| ServeError::ShapeMismatch { what: e.to_string() })?;
+        let mut evicted: Vec<(u64, EvictReason)> = Vec::new();
         if self.sessions.len() >= self.max_sessions {
-            evicted = self.sweep_idle(now);
+            evicted = self
+                .sweep_idle(now)
+                .into_iter()
+                .map(|sid| (sid, EvictReason::IdleTtl))
+                .collect();
         }
         if self.sessions.len() >= self.max_sessions {
+            if !self.lru_at_cap {
+                return Err(ServeError::StoreAtCapacity { capacity: self.max_sessions });
+            }
             // Still full: reclaim the least-recently-used session.
             if let Some(&lru) = self
                 .sessions
@@ -144,7 +174,7 @@ impl SessionStore {
                 .map(|(sid, _)| sid)
             {
                 self.sessions.remove(&lru);
-                evicted.push(lru);
+                evicted.push((lru, EvictReason::Capacity));
             }
         }
         self.sessions.insert(session, Entry { ctx, last_used: now });
@@ -160,13 +190,15 @@ impl SessionStore {
         v: &[Vec<f32>],
         rows: usize,
         now: Instant,
-    ) -> Result<usize> {
+    ) -> Result<usize, ServeError> {
         let e = self
             .sessions
             .get_mut(&session)
-            .ok_or_else(|| anyhow::anyhow!("unknown session {session}"))?;
+            .ok_or(ServeError::UnknownSession { session })?;
         e.last_used = now;
-        e.ctx.append_rows(k, v, rows)
+        e.ctx
+            .append_rows(k, v, rows)
+            .map_err(|e| ServeError::ShapeMismatch { what: e.to_string() })
     }
 
     /// One model step: append the step's K/V rows (if any), then decode its
@@ -178,17 +210,18 @@ impl SessionStore {
         step: &ModelStep,
         scratch: &mut BesfScratch,
         now: Instant,
-    ) -> Result<ModelStepOutput> {
+    ) -> Result<ModelStepOutput, ServeError> {
         let e = self
             .sessions
             .get_mut(&session)
-            .ok_or_else(|| anyhow::anyhow!("unknown session {session}"))?;
+            .ok_or(ServeError::UnknownSession { session })?;
         e.last_used = now;
+        let shape_err = |e: anyhow::Error| ServeError::ShapeMismatch { what: e.to_string() };
         if step.has_append() {
-            e.ctx.append_token(&step.k_rows, &step.v_rows)?;
+            e.ctx.append_token(&step.k_rows, &step.v_rows).map_err(shape_err)?;
         }
         if step.has_decode() {
-            e.ctx.decode_step(&step.qs, scratch)
+            e.ctx.decode_step(&step.qs, scratch).map_err(shape_err)
         } else {
             Ok(ModelStepOutput {
                 outs: Vec::new(),
@@ -199,11 +232,11 @@ impl SessionStore {
     }
 
     /// Close a session, freeing its quantized K/V and packed planes.
-    pub fn close(&mut self, session: u64) -> Result<()> {
+    pub fn close(&mut self, session: u64) -> Result<(), ServeError> {
         self.sessions
             .remove(&session)
             .map(|_| ())
-            .ok_or_else(|| anyhow::anyhow!("unknown session {session}"))
+            .ok_or(ServeError::UnknownSession { session })
     }
 }
 
@@ -217,7 +250,7 @@ mod tests {
         sid: u64,
         mt: &ModelDecodeTrace,
         now: Instant,
-    ) -> Vec<u64> {
+    ) -> Vec<(u64, EvictReason)> {
         let (pk, pv) = mt.prompt();
         store
             .open(sid, LatsConfig::default(), mt.shape(), &pk, &pv, mt.prompt_len, now)
@@ -263,7 +296,7 @@ mod tests {
     }
 
     #[test]
-    fn stale_ops_are_errors_not_panics() {
+    fn stale_ops_are_typed_errors_not_panics() {
         let mt = trace();
         let mut store = SessionStore::new();
         let t0 = Instant::now();
@@ -274,11 +307,22 @@ mod tests {
 
         let (qs, ks, vs) = mt.step_rows(0);
         let mut scratch = BesfScratch::new();
-        assert!(store.step(1, &ModelStep::token(ks, vs, qs), &mut scratch, t0).is_err());
-        assert!(store.close(1).is_err(), "double close is an error");
-        assert!(
-            store.step(77, &ModelStep::default(), &mut scratch, t0).is_err(),
-            "unknown session"
+        assert_eq!(
+            store
+                .step(1, &ModelStep::token(ks, vs, qs), &mut scratch, t0)
+                .unwrap_err(),
+            ServeError::UnknownSession { session: 1 }
+        );
+        assert_eq!(
+            store.close(1).unwrap_err(),
+            ServeError::UnknownSession { session: 1 },
+            "double close is a typed error"
+        );
+        assert_eq!(
+            store
+                .step(77, &ModelStep::default(), &mut scratch, t0)
+                .unwrap_err(),
+            ServeError::UnknownSession { session: 77 }
         );
     }
 
@@ -290,10 +334,25 @@ mod tests {
         let k = vec![vec![0.5f32; 8]];
         let t0 = Instant::now();
         assert!(store.open(1, cfg, shape, &k, &k, 2, t0).is_ok());
-        assert!(store.open(1, cfg, shape, &k, &k, 2, t0).is_err(), "duplicate id");
+        assert_eq!(
+            store.open(1, cfg, shape, &k, &k, 2, t0).unwrap_err(),
+            ServeError::DuplicateSession { session: 1 }
+        );
         let short = vec![vec![0.5f32; 7]];
-        assert!(store.open(2, cfg, shape, &short, &k, 2, t0).is_err(), "bad k length");
-        assert!(store.open(3, cfg, shape, &[], &[], 2, t0).is_err(), "missing lanes");
+        assert!(
+            matches!(
+                store.open(2, cfg, shape, &short, &k, 2, t0),
+                Err(ServeError::ShapeMismatch { .. })
+            ),
+            "bad k length"
+        );
+        assert!(
+            matches!(
+                store.open(3, cfg, shape, &[], &[], 2, t0),
+                Err(ServeError::ShapeMismatch { .. })
+            ),
+            "missing lanes"
+        );
         assert_eq!(store.n_open(), 1, "failed opens must not insert or evict");
     }
 
@@ -316,7 +375,11 @@ mod tests {
         let evicted = store
             .open(3, LatsConfig::default(), mt.shape(), &pk, &pv, mt.prompt_len, t2)
             .unwrap();
-        assert_eq!(evicted, vec![1], "only the TTL-expired session goes");
+        assert_eq!(
+            evicted,
+            vec![(1, EvictReason::IdleTtl)],
+            "only the TTL-expired session goes, tagged with its reason"
+        );
         assert!(store.contains(2) && store.contains(3));
         assert_eq!(store.n_open(), 2);
     }
@@ -346,8 +409,44 @@ mod tests {
                 t0 + Duration::from_secs(3),
             )
             .unwrap();
-        assert_eq!(evicted, vec![2], "least-recently-USED goes, not last-opened");
+        assert_eq!(
+            evicted,
+            vec![(2, EvictReason::Capacity)],
+            "least-recently-USED goes, not last-opened"
+        );
         assert!(store.contains(1) && store.contains(3));
+    }
+
+    #[test]
+    fn reject_at_capacity_refuses_instead_of_evicting() {
+        let mut store = SessionStore::with_policy(1, None).reject_at_capacity();
+        let mt = trace();
+        let t0 = Instant::now();
+        open_trace(&mut store, 1, &mt, t0);
+        let (pk, pv) = mt.prompt();
+        let err = store
+            .open(2, LatsConfig::default(), mt.shape(), &pk, &pv, mt.prompt_len, t0)
+            .unwrap_err();
+        assert_eq!(err, ServeError::StoreAtCapacity { capacity: 1 });
+        assert!(store.contains(1), "the live session survives");
+        assert_eq!(store.n_open(), 1);
+        // TTL sweeps still apply before rejecting.
+        let mut ttl_store =
+            SessionStore::with_policy(1, Some(Duration::from_secs(5))).reject_at_capacity();
+        open_trace(&mut ttl_store, 1, &mt, t0);
+        let evicted = ttl_store
+            .open(
+                2,
+                LatsConfig::default(),
+                mt.shape(),
+                &pk,
+                &pv,
+                mt.prompt_len,
+                t0 + Duration::from_secs(6),
+            )
+            .unwrap();
+        assert_eq!(evicted, vec![(1, EvictReason::IdleTtl)]);
+        assert!(ttl_store.contains(2));
     }
 
     #[test]
@@ -358,7 +457,7 @@ mod tests {
         open_trace(&mut store, 1, &mt, t0);
         assert!(store.sweep_idle(t0 + Duration::from_secs(1_000_000)).is_empty());
         let evicted = open_trace(&mut store, 2, &mt, t0 + Duration::from_secs(1));
-        assert_eq!(evicted, vec![1]);
+        assert_eq!(evicted, vec![(1, EvictReason::Capacity)]);
         assert_eq!(store.n_open(), 1);
     }
 

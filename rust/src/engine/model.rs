@@ -1,4 +1,4 @@
-//! **ModelContext** — the model-level unit of serving state (DESIGN.md §8).
+//! **ModelContext** — the model-level unit of serving state (DESIGN.md §8–9).
 //!
 //! A [`super::HeadContext`] caches one attention head's quantized K/V and
 //! packed bit planes. Real autoregressive traffic touches *every* layer and

@@ -1,5 +1,5 @@
 //! Regeneration of every table and figure in the paper's evaluation
-//! (§V, Figs. 3/10/11/12/13/14, Table I) — see DESIGN.md §5 for the
+//! (§V, Figs. 3/10/11/12/13/14, Table I) — see DESIGN.md §6 for the
 //! per-experiment index and the substitutions that apply.
 //!
 //! Each `figN_*` function runs the relevant workloads through the simulator

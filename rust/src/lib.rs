@@ -33,6 +33,6 @@ pub mod runtime;
 pub mod coordinator;
 pub mod figures;
 pub mod report;
-// Module inventory and layering: DESIGN.md §6. The `engine` module is the
+// Module inventory and layering: DESIGN.md §7. The `engine` module is the
 // shared multi-head BESF/LATS layer consumed by `sim`, `figures`,
 // `baselines` tests and the `coordinator` (DESIGN.md §3).

@@ -3,6 +3,7 @@
 //! ```text
 //! bitstopper figures [--fig <id>] [--all] [--out <dir>]   regenerate paper figures
 //! bitstopper simulate [--seq N] [--dim N] [--queries N] [--alpha A] [--config F]
+//! bitstopper serve [--sessions N] [--steps N] [--workers N] [--alpha A]
 //! bitstopper ppl [--alpha A]                               tiny-LM perplexity eval
 //! bitstopper artifacts                                     list loaded AOT artifacts
 //! bitstopper selftest                                      config + runtime sanity
@@ -10,10 +11,12 @@
 //! (Hand-rolled parsing: the build environment has no clap.)
 
 use bitstopper::config::{parse_toml, SimConfig};
+use bitstopper::coordinator::{drive_decode, EngineBuilder};
 use bitstopper::figures;
 use bitstopper::runtime::{default_artifact_dir, Runtime};
 use bitstopper::sim::simulate_attention;
-use bitstopper::workload::QuantAttn;
+use bitstopper::workload::{ModelDecodeTrace, QuantAttn};
+use std::time::Duration;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -72,6 +75,44 @@ fn main() {
                 100.0 * r.energy.dram_fraction()
             );
             println!("QK util   : {:.1}%", 100.0 * r.utilization);
+            Ok(())
+        })(),
+        "serve" => (|| -> anyhow::Result<()> {
+            // Continuous-batching demo on the typed client surface
+            // (DESIGN.md §5): N concurrent model sessions through
+            // EngineBuilder → Client → SessionHandle.
+            let sessions: usize = get("--sessions").and_then(|s| s.parse().ok()).unwrap_or(4);
+            let steps: usize = get("--steps").and_then(|s| s.parse().ok()).unwrap_or(16);
+            let workers: usize = get("--workers").and_then(|s| s.parse().ok()).unwrap_or(2);
+            let alpha: f64 = get("--alpha").and_then(|s| s.parse().ok()).unwrap_or(0.6);
+            let (layers, heads, dim, prompt_len) = (2usize, 4usize, 64usize, 256usize);
+            let client = EngineBuilder::new()
+                .workers(workers)
+                .prefill_chunk(128)
+                .build()
+                .map_err(|e| anyhow::anyhow!("engine construction: {e}"))?;
+            let traces: Vec<ModelDecodeTrace> = (0..sessions)
+                .map(|s| {
+                    ModelDecodeTrace::synth(layers, heads, prompt_len, steps, dim, 77 + s as u64)
+                })
+                .collect();
+            let report = drive_decode(&client, alpha, &traces, Duration::from_secs(120))
+                .map_err(|e| anyhow::anyhow!("serving demo: {e}"))?;
+            let m = client.metrics();
+            client.shutdown();
+            println!("sessions  : {sessions} x {layers}x{heads} lanes, {prompt_len}-token prompts");
+            println!("prefill   : {:.1} ms total", report.prefill.as_secs_f64() * 1e3);
+            println!(
+                "decode    : {:.3} ms/token ({:.0} tok/s)",
+                report.ms_per_token(),
+                report.tokens_per_sec()
+            );
+            println!("keep rate : {:.1}%", 100.0 * report.keep_rate());
+            println!(
+                "scheduler : {} ticks, {} chunks, {} steps, {} deferred, {} errors",
+                m.ticks, m.prefill_chunks, m.model_steps, m.deferred, m.errors
+            );
+            anyhow::ensure!(m.errors == 0, "serving demo completed with errors");
             Ok(())
         })(),
         "ppl" => {
@@ -134,9 +175,10 @@ fn main() {
         })(),
         _ => {
             eprintln!(
-                "usage: bitstopper <figures|simulate|ppl|artifacts|selftest> [options]\n\
+                "usage: bitstopper <figures|simulate|serve|ppl|artifacts|selftest> [options]\n\
                  \x20 figures  [--fig 3a|3b|10|11|12|13a|13b|14|table1|headline] [--all] [--out DIR]\n\
                  \x20 simulate [--seq N] [--dim N] [--queries N] [--alpha A] [--config FILE]\n\
+                 \x20 serve    [--sessions N] [--steps N] [--workers N] [--alpha A]\n\
                  \x20 ppl      [--alpha A]\n\
                  \x20 artifacts | selftest"
             );

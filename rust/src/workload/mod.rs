@@ -83,7 +83,7 @@ pub struct DecodeStep {
 
 /// An autoregressive decode workload: a prompt context (the prefill) plus a
 /// stream of per-token [`DecodeStep`]s — the shape the session KV-cache
-/// serves (DESIGN.md §7). Float-domain, single head; quantization happens at
+/// serves (DESIGN.md §8). Float-domain, single head; quantization happens at
 /// session open / request time.
 #[derive(Debug, Clone)]
 pub struct DecodeTrace {
@@ -146,7 +146,7 @@ impl DecodeTrace {
 /// An autoregressive decode workload for a whole model stack: one
 /// single-head [`DecodeTrace`] per (layer, head) lane, all sharing
 /// `(prompt_len, steps, dim)` — the shape the model-level scheduler serves
-/// (DESIGN.md §8). Lanes are lh-major (`lane = layer * n_heads + head`),
+/// (DESIGN.md §8–9). Lanes are lh-major (`lane = layer * n_heads + head`),
 /// matching [`crate::engine::ModelContext`]; each lane carries its own
 /// queries and appended K/V rows, as in a real decoder stack where every
 /// layer/head sees different activations.

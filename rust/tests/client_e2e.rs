@@ -1,0 +1,195 @@
+//! Typed client-surface acceptance (DESIGN.md §5): eviction observability,
+//! RAII session handles, and the reject-at-capacity policy, end to end
+//! through a real engine.
+//!
+//! The headline contract (the ROADMAP "eviction-aware clients" item): when a
+//! worker store reclaims a live session, the client's `SessionHandle` stream
+//! delivers `SessionEvent::Evicted { reason }` — TTL and LRU each with their
+//! own reason — the next `step` on the handle fails typed with
+//! `ServeError::UnknownSession`, and dropping a handle closes its session
+//! and releases its router pin.
+
+use bitstopper::coordinator::{
+    Client, EngineBuilder, EvictReason, Metrics, ModelPrompt, ModelStep, ServeError, SessionEvent,
+    SessionHandle,
+};
+use bitstopper::workload::ModelDecodeTrace;
+use std::time::{Duration, Instant};
+
+const ALPHA: f64 = 0.6;
+const TIMEOUT: Duration = Duration::from_secs(10);
+
+fn wait_metrics<F: Fn(&Metrics) -> bool>(client: &Client, pred: F) -> Metrics {
+    let t0 = Instant::now();
+    loop {
+        let m = client.metrics();
+        if pred(&m) || t0.elapsed() > Duration::from_secs(5) {
+            return m;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+fn trace(seed: u64) -> ModelDecodeTrace {
+    ModelDecodeTrace::synth(1, 1, 8, 2, 4, seed)
+}
+
+fn open_trace(client: &Client, mt: &ModelDecodeTrace) -> SessionHandle {
+    let mut h = client.open_model_session(ALPHA, mt.shape()).expect("open session");
+    let (pk, pv) = mt.prompt();
+    h.prefill(ModelPrompt { shape: mt.shape(), prompt_len: mt.prompt_len, k: pk, v: pv })
+        .expect("queue prefill");
+    assert_eq!(h.wait_prefilled(TIMEOUT).expect("prefill ack"), mt.prompt_len);
+    h
+}
+
+#[test]
+fn lru_eviction_is_observed_on_the_live_handles_stream() {
+    // Capacity-1 store, no TTL: opening B evicts A by LRU. A's handle must
+    // see Evicted { Capacity } — not silence — and its next step must fail
+    // typed with UnknownSession, client-side, before touching the engine.
+    let client = EngineBuilder::new()
+        .workers(1)
+        .session_capacity(1)
+        .idle_ttl(None)
+        .build()
+        .expect("build");
+    let mt = trace(0xE101);
+    let mut a = open_trace(&client, &mt);
+    let mut b = open_trace(&client, &mt);
+    match a.recv_event_timeout(TIMEOUT).expect("eviction event") {
+        SessionEvent::Evicted { reason } => assert_eq!(reason, EvictReason::Capacity),
+        other => panic!("expected Evicted, got {other:?}"),
+    }
+    assert!(!a.is_live());
+    let (qs, _, _) = mt.step_rows(0);
+    assert_eq!(
+        a.step(ModelStep::decode_only(qs.clone())).unwrap_err(),
+        ServeError::UnknownSession { session: a.id() },
+        "the next step after an observed eviction fails typed"
+    );
+    // B is untouched and still decodes.
+    let (qs, ks, vs) = mt.step_rows(0);
+    b.step(ModelStep::token(ks, vs, qs)).expect("B steps");
+    let sr = b.wait_step(TIMEOUT).expect("B decodes");
+    assert_eq!(sr.out().len(), mt.dim);
+    let m = wait_metrics(&client, |m| m.evictions == 1 && m.session_pins == 1);
+    assert_eq!(m.evictions, 1);
+    assert_eq!(m.session_pins, 1, "evicted session's pin released, B's kept");
+    client.shutdown();
+}
+
+#[test]
+fn ttl_eviction_reports_its_own_reason() {
+    // Capacity-1 store with a short TTL: by the time B opens, A has idled
+    // past the TTL, so the sweep (not LRU) reclaims it — and the reason
+    // says so.
+    let client = EngineBuilder::new()
+        .workers(1)
+        .session_capacity(1)
+        .idle_ttl(Some(Duration::from_millis(50)))
+        .build()
+        .expect("build");
+    let mt = trace(0xE102);
+    let mut a = open_trace(&client, &mt);
+    std::thread::sleep(Duration::from_millis(120));
+    let _b = open_trace(&client, &mt);
+    match a.recv_event_timeout(TIMEOUT).expect("eviction event") {
+        SessionEvent::Evicted { reason } => assert_eq!(reason, EvictReason::IdleTtl),
+        other => panic!("expected Evicted, got {other:?}"),
+    }
+    client.shutdown();
+}
+
+#[test]
+fn unobserved_eviction_turns_the_in_flight_step_into_a_typed_error() {
+    // The client races: it queues a step on A WITHOUT having read its event
+    // stream, after B's open already evicted A engine-side. The stream must
+    // deliver both the Evicted notice and the step's typed UnknownSession
+    // error — never a silent hang. (Their relative order is not guaranteed:
+    // a step dispatched before the eviction feedback drains fails on the
+    // worker thread, racing the scheduler thread's Evicted send.)
+    let client = EngineBuilder::new()
+        .workers(1)
+        .session_capacity(1)
+        .idle_ttl(None)
+        .build()
+        .expect("build");
+    let mt = trace(0xE103);
+    let mut a = open_trace(&client, &mt);
+    let _b = open_trace(&client, &mt);
+    // A's handle has not observed the eviction yet: the submit is accepted
+    // client-side and fails engine-side.
+    let (qs, _, _) = mt.step_rows(0);
+    a.step(ModelStep::decode_only(qs)).expect("submit races the eviction");
+    let mut evicted = false;
+    let mut step_error = false;
+    for _ in 0..2 {
+        match a.recv_event_timeout(TIMEOUT).expect("event") {
+            SessionEvent::Evicted { reason } => {
+                assert_eq!(reason, EvictReason::Capacity);
+                evicted = true;
+            }
+            SessionEvent::Error(ServeError::UnknownSession { session }) => {
+                assert_eq!(session, a.id());
+                step_error = true;
+            }
+            other => panic!("expected Evicted or Error(UnknownSession), got {other:?}"),
+        }
+    }
+    assert!(evicted, "the eviction itself must be delivered");
+    assert!(step_error, "the raced step must fail typed, not vanish");
+    client.shutdown();
+}
+
+#[test]
+fn dropping_a_handle_closes_the_session_and_releases_its_pin() {
+    let client = EngineBuilder::new().workers(2).build().expect("build");
+    let mt = trace(0xE104);
+    let keep = open_trace(&client, &mt);
+    {
+        let _dropped = open_trace(&client, &mt);
+        let m = wait_metrics(&client, |m| m.session_pins == 2);
+        assert_eq!(m.session_pins, 2);
+        // `_dropped` goes out of scope here WITHOUT an explicit close.
+    }
+    let m = wait_metrics(&client, |m| m.session_pins == 1);
+    assert_eq!(m.session_pins, 1, "RAII drop closed the session and released its pin");
+    assert_eq!(m.errors, 0, "a drop-close is a normal close, not an error");
+    drop(keep);
+    let m = wait_metrics(&client, |m| m.session_pins == 0);
+    assert_eq!(m.session_pins, 0);
+    client.shutdown();
+}
+
+#[test]
+fn reject_at_capacity_fails_the_new_open_and_keeps_the_live_session() {
+    // The StoreAtCapacity policy: B's open is refused typed; A survives and
+    // keeps decoding.
+    let client = EngineBuilder::new()
+        .workers(1)
+        .session_capacity(1)
+        .idle_ttl(None)
+        .reject_at_capacity()
+        .build()
+        .expect("build");
+    let mt = trace(0xE105);
+    let mut a = open_trace(&client, &mt);
+    let mut b = client.open_model_session(ALPHA, mt.shape()).expect("open B");
+    let (pk, pv) = mt.prompt();
+    b.prefill(ModelPrompt { shape: mt.shape(), prompt_len: mt.prompt_len, k: pk, v: pv })
+        .expect("queue B prefill");
+    assert_eq!(
+        b.wait_prefilled(TIMEOUT).unwrap_err(),
+        ServeError::StoreAtCapacity { capacity: 1 },
+        "the refused open surfaces typed on B's stream"
+    );
+    let (qs, ks, vs) = mt.step_rows(0);
+    a.step(ModelStep::token(ks, vs, qs)).expect("A steps");
+    let sr = a.wait_step(TIMEOUT).expect("A still decodes");
+    assert!(sr.kept_total() >= 1);
+    let m = wait_metrics(&client, |m| m.session_pins == 1);
+    assert_eq!(m.evictions, 0, "nothing was evicted");
+    assert_eq!(m.session_pins, 1, "B's failed open released its pin, A's survives");
+    client.shutdown();
+}

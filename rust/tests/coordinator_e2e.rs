@@ -1,48 +1,21 @@
 //! Coordinator end-to-end over the PJRT runtime: submit batched attention
-//! requests through the engine with a real artifact-backed executor and
-//! validate responses + metrics. Skips when artifacts are missing.
+//! requests through the typed client surface with the artifact-backed
+//! [`PjrtExecutor`] and validate responses + metrics. Skips when artifacts
+//! are missing.
 
-use bitstopper::coordinator::{AttnExecutor, AttnRequest, BatchConfig, Engine};
-use bitstopper::runtime::{default_artifact_dir, ArtifactKind, Runtime};
+use bitstopper::coordinator::{
+    AttnRequest, BatchConfig, Client, EngineBuilder, PjrtExecutor, ServeError,
+};
+use bitstopper::runtime::{default_artifact_dir, ArtifactKind};
 use bitstopper::util::SplitMix64;
 use std::time::Duration;
 
-/// PJRT-backed executor; constructed lazily inside its worker thread (the
-/// PJRT client is not `Send`).
-struct PjrtExecutor {
-    rt: Option<Runtime>,
-}
-
-impl PjrtExecutor {
-    fn new() -> Self {
-        Self { rt: None }
-    }
-
-    fn runtime(&mut self) -> anyhow::Result<&Runtime> {
-        if self.rt.is_none() {
-            let mut rt = Runtime::new()?;
-            rt.load_dir(&default_artifact_dir())?;
-            self.rt = Some(rt);
-        }
-        Ok(self.rt.as_ref().unwrap())
-    }
-}
-
-impl AttnExecutor for PjrtExecutor {
-    fn execute(&mut self, req: &AttnRequest) -> anyhow::Result<(Vec<f32>, usize)> {
-        let (kind, seq, dim, alpha) = (req.kind, req.seq, req.dim, req.alpha);
-        let q = req.q.clone();
-        let k = req.k.clone();
-        let v = req.v.clone();
-        let valid = req.valid.clone();
-        let rt = self.runtime()?;
-        let art = rt
-            .lookup(kind, seq, dim, alpha)
-            .ok_or_else(|| anyhow::anyhow!("no artifact for {kind:?} {seq}x{dim}"))?;
-        let out = art.run(&q, &k, &v, &valid)?;
-        let kept = out.kept();
-        Ok((out.out, kept))
-    }
+fn pjrt_client(workers: usize, cfg: BatchConfig) -> Client {
+    EngineBuilder::new()
+        .workers(workers)
+        .batch(cfg)
+        .build_with(PjrtExecutor::new)
+        .expect("engine construction")
 }
 
 fn mk_request(kind: ArtifactKind, seq: usize, dim: usize, seed: u64) -> AttnRequest {
@@ -66,32 +39,28 @@ fn coordinator_serves_mixed_artifact_requests() {
         eprintln!("SKIP: run `make artifacts` first");
         return;
     }
-    let engine = Engine::start(
-        2,
-        BatchConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
-        PjrtExecutor::new,
-    );
+    let client = pjrt_client(2, BatchConfig { max_batch: 8, max_wait: Duration::from_millis(1) });
 
-    let mut rxs = vec![];
+    let mut tickets = vec![];
     for i in 0..24 {
         let kind = if i % 2 == 0 { ArtifactKind::BitStopper } else { ArtifactKind::Dense };
         let (seq, dim) = if i % 3 == 0 { (128, 32) } else { (256, 64) };
-        rxs.push((kind, dim, engine.submit(mk_request(kind, seq, dim, i))));
+        tickets.push((kind, dim, client.submit(mk_request(kind, seq, dim, i)).expect("submit")));
     }
-    for (kind, dim, rx) in rxs {
-        let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+    for (kind, dim, ticket) in tickets {
+        let resp = ticket.recv_timeout(Duration::from_secs(120)).expect("response");
         assert_eq!(resp.out.len(), dim);
         assert!(resp.out.iter().all(|x| x.is_finite()));
         if kind == ArtifactKind::BitStopper {
             assert!(resp.kept >= 1);
         }
     }
-    let m = engine.metrics();
+    let m = client.metrics();
     assert_eq!(m.completed, 24);
     assert_eq!(m.errors, 0);
     assert!(m.mean_batch_size >= 1.0);
     assert!(m.throughput_rps > 0.0);
-    engine.shutdown();
+    client.shutdown();
 }
 
 #[test]
@@ -100,14 +69,36 @@ fn coordinator_reports_latency_metrics() {
         eprintln!("SKIP: run `make artifacts` first");
         return;
     }
-    let engine = Engine::start(1, BatchConfig::default(), PjrtExecutor::new);
+    let client = pjrt_client(1, BatchConfig::default());
     for i in 0..8 {
-        engine
+        client
             .submit_blocking(mk_request(ArtifactKind::Dense, 128, 32, 100 + i))
             .unwrap();
     }
-    let m = engine.metrics();
+    let m = client.metrics();
     assert!(m.mean_latency_us > 0.0);
     assert!(m.p95_latency_us >= m.mean_latency_us * 0.5);
-    engine.shutdown();
+    client.shutdown();
+}
+
+#[test]
+fn pjrt_executor_model_rejection_reaches_the_client_typed() {
+    // No artifacts needed: the ExecutorUnsupported rejection (ROADMAP "PJRT
+    // executor parity") happens before the runtime loads, and the typed
+    // error must arrive on the session handle's stream end to end.
+    let client = pjrt_client(1, BatchConfig::default());
+    let shape = bitstopper::engine::ModelShape::single(4);
+    let mut h = client.open_model_session(0.6, shape).expect("open");
+    h.prefill(bitstopper::coordinator::ModelPrompt::single(
+        4,
+        2,
+        vec![0.1; 8],
+        vec![0.1; 8],
+    ))
+    .expect("queue prefill");
+    assert_eq!(
+        h.wait_prefilled(Duration::from_secs(10)).unwrap_err(),
+        ServeError::ExecutorUnsupported { op: "model sessions" }
+    );
+    client.shutdown();
 }

@@ -9,7 +9,7 @@
 
 use bitstopper::attention::{attention_f32, rel_err};
 use bitstopper::config::{Features, LatsConfig, SimConfig};
-use bitstopper::coordinator::{AttnExecutor, AttnRequest, BatchConfig, BesfExecutor, Engine};
+use bitstopper::coordinator::{AttnExecutor, AttnRequest, BatchConfig, BesfExecutor, EngineBuilder};
 use bitstopper::engine::{HeadContext, SelectionPolicy};
 use bitstopper::runtime::ArtifactKind;
 use bitstopper::sim::{simulate_attention, simulate_multi_head};
@@ -114,15 +114,18 @@ fn coordinator_e2e_besf_through_batcher_and_router() {
     let expected_kept: Vec<usize> =
         requests.iter().map(|r| reference_selection(r).len()).collect();
 
-    let engine = Engine::start(
-        2,
-        BatchConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
-        BesfExecutor::default,
-    );
-    let rxs: Vec<_> = requests.into_iter().map(|r| engine.submit(r)).collect();
+    let client = EngineBuilder::new()
+        .workers(2)
+        .batch(BatchConfig { max_batch: 4, max_wait: Duration::from_millis(1) })
+        .build()
+        .expect("engine construction");
+    let tickets: Vec<_> = requests
+        .into_iter()
+        .map(|r| client.submit(r).expect("submit"))
+        .collect();
     let mut pruned_any = false;
-    for (i, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv_timeout(Duration::from_secs(60)).expect("response");
+    for (i, ticket) in tickets.into_iter().enumerate() {
+        let resp = ticket.recv_timeout(Duration::from_secs(60)).expect("response");
         assert_eq!(resp.out.len(), dim);
         assert!(resp.out.iter().all(|x| x.is_finite()));
         assert_eq!(
@@ -133,9 +136,9 @@ fn coordinator_e2e_besf_through_batcher_and_router() {
     }
     assert!(pruned_any, "realistic workload must actually prune");
 
-    let m = engine.metrics();
+    let m = client.metrics();
     assert_eq!(m.completed, (n_heads * queries) as u64);
     assert_eq!(m.errors, 0);
     assert!(m.batches >= 1);
-    engine.shutdown();
+    client.shutdown();
 }

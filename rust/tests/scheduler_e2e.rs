@@ -1,4 +1,6 @@
-//! Continuous-batching scheduler acceptance (DESIGN.md §8):
+//! Continuous-batching scheduler acceptance (DESIGN.md §9), driven entirely
+//! through the typed client surface (`EngineBuilder`/`Client`/
+//! `SessionHandle`, DESIGN.md §5):
 //!
 //! 1. **Bit-identity** — multi-layer/multi-head decode steps batched across
 //!    sessions by the scheduler (chunked prefill, 3 workers, a mid-stream
@@ -12,28 +14,23 @@
 //!    sessions instead of over-dispatching, and everything still completes.
 
 use bitstopper::coordinator::{
-    AttnRequest, BatchConfig, BesfExecutor, Engine, Metrics, ModelPrompt, ModelStep, SchedConfig,
-    StepResponse,
+    AttnRequest, Client, EngineBuilder, Metrics, ModelPrompt, ModelStep, SessionHandle,
 };
 use bitstopper::runtime::ArtifactKind;
 use bitstopper::workload::ModelDecodeTrace;
-use std::sync::mpsc::Receiver;
 use std::time::{Duration, Instant};
 
 const ALPHA: f64 = 0.6;
-
-fn recv(rx: Receiver<StepResponse>, what: &str) -> StepResponse {
-    rx.recv_timeout(Duration::from_secs(10)).unwrap_or_else(|e| panic!("{what}: {e}"))
-}
+const TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Scheduler gauges are published asynchronously by the coordinator thread
 /// (a client ack can arrive a few statements before the matching publish):
 /// poll until `pred` holds or a 5 s deadline passes, then return the last
 /// snapshot for the hard asserts.
-fn wait_metrics<F: Fn(&Metrics) -> bool>(engine: &Engine, pred: F) -> Metrics {
+fn wait_metrics<F: Fn(&Metrics) -> bool>(client: &Client, pred: F) -> Metrics {
     let t0 = Instant::now();
     loop {
-        let m = engine.metrics();
+        let m = client.metrics();
         if pred(&m) || t0.elapsed() > Duration::from_secs(5) {
             return m;
         }
@@ -41,12 +38,12 @@ fn wait_metrics<F: Fn(&Metrics) -> bool>(engine: &Engine, pred: F) -> Metrics {
     }
 }
 
-fn open_trace(engine: &Engine, mt: &ModelDecodeTrace) -> (u64, Receiver<StepResponse>) {
+fn open_trace(client: &Client, mt: &ModelDecodeTrace) -> SessionHandle {
+    let mut h = client.open_model_session(ALPHA, mt.shape()).expect("open session");
     let (pk, pv) = mt.prompt();
-    engine.open_model_session(
-        ALPHA,
-        ModelPrompt { shape: mt.shape(), prompt_len: mt.prompt_len, k: pk, v: pv },
-    )
+    h.prefill(ModelPrompt { shape: mt.shape(), prompt_len: mt.prompt_len, k: pk, v: pv })
+        .expect("queue prefill");
+    h
 }
 
 #[test]
@@ -57,21 +54,15 @@ fn batched_multi_layer_decode_is_bit_identical_to_sequential_one_shot() {
         .map(|s| ModelDecodeTrace::synth(2, 2, 24, steps, 16, 0xA110 + s as u64))
         .collect();
     // 3 workers; prefill chunked at 8 rows so every prompt takes 3 ticks.
-    let engine = Engine::start_with(
-        3,
-        BatchConfig::default(),
-        SchedConfig { prefill_chunk: 8, max_inflight_per_worker: 2 },
-        BesfExecutor::default,
-    );
-    let mut sids = Vec::new();
-    let mut acks = Vec::new();
-    for mt in &traces {
-        let (sid, rx) = open_trace(&engine, mt);
-        sids.push(sid);
-        acks.push(rx);
-    }
-    for (s, rx) in acks.into_iter().enumerate() {
-        assert_eq!(recv(rx, "prefill ack").context_len, traces[s].prompt_len);
+    let client = EngineBuilder::new()
+        .workers(3)
+        .prefill_chunk(8)
+        .max_inflight_per_worker(2)
+        .build()
+        .expect("build");
+    let mut handles: Vec<SessionHandle> = traces.iter().map(|mt| open_trace(&client, mt)).collect();
+    for (s, h) in handles.iter_mut().enumerate() {
+        assert_eq!(h.wait_prefilled(TIMEOUT).expect("prefill ack"), traces[s].prompt_len);
     }
 
     // Session 1 closes mid-stream after this many steps; the others run on.
@@ -80,28 +71,26 @@ fn batched_multi_layer_decode_is_bit_identical_to_sequential_one_shot() {
     for i in 0..steps {
         if i == close_after {
             let closed = 1usize;
-            recv(engine.close_model_session(sids[closed]), "mid-stream close ack");
+            handles[closed].close().expect("mid-stream close");
+            handles[closed].wait_closed(TIMEOUT).expect("mid-stream close ack");
             live.retain(|&s| s != closed);
         }
         // Enqueue step i for every live session BEFORE receiving any of
         // them: the scheduler batches them into shared ticks across the 3
         // workers (continuous batching), not one session at a time.
-        let rxs: Vec<(usize, Receiver<StepResponse>)> = live
-            .iter()
-            .map(|&s| {
-                let (qs, ks, vs) = traces[s].step_rows(i);
-                (s, engine.model_step(sids[s], ModelStep::token(ks, vs, qs)))
-            })
-            .collect();
-        for (s, rx) in rxs {
-            let got = recv(rx, "batched decode step");
+        for &s in &live {
+            let (qs, ks, vs) = traces[s].step_rows(i);
+            handles[s].step(ModelStep::token(ks, vs, qs)).expect("queue step");
+        }
+        for &s in &live {
+            let got = handles[s].wait_step(TIMEOUT).expect("batched decode step");
             assert_eq!(got.context_len, traces[s].prompt_len + i + 1);
             assert_eq!(got.outs.len(), traces[s].n_lanes());
             // Sequential one-shot reference: each lane as an independent
             // BitStopper request over the same grown context.
             for (l, lane) in traces[s].lanes.iter().enumerate() {
                 let (k_full, v_full, n) = lane.context_after(i + 1);
-                let one_shot = engine
+                let one_shot = client
                     .submit_blocking(AttnRequest {
                         id: 0,
                         kind: ArtifactKind::BitStopper,
@@ -127,10 +116,11 @@ fn batched_multi_layer_decode_is_bit_identical_to_sequential_one_shot() {
         }
     }
     for &s in &live {
-        recv(engine.close_model_session(sids[s]), "close ack");
+        handles[s].close().expect("close");
+        handles[s].wait_closed(TIMEOUT).expect("close ack");
     }
     let want_steps = n_sessions * close_after + live.len() * (steps - close_after);
-    let m = wait_metrics(&engine, |m| {
+    let m = wait_metrics(&client, |m| {
         m.model_steps as usize == want_steps
             && m.prefill_chunks as usize == n_sessions * 3
             && m.session_pins == 0
@@ -141,7 +131,7 @@ fn batched_multi_layer_decode_is_bit_identical_to_sequential_one_shot() {
     assert_eq!(m.prefill_chunks as usize, n_sessions * 3, "24-row prompts in 8-row chunks");
     assert_eq!(m.session_pins, 0, "all pins released after closes");
     assert!(m.decode_keep_rate > 0.0 && m.decode_keep_rate <= 1.0);
-    engine.shutdown();
+    client.shutdown();
 }
 
 #[test]
@@ -150,50 +140,47 @@ fn decode_sessions_progress_while_long_prefill_is_admitted() {
     // with 3 decode sessions. Every decode session must keep streaming
     // tokens while the prefill is in flight — chunked admission means the
     // prefill never monopolizes a tick.
-    let engine = Engine::start_with(
-        2,
-        BatchConfig::default(),
-        SchedConfig { prefill_chunk: 4, max_inflight_per_worker: 2 },
-        BesfExecutor::default,
-    );
+    let client = EngineBuilder::new()
+        .workers(2)
+        .prefill_chunk(4)
+        .max_inflight_per_worker(2)
+        .build()
+        .expect("build");
     let long = ModelDecodeTrace::synth(1, 1, 64, 1, 8, 0xFA17);
     let shorts: Vec<ModelDecodeTrace> =
         (0..3).map(|s| ModelDecodeTrace::synth(1, 1, 4, 8, 8, 0xFA20 + s as u64)).collect();
 
     // Admit and finish the short prompts first, then start the long prefill
     // and immediately queue every decode step behind it.
-    let mut sids = Vec::new();
-    for mt in &shorts {
-        let (sid, rx) = open_trace(&engine, mt);
-        recv(rx, "short prefill ack");
-        sids.push(sid);
+    let mut handles: Vec<SessionHandle> = shorts.iter().map(|mt| open_trace(&client, mt)).collect();
+    for h in handles.iter_mut() {
+        h.wait_prefilled(TIMEOUT).expect("short prefill ack");
     }
-    let (long_sid, long_rx) = open_trace(&engine, &long);
-    let mut step_rxs = Vec::new();
+    let mut long_h = open_trace(&client, &long);
     for (s, mt) in shorts.iter().enumerate() {
         for i in 0..mt.n_steps() {
             let (qs, ks, vs) = mt.step_rows(i);
-            step_rxs.push(engine.model_step(sids[s], ModelStep::token(ks, vs, qs)));
+            handles[s].step(ModelStep::token(ks, vs, qs)).expect("queue step");
         }
     }
     // All 24 decode steps complete even though a 16-chunk prefill is being
     // admitted concurrently.
-    for rx in step_rxs {
-        let r = recv(rx, "decode step under prefill pressure");
-        assert!(r.kept_total() >= 1);
+    for (s, mt) in shorts.iter().enumerate() {
+        for _ in 0..mt.n_steps() {
+            let r = handles[s].wait_step(TIMEOUT).expect("decode step under prefill pressure");
+            assert!(r.kept_total() >= 1);
+        }
     }
-    assert_eq!(recv(long_rx, "long prefill ack").context_len, 64);
+    assert_eq!(long_h.wait_prefilled(TIMEOUT).expect("long prefill ack"), 64);
     let (qs, ks, vs) = long.step_rows(0);
-    let r = recv(
-        engine.model_step(long_sid, ModelStep::token(ks, vs, qs)),
-        "long session decodes after its prefill",
-    );
+    long_h.step(ModelStep::token(ks, vs, qs)).expect("queue long step");
+    let r = long_h.wait_step(TIMEOUT).expect("long session decodes after its prefill");
     assert_eq!(r.context_len, 65);
-    let m = wait_metrics(&engine, |m| m.prefill_chunks as usize == 3 + 16);
+    let m = wait_metrics(&client, |m| m.prefill_chunks as usize == 3 + 16);
     assert_eq!(m.errors, 0);
     assert_eq!(m.prefill_chunks as usize, 3 + 16, "long prompt admitted in 16 chunks");
     assert!(m.ticks >= 16, "chunked prefill spread over at least 16 ticks");
-    engine.shutdown();
+    client.shutdown();
 }
 
 #[test]
@@ -201,34 +188,33 @@ fn saturated_worker_defers_instead_of_overdispatching() {
     // One worker with an in-flight cap of 1 and three sessions with queued
     // steps: at any tick at least two sessions compete for the single slot,
     // so the scheduler must record deferrals — and still finish everything.
-    let engine = Engine::start_with(
-        1,
-        BatchConfig::default(),
-        SchedConfig { prefill_chunk: 64, max_inflight_per_worker: 1 },
-        BesfExecutor::default,
-    );
+    let client = EngineBuilder::new()
+        .workers(1)
+        .prefill_chunk(64)
+        .max_inflight_per_worker(1)
+        .build()
+        .expect("build");
     let traces: Vec<ModelDecodeTrace> =
         (0..3).map(|s| ModelDecodeTrace::synth(1, 1, 8, 4, 8, 0xBB00 + s as u64)).collect();
-    let mut sids = Vec::new();
-    for mt in &traces {
-        let (sid, rx) = open_trace(&engine, mt);
-        recv(rx, "prefill ack");
-        sids.push(sid);
+    let mut handles: Vec<SessionHandle> = traces.iter().map(|mt| open_trace(&client, mt)).collect();
+    for h in handles.iter_mut() {
+        h.wait_prefilled(TIMEOUT).expect("prefill ack");
     }
-    let mut rxs = Vec::new();
     for (s, mt) in traces.iter().enumerate() {
         for i in 0..mt.n_steps() {
             let (qs, ks, vs) = mt.step_rows(i);
-            rxs.push((s, i, engine.model_step(sids[s], ModelStep::token(ks, vs, qs))));
+            handles[s].step(ModelStep::token(ks, vs, qs)).expect("queue step");
         }
     }
-    for (s, i, rx) in rxs {
-        let r = recv(rx, "step under backpressure");
-        assert_eq!(r.context_len, traces[s].prompt_len + i + 1, "session {s} step {i}");
+    for (s, mt) in traces.iter().enumerate() {
+        for i in 0..mt.n_steps() {
+            let r = handles[s].wait_step(TIMEOUT).expect("step under backpressure");
+            assert_eq!(r.context_len, mt.prompt_len + i + 1, "session {s} step {i}");
+        }
     }
-    let m = wait_metrics(&engine, |m| m.model_steps == 12 && m.deferred >= 1);
+    let m = wait_metrics(&client, |m| m.model_steps == 12 && m.deferred >= 1);
     assert_eq!(m.errors, 0);
     assert_eq!(m.model_steps, 12);
     assert!(m.deferred >= 1, "capacity-1 worker with 3 runnable sessions must defer");
-    engine.shutdown();
+    client.shutdown();
 }

@@ -1,0 +1,98 @@
+#!/usr/bin/env python3
+"""Compare a fresh BENCH_serve.json against the committed baseline.
+
+Usage:
+    scripts/check_serve_trend.py [CURRENT] [BASELINE]
+
+CURRENT  defaults to BENCH_serve.json        (written by `cargo bench --bench
+                                              hotpath -- --serve-only`)
+BASELINE defaults to BENCH_serve.baseline.json (committed; refresh it
+                                              deliberately when a PR is
+                                              *supposed* to change serving
+                                              cost)
+
+Policy (ROADMAP "BENCH_serve.json trend tracking in CI"):
+
+* Every `serve_decode_b*` cost/token row is compared by p50 (more robust
+  than the mean on shared CI machines — see EXPERIMENTS.md §Perf).
+* A row more than REGRESSION_PCT slower than the baseline fails the check.
+* Rows present in only one file are reported but do not fail (bench suites
+  may grow).
+* A missing baseline passes with an instruction to commit one: the first
+  toolchain run seeds the trend.
+
+Exit codes: 0 ok / baseline missing, 1 regression, 2 malformed input.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+REGRESSION_PCT = 10.0
+
+
+def load_rows(path: Path):
+    doc = json.loads(path.read_text())
+    rows = {}
+    for row in doc.get("rows", []):
+        name = row.get("name", "")
+        if name.startswith("serve_decode_"):
+            rows[name] = float(row.get("p50", row.get("mean", "nan")))
+    return rows
+
+
+def main(argv):
+    current_path = Path(argv[1] if len(argv) > 1 else "BENCH_serve.json")
+    baseline_path = Path(argv[2] if len(argv) > 2 else "BENCH_serve.baseline.json")
+
+    if not current_path.exists():
+        print(f"error: {current_path} not found — run "
+              "`cargo bench --bench hotpath -- --serve-only` first")
+        return 2
+    if not baseline_path.exists():
+        print(f"note: no committed baseline at {baseline_path}; passing.")
+        print(f"      seed the trend with: cp {current_path} {baseline_path}")
+        return 0
+
+    try:
+        current = load_rows(current_path)
+        baseline = load_rows(baseline_path)
+    except (json.JSONDecodeError, ValueError) as e:
+        print(f"error: malformed bench json: {e}")
+        return 2
+    if not current:
+        print(f"error: {current_path} has no serve_decode_* rows")
+        return 2
+
+    failures = []
+    print(f"serve cost/token trend vs {baseline_path} "
+          f"(fail threshold: +{REGRESSION_PCT:.0f}%)")
+    for name in sorted(set(current) | set(baseline)):
+        if name not in current:
+            print(f"  {name:<24} missing from current run (row removed?)")
+            continue
+        if name not in baseline:
+            print(f"  {name:<24} {current[name]:9.3f} ms/token  (new row, no baseline)")
+            continue
+        base, cur = baseline[name], current[name]
+        delta_pct = 100.0 * (cur - base) / base if base > 0 else float("inf")
+        verdict = "ok"
+        if delta_pct > REGRESSION_PCT:
+            verdict = "REGRESSION"
+            failures.append((name, base, cur, delta_pct))
+        print(f"  {name:<24} {base:9.3f} -> {cur:9.3f} ms/token "
+              f"({delta_pct:+6.1f}%)  {verdict}")
+
+    if failures:
+        print(f"\nFAIL: {len(failures)} row(s) regressed more than "
+              f"{REGRESSION_PCT:.0f}% vs the committed baseline.")
+        print("If the slowdown is intentional, refresh the baseline in the "
+              "same PR:\n"
+              f"    cp {current_path} {baseline_path}")
+        return 1
+    print("\nOK: no serve cost/token regression.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
