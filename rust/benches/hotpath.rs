@@ -2,30 +2,36 @@
 //! performance bounds the whole-figure suite — bit-plane dot products (scalar
 //! reference vs the bit-sliced AND+popcount kernel), BESF selection (one-shot
 //! vs scratch-reuse), the DRAM model, the lane engine, the multi-head
-//! engine, and the decode-step rows (session KV-cache append+select vs the
-//! per-token full-context rebuild, across context lengths 128→2048). Used by
-//! the §Perf pass in EXPERIMENTS.md.
+//! engine, the decode-step rows (session KV-cache append+select vs the
+//! per-token full-context rebuild, across context lengths 128→2048), the
+//! query-blocked BESF kernel (block sizes {1, 4, 16} vs the per-query sliced
+//! reference, across the same context sweep), and the lane-parallel model
+//! step (32 lanes, serial vs all cores). Used by the §Perf pass in
+//! EXPERIMENTS.md.
 //!
 //! Run: `cargo bench --bench hotpath` (pass `-- --serve-only` to run just
-//! the continuous-batching serve suite — what the CI trend check uses).
+//! the continuous-batching serve suite).
 //!
 //! Besides the human-readable table, results are persisted to
 //! `BENCH_hotpath.json` in the working directory (one row per bench plus
 //! derived speedup ratios) so the perf trajectory is machine-trackable across
 //! PRs. A second suite measures continuous-batching decode cost/token at
 //! batch sizes {1, 4, 16} through the scheduler and persists to
-//! `BENCH_serve.json`, trend-checked in CI by
-//! `scripts/check_serve_trend.py`.
+//! `BENCH_serve.json`. CI trend-checks BOTH files against the committed
+//! baselines via `scripts/check_serve_trend.py` — the derived speedup ratios
+//! are machine-independent, so the check is meaningful on any runner.
 
 use bitstopper::algo::{besf_select, BesfScratch, Lats};
 use bitstopper::config::LatsConfig;
-use bitstopper::engine::{default_threads, AttentionEngine, HeadContext, SelectionPolicy};
+use bitstopper::engine::{
+    default_threads, AttentionEngine, HeadContext, ModelContext, SelectionPolicy,
+};
 use bitstopper::quant::{margin::BitMargins, BitPlanes, QueryPlanes};
 use bitstopper::sim::dram::{Dram, DramConfig};
 use bitstopper::sim::qkpu::{assign_round_robin, simulate_lanes, ChainTask, FetchSpec};
 use bitstopper::util::stats::Summary;
 use bitstopper::util::SplitMix64;
-use bitstopper::workload::{DecodeTrace, MultiHeadAttn, QuantAttn};
+use bitstopper::workload::{DecodeTrace, ModelDecodeTrace, MultiHeadAttn, QuantAttn};
 use std::time::Instant;
 
 fn time_it<F: FnMut() -> u64>(
@@ -97,8 +103,8 @@ fn write_json(
 }
 
 fn main() {
-    // `cargo bench --bench hotpath -- --serve-only` skips the hot-path rows:
-    // CI runs only the serve suite for the BENCH_serve.json trend check.
+    // `cargo bench --bench hotpath -- --serve-only` skips the hot-path rows
+    // for a quick serve-suite-only run.
     if std::env::args().any(|a| a == "--serve-only") {
         serve_bench();
         return;
@@ -268,7 +274,73 @@ fn hotpath_bench() {
         });
     }
 
-    let derived = vec![
+    // Query-blocked BESF: the cache-blocked kernel loads each K-plane row
+    // once and serves every still-alive query in the block from it, vs the
+    // per-query sliced path re-streaming the planes per query. 16 queries,
+    // block sizes {1, 4, 16}, across the context sweep. Block 1 measures the
+    // blocking overhead at degenerate width (parity row, not gated); blocks
+    // ≥ 4 must win (acceptance: blocked_speedup_b{4,16}_* > 1.0).
+    println!();
+    for &ctx in &[128usize, 512, 2048] {
+        let bqa = QuantAttn::synth(ctx, 128, 16, 0xB10C + ctx as u64);
+        let bplanes = BitPlanes::decompose(&bqa.k);
+        let blats = Lats::new(LatsConfig::default(), 128, bqa.qp.scale, bqa.kp.scale);
+        let qps: Vec<QueryPlanes> =
+            bqa.queries.iter().map(|q| QueryPlanes::decompose(q)).collect();
+        let mut bscratch = BesfScratch::new();
+
+        // Per-query sliced reference: 16 independent scratch-reuse selects.
+        time_it(&mut rows, &format!("besf_sliced_16q_ctx{ctx}"), 10, || {
+            let mut acc = 0u64;
+            for q in &bqa.queries {
+                let margins = BitMargins::generate(q);
+                let r = bscratch.select(q, &bplanes, &margins, &blats);
+                acc += r.survivors.len() as u64;
+            }
+            acc
+        });
+
+        for &blk in &[1usize, 4, 16] {
+            time_it(&mut rows, &format!("besf_block{blk}_16q_ctx{ctx}"), 10, || {
+                let mut acc = 0u64;
+                for start in (0..16).step_by(blk) {
+                    let end = (start + blk).min(16);
+                    let out = bscratch.select_block(
+                        &qps[start..end],
+                        &bqa.queries[start..end],
+                        &bplanes,
+                        |_r, ml| blats.threshold(ml),
+                    );
+                    acc += out.iter().map(|r| r.survivors.len() as u64).sum::<u64>();
+                }
+                acc
+            });
+        }
+    }
+
+    // Lane-parallel model step: a 4-layer × 8-head model (32 lanes) over a
+    // 2048-token context, decoded serially vs fanned across all cores
+    // through the same `decode_step_threads` entry the serving executor
+    // uses. Same queries every iteration (decode is `&self`), so the two
+    // rows time identical work.
+    println!();
+    let mt = ModelDecodeTrace::synth(4, 8, 2048, 1, 64, 0x1A9E);
+    let (mk0, mv0) = mt.prompt();
+    let mut mctx = ModelContext::open(mt.shape(), LatsConfig::default(), &mk0, &mv0, 2048)
+        .expect("model context open");
+    let (mqs, mks, mvs) = mt.step_rows(0);
+    mctx.append_token(&mks, &mvs).expect("token append");
+    let mut mscratch = BesfScratch::new();
+    time_it(&mut rows, "model_step_32lanes_ctx2048_t1", 5, || {
+        let out = mctx.decode_step_threads(&mqs, &mut mscratch, 1).expect("serial step");
+        out.kept.iter().sum::<usize>() as u64
+    });
+    time_it(&mut rows, "model_step_32lanes_ctx2048_all", 5, || {
+        let out = mctx.decode_step_threads(&mqs, &mut mscratch, cores).expect("parallel step");
+        out.kept.iter().sum::<usize>() as u64
+    });
+
+    let mut derived = vec![
         (
             "sliced_speedup_round0".to_string(),
             mean_of(&rows, "plane_dot_round0_all_keys")
@@ -301,6 +373,41 @@ fn hotpath_bench() {
                 / mean_of(&rows, "decode_step_cached_ctx2048"),
         ),
     ];
+    // Blocked-kernel ratios, all vs the per-query sliced reference at the
+    // same context. The b1 row is labeled "parity" (no "speedup" substring)
+    // on purpose: it hovers near 1.0 and must not trip the trend gate.
+    for &ctx in &[128usize, 512, 2048] {
+        let sliced = mean_of(&rows, &format!("besf_sliced_16q_ctx{ctx}"));
+        derived.push((
+            format!("blocked_b1_parity_ctx{ctx}"),
+            sliced / mean_of(&rows, &format!("besf_block1_16q_ctx{ctx}")),
+        ));
+        for blk in [4usize, 16] {
+            derived.push((
+                format!("blocked_speedup_b{blk}_ctx{ctx}"),
+                sliced / mean_of(&rows, &format!("besf_block{blk}_16q_ctx{ctx}")),
+            ));
+        }
+    }
+    // Context-sweep geomeans: the headline blocked-kernel numbers.
+    for blk in [4usize, 16] {
+        let prod: f64 = [128usize, 512, 2048]
+            .iter()
+            .map(|ctx| {
+                derived
+                    .iter()
+                    .find(|(n, _)| n == &format!("blocked_speedup_b{blk}_ctx{ctx}"))
+                    .map(|(_, v)| *v)
+                    .unwrap_or(f64::NAN)
+            })
+            .product();
+        derived.push((format!("blocked_speedup_b{blk}"), prod.powf(1.0 / 3.0)));
+    }
+    derived.push((
+        "model_lane_scaling".to_string(),
+        mean_of(&rows, "model_step_32lanes_ctx2048_t1")
+            / mean_of(&rows, "model_step_32lanes_ctx2048_all"),
+    ));
     for (name, v) in &derived {
         println!("derived {name:<32} {v:>9.3}");
     }

@@ -15,7 +15,7 @@
 
 use crate::algo::complexity::Complexity;
 use crate::algo::lats::Lats;
-use crate::quant::bitplane::{plane_weight, BitPlanes, QueryPlanes, N_BITS};
+use crate::quant::bitplane::{plane_dot_sliced_block, plane_weight, BitPlanes, QueryPlanes, N_BITS};
 use crate::quant::margin::BitMargins;
 
 /// Sentinel death round for tokens that survive all 12 rounds.
@@ -81,17 +81,28 @@ pub fn besf_select(
 /// rule; the BESF-only ablation (Fig. 13 (b)) passes a *static* threshold that
 /// ignores `max_lower`. Survival is always `upper ≥ η`.
 ///
-/// Convenience wrapper that pays one-off scratch construction; steady-state
-/// callers (the engine workers, the serving coordinator) hold a
-/// [`BesfScratch`] instead and go through [`BesfScratch::select_with`].
+/// Convenience wrapper over a thread-local [`BesfScratch`], so the documented
+/// "zero per-query heap allocation in steady state" invariant holds for this
+/// entry point too: each thread's scratch grows to its high-water mark once
+/// and is reused verbatim afterwards. Steady-state callers that own their
+/// threads (the engine workers, the serving coordinator) still hold an
+/// explicit [`BesfScratch`] and go through [`BesfScratch::select_with`].
 pub fn besf_select_with<P: Fn(usize, i64) -> i64>(
     q: &[i16],
     planes: &BitPlanes,
     margins: &BitMargins,
     policy: P,
 ) -> BesfResult {
-    let mut scratch = BesfScratch::new();
-    scratch.select_with(q, planes, margins, policy)
+    thread_local! {
+        static SCRATCH: std::cell::RefCell<BesfScratch> =
+            std::cell::RefCell::new(BesfScratch::new());
+    }
+    SCRATCH.with(|s| match s.try_borrow_mut() {
+        Ok(mut scratch) => scratch.select_with(q, planes, margins, policy),
+        // Re-entrant call from inside a policy closure: fall back to a fresh
+        // scratch instead of panicking the RefCell borrow.
+        Err(_) => BesfScratch::new().select_with(q, planes, margins, policy),
+    })
 }
 
 /// Reusable working state for BESF selection — everything the inner loop
@@ -120,6 +131,21 @@ pub struct BesfScratch {
     idx: Vec<usize>,
     /// Per-token death round, `SURVIVED` while alive.
     death: Vec<u8>,
+    // --- query-blocked state ([`BesfScratch::select_block`]) ---
+    /// Per-query sliced decompositions for [`BesfScratch::select_block_with`].
+    block_qplanes: Vec<QueryPlanes>,
+    /// Per-query margin LUT slots (heap-free each; the Vec grows once).
+    block_margins: Vec<BitMargins>,
+    /// Query-major running partials, `block_partials[q*S + j]`.
+    block_partials: Vec<i64>,
+    /// Query-major death rounds, `block_death[q*S + j]`.
+    block_death: Vec<u8>,
+    /// Per-key block occupancy mask: bit `q` set while query `q` tracks key.
+    block_alive: Vec<u64>,
+    /// Per-query dot staging for one key row.
+    block_dots: Vec<i64>,
+    /// Query-major active-entering-round counts, `block_rounds[q*12 + r]`.
+    block_rounds: Vec<usize>,
 }
 
 impl BesfScratch {
@@ -167,6 +193,112 @@ impl BesfScratch {
         self.margins.generate_into(q);
         let Self { margins, partials, idx, death, .. } = self;
         select_core(qp, planes, margins, policy, partials, idx, death)
+    }
+
+    /// Query-blocked BESF (DESIGN.md §3): run the 12 rounds for a block of
+    /// queries with **one pass over the K planes per round** — each still-
+    /// tracked key's round-`r` plane row is loaded once and reduced against
+    /// every query in the block that still tracks it
+    /// ([`crate::quant::bitplane::plane_dot_sliced_block`]), instead of
+    /// re-streaming all K plane rows once per query. `qps[i]` must be the
+    /// decomposition of `qs[i]` (the engine caches one [`QueryPlanes`] per
+    /// query); `policy` is shared by the whole block and sees each query's
+    /// own `(round, max_lower)` arguments.
+    ///
+    /// `out[i]` is field-for-field bit-identical to running
+    /// [`BesfScratch::select_into`] on query `i` alone (property-tested):
+    /// i64 partial sums are exact, the max-lower reduce and the
+    /// ascending-key prune order are preserved per query, and per-query
+    /// complexity accounting is unchanged — blocking only changes the order
+    /// K-plane words are visited, never any arithmetic. Blocks wider than 64
+    /// queries are processed in 64-query sub-blocks (the per-key occupancy
+    /// mask is one `u64`).
+    pub fn select_block<P: Fn(usize, i64) -> i64>(
+        &mut self,
+        qps: &[QueryPlanes],
+        qs: &[Vec<i16>],
+        planes: &BitPlanes,
+        policy: P,
+    ) -> Vec<BesfResult> {
+        assert_eq!(qps.len(), qs.len(), "one decomposition per query");
+        let n = qs.len();
+        if self.block_margins.len() < n {
+            self.block_margins.resize_with(n, BitMargins::default);
+        }
+        for (m, q) in self.block_margins.iter_mut().zip(qs) {
+            m.generate_into(q);
+        }
+        let Self { block_margins, block_partials, block_death, block_alive, block_dots, block_rounds, .. } =
+            self;
+        let mut out = Vec::with_capacity(n);
+        for start in (0..n).step_by(64) {
+            let end = (start + 64).min(n);
+            select_block_core(
+                &qps[start..end],
+                &block_margins[start..end],
+                planes,
+                &policy,
+                block_partials,
+                block_death,
+                block_alive,
+                block_dots,
+                block_rounds,
+                &mut out,
+            );
+        }
+        out
+    }
+
+    /// [`BesfScratch::select_block`] for raw (not yet decomposed) queries:
+    /// decomposes each into the scratch's per-query [`QueryPlanes`] slots
+    /// first — the single-query analogue is [`BesfScratch::select_with`].
+    /// Used by the model decode path, where queries are quantized per step.
+    pub fn select_block_with<P: Fn(usize, i64) -> i64>(
+        &mut self,
+        qs: &[Vec<i16>],
+        planes: &BitPlanes,
+        policy: P,
+    ) -> Vec<BesfResult> {
+        let n = qs.len();
+        if self.block_qplanes.len() < n {
+            self.block_qplanes.resize_with(n, QueryPlanes::new);
+        }
+        for (qp, q) in self.block_qplanes.iter_mut().zip(qs) {
+            qp.decompose_into(q);
+        }
+        if self.block_margins.len() < n {
+            self.block_margins.resize_with(n, BitMargins::default);
+        }
+        for (m, q) in self.block_margins.iter_mut().zip(qs) {
+            m.generate_into(q);
+        }
+        let Self {
+            block_qplanes,
+            block_margins,
+            block_partials,
+            block_death,
+            block_alive,
+            block_dots,
+            block_rounds,
+            ..
+        } = self;
+        let mut out = Vec::with_capacity(n);
+        for start in (0..n).step_by(64) {
+            let end = (start + 64).min(n);
+            select_block_core(
+                &block_qplanes[start..end],
+                &block_margins[start..end],
+                planes,
+                &policy,
+                block_partials,
+                block_death,
+                block_alive,
+                block_dots,
+                block_rounds,
+                &mut out,
+            );
+        }
+        out
     }
 }
 
@@ -243,6 +375,134 @@ fn select_core<P: Fn(usize, i64) -> i64>(
         scores: partials.clone(),
         active_per_round,
         complexity: cx,
+    }
+}
+
+/// The ≤64-query blocked inner loop ([`BesfScratch::select_block`]).
+///
+/// State is one `u64` occupancy mask per key (bit `q` set while query `q`
+/// still tracks the key) plus query-major partial/death tables. Per round,
+/// **one** linear pass over the keys accumulates every still-tracked
+/// (query, key) partial from a single load of the key's plane row; the
+/// per-query threshold/prune that follows mirrors [`select_core`]'s
+/// accumulate → max-lower reduce → prune passes decision-for-decision. A
+/// query whose tracked set empties is skipped from then on, exactly like the
+/// scalar loop's early break; its later-round active counts stay 0.
+///
+/// Per-query complexity is derived from the recorded active-entering-round
+/// counts — `k_bits = bit_ops = Σ_r active[r]·dim`, `q_bits = dim·12` — which
+/// is precisely what [`select_core`]'s incremental accounting sums to.
+#[allow(clippy::too_many_arguments)] // scratch fields passed split-borrowed
+fn select_block_core<P: Fn(usize, i64) -> i64>(
+    qps: &[QueryPlanes],
+    margins: &[BitMargins],
+    planes: &BitPlanes,
+    policy: &P,
+    partials: &mut Vec<i64>,
+    death: &mut Vec<u8>,
+    alive: &mut Vec<u64>,
+    dots: &mut Vec<i64>,
+    rounds: &mut Vec<usize>,
+    out: &mut Vec<BesfResult>,
+) {
+    let nq = qps.len();
+    debug_assert!(nq >= 1 && nq <= 64, "sub-blocks are 1..=64 queries");
+    debug_assert_eq!(margins.len(), nq);
+    let s = planes.keys;
+    let dim = planes.dim;
+    for qp in qps {
+        debug_assert_eq!(qp.dim, dim, "query planes built for a different dim");
+    }
+
+    partials.clear();
+    partials.resize(nq * s, 0);
+    death.clear();
+    death.resize(nq * s, SURVIVED);
+    let full: u64 = if nq == 64 { u64::MAX } else { (1u64 << nq) - 1 };
+    alive.clear();
+    alive.resize(s, full);
+    dots.clear();
+    dots.resize(nq, 0);
+    rounds.clear();
+    rounds.resize(nq * N_BITS, 0);
+    let mut active = [0usize; 64];
+    active[..nq].fill(s);
+
+    for r in 0..N_BITS {
+        for q in 0..nq {
+            rounds[q * N_BITS + r] = active[q];
+        }
+        // --- one pass over the keys: load each tracked key's plane row once,
+        //     reduce it against every query still tracking it ---
+        let w_r = plane_weight(r);
+        for (j, a) in alive.iter().enumerate() {
+            let m = *a;
+            if m == 0 {
+                continue;
+            }
+            plane_dot_sliced_block(qps, planes.row_words(r, j), m, dots);
+            let mut mm = m;
+            while mm != 0 {
+                let q = mm.trailing_zeros() as usize;
+                mm &= mm - 1;
+                partials[q * s + j] += w_r * dots[q];
+            }
+        }
+        // --- per-query threshold + prune (same rule and key order as the
+        //     scalar loop) ---
+        for q in 0..nq {
+            if active[q] == 0 {
+                continue;
+            }
+            let bit = 1u64 << q;
+            let m = margins[q].at(r);
+            let row = &partials[q * s..(q + 1) * s];
+            let mut max_lower = i64::MIN;
+            for (j, a) in alive.iter().enumerate() {
+                if a & bit != 0 {
+                    max_lower = max_lower.max(row[j] + m.min);
+                }
+            }
+            let eta = policy(r, max_lower);
+            let mut keep = active[q];
+            for (j, a) in alive.iter_mut().enumerate() {
+                if *a & bit != 0 && row[j] + m.max < eta {
+                    *a &= !bit;
+                    death[q * s + j] = r as u8;
+                    keep -= 1;
+                }
+            }
+            active[q] = keep;
+        }
+    }
+
+    for q in 0..nq {
+        let row = &partials[q * s..(q + 1) * s];
+        let drow = &death[q * s..(q + 1) * s];
+        let mut survivors = Vec::with_capacity(active[q]);
+        let mut scores = Vec::with_capacity(active[q]);
+        for (j, &d) in drow.iter().enumerate() {
+            if d == SURVIVED {
+                survivors.push(j);
+                scores.push(row[j]);
+            }
+        }
+        let mut active_per_round = [0usize; N_BITS];
+        active_per_round.copy_from_slice(&rounds[q * N_BITS..(q + 1) * N_BITS]);
+        let processed: u64 = active_per_round.iter().map(|&a| (a * dim) as u64).sum();
+        let complexity = Complexity {
+            q_bits: (dim * N_BITS) as u64,
+            k_bits: processed,
+            bit_ops: processed,
+            ..Default::default()
+        };
+        out.push(BesfResult {
+            survivors,
+            death_round: drow.to_vec(),
+            scores,
+            active_per_round,
+            complexity,
+        });
     }
 }
 
@@ -451,6 +711,162 @@ mod tests {
         let res = scratch.select(&q, &planes, &margins, &lats);
         assert!(res.survivors.is_empty());
         assert_eq!(res.active_per_round, [0usize; N_BITS]);
+    }
+
+    fn rand_queries(rng: &mut SplitMix64, n: usize, dim: usize) -> Vec<Vec<i16>> {
+        (0..n)
+            .map(|_| (0..dim).map(|_| rng.range_i64(QMIN as i64, QMAX as i64) as i16).collect())
+            .collect()
+    }
+
+    #[test]
+    fn prop_blocked_kernel_is_bit_identical_to_per_query_paths() {
+        // The tentpole invariant: for every block size — 1, 3 (forcing a
+        // partial tail block), and the whole batch — the blocked kernel must
+        // reproduce BOTH per-query reference paths (the sliced scratch loop
+        // and the allocating scalar-backed wrapper) field-for-field, across
+        // ragged dims crossing the 64/128 word edges.
+        let mut scratch = BesfScratch::new();
+        check("select_block == per-query select_into == besf_select", 40, |rng| {
+            let s = 1 + rng.below(60) as usize;
+            let dim = 1 + rng.below(140) as usize; // crosses 64, 128
+            let nq = 1 + rng.below(9) as usize;
+            let qs = rand_queries(rng, nq, dim);
+            let k: Vec<i16> =
+                (0..s * dim).map(|_| rng.range_i64(QMIN as i64, QMAX as i64) as i16).collect();
+            let k = IntMatrix::new(s, dim, k);
+            let planes = BitPlanes::decompose(&k);
+            let lats = Lats::from_int(rng.uniform(0.0, 1.0), 1 + rng.below(1_000_000) as i64);
+            let qps: Vec<QueryPlanes> = qs.iter().map(|q| QueryPlanes::decompose(q)).collect();
+
+            let reference: Vec<BesfResult> = qs
+                .iter()
+                .zip(&qps)
+                .map(|(q, qp)| scratch.select_into(qp, q, &planes, |_r, ml| lats.threshold(ml)))
+                .collect();
+            for (q, r) in qs.iter().zip(&reference) {
+                let margins = BitMargins::generate(q);
+                let scalar = besf_select(q, &planes, &margins, &lats);
+                assert_results_identical(r, &scalar, "sliced vs scalar reference");
+            }
+
+            for blk in [1usize, 3, nq] {
+                let mut blocked = Vec::new();
+                for start in (0..nq).step_by(blk) {
+                    let end = (start + blk).min(nq);
+                    blocked.extend(scratch.select_block(
+                        &qps[start..end],
+                        &qs[start..end],
+                        &planes,
+                        |_r, ml| lats.threshold(ml),
+                    ));
+                }
+                for (i, (b, r)) in blocked.iter().zip(&reference).enumerate() {
+                    assert_results_identical(b, r, &format!("block {blk} query {i}"));
+                }
+                // The raw-query entry (decomposes internally) must agree too.
+                let mut via_raw = Vec::new();
+                for start in (0..nq).step_by(blk) {
+                    let end = (start + blk).min(nq);
+                    via_raw.extend(scratch.select_block_with(
+                        &qs[start..end],
+                        &planes,
+                        |_r, ml| lats.threshold(ml),
+                    ));
+                }
+                for (i, (b, r)) in via_raw.iter().zip(&reference).enumerate() {
+                    assert_results_identical(b, r, &format!("block_with {blk} query {i}"));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn blocked_kernel_handles_all_negative_queries_and_ragged_dims() {
+        // Sign-plane-heavy blocks across tail-word widths: every query is
+        // all-negative so round 0 exercises a full sign plane per query.
+        let mut scratch = BesfScratch::new();
+        for dim in [1usize, 63, 64, 65, 127, 128, 129] {
+            let qs: Vec<Vec<i16>> = (0..5).map(|i| vec![-(100 + 50 * i as i16); dim]).collect();
+            let k: Vec<i16> = (0..7 * dim).map(|i| ((i % 11) as i16) - 5).collect();
+            let k = IntMatrix::new(7, dim, k);
+            let planes = BitPlanes::decompose(&k);
+            let lats = Lats::from_int(0.5, 10_000);
+            let qps: Vec<QueryPlanes> = qs.iter().map(|q| QueryPlanes::decompose(q)).collect();
+            let blocked = scratch.select_block(&qps, &qs, &planes, |_r, ml| lats.threshold(ml));
+            for (i, (b, q)) in blocked.iter().zip(&qs).enumerate() {
+                let margins = BitMargins::generate(q);
+                let scalar = besf_select(q, &planes, &margins, &lats);
+                assert_results_identical(b, &scalar, &format!("dim {dim} query {i}"));
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_kernel_static_policy_can_kill_whole_block() {
+        // A static threshold far above any achievable score empties every
+        // query's tracked set mid-run — the blocked skip-when-empty path must
+        // match the scalar loop's early break, including complexity.
+        let mut scratch = BesfScratch::new();
+        let mut rng = SplitMix64::new(0x5D);
+        let dim = 32;
+        let qs = rand_queries(&mut rng, 4, dim);
+        let k: Vec<i16> =
+            (0..16 * dim).map(|_| rng.range_i64(QMIN as i64, QMAX as i64) as i16).collect();
+        let k = IntMatrix::new(16, dim, k);
+        let planes = BitPlanes::decompose(&k);
+        let eta = i64::MAX / 2;
+        let blocked = scratch.select_block(
+            &qs.iter().map(|q| QueryPlanes::decompose(q)).collect::<Vec<_>>(),
+            &qs,
+            &planes,
+            |_r, _ml| eta,
+        );
+        for (b, q) in blocked.iter().zip(&qs) {
+            let margins = BitMargins::generate(q);
+            let scalar = besf_select_with(q, &planes, &margins, |_r, _ml| eta);
+            assert_results_identical(b, &scalar, "static kill-all");
+            assert!(b.survivors.is_empty());
+        }
+    }
+
+    #[test]
+    fn blocked_kernel_empty_inputs() {
+        let mut scratch = BesfScratch::new();
+        // Empty query block → empty result vector.
+        let planes = BitPlanes::decompose(&IntMatrix::zeros(3, 8));
+        assert!(scratch.select_block(&[], &[], &planes, |_r, _ml| 0).is_empty());
+        // Empty key set → one empty-but-accounted result per query.
+        let empty = BitPlanes::decompose(&IntMatrix::zeros(0, 8));
+        let qs = vec![vec![1i16; 8], vec![-1i16; 8]];
+        let res = scratch.select_block_with(&qs, &empty, |_r, _ml| 0);
+        assert_eq!(res.len(), 2);
+        for (b, q) in res.iter().zip(&qs) {
+            let margins = BitMargins::generate(q);
+            let scalar = besf_select_with(q, &empty, &margins, |_r, _ml| 0);
+            assert_results_identical(b, &scalar, "empty key set");
+        }
+    }
+
+    #[test]
+    fn blocked_kernel_chunks_blocks_wider_than_mask_word() {
+        // 70 queries forces the internal 64-query sub-block split.
+        let mut scratch = BesfScratch::new();
+        let mut rng = SplitMix64::new(0x70);
+        let dim = 24;
+        let qs = rand_queries(&mut rng, 70, dim);
+        let k: Vec<i16> =
+            (0..12 * dim).map(|_| rng.range_i64(QMIN as i64, QMAX as i64) as i16).collect();
+        let k = IntMatrix::new(12, dim, k);
+        let planes = BitPlanes::decompose(&k);
+        let lats = Lats::from_int(0.4, 250_000);
+        let blocked = scratch.select_block_with(&qs, &planes, |_r, ml| lats.threshold(ml));
+        assert_eq!(blocked.len(), 70);
+        for (i, (b, q)) in blocked.iter().zip(&qs).enumerate() {
+            let margins = BitMargins::generate(q);
+            let scalar = besf_select(q, &planes, &margins, &lats);
+            assert_results_identical(b, &scalar, &format!("query {i}"));
+        }
     }
 
     #[test]

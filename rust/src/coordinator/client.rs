@@ -43,6 +43,7 @@ pub struct EngineBuilder {
     max_sessions: usize,
     idle_ttl: Option<Duration>,
     lru_at_cap: bool,
+    lane_threads: usize,
 }
 
 impl Default for EngineBuilder {
@@ -54,6 +55,7 @@ impl Default for EngineBuilder {
             max_sessions: DEFAULT_MAX_SESSIONS,
             idle_ttl: Some(DEFAULT_IDLE_TTL),
             lru_at_cap: true,
+            lane_threads: 1,
         }
     }
 }
@@ -105,6 +107,16 @@ impl EngineBuilder {
         self
     }
 
+    /// Threads each worker may fan a model step's lanes (layer × head
+    /// contexts) across (≥ 1). The default of 1 keeps steps serial — right
+    /// for small shapes, where scoped-thread spawn overhead outweighs the
+    /// win. Raise it for wide models over long contexts; lane order and
+    /// results are bit-identical at any setting (DESIGN.md §8).
+    pub fn lane_threads(mut self, n: usize) -> Self {
+        self.lane_threads = n;
+        self
+    }
+
     /// Reject new opens with [`ServeError::StoreAtCapacity`] when a worker
     /// store is full (after its TTL sweep) instead of evicting the LRU
     /// session — for deployments where killing a live session is worse than
@@ -131,6 +143,9 @@ impl EngineBuilder {
         if self.max_sessions == 0 {
             return fail("session_capacity must be >= 1");
         }
+        if self.lane_threads == 0 {
+            return fail("lane_threads must be >= 1");
+        }
         Ok(())
     }
 
@@ -138,10 +153,11 @@ impl EngineBuilder {
     /// each hosting a session store with this builder's capacity/TTL policy.
     pub fn build(self) -> Result<Client, ServeError> {
         let (max_sessions, idle_ttl, lru) = (self.max_sessions, self.idle_ttl, self.lru_at_cap);
+        let lanes = self.lane_threads;
         self.build_with(move || {
             let store = SessionStore::with_policy(max_sessions, idle_ttl);
             let store = if lru { store } else { store.reject_at_capacity() };
-            BesfExecutor::with_sessions(store)
+            BesfExecutor::with_sessions(store).lane_threads(lanes)
         })
     }
 
@@ -235,11 +251,6 @@ impl Client {
     /// Snapshot current metrics.
     pub fn metrics(&self) -> Metrics {
         self.core.metrics()
-    }
-
-    /// Crate-internal access for the deprecated legacy shims.
-    pub(crate) fn core(&self) -> &EngineCore {
-        &self.core
     }
 
     /// Graceful shutdown: drains in-flight work and joins every engine
@@ -604,6 +615,7 @@ mod tests {
             (EngineBuilder::new().prefill_chunk(0), "prefill_chunk"),
             (EngineBuilder::new().max_inflight_per_worker(0), "max_inflight"),
             (EngineBuilder::new().session_capacity(0), "session_capacity"),
+            (EngineBuilder::new().lane_threads(0), "lane_threads"),
             (
                 EngineBuilder::new()
                     .batch(BatchConfig { max_batch: 0, max_wait: Duration::ZERO }),
@@ -647,6 +659,38 @@ mod tests {
         assert_eq!(m.session_pins, 0);
         assert!(m.model_steps >= 3);
         client.shutdown();
+    }
+
+    #[test]
+    fn lane_parallel_engine_matches_serial_outputs() {
+        // The same multi-layer decode trace served with lane_threads(1) and
+        // lane_threads(8) must produce bit-identical step outputs — the lane
+        // fan-out is a pure scheduling change (DESIGN.md §8).
+        let mt = ModelDecodeTrace::synth(2, 3, 24, 3, 8, 0xC15E);
+        let mut outs = Vec::new();
+        for threads in [1usize, 8] {
+            let client = EngineBuilder::new()
+                .workers(1)
+                .lane_threads(threads)
+                .build()
+                .expect("build");
+            let mut h = client.open_model_session(0.6, mt.shape()).expect("open");
+            h.prefill(model_prompt(&mt)).expect("prefill");
+            assert_eq!(h.wait_prefilled(TIMEOUT).expect("prefill ack"), 24);
+            let mut per_engine = Vec::new();
+            for i in 0..mt.n_steps() {
+                let (qs, ks, vs) = mt.step_rows(i);
+                h.step(ModelStep::token(ks, vs, qs)).expect("step");
+                per_engine.push(h.wait_step(TIMEOUT).expect("step done"));
+            }
+            outs.push(per_engine);
+            client.shutdown();
+        }
+        for (a, b) in outs[0].iter().zip(&outs[1]) {
+            assert_eq!(a.context_len, b.context_len);
+            assert_eq!(a.outs, b.outs, "lane outputs must be bit-identical");
+            assert_eq!(a.kept, b.kept, "per-lane survivor counts must match");
+        }
     }
 
     #[test]

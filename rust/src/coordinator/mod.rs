@@ -25,9 +25,10 @@
 //!   [`session::SessionStore`]), driven by the continuous-batching
 //!   [`scheduler::Scheduler`] — each tick assembles one iteration batch from
 //!   all runnable sessions, admits prefills chunk-wise alongside in-flight
-//!   decodes, and streams per-token [`SessionEvent`]s. The legacy
-//!   single-head session API survives as deprecated shims over [`Client`]
-//!   ([`legacy::Engine`]).
+//!   decodes, and streams per-token [`SessionEvent`]s. A decode step can fan
+//!   its (layer, head) lanes over scoped worker threads
+//!   ([`EngineBuilder::lane_threads`], DESIGN.md §8) — bit-identical to the
+//!   serial path at every width.
 //!
 //! Every failure on this path is a typed [`ServeError`] end to end — client
 //! validation, scheduler admission, worker execution, and the
@@ -41,7 +42,6 @@ pub mod api;
 pub mod batch;
 pub mod client;
 pub mod drive;
-pub mod legacy;
 pub mod pjrt;
 pub mod router;
 pub mod scheduler;
@@ -51,8 +51,6 @@ pub use api::{EvictReason, ServeError, SessionEvent, StepResponse};
 pub use batch::{BatchConfig, Batcher};
 pub use client::{AttnTicket, Client, EngineBuilder, SessionHandle};
 pub use drive::{drive_decode, DriveReport};
-#[allow(deprecated)]
-pub use legacy::Engine;
 pub use pjrt::PjrtExecutor;
 pub use router::Router;
 pub use scheduler::{
@@ -224,6 +222,10 @@ pub struct BesfExecutor {
     /// This worker's model-session KV-caches; the scheduler pins a session's
     /// work here for the session's whole life (DESIGN.md §8–9).
     sessions: SessionStore,
+    /// Scoped worker threads a model step's (layer, head) lanes fan out over
+    /// (1 = serial through this executor's scratch — the default; see
+    /// [`EngineBuilder::lane_threads`]).
+    lane_threads: usize,
 }
 
 impl Default for BesfExecutor {
@@ -235,7 +237,15 @@ impl Default for BesfExecutor {
 impl BesfExecutor {
     /// Executor with an explicit session store (capacity / TTL policy).
     pub fn with_sessions(sessions: SessionStore) -> Self {
-        Self { radius: 5.0, scratch: BesfScratch::new(), sessions }
+        Self { radius: 5.0, scratch: BesfScratch::new(), sessions, lane_threads: 1 }
+    }
+
+    /// Set the lane-parallelism width for model decode steps (builder-style;
+    /// results are bit-identical at every width, see
+    /// [`SessionStore::step_threads`]).
+    pub fn lane_threads(mut self, n: usize) -> Self {
+        self.lane_threads = n.max(1);
+        self
     }
 }
 
@@ -280,7 +290,13 @@ impl AttnExecutor for BesfExecutor {
                 Ok((ack(len), Vec::new()))
             }
             ModelJob::Step { session, step } => {
-                let out = self.sessions.step(*session, step, &mut self.scratch, now)?;
+                let out = self.sessions.step_threads(
+                    *session,
+                    step,
+                    &mut self.scratch,
+                    self.lane_threads,
+                    now,
+                )?;
                 Ok((out, Vec::new()))
             }
             ModelJob::Close { session } => {

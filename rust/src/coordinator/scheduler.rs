@@ -60,7 +60,7 @@ pub struct ModelPrompt {
 }
 
 impl ModelPrompt {
-    /// Degenerate 1-layer/1-head prompt (the legacy single-head session API).
+    /// Degenerate 1-layer/1-head prompt (a single-attention-op session).
     pub fn single(dim: usize, seq: usize, k: Vec<f32>, v: Vec<f32>) -> Self {
         Self { shape: ModelShape::single(dim), prompt_len: seq, k: vec![k], v: vec![v] }
     }
@@ -102,8 +102,8 @@ impl ModelPrompt {
 /// One unit of per-session work for a tick: optionally append one K/V row per
 /// lane, optionally decode one query per lane (append happens first — causal
 /// self-attention appends the generated token before its successor's query
-/// runs). Empty vectors mean "skip that half", so the legacy `Append` and
-/// `Decode` ops are the two degenerate single-half cases.
+/// runs). Empty vectors mean "skip that half", so append-only and
+/// decode-only steps are the two degenerate single-half cases.
 #[derive(Debug, Clone, Default)]
 pub struct ModelStep {
     pub k_rows: Vec<Vec<f32>>,
@@ -117,12 +117,12 @@ impl ModelStep {
         Self { k_rows, v_rows, qs }
     }
 
-    /// Append-only step (what the legacy `Engine::session_append` wraps).
+    /// Append-only step: grow the per-lane caches without decoding.
     pub fn append_only(k_rows: Vec<Vec<f32>>, v_rows: Vec<Vec<f32>>) -> Self {
         Self { k_rows, v_rows, qs: Vec::new() }
     }
 
-    /// Decode-only step (what the legacy `Engine::session_decode` wraps).
+    /// Decode-only step: attend over the existing context without appending.
     pub fn decode_only(qs: Vec<Vec<f32>>) -> Self {
         Self { k_rows: Vec::new(), v_rows: Vec::new(), qs }
     }

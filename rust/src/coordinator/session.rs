@@ -211,6 +211,23 @@ impl SessionStore {
         scratch: &mut BesfScratch,
         now: Instant,
     ) -> Result<ModelStepOutput, ServeError> {
+        self.step_threads(session, step, scratch, 1, now)
+    }
+
+    /// [`SessionStore::step`] with an explicit lane-parallelism width: the
+    /// decode half of the step fans the session's (layer, head) lanes over
+    /// `lane_threads` scoped workers
+    /// ([`crate::engine::ModelContext::decode_step_threads`]). `1` is exactly
+    /// the serial path through the caller's scratch; results are
+    /// bit-identical for every width (property-tested in `engine::model`).
+    pub fn step_threads(
+        &mut self,
+        session: u64,
+        step: &ModelStep,
+        scratch: &mut BesfScratch,
+        lane_threads: usize,
+        now: Instant,
+    ) -> Result<ModelStepOutput, ServeError> {
         let e = self
             .sessions
             .get_mut(&session)
@@ -221,7 +238,7 @@ impl SessionStore {
             e.ctx.append_token(&step.k_rows, &step.v_rows).map_err(shape_err)?;
         }
         if step.has_decode() {
-            e.ctx.decode_step(&step.qs, scratch).map_err(shape_err)
+            e.ctx.decode_step_threads(&step.qs, scratch, lane_threads.max(1)).map_err(shape_err)
         } else {
             Ok(ModelStepOutput {
                 outs: Vec::new(),
@@ -293,6 +310,29 @@ mod tests {
 
         store.close(9).unwrap();
         assert_eq!(store.n_open(), 0);
+    }
+
+    #[test]
+    fn lane_parallel_step_matches_serial_step() {
+        // step_threads at any width must reproduce the serial step exactly —
+        // this is the coordinator-level handle on the engine's lane-parallel
+        // bit-identity contract.
+        let mt = trace();
+        let t0 = Instant::now();
+        let mut serial_store = SessionStore::new();
+        let mut par_store = SessionStore::new();
+        open_trace(&mut serial_store, 1, &mt, t0);
+        open_trace(&mut par_store, 1, &mt, t0);
+        let mut scratch = BesfScratch::new();
+        for i in 0..mt.n_steps() {
+            let (qs, ks, vs) = mt.step_rows(i);
+            let step = ModelStep::token(ks, vs, qs);
+            let a = serial_store.step(1, &step, &mut scratch, t0).unwrap();
+            let b = par_store.step_threads(1, &step, &mut scratch, 8, t0).unwrap();
+            assert_eq!(a.outs, b.outs, "step {i}");
+            assert_eq!(a.kept, b.kept, "step {i}");
+            assert_eq!(a.context_len, b.context_len, "step {i}");
+        }
     }
 
     #[test]

@@ -17,7 +17,10 @@
 //! sparse V accumulation; across heads and queries it parallelizes with
 //! `std::thread::scope` (the offline build has no rayon), deterministically:
 //! results are returned in `[head][query]` order regardless of thread count.
-//! Each scoped worker owns one [`BesfScratch`], so steady-state selection
+//! The unit of work is one (head, query block of ≤ [`MAX_SELECT_BLOCK`]) run
+//! through the query-blocked kernel ([`BesfScratch::select_block`]) — one
+//! pass over the head's K planes per round serves the whole block — and each
+//! scoped worker owns one [`BesfScratch`], so steady-state selection
 //! allocates nothing per query (DESIGN.md §3).
 
 pub mod model;
@@ -30,9 +33,15 @@ use crate::algo::lats::Lats;
 use crate::attention::attention_int12_sparse;
 use crate::config::LatsConfig;
 use crate::quant::bitplane::{plane_weight, BitPlanes, QueryPlanes, N_BITS};
-use crate::quant::margin::BitMargins;
 use crate::workload::{MultiHeadAttn, QuantAttn};
 use std::borrow::Cow;
+use std::ops::Range;
+
+/// Upper bound on queries per blocked-select run — the `par_map` task
+/// granularity. Small enough that a few heads still spread across workers,
+/// large enough that one K-plane pass is amortized over a meaningful block
+/// (see EXPERIMENTS.md §Perf for measured block-size scaling).
+pub const MAX_SELECT_BLOCK: usize = 16;
 
 /// Which selection rule the engine applies (the Fig. 13 (b) ablation axis).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -135,9 +144,15 @@ impl<'a> HeadContext<'a> {
         assert_eq!(q.len(), qa.dim(), "query length != dim");
         let (qi, qp) = crate::quant::quantize(q);
         let lats = Lats::new(self.cfg, qa.dim(), qp.scale, qa.kp.scale);
-        let margins = BitMargins::generate(&qi);
-        let sel =
-            scratch.select_with(&qi, &self.planes, &margins, move |_r, ml| lats.threshold(ml));
+        // Routed through the blocked kernel at block size 1 so decode and
+        // batch paths share one inner loop (bit-identical to the per-query
+        // scratch path — property-tested in `algo::besf`).
+        let sel = scratch
+            .select_block_with(std::slice::from_ref(&qi), &self.planes, move |_r, ml| {
+                lats.threshold(ml)
+            })
+            .pop()
+            .expect("one query in, one result out");
         let out = attention_int12_sparse(&qi, &qa.k, &qa.v, qp, qa.kp, qa.vp, &sel.survivors);
         QueryResult { sel, out }
     }
@@ -182,6 +197,59 @@ impl<'a> HeadContext<'a> {
             // full-row fetches), hence the zeroed complexity.
             SelectionPolicy::Dense => self.dense_keep_all(qi),
         }
+    }
+
+    /// Blocked selection for a contiguous run of this head's queries: routes
+    /// Lats/Static through the query-blocked kernel
+    /// ([`BesfScratch::select_block`]) over the cached per-query
+    /// [`QueryPlanes`], so one pass over this head's K planes serves the
+    /// whole run; Dense takes the per-query keep-all fast path. Results are
+    /// in query order and bit-identical to calling
+    /// [`HeadContext::select_scratch`] per query (property-tested here and
+    /// in `algo::besf`).
+    pub fn select_block_scratch(
+        &self,
+        qis: Range<usize>,
+        policy: SelectionPolicy,
+        scratch: &mut BesfScratch,
+    ) -> Vec<BesfResult> {
+        match policy {
+            SelectionPolicy::Lats => {
+                let lats = self.lats;
+                scratch.select_block(
+                    &self.qplanes[qis.clone()],
+                    &self.qa.queries[qis],
+                    &self.planes,
+                    move |_r, ml| lats.threshold(ml),
+                )
+            }
+            SelectionPolicy::Static(eta) => scratch.select_block(
+                &self.qplanes[qis.clone()],
+                &self.qa.queries[qis],
+                &self.planes,
+                move |_r, _ml| eta,
+            ),
+            SelectionPolicy::Dense => qis.map(|qi| self.dense_keep_all(qi)).collect(),
+        }
+    }
+
+    /// Select + accumulate for a contiguous run of queries through the
+    /// blocked kernel — the engine workers' steady-state unit of work.
+    pub fn run_queries_block_scratch(
+        &self,
+        qis: Range<usize>,
+        policy: SelectionPolicy,
+        scratch: &mut BesfScratch,
+    ) -> Vec<QueryResult> {
+        let start = qis.start;
+        self.select_block_scratch(qis, policy, scratch)
+            .into_iter()
+            .enumerate()
+            .map(|(i, sel)| {
+                let out = self.accumulate(start + i, &sel);
+                QueryResult { sel, out }
+            })
+            .collect()
     }
 
     /// Fast path for [`SelectionPolicy::Dense`]: every token survives every
@@ -280,7 +348,8 @@ impl<'a> AttentionEngine<'a> {
         Self { heads: mha.heads.iter().map(|h| HeadContext::new(h, cfg)).collect() }
     }
 
-    /// Prepare a legacy single-head problem.
+    /// Prepare a single-head problem (one-head convenience over
+    /// [`AttentionEngine::new`]).
     pub fn single(qa: &'a QuantAttn, cfg: LatsConfig) -> Self {
         Self { heads: vec![HeadContext::new(qa, cfg)] }
     }
@@ -291,8 +360,8 @@ impl<'a> AttentionEngine<'a> {
 
     /// Selection decisions for every (head, query), parallel across all cores.
     pub fn select_all(&self, policy: SelectionPolicy) -> Vec<Vec<BesfResult>> {
-        self.par_map(default_threads(), move |hc, qi, scratch| {
-            hc.select_scratch(qi, policy, scratch)
+        self.par_map(default_threads(), move |hc, qis, scratch| {
+            hc.select_block_scratch(qis, policy, scratch)
         })
     }
 
@@ -308,25 +377,33 @@ impl<'a> AttentionEngine<'a> {
         policy: SelectionPolicy,
         threads: usize,
     ) -> Vec<Vec<QueryResult>> {
-        self.par_map(threads, move |hc, qi, scratch| hc.run_query_scratch(qi, policy, scratch))
+        self.par_map(threads, move |hc, qis, scratch| {
+            hc.run_queries_block_scratch(qis, policy, scratch)
+        })
     }
 
-    /// Map `f` over every (head, query) pair on `threads` scoped workers,
-    /// returning results grouped `[head][query]` in deterministic order.
-    /// Each worker owns one [`BesfScratch`] for its whole task chunk, so the
+    /// Map `f` over every (head, contiguous query block) on `threads` scoped
+    /// workers, returning results grouped `[head][query]` in deterministic
+    /// order. One task is one run of at most [`MAX_SELECT_BLOCK`] queries —
+    /// the unit the query-blocked kernel amortizes a K-plane pass over — and
+    /// each worker owns one [`BesfScratch`] for its whole task chunk, so the
     /// steady-state select loop performs no per-query heap allocation.
     fn par_map<T, F>(&self, threads: usize, f: F) -> Vec<Vec<T>>
     where
         T: Send,
-        F: Fn(&HeadContext<'a>, usize, &mut BesfScratch) -> T + Sync,
+        F: Fn(&HeadContext<'a>, Range<usize>, &mut BesfScratch) -> Vec<T> + Sync,
     {
-        let tasks: Vec<(usize, usize)> = self
-            .heads
-            .iter()
-            .enumerate()
-            .flat_map(|(h, hc)| (0..hc.queries()).map(move |qi| (h, qi)))
-            .collect();
-        let mut flat: Vec<Option<T>> = Vec::with_capacity(tasks.len());
+        let mut tasks: Vec<(usize, Range<usize>)> = Vec::new();
+        for (h, hc) in self.heads.iter().enumerate() {
+            let nq = hc.queries();
+            let mut start = 0;
+            while start < nq {
+                let end = (start + MAX_SELECT_BLOCK).min(nq);
+                tasks.push((h, start..end));
+                start = end;
+            }
+        }
+        let mut flat: Vec<Option<Vec<T>>> = Vec::with_capacity(tasks.len());
         flat.resize_with(tasks.len(), || None);
 
         let threads = threads.clamp(1, tasks.len().max(1));
@@ -337,8 +414,8 @@ impl<'a> AttentionEngine<'a> {
             for (slot_chunk, task_chunk) in flat.chunks_mut(chunk).zip(tasks.chunks(chunk)) {
                 s.spawn(move || {
                     let mut scratch = BesfScratch::new();
-                    for (slot, &(h, qi)) in slot_chunk.iter_mut().zip(task_chunk) {
-                        *slot = Some(f(&heads[h], qi, &mut scratch));
+                    for (slot, (h, qis)) in slot_chunk.iter_mut().zip(task_chunk) {
+                        *slot = Some(f(&heads[*h], qis.clone(), &mut scratch));
                     }
                 });
             }
@@ -346,8 +423,8 @@ impl<'a> AttentionEngine<'a> {
 
         let mut out: Vec<Vec<T>> =
             self.heads.iter().map(|hc| Vec::with_capacity(hc.queries())).collect();
-        for (slot, &(h, _)) in flat.into_iter().zip(&tasks) {
-            out[h].push(slot.expect("scoped worker filled its slots"));
+        for (slot, (h, _)) in flat.into_iter().zip(&tasks) {
+            out[*h].extend(slot.expect("scoped worker filled its slots"));
         }
         out
     }
@@ -470,6 +547,62 @@ mod tests {
                 assert_eq!(a.out, b.out);
             }
         }
+    }
+
+    #[test]
+    fn blocked_engine_runs_match_per_query_paths_for_every_policy() {
+        // The engine workers' blocked unit of work must be bit-identical to
+        // the per-query scratch path for every selection policy, including
+        // run splits that leave a partial tail block.
+        let qa = head(96, 72, 7, 0xB7);
+        let hc = HeadContext::new(&qa, LatsConfig::default());
+        let eta = hc.static_threshold();
+        let mut scratch = BesfScratch::new();
+        for policy in [SelectionPolicy::Lats, SelectionPolicy::Static(eta), SelectionPolicy::Dense]
+        {
+            for blk in [1usize, 3, 7] {
+                let mut sels = Vec::new();
+                let mut runs = Vec::new();
+                let mut start = 0;
+                while start < 7 {
+                    let end = (start + blk).min(7);
+                    sels.extend(hc.select_block_scratch(start..end, policy, &mut scratch));
+                    runs.extend(hc.run_queries_block_scratch(start..end, policy, &mut scratch));
+                    start = end;
+                }
+                for qi in 0..7 {
+                    let want = hc.select_scratch(qi, policy, &mut scratch);
+                    assert_eq!(sels[qi].survivors, want.survivors, "{policy:?} blk {blk} q{qi}");
+                    assert_eq!(sels[qi].death_round, want.death_round, "{policy:?} blk {blk}");
+                    assert_eq!(sels[qi].scores, want.scores, "{policy:?} blk {blk}");
+                    assert_eq!(sels[qi].complexity, want.complexity, "{policy:?} blk {blk}");
+                    let qr = hc.run_query_scratch(qi, policy, &mut scratch);
+                    assert_eq!(runs[qi].sel.survivors, qr.sel.survivors);
+                    assert_eq!(runs[qi].out, qr.out, "{policy:?} blk {blk} q{qi} output");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_scratch_matches_per_query_select_path() {
+        // decode_scratch now routes through the blocked kernel at block size
+        // 1; it must keep producing exactly what the single-query scratch
+        // path produces for the same quantized query.
+        let qa = head(64, 40, 1, 0xDB);
+        let cached = HeadContext::from_owned(qa.clone(), LatsConfig::default());
+        let mut scratch = BesfScratch::new();
+        let qf: Vec<f32> = (0..40).map(|i| ((i as f32) - 20.0) / 23.0).collect();
+        let got = cached.decode_scratch(&qf, &mut scratch);
+        let (qi, qp) = crate::quant::quantize(&qf);
+        let lats = Lats::new(cached.cfg, 40, qp.scale, cached.qa.kp.scale);
+        let margins = BitMargins::generate(&qi);
+        let want =
+            scratch.select_with(&qi, &cached.planes, &margins, |_r, ml| lats.threshold(ml));
+        assert_eq!(got.sel.survivors, want.survivors);
+        assert_eq!(got.sel.death_round, want.death_round);
+        assert_eq!(got.sel.scores, want.scores);
+        assert_eq!(got.sel.complexity, want.complexity);
     }
 
     #[test]

@@ -7,7 +7,10 @@
 //! head contexts that appends one token's K/V rows across the whole stack and
 //! runs one fused BESF/LATS decode step per tick — reusing a single
 //! [`BesfScratch`] across all lanes of the step, so a model step allocates no
-//! per-lane working memory.
+//! per-lane working memory. Steps can also fan their lanes out over scoped
+//! worker threads ([`ModelContext::decode_step_threads`], DESIGN.md §8) —
+//! per-worker scratch, deterministic lh-major output order, bit-identical to
+//! the serial path for every thread count (property-tested).
 //!
 //! Lanes are stored **lh-major** (`lane = layer * n_heads + head`); every
 //! per-lane slice argument (`prompt K/V chunks, appended rows, queries`)
@@ -43,8 +46,8 @@ impl ModelShape {
         Self { n_layers, n_heads, dim }
     }
 
-    /// Degenerate single-op shape: one layer, one head (what the legacy
-    /// single-head session API maps onto).
+    /// Degenerate single-op shape: one layer, one head (what a
+    /// single-attention-op session maps onto).
     pub fn single(dim: usize) -> Self {
         Self { n_layers: 1, n_heads: 1, dim }
     }
@@ -186,6 +189,36 @@ impl ModelContext {
             .collect()
     }
 
+    /// Lane-parallel [`ModelContext::decode_layer`]: the layer's heads fan
+    /// out over `threads` scoped workers (per-worker [`BesfScratch`], the
+    /// same pattern as `AttentionEngine::par_map`), results in deterministic
+    /// `[head]` order. `threads <= 1` is exactly the serial path through the
+    /// caller's scratch; results are bit-identical for every thread count
+    /// (tested) because lanes are independent and each worker's arithmetic
+    /// is the unchanged per-lane decode.
+    pub fn decode_layer_threads(
+        &self,
+        layer: usize,
+        qs: &[Vec<f32>],
+        scratch: &mut BesfScratch,
+        threads: usize,
+    ) -> Result<Vec<QueryResult>> {
+        if threads <= 1 || self.shape.n_heads <= 1 {
+            return self.decode_layer(layer, qs, scratch);
+        }
+        anyhow::ensure!(layer < self.shape.n_layers, "layer {layer} out of range");
+        anyhow::ensure!(
+            qs.len() == self.shape.n_heads,
+            "layer decode needs one query per head ({} heads)",
+            self.shape.n_heads
+        );
+        for q in qs {
+            anyhow::ensure!(q.len() == self.shape.dim, "query length != dim");
+        }
+        let base = layer * self.shape.n_heads;
+        Ok(par_lanes(&self.lanes[base..base + self.shape.n_heads], qs, threads))
+    }
+
     /// One full model decode step: per-lane query calibration + BESF/LATS
     /// selection + sparse V over every (layer, head), all through ONE
     /// scratch. `qs` is lh-major, one query per lane.
@@ -210,6 +243,67 @@ impl ModelContext {
         }
         Ok(ModelStepOutput { outs, kept, context_len: self.context_len() })
     }
+
+    /// Lane-parallel [`ModelContext::decode_step`] (DESIGN.md §8): all
+    /// `n_layers × n_heads` lanes of the step fan out over `threads` scoped
+    /// workers at once — lanes are mutually independent within a step (layer
+    /// feedback, when a driver needs it, goes through
+    /// [`ModelContext::decode_layer_threads`] instead). `threads <= 1` is
+    /// exactly the serial [`ModelContext::decode_step`] through the caller's
+    /// scratch: zero extra threads spawned, zero per-step allocation.
+    pub fn decode_step_threads(
+        &self,
+        qs: &[Vec<f32>],
+        scratch: &mut BesfScratch,
+        threads: usize,
+    ) -> Result<ModelStepOutput> {
+        if threads <= 1 || self.lanes.len() <= 1 {
+            return self.decode_step(qs, scratch);
+        }
+        anyhow::ensure!(
+            qs.len() == self.lanes.len(),
+            "model step needs one query per lane ({} lanes)",
+            self.lanes.len()
+        );
+        for q in qs {
+            anyhow::ensure!(q.len() == self.shape.dim, "query length != dim");
+        }
+        let results = par_lanes(&self.lanes, qs, threads);
+        let mut outs = Vec::with_capacity(qs.len());
+        let mut kept = Vec::with_capacity(qs.len());
+        for qr in results {
+            kept.push(qr.sel.survivors.len());
+            outs.push(qr.out);
+        }
+        Ok(ModelStepOutput { outs, kept, context_len: self.context_len() })
+    }
+}
+
+/// Map `decode_scratch` over `lanes[i]`/`qs[i]` pairs on scoped worker
+/// threads — one [`BesfScratch`] per worker, one pre-sized output slot per
+/// lane, so the result order is lane order regardless of which worker ran
+/// which chunk. Callers validate lane counts and query widths first;
+/// `decode_scratch` itself would panic on a bad width inside a worker.
+fn par_lanes(lanes: &[HeadContext<'static>], qs: &[Vec<f32>], threads: usize) -> Vec<QueryResult> {
+    debug_assert_eq!(lanes.len(), qs.len());
+    let n = lanes.len();
+    let mut flat: Vec<Option<QueryResult>> = Vec::with_capacity(n);
+    flat.resize_with(n, || None);
+    let threads = threads.clamp(1, n.max(1));
+    let chunk = n.div_ceil(threads).max(1);
+    std::thread::scope(|s| {
+        for ((slot_chunk, lane_chunk), q_chunk) in
+            flat.chunks_mut(chunk).zip(lanes.chunks(chunk)).zip(qs.chunks(chunk))
+        {
+            s.spawn(move || {
+                let mut scratch = BesfScratch::new();
+                for ((slot, lane), q) in slot_chunk.iter_mut().zip(lane_chunk).zip(q_chunk) {
+                    *slot = Some(lane.decode_scratch(q, &mut scratch));
+                }
+            });
+        }
+    });
+    flat.into_iter().map(|s| s.expect("scoped worker filled its slot")).collect()
 }
 
 #[cfg(test)]
@@ -331,6 +425,63 @@ mod tests {
         let rb = b.decode_step(&qs, &mut scratch).unwrap();
         assert_eq!(ra.outs, rb.outs);
         assert_eq!(ra.kept, rb.kept);
+    }
+
+    #[test]
+    fn lane_parallel_decode_step_is_bit_identical_across_thread_counts() {
+        // The lane-parallel step must reproduce the serial path exactly for
+        // thread counts {1, 8} — including 8 workers over fewer-than-8 and
+        // more-than-8 lane stacks (partial chunks both ways).
+        for (layers, heads, seed) in [(2usize, 3usize, 0x81u64), (3, 4, 0x82), (1, 1, 0x83)] {
+            let mt = ModelDecodeTrace::synth(layers, heads, 10, 3, 8, seed);
+            let (pk, pv) = mt.prompt();
+            let mut ctx =
+                ModelContext::open(mt.shape(), LatsConfig::default(), &pk, &pv, mt.prompt_len)
+                    .unwrap();
+            let mut scratch = BesfScratch::new();
+            for i in 0..mt.n_steps() {
+                let (qs, krs, vrs) = mt.step_rows(i);
+                ctx.append_token(&krs, &vrs).unwrap();
+                let serial = ctx.decode_step(&qs, &mut scratch).unwrap();
+                for threads in [1usize, 8] {
+                    let par = ctx.decode_step_threads(&qs, &mut scratch, threads).unwrap();
+                    assert_eq!(par.outs, serial.outs, "{layers}x{heads} step {i} t{threads}");
+                    assert_eq!(par.kept, serial.kept, "{layers}x{heads} step {i} t{threads}");
+                    assert_eq!(par.context_len, serial.context_len);
+                }
+                for layer in 0..layers {
+                    let base = layer * heads;
+                    let lqs = &qs[base..base + heads];
+                    let serial_layer = ctx.decode_layer(layer, lqs, &mut scratch).unwrap();
+                    for threads in [1usize, 8] {
+                        let par =
+                            ctx.decode_layer_threads(layer, lqs, &mut scratch, threads).unwrap();
+                        assert_eq!(par.len(), serial_layer.len());
+                        for (a, b) in par.iter().zip(&serial_layer) {
+                            assert_eq!(a.sel.survivors, b.sel.survivors, "layer {layer}");
+                            assert_eq!(a.sel.scores, b.sel.scores, "layer {layer}");
+                            assert_eq!(a.out, b.out, "layer {layer}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_parallel_step_validates_like_serial() {
+        let mt = ModelDecodeTrace::synth(1, 2, 4, 1, 4, 0x84);
+        let (pk, pv) = mt.prompt();
+        let ctx = ModelContext::open(mt.shape(), LatsConfig::default(), &pk, &pv, 4).unwrap();
+        let mut scratch = BesfScratch::new();
+        // Wrong lane count and wrong query width must error, not panic a
+        // worker, for threaded and serial calls alike.
+        for threads in [1usize, 8] {
+            assert!(ctx.decode_step_threads(&[vec![0.0; 4]], &mut scratch, threads).is_err());
+            let bad_width = vec![vec![0.0; 3], vec![0.0; 4]];
+            assert!(ctx.decode_step_threads(&bad_width, &mut scratch, threads).is_err());
+            assert!(ctx.decode_layer_threads(5, &bad_width, &mut scratch, threads).is_err());
+        }
     }
 
     #[test]

@@ -1,3 +1,8 @@
+// The opt-in `simd` feature selects the `std::simd` body of
+// `quant::bitplane::and_popcount` (see Cargo.toml); it needs the nightly
+// portable-SIMD gate. The default build never touches this attribute.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 //! # BitStopper
 //!
 //! Full-system reproduction of *"BitStopper: An Efficient Transformer Attention

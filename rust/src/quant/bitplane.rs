@@ -33,6 +33,13 @@
 //! (`b = 0`, weight `-2^11`) folds in through the same signed `w_b` sum.
 //! Equivalence with the scalar walk is property-tested below and in
 //! `algo::besf` (see EXPERIMENTS.md §Perf for the measured speedup).
+//!
+//! The multi-word AND+popcount reduction itself lives in [`and_popcount`]
+//! (word-unrolled by default, `std::simd` under the opt-in `simd` feature)
+//! and is shared by the single-query kernel and the query-blocked form
+//! ([`plane_dot_sliced_block`]), which reduces one loaded K-plane row against
+//! a whole block of queries while the row is hot — the memory shape
+//! `algo::besf::BesfScratch::select_block` is built on.
 
 use super::IntMatrix;
 
@@ -58,6 +65,80 @@ pub fn plane_weight(r: usize) -> i64 {
 pub fn remaining_weight(r: usize) -> i64 {
     debug_assert!(r < N_BITS);
     (1i64 << (N_BITS - 1 - r)) - 1
+}
+
+/// Multi-word AND+popcount reduction `Σ_w popcount(a[w] & b[w])` — the wide
+/// BRAT core shared by the single-query ([`QueryPlanes::plane_dot_sliced`])
+/// and query-blocked ([`plane_dot_sliced_block`]) kernels.
+///
+/// The default body unrolls four words per step so the four `count_ones`
+/// (one `POPCNT` each on x86-64) retire independently instead of serializing
+/// through one accumulator dependency chain. The opt-in `simd` cargo feature
+/// swaps in a `std::simd::u64x4` body that LLVM lowers to AVX-512
+/// `VPOPCNTDQ` (or the NEON `CNT`+`ADDV` tree) on capable targets. Both
+/// bodies are exact and bit-identical — the feature changes instruction
+/// selection, never arithmetic — and the scalar default keeps the offline
+/// build on stable Rust. The result fits `u32` because callers never pass
+/// more than `N_BITS · ceil(dim/64)` words of real planes.
+#[cfg(not(feature = "simd"))]
+#[inline]
+pub fn and_popcount(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0u32;
+    for (ca, cb) in a.chunks_exact(4).zip(b.chunks_exact(4)) {
+        acc += (ca[0] & cb[0]).count_ones()
+            + (ca[1] & cb[1]).count_ones()
+            + (ca[2] & cb[2]).count_ones()
+            + (ca[3] & cb[3]).count_ones();
+    }
+    let ra = a.chunks_exact(4).remainder();
+    let rb = b.chunks_exact(4).remainder();
+    for (&x, &y) in ra.iter().zip(rb) {
+        acc += (x & y).count_ones();
+    }
+    acc
+}
+
+/// `std::simd` body of [`and_popcount`] — see the scalar variant's docs.
+#[cfg(feature = "simd")]
+#[inline]
+pub fn and_popcount(a: &[u64], b: &[u64]) -> u32 {
+    use std::simd::num::SimdUint;
+    use std::simd::u64x4;
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0u64;
+    for (ca, cb) in a.chunks_exact(4).zip(b.chunks_exact(4)) {
+        acc += (u64x4::from_slice(ca) & u64x4::from_slice(cb)).count_ones().reduce_sum();
+    }
+    let ra = a.chunks_exact(4).remainder();
+    let rb = b.chunks_exact(4).remainder();
+    for (&x, &y) in ra.iter().zip(rb) {
+        acc += (x & y).count_ones() as u64;
+    }
+    acc as u32
+}
+
+/// Block form of the sliced kernel: one loaded round-`r` K-plane row reduced
+/// against a block of pre-decomposed queries while the row is hot in cache.
+///
+/// For every query index `q` whose bit is set in `mask` (the per-key block
+/// occupancy mask — at most 64 queries per block), writes the unweighted dot
+/// `Σ_d q_q[d]·kbit(d)` into `dots[q]`; slots whose bit is clear are left
+/// untouched. This is the "one plane load, Q AND+popcount reductions" memory
+/// shape of query-blocked BESF (`algo::besf::BesfScratch::select_block`,
+/// DESIGN.md §3): the per-query path re-streams all K plane rows once per
+/// query, the block form streams them once per *block*. Each per-query dot
+/// is exactly [`QueryPlanes::plane_dot_sliced`], so results are bit-identical
+/// to the per-query kernel by construction.
+pub fn plane_dot_sliced_block(qps: &[QueryPlanes], k_row: &[u64], mask: u64, dots: &mut [i64]) {
+    debug_assert!(qps.len() <= 64, "block form tracks at most 64 queries per mask word");
+    debug_assert!(dots.len() >= qps.len());
+    let mut m = mask;
+    while m != 0 {
+        let q = m.trailing_zeros() as usize;
+        m &= m - 1;
+        dots[q] = qps[q].plane_dot_sliced(k_row);
+    }
 }
 
 /// Pack one ≤64-dim chunk of INT12 values into its twelve plane words
@@ -277,24 +358,17 @@ impl QueryPlanes {
     /// `Σ_d q[d]·kbit(d)` against one packed K-plane row, word-parallel:
     /// `Σ_b plane_weight(b) · popcount(qplane_b & k_row)`.
     ///
-    /// K-word-major so each `k_row` word is loaded once and ANDed against all
-    /// twelve query planes; per-plane popcounts accumulate in a register
-    /// array and fold through the signed weights once at the end. A per-plane
-    /// count is at most `dim` so `u32` never overflows.
+    /// Plane-major over the wide [`and_popcount`] core: each query plane is
+    /// one contiguous `words_per_row` run, so the twelve reductions are
+    /// twelve unrolled (or SIMD, under the `simd` feature) AND+popcount
+    /// sweeps over `k_row`, folded through the signed plane weights. A
+    /// per-plane count is at most `dim` so `u32` never overflows.
     pub fn plane_dot_sliced(&self, k_row: &[u64]) -> i64 {
         debug_assert_eq!(k_row.len(), self.words_per_row);
         let wpr = self.words_per_row;
-        let mut counts = [0u32; N_BITS];
-        for (w, &kw) in k_row.iter().enumerate() {
-            if kw == 0 {
-                continue;
-            }
-            for (b, c) in counts.iter_mut().enumerate() {
-                *c += (self.words[b * wpr + w] & kw).count_ones();
-            }
-        }
         let mut acc: i64 = 0;
-        for (b, &c) in counts.iter().enumerate() {
+        for b in 0..N_BITS {
+            let c = and_popcount(&self.words[b * wpr..(b + 1) * wpr], k_row);
             acc += plane_weight(b) * c as i64;
         }
         acc
@@ -485,6 +559,59 @@ mod tests {
                 assert_eq!(full, k.dot_row(j, &q), "dim {dim} key {j}");
             }
         }
+    }
+
+    #[test]
+    fn and_popcount_matches_naive_reduction_across_unroll_edges() {
+        // Lengths straddle the 4-word unroll boundary (0..=9 covers empty,
+        // remainder-only, exact multiples, and multiple+remainder shapes).
+        let mut rng = crate::util::SplitMix64::new(0xC0C0);
+        for len in 0usize..=9 {
+            for _ in 0..8 {
+                let a: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+                let b: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+                let naive: u32 = a.iter().zip(&b).map(|(&x, &y)| (x & y).count_ones()).sum();
+                assert_eq!(and_popcount(&a, &b), naive, "len {len}");
+            }
+        }
+        assert_eq!(and_popcount(&[u64::MAX; 7], &[u64::MAX; 7]), 7 * 64);
+    }
+
+    #[test]
+    fn prop_block_dots_equal_per_query_sliced_for_any_mask() {
+        // The block form with an arbitrary occupancy mask must write exactly
+        // the masked queries' sliced dots and leave unmasked slots untouched.
+        check("plane_dot_sliced_block == per-query plane_dot_sliced", 60, |rng| {
+            let dim = 1 + rng.below(200) as usize; // crosses 64, 128, 192
+            let nq = 1 + rng.below(8) as usize;
+            let k = rand_matrix(rng, 1, dim);
+            let bp = BitPlanes::decompose(&k);
+            let qs: Vec<Vec<i16>> = (0..nq)
+                .map(|_| {
+                    (0..dim).map(|_| rng.range_i64(QMIN as i64, QMAX as i64) as i16).collect()
+                })
+                .collect();
+            let qps: Vec<QueryPlanes> = qs.iter().map(|q| QueryPlanes::decompose(q)).collect();
+            let mask = rng.next_u64() & ((1u64 << nq) - 1);
+            let sentinel = i64::MIN + 7;
+            let mut dots = vec![sentinel; nq];
+            for r in 0..N_BITS {
+                dots.fill(sentinel);
+                plane_dot_sliced_block(&qps, bp.row_words(r, 0), mask, &mut dots);
+                for (q, qp) in qps.iter().enumerate() {
+                    if mask & (1 << q) != 0 {
+                        assert_eq!(
+                            dots[q],
+                            qp.plane_dot_sliced(bp.row_words(r, 0)),
+                            "round {r} query {q}"
+                        );
+                        assert_eq!(dots[q], bp.plane_dot(r, 0, &qs[q]), "round {r} vs scalar");
+                    } else {
+                        assert_eq!(dots[q], sentinel, "unmasked slot {q} touched");
+                    }
+                }
+            }
+        });
     }
 
     #[test]

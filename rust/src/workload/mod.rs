@@ -242,7 +242,7 @@ impl MultiHeadAttn {
         Self { heads }
     }
 
-    /// Wrap a legacy single-head problem.
+    /// Wrap a single-head problem as a one-head multi-head workload.
     pub fn from_single(qa: QuantAttn) -> Self {
         Self { heads: vec![qa] }
     }

@@ -1,25 +1,36 @@
 #!/usr/bin/env python3
-"""Compare a fresh BENCH_serve.json against the committed baseline.
+"""Compare fresh bench JSON against the committed baselines.
 
 Usage:
-    scripts/check_serve_trend.py [CURRENT] [BASELINE]
+    scripts/check_serve_trend.py [SERVE] [SERVE_BASELINE] [HOTPATH] [HOTPATH_BASELINE]
 
-CURRENT  defaults to BENCH_serve.json        (written by `cargo bench --bench
-                                              hotpath -- --serve-only`)
-BASELINE defaults to BENCH_serve.baseline.json (committed; refresh it
-                                              deliberately when a PR is
-                                              *supposed* to change serving
-                                              cost)
+SERVE            defaults to BENCH_serve.json          (written by
+                                                        `cargo bench --bench hotpath`)
+SERVE_BASELINE   defaults to BENCH_serve.baseline.json (committed)
+HOTPATH          defaults to BENCH_hotpath.json        (same bench run)
+HOTPATH_BASELINE defaults to BENCH_hotpath.baseline.json (committed)
 
-Policy (ROADMAP "BENCH_serve.json trend tracking in CI"):
+Policy (ROADMAP "BENCH trend tracking in CI"):
 
 * Every `serve_decode_b*` cost/token row is compared by p50 (more robust
-  than the mean on shared CI machines — see EXPERIMENTS.md §Perf).
-* A row more than REGRESSION_PCT slower than the baseline fails the check.
-* Rows present in only one file are reported but do not fail (bench suites
-  may grow).
-* A missing baseline passes with an instruction to commit one: the first
-  toolchain run seeds the trend.
+  than the mean on shared CI machines — see EXPERIMENTS.md §Perf). A row
+  more than REGRESSION_PCT slower than its baseline fails the check.
+* Every derived ratio whose name contains "speedup" — in BOTH files — is a
+  machine-independent higher-is-better number (kernel A vs kernel B on the
+  same box). One dropping below RATIO_FLOOR × baseline fails the check.
+  Other derived keys (thread counts, growth factors, parity rows) are
+  informational only.
+* Keys present in only one file are reported but do not fail (bench suites
+  may grow; baselines may be seeded sparsely).
+* A missing baseline file passes with an instruction to commit one; a
+  missing hotpath current file passes with a note (serve-only runs).
+* A baseline carrying `"seeded": true` was hand-written as a conservative
+  bound rather than captured from a run — the check still gates, but the
+  note below reminds you to replace it with measured numbers.
+
+Refresh a baseline deliberately, in the same PR that is *supposed* to move
+the numbers:  cp BENCH_serve.json BENCH_serve.baseline.json  (same for
+hotpath) — and strip any `"seeded"` flag by doing so.
 
 Exit codes: 0 ok / baseline missing, 1 regression, 2 malformed input.
 """
@@ -28,11 +39,15 @@ import json
 import sys
 from pathlib import Path
 
-REGRESSION_PCT = 10.0
+REGRESSION_PCT = 10.0  # serve rows: fail if > +10% slower
+RATIO_FLOOR = 0.90     # speedup ratios: fail if < 90% of baseline
 
 
-def load_rows(path: Path):
-    doc = json.loads(path.read_text())
+def load_doc(path: Path):
+    return json.loads(path.read_text())
+
+
+def serve_rows(doc):
     rows = {}
     for row in doc.get("rows", []):
         name = row.get("name", "")
@@ -41,56 +56,115 @@ def load_rows(path: Path):
     return rows
 
 
-def main(argv):
-    current_path = Path(argv[1] if len(argv) > 1 else "BENCH_serve.json")
-    baseline_path = Path(argv[2] if len(argv) > 2 else "BENCH_serve.baseline.json")
+def speedup_ratios(doc):
+    return {
+        name: float(v)
+        for name, v in doc.get("derived", {}).items()
+        if "speedup" in name
+    }
 
-    if not current_path.exists():
-        print(f"error: {current_path} not found — run "
-              "`cargo bench --bench hotpath -- --serve-only` first")
-        return 2
-    if not baseline_path.exists():
-        print(f"note: no committed baseline at {baseline_path}; passing.")
-        print(f"      seed the trend with: cp {current_path} {baseline_path}")
-        return 0
 
-    try:
-        current = load_rows(current_path)
-        baseline = load_rows(baseline_path)
-    except (json.JSONDecodeError, ValueError) as e:
-        print(f"error: malformed bench json: {e}")
-        return 2
-    if not current:
-        print(f"error: {current_path} has no serve_decode_* rows")
-        return 2
+def note_if_seeded(doc, path):
+    if doc.get("seeded"):
+        print(f"note: {path} is a hand-seeded conservative bound, not a "
+              "measured run;")
+        print(f"      replace it with real numbers when a toolchain run is "
+              f"available: cp {str(path).replace('.baseline', '')} {path}")
 
-    failures = []
-    print(f"serve cost/token trend vs {baseline_path} "
-          f"(fail threshold: +{REGRESSION_PCT:.0f}%)")
+
+def check_serve_rows(current, baseline, failures):
+    print(f"serve cost/token trend (p50, fail threshold: +{REGRESSION_PCT:.0f}%)")
     for name in sorted(set(current) | set(baseline)):
         if name not in current:
-            print(f"  {name:<24} missing from current run (row removed?)")
+            print(f"  {name:<28} missing from current run (row removed?)")
             continue
         if name not in baseline:
-            print(f"  {name:<24} {current[name]:9.3f} ms/token  (new row, no baseline)")
+            print(f"  {name:<28} {current[name]:9.3f} ms/token  (new row, no baseline)")
             continue
         base, cur = baseline[name], current[name]
         delta_pct = 100.0 * (cur - base) / base if base > 0 else float("inf")
         verdict = "ok"
         if delta_pct > REGRESSION_PCT:
             verdict = "REGRESSION"
-            failures.append((name, base, cur, delta_pct))
-        print(f"  {name:<24} {base:9.3f} -> {cur:9.3f} ms/token "
+            failures.append(name)
+        print(f"  {name:<28} {base:9.3f} -> {cur:9.3f} ms/token "
               f"({delta_pct:+6.1f}%)  {verdict}")
 
+
+def check_ratios(label, current, baseline, failures):
+    print(f"{label} speedup-ratio trend (higher is better, "
+          f"fail floor: {RATIO_FLOOR:.2f}x baseline)")
+    for name in sorted(set(current) | set(baseline)):
+        if name not in current:
+            print(f"  {name:<32} missing from current run (ratio removed?)")
+            continue
+        if name not in baseline:
+            print(f"  {name:<32} {current[name]:8.3f}x  (new ratio, no baseline)")
+            continue
+        base, cur = baseline[name], current[name]
+        verdict = "ok"
+        if base > 0 and cur < base * RATIO_FLOOR:
+            verdict = "REGRESSION"
+            failures.append(name)
+        print(f"  {name:<32} {base:8.3f}x -> {cur:8.3f}x  {verdict}")
+
+
+def main(argv):
+    serve_cur = Path(argv[1] if len(argv) > 1 else "BENCH_serve.json")
+    serve_base = Path(argv[2] if len(argv) > 2 else "BENCH_serve.baseline.json")
+    hot_cur = Path(argv[3] if len(argv) > 3 else "BENCH_hotpath.json")
+    hot_base = Path(argv[4] if len(argv) > 4 else "BENCH_hotpath.baseline.json")
+
+    if not serve_cur.exists():
+        print(f"error: {serve_cur} not found — run "
+              "`cargo bench --bench hotpath` first")
+        return 2
+
+    failures = []
+    try:
+        cur_doc = load_doc(serve_cur)
+        if not serve_rows(cur_doc):
+            print(f"error: {serve_cur} has no serve_decode_* rows")
+            return 2
+        if serve_base.exists():
+            base_doc = load_doc(serve_base)
+            note_if_seeded(base_doc, serve_base)
+            check_serve_rows(serve_rows(cur_doc), serve_rows(base_doc), failures)
+            print()
+            check_ratios("serve", speedup_ratios(cur_doc),
+                         speedup_ratios(base_doc), failures)
+        else:
+            print(f"note: no committed baseline at {serve_base}; passing.")
+            print(f"      seed the trend with: cp {serve_cur} {serve_base}")
+
+        print()
+        if not hot_cur.exists():
+            print(f"note: {hot_cur} not found (serve-only run?); "
+                  "skipping hotpath trend.")
+        elif not hot_base.exists():
+            print(f"note: no committed baseline at {hot_base}; passing.")
+            print(f"      seed the trend with: cp {hot_cur} {hot_base}")
+        else:
+            hot_cur_doc = load_doc(hot_cur)
+            hot_base_doc = load_doc(hot_base)
+            note_if_seeded(hot_base_doc, hot_base)
+            check_ratios("hotpath", speedup_ratios(hot_cur_doc),
+                         speedup_ratios(hot_base_doc), failures)
+    except (json.JSONDecodeError, ValueError) as e:
+        print(f"error: malformed bench json: {e}")
+        return 2
+
     if failures:
-        print(f"\nFAIL: {len(failures)} row(s) regressed more than "
-              f"{REGRESSION_PCT:.0f}% vs the committed baseline.")
-        print("If the slowdown is intentional, refresh the baseline in the "
+        print(f"\nFAIL: {len(failures)} metric(s) regressed vs the committed "
+              "baseline(s):")
+        for name in failures:
+            print(f"  - {name}")
+        print("If the change is intentional, refresh the baseline(s) in the "
               "same PR:\n"
-              f"    cp {current_path} {baseline_path}")
+              f"    cp {serve_cur} {serve_base}\n"
+              f"    cp {hot_cur} {hot_base}")
         return 1
-    print("\nOK: no serve cost/token regression.")
+    print("\nOK: no serve or kernel-speedup regression.")
     return 0
 
 
