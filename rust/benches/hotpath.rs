@@ -422,7 +422,9 @@ fn hotpath_bench() {
 /// point of iteration-level batching (idle workers + tick amortization).
 /// Rows persist to `BENCH_serve.json` (trend-checked in CI).
 fn serve_bench() {
-    use bitstopper::coordinator::{drive_decode, EngineBuilder};
+    use bitstopper::coordinator::{
+        drive_decode, drive_scored_prefill, drive_spec_decode, EngineBuilder,
+    };
     use bitstopper::workload::ModelDecodeTrace;
     use std::time::Duration;
 
@@ -467,7 +469,79 @@ fn serve_bench() {
         );
         rows.push((format!("serve_decode_b{batch}"), s));
     }
-    let derived = vec![
+    // Fused multi-token verify steps (DESIGN.md §10): Q candidate rows per
+    // blocked pass, accept-all, 4 concurrent sessions. Cost is per accepted
+    // token; Q = 1 runs the same protocol one row at a time and is the
+    // sequential baseline the spec speedups divide against.
+    let (spec_batch, spec_steps) = (4usize, 16usize);
+    for &q in &[1usize, 2, 4, 8] {
+        let mut per_token_ms = Vec::with_capacity(reps);
+        for rep in 0..reps {
+            let client = EngineBuilder::new()
+                .workers(4)
+                .prefill_chunk(512)
+                .max_inflight_per_worker(2)
+                .build()
+                .expect("engine construction");
+            let traces: Vec<ModelDecodeTrace> = (0..spec_batch)
+                .map(|s| {
+                    ModelDecodeTrace::synth(
+                        layers,
+                        heads,
+                        ctx,
+                        spec_steps,
+                        dim,
+                        0x5EA1 + (rep * 100 + s) as u64,
+                    )
+                })
+                .collect();
+            let report = drive_spec_decode(&client, 0.6, &traces, q, Duration::from_secs(60))
+                .expect("spec drive");
+            per_token_ms.push(report.ms_per_token());
+            client.shutdown();
+        }
+        let s = Summary::of(&per_token_ms);
+        println!(
+            "bench serve_spec_q{q:<28} {:>9.3} ms/token (p50 {:>9.3}, n={})",
+            s.mean, s.p50, s.n
+        );
+        rows.push((format!("serve_spec_q{q}"), s));
+    }
+    // Scored prefill: prompt-logprob proxy output, cost per prompt row.
+    {
+        let mut per_row_ms = Vec::with_capacity(reps);
+        for rep in 0..reps {
+            let client = EngineBuilder::new()
+                .workers(4)
+                .prefill_chunk(64)
+                .max_inflight_per_worker(2)
+                .build()
+                .expect("engine construction");
+            let traces: Vec<ModelDecodeTrace> = (0..spec_batch)
+                .map(|s| {
+                    ModelDecodeTrace::synth(
+                        layers,
+                        heads,
+                        ctx,
+                        1,
+                        dim,
+                        0x5EA2 + (rep * 100 + s) as u64,
+                    )
+                })
+                .collect();
+            let report = drive_scored_prefill(&client, 0.6, &traces, Duration::from_secs(60))
+                .expect("scored prefill drive");
+            per_row_ms.push(report.ms_per_row());
+            client.shutdown();
+        }
+        let s = Summary::of(&per_row_ms);
+        println!(
+            "bench serve_scored_prefill           {:>9.3} ms/row   (p50 {:>9.3}, n={})",
+            s.mean, s.p50, s.n
+        );
+        rows.push(("serve_scored_prefill".to_string(), s));
+    }
+    let mut derived = vec![
         (
             "batched_speedup_b4_vs_b1".to_string(),
             mean_of(&rows, "serve_decode_b1") / mean_of(&rows, "serve_decode_b4"),
@@ -477,6 +551,12 @@ fn serve_bench() {
             mean_of(&rows, "serve_decode_b1") / mean_of(&rows, "serve_decode_b16"),
         ),
     ];
+    for q in [2usize, 4, 8] {
+        derived.push((
+            format!("spec_per_token_speedup_q{q}"),
+            mean_of(&rows, "serve_spec_q1") / mean_of(&rows, &format!("serve_spec_q{q}")),
+        ));
+    }
     for (name, v) in &derived {
         println!("derived {name:<32} {v:>9.3}");
     }

@@ -220,6 +220,22 @@ impl BesfScratch {
         planes: &BitPlanes,
         policy: P,
     ) -> Vec<BesfResult> {
+        self.select_block_each(qps, qs, planes, move |_q, r, ml| policy(r, ml))
+    }
+
+    /// [`BesfScratch::select_block`] with a **query-aware** threshold policy:
+    /// `policy(q, round, max_lower) -> η`, where `q` is the query's index in
+    /// the block (global across 64-query sub-blocks). The fused serve-time
+    /// step needs this — each query row in a multi-token step is quantized
+    /// with its own scale, so its LATS threshold differs per row even though
+    /// the whole block shares one K-plane pass.
+    pub fn select_block_each<P: Fn(usize, usize, i64) -> i64>(
+        &mut self,
+        qps: &[QueryPlanes],
+        qs: &[Vec<i16>],
+        planes: &BitPlanes,
+        policy: P,
+    ) -> Vec<BesfResult> {
         assert_eq!(qps.len(), qs.len(), "one decomposition per query");
         let n = qs.len();
         if self.block_margins.len() < n {
@@ -238,6 +254,7 @@ impl BesfScratch {
                 &block_margins[start..end],
                 planes,
                 &policy,
+                start,
                 block_partials,
                 block_death,
                 block_alive,
@@ -254,6 +271,19 @@ impl BesfScratch {
     /// first — the single-query analogue is [`BesfScratch::select_with`].
     /// Used by the model decode path, where queries are quantized per step.
     pub fn select_block_with<P: Fn(usize, i64) -> i64>(
+        &mut self,
+        qs: &[Vec<i16>],
+        planes: &BitPlanes,
+        policy: P,
+    ) -> Vec<BesfResult> {
+        self.select_block_with_each(qs, planes, move |_q, r, ml| policy(r, ml))
+    }
+
+    /// [`BesfScratch::select_block_with`] with a query-aware policy
+    /// (`policy(q, round, max_lower)`, see [`BesfScratch::select_block_each`]).
+    /// This is the model decode-block entry point: raw per-step queries,
+    /// per-row thresholds, one shared K-plane pass.
+    pub fn select_block_with_each<P: Fn(usize, usize, i64) -> i64>(
         &mut self,
         qs: &[Vec<i16>],
         planes: &BitPlanes,
@@ -290,6 +320,7 @@ impl BesfScratch {
                 &block_margins[start..end],
                 planes,
                 &policy,
+                start,
                 block_partials,
                 block_death,
                 block_alive,
@@ -393,11 +424,12 @@ fn select_core<P: Fn(usize, i64) -> i64>(
 /// counts — `k_bits = bit_ops = Σ_r active[r]·dim`, `q_bits = dim·12` — which
 /// is precisely what [`select_core`]'s incremental accounting sums to.
 #[allow(clippy::too_many_arguments)] // scratch fields passed split-borrowed
-fn select_block_core<P: Fn(usize, i64) -> i64>(
+fn select_block_core<P: Fn(usize, usize, i64) -> i64>(
     qps: &[QueryPlanes],
     margins: &[BitMargins],
     planes: &BitPlanes,
     policy: &P,
+    q0: usize,
     partials: &mut Vec<i64>,
     death: &mut Vec<u8>,
     alive: &mut Vec<u64>,
@@ -463,7 +495,7 @@ fn select_block_core<P: Fn(usize, i64) -> i64>(
                     max_lower = max_lower.max(row[j] + m.min);
                 }
             }
-            let eta = policy(r, max_lower);
+            let eta = policy(q0 + q, r, max_lower);
             let mut keep = active[q];
             for (j, a) in alive.iter_mut().enumerate() {
                 if *a & bit != 0 && row[j] + m.max < eta {
@@ -867,6 +899,49 @@ mod tests {
             let scalar = besf_select(q, &planes, &margins, &lats);
             assert_results_identical(b, &scalar, &format!("query {i}"));
         }
+    }
+
+    #[test]
+    fn prop_query_aware_policy_matches_per_query_sequential() {
+        // `select_block_each` with a per-query LATS (each query its own
+        // alpha/radius — the fused multi-token serve step's shape) must be
+        // bit-identical to running each query alone under its own policy,
+        // including across the 64-query sub-block split (the global index
+        // passed to the policy must not reset per sub-block).
+        let mut scratch = BesfScratch::new();
+        check("select_block_each == per-query select_into", 30, |rng| {
+            let s = 1 + rng.below(40) as usize;
+            let dim = 1 + rng.below(100) as usize;
+            let nq = 1 + rng.below(70) as usize; // crosses the 64-wide edge
+            let qs = rand_queries(rng, nq, dim);
+            let k: Vec<i16> =
+                (0..s * dim).map(|_| rng.range_i64(QMIN as i64, QMAX as i64) as i16).collect();
+            let k = IntMatrix::new(s, dim, k);
+            let planes = BitPlanes::decompose(&k);
+            let lats: Vec<Lats> = (0..nq)
+                .map(|_| Lats::from_int(rng.uniform(0.0, 1.0), 1 + rng.below(500_000) as i64))
+                .collect();
+            let qps: Vec<QueryPlanes> = qs.iter().map(|q| QueryPlanes::decompose(q)).collect();
+
+            let reference: Vec<BesfResult> = qs
+                .iter()
+                .zip(&qps)
+                .zip(&lats)
+                .map(|((q, qp), l)| {
+                    scratch.select_into(qp, q, &planes, |_r, ml| l.threshold(ml))
+                })
+                .collect();
+            let blocked =
+                scratch.select_block_each(&qps, &qs, &planes, |q, _r, ml| lats[q].threshold(ml));
+            for (i, (b, r)) in blocked.iter().zip(&reference).enumerate() {
+                assert_results_identical(b, r, &format!("per-query policy, query {i}"));
+            }
+            let via_raw = scratch
+                .select_block_with_each(&qs, &planes, |q, _r, ml| lats[q].threshold(ml));
+            for (i, (b, r)) in via_raw.iter().zip(&reference).enumerate() {
+                assert_results_identical(b, r, &format!("raw per-query policy, query {i}"));
+            }
+        });
     }
 
     #[test]

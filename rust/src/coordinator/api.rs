@@ -138,6 +138,41 @@ impl StepResponse {
     }
 }
 
+/// One completed **fused multi-row verify step** (the payload of
+/// [`SessionEvent::BlockScored`]): per-(row, lane) outputs plus one
+/// dequantized max-logit score per row, scored against the frozen context —
+/// the candidate rows stay pending server-side until
+/// [`super::SessionHandle::accept`].
+#[derive(Debug, Clone)]
+pub struct BlockResponse {
+    /// Number of query rows in the block.
+    pub q_rows: usize,
+    /// Row-major `[row * lanes + lane]` sparse attention outputs.
+    pub outs: Vec<Vec<f32>>,
+    /// Row-major per-(row, lane) survivor counts.
+    pub kept: Vec<usize>,
+    /// One score per row: the dequantized max surviving QK logit, averaged
+    /// over lanes (the verify-acceptance signal).
+    pub scores: Vec<f32>,
+    /// Context length the block was scored against (unchanged by the block).
+    pub context_len: usize,
+    /// Submission-to-completion latency.
+    pub latency: Duration,
+}
+
+impl BlockResponse {
+    /// Outputs of row `r` (one per lane); empty when out of range.
+    pub fn row_outs(&self, r: usize) -> &[Vec<f32>] {
+        let lanes = if self.q_rows == 0 { 0 } else { self.outs.len() / self.q_rows };
+        self.outs.get(r * lanes..(r + 1) * lanes).unwrap_or(&[])
+    }
+
+    /// Survivors summed over rows and lanes.
+    pub fn kept_total(&self) -> usize {
+        self.kept.iter().sum()
+    }
+}
+
 /// What a [`super::SessionHandle`]'s event stream delivers. A session's
 /// acks and step outputs arrive in completion (= submission) order;
 /// eviction — previously silent — is a first-class event (the ROADMAP
@@ -150,8 +185,21 @@ pub enum SessionEvent {
     /// The whole queued prompt has been admitted and applied;
     /// `context_len` is the resulting context length.
     PrefillAcked { context_len: usize, latency: Duration },
+    /// One **scored** prefill chunk landed ([`super::SessionHandle::
+    /// prompt_scores`]): `scores[i]` is the prompt-logprob proxy of prompt
+    /// row `row0 + i`. Chunks stream in row order, ahead of the final
+    /// [`SessionEvent::PrefillAcked`]. Caveat (documented in DESIGN.md §10):
+    /// rows score against the context *including the whole appended chunk*,
+    /// not causally within the chunk.
+    PrefillScored { row0: usize, scores: Vec<f32> },
     /// One model step completed.
     StepDone(StepResponse),
+    /// One fused multi-row verify step completed
+    /// ([`super::SessionHandle::step_many`]).
+    BlockScored(BlockResponse),
+    /// An accept completed: `accepted` pending candidate rows were appended
+    /// and the context is now `context_len` keys per lane.
+    Accepted { accepted: usize, context_len: usize, latency: Duration },
     /// The session closed and its cache was freed.
     Closed { latency: Duration },
     /// The worker's store reclaimed this session (idle TTL or LRU at the

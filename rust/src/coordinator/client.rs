@@ -20,8 +20,8 @@
 //!   handle closes the session (freeing its worker-side KV-cache and router
 //!   pin), so an early-returning client cannot leak serving state.
 
-use super::api::{ServeError, SessionEvent, StepResponse};
-use super::scheduler::{ModelPrompt, ModelStep, SchedConfig};
+use super::api::{BlockResponse, ServeError, SessionEvent, StepResponse};
+use super::scheduler::{ModelPrompt, ModelStep, ModelStepBlock, SchedConfig};
 use super::session::{SessionStore, DEFAULT_IDLE_TTL, DEFAULT_MAX_SESSIONS};
 use super::{
     check_shapes, AttnExecutor, AttnRequest, AttnResponse, BatchConfig, BesfExecutor, EngineCore,
@@ -95,6 +95,21 @@ impl EngineBuilder {
         self
     }
 
+    /// Prompt rows the scheduler may admit per tick, engine-wide — the
+    /// Sarathi-style prefill token budget (DESIGN.md §10).
+    pub fn prefill_tokens_per_tick(mut self, n: usize) -> Self {
+        self.sched.prefill_tokens_per_tick = n;
+        self
+    }
+
+    /// Decode tokens the scheduler may dispatch per tick, engine-wide. A
+    /// fused block ([`SessionHandle::step_many`]) weighs its full row count
+    /// against this budget; single steps weigh 1 (DESIGN.md §10).
+    pub fn decode_tokens_per_tick(mut self, n: usize) -> Self {
+        self.sched.decode_tokens_per_tick = n;
+        self
+    }
+
     /// Hard cap on live sessions per worker store.
     pub fn session_capacity(mut self, n: usize) -> Self {
         self.max_sessions = n;
@@ -139,6 +154,12 @@ impl EngineBuilder {
         }
         if self.sched.max_inflight_per_worker == 0 {
             return fail("sched.max_inflight_per_worker must be >= 1");
+        }
+        if self.sched.prefill_tokens_per_tick == 0 {
+            return fail("sched.prefill_tokens_per_tick must be >= 1");
+        }
+        if self.sched.decode_tokens_per_tick == 0 {
+            return fail("sched.decode_tokens_per_tick must be >= 1");
         }
         if self.max_sessions == 0 {
             return fail("session_capacity must be >= 1");
@@ -402,6 +423,71 @@ impl SessionHandle {
         })
     }
 
+    /// Queue one **fused multi-row verify step**: score `block.q_rows`
+    /// candidate tokens against the *frozen* current context in one blocked
+    /// pass per lane. Nothing is appended — the block's K/V rows stay
+    /// pending server-side as the candidate set until
+    /// [`SessionHandle::accept`] (any other mutating op invalidates them; a
+    /// new block replaces them). Validated here at submit time like
+    /// [`SessionHandle::step`]; [`SessionEvent::BlockScored`] carries the
+    /// per-row outputs and scores ([`SessionHandle::wait_block`]).
+    pub fn step_many(&mut self, block: ModelStepBlock) -> Result<(), ServeError> {
+        self.check_live()?;
+        if !self.prefilled {
+            self.client.core.count_error();
+            return Err(ServeError::NotPrefilled { session: self.session });
+        }
+        if let Err(e) = block.validate(&self.shape) {
+            self.client.core.count_error();
+            return Err(e);
+        }
+        self.client.core.send(Submission::Spec {
+            session: self.session,
+            block,
+            events: self.sender(),
+        })
+    }
+
+    /// Append the first `n` rows of the pending candidate block (stashed by
+    /// the last [`SessionHandle::step_many`]) to the context, in row order.
+    /// [`SessionEvent::Accepted`] reports the grown context
+    /// ([`SessionHandle::wait_accepted`]); accepting more rows than are
+    /// pending fails worker-side with a typed [`ServeError::ShapeMismatch`].
+    pub fn accept(&mut self, n: usize) -> Result<(), ServeError> {
+        self.check_live()?;
+        if !self.prefilled {
+            self.client.core.count_error();
+            return Err(ServeError::NotPrefilled { session: self.session });
+        }
+        self.client.core.send(Submission::Accept {
+            session: self.session,
+            n,
+            events: self.sender(),
+        })
+    }
+
+    /// Queue a prompt for **scored** chunk-wise prefill: each admitted chunk
+    /// is appended and then its own K rows are scored as queries against the
+    /// context (a prompt-logprob proxy), streaming one
+    /// [`SessionEvent::PrefillScored`] per chunk in row order ahead of the
+    /// final [`SessionEvent::PrefillAcked`].
+    /// [`SessionHandle::wait_prompt_scored`] collects the whole stream. See
+    /// DESIGN.md §10 for the intra-chunk causality caveat.
+    pub fn prompt_scores(&mut self, prompt: ModelPrompt) -> Result<(), ServeError> {
+        self.check_live()?;
+        if let Err(e) = self.validate_prompt(&prompt) {
+            self.client.core.count_error();
+            return Err(e);
+        }
+        self.client.core.send(Submission::PrefillScored {
+            session: self.session,
+            prompt,
+            events: self.sender(),
+        })?;
+        self.prefilled = true;
+        Ok(())
+    }
+
     /// Request a close; the session's queued steps drain first, then
     /// [`SessionEvent::Closed`] arrives and the worker frees the cache.
     /// Idempotent — closing a closed/evicted handle is a no-op. Runs
@@ -529,10 +615,10 @@ impl SessionHandle {
     pub fn wait_prefilled(&mut self, timeout: Duration) -> Result<usize, ServeError> {
         self.wait_for(timeout, |ev, session| match ev {
             SessionEvent::PrefillAcked { context_len, .. } => Some(Ok(context_len)),
-            SessionEvent::StepDone(_) => None,
             SessionEvent::Closed { .. } => Some(Err(ServeError::SessionClosing { session })),
             SessionEvent::Evicted { .. } => Some(Err(ServeError::UnknownSession { session })),
             SessionEvent::Error(e) => Some(Err(e)),
+            _ => None,
         })
     }
 
@@ -541,10 +627,61 @@ impl SessionHandle {
     pub fn wait_step(&mut self, timeout: Duration) -> Result<StepResponse, ServeError> {
         self.wait_for(timeout, |ev, session| match ev {
             SessionEvent::StepDone(sr) => Some(Ok(sr)),
-            SessionEvent::PrefillAcked { .. } => None,
             SessionEvent::Closed { .. } => Some(Err(ServeError::SessionClosing { session })),
             SessionEvent::Evicted { .. } => Some(Err(ServeError::UnknownSession { session })),
             SessionEvent::Error(e) => Some(Err(e)),
+            _ => None,
+        })
+    }
+
+    /// Block until the next fused verify step resolves
+    /// ([`SessionHandle::step_many`]); earlier acks and single-step outputs
+    /// are skipped.
+    pub fn wait_block(&mut self, timeout: Duration) -> Result<BlockResponse, ServeError> {
+        self.wait_for(timeout, |ev, session| match ev {
+            SessionEvent::BlockScored(b) => Some(Ok(b)),
+            SessionEvent::Closed { .. } => Some(Err(ServeError::SessionClosing { session })),
+            SessionEvent::Evicted { .. } => Some(Err(ServeError::UnknownSession { session })),
+            SessionEvent::Error(e) => Some(Err(e)),
+            _ => None,
+        })
+    }
+
+    /// Block until the next accept resolves ([`SessionHandle::accept`]);
+    /// returns `(accepted_rows, context_len)`.
+    pub fn wait_accepted(&mut self, timeout: Duration) -> Result<(usize, usize), ServeError> {
+        self.wait_for(timeout, |ev, session| match ev {
+            SessionEvent::Accepted { accepted, context_len, .. } => {
+                Some(Ok((accepted, context_len)))
+            }
+            SessionEvent::Closed { .. } => Some(Err(ServeError::SessionClosing { session })),
+            SessionEvent::Evicted { .. } => Some(Err(ServeError::UnknownSession { session })),
+            SessionEvent::Error(e) => Some(Err(e)),
+            _ => None,
+        })
+    }
+
+    /// Block until a **scored** prefill ([`SessionHandle::prompt_scores`])
+    /// fully resolves: accumulates every per-chunk
+    /// [`SessionEvent::PrefillScored`] in row order, then returns
+    /// `(context_len, scores)` on the final ack — one score per prompt row.
+    pub fn wait_prompt_scored(
+        &mut self,
+        timeout: Duration,
+    ) -> Result<(usize, Vec<f32>), ServeError> {
+        let mut acc: Vec<f32> = Vec::new();
+        self.wait_for(timeout, |ev, session| match ev {
+            SessionEvent::PrefillScored { scores: chunk, .. } => {
+                acc.extend(chunk);
+                None
+            }
+            SessionEvent::PrefillAcked { context_len, .. } => {
+                Some(Ok((context_len, std::mem::take(&mut acc))))
+            }
+            SessionEvent::Closed { .. } => Some(Err(ServeError::SessionClosing { session })),
+            SessionEvent::Evicted { .. } => Some(Err(ServeError::UnknownSession { session })),
+            SessionEvent::Error(e) => Some(Err(e)),
+            _ => None,
         })
     }
 
@@ -554,8 +691,8 @@ impl SessionHandle {
     pub fn wait_closed(&mut self, timeout: Duration) -> Result<(), ServeError> {
         self.wait_for(timeout, |ev, _| match ev {
             SessionEvent::Closed { .. } | SessionEvent::Evicted { .. } => Some(Ok(())),
-            SessionEvent::StepDone(_) | SessionEvent::PrefillAcked { .. } => None,
             SessionEvent::Error(e) => Some(Err(e)),
+            _ => None,
         })
     }
 }
@@ -608,12 +745,26 @@ mod tests {
         ModelPrompt { shape: mt.shape(), prompt_len: mt.prompt_len, k, v }
     }
 
+    /// Fuse trace steps `first..first+rows` into one row-major verify block.
+    fn spec_block(mt: &ModelDecodeTrace, first: usize, rows: usize) -> ModelStepBlock {
+        let (mut qs, mut ks, mut vs) = (Vec::new(), Vec::new(), Vec::new());
+        for r in first..first + rows {
+            let (q_r, k_r, v_r) = mt.step_rows(r);
+            qs.extend(q_r);
+            ks.extend(k_r);
+            vs.extend(v_r);
+        }
+        ModelStepBlock::new(rows, qs, ks, vs)
+    }
+
     #[test]
     fn builder_validates_configuration() {
         for (builder, what) in [
             (EngineBuilder::new().workers(0), "workers"),
             (EngineBuilder::new().prefill_chunk(0), "prefill_chunk"),
             (EngineBuilder::new().max_inflight_per_worker(0), "max_inflight"),
+            (EngineBuilder::new().prefill_tokens_per_tick(0), "prefill_tokens_per_tick"),
+            (EngineBuilder::new().decode_tokens_per_tick(0), "decode_tokens_per_tick"),
             (EngineBuilder::new().session_capacity(0), "session_capacity"),
             (EngineBuilder::new().lane_threads(0), "lane_threads"),
             (
@@ -743,6 +894,100 @@ mod tests {
         assert_eq!(sr.context_len, 9);
         let m = client.metrics();
         assert_eq!(m.errors, 7, "each rejected submit counted");
+        client.shutdown();
+    }
+
+    #[test]
+    fn fused_verify_then_accept_round_trip() {
+        let mt = ModelDecodeTrace::synth(2, 2, 12, 6, 8, 0xC16E);
+        let client = EngineBuilder::new().workers(1).build().expect("build");
+        let mut h = client.open_model_session(0.6, mt.shape()).expect("open");
+        h.prefill(model_prompt(&mt)).expect("prefill");
+        assert_eq!(h.wait_prefilled(TIMEOUT).unwrap(), 12);
+        // Score 3 candidate rows in one fused pass against the frozen
+        // context...
+        h.step_many(spec_block(&mt, 0, 3)).expect("step_many");
+        let b = h.wait_block(TIMEOUT).expect("block scored");
+        assert_eq!(b.q_rows, 3);
+        assert_eq!(b.context_len, 12, "verify must not grow the context");
+        assert_eq!(b.scores.len(), 3, "one acceptance score per row");
+        assert_eq!(b.outs.len(), 3 * mt.n_lanes());
+        assert_eq!(b.row_outs(1).len(), mt.n_lanes());
+        assert!(b.scores.iter().all(|s| s.is_finite()));
+        assert!(b.kept_total() >= 3 * mt.n_lanes(), "every (row, lane) keeps >= 1");
+        // ...accept the first 2: the context grows by exactly those rows.
+        h.accept(2).expect("accept");
+        assert_eq!(h.wait_accepted(TIMEOUT).unwrap(), (2, 14));
+        // Plain decode continues from the accepted context.
+        let (qs, ks, vs) = mt.step_rows(2);
+        h.step(ModelStep::token(ks, vs, qs)).expect("step");
+        assert_eq!(h.wait_step(TIMEOUT).unwrap().context_len, 15);
+        let m = wait_metrics(&client, |m| m.spec_steps == 1 && m.accepts == 1);
+        assert_eq!(m.errors, 0);
+        client.shutdown();
+    }
+
+    #[test]
+    fn spec_submissions_validate_at_submit_time() {
+        let mt = ModelDecodeTrace::synth(1, 2, 8, 4, 4, 0xC17E);
+        let client = EngineBuilder::new().workers(1).build().expect("build");
+        let mut h = client.open_model_session(0.6, mt.shape()).expect("open");
+        // Blocks and accepts before any prompt fail fast, client-side.
+        assert_eq!(
+            h.step_many(spec_block(&mt, 0, 2)).unwrap_err(),
+            ServeError::NotPrefilled { session: h.id() }
+        );
+        assert_eq!(h.accept(1).unwrap_err(), ServeError::NotPrefilled { session: h.id() });
+        h.prefill(model_prompt(&mt)).expect("prefill");
+        assert_eq!(h.wait_prefilled(TIMEOUT).unwrap(), 8);
+        // Empty block, ragged query row, short candidate K/V: all typed.
+        assert!(matches!(
+            h.step_many(ModelStepBlock::new(0, vec![], vec![], vec![])).unwrap_err(),
+            ServeError::ShapeMismatch { .. }
+        ));
+        let mut ragged = spec_block(&mt, 0, 2);
+        ragged.qs[1] = vec![0.0; 3];
+        assert!(matches!(h.step_many(ragged).unwrap_err(), ServeError::ShapeMismatch { .. }));
+        let mut short = spec_block(&mt, 0, 2);
+        short.k_rows.pop();
+        assert!(matches!(h.step_many(short).unwrap_err(), ServeError::ShapeMismatch { .. }));
+        // Over-accepting fails worker-side, typed, and the pending rows
+        // survive the failed accept.
+        h.step_many(spec_block(&mt, 0, 2)).expect("valid block");
+        let _ = h.wait_block(TIMEOUT).expect("scored");
+        h.accept(3).expect("enqueues fine");
+        assert!(matches!(
+            h.wait_accepted(TIMEOUT).unwrap_err(),
+            ServeError::ShapeMismatch { .. }
+        ));
+        h.accept(2).expect("accept");
+        assert_eq!(h.wait_accepted(TIMEOUT).unwrap(), (2, 10));
+        let m = wait_metrics(&client, |m| m.errors == 6);
+        assert_eq!(m.errors, 6, "five client-side rejects + one worker-side");
+        client.shutdown();
+    }
+
+    #[test]
+    fn scored_prefill_streams_chunk_scores_then_acks() {
+        let mt = ModelDecodeTrace::synth(1, 2, 12, 1, 4, 0xC18E);
+        let client = EngineBuilder::new()
+            .workers(1)
+            .prefill_chunk(4)
+            .build()
+            .expect("build");
+        let mut h = client.open_model_session(0.6, mt.shape()).expect("open");
+        h.prompt_scores(model_prompt(&mt)).expect("scored prefill");
+        let (len, scores) = h.wait_prompt_scored(TIMEOUT).expect("scored ack");
+        assert_eq!(len, 12);
+        assert_eq!(scores.len(), 12, "one score per prompt row across 3 chunks");
+        assert!(scores.iter().all(|s| s.is_finite()));
+        assert!(h.try_event().is_none(), "all chunk scores precede the single ack");
+        // Decode works on the scored-prefilled context.
+        let (qs, ks, vs) = mt.step_rows(0);
+        h.step(ModelStep::token(ks, vs, qs)).expect("step");
+        assert_eq!(h.wait_step(TIMEOUT).unwrap().context_len, 13);
+        let m = wait_metrics(&client, |m| m.prefill_chunks == 3);
+        assert_eq!(m.errors, 0);
         client.shutdown();
     }
 

@@ -1,13 +1,18 @@
-//! Convenience driver over the typed client surface (DESIGN.md §5): run a
-//! batch of [`ModelDecodeTrace`]s as concurrent model sessions — open +
-//! chunked prefill, the full decode stream, then close — and report wall
-//! times and keep totals. The serve drivers (`examples/serve.rs`, the
-//! `serve_bench` suite in `benches/hotpath.rs`, and the `bitstopper serve`
-//! CLI) share this loop instead of hand-rolling three copies of it.
+//! Convenience drivers over the typed client surface (DESIGN.md §5): run a
+//! batch of [`ModelDecodeTrace`]s as concurrent model sessions and report
+//! wall times and keep totals. Three loops share this module instead of
+//! being hand-rolled per caller (`examples/serve.rs`, the `serve_bench`
+//! suite in `benches/hotpath.rs`, the `bitstopper serve` CLI):
+//!
+//! * [`drive_decode`] — sequential single-row steps (the Q = 1 baseline);
+//! * [`drive_spec_decode`] — fused Q-row verify blocks + accept-all
+//!   (the speculative-verify mechanism cost, DESIGN.md §10);
+//! * [`drive_scored_prefill`] — scored chunk-wise prefill (prompt-logprob
+//!   proxy output).
 
 use super::api::ServeError;
 use super::client::{Client, SessionHandle};
-use super::scheduler::{ModelPrompt, ModelStep};
+use super::scheduler::{ModelPrompt, ModelStep, ModelStepBlock};
 use crate::workload::ModelDecodeTrace;
 use std::time::{Duration, Instant};
 
@@ -101,6 +106,184 @@ pub fn drive_decode(
     Ok(DriveReport { prefill, decode, tokens, kept, lane_context })
 }
 
+/// Timings and totals of one fused (speculative-verify-shaped) decode
+/// batch driven by [`drive_spec_decode`].
+#[derive(Debug, Clone, Copy)]
+pub struct SpecDriveReport {
+    /// Wall time from the first open to the last prefill ack.
+    pub prefill: Duration,
+    /// Wall time from the first queued block to the last
+    /// [`super::SessionEvent::Accepted`].
+    pub decode: Duration,
+    /// Query rows fused per block (the drive's Q; the last block of a trace
+    /// may be smaller).
+    pub q_rows: usize,
+    /// Fused verify blocks served.
+    pub blocks: usize,
+    /// Tokens accepted into contexts (the accept-all harness accepts every
+    /// scored row, so this equals the total rows driven).
+    pub tokens: usize,
+    /// Survivors summed over every (row, lane) of every block.
+    pub kept: usize,
+    /// Σ rows × lanes × context length — the keep-rate denominator.
+    pub lane_context: usize,
+}
+
+impl SpecDriveReport {
+    /// Mean keep rate across all scored (row, lane) pairs.
+    pub fn keep_rate(&self) -> f64 {
+        if self.lane_context == 0 {
+            0.0
+        } else {
+            self.kept as f64 / self.lane_context as f64
+        }
+    }
+
+    /// Steady-state cost per accepted token, in milliseconds — the number
+    /// to compare against [`DriveReport::ms_per_token`] at Q = 1.
+    pub fn ms_per_token(&self) -> f64 {
+        if self.tokens == 0 {
+            0.0
+        } else {
+            self.decode.as_secs_f64() * 1e3 / self.tokens as f64
+        }
+    }
+
+    /// Steady-state throughput in accepted tokens per second.
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens as f64 / self.decode.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Drive every trace as a concurrent model session in **fused blocks of
+/// `q` rows**: open + chunked prefill as [`drive_decode`], then queue each
+/// trace's steps as `step_many(q rows)` + `accept(all)` pairs up front (the
+/// scheduler runs a session's units in strict submission order, weighing
+/// each block's rows against the per-tick decode token budget), drain every
+/// block + accept event, then close. The accept-all harness measures the
+/// *mechanism* cost — per-token speedup of fused verify over sequential
+/// steps — not an acceptance-rate model.
+pub fn drive_spec_decode(
+    client: &Client,
+    alpha: f64,
+    traces: &[ModelDecodeTrace],
+    q: usize,
+    timeout: Duration,
+) -> Result<SpecDriveReport, ServeError> {
+    if q == 0 {
+        return Err(ServeError::ShapeMismatch { what: "drive_spec_decode needs q >= 1".into() });
+    }
+    let t_open = Instant::now();
+    let mut handles: Vec<SessionHandle> = Vec::with_capacity(traces.len());
+    for mt in traces {
+        let mut h = client.open_model_session(alpha, mt.shape())?;
+        let (k, v) = mt.prompt();
+        h.prefill(ModelPrompt { shape: mt.shape(), prompt_len: mt.prompt_len, k, v })?;
+        handles.push(h);
+    }
+    for h in handles.iter_mut() {
+        h.wait_prefilled(timeout)?;
+    }
+    let prefill = t_open.elapsed();
+
+    let t_decode = Instant::now();
+    let mut per_session_blocks = vec![0usize; traces.len()];
+    for (s, mt) in traces.iter().enumerate() {
+        let mut i = 0;
+        while i < mt.n_steps() {
+            let rows = q.min(mt.n_steps() - i);
+            let (mut qs, mut ks, mut vs) = (Vec::new(), Vec::new(), Vec::new());
+            for r in i..i + rows {
+                let (q_r, k_r, v_r) = mt.step_rows(r);
+                qs.extend(q_r);
+                ks.extend(k_r);
+                vs.extend(v_r);
+            }
+            handles[s].step_many(ModelStepBlock::new(rows, qs, ks, vs))?;
+            handles[s].accept(rows)?;
+            per_session_blocks[s] += 1;
+            i += rows;
+        }
+    }
+    let (mut blocks, mut tokens, mut kept, mut lane_context) = (0usize, 0usize, 0usize, 0usize);
+    for (s, _) in traces.iter().enumerate() {
+        for _ in 0..per_session_blocks[s] {
+            let b = handles[s].wait_block(timeout)?;
+            kept += b.kept_total();
+            lane_context += b.kept.len() * b.context_len;
+            let (accepted, _) = handles[s].wait_accepted(timeout)?;
+            blocks += 1;
+            tokens += accepted;
+        }
+    }
+    let decode = t_decode.elapsed();
+    for h in handles.iter_mut() {
+        h.close()?;
+        h.wait_closed(timeout)?;
+    }
+    Ok(SpecDriveReport { prefill, decode, q_rows: q, blocks, tokens, kept, lane_context })
+}
+
+/// Timings of one scored-prefill batch ([`drive_scored_prefill`]).
+#[derive(Debug, Clone, Copy)]
+pub struct ScoredPrefillReport {
+    /// Wall time from the first open to the last scored ack.
+    pub elapsed: Duration,
+    /// Prompt rows scored (one score each).
+    pub rows: usize,
+}
+
+impl ScoredPrefillReport {
+    /// Mean cost per scored prompt row, in milliseconds.
+    pub fn ms_per_row(&self) -> f64 {
+        if self.rows == 0 {
+            0.0
+        } else {
+            self.elapsed.as_secs_f64() * 1e3 / self.rows as f64
+        }
+    }
+}
+
+/// Drive every trace's prompt as a **scored** prefill
+/// ([`super::SessionHandle::prompt_scores`]): open all sessions, queue every
+/// prompt, collect each session's full per-row score stream, then close.
+/// Errors if any session returns fewer scores than prompt rows.
+pub fn drive_scored_prefill(
+    client: &Client,
+    alpha: f64,
+    traces: &[ModelDecodeTrace],
+    timeout: Duration,
+) -> Result<ScoredPrefillReport, ServeError> {
+    let t0 = Instant::now();
+    let mut handles: Vec<SessionHandle> = Vec::with_capacity(traces.len());
+    for mt in traces {
+        let mut h = client.open_model_session(alpha, mt.shape())?;
+        let (k, v) = mt.prompt();
+        h.prompt_scores(ModelPrompt { shape: mt.shape(), prompt_len: mt.prompt_len, k, v })?;
+        handles.push(h);
+    }
+    let mut rows = 0usize;
+    for (s, mt) in traces.iter().enumerate() {
+        let (len, scores) = handles[s].wait_prompt_scored(timeout)?;
+        if len != mt.prompt_len || scores.len() != mt.prompt_len {
+            return Err(ServeError::ShapeMismatch {
+                what: format!(
+                    "scored prefill returned {} scores over context {len} for a {}-row prompt",
+                    scores.len(),
+                    mt.prompt_len
+                ),
+            });
+        }
+        rows += scores.len();
+    }
+    let elapsed = t0.elapsed();
+    for h in handles.iter_mut() {
+        h.close()?;
+        h.wait_closed(timeout)?;
+    }
+    Ok(ScoredPrefillReport { elapsed, rows })
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::EngineBuilder;
@@ -121,6 +304,56 @@ mod tests {
         let m = client.metrics();
         assert_eq!(m.errors, 0);
         assert_eq!(m.session_pins, 0, "drive closes every session");
+        client.shutdown();
+    }
+
+    #[test]
+    fn spec_drive_accepts_every_token_and_matches_totals() {
+        // 2 sessions x 7 steps in blocks of 3 -> 3 blocks per session
+        // (3 + 3 + 1), 14 accepted tokens total.
+        let traces: Vec<ModelDecodeTrace> =
+            (0..2).map(|s| ModelDecodeTrace::synth(1, 2, 8, 7, 4, 0xD22E + s as u64)).collect();
+        let client = EngineBuilder::new().workers(2).build().expect("build");
+        let report = drive_spec_decode(&client, 0.6, &traces, 3, Duration::from_secs(10))
+            .expect("spec drive");
+        assert_eq!(report.q_rows, 3);
+        assert_eq!(report.blocks, 6, "2 sessions x ceil(7/3) blocks");
+        assert_eq!(report.tokens, 14, "accept-all accepts every row");
+        assert!(report.kept >= report.tokens * 2, "every (row, lane) keeps >= 1");
+        assert!(report.lane_context >= report.kept);
+        assert!(report.keep_rate() > 0.0 && report.keep_rate() <= 1.0);
+        let m = client.metrics();
+        assert_eq!(m.errors, 0);
+        assert_eq!(m.spec_steps, 6);
+        assert_eq!(m.accepts, 6);
+        assert_eq!(m.session_pins, 0, "spec drive closes every session");
+        client.shutdown();
+
+        // q = 0 is rejected typed before any session is opened.
+        let client = EngineBuilder::new().workers(1).build().expect("build");
+        assert!(matches!(
+            drive_spec_decode(&client, 0.6, &traces, 0, Duration::from_secs(1)).unwrap_err(),
+            ServeError::ShapeMismatch { .. }
+        ));
+        client.shutdown();
+    }
+
+    #[test]
+    fn scored_prefill_drive_scores_every_prompt_row() {
+        let traces: Vec<ModelDecodeTrace> =
+            (0..2).map(|s| ModelDecodeTrace::synth(1, 2, 12, 1, 4, 0xD23E + s as u64)).collect();
+        let client = EngineBuilder::new()
+            .workers(2)
+            .prefill_chunk(4)
+            .build()
+            .expect("build");
+        let report = drive_scored_prefill(&client, 0.6, &traces, Duration::from_secs(10))
+            .expect("scored prefill drive");
+        assert_eq!(report.rows, 24, "2 sessions x 12 prompt rows");
+        assert!(report.ms_per_row() >= 0.0);
+        let m = client.metrics();
+        assert_eq!(m.errors, 0);
+        assert_eq!(m.session_pins, 0);
         client.shutdown();
     }
 }

@@ -47,14 +47,18 @@ pub mod router;
 pub mod scheduler;
 pub mod session;
 
-pub use api::{EvictReason, ServeError, SessionEvent, StepResponse};
+pub use api::{BlockResponse, EvictReason, ServeError, SessionEvent, StepResponse};
 pub use batch::{BatchConfig, Batcher};
 pub use client::{AttnTicket, Client, EngineBuilder, SessionHandle};
-pub use drive::{drive_decode, DriveReport};
+pub use drive::{
+    drive_decode, drive_scored_prefill, drive_spec_decode, DriveReport, ScoredPrefillReport,
+    SpecDriveReport,
+};
 pub use pjrt::PjrtExecutor;
 pub use router::Router;
 pub use scheduler::{
-    Feedback, ModelJob, ModelPrompt, ModelStep, SchedConfig, SchedStats, Scheduler,
+    Feedback, ModelJob, ModelOut, ModelPrompt, ModelStep, ModelStepBlock, SchedConfig,
+    SchedStats, Scheduler,
 };
 pub use session::SessionStore;
 
@@ -132,7 +136,7 @@ pub trait AttnExecutor: 'static {
     fn execute_model(
         &mut self,
         job: &ModelJob,
-    ) -> Result<(ModelStepOutput, Vec<(u64, EvictReason)>), ServeError> {
+    ) -> Result<(ModelOut, Vec<(u64, EvictReason)>), ServeError> {
         let _ = job;
         Err(ServeError::ExecutorUnsupported { op: "model sessions" })
     }
@@ -269,25 +273,53 @@ impl AttnExecutor for BesfExecutor {
     fn execute_model(
         &mut self,
         job: &ModelJob,
-    ) -> Result<(ModelStepOutput, Vec<(u64, EvictReason)>), ServeError> {
+    ) -> Result<(ModelOut, Vec<(u64, EvictReason)>), ServeError> {
         let now = Instant::now();
-        let ack = |context_len: usize| ModelStepOutput {
-            outs: Vec::new(),
-            kept: Vec::new(),
-            context_len,
+        let ack = |context_len: usize| {
+            ModelOut::Step(ModelStepOutput { outs: Vec::new(), kept: Vec::new(), context_len })
         };
         match job {
-            ModelJob::Open { session, alpha, shape, k, v, rows } => {
+            ModelJob::Open { session, alpha, shape, k, v, rows, scored } => {
                 if !alpha.is_finite() || *alpha < 0.0 {
                     return Err(ServeError::InvalidAlpha { alpha: *alpha });
                 }
                 let cfg = LatsConfig { alpha: *alpha, radius: self.radius };
                 let evicted = self.sessions.open(*session, cfg, *shape, k, v, *rows, now)?;
-                Ok((ack(*rows), evicted))
+                if *scored {
+                    // The opening chunk already landed via `open`; score its
+                    // rows against the context it just built.
+                    let scores = self.sessions.score_rows(
+                        *session,
+                        k,
+                        *rows,
+                        &mut self.scratch,
+                        self.lane_threads,
+                        now,
+                    )?;
+                    let out = ModelOut::PrefillScored { context_len: *rows, row0: 0, scores };
+                    Ok((out, evicted))
+                } else {
+                    Ok((ack(*rows), evicted))
+                }
             }
-            ModelJob::Prefill { session, k, v, rows } => {
-                let len = self.sessions.append_rows(*session, k, v, *rows, now)?;
-                Ok((ack(len), Vec::new()))
+            ModelJob::Prefill { session, k, v, rows, scored } => {
+                if *scored {
+                    let (len, scores) = self.sessions.append_rows_scored(
+                        *session,
+                        k,
+                        v,
+                        *rows,
+                        &mut self.scratch,
+                        self.lane_threads,
+                        now,
+                    )?;
+                    let out =
+                        ModelOut::PrefillScored { context_len: len, row0: len - *rows, scores };
+                    Ok((out, Vec::new()))
+                } else {
+                    let len = self.sessions.append_rows(*session, k, v, *rows, now)?;
+                    Ok((ack(len), Vec::new()))
+                }
             }
             ModelJob::Step { session, step } => {
                 let out = self.sessions.step_threads(
@@ -297,7 +329,21 @@ impl AttnExecutor for BesfExecutor {
                     self.lane_threads,
                     now,
                 )?;
-                Ok((out, Vec::new()))
+                Ok((ModelOut::Step(out), Vec::new()))
+            }
+            ModelJob::Spec { session, block } => {
+                let out = self.sessions.step_block(
+                    *session,
+                    block,
+                    &mut self.scratch,
+                    self.lane_threads,
+                    now,
+                )?;
+                Ok((ModelOut::Block(out), Vec::new()))
+            }
+            ModelJob::Accept { session, n } => {
+                let len = self.sessions.accept(*session, *n, now)?;
+                Ok((ModelOut::Accepted { accepted: *n, context_len: len }, Vec::new()))
             }
             ModelJob::Close { session } => {
                 self.sessions.close(*session)?;
@@ -326,12 +372,20 @@ pub struct Metrics {
     pub ticks: u64,
     /// Model steps dispatched by the scheduler.
     pub model_steps: u64,
+    /// Fused multi-row verify steps dispatched ([`ModelJob::Spec`]).
+    pub spec_steps: u64,
+    /// Accepts dispatched ([`ModelJob::Accept`]).
+    pub accepts: u64,
     /// Prefill chunks dispatched (including opening chunks).
     pub prefill_chunks: u64,
     /// Sessions evicted by worker stores (idle-TTL / LRU).
     pub evictions: u64,
     /// Dispatch opportunities deferred by worker backpressure.
     pub deferred: u64,
+    /// Dispatch opportunities deferred by an exhausted per-tick token
+    /// budget ([`SchedConfig::prefill_tokens_per_tick`] /
+    /// [`SchedConfig::decode_tokens_per_tick`]).
+    pub budget_deferred: u64,
     /// Live session→worker pins (gauge).
     pub session_pins: u64,
     /// Mean decode keep rate across completed model decode steps.
@@ -399,7 +453,13 @@ pub(crate) enum Submission {
     OneShot(AttnRequest, OneShotResponder),
     Open { session: u64, alpha: f64, shape: ModelShape, events: Sender<SessionEvent> },
     Prefill { session: u64, prompt: ModelPrompt, events: Sender<SessionEvent> },
+    /// Scored prefill: chunks also score their rows (prompt-logprob output).
+    PrefillScored { session: u64, prompt: ModelPrompt, events: Sender<SessionEvent> },
     Step { session: u64, step: ModelStep, events: Sender<SessionEvent> },
+    /// Fused multi-row verify step.
+    Spec { session: u64, block: ModelStepBlock, events: Sender<SessionEvent> },
+    /// Append the first `n` pending candidate rows of the last `Spec`.
+    Accept { session: u64, n: usize, events: Sender<SessionEvent> },
     Close { session: u64, events: Sender<SessionEvent> },
 }
 
@@ -497,26 +557,65 @@ impl EngineCore {
                                             sessions: evicted,
                                         });
                                     }
-                                    let (kept, context) = scheduler::keep_totals(&out);
+                                    let (kept, context) = out.keep_totals();
+                                    // Scored prefill chunks stream their row
+                                    // scores as they land — mid-prompt
+                                    // chunks carry no ack, but the client
+                                    // must still see every chunk's scores
+                                    // (in row order, the session's single
+                                    // stream guarantees it).
+                                    if let ModelOut::PrefillScored { row0, scores, .. } = &out {
+                                        let ev = SessionEvent::PrefillScored {
+                                            row0: *row0,
+                                            scores: scores.clone(),
+                                        };
+                                        if events.send(ev).is_err() {
+                                            lock_metrics(&m).dropped += 1;
+                                        }
+                                    }
                                     if let Some(submitted) = ack {
                                         let latency = submitted.elapsed();
-                                        let ev = match &job {
-                                            ModelJob::Open { .. } | ModelJob::Prefill { .. } => {
-                                                SessionEvent::PrefillAcked {
-                                                    context_len: out.context_len,
-                                                    latency,
+                                        let ev = match out {
+                                            ModelOut::Step(o) => match &job {
+                                                ModelJob::Open { .. }
+                                                | ModelJob::Prefill { .. } => {
+                                                    SessionEvent::PrefillAcked {
+                                                        context_len: o.context_len,
+                                                        latency,
+                                                    }
                                                 }
-                                            }
-                                            ModelJob::Step { .. } => {
-                                                SessionEvent::StepDone(StepResponse {
-                                                    outs: out.outs,
-                                                    kept: out.kept,
-                                                    context_len: out.context_len,
+                                                ModelJob::Close { .. } => {
+                                                    SessionEvent::Closed { latency }
+                                                }
+                                                _ => SessionEvent::StepDone(StepResponse {
+                                                    outs: o.outs,
+                                                    kept: o.kept,
+                                                    context_len: o.context_len,
+                                                    latency,
+                                                }),
+                                            },
+                                            ModelOut::Block(b) => {
+                                                SessionEvent::BlockScored(BlockResponse {
+                                                    q_rows: b.q_rows,
+                                                    outs: b.outs,
+                                                    kept: b.kept,
+                                                    scores: b.scores,
+                                                    context_len: b.context_len,
                                                     latency,
                                                 })
                                             }
-                                            ModelJob::Close { .. } => {
-                                                SessionEvent::Closed { latency }
+                                            ModelOut::PrefillScored { context_len, .. } => {
+                                                SessionEvent::PrefillAcked {
+                                                    context_len,
+                                                    latency,
+                                                }
+                                            }
+                                            ModelOut::Accepted { accepted, context_len } => {
+                                                SessionEvent::Accepted {
+                                                    accepted,
+                                                    context_len,
+                                                    latency,
+                                                }
                                             }
                                         };
                                         deliver(&m, t0, latency, ev, &events);
@@ -776,9 +875,12 @@ impl EngineCore {
             throughput_rps: if elapsed > 0.0 { mi.completed as f64 / elapsed } else { 0.0 },
             ticks: mi.sched.ticks,
             model_steps: mi.sched.steps,
+            spec_steps: mi.sched.spec_steps,
+            accepts: mi.sched.accepts,
             prefill_chunks: mi.sched.prefill_chunks,
             evictions: mi.sched.evictions,
             deferred: mi.sched.deferred,
+            budget_deferred: mi.sched.budget_deferred,
             session_pins: mi.session_pins,
             decode_keep_rate: mi.sched.keep_rate(),
         }
@@ -827,8 +929,17 @@ fn admit(
         Submission::Prefill { session, prompt, events } => {
             sched.enqueue_prefill(session, prompt, now).err().map(|e| (e, events))
         }
+        Submission::PrefillScored { session, prompt, events } => {
+            sched.enqueue_prefill_scored(session, prompt, now).err().map(|e| (e, events))
+        }
         Submission::Step { session, step, events } => {
             sched.enqueue_step(session, step, now).err().map(|e| (e, events))
+        }
+        Submission::Spec { session, block, events } => {
+            sched.enqueue_spec(session, block, now).err().map(|e| (e, events))
+        }
+        Submission::Accept { session, n, events } => {
+            sched.enqueue_accept(session, n, now).err().map(|e| (e, events))
         }
         Submission::Close { session, events } => {
             if let Err(e) = sched.enqueue_close(session, now) {

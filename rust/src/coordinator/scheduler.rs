@@ -31,11 +31,24 @@
 //!
 //! **Fairness.** One round-robin ring over sessions, cursor-rotated every
 //! tick; each runnable session gets at most one unit (a prefill chunk, a
-//! model step, or a close) per tick, subject to its worker's in-flight cap.
-//! With `S` sessions sharing a worker of capacity `C`, every runnable
-//! session therefore advances within `ceil(S / C)` ticks — a long prefill
-//! cannot starve decodes (it only consumes one chunk-sized unit per tick),
-//! and heavy decode traffic cannot starve an admitted prefill.
+//! model step, a fused block, an accept, or a close) per tick, subject to
+//! its worker's in-flight cap. With `S` sessions sharing a worker of
+//! capacity `C`, every runnable session therefore advances within
+//! `ceil(S / C)` ticks — a long prefill cannot starve decodes (it only
+//! consumes one chunk-sized unit per tick), and heavy decode traffic cannot
+//! starve an admitted prefill.
+//!
+//! **Token budgets.** On top of the unit cap, each tick draws from two
+//! Sarathi-style token pools ([`SchedConfig::prefill_tokens_per_tick`] /
+//! [`SchedConfig::decode_tokens_per_tick`]): prefill chunks are carved to
+//! fit the remaining prefill pool and decode units are weighted by their
+//! row count (1 for a plain step, `q_rows` for a fused
+//! [`ModelStepBlock`]), so an iteration's total work is bounded in tokens,
+//! not in unit count — a tick full of Q=8 verify blocks admits fewer units
+//! than a tick of single-token steps. Budget-deferred sessions (counted in
+//! [`SchedStats::budget_deferred`]) keep their ring position; the rotating
+//! cursor preserves the starvation bound (see [`Scheduler::plan_tick`] for
+//! the oversize-block rule).
 //!
 //! **Backpressure.** `max_inflight_per_worker` bounds dispatched-but-
 //! unfinished units per worker; when the runnable set exceeds capacity the
@@ -44,7 +57,7 @@
 
 use super::api::{EvictReason, ServeError, SessionEvent};
 use super::router::Router;
-use crate::engine::{ModelShape, ModelStepOutput};
+use crate::engine::{ModelBlockOutput, ModelShape, ModelStepOutput};
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::Sender;
 use std::time::Instant;
@@ -189,10 +202,85 @@ impl ModelStep {
     }
 }
 
+/// A **fused multi-row verify step**: `q_rows` query rows scored against the
+/// session's frozen context in one blocked-kernel pass per lane
+/// ([`crate::engine::ModelContext::decode_block_threads`]), with the rows'
+/// candidate K/V held server-side until an explicit accept. All three
+/// buffers are row-major, `[row * lanes + lane]` — row `r` is the lh-major
+/// lane set a single [`ModelStep`] would carry.
+#[derive(Debug, Clone)]
+pub struct ModelStepBlock {
+    /// Number of query rows (the block's token count).
+    pub q_rows: usize,
+    /// Queries, `q_rows * lanes` of length `dim` each.
+    pub qs: Vec<Vec<f32>>,
+    /// Candidate K/V rows for the same tokens (appended by `accept(n)`).
+    pub k_rows: Vec<Vec<f32>>,
+    pub v_rows: Vec<Vec<f32>>,
+}
+
+impl ModelStepBlock {
+    pub fn new(
+        q_rows: usize,
+        qs: Vec<Vec<f32>>,
+        k_rows: Vec<Vec<f32>>,
+        v_rows: Vec<Vec<f32>>,
+    ) -> Self {
+        Self { q_rows, qs, k_rows, v_rows }
+    }
+
+    /// Token weight of this block for the scheduler's per-tick decode
+    /// budget: one per query row.
+    pub fn tokens(&self) -> usize {
+        self.q_rows
+    }
+
+    /// Validate against the session's opened shape — run at submit time by
+    /// [`super::SessionHandle::step_many`] and again by the store (defense
+    /// in depth: `accept` indexes `k_rows` by `q_rows * lanes`, so a ragged
+    /// block must never reach the cache).
+    pub fn validate(&self, shape: &ModelShape) -> Result<(), ServeError> {
+        let lanes = shape.lanes();
+        let fail = |what: String| Err(ServeError::ShapeMismatch { what });
+        if self.q_rows == 0 {
+            return fail("step block must carry at least one query row".into());
+        }
+        let want = self.q_rows * lanes;
+        if self.qs.len() != want {
+            return fail(format!(
+                "step block needs q_rows*lanes = {want} queries, got {}",
+                self.qs.len()
+            ));
+        }
+        if self.k_rows.len() != want || self.v_rows.len() != want {
+            return fail(format!(
+                "step block needs q_rows*lanes = {want} candidate K/V rows, got {}/{}",
+                self.k_rows.len(),
+                self.v_rows.len()
+            ));
+        }
+        for (what, buf) in [("query", &self.qs), ("K row", &self.k_rows), ("V row", &self.v_rows)]
+        {
+            for (i, row) in buf.iter().enumerate() {
+                if row.len() != shape.dim {
+                    return fail(format!(
+                        "step block {what} {i} length {} != dim {}",
+                        row.len(),
+                        shape.dim
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
 /// What a worker executes for one session in one tick.
 #[derive(Debug, Clone)]
 pub enum ModelJob {
     /// First prefill chunk: create the context (fixes per-lane scales).
+    /// `scored` chunks additionally score their rows through the blocked
+    /// kernel (prompt-logprob output, [`ModelOut::PrefillScored`]).
     Open {
         session: u64,
         alpha: f64,
@@ -200,11 +288,16 @@ pub enum ModelJob {
         k: Vec<Vec<f32>>,
         v: Vec<Vec<f32>>,
         rows: usize,
+        scored: bool,
     },
     /// Subsequent prefill chunk.
-    Prefill { session: u64, k: Vec<Vec<f32>>, v: Vec<Vec<f32>>, rows: usize },
+    Prefill { session: u64, k: Vec<Vec<f32>>, v: Vec<Vec<f32>>, rows: usize, scored: bool },
     /// One model step (append and/or decode).
     Step { session: u64, step: ModelStep },
+    /// One fused multi-row verify step (no appends; candidates go pending).
+    Spec { session: u64, block: ModelStepBlock },
+    /// Append the first `n` pending candidate rows from the last `Spec`.
+    Accept { session: u64, n: usize },
     /// Drop the session's cache.
     Close { session: u64 },
 }
@@ -215,7 +308,44 @@ impl ModelJob {
             ModelJob::Open { session, .. }
             | ModelJob::Prefill { session, .. }
             | ModelJob::Step { session, .. }
+            | ModelJob::Spec { session, .. }
+            | ModelJob::Accept { session, .. }
             | ModelJob::Close { session } => *session,
+        }
+    }
+}
+
+/// What one executed [`ModelJob`] produced — the worker-side counterpart of
+/// the job enum. `Step` covers opens/prefills/steps (context length plus any
+/// decode output); the other variants carry the new fused-path payloads.
+#[derive(Debug, Clone)]
+pub enum ModelOut {
+    Step(ModelStepOutput),
+    /// A fused block's per-row outputs and scores.
+    Block(ModelBlockOutput),
+    /// A scored prefill chunk: `scores[i]` belongs to prompt row `row0 + i`.
+    PrefillScored { context_len: usize, row0: usize, scores: Vec<f32> },
+    /// An accept: `accepted` rows appended, context now `context_len`.
+    Accepted { accepted: usize, context_len: usize },
+}
+
+impl ModelOut {
+    /// Context length (keys per lane) after the job.
+    pub fn context_len(&self) -> usize {
+        match self {
+            ModelOut::Step(o) => o.context_len,
+            ModelOut::Block(b) => b.context_len,
+            ModelOut::PrefillScored { context_len, .. }
+            | ModelOut::Accepted { context_len, .. } => *context_len,
+        }
+    }
+
+    /// Decode keep-rate totals for [`Feedback::Done`] (zeros for acks).
+    pub fn keep_totals(&self) -> (u64, u64) {
+        match self {
+            ModelOut::Step(o) => keep_totals(o),
+            ModelOut::Block(b) => keep_totals_block(b),
+            ModelOut::PrefillScored { .. } | ModelOut::Accepted { .. } => (0, 0),
         }
     }
 }
@@ -252,11 +382,25 @@ pub struct SchedConfig {
     pub prefill_chunk: usize,
     /// Dispatched-but-unfinished units allowed per worker (backpressure).
     pub max_inflight_per_worker: usize,
+    /// Sarathi-style per-tick budget of prompt rows across *all* sessions:
+    /// each tick's prefill chunks are carved no larger than what remains of
+    /// this pool, so a burst of prompts cannot monopolize an iteration.
+    pub prefill_tokens_per_tick: usize,
+    /// Per-tick budget of decode tokens across all sessions. A plain step
+    /// or an accept weighs 1; a fused [`ModelStepBlock`] weighs its
+    /// `q_rows`. A block wider than the whole budget dispatches only on an
+    /// untouched budget (see [`Scheduler::plan_tick`]).
+    pub decode_tokens_per_tick: usize,
 }
 
 impl Default for SchedConfig {
     fn default() -> Self {
-        Self { prefill_chunk: 256, max_inflight_per_worker: 2 }
+        Self {
+            prefill_chunk: 256,
+            max_inflight_per_worker: 2,
+            prefill_tokens_per_tick: 2048,
+            decode_tokens_per_tick: 64,
+        }
     }
 }
 
@@ -269,11 +413,18 @@ pub struct SchedStats {
     pub steps: u64,
     /// Dispatched prefill chunks (including the opening chunk).
     pub prefill_chunks: u64,
+    /// Dispatched fused multi-row verify steps ([`ModelJob::Spec`]).
+    pub spec_steps: u64,
+    /// Dispatched accepts ([`ModelJob::Accept`]).
+    pub accepts: u64,
     pub closes: u64,
     /// Sessions evicted by worker stores (idle-TTL / LRU).
     pub evictions: u64,
     /// Dispatch opportunities deferred by worker backpressure.
     pub deferred: u64,
+    /// Dispatch opportunities deferred by an exhausted per-tick token
+    /// budget (prefill or decode pool).
+    pub budget_deferred: u64,
     /// Largest runnable set seen in a single tick.
     pub peak_runnable: u64,
     /// Decode-step survivor / context token totals (keep-rate numerator /
@@ -310,12 +461,16 @@ struct Prefill {
     prompt_len: usize,
     next_row: usize,
     submitted: Instant,
+    /// Score each chunk's rows through the blocked kernel as it lands.
+    scored: bool,
 }
 
 /// One queued unit of session work, in strict submission order.
 enum Unit {
     Prefill(Prefill),
     Step { step: ModelStep, submitted: Instant },
+    Spec { block: ModelStepBlock, submitted: Instant },
+    Accept { n: usize, submitted: Instant },
 }
 
 struct Sess {
@@ -353,6 +508,8 @@ impl Scheduler {
     pub fn new(cfg: SchedConfig, n_workers: usize) -> Self {
         assert!(cfg.prefill_chunk >= 1);
         assert!(cfg.max_inflight_per_worker >= 1);
+        assert!(cfg.prefill_tokens_per_tick >= 1);
+        assert!(cfg.decode_tokens_per_tick >= 1);
         Self {
             cfg,
             sessions: HashMap::new(),
@@ -426,6 +583,29 @@ impl Scheduler {
         prompt: ModelPrompt,
         now: Instant,
     ) -> Result<(), ServeError> {
+        self.enqueue_prefill_opts(session, prompt, false, now)
+    }
+
+    /// [`Scheduler::enqueue_prefill`] in **scored** mode: every chunk's rows
+    /// are additionally scored through the blocked kernel as they land, and
+    /// the session's stream carries one [`SessionEvent::PrefillScored`] per
+    /// chunk (prompt-logprob output) ahead of the final ack.
+    pub fn enqueue_prefill_scored(
+        &mut self,
+        session: u64,
+        prompt: ModelPrompt,
+        now: Instant,
+    ) -> Result<(), ServeError> {
+        self.enqueue_prefill_opts(session, prompt, true, now)
+    }
+
+    fn enqueue_prefill_opts(
+        &mut self,
+        session: u64,
+        prompt: ModelPrompt,
+        scored: bool,
+        now: Instant,
+    ) -> Result<(), ServeError> {
         let s = self
             .sessions
             .get_mut(&session)
@@ -448,6 +628,7 @@ impl Scheduler {
             prompt_len: prompt.prompt_len,
             next_row: 0,
             submitted: now,
+            scored,
         }));
         Ok(())
     }
@@ -477,6 +658,51 @@ impl Scheduler {
         }
         step.validate(&s.shape)?;
         s.queue.push_back(Unit::Step { step, submitted: now });
+        Ok(())
+    }
+
+    /// Queue one fused multi-row verify step. Runs in submission order like
+    /// any other unit, but weighs `q_rows` decode tokens in the tick budget.
+    pub fn enqueue_spec(
+        &mut self,
+        session: u64,
+        block: ModelStepBlock,
+        now: Instant,
+    ) -> Result<(), ServeError> {
+        let s = self
+            .sessions
+            .get_mut(&session)
+            .ok_or(ServeError::UnknownSession { session })?;
+        if s.close.is_some() {
+            return Err(ServeError::SessionClosing { session });
+        }
+        if !s.opened && !s.queue.iter().any(|u| matches!(u, Unit::Prefill(_))) {
+            return Err(ServeError::NotPrefilled { session });
+        }
+        block.validate(&s.shape)?;
+        s.queue.push_back(Unit::Spec { block, submitted: now });
+        Ok(())
+    }
+
+    /// Queue an accept for the first `n` pending candidate rows of the
+    /// session's last fused block ([`ModelJob::Accept`]).
+    pub fn enqueue_accept(
+        &mut self,
+        session: u64,
+        n: usize,
+        now: Instant,
+    ) -> Result<(), ServeError> {
+        let s = self
+            .sessions
+            .get_mut(&session)
+            .ok_or(ServeError::UnknownSession { session })?;
+        if s.close.is_some() {
+            return Err(ServeError::SessionClosing { session });
+        }
+        if !s.opened && !s.queue.iter().any(|u| matches!(u, Unit::Prefill(_))) {
+            return Err(ServeError::NotPrefilled { session });
+        }
+        s.queue.push_back(Unit::Accept { n, submitted: now });
         Ok(())
     }
 
@@ -565,7 +791,16 @@ impl Scheduler {
 
     /// Assemble one iteration batch: walk the ring from the rotating cursor,
     /// dispatching at most one unit per runnable session, bounded by each
-    /// worker's in-flight cap.
+    /// worker's in-flight cap and by the tick's **token budgets**
+    /// (Sarathi-style, [`SchedConfig::prefill_tokens_per_tick`] /
+    /// [`SchedConfig::decode_tokens_per_tick`]): prefill chunks are carved
+    /// no larger than the remaining prefill pool, decode units draw their
+    /// row-count weight from the decode pool, and a session whose unit no
+    /// longer fits is budget-deferred to a later tick. One exception keeps
+    /// the starvation bound: an indivisible fused block wider than the
+    /// *whole* decode budget dispatches whenever the pool is still untouched
+    /// — the rotating cursor visits every session first within `S` ticks, so
+    /// a `q_rows > budget` block waits at most one rotation, never forever.
     pub fn plan_tick(&mut self, router: &mut Router) -> Vec<Dispatch> {
         let mut out = Vec::new();
         let n = self.order.len();
@@ -579,6 +814,8 @@ impl Scheduler {
         }
         self.stats.ticks += 1;
         self.stats.peak_runnable = self.stats.peak_runnable.max(runnable);
+        let mut prefill_budget = self.cfg.prefill_tokens_per_tick;
+        let mut decode_budget = self.cfg.decode_tokens_per_tick;
         let start = self.cursor % n;
         self.cursor = self.cursor.wrapping_add(1);
         let mut closed: Vec<u64> = Vec::new();
@@ -594,8 +831,9 @@ impl Scheduler {
             }
             let worker = s.worker;
             let events = s.events.clone();
-            // Per-session order: the unit queue front (prefills and steps in
-            // strict submission order), then the close.
+            // Per-session order: the unit queue front (prefills, steps,
+            // fused blocks, and accepts in strict submission order), then
+            // the close.
             let dispatch = if s.queue.is_empty() {
                 let submitted = s.close.take().unwrap();
                 self.stats.closes += 1;
@@ -617,26 +855,46 @@ impl Scheduler {
                     ack: Some(submitted),
                 }
             } else if matches!(s.queue.front(), Some(Unit::Prefill(_))) {
-                let (job, ack) = {
+                if prefill_budget == 0 {
+                    self.stats.budget_deferred += 1;
+                    continue;
+                }
+                let (job, ack, took) = {
                     let Some(Unit::Prefill(pf)) = s.queue.front_mut() else { unreachable!() };
-                    let rows = self.cfg.prefill_chunk.min(pf.prompt_len - pf.next_row);
+                    // The chunk carve is bounded by the configured chunk
+                    // size AND what remains of this tick's prefill pool.
+                    let rows = self
+                        .cfg
+                        .prefill_chunk
+                        .min(pf.prompt_len - pf.next_row)
+                        .min(prefill_budget);
                     let (a, b) = (pf.next_row, pf.next_row + rows);
                     let dim = s.shape.dim;
                     let k: Vec<Vec<f32>> =
                         pf.k.iter().map(|kl| kl[a * dim..b * dim].to_vec()).collect();
                     let v: Vec<Vec<f32>> =
                         pf.v.iter().map(|vl| vl[a * dim..b * dim].to_vec()).collect();
+                    let scored = pf.scored;
                     let job = if s.opened {
-                        ModelJob::Prefill { session: sid, k, v, rows }
+                        ModelJob::Prefill { session: sid, k, v, rows, scored }
                     } else {
-                        ModelJob::Open { session: sid, alpha: s.alpha, shape: s.shape, k, v, rows }
+                        ModelJob::Open {
+                            session: sid,
+                            alpha: s.alpha,
+                            shape: s.shape,
+                            k,
+                            v,
+                            rows,
+                            scored,
+                        }
                     };
                     pf.next_row = b;
                     // Last chunk: the worker acks the client and the prompt
                     // buffers can be released.
                     let ack = (pf.next_row == pf.prompt_len).then_some(pf.submitted);
-                    (job, ack)
+                    (job, ack, rows)
                 };
+                prefill_budget -= took;
                 s.opened = true;
                 if ack.is_some() {
                     s.queue.pop_front();
@@ -644,15 +902,48 @@ impl Scheduler {
                 self.stats.prefill_chunks += 1;
                 Dispatch { worker, job, events, ack }
             } else {
-                let Some(Unit::Step { step, submitted }) = s.queue.pop_front() else {
-                    unreachable!()
+                // Decode-side unit, weighted against the decode pool: 1 for
+                // a step or an accept, `q_rows` for a fused block. A block
+                // wider than the whole pool is indivisible — it rides an
+                // untouched budget only (see the method docs).
+                let weight = match s.queue.front() {
+                    Some(Unit::Spec { block, .. }) => block.tokens(),
+                    _ => 1,
                 };
-                self.stats.steps += 1;
-                Dispatch {
-                    worker,
-                    job: ModelJob::Step { session: sid, step },
-                    events,
-                    ack: Some(submitted),
+                if weight > decode_budget && decode_budget < self.cfg.decode_tokens_per_tick {
+                    self.stats.budget_deferred += 1;
+                    continue;
+                }
+                decode_budget = decode_budget.saturating_sub(weight);
+                match s.queue.pop_front() {
+                    Some(Unit::Step { step, submitted }) => {
+                        self.stats.steps += 1;
+                        Dispatch {
+                            worker,
+                            job: ModelJob::Step { session: sid, step },
+                            events,
+                            ack: Some(submitted),
+                        }
+                    }
+                    Some(Unit::Spec { block, submitted }) => {
+                        self.stats.spec_steps += 1;
+                        Dispatch {
+                            worker,
+                            job: ModelJob::Spec { session: sid, block },
+                            events,
+                            ack: Some(submitted),
+                        }
+                    }
+                    Some(Unit::Accept { n: rows, submitted }) => {
+                        self.stats.accepts += 1;
+                        Dispatch {
+                            worker,
+                            job: ModelJob::Accept { session: sid, n: rows },
+                            events,
+                            ack: Some(submitted),
+                        }
+                    }
+                    _ => unreachable!(),
                 }
             };
             s.inflight = true;
@@ -681,10 +972,27 @@ pub fn keep_totals(out: &ModelStepOutput) -> (u64, u64) {
     }
 }
 
+/// [`keep_totals`] for a fused block: every (row, lane) selection counts —
+/// a Q-row block contributes `q_rows * lanes` context scans.
+pub fn keep_totals_block(out: &ModelBlockOutput) -> (u64, u64) {
+    if out.outs.is_empty() {
+        (0, 0)
+    } else {
+        let kept: usize = out.kept.iter().sum();
+        (kept as u64, (out.kept.len() * out.context_len) as u64)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::mpsc::{channel, Receiver};
+
+    /// Legacy-shaped config: explicit chunk/inflight knobs, default (i.e.
+    /// effectively unconstraining for these small tests) token budgets.
+    fn cfg(prefill_chunk: usize, max_inflight_per_worker: usize) -> SchedConfig {
+        SchedConfig { prefill_chunk, max_inflight_per_worker, ..SchedConfig::default() }
+    }
 
     fn prompt(lanes: (usize, usize), dim: usize, len: usize) -> ModelPrompt {
         let shape = ModelShape::new(lanes.0, lanes.1, dim);
@@ -701,6 +1009,16 @@ mod tests {
             vec![vec![0.1; shape.dim]; shape.lanes()],
             vec![vec![0.1; shape.dim]; shape.lanes()],
             vec![vec![0.2; shape.dim]; shape.lanes()],
+        )
+    }
+
+    fn spec(shape: &ModelShape, q_rows: usize) -> ModelStepBlock {
+        let n = q_rows * shape.lanes();
+        ModelStepBlock::new(
+            q_rows,
+            vec![vec![0.2; shape.dim]; n],
+            vec![vec![0.1; shape.dim]; n],
+            vec![vec![0.1; shape.dim]; n],
         )
     }
 
@@ -730,7 +1048,7 @@ mod tests {
     fn prefill_is_chunked_and_acks_on_last_chunk() {
         let mut router = Router::new(1);
         let mut sched =
-            Scheduler::new(SchedConfig { prefill_chunk: 4, max_inflight_per_worker: 1 }, 1);
+            Scheduler::new(cfg(4, 1), 1);
         let _rx = open(&mut sched, &mut router, 1, prompt((1, 1), 2, 10));
         let mut rows_seen = vec![];
         for tick in 0..3 {
@@ -764,7 +1082,7 @@ mod tests {
         // the contract the client's event stream relies on).
         let mut router = Router::new(1);
         let mut sched =
-            Scheduler::new(SchedConfig { prefill_chunk: 8, max_inflight_per_worker: 1 }, 1);
+            Scheduler::new(cfg(8, 1), 1);
         let shape = ModelShape::single(2);
         let _rx = open(&mut sched, &mut router, 1, prompt((1, 1), 2, 4));
         sched.enqueue_step(1, step(&shape), Instant::now()).unwrap();
@@ -777,6 +1095,8 @@ mod tests {
                 ModelJob::Open { .. } => "open",
                 ModelJob::Prefill { .. } => "prefill",
                 ModelJob::Step { .. } => "step",
+                ModelJob::Spec { .. } => "spec",
+                ModelJob::Accept { .. } => "accept",
                 ModelJob::Close { .. } => "close",
             });
             ack_all(&mut sched, &mut router, &batch);
@@ -792,7 +1112,7 @@ mod tests {
         // prefill.
         let mut router = Router::new(1);
         let mut sched =
-            Scheduler::new(SchedConfig { prefill_chunk: 4, max_inflight_per_worker: 1 }, 1);
+            Scheduler::new(cfg(4, 1), 1);
         let _p = open(&mut sched, &mut router, 10, prompt((1, 1), 2, 32));
         let shape = ModelShape::single(2);
         for sid in [11u64, 12] {
@@ -845,7 +1165,7 @@ mod tests {
         // out until completions arrive.
         let mut router = Router::new(1);
         let mut sched =
-            Scheduler::new(SchedConfig { prefill_chunk: 8, max_inflight_per_worker: 2 }, 1);
+            Scheduler::new(cfg(8, 2), 1);
         for sid in [1u64, 2, 3] {
             let _ = open(&mut sched, &mut router, sid, prompt((1, 1), 2, 4));
         }
@@ -1005,6 +1325,246 @@ mod tests {
     }
 
     #[test]
+    fn decode_budget_weights_units_by_row_count() {
+        // Decode pool of 4, ample worker capacity: a Q=3 fused block plus
+        // two plain steps weigh 3+1+1 = 5, so exactly one unit is
+        // budget-deferred per tick regardless of ring order, and the
+        // leftover drains on the next tick's fresh pool.
+        let mut router = Router::new(1);
+        let mut sched = Scheduler::new(
+            SchedConfig {
+                prefill_chunk: 8,
+                max_inflight_per_worker: 8,
+                prefill_tokens_per_tick: 1024,
+                decode_tokens_per_tick: 4,
+            },
+            1,
+        );
+        let shape = ModelShape::single(2);
+        for sid in [1u64, 2, 3] {
+            let _ = open(&mut sched, &mut router, sid, prompt((1, 1), 2, 4));
+        }
+        let batch = sched.plan_tick(&mut router);
+        assert_eq!(batch.len(), 3, "all three prefills fit the prompt pool");
+        ack_all(&mut sched, &mut router, &batch);
+        sched.enqueue_spec(1, spec(&shape, 3), Instant::now()).unwrap();
+        sched.enqueue_step(2, step(&shape), Instant::now()).unwrap();
+        sched.enqueue_step(3, step(&shape), Instant::now()).unwrap();
+        let batch = sched.plan_tick(&mut router);
+        assert_eq!(batch.len(), 2, "3+1 fills the pool; the third unit waits");
+        assert_eq!(sched.stats.budget_deferred, 1);
+        ack_all(&mut sched, &mut router, &batch);
+        let batch = sched.plan_tick(&mut router);
+        assert_eq!(batch.len(), 1, "the deferred unit drains next tick");
+        ack_all(&mut sched, &mut router, &batch);
+        assert_eq!(sched.stats.spec_steps, 1);
+        assert_eq!(sched.stats.steps, 2);
+        assert!(!sched.busy());
+    }
+
+    #[test]
+    fn prefill_chunks_are_carved_to_the_token_budget() {
+        // Prompt pool of 6 rows per tick, chunk 4, three 4-row prompts: the
+        // first tick carves 4 + 2 and budget-defers the third session.
+        let mut router = Router::new(1);
+        let mut sched = Scheduler::new(
+            SchedConfig {
+                prefill_chunk: 4,
+                max_inflight_per_worker: 8,
+                prefill_tokens_per_tick: 6,
+                decode_tokens_per_tick: 64,
+            },
+            1,
+        );
+        for sid in [1u64, 2, 3] {
+            let _ = open(&mut sched, &mut router, sid, prompt((1, 1), 2, 4));
+        }
+        let rows_of = |batch: &[Dispatch]| -> Vec<usize> {
+            batch
+                .iter()
+                .map(|d| match &d.job {
+                    ModelJob::Open { rows, .. } | ModelJob::Prefill { rows, .. } => *rows,
+                    other => panic!("unexpected job {other:?}"),
+                })
+                .collect()
+        };
+        let batch = sched.plan_tick(&mut router);
+        assert_eq!(rows_of(&batch), vec![4, 2], "second chunk carved down to the pool");
+        assert!(batch[0].ack.is_some(), "4 of 4 rows: acked");
+        assert!(batch[1].ack.is_none(), "2 of 4 rows: more to come");
+        assert_eq!(sched.stats.budget_deferred, 1, "session 3 found an empty pool");
+        ack_all(&mut sched, &mut router, &batch);
+        // Next tick, fresh pool: session 2's remaining 2 rows + session 3's 4.
+        let batch = sched.plan_tick(&mut router);
+        assert_eq!(rows_of(&batch).iter().sum::<usize>(), 6);
+        assert!(batch.iter().all(|d| d.ack.is_some()), "both prompts finish");
+        ack_all(&mut sched, &mut router, &batch);
+        assert!(sched.plan_tick(&mut router).is_empty());
+    }
+
+    #[test]
+    fn oversize_block_rides_an_untouched_budget_within_one_rotation() {
+        // A Q=5 block against a decode pool of 2 can never "fit": the
+        // oversize rule admits it only on an untouched pool — i.e. when the
+        // rotating cursor reaches its session before any other decode unit
+        // spent tokens. It must dispatch within S ticks, owning its tick.
+        let mut router = Router::new(1);
+        let mut sched = Scheduler::new(
+            SchedConfig {
+                prefill_chunk: 8,
+                max_inflight_per_worker: 8,
+                prefill_tokens_per_tick: 1024,
+                decode_tokens_per_tick: 2,
+            },
+            1,
+        );
+        let shape = ModelShape::single(2);
+        for sid in [1u64, 2] {
+            let _ = open(&mut sched, &mut router, sid, prompt((1, 1), 2, 4));
+        }
+        let batch = sched.plan_tick(&mut router);
+        ack_all(&mut sched, &mut router, &batch);
+        for _ in 0..4 {
+            sched.enqueue_step(1, step(&shape), Instant::now()).unwrap();
+        }
+        sched.enqueue_spec(2, spec(&shape, 5), Instant::now()).unwrap();
+        let mut spec_tick = None;
+        for tick in 0..4 {
+            let batch = sched.plan_tick(&mut router);
+            for d in &batch {
+                if matches!(d.job, ModelJob::Spec { .. }) {
+                    spec_tick = Some(tick);
+                    assert_eq!(batch.len(), 1, "an oversize block owns its tick");
+                }
+            }
+            ack_all(&mut sched, &mut router, &batch);
+            if spec_tick.is_some() {
+                break;
+            }
+        }
+        assert!(spec_tick.is_some(), "q_rows > budget must not starve");
+        assert!(sched.stats.budget_deferred >= 1);
+    }
+
+    #[test]
+    fn token_budgets_preserve_the_starvation_bound_with_mixed_q() {
+        // Three decode sessions — one issuing Q=2 fused blocks, two issuing
+        // plain steps — share a pool of 3 (total demand 4/round): every
+        // session keeps advancing with a bounded gap.
+        let mut router = Router::new(1);
+        let mut sched = Scheduler::new(
+            SchedConfig {
+                prefill_chunk: 8,
+                max_inflight_per_worker: 8,
+                prefill_tokens_per_tick: 1024,
+                decode_tokens_per_tick: 3,
+            },
+            1,
+        );
+        let shape = ModelShape::single(2);
+        for sid in [1u64, 2, 3] {
+            let _ = open(&mut sched, &mut router, sid, prompt((1, 1), 2, 4));
+        }
+        let batch = sched.plan_tick(&mut router);
+        ack_all(&mut sched, &mut router, &batch);
+        for _ in 0..8 {
+            sched.enqueue_spec(1, spec(&shape, 2), Instant::now()).unwrap();
+            sched.enqueue_step(2, step(&shape), Instant::now()).unwrap();
+            sched.enqueue_step(3, step(&shape), Instant::now()).unwrap();
+        }
+        let mut last_seen: HashMap<u64, usize> = HashMap::new();
+        let mut max_gap: HashMap<u64, usize> = HashMap::new();
+        for tick in 0..24 {
+            let batch = sched.plan_tick(&mut router);
+            for d in &batch {
+                let sid = d.job.session();
+                if let Some(&prev) = last_seen.get(&sid) {
+                    let gap = tick - prev;
+                    let e = max_gap.entry(sid).or_insert(0);
+                    *e = (*e).max(gap);
+                }
+                last_seen.insert(sid, tick);
+            }
+            ack_all(&mut sched, &mut router, &batch);
+        }
+        for sid in [1u64, 2, 3] {
+            assert!(last_seen.contains_key(&sid), "session {sid} starved entirely");
+            assert!(
+                *max_gap.get(&sid).unwrap_or(&0) <= 3,
+                "session {sid} starved: gap {:?}",
+                max_gap.get(&sid)
+            );
+        }
+    }
+
+    #[test]
+    fn spec_and_accept_admission_is_validated() {
+        let mut router = Router::new(1);
+        let mut sched = Scheduler::new(SchedConfig::default(), 1);
+        let shape = ModelShape::new(1, 2, 4);
+        let (tx, _rx) = channel();
+        sched.admit_open(1, 0.6, shape, tx, &mut router).unwrap();
+        // No prefill yet: fused steps and accepts have no context to run on.
+        assert_eq!(
+            sched.enqueue_spec(1, spec(&shape, 1), Instant::now()),
+            Err(ServeError::NotPrefilled { session: 1 })
+        );
+        assert_eq!(
+            sched.enqueue_accept(1, 1, Instant::now()),
+            Err(ServeError::NotPrefilled { session: 1 })
+        );
+        sched.enqueue_prefill(1, prompt((1, 2), 4, 4), Instant::now()).unwrap();
+        // Ragged blocks are rejected typed at submit time.
+        let mut bad = spec(&shape, 2);
+        bad.qs.pop();
+        assert!(matches!(
+            sched.enqueue_spec(1, bad, Instant::now()),
+            Err(ServeError::ShapeMismatch { .. })
+        ));
+        let mut bad = spec(&shape, 2);
+        bad.k_rows[0].truncate(3);
+        assert!(matches!(
+            sched.enqueue_spec(1, bad, Instant::now()),
+            Err(ServeError::ShapeMismatch { .. })
+        ));
+        assert!(matches!(
+            sched.enqueue_spec(1, ModelStepBlock::new(0, vec![], vec![], vec![]), Instant::now()),
+            Err(ServeError::ShapeMismatch { .. })
+        ));
+        sched.enqueue_spec(1, spec(&shape, 2), Instant::now()).unwrap();
+        sched.enqueue_accept(1, 1, Instant::now()).unwrap();
+        assert_eq!(
+            sched.enqueue_spec(99, spec(&shape, 1), Instant::now()),
+            Err(ServeError::UnknownSession { session: 99 })
+        );
+        assert_eq!(
+            sched.enqueue_accept(99, 0, Instant::now()),
+            Err(ServeError::UnknownSession { session: 99 })
+        );
+    }
+
+    #[test]
+    fn scored_prefill_flag_rides_every_chunk_job() {
+        let mut router = Router::new(1);
+        let mut sched = Scheduler::new(cfg(4, 1), 1);
+        let (tx, _rx) = channel();
+        let p = prompt((1, 1), 2, 10);
+        sched.admit_open(1, 0.6, p.shape, tx, &mut router).unwrap();
+        sched.enqueue_prefill_scored(1, p, Instant::now()).unwrap();
+        for _ in 0..3 {
+            let batch = sched.plan_tick(&mut router);
+            assert_eq!(batch.len(), 1);
+            match &batch[0].job {
+                ModelJob::Open { scored, .. } | ModelJob::Prefill { scored, .. } => {
+                    assert!(*scored, "every carved chunk keeps the scored flag");
+                }
+                other => panic!("unexpected job {other:?}"),
+            }
+            ack_all(&mut sched, &mut router, &batch);
+        }
+    }
+
+    #[test]
     fn keep_totals_report_decode_steps_only() {
         let ack = ModelStepOutput { outs: vec![], kept: vec![], context_len: 7 };
         assert_eq!(keep_totals(&ack), (0, 0));
@@ -1014,5 +1574,19 @@ mod tests {
             context_len: 10,
         };
         assert_eq!(keep_totals(&dec), (8, 20));
+        // A Q=2 block over 2 lanes: 4 (row, lane) selections count.
+        let blk = ModelBlockOutput {
+            q_rows: 2,
+            outs: vec![vec![0.0; 2]; 4],
+            kept: vec![1, 2, 3, 4],
+            scores: vec![0.0; 2],
+            context_len: 10,
+        };
+        assert_eq!(keep_totals_block(&blk), (10, 40));
+        assert_eq!(ModelOut::Block(blk).keep_totals(), (10, 40));
+        assert_eq!(
+            ModelOut::Accepted { accepted: 1, context_len: 5 }.keep_totals(),
+            (0, 0)
+        );
     }
 }

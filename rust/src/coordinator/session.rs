@@ -38,10 +38,10 @@
 //! to each live handle (tested here and end-to-end in `tests/client_e2e.rs`).
 
 use super::api::{EvictReason, ServeError};
-use super::scheduler::ModelStep;
+use super::scheduler::{ModelStep, ModelStepBlock};
 use crate::algo::BesfScratch;
 use crate::config::LatsConfig;
-use crate::engine::{ModelContext, ModelShape, ModelStepOutput};
+use crate::engine::{ModelBlockOutput, ModelContext, ModelShape, ModelStepOutput};
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
@@ -55,6 +55,32 @@ pub const DEFAULT_IDLE_TTL: Duration = Duration::from_secs(600);
 struct Entry {
     ctx: ModelContext,
     last_used: Instant,
+    /// Candidate K/V rows from the last [`SessionStore::step_block`]
+    /// (row-major, `[row * lanes + lane]`), held until the client's
+    /// `accept(n)` appends the accepted prefix. Any other mutating op on the
+    /// session invalidates them — accepting stale candidates against a
+    /// context that moved underneath them would corrupt the cache.
+    pending_k: Vec<Vec<f32>>,
+    pending_v: Vec<Vec<f32>>,
+    pending_rows: usize,
+}
+
+impl Entry {
+    fn new(ctx: ModelContext, now: Instant) -> Self {
+        Self {
+            ctx,
+            last_used: now,
+            pending_k: Vec::new(),
+            pending_v: Vec::new(),
+            pending_rows: 0,
+        }
+    }
+
+    fn clear_pending(&mut self) {
+        self.pending_k.clear();
+        self.pending_v.clear();
+        self.pending_rows = 0;
+    }
 }
 
 /// Session id → owned cached model context (per-lane quantized K/V, packed K
@@ -177,7 +203,7 @@ impl SessionStore {
                 evicted.push((lru, EvictReason::Capacity));
             }
         }
-        self.sessions.insert(session, Entry { ctx, last_used: now });
+        self.sessions.insert(session, Entry::new(ctx, now));
         Ok(evicted)
     }
 
@@ -196,8 +222,59 @@ impl SessionStore {
             .get_mut(&session)
             .ok_or(ServeError::UnknownSession { session })?;
         e.last_used = now;
+        e.clear_pending();
         e.ctx
             .append_rows(k, v, rows)
+            .map_err(|e| ServeError::ShapeMismatch { what: e.to_string() })
+    }
+
+    /// **Scored prefill** chunk: append like [`SessionStore::append_rows`],
+    /// then score the chunk's K rows as queries through the fused blocked
+    /// path ([`crate::engine::ModelContext::append_rows_scored`]). Returns
+    /// the new context length and one prompt-logprob-proxy score per row.
+    #[allow(clippy::too_many_arguments)] // mirrors the scored-prefill job payload
+    pub fn append_rows_scored(
+        &mut self,
+        session: u64,
+        k: &[Vec<f32>],
+        v: &[Vec<f32>],
+        rows: usize,
+        scratch: &mut BesfScratch,
+        lane_threads: usize,
+        now: Instant,
+    ) -> Result<(usize, Vec<f32>), ServeError> {
+        let e = self
+            .sessions
+            .get_mut(&session)
+            .ok_or(ServeError::UnknownSession { session })?;
+        e.last_used = now;
+        e.clear_pending();
+        e.ctx
+            .append_rows_scored(k, v, rows, scratch, lane_threads.max(1))
+            .map_err(|e| ServeError::ShapeMismatch { what: e.to_string() })
+    }
+
+    /// Score `rows` already-landed K rows (per-lane flat chunk buffers) as
+    /// queries against the session's current context — the scoring half of
+    /// scored prefill, used for the opening chunk (which lands through
+    /// [`SessionStore::open`] and so can't ride
+    /// [`SessionStore::append_rows_scored`]).
+    pub fn score_rows(
+        &mut self,
+        session: u64,
+        k: &[Vec<f32>],
+        rows: usize,
+        scratch: &mut BesfScratch,
+        lane_threads: usize,
+        now: Instant,
+    ) -> Result<Vec<f32>, ServeError> {
+        let e = self
+            .sessions
+            .get_mut(&session)
+            .ok_or(ServeError::UnknownSession { session })?;
+        e.last_used = now;
+        e.ctx
+            .score_rows(k, rows, scratch, lane_threads.max(1))
             .map_err(|e| ServeError::ShapeMismatch { what: e.to_string() })
     }
 
@@ -235,6 +312,7 @@ impl SessionStore {
         e.last_used = now;
         let shape_err = |e: anyhow::Error| ServeError::ShapeMismatch { what: e.to_string() };
         if step.has_append() {
+            e.clear_pending();
             e.ctx.append_token(&step.k_rows, &step.v_rows).map_err(shape_err)?;
         }
         if step.has_decode() {
@@ -246,6 +324,76 @@ impl SessionStore {
                 context_len: e.ctx.context_len(),
             })
         }
+    }
+
+    /// One **fused multi-row verify step** ([`ModelStepBlock`]): score all
+    /// `q_rows` query rows against the session's *frozen* context in one
+    /// blocked-kernel pass per lane — no appends — and stash the block's
+    /// candidate K/V rows as the session's pending rows for a later
+    /// [`SessionStore::accept`]. A new block replaces any previous pending
+    /// rows; other mutating ops invalidate them.
+    pub fn step_block(
+        &mut self,
+        session: u64,
+        block: &ModelStepBlock,
+        scratch: &mut BesfScratch,
+        lane_threads: usize,
+        now: Instant,
+    ) -> Result<ModelBlockOutput, ServeError> {
+        let e = self
+            .sessions
+            .get_mut(&session)
+            .ok_or(ServeError::UnknownSession { session })?;
+        e.last_used = now;
+        // Defense in depth behind the submit-time check: `accept` indexes the
+        // pending rows by `q_rows * lanes`, so a ragged block must never be
+        // stashed.
+        block.validate(&e.ctx.shape)?;
+        let out = e
+            .ctx
+            .decode_block_threads(&block.qs, block.q_rows, scratch, lane_threads.max(1))
+            .map_err(|e| ServeError::ShapeMismatch { what: e.to_string() })?;
+        e.pending_k = block.k_rows.clone();
+        e.pending_v = block.v_rows.clone();
+        e.pending_rows = block.q_rows;
+        Ok(out)
+    }
+
+    /// Accept the first `n` rows of the session's pending candidate block:
+    /// append their K/V per row (in row order, so the cache grows exactly as
+    /// if each accepted token had been appended by its own sequential step)
+    /// and drop the rest. `n == 0` just discards the candidates. Returns the
+    /// new context length.
+    pub fn accept(
+        &mut self,
+        session: u64,
+        n: usize,
+        now: Instant,
+    ) -> Result<usize, ServeError> {
+        let e = self
+            .sessions
+            .get_mut(&session)
+            .ok_or(ServeError::UnknownSession { session })?;
+        e.last_used = now;
+        if n > e.pending_rows {
+            return Err(ServeError::ShapeMismatch {
+                what: format!(
+                    "accept({n}) exceeds the {} pending candidate rows",
+                    e.pending_rows
+                ),
+            });
+        }
+        let lanes = e.ctx.shape.lanes();
+        for r in 0..n {
+            e.ctx
+                .append_token(
+                    &e.pending_k[r * lanes..(r + 1) * lanes],
+                    &e.pending_v[r * lanes..(r + 1) * lanes],
+                )
+                .map_err(|e| ServeError::ShapeMismatch { what: e.to_string() })?;
+        }
+        e.clear_pending();
+        Ok(e.ctx.context_len())
     }
 
     /// Close a session, freeing its quantized K/V and packed planes.
@@ -333,6 +481,127 @@ mod tests {
             assert_eq!(a.kept, b.kept, "step {i}");
             assert_eq!(a.context_len, b.context_len, "step {i}");
         }
+    }
+
+    #[test]
+    fn block_step_then_accept_matches_sequential_steps() {
+        // The fused verify protocol end to end at the store layer: a Q-row
+        // step_block scores rows against the frozen context bit-identically
+        // to sequential single-row decode-only steps, and accept(n) grows the
+        // cache exactly like n sequential append-only steps would have.
+        let mt = ModelDecodeTrace::synth(2, 2, 10, 2, 8, 0x5E30);
+        let t0 = Instant::now();
+        let mut blocked = SessionStore::new();
+        let mut sequential = SessionStore::new();
+        open_trace(&mut blocked, 1, &mt, t0);
+        open_trace(&mut sequential, 1, &mt, t0);
+        let mut scratch = BesfScratch::new();
+        let lanes = mt.shape().lanes();
+
+        let mut qs = Vec::new();
+        let mut ks = Vec::new();
+        let mut vs = Vec::new();
+        for i in 0..2 {
+            let (q, k, v) = mt.step_rows(i);
+            qs.extend(q);
+            ks.extend(k);
+            vs.extend(v);
+        }
+        let block = ModelStepBlock::new(2, qs.clone(), ks.clone(), vs.clone());
+        for lane_threads in [1usize, 8] {
+            let out = blocked
+                .step_block(1, &block, &mut scratch, lane_threads, t0)
+                .unwrap();
+            assert_eq!(out.q_rows, 2);
+            assert_eq!(out.scores.len(), 2);
+            for r in 0..2 {
+                let row = qs[r * lanes..(r + 1) * lanes].to_vec();
+                let want = sequential
+                    .step(1, &ModelStep::decode_only(row), &mut scratch, t0)
+                    .unwrap();
+                assert_eq!(&out.outs[r * lanes..(r + 1) * lanes], &want.outs[..], "row {r}");
+                assert_eq!(&out.kept[r * lanes..(r + 1) * lanes], &want.kept[..], "row {r}");
+            }
+        }
+
+        // Accept only the first row; mirror with one sequential append.
+        assert_eq!(blocked.accept(1, 1, t0).unwrap(), 11);
+        sequential
+            .step(
+                1,
+                &ModelStep::append_only(ks[..lanes].to_vec(), vs[..lanes].to_vec()),
+                &mut scratch,
+                t0,
+            )
+            .unwrap();
+        let (q2, _, _) = mt.step_rows(1);
+        let a = blocked.step(1, &ModelStep::decode_only(q2.clone()), &mut scratch, t0).unwrap();
+        let b = sequential.step(1, &ModelStep::decode_only(q2), &mut scratch, t0).unwrap();
+        assert_eq!(a.outs, b.outs, "post-accept contexts must agree");
+        assert_eq!(a.context_len, 11);
+    }
+
+    #[test]
+    fn accept_validates_pending_and_mutations_invalidate_candidates() {
+        let mt = trace();
+        let t0 = Instant::now();
+        let mut store = SessionStore::new();
+        open_trace(&mut store, 1, &mt, t0);
+        let mut scratch = BesfScratch::new();
+        // No pending rows yet: accept(0) is a no-op, accept(1) is typed.
+        assert_eq!(store.accept(1, 0, t0).unwrap(), 12);
+        assert!(matches!(
+            store.accept(1, 1, t0),
+            Err(ServeError::ShapeMismatch { .. })
+        ));
+        let (qs, ks, vs) = mt.step_rows(0);
+        let block = ModelStepBlock::new(1, qs.clone(), ks.clone(), vs.clone());
+        store.step_block(1, &block, &mut scratch, 1, t0).unwrap();
+        // Over-accepting is typed; a mutating step invalidates the pending
+        // block entirely.
+        assert!(matches!(
+            store.accept(1, 2, t0),
+            Err(ServeError::ShapeMismatch { .. })
+        ));
+        store.step_block(1, &block, &mut scratch, 1, t0).unwrap();
+        store
+            .step(1, &ModelStep::append_only(ks, vs), &mut scratch, t0)
+            .unwrap();
+        assert!(matches!(
+            store.accept(1, 1, t0),
+            Err(ServeError::ShapeMismatch { .. })
+        ));
+        // Unknown sessions are typed for the new ops too.
+        assert_eq!(
+            store.step_block(9, &block, &mut scratch, 1, t0).unwrap_err(),
+            ServeError::UnknownSession { session: 9 }
+        );
+        assert_eq!(
+            store.accept(9, 0, t0).unwrap_err(),
+            ServeError::UnknownSession { session: 9 }
+        );
+    }
+
+    #[test]
+    fn scored_prefill_appends_and_scores_rows() {
+        let mt = trace();
+        let t0 = Instant::now();
+        let mut store = SessionStore::new();
+        open_trace(&mut store, 1, &mt, t0);
+        let mut scratch = BesfScratch::new();
+        let (_, ks, vs) = mt.step_rows(0);
+        let (len, scores) = store
+            .append_rows_scored(1, &ks, &vs, 1, &mut scratch, 1, t0)
+            .unwrap();
+        assert_eq!(len, 13);
+        assert_eq!(scores.len(), 1);
+        assert!(scores[0].is_finite());
+        assert_eq!(
+            store
+                .append_rows_scored(9, &ks, &vs, 1, &mut scratch, 1, t0)
+                .unwrap_err(),
+            ServeError::UnknownSession { session: 9 }
+        );
     }
 
     #[test]

@@ -25,7 +25,7 @@
 
 pub mod model;
 
-pub use model::{ModelContext, ModelShape, ModelStepOutput};
+pub use model::{ModelBlockOutput, ModelContext, ModelShape, ModelStepOutput};
 
 use crate::algo::besf::{BesfResult, BesfScratch, SURVIVED};
 use crate::algo::complexity::Complexity;
@@ -155,6 +155,64 @@ impl<'a> HeadContext<'a> {
             .expect("one query in, one result out");
         let out = attention_int12_sparse(&qi, &qa.k, &qa.v, qp, qa.kp, qa.vp, &sel.survivors);
         QueryResult { sel, out }
+    }
+
+    /// One **fused multi-row decode step** against the cached context: every
+    /// row of `qs` is quantized with its own per-step calibration (exactly
+    /// like [`HeadContext::decode_scratch`] does for its one row), then the
+    /// whole block runs through ONE query-blocked select pass — per-row LATS
+    /// thresholds via the query-aware policy
+    /// ([`BesfScratch::select_block_with_each`]), one K-plane-row load per
+    /// round shared by all rows — and sparse V is accumulated per row.
+    ///
+    /// Row `i`'s `QueryResult` is bit-identical to calling
+    /// [`HeadContext::decode_scratch`] on row `i` alone against the same
+    /// frozen context (property-tested in `engine::model`): blocking shares
+    /// K-side loads, never arithmetic. The paired `f32` is the row's
+    /// **score** — the dequantized maximum surviving QK logit
+    /// (`max(scores) · q_scale · k_scale`), the serve path's per-row
+    /// verify/prompt-logprob proxy; rows against an empty context score 0.
+    pub fn decode_block_scratch(
+        &self,
+        qs: &[&[f32]],
+        scratch: &mut BesfScratch,
+    ) -> Vec<(QueryResult, f32)> {
+        let qa = self.qa.as_ref();
+        let dim = qa.dim();
+        let mut qis = Vec::with_capacity(qs.len());
+        let mut qps = Vec::with_capacity(qs.len());
+        let mut lats = Vec::with_capacity(qs.len());
+        for q in qs {
+            assert_eq!(q.len(), dim, "query length != dim");
+            let (qi, qp) = crate::quant::quantize(q);
+            lats.push(Lats::new(self.cfg, dim, qp.scale, qa.kp.scale));
+            qis.push(qi);
+            qps.push(qp);
+        }
+        let sels = scratch.select_block_with_each(&qis, &self.planes, |q, _r, ml| {
+            lats[q].threshold(ml)
+        });
+        sels.into_iter()
+            .enumerate()
+            .map(|(i, sel)| {
+                let out = attention_int12_sparse(
+                    &qis[i],
+                    &qa.k,
+                    &qa.v,
+                    qps[i],
+                    qa.kp,
+                    qa.vp,
+                    &sel.survivors,
+                );
+                let score = sel
+                    .scores
+                    .iter()
+                    .max()
+                    .map(|&s| (s as f64 * qps[i].scale as f64 * qa.kp.scale as f64) as f32)
+                    .unwrap_or(0.0);
+                (QueryResult { sel, out }, score)
+            })
+            .collect()
     }
 
     pub fn queries(&self) -> usize {
@@ -603,6 +661,50 @@ mod tests {
         assert_eq!(got.sel.death_round, want.death_round);
         assert_eq!(got.sel.scores, want.scores);
         assert_eq!(got.sel.complexity, want.complexity);
+    }
+
+    #[test]
+    fn decode_block_matches_sequential_decode_rows() {
+        // The fused multi-row step's head-level contract: each row of a
+        // decode block is bit-identical to decoding that row alone against
+        // the same frozen context, and the row score is the dequantized max
+        // surviving logit.
+        let qa = head(48, 32, 1, 0xFB);
+        let cached = HeadContext::from_owned(qa, LatsConfig::default());
+        let mut scratch = BesfScratch::new();
+        let rows: Vec<Vec<f32>> = (0..5)
+            .map(|r| (0..32).map(|i| ((i * (r + 2)) as f32 % 17.0 - 8.0) / 9.0).collect())
+            .collect();
+        let row_refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let block = cached.decode_block_scratch(&row_refs, &mut scratch);
+        assert_eq!(block.len(), 5);
+        for (i, ((got, score), q)) in block.iter().zip(&rows).enumerate() {
+            let want = cached.decode_scratch(q, &mut scratch);
+            assert_eq!(got.sel.survivors, want.sel.survivors, "row {i}");
+            assert_eq!(got.sel.death_round, want.sel.death_round, "row {i}");
+            assert_eq!(got.sel.scores, want.sel.scores, "row {i}");
+            assert_eq!(got.out, want.out, "row {i}");
+            let (_, qp) = crate::quant::quantize(q);
+            let max = *want.sel.scores.iter().max().expect("non-empty context");
+            let want_score =
+                (max as f64 * qp.scale as f64 * cached.qa.kp.scale as f64) as f32;
+            assert_eq!(*score, want_score, "row {i} score");
+        }
+    }
+
+    #[test]
+    fn decode_block_on_empty_context_scores_zero() {
+        let qa0 = QuantAttn::quantize(&[], &[], &[], 0, 4);
+        let cached = HeadContext::from_owned(qa0, LatsConfig::default());
+        let mut scratch = BesfScratch::new();
+        let rows: Vec<Vec<f32>> = vec![vec![1.0, -1.0, 0.5, 0.0], vec![0.25; 4]];
+        let row_refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let block = cached.decode_block_scratch(&row_refs, &mut scratch);
+        for (qr, score) in &block {
+            assert!(qr.sel.survivors.is_empty());
+            assert_eq!(qr.out, vec![0.0; 4]);
+            assert_eq!(*score, 0.0);
+        }
     }
 
     #[test]

@@ -68,6 +68,27 @@ pub struct ModelStepOutput {
     pub context_len: usize,
 }
 
+/// Outputs of one **fused multi-row** decode step
+/// ([`ModelContext::decode_block`]): `q_rows` query rows scored against the
+/// frozen context in one blocked-kernel pass per lane. Flattened row-major —
+/// `outs[row * lanes + lane]` — so row `r`'s slice is exactly what a
+/// single-row [`ModelStepOutput`] would have carried for that row.
+#[derive(Debug, Clone)]
+pub struct ModelBlockOutput {
+    /// Number of query rows in the block.
+    pub q_rows: usize,
+    /// Sparse attention outputs, `outs[row * lanes + lane]`.
+    pub outs: Vec<Vec<f32>>,
+    /// Survivor counts, same layout as `outs`.
+    pub kept: Vec<usize>,
+    /// Per-row score: mean over lanes of the dequantized maximum surviving
+    /// QK logit (the verify/prompt-logprob proxy, see
+    /// [`HeadContext::decode_block_scratch`]).
+    pub scores: Vec<f32>,
+    /// Context length (keys per lane) the block was scored against.
+    pub context_len: usize,
+}
+
 /// An `n_layers × n_heads` stack of owned [`HeadContext`]s — one model-level
 /// KV-cache, grown per token and decoded per step.
 pub struct ModelContext {
@@ -277,6 +298,151 @@ impl ModelContext {
         }
         Ok(ModelStepOutput { outs, kept, context_len: self.context_len() })
     }
+
+    /// One **fused multi-row decode step** (DESIGN.md §10): score `q_rows`
+    /// query rows against the *current frozen context* in one blocked-kernel
+    /// pass per lane ([`HeadContext::decode_block_scratch`] — one K-plane-row
+    /// load per round serves the whole block), with **no intermediate
+    /// appends**. `qs` is row-major, `qs[row * lanes + lane]` — row `r` is
+    /// exactly the lh-major query set a single [`ModelContext::decode_step`]
+    /// would take.
+    ///
+    /// This is the verify-style speculative step: all `q_rows` candidate
+    /// tokens score against the same context; the caller inspects the per-row
+    /// scores, decides an accepted prefix, and appends those rows' K/V via
+    /// [`ModelContext::append_token`] per accepted row (the coordinator's
+    /// `accept(n)`). Row `r`'s outputs are bit-identical to a sequential
+    /// [`ModelContext::decode_step`] on row `r` alone over the same frozen
+    /// context (property-tested) — blocking shares K-side loads, never
+    /// arithmetic.
+    pub fn decode_block(
+        &self,
+        qs: &[Vec<f32>],
+        q_rows: usize,
+        scratch: &mut BesfScratch,
+    ) -> Result<ModelBlockOutput> {
+        self.validate_block(qs, q_rows)?;
+        let n = self.lanes.len();
+        let mut per_lane = Vec::with_capacity(n);
+        let mut rows: Vec<&[f32]> = Vec::with_capacity(q_rows);
+        for (l, lane) in self.lanes.iter().enumerate() {
+            rows.clear();
+            rows.extend((0..q_rows).map(|r| qs[r * n + l].as_slice()));
+            per_lane.push(lane.decode_block_scratch(&rows, scratch));
+        }
+        Ok(self.assemble_block(per_lane, q_rows))
+    }
+
+    /// Lane-parallel [`ModelContext::decode_block`]: lanes fan out over
+    /// `threads` scoped workers (per-worker [`BesfScratch`], deterministic
+    /// lane order — the [`ModelContext::decode_step_threads`] pattern).
+    /// Bit-identical to the serial block path at every width.
+    pub fn decode_block_threads(
+        &self,
+        qs: &[Vec<f32>],
+        q_rows: usize,
+        scratch: &mut BesfScratch,
+        threads: usize,
+    ) -> Result<ModelBlockOutput> {
+        if threads <= 1 || self.lanes.len() <= 1 {
+            return self.decode_block(qs, q_rows, scratch);
+        }
+        self.validate_block(qs, q_rows)?;
+        let per_lane = par_lanes_block(&self.lanes, qs, q_rows, threads);
+        Ok(self.assemble_block(per_lane, q_rows))
+    }
+
+    fn validate_block(&self, qs: &[Vec<f32>], q_rows: usize) -> Result<()> {
+        anyhow::ensure!(q_rows >= 1, "decode block must carry at least one query row");
+        anyhow::ensure!(
+            qs.len() == q_rows * self.lanes.len(),
+            "decode block needs q_rows*lanes queries ({} rows x {} lanes, got {})",
+            q_rows,
+            self.lanes.len(),
+            qs.len()
+        );
+        for q in qs {
+            anyhow::ensure!(q.len() == self.shape.dim, "query length != dim");
+        }
+        Ok(())
+    }
+
+    fn assemble_block(
+        &self,
+        per_lane: Vec<Vec<(QueryResult, f32)>>,
+        q_rows: usize,
+    ) -> ModelBlockOutput {
+        let n = self.lanes.len();
+        let mut outs = vec![Vec::new(); q_rows * n];
+        let mut kept = vec![0usize; q_rows * n];
+        let mut scores = vec![0f32; q_rows];
+        for (l, lane_res) in per_lane.into_iter().enumerate() {
+            for (r, (qr, sc)) in lane_res.into_iter().enumerate() {
+                kept[r * n + l] = qr.sel.survivors.len();
+                outs[r * n + l] = qr.out;
+                scores[r] += sc;
+            }
+        }
+        for s in &mut scores {
+            *s /= n as f32;
+        }
+        ModelBlockOutput { q_rows, outs, kept, scores, context_len: self.context_len() }
+    }
+
+    /// **Scored prefill**: append a chunk like [`ModelContext::append_rows`],
+    /// then score the chunk's K rows *as queries* through the fused blocked
+    /// path — the prompt-logprob output of the opt-in scored prefill mode.
+    /// Returns `(context_len, per-row scores)`.
+    ///
+    /// Scoring caveat (documented contract, not a bug): rows score against
+    /// the context *including the whole appended chunk*, not strictly
+    /// causally within the chunk — the chunk is appended first so one blocked
+    /// pass serves all rows. Shrink the prefill chunk size to tighten the
+    /// causal granularity.
+    pub fn append_rows_scored(
+        &mut self,
+        k: &[Vec<f32>],
+        v: &[Vec<f32>],
+        rows: usize,
+        scratch: &mut BesfScratch,
+        threads: usize,
+    ) -> Result<(usize, Vec<f32>)> {
+        let len = self.append_rows(k, v, rows)?;
+        let scores = self.score_rows(k, rows, scratch, threads)?;
+        Ok((len, scores))
+    }
+
+    /// Score `rows` K rows (per-lane flat chunk buffers, `[rows × dim]`
+    /// each) as queries against the **current** context through the fused
+    /// blocked path — the scoring half of
+    /// [`ModelContext::append_rows_scored`], exposed separately so a chunk
+    /// that landed via [`ModelContext::open`] can be scored too.
+    pub fn score_rows(
+        &self,
+        k: &[Vec<f32>],
+        rows: usize,
+        scratch: &mut BesfScratch,
+        threads: usize,
+    ) -> Result<Vec<f32>> {
+        let dim = self.shape.dim;
+        anyhow::ensure!(
+            k.len() == self.lanes.len(),
+            "score_rows needs one K buffer per lane ({}, got {})",
+            self.lanes.len(),
+            k.len()
+        );
+        for (l, kl) in k.iter().enumerate() {
+            anyhow::ensure!(kl.len() >= rows * dim, "lane {l} k chunk shorter than rows*dim");
+        }
+        let mut qs: Vec<Vec<f32>> = Vec::with_capacity(rows * self.lanes.len());
+        for r in 0..rows {
+            for kl in k {
+                qs.push(kl[r * dim..(r + 1) * dim].to_vec());
+            }
+        }
+        let out = self.decode_block_threads(&qs, rows, scratch, threads)?;
+        Ok(out.scores)
+    }
 }
 
 /// Map `decode_scratch` over `lanes[i]`/`qs[i]` pairs on scoped worker
@@ -299,6 +465,40 @@ fn par_lanes(lanes: &[HeadContext<'static>], qs: &[Vec<f32>], threads: usize) ->
                 let mut scratch = BesfScratch::new();
                 for ((slot, lane), q) in slot_chunk.iter_mut().zip(lane_chunk).zip(q_chunk) {
                     *slot = Some(lane.decode_scratch(q, &mut scratch));
+                }
+            });
+        }
+    });
+    flat.into_iter().map(|s| s.expect("scoped worker filled its slot")).collect()
+}
+
+/// Block analogue of [`par_lanes`]: map `decode_block_scratch` over every
+/// lane on scoped workers, gathering each lane's `q_rows` query refs from the
+/// row-major `qs` (`qs[row * lanes + lane]`) with zero data copies. One
+/// [`BesfScratch`] per worker, one slot per lane, deterministic lane order.
+fn par_lanes_block(
+    lanes: &[HeadContext<'static>],
+    qs: &[Vec<f32>],
+    q_rows: usize,
+    threads: usize,
+) -> Vec<Vec<(QueryResult, f32)>> {
+    let n = lanes.len();
+    debug_assert_eq!(qs.len(), q_rows * n);
+    let mut flat: Vec<Option<Vec<(QueryResult, f32)>>> = Vec::with_capacity(n);
+    flat.resize_with(n, || None);
+    let threads = threads.clamp(1, n.max(1));
+    let chunk = n.div_ceil(threads).max(1);
+    std::thread::scope(|s| {
+        for (ci, slot_chunk) in flat.chunks_mut(chunk).enumerate() {
+            let base = ci * chunk;
+            s.spawn(move || {
+                let mut scratch = BesfScratch::new();
+                let mut rows: Vec<&[f32]> = Vec::with_capacity(q_rows);
+                for (off, slot) in slot_chunk.iter_mut().enumerate() {
+                    let l = base + off;
+                    rows.clear();
+                    rows.extend((0..q_rows).map(|r| qs[r * n + l].as_slice()));
+                    *slot = Some(lanes[l].decode_block_scratch(&rows, &mut scratch));
                 }
             });
         }
@@ -481,6 +681,166 @@ mod tests {
             let bad_width = vec![vec![0.0; 3], vec![0.0; 4]];
             assert!(ctx.decode_step_threads(&bad_width, &mut scratch, threads).is_err());
             assert!(ctx.decode_layer_threads(5, &bad_width, &mut scratch, threads).is_err());
+        }
+    }
+
+    #[test]
+    fn fused_block_step_is_bit_identical_to_sequential_single_rows() {
+        // The tentpole invariant (ISSUE 7): a fused Q-row step over a frozen
+        // context must be bit-identical — outputs, survivor counts, and the
+        // per-row decisions behind them — to Q sequential single-row
+        // decode_step calls over the same context, for Q in {1, 3, 16},
+        // ragged dims crossing the 64-bit word edge, and lane_threads in
+        // {1, 8}.
+        for (layers, heads, dim, seed) in
+            [(2usize, 2usize, 8usize, 0x91u64), (1, 3, 65, 0x92), (2, 1, 63, 0x93)]
+        {
+            let mt = ModelDecodeTrace::synth(layers, heads, 10, 16, dim, seed);
+            let (pk, pv) = mt.prompt();
+            let ctx =
+                ModelContext::open(mt.shape(), LatsConfig::default(), &pk, &pv, mt.prompt_len)
+                    .unwrap();
+            let lanes = mt.shape().lanes();
+            let mut scratch = BesfScratch::new();
+            // Frozen context: take the trace's step queries as candidate rows
+            // WITHOUT appending their K/V.
+            let all_rows: Vec<Vec<Vec<f32>>> =
+                (0..16).map(|i| mt.step_rows(i).0).collect();
+            for q_rows in [1usize, 3, 16] {
+                let qs: Vec<Vec<f32>> =
+                    all_rows[..q_rows].iter().flat_map(|r| r.iter().cloned()).collect();
+                let fused = ctx.decode_block(&qs, q_rows, &mut scratch).unwrap();
+                assert_eq!(fused.q_rows, q_rows);
+                assert_eq!(fused.outs.len(), q_rows * lanes);
+                assert_eq!(fused.scores.len(), q_rows);
+                assert_eq!(fused.context_len, ctx.context_len());
+                for (r, row) in all_rows[..q_rows].iter().enumerate() {
+                    let single = ctx.decode_step(row, &mut scratch).unwrap();
+                    assert_eq!(
+                        &fused.outs[r * lanes..(r + 1) * lanes],
+                        &single.outs[..],
+                        "{layers}x{heads}x{dim} Q{q_rows} row {r} outs"
+                    );
+                    assert_eq!(
+                        &fused.kept[r * lanes..(r + 1) * lanes],
+                        &single.kept[..],
+                        "{layers}x{heads}x{dim} Q{q_rows} row {r} kept"
+                    );
+                    assert!(fused.scores[r].is_finite());
+                }
+                for threads in [1usize, 8] {
+                    let par =
+                        ctx.decode_block_threads(&qs, q_rows, &mut scratch, threads).unwrap();
+                    assert_eq!(par.outs, fused.outs, "Q{q_rows} t{threads}");
+                    assert_eq!(par.kept, fused.kept, "Q{q_rows} t{threads}");
+                    assert_eq!(par.scores, fused.scores, "Q{q_rows} t{threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_then_accept_matches_sequential_append_decode() {
+        // The verify-step protocol: score a block against the frozen context,
+        // accept the first n rows (append their K/V), and the next block
+        // scores against the grown context — identical to never having
+        // blocked at all.
+        let mt = ModelDecodeTrace::synth(2, 2, 8, 4, 8, 0x94);
+        let (pk, pv) = mt.prompt();
+        let mut blocked =
+            ModelContext::open(mt.shape(), LatsConfig::default(), &pk, &pv, mt.prompt_len)
+                .unwrap();
+        let mut sequential =
+            ModelContext::open(mt.shape(), LatsConfig::default(), &pk, &pv, mt.prompt_len)
+                .unwrap();
+        let mut scratch = BesfScratch::new();
+        // Accept rows 0 and 1 of a 3-row block on the blocked context; mirror
+        // with plain append_token on the sequential one.
+        for i in 0..2 {
+            let (_, krs, vrs) = mt.step_rows(i);
+            blocked.append_token(&krs, &vrs).unwrap();
+            sequential.append_token(&krs, &vrs).unwrap();
+        }
+        let (qs3, _, _) = mt.step_rows(3);
+        let a = blocked.decode_block(&qs3, 1, &mut scratch).unwrap();
+        let b = sequential.decode_step(&qs3, &mut scratch).unwrap();
+        assert_eq!(a.outs, b.outs);
+        assert_eq!(&a.kept, &b.kept);
+        assert_eq!(a.context_len, b.context_len);
+    }
+
+    #[test]
+    fn scored_prefill_matches_plain_append_plus_block() {
+        // append_rows_scored == append_rows, then score the chunk's K rows as
+        // queries through decode_block — same grown state, same scores.
+        let mt = ModelDecodeTrace::synth(1, 2, 12, 1, 8, 0x95);
+        let (pk, pv) = mt.prompt();
+        let dim = mt.dim;
+        let slice = |bufs: &[Vec<f32>], a: usize, b: usize| -> Vec<Vec<f32>> {
+            bufs.iter().map(|b_| b_[a * dim..b * dim].to_vec()).collect()
+        };
+        let mut scored = ModelContext::open(
+            mt.shape(),
+            LatsConfig::default(),
+            &slice(&pk, 0, 6),
+            &slice(&pv, 0, 6),
+            6,
+        )
+        .unwrap();
+        let mut plain = ModelContext::open(
+            mt.shape(),
+            LatsConfig::default(),
+            &slice(&pk, 0, 6),
+            &slice(&pv, 0, 6),
+            6,
+        )
+        .unwrap();
+        let mut scratch = BesfScratch::new();
+        let (ck, cv) = (slice(&pk, 6, 12), slice(&pv, 6, 12));
+        let (len, scores) =
+            scored.append_rows_scored(&ck, &cv, 6, &mut scratch, 1).unwrap();
+        assert_eq!(len, 12);
+        assert_eq!(scores.len(), 6);
+        assert!(scores.iter().all(|s| s.is_finite()));
+        // Reference: plain append, then the same rows as a decode block.
+        plain.append_rows(&ck, &cv, 6).unwrap();
+        let lanes = mt.shape().lanes();
+        let mut qs = Vec::with_capacity(6 * lanes);
+        for r in 0..6 {
+            for kl in &ck {
+                qs.push(kl[r * dim..(r + 1) * dim].to_vec());
+            }
+        }
+        let want = plain.decode_block(&qs, 6, &mut scratch).unwrap();
+        assert_eq!(scores, want.scores);
+        // Threaded scored prefill agrees too.
+        let mut scored_t = ModelContext::open(
+            mt.shape(),
+            LatsConfig::default(),
+            &slice(&pk, 0, 6),
+            &slice(&pv, 0, 6),
+            6,
+        )
+        .unwrap();
+        let (_, scores_t) =
+            scored_t.append_rows_scored(&ck, &cv, 6, &mut scratch, 8).unwrap();
+        assert_eq!(scores, scores_t);
+    }
+
+    #[test]
+    fn decode_block_validates_shapes() {
+        let mt = ModelDecodeTrace::synth(1, 2, 4, 1, 4, 0x96);
+        let (pk, pv) = mt.prompt();
+        let ctx = ModelContext::open(mt.shape(), LatsConfig::default(), &pk, &pv, 4).unwrap();
+        let mut scratch = BesfScratch::new();
+        for threads in [1usize, 8] {
+            // Zero rows, wrong query count, wrong width.
+            assert!(ctx.decode_block_threads(&[], 0, &mut scratch, threads).is_err());
+            assert!(ctx
+                .decode_block_threads(&[vec![0.0; 4]], 1, &mut scratch, threads)
+                .is_err());
+            let bad = vec![vec![0.0; 4], vec![0.0; 3]];
+            assert!(ctx.decode_block_threads(&bad, 1, &mut scratch, threads).is_err());
         }
     }
 

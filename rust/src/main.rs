@@ -4,6 +4,7 @@
 //! bitstopper figures [--fig <id>] [--all] [--out <dir>]   regenerate paper figures
 //! bitstopper simulate [--seq N] [--dim N] [--queries N] [--alpha A] [--config F]
 //! bitstopper serve [--sessions N] [--steps N] [--workers N] [--alpha A]
+//!                  [--lane-threads N] [--prefill-chunk N] [--spec-q Q]
 //! bitstopper ppl [--alpha A]                               tiny-LM perplexity eval
 //! bitstopper artifacts                                     list loaded AOT artifacts
 //! bitstopper selftest                                      config + runtime sanity
@@ -11,7 +12,7 @@
 //! (Hand-rolled parsing: the build environment has no clap.)
 
 use bitstopper::config::{parse_toml, SimConfig};
-use bitstopper::coordinator::{drive_decode, EngineBuilder};
+use bitstopper::coordinator::{drive_decode, drive_spec_decode, EngineBuilder};
 use bitstopper::figures;
 use bitstopper::runtime::{default_artifact_dir, Runtime};
 use bitstopper::sim::simulate_attention;
@@ -85,10 +86,18 @@ fn main() {
             let steps: usize = get("--steps").and_then(|s| s.parse().ok()).unwrap_or(16);
             let workers: usize = get("--workers").and_then(|s| s.parse().ok()).unwrap_or(2);
             let alpha: f64 = get("--alpha").and_then(|s| s.parse().ok()).unwrap_or(0.6);
+            let lane_threads: usize =
+                get("--lane-threads").and_then(|s| s.parse().ok()).unwrap_or(1);
+            let prefill_chunk: usize =
+                get("--prefill-chunk").and_then(|s| s.parse().ok()).unwrap_or(128);
+            // --spec-q Q > 0 serves the decode streams as fused Q-row verify
+            // blocks + accept-all instead of sequential single-row steps.
+            let spec_q: usize = get("--spec-q").and_then(|s| s.parse().ok()).unwrap_or(0);
             let (layers, heads, dim, prompt_len) = (2usize, 4usize, 64usize, 256usize);
             let client = EngineBuilder::new()
                 .workers(workers)
-                .prefill_chunk(128)
+                .prefill_chunk(prefill_chunk)
+                .lane_threads(lane_threads)
                 .build()
                 .map_err(|e| anyhow::anyhow!("engine construction: {e}"))?;
             let traces: Vec<ModelDecodeTrace> = (0..sessions)
@@ -96,21 +105,26 @@ fn main() {
                     ModelDecodeTrace::synth(layers, heads, prompt_len, steps, dim, 77 + s as u64)
                 })
                 .collect();
-            let report = drive_decode(&client, alpha, &traces, Duration::from_secs(120))
-                .map_err(|e| anyhow::anyhow!("serving demo: {e}"))?;
+            println!("sessions  : {sessions} x {layers}x{heads} lanes, {prompt_len}-token prompts");
+            let (prefill, ms_per_token, tok_per_sec, keep_rate) = if spec_q > 0 {
+                let report = drive_spec_decode(&client, alpha, &traces, spec_q, Duration::from_secs(120))
+                    .map_err(|e| anyhow::anyhow!("serving demo: {e}"))?;
+                println!("spec      : Q={spec_q} fused verify, {} blocks, accept-all", report.blocks);
+                (report.prefill, report.ms_per_token(), report.tokens_per_sec(), report.keep_rate())
+            } else {
+                let report = drive_decode(&client, alpha, &traces, Duration::from_secs(120))
+                    .map_err(|e| anyhow::anyhow!("serving demo: {e}"))?;
+                (report.prefill, report.ms_per_token(), report.tokens_per_sec(), report.keep_rate())
+            };
             let m = client.metrics();
             client.shutdown();
-            println!("sessions  : {sessions} x {layers}x{heads} lanes, {prompt_len}-token prompts");
-            println!("prefill   : {:.1} ms total", report.prefill.as_secs_f64() * 1e3);
+            println!("prefill   : {:.1} ms total", prefill.as_secs_f64() * 1e3);
+            println!("decode    : {ms_per_token:.3} ms/token ({tok_per_sec:.0} tok/s)");
+            println!("keep rate : {:.1}%", 100.0 * keep_rate);
             println!(
-                "decode    : {:.3} ms/token ({:.0} tok/s)",
-                report.ms_per_token(),
-                report.tokens_per_sec()
-            );
-            println!("keep rate : {:.1}%", 100.0 * report.keep_rate());
-            println!(
-                "scheduler : {} ticks, {} chunks, {} steps, {} deferred, {} errors",
-                m.ticks, m.prefill_chunks, m.model_steps, m.deferred, m.errors
+                "scheduler : {} ticks, {} chunks, {} steps, {} spec, {} accepts, {} deferred ({} on budget), {} errors",
+                m.ticks, m.prefill_chunks, m.model_steps, m.spec_steps, m.accepts, m.deferred,
+                m.budget_deferred, m.errors
             );
             anyhow::ensure!(m.errors == 0, "serving demo completed with errors");
             Ok(())
@@ -179,6 +193,7 @@ fn main() {
                  \x20 figures  [--fig 3a|3b|10|11|12|13a|13b|14|table1|headline] [--all] [--out DIR]\n\
                  \x20 simulate [--seq N] [--dim N] [--queries N] [--alpha A] [--config FILE]\n\
                  \x20 serve    [--sessions N] [--steps N] [--workers N] [--alpha A]\n\
+                 \x20          [--lane-threads N] [--prefill-chunk N] [--spec-q Q]\n\
                  \x20 ppl      [--alpha A]\n\
                  \x20 artifacts | selftest"
             );

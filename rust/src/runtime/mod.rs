@@ -28,7 +28,7 @@ use std::path::Path;
 compile_error!(
     "the `pjrt` feature additionally requires the `xla` crate, which the \
      offline build image cannot fetch: add it to [dependencies] in Cargo.toml \
-     and delete this compile_error (see DESIGN.md §10)"
+     and delete this compile_error (see DESIGN.md §11)"
 );
 
 /// Which pipeline an artifact implements.
@@ -247,7 +247,7 @@ impl Runtime {
     pub fn new() -> Result<Self> {
         bail!(
             "PJRT runtime unavailable: this build has no XLA backend (offline image, \
-             see DESIGN.md §10); the coordinator's pure-Rust executors cover the request path"
+             see DESIGN.md §11); the coordinator's pure-Rust executors cover the request path"
         )
     }
 

@@ -2,7 +2,7 @@
 """Compare fresh bench JSON against the committed baselines.
 
 Usage:
-    scripts/check_serve_trend.py [SERVE] [SERVE_BASELINE] [HOTPATH] [HOTPATH_BASELINE]
+    scripts/check_serve_trend.py [--refresh] [SERVE] [SERVE_BASELINE] [HOTPATH] [HOTPATH_BASELINE]
 
 SERVE            defaults to BENCH_serve.json          (written by
                                                         `cargo bench --bench hotpath`)
@@ -10,11 +10,17 @@ SERVE_BASELINE   defaults to BENCH_serve.baseline.json (committed)
 HOTPATH          defaults to BENCH_hotpath.json        (same bench run)
 HOTPATH_BASELINE defaults to BENCH_hotpath.baseline.json (committed)
 
+`--refresh` rewrites each baseline from the corresponding current JSON
+(dropping any hand-seeded `"seeded": true` flag and its note) instead of
+checking — the deliberate replace-the-bound step, meant for the same PR
+that moves the numbers.
+
 Policy (ROADMAP "BENCH trend tracking in CI"):
 
-* Every `serve_decode_b*` cost/token row is compared by p50 (more robust
-  than the mean on shared CI machines — see EXPERIMENTS.md §Perf). A row
-  more than REGRESSION_PCT slower than its baseline fails the check.
+* Every `serve_decode_b*` / `serve_spec_q*` / `serve_scored_*` cost row is
+  compared by p50 (more robust than the mean on shared CI machines — see
+  EXPERIMENTS.md §Perf). A row more than REGRESSION_PCT slower than its
+  baseline fails the check.
 * Every derived ratio whose name contains "speedup" — in BOTH files — is a
   machine-independent higher-is-better number (kernel A vs kernel B on the
   same box). One dropping below RATIO_FLOOR × baseline fails the check.
@@ -29,10 +35,11 @@ Policy (ROADMAP "BENCH trend tracking in CI"):
   note below reminds you to replace it with measured numbers.
 
 Refresh a baseline deliberately, in the same PR that is *supposed* to move
-the numbers:  cp BENCH_serve.json BENCH_serve.baseline.json  (same for
-hotpath) — and strip any `"seeded"` flag by doing so.
+the numbers:  scripts/check_serve_trend.py --refresh  (strips the
+`"seeded"` flag for you).
 
-Exit codes: 0 ok / baseline missing, 1 regression, 2 malformed input.
+Exit codes: 0 ok / baseline missing / refreshed, 1 regression,
+2 malformed input.
 """
 
 import json
@@ -47,11 +54,14 @@ def load_doc(path: Path):
     return json.loads(path.read_text())
 
 
+SERVE_ROW_PREFIXES = ("serve_decode_", "serve_spec_", "serve_scored_")
+
+
 def serve_rows(doc):
     rows = {}
     for row in doc.get("rows", []):
         name = row.get("name", "")
-        if name.startswith("serve_decode_"):
+        if name.startswith(SERVE_ROW_PREFIXES):
             rows[name] = float(row.get("p50", row.get("mean", "nan")))
     return rows
 
@@ -69,7 +79,7 @@ def note_if_seeded(doc, path):
         print(f"note: {path} is a hand-seeded conservative bound, not a "
               "measured run;")
         print(f"      replace it with real numbers when a toolchain run is "
-              f"available: cp {str(path).replace('.baseline', '')} {path}")
+              f"available: scripts/check_serve_trend.py --refresh")
 
 
 def check_serve_rows(current, baseline, failures):
@@ -109,11 +119,41 @@ def check_ratios(label, current, baseline, failures):
         print(f"  {name:<32} {base:8.3f}x -> {cur:8.3f}x  {verdict}")
 
 
+def refresh_baseline(src: Path, dst: Path):
+    """Rewrite `dst` from the measured `src`, dropping any seeded marker."""
+    doc = load_doc(src)
+    was_seeded = doc.pop("seeded", None)
+    doc.pop("note", None)  # the note explains the seeding; stale without it
+    dst.write_text(json.dumps(doc, indent=2) + "\n")
+    origin = " (was hand-seeded)" if was_seeded else ""
+    print(f"refreshed {dst} from {src}{origin}")
+
+
 def main(argv):
+    argv = list(argv)
+    do_refresh = "--refresh" in argv
+    if do_refresh:
+        argv.remove("--refresh")
     serve_cur = Path(argv[1] if len(argv) > 1 else "BENCH_serve.json")
     serve_base = Path(argv[2] if len(argv) > 2 else "BENCH_serve.baseline.json")
     hot_cur = Path(argv[3] if len(argv) > 3 else "BENCH_hotpath.json")
     hot_base = Path(argv[4] if len(argv) > 4 else "BENCH_hotpath.baseline.json")
+
+    if do_refresh:
+        if not serve_cur.exists():
+            print(f"error: {serve_cur} not found — run "
+                  "`cargo bench --bench hotpath` first")
+            return 2
+        try:
+            refresh_baseline(serve_cur, serve_base)
+            if hot_cur.exists():
+                refresh_baseline(hot_cur, hot_base)
+            else:
+                print(f"note: {hot_cur} not found; hotpath baseline untouched.")
+        except (json.JSONDecodeError, ValueError) as e:
+            print(f"error: malformed bench json: {e}")
+            return 2
+        return 0
 
     if not serve_cur.exists():
         print(f"error: {serve_cur} not found — run "
@@ -124,7 +164,7 @@ def main(argv):
     try:
         cur_doc = load_doc(serve_cur)
         if not serve_rows(cur_doc):
-            print(f"error: {serve_cur} has no serve_decode_* rows")
+            print(f"error: {serve_cur} has no serve_* rows")
             return 2
         if serve_base.exists():
             base_doc = load_doc(serve_base)
