@@ -10,7 +10,9 @@
 //! EXPERIMENTS.md.
 //!
 //! Run: `cargo bench --bench hotpath` (pass `-- --serve-only` to run just
-//! the continuous-batching serve suite).
+//! the continuous-batching serve suite, or `-- --popcount-only` to run just
+//! the AND+popcount core rows — the nightly simd lane uses the latter with
+//! `--features simd` to produce `and_popcount_simd_vs_unrolled`).
 //!
 //! Besides the human-readable table, results are persisted to
 //! `BENCH_hotpath.json` in the working directory (one row per bench plus
@@ -104,13 +106,75 @@ fn write_json(
 
 fn main() {
     // `cargo bench --bench hotpath -- --serve-only` skips the hot-path rows
-    // for a quick serve-suite-only run.
-    if std::env::args().any(|a| a == "--serve-only") {
+    // for a quick serve-suite-only run; `-- --popcount-only` runs just the
+    // AND+popcount core (the nightly simd lane's entry point — no JSON is
+    // written, so a partial run never clobbers `BENCH_hotpath.json`).
+    let args: Vec<String> = std::env::args().collect();
+    if args.iter().any(|a| a == "--serve-only") {
         serve_bench();
+        return;
+    }
+    if args.iter().any(|a| a == "--popcount-only") {
+        println!("== AND+popcount core (popcount-only run) ==\n");
+        let mut rows: Vec<(String, Summary)> = Vec::new();
+        let mut derived: Vec<(String, f64)> = Vec::new();
+        popcount_bench(&mut rows, &mut derived);
+        for (name, v) in &derived {
+            println!("derived {name:<32} {v:>9.3}");
+        }
         return;
     }
     hotpath_bench();
     serve_bench();
+}
+
+/// The multi-word AND+popcount reduction shared by the sliced and blocked
+/// BESF kernels, measured on a 256k-word (2 MiB/operand) stream. The
+/// 4-word-unrolled scalar body (`and_popcount_unrolled`) is always compiled;
+/// under `--features simd` the `u64x4` body is timed against it and the
+/// ratio lands in `and_popcount_simd_vs_unrolled`. That derived name
+/// deliberately lacks the "speedup" substring: the row only exists on simd
+/// runs (the allowed-to-fail nightly lane), so it must never arm the trend
+/// gate's ratio floor on scalar runners.
+fn popcount_bench(rows: &mut Vec<(String, Summary)>, derived: &mut Vec<(String, f64)>) {
+    use bitstopper::quant::bitplane::and_popcount_unrolled;
+    const WORDS: usize = 256 * 1024;
+    const PASSES: usize = 16;
+    let mut rng = SplitMix64::new(0xB1B0);
+    let a: Vec<u64> = (0..WORDS).map(|_| rng.next_u64()).collect();
+    let b: Vec<u64> = (0..WORDS).map(|_| rng.next_u64()).collect();
+    time_it(rows, "and_popcount_unrolled_256kw", 20, || {
+        let mut acc = 0u64;
+        for _ in 0..PASSES {
+            let aa = std::hint::black_box(&a[..]);
+            let bb = std::hint::black_box(&b[..]);
+            acc = acc.wrapping_add(and_popcount_unrolled(aa, bb) as u64);
+        }
+        acc
+    });
+    #[cfg(feature = "simd")]
+    {
+        use bitstopper::quant::bitplane::and_popcount;
+        time_it(rows, "and_popcount_simd_256kw", 20, || {
+            let mut acc = 0u64;
+            for _ in 0..PASSES {
+                let aa = std::hint::black_box(&a[..]);
+                let bb = std::hint::black_box(&b[..]);
+                acc = acc.wrapping_add(and_popcount(aa, bb) as u64);
+            }
+            acc
+        });
+        derived.push((
+            "and_popcount_simd_vs_unrolled".to_string(),
+            mean_of(rows, "and_popcount_unrolled_256kw")
+                / mean_of(rows, "and_popcount_simd_256kw"),
+        ));
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        let _ = &derived;
+        println!("  (simd feature off: and_popcount == unrolled; rerun with --features simd)");
+    }
 }
 
 fn hotpath_bench() {
@@ -408,6 +472,11 @@ fn hotpath_bench() {
         mean_of(&rows, "model_step_32lanes_ctx2048_t1")
             / mean_of(&rows, "model_step_32lanes_ctx2048_all"),
     ));
+
+    // AND+popcount core: always rows the unrolled scalar; adds the simd row
+    // + ratio when built with `--features simd` (the nightly lane).
+    println!();
+    popcount_bench(&mut rows, &mut derived);
     for (name, v) in &derived {
         println!("derived {name:<32} {v:>9.3}");
     }

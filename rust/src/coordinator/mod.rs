@@ -764,7 +764,7 @@ impl EngineCore {
                     //    assemble and dispatch the iteration batch.
                     if need_tick {
                         need_tick = false;
-                        let dispatches = sched.plan_tick(&mut router);
+                        let dispatches = sched.plan_tick(&mut router, Instant::now());
                         dirty |= !dispatches.is_empty();
                         for d in dispatches {
                             router.note_dispatch(d.worker, 1);
@@ -790,7 +790,7 @@ impl EngineCore {
                 }
                 let deadline = Instant::now() + Duration::from_secs(5);
                 while sched.busy() && Instant::now() < deadline {
-                    for d in sched.plan_tick(&mut router) {
+                    for d in sched.plan_tick(&mut router, Instant::now()) {
                         router.note_dispatch(d.worker, 1);
                         let job = Job::Model { job: d.job, events: d.events, ack: d.ack };
                         if worker_txs[d.worker].send(job).is_err() {

@@ -801,7 +801,12 @@ impl Scheduler {
     /// *whole* decode budget dispatches whenever the pool is still untouched
     /// — the rotating cursor visits every session first within `S` ticks, so
     /// a `q_rows > budget` block waits at most one rotation, never forever.
-    pub fn plan_tick(&mut self, router: &mut Router) -> Vec<Dispatch> {
+    ///
+    /// `now` is the tick's timestamp, supplied by the driving thread: the
+    /// scheduler is a pure state machine and never reads the wall clock
+    /// itself (lint rule L3, DESIGN.md §13) — that keeps every tick
+    /// deterministic and replayable in unit and loom tests.
+    pub fn plan_tick(&mut self, router: &mut Router, now: Instant) -> Vec<Dispatch> {
         let mut out = Vec::new();
         let n = self.order.len();
         if n == 0 {
@@ -843,9 +848,9 @@ impl Scheduler {
                     // prefilled — e.g. a handle dropped right away): there
                     // is no cache to free, so ack the close here instead of
                     // dispatching a job the store would reject.
-                    let _ = s
-                        .events
-                        .send(SessionEvent::Closed { latency: submitted.elapsed() });
+                    let _ = s.events.send(SessionEvent::Closed {
+                        latency: now.duration_since(submitted),
+                    });
                     continue;
                 }
                 Dispatch {
@@ -1052,7 +1057,7 @@ mod tests {
         let _rx = open(&mut sched, &mut router, 1, prompt((1, 1), 2, 10));
         let mut rows_seen = vec![];
         for tick in 0..3 {
-            let batch = sched.plan_tick(&mut router);
+            let batch = sched.plan_tick(&mut router, Instant::now());
             assert_eq!(batch.len(), 1, "tick {tick}");
             let d = &batch[0];
             match (&d.job, tick) {
@@ -1071,7 +1076,10 @@ mod tests {
             ack_all(&mut sched, &mut router, &batch);
         }
         assert_eq!(rows_seen, vec![4, 4, 2]);
-        assert!(sched.plan_tick(&mut router).is_empty(), "prefill done, nothing queued");
+        assert!(
+            sched.plan_tick(&mut router, Instant::now()).is_empty(),
+            "prefill done, nothing queued"
+        );
         assert_eq!(sched.stats.prefill_chunks, 3);
     }
 
@@ -1089,7 +1097,7 @@ mod tests {
         sched.enqueue_prefill(1, prompt((1, 1), 2, 4), Instant::now()).unwrap();
         let mut kinds = Vec::new();
         for _ in 0..3 {
-            let batch = sched.plan_tick(&mut router);
+            let batch = sched.plan_tick(&mut router, Instant::now());
             assert_eq!(batch.len(), 1);
             kinds.push(match &batch[0].job {
                 ModelJob::Open { .. } => "open",
@@ -1121,7 +1129,7 @@ mod tests {
         // Tick until the two decode sessions' prefills are done, then queue
         // their steps.
         for _ in 0..3 {
-            let batch = sched.plan_tick(&mut router);
+            let batch = sched.plan_tick(&mut router, Instant::now());
             ack_all(&mut sched, &mut router, &batch);
         }
         for sid in [11u64, 12] {
@@ -1133,7 +1141,7 @@ mod tests {
         let mut last_seen: HashMap<u64, usize> = HashMap::new();
         let mut max_gap: HashMap<u64, usize> = HashMap::new();
         for tick in 0..24 {
-            let batch = sched.plan_tick(&mut router);
+            let batch = sched.plan_tick(&mut router, Instant::now());
             assert!(batch.len() <= 1, "capacity 1");
             for d in &batch {
                 let sid = d.job.session();
@@ -1169,13 +1177,16 @@ mod tests {
         for sid in [1u64, 2, 3] {
             let _ = open(&mut sched, &mut router, sid, prompt((1, 1), 2, 4));
         }
-        let batch = sched.plan_tick(&mut router);
+        let batch = sched.plan_tick(&mut router, Instant::now());
         assert_eq!(batch.len(), 2, "capacity bounds the iteration batch");
         assert_eq!(sched.stats.deferred, 1);
-        assert!(sched.plan_tick(&mut router).is_empty(), "saturated: nothing dispatches");
+        assert!(
+            sched.plan_tick(&mut router, Instant::now()).is_empty(),
+            "saturated: nothing dispatches"
+        );
         assert!(sched.busy());
         ack_all(&mut sched, &mut router, &batch);
-        let batch = sched.plan_tick(&mut router);
+        let batch = sched.plan_tick(&mut router, Instant::now());
         assert_eq!(batch.len(), 1, "freed capacity serves the deferred session");
         ack_all(&mut sched, &mut router, &batch);
         assert!(!sched.busy());
@@ -1187,7 +1198,7 @@ mod tests {
         let mut sched = Scheduler::new(SchedConfig::default(), 2);
         let shape = ModelShape::single(2);
         let _o = open(&mut sched, &mut router, 7, prompt((1, 1), 2, 4));
-        let batch = sched.plan_tick(&mut router);
+        let batch = sched.plan_tick(&mut router, Instant::now());
         ack_all(&mut sched, &mut router, &batch);
         sched.enqueue_step(7, step(&shape), Instant::now()).unwrap();
         sched.enqueue_close(7, Instant::now()).unwrap();
@@ -1201,10 +1212,10 @@ mod tests {
             Err(ServeError::SessionClosing { session: 7 })
         );
         assert_eq!(router.n_sessions(), 1);
-        let batch = sched.plan_tick(&mut router);
+        let batch = sched.plan_tick(&mut router, Instant::now());
         assert!(matches!(batch[0].job, ModelJob::Step { .. }), "step before close");
         ack_all(&mut sched, &mut router, &batch);
-        let batch = sched.plan_tick(&mut router);
+        let batch = sched.plan_tick(&mut router, Instant::now());
         assert!(matches!(batch[0].job, ModelJob::Close { session: 7 }));
         assert_eq!(router.n_sessions(), 0, "close releases the pin");
         assert_eq!(sched.n_sessions(), 0);
@@ -1223,7 +1234,7 @@ mod tests {
         sched.admit_open(5, 0.6, ModelShape::single(2), tx, &mut router).unwrap();
         assert_eq!(router.n_sessions(), 1);
         sched.enqueue_close(5, Instant::now()).unwrap();
-        let batch = sched.plan_tick(&mut router);
+        let batch = sched.plan_tick(&mut router, Instant::now());
         assert!(batch.is_empty(), "the worker never saw the session: nothing to dispatch");
         assert!(matches!(rx.try_recv(), Ok(SessionEvent::Closed { .. })));
         assert_eq!(sched.n_sessions(), 0);
@@ -1239,7 +1250,7 @@ mod tests {
         let shape = ModelShape::single(2);
         let _o = open(&mut sched, &mut router, 1, prompt((1, 1), 2, 4));
         sched.enqueue_step(1, step(&shape), Instant::now()).unwrap();
-        let batch = sched.plan_tick(&mut router);
+        let batch = sched.plan_tick(&mut router, Instant::now());
         assert!(matches!(batch[0].job, ModelJob::Open { .. }));
         assert_eq!(router.n_sessions(), 1);
         let dropped =
@@ -1251,7 +1262,7 @@ mod tests {
         // Eviction: same pin/strand cleanup, counted in stats, and the
         // session's event stream carries the typed reason.
         let rx = open(&mut sched, &mut router, 2, prompt((1, 1), 2, 4));
-        let batch = sched.plan_tick(&mut router);
+        let batch = sched.plan_tick(&mut router, Instant::now());
         ack_all(&mut sched, &mut router, &batch);
         assert_eq!(router.n_sessions(), 1);
         let dropped = sched.on_feedback(
@@ -1344,17 +1355,17 @@ mod tests {
         for sid in [1u64, 2, 3] {
             let _ = open(&mut sched, &mut router, sid, prompt((1, 1), 2, 4));
         }
-        let batch = sched.plan_tick(&mut router);
+        let batch = sched.plan_tick(&mut router, Instant::now());
         assert_eq!(batch.len(), 3, "all three prefills fit the prompt pool");
         ack_all(&mut sched, &mut router, &batch);
         sched.enqueue_spec(1, spec(&shape, 3), Instant::now()).unwrap();
         sched.enqueue_step(2, step(&shape), Instant::now()).unwrap();
         sched.enqueue_step(3, step(&shape), Instant::now()).unwrap();
-        let batch = sched.plan_tick(&mut router);
+        let batch = sched.plan_tick(&mut router, Instant::now());
         assert_eq!(batch.len(), 2, "3+1 fills the pool; the third unit waits");
         assert_eq!(sched.stats.budget_deferred, 1);
         ack_all(&mut sched, &mut router, &batch);
-        let batch = sched.plan_tick(&mut router);
+        let batch = sched.plan_tick(&mut router, Instant::now());
         assert_eq!(batch.len(), 1, "the deferred unit drains next tick");
         ack_all(&mut sched, &mut router, &batch);
         assert_eq!(sched.stats.spec_steps, 1);
@@ -1388,18 +1399,18 @@ mod tests {
                 })
                 .collect()
         };
-        let batch = sched.plan_tick(&mut router);
+        let batch = sched.plan_tick(&mut router, Instant::now());
         assert_eq!(rows_of(&batch), vec![4, 2], "second chunk carved down to the pool");
         assert!(batch[0].ack.is_some(), "4 of 4 rows: acked");
         assert!(batch[1].ack.is_none(), "2 of 4 rows: more to come");
         assert_eq!(sched.stats.budget_deferred, 1, "session 3 found an empty pool");
         ack_all(&mut sched, &mut router, &batch);
         // Next tick, fresh pool: session 2's remaining 2 rows + session 3's 4.
-        let batch = sched.plan_tick(&mut router);
+        let batch = sched.plan_tick(&mut router, Instant::now());
         assert_eq!(rows_of(&batch).iter().sum::<usize>(), 6);
         assert!(batch.iter().all(|d| d.ack.is_some()), "both prompts finish");
         ack_all(&mut sched, &mut router, &batch);
-        assert!(sched.plan_tick(&mut router).is_empty());
+        assert!(sched.plan_tick(&mut router, Instant::now()).is_empty());
     }
 
     #[test]
@@ -1422,7 +1433,7 @@ mod tests {
         for sid in [1u64, 2] {
             let _ = open(&mut sched, &mut router, sid, prompt((1, 1), 2, 4));
         }
-        let batch = sched.plan_tick(&mut router);
+        let batch = sched.plan_tick(&mut router, Instant::now());
         ack_all(&mut sched, &mut router, &batch);
         for _ in 0..4 {
             sched.enqueue_step(1, step(&shape), Instant::now()).unwrap();
@@ -1430,7 +1441,7 @@ mod tests {
         sched.enqueue_spec(2, spec(&shape, 5), Instant::now()).unwrap();
         let mut spec_tick = None;
         for tick in 0..4 {
-            let batch = sched.plan_tick(&mut router);
+            let batch = sched.plan_tick(&mut router, Instant::now());
             for d in &batch {
                 if matches!(d.job, ModelJob::Spec { .. }) {
                     spec_tick = Some(tick);
@@ -1465,7 +1476,7 @@ mod tests {
         for sid in [1u64, 2, 3] {
             let _ = open(&mut sched, &mut router, sid, prompt((1, 1), 2, 4));
         }
-        let batch = sched.plan_tick(&mut router);
+        let batch = sched.plan_tick(&mut router, Instant::now());
         ack_all(&mut sched, &mut router, &batch);
         for _ in 0..8 {
             sched.enqueue_spec(1, spec(&shape, 2), Instant::now()).unwrap();
@@ -1475,7 +1486,7 @@ mod tests {
         let mut last_seen: HashMap<u64, usize> = HashMap::new();
         let mut max_gap: HashMap<u64, usize> = HashMap::new();
         for tick in 0..24 {
-            let batch = sched.plan_tick(&mut router);
+            let batch = sched.plan_tick(&mut router, Instant::now());
             for d in &batch {
                 let sid = d.job.session();
                 if let Some(&prev) = last_seen.get(&sid) {
@@ -1552,7 +1563,7 @@ mod tests {
         sched.admit_open(1, 0.6, p.shape, tx, &mut router).unwrap();
         sched.enqueue_prefill_scored(1, p, Instant::now()).unwrap();
         for _ in 0..3 {
-            let batch = sched.plan_tick(&mut router);
+            let batch = sched.plan_tick(&mut router, Instant::now());
             assert_eq!(batch.len(), 1);
             match &batch[0].job {
                 ModelJob::Open { scored, .. } | ModelJob::Prefill { scored, .. } => {

@@ -99,7 +99,7 @@ mod tests {
     #[test]
     fn buffers_are_largest_area_component() {
         let t = bitstopper_area_power();
-        let max = t.iter().max_by(|a, b| a.area_mm2.partial_cmp(&b.area_mm2).unwrap()).unwrap();
+        let max = t.iter().max_by(|a, b| a.area_mm2.total_cmp(&b.area_mm2)).unwrap();
         assert!(max.component.contains("buffers"));
     }
 }

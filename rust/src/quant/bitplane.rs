@@ -83,6 +83,16 @@ pub fn remaining_weight(r: usize) -> i64 {
 #[cfg(not(feature = "simd"))]
 #[inline]
 pub fn and_popcount(a: &[u64], b: &[u64]) -> u32 {
+    and_popcount_unrolled(a, b)
+}
+
+/// The 4-word-unrolled scalar body of [`and_popcount`] — always compiled,
+/// even under `--features simd`, so the simd build can benchmark its vector
+/// body against this reference on the same machine (the
+/// `and_popcount_simd_vs_unrolled` row in `benches/hotpath.rs`) and the
+/// property tests can pin the two bodies bit-identical.
+#[inline]
+pub fn and_popcount_unrolled(a: &[u64], b: &[u64]) -> u32 {
     debug_assert_eq!(a.len(), b.len());
     let mut acc = 0u32;
     for (ca, cb) in a.chunks_exact(4).zip(b.chunks_exact(4)) {
@@ -414,6 +424,22 @@ mod tests {
         let q = vec![1i16];
         for (j, &v) in vals.iter().enumerate() {
             assert_eq!(bp.full_dot(j, &q), v as i64, "value {v}");
+        }
+    }
+
+    #[test]
+    fn and_popcount_bodies_agree_with_naive_reduction() {
+        // The dispatching `and_popcount` (scalar by default, `std::simd`
+        // under `--features simd`) and the always-compiled unrolled scalar
+        // reference must both equal the one-word-at-a-time reduction, across
+        // lengths that exercise the 4-word unroll and its remainder.
+        let mut rng = crate::util::SplitMix64::new(0xA9D);
+        for len in [0usize, 1, 3, 4, 5, 8, 31, 64, 129] {
+            let a: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+            let b: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+            let naive: u32 = a.iter().zip(&b).map(|(&x, &y)| (x & y).count_ones()).sum();
+            assert_eq!(and_popcount(&a, &b), naive, "dispatch body, len {len}");
+            assert_eq!(and_popcount_unrolled(&a, &b), naive, "unrolled body, len {len}");
         }
     }
 

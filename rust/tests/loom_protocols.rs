@@ -1,0 +1,266 @@
+#![cfg(loom)]
+//! Model-checked concurrency protocols (run with
+//! `RUSTFLAGS="--cfg loom" cargo test --test loom_protocols`):
+//!
+//! 1. **Pending-candidate stash/accept/invalidate** — a speculative
+//!    verify block ([`SessionStore::step_block`]) stashes candidate K/V
+//!    rows server-side; a racing append-only step must *invalidate* them
+//!    so a later `accept(n)` can never append stale rows
+//!    (DESIGN.md §10's invalidation rule, §13 "Correctness tooling").
+//! 2. **Eviction → pin-release handoff** — a store eviction arriving as
+//!    [`Feedback::Evicted`] while the client races more work must end
+//!    with the router pin released, the scheduler empty, and every
+//!    enqueued unit either dispatched or failed with a typed error on
+//!    the stream — never a silent gap (DESIGN.md §9).
+//!
+//! The `loom` dependency resolves to `rust/vendor/loom`, a std-backed
+//! shim (the offline build can fetch nothing): each model runs once
+//! under the OS scheduler instead of once per interleaving. Every
+//! assertion below is therefore written interleaving-independent — it
+//! checks agreement between an op log and the observed outcome, not a
+//! specific schedule — so the tests are meaningful race tests today and
+//! become exhaustive model checks by swapping the path dependency for
+//! the real crate.
+
+use bitstopper::algo::BesfScratch;
+use bitstopper::config::LatsConfig;
+use bitstopper::coordinator::scheduler::Dispatch;
+use bitstopper::coordinator::{
+    EvictReason, Feedback, ModelPrompt, ModelStep, ModelStepBlock, Router, SchedConfig, Scheduler,
+    ServeError, SessionEvent, SessionStore,
+};
+use bitstopper::engine::ModelShape;
+use bitstopper::util::SplitMix64;
+use loom::sync::{Arc, Mutex};
+use loom::thread;
+use std::time::Instant;
+
+/// Deterministic non-degenerate f32 rows (quantization needs a non-zero
+/// calibration scale; loom models cannot read entropy sources).
+fn rows(seed: u64, n: usize, dim: usize) -> Vec<Vec<f32>> {
+    let mut rng = SplitMix64::new(seed);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut row = Vec::with_capacity(dim);
+        for _ in 0..dim {
+            row.push((rng.next_u64() % 2000) as f32 / 1000.0 - 1.0);
+        }
+        out.push(row);
+    }
+    out
+}
+
+/// Per-lane flat chunk buffers (`[rows × dim]` per lane), the
+/// [`SessionStore::open`] prefill layout.
+fn flat_chunk(seed: u64, lanes: usize, n_rows: usize, dim: usize) -> Vec<Vec<f32>> {
+    let mut out = Vec::with_capacity(lanes);
+    for l in 0..lanes {
+        out.push(rows(seed ^ (l as u64 + 1), n_rows, dim).concat());
+    }
+    out
+}
+
+/// An empty-result worker ack for a dispatch (protocol 2 only exercises
+/// the scheduler's bookkeeping, not the model math).
+fn done(d: &Dispatch) -> Feedback {
+    Feedback::Done { worker: d.worker, session: d.job.session(), kept: 0, context: 0 }
+}
+
+/// Protocol 1: `accept(n)` after an invalidating append must fail (and
+/// append nothing) — stale candidate rows never reach the cache.
+#[test]
+fn pending_candidates_never_survive_invalidation() {
+    loom::model(|| {
+        const SID: u64 = 7;
+        const DIM: usize = 16;
+        let shape = ModelShape::new(1, 2, DIM);
+        let lanes = shape.lanes();
+
+        let mut store = SessionStore::new();
+        let now = Instant::now();
+        let k = flat_chunk(0xA0, lanes, 3, DIM);
+        let v = flat_chunk(0xB0, lanes, 3, DIM);
+        store
+            .open(SID, LatsConfig::default(), shape, &k, &v, 3, now)
+            .expect("open session");
+        // The op log shares the store's mutex so its order IS the order
+        // the store observed.
+        let shared = Arc::new(Mutex::new((store, Vec::<&'static str>::new())));
+
+        // Thread A: fused verify block (stash 2 candidate rows), then
+        // accept the first row in a separate critical section.
+        let a = {
+            let shared = Arc::clone(&shared);
+            thread::spawn(move || {
+                let block = ModelStepBlock::new(
+                    2,
+                    rows(0xC0, 2 * lanes, DIM),
+                    rows(0xC1, 2 * lanes, DIM),
+                    rows(0xC2, 2 * lanes, DIM),
+                );
+                let mut scratch = BesfScratch::new();
+                {
+                    let mut g = shared.lock().expect("loom test lock");
+                    let (store, log) = &mut *g;
+                    store
+                        .step_block(SID, &block, &mut scratch, 1, now)
+                        .expect("verify block");
+                    log.push("block");
+                }
+                thread::yield_now();
+                let mut g = shared.lock().expect("loom test lock");
+                let (store, log) = &mut *g;
+                let got = store.accept(SID, 1, now);
+                log.push("accept");
+                got
+            })
+        };
+
+        // Thread B: append-only step — the invalidating writer.
+        let b = {
+            let shared = Arc::clone(&shared);
+            thread::spawn(move || {
+                let step = ModelStep::append_only(rows(0xD0, lanes, DIM), rows(0xD1, lanes, DIM));
+                let mut scratch = BesfScratch::new();
+                let mut g = shared.lock().expect("loom test lock");
+                let (store, log) = &mut *g;
+                store.step(SID, &step, &mut scratch, now).expect("append step");
+                log.push("append");
+            })
+        };
+
+        let accepted = a.join().expect("thread A");
+        b.join().expect("thread B");
+
+        let g = shared.lock().expect("loom test lock");
+        let (store, log) = &*g;
+        let block_at = log.iter().position(|&op| op == "block").expect("block ran");
+        let accept_at = log.iter().position(|&op| op == "accept").expect("accept ran");
+        let invalidated = log
+            .iter()
+            .position(|&op| op == "append")
+            .is_some_and(|i| block_at < i && i < accept_at);
+
+        if invalidated {
+            // The append between stash and accept cleared the pending
+            // rows: accept must fail typed, appending nothing.
+            assert!(
+                matches!(&accepted, Err(ServeError::ShapeMismatch { .. })),
+                "accept after invalidation must fail typed, got {accepted:?}"
+            );
+        } else {
+            assert!(accepted.is_ok(), "undisturbed accept must succeed: {accepted:?}");
+        }
+        // 3 prompt rows + 1 appended row + 1 row iff the accept landed —
+        // a stale accept that appended anyway would show up here.
+        let want = 3 + 1 + usize::from(accepted.is_ok());
+        assert_eq!(store.context_len(SID), Some(want), "op log: {log:?}");
+    });
+}
+
+/// Protocol 2: a store eviction racing client enqueues ends with the
+/// router pin released, the scheduler drained, and every enqueued unit
+/// either dispatched or failed typed — never silently lost.
+#[test]
+fn eviction_releases_pin_and_fails_queued_work_typed() {
+    loom::model(|| {
+        const SID: u64 = 1;
+        const DIM: usize = 8;
+        let shape = ModelShape::single(DIM);
+        let now = Instant::now();
+
+        let mut sched = Scheduler::new(SchedConfig::default(), 1);
+        let mut router = Router::new(1);
+        let (tx, rx) = std::sync::mpsc::channel::<SessionEvent>();
+        sched
+            .admit_open(SID, 0.6, shape, tx.clone(), &mut router)
+            .expect("admit");
+        let (pk, pv) = (rows(0xE0, 1, 4 * DIM).concat(), rows(0xE1, 1, 4 * DIM).concat());
+        sched
+            .enqueue_prefill(SID, ModelPrompt::single(DIM, 4, pk, pv), now)
+            .expect("enqueue prefill");
+
+        let shared = Arc::new(Mutex::new((sched, router, 0usize, 0usize)));
+
+        // Thread A: the store evicted the session (idle TTL) — the
+        // feedback must release the pin and fail queued work.
+        let a = {
+            let shared = Arc::clone(&shared);
+            thread::spawn(move || {
+                let mut g = shared.lock().expect("loom test lock");
+                let (sched, router, _, dropped) = &mut *g;
+                *dropped += sched.on_feedback(
+                    Feedback::Evicted { worker: 0, sessions: vec![(SID, EvictReason::IdleTtl)] },
+                    router,
+                );
+            })
+        };
+
+        // Thread B: the client races one more step in, then drives a
+        // dispatch round, acking each dispatch back as `Done`.
+        let b = {
+            let shared = Arc::clone(&shared);
+            thread::spawn(move || {
+                let step_ok = {
+                    let mut g = shared.lock().expect("loom test lock");
+                    let (sched, _, _, _) = &mut *g;
+                    let step = ModelStep::token(
+                        rows(0xF0, 1, DIM),
+                        rows(0xF1, 1, DIM),
+                        rows(0xF2, 1, DIM),
+                    );
+                    sched.enqueue_step(SID, step, now).is_ok()
+                };
+                thread::yield_now();
+                let mut g = shared.lock().expect("loom test lock");
+                let (sched, router, dispatched, _) = &mut *g;
+                for d in sched.plan_tick(router, now) {
+                    *dispatched += 1;
+                    sched.on_feedback(done(&d), router);
+                }
+                step_ok
+            })
+        };
+
+        a.join().expect("thread A");
+        let step_ok = b.join().expect("thread B");
+
+        // Drain whatever is still runnable (bounded: the model enqueued
+        // at most 2 units), then check the handoff invariants.
+        let mut g = shared.lock().expect("loom test lock");
+        let (sched, router, dispatched, dropped) = &mut *g;
+        for _ in 0..8 {
+            if !sched.busy() {
+                break;
+            }
+            for d in sched.plan_tick(router, now) {
+                *dispatched += 1;
+                sched.on_feedback(done(&d), router);
+            }
+        }
+        assert!(!sched.busy(), "scheduler must drain after eviction");
+        assert_eq!(sched.n_sessions(), 0, "evicted session still tracked");
+        assert_eq!(router.n_sessions(), 0, "router pin leaked past eviction");
+
+        drop(tx);
+        let events: Vec<SessionEvent> = rx.try_iter().collect();
+        let evicted = events
+            .iter()
+            .filter(|e| matches!(e, SessionEvent::Evicted { .. }))
+            .count();
+        let errors = events
+            .iter()
+            .filter(|e| matches!(e, SessionEvent::Error(ServeError::UnknownSession { .. })))
+            .count();
+        assert_eq!(evicted, 1, "exactly one eviction notice: {events:?}");
+        assert_eq!(errors, *dropped, "one typed error per dropped unit: {events:?}");
+        // Conservation: the prefill plus the step (if it was accepted
+        // into the queue) each either dispatched or failed typed.
+        let enqueued = 1 + usize::from(step_ok);
+        assert_eq!(
+            *dispatched + *dropped,
+            enqueued,
+            "unit lost silently (dispatched {dispatched} + dropped {dropped} != {enqueued})"
+        );
+    });
+}

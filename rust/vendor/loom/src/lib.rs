@@ -1,0 +1,45 @@
+//! Std-backed stand-in for the [`loom`](https://docs.rs/loom) model
+//! checker, vendored because the offline build can fetch nothing (the same
+//! precedent as `rust/vendor/anyhow`).
+//!
+//! The surface mirrors the subset of loom's API the repo's
+//! `rust/tests/loom_protocols.rs` uses — `loom::model`, `loom::sync::*`,
+//! `loom::thread::*` — so the tests compile unchanged against the real
+//! crate. Semantics differ in one important way: real loom runs the model
+//! closure once per *distinct interleaving* of the synchronization
+//! operations inside it; this shim runs it exactly once under the OS
+//! scheduler. The protocol tests are therefore written so every assertion
+//! is interleaving-independent (they assert agreement between an op log
+//! and the observed outcome, not a specific schedule), which makes them
+//! meaningful single-execution race tests here and exhaustive
+//! model-checking tests once the real crate is swapped in via
+//! `Cargo.toml`'s `[target.'cfg(loom)'.dependencies]` entry.
+
+/// Run a concurrent model. Real loom explores every interleaving; this
+/// shim executes the closure once.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Sync + Send + 'static,
+{
+    f();
+}
+
+/// Mirrors `loom::sync` with the std equivalents.
+pub mod sync {
+    pub use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
+
+    /// Mirrors `loom::sync::atomic`.
+    pub mod atomic {
+        pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+    }
+
+    /// Mirrors `loom::sync::mpsc`.
+    pub mod mpsc {
+        pub use std::sync::mpsc::{channel, Receiver, Sender};
+    }
+}
+
+/// Mirrors `loom::thread` with the std equivalents.
+pub mod thread {
+    pub use std::thread::{spawn, yield_now, JoinHandle};
+}

@@ -1,0 +1,238 @@
+//! A minimal JSON reader and string escaper — the offline build has no
+//! serde, and the only JSON the lint pass touches is the two committed
+//! bench baselines (machine-written by `benches/hotpath.rs`, rule L6) plus
+//! its own `--json` findings output.
+
+/// Parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(Vec<(String, Value)>),
+}
+
+impl Value {
+    /// Object field lookup (`None` on non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse one JSON document.
+pub fn parse(text: &str) -> Result<Value, String> {
+    let mut p = Parser { cs: text.chars().collect(), i: 0 };
+    let v = p.value()?;
+    p.skip_ws();
+    if p.i != p.cs.len() {
+        return Err(format!("trailing input at offset {}", p.i));
+    }
+    Ok(v)
+}
+
+struct Parser {
+    cs: Vec<char>,
+    i: usize,
+}
+
+impl Parser {
+    fn skip_ws(&mut self) {
+        while self.cs.get(self.i).is_some_and(|c| c.is_ascii_whitespace()) {
+            self.i += 1;
+        }
+    }
+
+    fn expect(&mut self, c: char) -> Result<(), String> {
+        self.skip_ws();
+        if self.cs.get(self.i) == Some(&c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected `{c}` at offset {}", self.i))
+        }
+    }
+
+    fn peek(&mut self) -> Option<char> {
+        self.skip_ws();
+        self.cs.get(self.i).copied()
+    }
+
+    fn value(&mut self) -> Result<Value, String> {
+        match self.peek() {
+            Some('{') => self.object(),
+            Some('[') => self.array(),
+            Some('"') => Ok(Value::Str(self.string()?)),
+            Some('t') => self.lit("true", Value::Bool(true)),
+            Some('f') => self.lit("false", Value::Bool(false)),
+            Some('n') => self.lit("null", Value::Null),
+            Some(c) if c == '-' || c.is_ascii_digit() => self.number(),
+            _ => Err(format!("unexpected input at offset {}", self.i)),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Value) -> Result<Value, String> {
+        for c in word.chars() {
+            if self.cs.get(self.i) != Some(&c) {
+                return Err(format!("bad literal at offset {}", self.i));
+            }
+            self.i += 1;
+        }
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Value, String> {
+        let start = self.i;
+        while self
+            .cs
+            .get(self.i)
+            .is_some_and(|c| c.is_ascii_digit() || matches!(c, '-' | '+' | '.' | 'e' | 'E'))
+        {
+            self.i += 1;
+        }
+        let s: String = self.cs[start..self.i].iter().collect();
+        s.parse::<f64>().map(Value::Num).map_err(|e| format!("bad number `{s}`: {e}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect('"')?;
+        let mut out = String::new();
+        loop {
+            let Some(&c) = self.cs.get(self.i) else {
+                return Err("unterminated string".to_string());
+            };
+            self.i += 1;
+            match c {
+                '"' => return Ok(out),
+                '\\' => {
+                    let Some(&e) = self.cs.get(self.i) else {
+                        return Err("unterminated escape".to_string());
+                    };
+                    self.i += 1;
+                    match e {
+                        'n' => out.push('\n'),
+                        't' => out.push('\t'),
+                        'r' => out.push('\r'),
+                        'u' => {
+                            // The baselines never use \u, but accept it.
+                            let take = 4.min(self.cs.len() - self.i);
+                            let hex: String = self.cs[self.i..self.i + take].iter().collect();
+                            self.i += take;
+                            let code = u32::from_str_radix(&hex, 16)
+                                .map_err(|_| "bad \\u escape".to_string())?;
+                            out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                        }
+                        other => out.push(other),
+                    }
+                }
+                _ => out.push(c),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value, String> {
+        self.expect('[')?;
+        let mut out = Vec::new();
+        if self.peek() == Some(']') {
+            self.i += 1;
+            return Ok(Value::Arr(out));
+        }
+        loop {
+            out.push(self.value()?);
+            match self.peek() {
+                Some(',') => self.i += 1,
+                Some(']') => {
+                    self.i += 1;
+                    return Ok(Value::Arr(out));
+                }
+                _ => return Err(format!("expected `,` or `]` at offset {}", self.i)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Value, String> {
+        self.expect('{')?;
+        let mut out = Vec::new();
+        if self.peek() == Some('}') {
+            self.i += 1;
+            return Ok(Value::Obj(out));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.expect(':')?;
+            let val = self.value()?;
+            out.push((key, val));
+            match self.peek() {
+                Some(',') => self.i += 1,
+                Some('}') => {
+                    self.i += 1;
+                    return Ok(Value::Obj(out));
+                }
+                _ => return Err(format!("expected `,` or `}}` at offset {}", self.i)),
+            }
+        }
+    }
+}
+
+/// Escape a string for embedding in JSON output.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_baseline_shape() {
+        let text = r#"{"bench": "serve",
+                       "rows": [{"name": "a", "mean": 1.5}],
+                       "derived": {"x": 2.0}}"#;
+        let v = parse(text).expect("parse");
+        let rows = match v.get("rows") {
+            Some(Value::Arr(rows)) => rows,
+            other => panic!("rows: {other:?}"),
+        };
+        assert_eq!(rows[0].get("name"), Some(&Value::Str("a".to_string())));
+        assert_eq!(v.get("derived").and_then(|d| d.get("x")), Some(&Value::Num(2.0)));
+    }
+
+    #[test]
+    fn parses_escapes_negatives_and_exponents() {
+        let v = parse(r#"{"s": "a\"b\n", "n": -1.5e3, "t": true, "z": null}"#).expect("parse");
+        assert_eq!(v.get("s"), Some(&Value::Str("a\"b\n".to_string())));
+        assert_eq!(v.get("n"), Some(&Value::Num(-1500.0)));
+        assert_eq!(v.get("t"), Some(&Value::Bool(true)));
+        assert_eq!(v.get("z"), Some(&Value::Null));
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        assert!(parse("{\"a\": }").is_err());
+        assert!(parse("[1, 2,]").is_err());
+        assert!(parse("{} trailing").is_err());
+        assert!(parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn escape_round_trips_specials() {
+        assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+}

@@ -1,0 +1,404 @@
+//! A tiny Rust source "code view" lexer for the lint pass.
+//!
+//! The offline build has no `syn`, so the rules in [`crate::rules`] work on
+//! three views of each file produced here:
+//!
+//! * **code** — the source with comments and string/char-literal bodies
+//!   blanked to spaces, every newline preserved, so any position keeps its
+//!   original 1-indexed line. Pattern matches against this view can never
+//!   fire inside a comment or a string.
+//! * **comments** — comment text per line (the `lint:allow` suppression
+//!   channel).
+//! * **strings** — every string-literal body with its start line (the L6
+//!   bench-name channel).
+//!
+//! The lexer only has to be exact about *boundaries*: line and nested block
+//! comments, plain/byte strings with escapes, raw strings (`r"…"`,
+//! `r#"…"#`, `br"…"`), and char literals vs lifetimes (`'a'` vs `'a`).
+
+use std::collections::HashMap;
+
+/// Lexed views of one source file (see module docs).
+pub struct Lexed {
+    pub code: String,
+    pub comments: HashMap<usize, String>,
+    pub strings: Vec<(usize, String)>,
+}
+
+/// Produce the lexed views of `src`.
+pub fn lex(src: &str) -> Lexed {
+    Lexer {
+        cs: src.chars().collect(),
+        i: 0,
+        line: 1,
+        code: String::with_capacity(src.len()),
+        comments: HashMap::new(),
+        strings: Vec::new(),
+    }
+    .run()
+}
+
+struct Lexer {
+    cs: Vec<char>,
+    i: usize,
+    line: usize,
+    code: String,
+    comments: HashMap<usize, String>,
+    strings: Vec<(usize, String)>,
+}
+
+impl Lexer {
+    fn at(&self, k: usize) -> Option<char> {
+        self.cs.get(self.i + k).copied()
+    }
+
+    /// Consume one char, blanking it in the code view (newlines pass
+    /// through so line numbers survive).
+    fn blank(&mut self) {
+        if self.cs[self.i] == '\n' {
+            self.code.push('\n');
+            self.line += 1;
+        } else {
+            self.code.push(' ');
+        }
+        self.i += 1;
+    }
+
+    /// Consume one char, keeping it in the code view.
+    fn keep(&mut self) {
+        let c = self.cs[self.i];
+        if c == '\n' {
+            self.line += 1;
+        }
+        self.code.push(c);
+        self.i += 1;
+    }
+
+    fn note_comment(&mut self, line: usize, text: &str) {
+        let slot = self.comments.entry(line).or_default();
+        if !slot.is_empty() {
+            slot.push(' ');
+        }
+        slot.push_str(text);
+    }
+
+    fn run(mut self) -> Lexed {
+        let mut prev_ident = false;
+        while self.i < self.cs.len() {
+            let c = self.cs[self.i];
+            if c == '/' && self.at(1) == Some('/') {
+                self.line_comment();
+                prev_ident = false;
+            } else if c == '/' && self.at(1) == Some('*') {
+                self.block_comment();
+                prev_ident = false;
+            } else if c == '"' {
+                self.string_lit();
+                prev_ident = false;
+            } else if !prev_ident && (c == 'r' || c == 'b') && self.try_prefixed_literal() {
+                prev_ident = false;
+            } else if c == '\'' {
+                // `'x'` / `'\n'` are char literals; `'a` is a lifetime tick
+                // whose name then flows through as ordinary code.
+                let escaped = self.at(1) == Some('\\');
+                if escaped || (self.at(2) == Some('\'') && self.at(1) != Some('\'')) {
+                    self.char_lit();
+                } else {
+                    self.keep();
+                }
+                prev_ident = false;
+            } else {
+                self.keep();
+                prev_ident = c.is_alphanumeric() || c == '_';
+            }
+        }
+        Lexed { code: self.code, comments: self.comments, strings: self.strings }
+    }
+
+    /// Handle `r"…"`, `r#"…"#`, `br"…"`, `b"…"`, `b'…'` at the cursor.
+    /// Returns true if a literal was consumed.
+    fn try_prefixed_literal(&mut self) -> bool {
+        let c = self.cs[self.i];
+        let raw_from = if c == 'b' && self.at(1) == Some('r') { 2 } else { 1 };
+        if c == 'r' || raw_from == 2 {
+            let mut hashes = 0usize;
+            while self.at(raw_from + hashes) == Some('#') {
+                hashes += 1;
+            }
+            if self.at(raw_from + hashes) == Some('"') {
+                self.raw_string(raw_from + hashes + 1, hashes);
+                return true;
+            }
+        }
+        if c == 'b' && self.at(1) == Some('"') {
+            self.blank(); // the `b`
+            self.string_lit();
+            return true;
+        }
+        if c == 'b' && self.at(1) == Some('\'') {
+            self.blank(); // the `b`
+            self.char_lit();
+            return true;
+        }
+        false
+    }
+
+    fn line_comment(&mut self) {
+        let line = self.line;
+        let mut text = String::new();
+        let mut j = self.i + 2;
+        while j < self.cs.len() && self.cs[j] != '\n' {
+            text.push(self.cs[j]);
+            j += 1;
+        }
+        while self.i < j {
+            self.blank();
+        }
+        self.note_comment(line, &text);
+    }
+
+    fn block_comment(&mut self) {
+        let mut depth = 0usize;
+        let mut text = String::new();
+        while self.i < self.cs.len() {
+            if self.cs[self.i] == '/' && self.at(1) == Some('*') {
+                depth += 1;
+                self.blank();
+                self.blank();
+            } else if self.cs[self.i] == '*' && self.at(1) == Some('/') {
+                depth -= 1;
+                self.blank();
+                self.blank();
+                if depth == 0 {
+                    break;
+                }
+            } else if self.cs[self.i] == '\n' {
+                let line = self.line;
+                self.note_comment(line, &text);
+                text.clear();
+                self.blank();
+            } else {
+                text.push(self.cs[self.i]);
+                self.blank();
+            }
+        }
+        self.note_comment(self.line, &text);
+    }
+
+    /// Consume a `"…"` string (cursor on the opening quote).
+    fn string_lit(&mut self) {
+        let start = self.line;
+        self.blank(); // opening quote
+        let mut body = String::new();
+        while self.i < self.cs.len() {
+            let c = self.cs[self.i];
+            if c == '\\' && self.i + 1 < self.cs.len() {
+                body.push(c);
+                body.push(self.cs[self.i + 1]);
+                self.blank();
+                self.blank();
+            } else if c == '"' {
+                self.blank();
+                break;
+            } else {
+                body.push(c);
+                self.blank();
+            }
+        }
+        self.strings.push((start, body));
+    }
+
+    /// Consume a raw string; `lead` chars of prefix (through the opening
+    /// quote) precede the body, which ends at `"` followed by `hashes` `#`s.
+    fn raw_string(&mut self, lead: usize, hashes: usize) {
+        let start = self.line;
+        for _ in 0..lead {
+            self.blank();
+        }
+        let mut body = String::new();
+        while self.i < self.cs.len() {
+            if self.cs[self.i] == '"' && (1..=hashes).all(|h| self.at(h) == Some('#')) {
+                for _ in 0..=hashes {
+                    self.blank();
+                }
+                break;
+            }
+            body.push(self.cs[self.i]);
+            self.blank();
+        }
+        self.strings.push((start, body));
+    }
+
+    /// Consume a `'…'` char literal (cursor on the opening quote).
+    fn char_lit(&mut self) {
+        self.blank(); // opening quote
+        while self.i < self.cs.len() {
+            let c = self.cs[self.i];
+            if c == '\\' && self.i + 1 < self.cs.len() {
+                self.blank();
+                self.blank();
+            } else if c == '\'' {
+                self.blank();
+                break;
+            } else {
+                self.blank();
+            }
+        }
+    }
+}
+
+/// Whitespace-stripped code with a per-char line map, so multi-line method
+/// chains (`.partial_cmp(x)\n    .unwrap()`) match as a single pattern.
+pub struct Compact {
+    pub chars: Vec<char>,
+    pub lines: Vec<usize>,
+}
+
+impl Compact {
+    pub fn of(code: &str) -> Compact {
+        let mut chars = Vec::new();
+        let mut lines = Vec::new();
+        let mut line = 1usize;
+        for c in code.chars() {
+            if c == '\n' {
+                line += 1;
+            } else if !c.is_whitespace() {
+                chars.push(c);
+                lines.push(line);
+            }
+        }
+        Compact { chars, lines }
+    }
+
+    /// First occurrence of `pat` at or after char index `start`.
+    pub fn find_from(&self, pat: &str, start: usize) -> Option<usize> {
+        let p: Vec<char> = pat.chars().collect();
+        if p.is_empty() || self.chars.len() < p.len() {
+            return None;
+        }
+        (start..=self.chars.len() - p.len()).find(|&i| self.chars[i..i + p.len()] == p[..])
+    }
+
+    pub fn starts_with_at(&self, pat: &str, i: usize) -> bool {
+        let p: Vec<char> = pat.chars().collect();
+        i + p.len() <= self.chars.len() && self.chars[i..i + p.len()] == p[..]
+    }
+
+    /// 1-indexed source line of char index `i`.
+    pub fn line_at(&self, i: usize) -> usize {
+        self.lines.get(i).copied().unwrap_or(1)
+    }
+
+    /// Index just past the `)` matching the first `(` at or after `open`.
+    pub fn skip_parens(&self, open: usize) -> Option<usize> {
+        let mut depth = 0i32;
+        for (k, &c) in self.chars.iter().enumerate().skip(open) {
+            match c {
+                '(' => depth += 1,
+                ')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some(k + 1);
+                    }
+                }
+                _ => {}
+            }
+        }
+        None
+    }
+}
+
+/// 1-indexed line ranges of `#[cfg(test)]`-gated items (attribute line →
+/// closing brace line), found by brace matching on the compact view.
+pub fn cfg_test_ranges(c: &Compact) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut pos = 0usize;
+    while let Some(i) = c.find_from("#[cfg(test)]", pos) {
+        let Some(open) = (i..c.chars.len()).find(|&k| c.chars[k] == '{') else {
+            break;
+        };
+        let mut depth = 0i32;
+        let mut end = open;
+        for (k, &ch) in c.chars.iter().enumerate().skip(open) {
+            match ch {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = k;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        out.push((c.line_at(i), c.line_at(end)));
+        pos = end.max(i + 1);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_blanked_but_lines_survive() {
+        let src = "let a = 1; // .lock().unwrap()\nlet b = \".unwrap()\";\nlet c = 2;\n";
+        let l = lex(src);
+        assert!(!l.code.contains("unwrap"));
+        assert_eq!(l.code.lines().count(), src.lines().count());
+        assert_eq!(l.comments.get(&1).map(String::as_str), Some(" .lock().unwrap()"));
+        assert_eq!(l.strings, vec![(2, ".unwrap()".to_string())]);
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let src = "a /* x /* y */ z */ b\n";
+        let l = lex(src);
+        assert_eq!(l.code.trim(), "a                   b".trim());
+        assert!(l.code.contains('a') && l.code.contains('b'));
+        assert!(!l.code.contains('y'));
+    }
+
+    #[test]
+    fn raw_strings_and_hashes() {
+        let src = "let s = r#\"quote \" inside\"#; let t = r\"plain\";\n";
+        let l = lex(src);
+        assert_eq!(l.strings[0].1, "quote \" inside");
+        assert_eq!(l.strings[1].1, "plain");
+        assert!(!l.code.contains("inside"));
+    }
+
+    #[test]
+    fn lifetimes_are_code_but_char_literals_are_not() {
+        let src = "fn f<'a>(x: &'a str) -> char { 'x' }\n";
+        let l = lex(src);
+        assert!(l.code.contains("<'a>"));
+        assert!(l.code.contains("&'a str"));
+        assert!(!l.code.contains("'x'"));
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_strings() {
+        let src = "let s = \"a\\\"b\"; let t = 1;\n";
+        let l = lex(src);
+        assert_eq!(l.strings[0].1, "a\\\"b");
+        assert!(l.code.contains("let t = 1;"));
+    }
+
+    #[test]
+    fn compact_maps_multiline_chains_to_their_first_line() {
+        let c = Compact::of("x\n    .lock()\n    .unwrap();\n");
+        let i = c.find_from(".lock().unwrap()", 0).expect("found");
+        assert_eq!(c.line_at(i), 2);
+    }
+
+    #[test]
+    fn cfg_test_ranges_cover_the_module() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn b() {}\n";
+        let l = lex(src);
+        let c = Compact::of(&l.code);
+        assert_eq!(cfg_test_ranges(&c), vec![(2, 5)]);
+    }
+}

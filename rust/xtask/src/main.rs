@@ -1,0 +1,191 @@
+//! `cargo xtask` — repo automation. The one subcommand today is `lint`,
+//! the repo-invariant static-analysis pass (rules L0–L6, see `rules.rs`
+//! and DESIGN.md §13).
+//!
+//! Usage:
+//!
+//! ```text
+//! cargo xtask lint            # human-readable findings, path:line: rule: msg
+//! cargo xtask lint --json     # {"findings": [...], "total": N} for CI
+//! cargo xtask lint --root <p> # lint a tree other than this repo checkout
+//! ```
+//!
+//! Exit codes: 0 clean, 1 findings, 2 usage or I/O error.
+
+mod json;
+mod lexer;
+mod rules;
+
+use rules::{Finding, LintInput};
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// The two committed bench baselines rule L6 checks against the bench.
+const BASELINES: &[&str] = &["BENCH_hotpath.baseline.json", "BENCH_serve.baseline.json"];
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cmd: Option<&str> = None;
+    let mut json_mode = false;
+    let mut root: Option<PathBuf> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "lint" if cmd.is_none() => cmd = Some("lint"),
+            "--json" => json_mode = true,
+            "--root" => match it.next() {
+                Some(p) => root = Some(PathBuf::from(p)),
+                None => return usage("--root needs a path"),
+            },
+            other => return usage(&format!("unknown argument `{other}`")),
+        }
+    }
+    if cmd != Some("lint") {
+        return usage("expected a subcommand: lint");
+    }
+    let root = root.unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("../.."));
+    let input = match gather(&root) {
+        Ok(i) => i,
+        Err(e) => {
+            eprintln!("cargo xtask lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let findings = rules::run(&input);
+    if json_mode {
+        println!("{}", render_json(&findings));
+    } else {
+        for f in &findings {
+            println!("{}:{}: {}: {}", f.path, f.line, f.rule, f.message);
+        }
+        if findings.is_empty() {
+            println!("cargo xtask lint: clean ({} files)", input.sources.len());
+        } else {
+            println!("cargo xtask lint: {} finding(s)", findings.len());
+        }
+    }
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}
+
+fn usage(msg: &str) -> ExitCode {
+    eprintln!("cargo xtask: {msg}");
+    eprintln!("usage: cargo xtask lint [--json] [--root <path>]");
+    ExitCode::from(2)
+}
+
+/// Read the lint inputs from a repo checkout rooted at `root`.
+fn gather(root: &Path) -> Result<LintInput, String> {
+    let src_root = root.join("rust/src");
+    let mut files = Vec::new();
+    walk_rs(&src_root, &mut files).map_err(|e| format!("walking {}: {e}", src_root.display()))?;
+    files.sort();
+    let mut sources = Vec::with_capacity(files.len());
+    for path in files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = fs::read_to_string(&path).map_err(|e| format!("{}: {e}", path.display()))?;
+        sources.push((rel, text));
+    }
+    let bench = fs::read_to_string(root.join("rust/benches/hotpath.rs")).ok();
+    let mut baselines = Vec::new();
+    for name in BASELINES {
+        if let Ok(text) = fs::read_to_string(root.join(name)) {
+            baselines.push((name.to_string(), text));
+        }
+    }
+    Ok(LintInput { sources, bench, baselines })
+}
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn render_json(findings: &[Finding]) -> String {
+    let mut out = String::from("{\"findings\": [");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&format!(
+            "{{\"rule\": \"{}\", \"path\": \"{}\", \"line\": {}, \"message\": \"{}\"}}",
+            json::escape(f.rule),
+            json::escape(&f.path),
+            f.line,
+            json::escape(&f.message)
+        ));
+    }
+    out.push_str(&format!("], \"total\": {}}}", findings.len()));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_root() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("../..")
+    }
+
+    /// The acceptance criterion: the shipped tree is lint-clean with zero
+    /// suppressions.
+    #[test]
+    fn shipped_tree_is_clean() {
+        let input = gather(&repo_root()).expect("gather repo tree");
+        assert!(input.sources.len() > 20, "expected the full rust/src tree");
+        assert!(input.bench.is_some(), "benches/hotpath.rs must exist for L6");
+        assert_eq!(input.baselines.len(), 2, "both bench baselines must exist");
+        let findings = rules::run(&input);
+        let rendered: Vec<String> = findings
+            .iter()
+            .map(|f| format!("{}:{}: {}: {}", f.path, f.line, f.rule, f.message))
+            .collect();
+        assert!(findings.is_empty(), "lint findings on the shipped tree:\n{}", rendered.join("\n"));
+    }
+
+    /// The other acceptance criterion: an injected violation is caught with
+    /// a file:line finding and would flip the exit code to 1.
+    #[test]
+    fn injected_violation_is_caught() {
+        let mut input = gather(&repo_root()).expect("gather repo tree");
+        input.sources.push((
+            "rust/src/injected.rs".to_string(),
+            "fn f(a: f64, b: f64) {\n    let _ = a.partial_cmp(&b).unwrap();\n}\n".to_string(),
+        ));
+        let findings = rules::run(&input);
+        assert_eq!(findings.len(), 1, "exactly the injected finding: {findings:?}");
+        assert_eq!(findings[0].rule, "L2");
+        assert_eq!(findings[0].path, "rust/src/injected.rs");
+        assert_eq!(findings[0].line, 2);
+    }
+
+    #[test]
+    fn json_rendering_escapes_and_counts() {
+        let findings = vec![Finding {
+            rule: "L2",
+            path: "rust/src/a \"b\".rs".to_string(),
+            line: 7,
+            message: "has a \"quote\"".to_string(),
+        }];
+        let out = render_json(&findings);
+        assert!(out.contains("\\\"quote\\\""));
+        assert!(out.ends_with("\"total\": 1}"));
+        assert!(crate::json::parse(&out).expect("valid JSON").get("total").is_some());
+        assert_eq!(render_json(&[]), "{\"findings\": [], \"total\": 0}");
+    }
+}

@@ -1,0 +1,733 @@
+//! The lint rules (L1–L6) and the suppression protocol.
+//!
+//! Each rule freezes one repo invariant the serving stack's safety rests on
+//! (motivations and §-citations live in DESIGN.md §13). Findings carry
+//! `file:line`; a finding is suppressed by a comment
+//!
+//! ```text
+//! // lint:allow(L2): <justification>
+//! ```
+//!
+//! on the flagged line or the line directly above it. The justification is
+//! mandatory — an allow without one is itself a finding (L0) and suppresses
+//! nothing.
+
+use crate::json::{self, Value};
+use crate::lexer::{cfg_test_ranges, lex, Compact, Lexed};
+use std::collections::HashMap;
+
+/// One lint finding, pointing at `path:line`.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub message: String,
+}
+
+/// Everything the lint pass reads, decoupled from the filesystem so the
+/// rule tests can inject fixture trees.
+pub struct LintInput {
+    /// `.rs` files under `rust/src` as (repo-relative path, text).
+    pub sources: Vec<(String, String)>,
+    /// Text of `rust/benches/hotpath.rs`, if present (L6).
+    pub bench: Option<String>,
+    /// Baseline JSONs as (repo-relative path, text) (L6).
+    pub baselines: Vec<(String, String)>,
+}
+
+/// Run every rule over the input; findings sorted by (path, line, rule).
+pub fn run(input: &LintInput) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (rel, text) in &input.sources {
+        let f = SourceView::new(rel, text);
+        f.l0_bad_suppressions(&mut out);
+        f.l1_lock_unwrap(&mut out);
+        f.l2_partial_cmp_unwrap(&mut out);
+        f.l3_scheduler_wall_clock(&mut out);
+        f.l4_bare_thread_spawn(&mut out);
+        f.l5_serve_error_surface(&mut out);
+    }
+    if let Some(bench) = &input.bench {
+        l6_bench_baseline_sync(bench, &input.baselines, &mut out);
+    }
+    out.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    out
+}
+
+/// Files allowed to call bare `thread::spawn` — the modules that *own*
+/// worker pools and their joins. Everything else uses scoped threads.
+const L4_SPAWN_ALLOWED: &[&str] = &["coordinator/mod.rs", "engine/mod.rs", "engine/model.rs"];
+
+/// The coordinator files whose fallible `pub fn`s must speak `ServeError`.
+const L5_SERVE_SURFACE: &[&str] =
+    &["coordinator/api.rs", "coordinator/client.rs", "coordinator/session.rs"];
+
+struct SourceView {
+    rel: String,
+    lexed: Lexed,
+    compact: Compact,
+    tests: Vec<(usize, usize)>,
+    /// line → rules allowed (with justification) on that line.
+    allows: HashMap<usize, Vec<String>>,
+    /// (line, rule) of allows whose justification is missing or empty.
+    bad_allows: Vec<(usize, String)>,
+    /// (line, name) of `fn` declarations, for enclosing-function checks.
+    fns: Vec<(usize, String)>,
+}
+
+impl SourceView {
+    fn new(rel: &str, text: &str) -> SourceView {
+        let lexed = lex(text);
+        let compact = Compact::of(&lexed.code);
+        let tests = cfg_test_ranges(&compact);
+        let (allows, bad_allows) = parse_allows(&lexed.comments);
+        let fns = fn_decls(&lexed.code);
+        SourceView { rel: rel.to_string(), lexed, compact, tests, allows, bad_allows, fns }
+    }
+
+    fn in_tests(&self, line: usize) -> bool {
+        self.tests.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+
+    /// A finding at `line` is suppressed by a justified allow on that line
+    /// or on the line directly above it.
+    fn allowed(&self, line: usize, rule: &str) -> bool {
+        [line, line.saturating_sub(1)]
+            .iter()
+            .any(|l| self.allows.get(l).is_some_and(|rs| rs.iter().any(|r| r == rule)))
+    }
+
+    fn emit(&self, out: &mut Vec<Finding>, rule: &'static str, line: usize, message: String) {
+        if !self.allowed(line, rule) {
+            out.push(Finding { rule, path: self.rel.clone(), line, message });
+        }
+    }
+
+    /// Name of the nearest `fn` declared at or above `line`.
+    fn enclosing_fn(&self, line: usize) -> Option<&str> {
+        let hit = self.fns.iter().rev().find(|&&(l, _)| l <= line);
+        hit.map(|(_, n)| n.as_str())
+    }
+
+    /// L0: a suppression comment without a justification is itself a
+    /// finding (and is not itself suppressible).
+    fn l0_bad_suppressions(&self, out: &mut Vec<Finding>) {
+        for (line, rule) in &self.bad_allows {
+            out.push(Finding {
+                rule: "L0",
+                path: self.rel.clone(),
+                line: *line,
+                message: format!(
+                    "suppression `lint:allow({rule})` lacks a justification — write \
+                     `lint:allow({rule}): <why this site is safe>`"
+                ),
+            });
+        }
+    }
+
+    /// L1: no `.unwrap()`/`.expect()` on lock results outside
+    /// poison-tolerant `lock_*` helpers. A worker that panicked while
+    /// holding a lock must not cascade its panic into every other thread
+    /// that touches the same lock (`coordinator::lock_metrics` is the
+    /// pattern). Test modules are exempt — a poisoned lock in a test should
+    /// fail loudly.
+    fn l1_lock_unwrap(&self, out: &mut Vec<Finding>) {
+        let mut pats = vec![".lock().unwrap()", ".lock().expect("];
+        if self.compact.find_from("RwLock", 0).is_some() {
+            pats.extend([
+                ".read().unwrap()",
+                ".read().expect(",
+                ".write().unwrap()",
+                ".write().expect(",
+            ]);
+        }
+        for pat in pats {
+            let mut pos = 0usize;
+            while let Some(i) = self.compact.find_from(pat, pos) {
+                pos = i + 1;
+                let line = self.compact.line_at(i);
+                if self.in_tests(line) {
+                    continue;
+                }
+                if self.enclosing_fn(line).is_some_and(|n| n.starts_with("lock_")) {
+                    continue;
+                }
+                self.emit(
+                    out,
+                    "L1",
+                    line,
+                    format!(
+                        "`{pat}..` on a lock result can cascade a poisoned-lock panic — \
+                         route it through a poison-tolerant `lock_*` helper"
+                    ),
+                );
+            }
+        }
+    }
+
+    /// L2: `partial_cmp(..).unwrap()` panics on NaN (the PR 3 latency-stats
+    /// incident). Applies everywhere, tests included — frozen forever.
+    fn l2_partial_cmp_unwrap(&self, out: &mut Vec<Finding>) {
+        let mut pos = 0usize;
+        while let Some(i) = self.compact.find_from(".partial_cmp(", pos) {
+            pos = i + 1;
+            let Some(after) = self.compact.skip_parens(i + ".partial_cmp".len()) else {
+                continue;
+            };
+            if self.compact.starts_with_at(".unwrap()", after)
+                || self.compact.starts_with_at(".expect(", after)
+            {
+                self.emit(
+                    out,
+                    "L2",
+                    self.compact.line_at(i),
+                    "`partial_cmp(..).unwrap()` panics on NaN — use `total_cmp` or handle \
+                     the `None`"
+                        .to_string(),
+                );
+            }
+        }
+    }
+
+    /// L3: `coordinator/scheduler.rs` is a pure state machine — time must
+    /// arrive as a parameter (`plan_tick(&mut Router, now)`), never be read
+    /// inside. `.elapsed()` is included because it is a hidden
+    /// `Instant::now()`. Tests are exempt (they *supply* the timestamps).
+    fn l3_scheduler_wall_clock(&self, out: &mut Vec<Finding>) {
+        if !self.rel.ends_with("coordinator/scheduler.rs") {
+            return;
+        }
+        for pat in ["Instant::now(", "SystemTime::now(", "thread::sleep(", ".elapsed()"] {
+            let mut pos = 0usize;
+            while let Some(i) = self.compact.find_from(pat, pos) {
+                pos = i + 1;
+                let line = self.compact.line_at(i);
+                if self.in_tests(line) {
+                    continue;
+                }
+                self.emit(
+                    out,
+                    "L3",
+                    line,
+                    format!(
+                        "wall-clock read `{pat}` inside the pure scheduler state machine — \
+                         time must arrive as a parameter"
+                    ),
+                );
+            }
+        }
+    }
+
+    /// L4: bare `thread::spawn` only in the worker-pool owners; everything
+    /// else uses `thread::scope` so joins are structurally guaranteed.
+    fn l4_bare_thread_spawn(&self, out: &mut Vec<Finding>) {
+        if L4_SPAWN_ALLOWED.iter().any(|a| self.rel.ends_with(a)) {
+            return;
+        }
+        let mut pos = 0usize;
+        while let Some(i) = self.compact.find_from("thread::spawn(", pos) {
+            pos = i + 1;
+            let line = self.compact.line_at(i);
+            if self.in_tests(line) {
+                continue;
+            }
+            self.emit(
+                out,
+                "L4",
+                line,
+                "bare `thread::spawn` outside the worker-pool modules — use \
+                 `thread::scope` or route the work through the coordinator"
+                    .to_string(),
+            );
+        }
+    }
+
+    /// L5: every fallible `pub fn` on the serving surface returns
+    /// `Result<_, ServeError>` — one error model, end to end.
+    fn l5_serve_error_surface(&self, out: &mut Vec<Finding>) {
+        if !L5_SERVE_SURFACE.iter().any(|a| self.rel.ends_with(a)) {
+            return;
+        }
+        let lines: Vec<&str> = self.lexed.code.lines().collect();
+        let mut li = 0usize;
+        while li < lines.len() {
+            let Some(p) = find_pub_fn(lines[li]) else {
+                li += 1;
+                continue;
+            };
+            let decl_line = li + 1;
+            if self.in_tests(decl_line) {
+                li += 1;
+                continue;
+            }
+            let mut sig = lines[li][p..].to_string();
+            while !sig.contains('{') && !sig.contains(';') && li + 1 < lines.len() {
+                li += 1;
+                sig.push(' ');
+                sig.push_str(lines[li].trim());
+            }
+            if let Some(ret) = return_type(&sig) {
+                if ret.contains("Result<") && !ret.contains("ServeError") {
+                    self.emit(
+                        out,
+                        "L5",
+                        decl_line,
+                        format!(
+                            "serving-surface `pub fn` returns `{ret}` — fallible public \
+                             coordinator APIs must return `Result<_, ServeError>`"
+                        ),
+                    );
+                }
+            }
+            li += 1;
+        }
+    }
+}
+
+/// Parse `lint:allow(Lk): justification` comments. Returns the justified
+/// allows per line plus the allows whose justification is missing/empty.
+fn parse_allows(
+    comments: &HashMap<usize, String>,
+) -> (HashMap<usize, Vec<String>>, Vec<(usize, String)>) {
+    let mut allows: HashMap<usize, Vec<String>> = HashMap::new();
+    let mut bad = Vec::new();
+    for (&line, text) in comments {
+        let mut rest = text.as_str();
+        while let Some(p) = rest.find("lint:allow(") {
+            rest = &rest[p + "lint:allow(".len()..];
+            let Some(close) = rest.find(')') else { break };
+            let rule = rest[..close].trim().to_string();
+            rest = &rest[close + 1..];
+            let justified = rest.strip_prefix(':').is_some_and(|j| {
+                let end = j.find("lint:allow(").unwrap_or(j.len());
+                !j[..end].trim().is_empty()
+            });
+            if justified {
+                allows.entry(line).or_default().push(rule);
+            } else {
+                bad.push((line, rule));
+            }
+        }
+    }
+    bad.sort();
+    (allows, bad)
+}
+
+/// (line, name) of every `fn` declaration, by a light scan of the code
+/// view. Only used to attribute a finding to its nearest enclosing
+/// function (the L1 `lock_*` exemption).
+fn fn_decls(code: &str) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for (idx, l) in code.lines().enumerate() {
+        let bytes = l.as_bytes();
+        let mut from = 0usize;
+        while let Some(p) = l[from..].find("fn ") {
+            let at = from + p;
+            let boundary = at == 0 || {
+                let b = bytes[at - 1];
+                !(b.is_ascii_alphanumeric() || b == b'_')
+            };
+            if boundary {
+                let name: String = l[at + 3..]
+                    .trim_start()
+                    .chars()
+                    .take_while(|c| c.is_alphanumeric() || *c == '_')
+                    .collect();
+                if !name.is_empty() {
+                    out.push((idx + 1, name));
+                }
+            }
+            from = at + 3;
+        }
+    }
+    out
+}
+
+/// Byte offset of a `pub fn ` item on this code-view line, if any.
+fn find_pub_fn(line: &str) -> Option<usize> {
+    let p = line.find("pub fn ")?;
+    let boundary = p == 0 || {
+        let b = line.as_bytes()[p - 1];
+        !(b.is_ascii_alphanumeric() || b == b'_')
+    };
+    boundary.then_some(p)
+}
+
+/// Return type of a (possibly line-joined) `fn` signature: the text after
+/// the argument list's `->`, cut at the body / `where` clause. Handles
+/// `Fn(..) -> T` bounds inside the generic parameter list and in the
+/// arguments.
+fn return_type(sig: &str) -> Option<String> {
+    let cs: Vec<char> = sig.chars().collect();
+    let mut i = sig.find("fn ")? + 3;
+    while i < cs.len() && (cs[i].is_alphanumeric() || cs[i] == '_') {
+        i += 1;
+    }
+    if cs.get(i) == Some(&'<') {
+        let mut depth = 0i32;
+        while i < cs.len() {
+            match cs[i] {
+                '<' => depth += 1,
+                // The `>` of an `->` inside an `Fn(..) -> T` bound must not
+                // close a nesting level.
+                '>' if i > 0 && cs[i - 1] != '-' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        i += 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+    }
+    while i < cs.len() && cs[i] != '(' {
+        i += 1;
+    }
+    let mut depth = 0i32;
+    while i < cs.len() {
+        match cs[i] {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    i += 1;
+                    break;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    let rest: String = cs[i..].iter().collect();
+    let stop = rest.find(['{', ';']).unwrap_or(rest.len());
+    let head = &rest[..stop];
+    let arrow = head.find("->")?;
+    let mut ret = head[arrow + 2..].trim().to_string();
+    if let Some(w) = ret.find(" where ") {
+        ret.truncate(w);
+    }
+    Some(ret.trim().to_string())
+}
+
+/// L6: every key in the committed bench baselines must still be a name the
+/// bench can emit — each baseline `rows[].name` / `derived` key must match
+/// at least one string literal in `benches/hotpath.rs`, with `format!`
+/// placeholders treated as wildcards. Catches renamed or removed rows that
+/// `scripts/check_serve_trend.py` silently tolerates ("keys present in
+/// only one file are reported but do not fail").
+fn l6_bench_baseline_sync(bench: &str, baselines: &[(String, String)], out: &mut Vec<Finding>) {
+    let lexed = lex(bench);
+    let patterns: Vec<NamePattern> =
+        lexed.strings.iter().map(|(_, s)| NamePattern::parse(s)).collect();
+    for (path, text) in baselines {
+        let v = match json::parse(text) {
+            Ok(v) => v,
+            Err(e) => {
+                out.push(Finding {
+                    rule: "L6",
+                    path: path.clone(),
+                    line: 1,
+                    message: format!("baseline is not valid JSON: {e}"),
+                });
+                continue;
+            }
+        };
+        let mut names: Vec<String> = Vec::new();
+        if let Some(Value::Arr(rows)) = v.get("rows") {
+            for r in rows {
+                if let Some(Value::Str(n)) = r.get("name") {
+                    names.push(n.clone());
+                }
+            }
+        }
+        if let Some(Value::Obj(derived)) = v.get("derived") {
+            for (k, _) in derived {
+                names.push(k.clone());
+            }
+        }
+        for name in names {
+            if !patterns.iter().any(|p| p.matches(&name)) {
+                out.push(Finding {
+                    rule: "L6",
+                    path: path.clone(),
+                    line: 1,
+                    message: format!(
+                        "baseline key `{name}` matches no string literal in \
+                         benches/hotpath.rs — bench row renamed or removed?"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// A bench-name pattern: the literal segments of a (possibly `format!`)
+/// string, with `{..}` placeholders as gaps. `{{` / `}}` unescape to
+/// literal braces; a string without placeholders matches exactly.
+struct NamePattern {
+    segs: Vec<String>,
+}
+
+impl NamePattern {
+    fn parse(s: &str) -> NamePattern {
+        let cs: Vec<char> = s.chars().collect();
+        let mut segs = vec![String::new()];
+        let mut i = 0usize;
+        while i < cs.len() {
+            match cs[i] {
+                '{' if cs.get(i + 1) == Some(&'{') => {
+                    segs.last_mut().expect("segs is never empty").push('{');
+                    i += 2;
+                }
+                '}' if cs.get(i + 1) == Some(&'}') => {
+                    segs.last_mut().expect("segs is never empty").push('}');
+                    i += 2;
+                }
+                '{' => {
+                    while i < cs.len() && cs[i] != '}' {
+                        i += 1;
+                    }
+                    i += 1;
+                    segs.push(String::new());
+                }
+                c => {
+                    segs.last_mut().expect("segs is never empty").push(c);
+                    i += 1;
+                }
+            }
+        }
+        NamePattern { segs }
+    }
+
+    fn matches(&self, name: &str) -> bool {
+        if self.segs.len() == 1 {
+            return self.segs[0] == name;
+        }
+        let first = &self.segs[0];
+        let last = &self.segs[self.segs.len() - 1];
+        let Some(tail) = name.strip_prefix(first.as_str()) else {
+            return false;
+        };
+        let Some(mut mid) = tail.strip_suffix(last.as_str()) else {
+            return false;
+        };
+        for seg in &self.segs[1..self.segs.len() - 1] {
+            if seg.is_empty() {
+                continue;
+            }
+            match mid.find(seg.as_str()) {
+                Some(p) => mid = &mid[p + seg.len()..],
+                None => return false,
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_one(rel: &str, text: &str) -> Vec<Finding> {
+        run(&LintInput {
+            sources: vec![(rel.to_string(), text.to_string())],
+            bench: None,
+            baselines: vec![],
+        })
+    }
+
+    #[test]
+    fn l1_flags_lock_unwrap_at_the_chain_line() {
+        let src = "fn f(m: &std::sync::Mutex<u32>) -> u32 {\n    *m.lock()\n        .unwrap()\n}\n";
+        let f = lint_one("rust/src/x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!((f[0].rule, f[0].line), ("L1", 2));
+    }
+
+    #[test]
+    fn l1_exempts_poison_tolerant_lock_helpers() {
+        let src =
+            "fn lock_metrics(m: &std::sync::Mutex<u32>) -> u32 {\n    *m.lock().unwrap()\n}\n";
+        assert!(lint_one("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l1_skips_cfg_test_modules() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() {\n        let m = \
+                   std::sync::Mutex::new(1);\n        let _ = m.lock().unwrap();\n    }\n}\n";
+        assert!(lint_one("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l1_read_unwrap_fires_only_in_rwlock_files() {
+        let reader = "fn f(x: &Reader) { x.read().unwrap(); }\n";
+        assert!(lint_one("rust/src/x.rs", reader).is_empty());
+        let rwlock = "use std::sync::RwLock;\nfn f(x: &RwLock<u32>) { x.read().unwrap(); }\n";
+        let f = lint_one("rust/src/x.rs", rwlock);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "L1");
+    }
+
+    #[test]
+    fn suppression_with_justification_passes() {
+        let src = "fn f(a: f64, b: f64) {\n    // lint:allow(L2): fixture exercises the \
+                   legacy path\n    let _ = a.partial_cmp(&b).unwrap();\n}\n";
+        assert!(lint_one("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn suppression_on_the_flagged_line_passes_too() {
+        let src =
+            "fn f(a: f64, b: f64) {\n    let _ = a.partial_cmp(&b).unwrap(); // \
+             lint:allow(L2): legacy fixture\n}\n";
+        assert!(lint_one("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn suppression_without_justification_is_l0_and_does_not_suppress() {
+        let src = "fn f(a: f64, b: f64) {\n    // lint:allow(L2)\n    let _ = \
+                   a.partial_cmp(&b).unwrap();\n}\n";
+        let f = lint_one("rust/src/x.rs", src);
+        assert!(f.iter().any(|x| x.rule == "L0"));
+        assert!(f.iter().any(|x| x.rule == "L2"));
+    }
+
+    #[test]
+    fn suppression_for_a_different_rule_does_not_apply() {
+        let src = "fn f(a: f64, b: f64) {\n    // lint:allow(L1): wrong rule\n    let _ = \
+                   a.partial_cmp(&b).unwrap();\n}\n";
+        let f = lint_one("rust/src/x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "L2");
+    }
+
+    #[test]
+    fn l2_fires_even_inside_tests() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() {\n        let _ = \
+                   1.0f64.partial_cmp(&2.0).unwrap();\n    }\n}\n";
+        let f = lint_one("rust/src/x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!((f[0].rule, f[0].line), ("L2", 4));
+    }
+
+    #[test]
+    fn l2_ignores_the_pattern_in_comments_and_strings() {
+        let src = "// partial_cmp(..).unwrap() is banned\nfn f() { let _ = \
+                   \".partial_cmp(x).unwrap()\"; }\n";
+        assert!(lint_one("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l2_matches_across_interior_arguments_and_lines() {
+        let src = "fn f(xs: &[f64]) {\n    xs.iter()\n        .max_by(|a, b| \
+                   a.partial_cmp(b)\n            .unwrap());\n}\n";
+        let f = lint_one("rust/src/x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn l3_flags_wall_clock_in_the_scheduler_only() {
+        let src = "use std::time::Instant;\nfn tick() { let _ = Instant::now(); }\n";
+        let f = lint_one("rust/src/coordinator/scheduler.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!((f[0].rule, f[0].line), ("L3", 2));
+        assert!(lint_one("rust/src/coordinator/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l3_flags_hidden_elapsed_reads() {
+        let src = "fn f(t: std::time::Instant) -> std::time::Duration { t.elapsed() }\n";
+        let f = lint_one("rust/src/coordinator/scheduler.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "L3");
+    }
+
+    #[test]
+    fn l4_flags_bare_spawn_outside_worker_modules() {
+        let src = "fn f() { std::thread::spawn(|| {}); }\n";
+        let f = lint_one("rust/src/algo/x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "L4");
+        assert!(lint_one("rust/src/coordinator/mod.rs", src).is_empty());
+        assert!(lint_one("rust/src/engine/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l4_permits_scoped_spawns() {
+        let src = "fn f() { std::thread::scope(|s| { s.spawn(|| {}); }); }\n";
+        assert!(lint_one("rust/src/algo/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l5_flags_non_serve_error_results_on_the_surface() {
+        let src = "pub fn open(&self) -> Result<u32, String> {\n    Err(\"x\".into())\n}\n";
+        let f = lint_one("rust/src/coordinator/client.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!((f[0].rule, f[0].line), ("L5", 1));
+        // The identical signature off the serving surface is fine.
+        assert!(lint_one("rust/src/figures/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l5_accepts_serve_error_and_infallible_signatures() {
+        let src = "pub fn a(&self) -> Result<u32, ServeError> { Ok(1) }\n\
+                   pub fn b(&self) -> usize { 1 }\n\
+                   pub fn c<F: Fn(u64) -> bool>(&self, f: F) -> Result<(), ServeError> {\n\
+                       Ok(())\n\
+                   }\n";
+        assert!(lint_one("rust/src/coordinator/session.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l5_handles_multi_line_signatures() {
+        let src = "pub fn open(\n    &self,\n    n: usize,\n) -> Result<u32, String> {\n    \
+                   Err(\"x\".into())\n}\n";
+        let f = lint_one("rust/src/coordinator/api.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!((f[0].rule, f[0].line), ("L5", 1));
+    }
+
+    #[test]
+    fn l6_accepts_format_wildcards_and_flags_renamed_keys() {
+        let bench = "fn main() {\n    emit(\"row_a\");\n    \
+                     emit(&format!(\"serve_decode_b{batch}\"));\n}\n";
+        let ok = r#"{"rows": [{"name": "serve_decode_b4"}], "derived": {"row_a": 1.0}}"#;
+        let bad = r#"{"rows": [{"name": "serve_decode_q4"}], "derived": {}}"#;
+        let lint = |baseline: &str| {
+            run(&LintInput {
+                sources: vec![],
+                bench: Some(bench.to_string()),
+                baselines: vec![("BENCH_serve.baseline.json".to_string(), baseline.to_string())],
+            })
+        };
+        assert!(lint(ok).is_empty());
+        let f = lint(bad);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "L6");
+        assert!(f[0].message.contains("serve_decode_q4"));
+    }
+
+    #[test]
+    fn l6_flags_unparseable_baselines() {
+        let f = run(&LintInput {
+            sources: vec![],
+            bench: Some("fn main() {}\n".to_string()),
+            baselines: vec![("B.json".to_string(), "{not json".to_string())],
+        });
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "L6");
+    }
+
+    #[test]
+    fn name_patterns_unescape_double_braces() {
+        let p = NamePattern::parse("a{{b}}c");
+        assert!(p.matches("a{b}c"));
+        let q = NamePattern::parse("blocked_speedup_b{blk}_ctx{ctx}");
+        assert!(q.matches("blocked_speedup_b4_ctx512"));
+        assert!(!q.matches("blocked_speedup_b4"));
+    }
+}
