@@ -610,6 +610,110 @@ fn serve_bench() {
         );
         rows.push(("serve_scored_prefill".to_string(), s));
     }
+    // Spill tier (DESIGN.md §14), three angles. (1) Raw wire-format cost:
+    // serialize / deserialize of a ctx-512 ModelContext (the demote and
+    // promote payloads; derived MB/s lands in the derived block). (2) Cold-
+    // step promote latency: a capacity-1 store holding two sessions pays a
+    // full demote+promote cycle on every step of the cold one, across ctx
+    // {128, 512, 2048}. (3) End-to-end hot:cold decode mix and the
+    // idle-overhead parity row (spill configured but never demoting).
+    println!();
+    let spill_root =
+        std::env::temp_dir().join(format!("bitstopper-bench-spill-{}", std::process::id()));
+    let payload_mb;
+    {
+        use bitstopper::coordinator::{ModelStep, SessionStore, SpillStore};
+        use std::time::Instant;
+
+        let wt = ModelDecodeTrace::synth(layers, heads, 512, 1, dim, 0x5EA4);
+        let (wk, wv) = wt.prompt();
+        let wctx = ModelContext::open(wt.shape(), LatsConfig::default(), &wk, &wv, 512)
+            .expect("wire-format context");
+        let bytes = wctx.to_bytes();
+        payload_mb = bytes.len() as f64 / (1024.0 * 1024.0);
+        time_it(&mut rows, "serve_spill_serialize_ctx512", 30, || {
+            wctx.to_bytes().len() as u64
+        });
+        time_it(&mut rows, "serve_spill_deserialize_ctx512", 30, || {
+            ModelContext::from_bytes(&bytes).expect("roundtrip").context_len() as u64
+        });
+
+        for &sctx in &[128usize, 512, 2048] {
+            let dir = spill_root.join(format!("promote-ctx{sctx}"));
+            SpillStore::validate_dir(&dir).expect("bench spill dir");
+            let spill = SpillStore::open(&dir, 0, 1 << 40).expect("bench spill store");
+            let mut store = SessionStore::with_policy(1, None).with_spill(spill);
+            let now = Instant::now();
+            let mt = ModelDecodeTrace::synth(layers, heads, sctx, 1, dim, 0x5EA5);
+            let (pk, pv) = mt.prompt();
+            for sid in [1u64, 2] {
+                store
+                    .open(sid, LatsConfig::default(), mt.shape(), &pk, &pv, sctx, now)
+                    .expect("bench session open");
+            }
+            // Decode-only steps keep the context length fixed; session 2 is
+            // hot after its open, so the first (warmup) step targets 1.
+            let (qs, _, _) = mt.step_rows(0);
+            let step = ModelStep::decode_only(qs);
+            let mut scratch = BesfScratch::new();
+            let mut cold = 1u64;
+            time_it(&mut rows, &format!("serve_spill_promote_ctx{sctx}"), 16, || {
+                let out = store
+                    .step_threads(cold, &step, &mut scratch, 1, now)
+                    .expect("cold step");
+                cold = 3 - cold;
+                out.kept.iter().sum::<usize>() as u64
+            });
+        }
+
+        // Hot:cold mix — 8 decode streams over 4 workers with one hot slot
+        // each, so consecutive steps on a worker alternate its two pinned
+        // sessions and every step pays a promote. The idle row serves the
+        // stock b4 workload with spill configured but capacity never under
+        // pressure: its cost must track serve_decode_b4 (parity ratio in
+        // the derived block; the trend gate bounds the row itself).
+        for (name, batch, capacity) in
+            [("serve_spill_mix_b8", 8usize, 1usize), ("serve_spill_idle_b4", 4, 64)]
+        {
+            let mut per_token_ms = Vec::with_capacity(reps);
+            for rep in 0..reps {
+                let dir = spill_root.join(format!("{name}-{rep}"));
+                let client = EngineBuilder::new()
+                    .workers(4)
+                    .prefill_chunk(512)
+                    .max_inflight_per_worker(2)
+                    .session_capacity(capacity)
+                    .idle_ttl(None)
+                    .spill_dir(&dir)
+                    .build()
+                    .expect("engine construction");
+                let traces: Vec<ModelDecodeTrace> = (0..batch)
+                    .map(|s| {
+                        ModelDecodeTrace::synth(
+                            layers,
+                            heads,
+                            ctx,
+                            steps,
+                            dim,
+                            0x5EA6 + (rep * 100 + s) as u64,
+                        )
+                    })
+                    .collect();
+                let report = drive_decode(&client, 0.6, &traces, Duration::from_secs(60))
+                    .expect("spill mix drive");
+                per_token_ms.push(report.ms_per_token());
+                client.shutdown();
+            }
+            let s = Summary::of(&per_token_ms);
+            println!(
+                "bench {name:<32} {:>9.3} ms/token (p50 {:>9.3}, n={})",
+                s.mean, s.p50, s.n
+            );
+            rows.push((name.to_string(), s));
+        }
+        let _ = std::fs::remove_dir_all(&spill_root);
+    }
+
     let mut derived = vec![
         (
             "batched_speedup_b4_vs_b1".to_string(),
@@ -626,6 +730,27 @@ fn serve_bench() {
             mean_of(&rows, "serve_spec_q1") / mean_of(&rows, &format!("serve_spec_q{q}")),
         ));
     }
+    // Spill-tier derived numbers — deliberately no "speedup" substring:
+    // MB/s is machine-dependent and the parity/growth ratios hover near a
+    // constant, so none of them may arm the trend gate's ratio floor. The
+    // serve_spill_* rows themselves carry the regression gate.
+    derived.push((
+        "spill_serialize_mb_per_s".to_string(),
+        payload_mb / (mean_of(&rows, "serve_spill_serialize_ctx512") / 1e3),
+    ));
+    derived.push((
+        "spill_deserialize_mb_per_s".to_string(),
+        payload_mb / (mean_of(&rows, "serve_spill_deserialize_ctx512") / 1e3),
+    ));
+    derived.push((
+        "spill_promote_growth_128_to_2048".to_string(),
+        mean_of(&rows, "serve_spill_promote_ctx2048")
+            / mean_of(&rows, "serve_spill_promote_ctx128"),
+    ));
+    derived.push((
+        "spill_idle_parity_b4".to_string(),
+        mean_of(&rows, "serve_decode_b4") / mean_of(&rows, "serve_spill_idle_b4"),
+    ));
     for (name, v) in &derived {
         println!("derived {name:<32} {v:>9.3}");
     }

@@ -18,7 +18,7 @@
 use crate::config::LatsConfig;
 
 /// LATS thresholding for one query tensor configuration.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Lats {
     /// α ∈ [0,1] — pruning aggressiveness (higher keeps fewer tokens... see
     /// note: higher α *widens* the kept band; the paper sweeps 0.2–0.8 and

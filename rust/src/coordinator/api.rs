@@ -205,6 +205,12 @@ pub enum SessionEvent {
     /// The worker's store reclaimed this session (idle TTL or LRU at the
     /// cap); all queued work was dropped and the id is dead.
     Evicted { reason: EvictReason },
+    /// The worker's store **demoted** this session to its disk spill tier
+    /// (DESIGN.md §14) — the cold counterpart of [`SessionEvent::Evicted`]:
+    /// the id stays live, queued work survives, and the next unit to arrive
+    /// promotes the session back transparently (a latency event, not data
+    /// loss). Informational; clients need not react.
+    Demoted { reason: EvictReason },
     /// An operation on this session failed; the session may still be live
     /// (e.g. a malformed step) or dead (e.g. a failed open).
     Error(ServeError),

@@ -23,14 +23,21 @@
 use super::api::{BlockResponse, ServeError, SessionEvent, StepResponse};
 use super::scheduler::{ModelPrompt, ModelStep, ModelStepBlock, SchedConfig};
 use super::session::{SessionStore, DEFAULT_IDLE_TTL, DEFAULT_MAX_SESSIONS};
+use super::spill::SpillStore;
 use super::{
     check_shapes, AttnExecutor, AttnRequest, AttnResponse, BatchConfig, BesfExecutor, EngineCore,
     Metrics, Submission,
 };
 use crate::engine::ModelShape;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Default per-worker spill segment cap when [`EngineBuilder::spill_dir`] is
+/// set without an explicit [`EngineBuilder::spill_max_bytes`]: 1 GiB.
+pub const DEFAULT_SPILL_MAX_BYTES: u64 = 1 << 30;
 
 /// Fluent, validated construction of a serving engine. Defaults: 2 workers,
 /// default batching/scheduler knobs, a [`BesfExecutor`] per worker with a
@@ -44,6 +51,8 @@ pub struct EngineBuilder {
     idle_ttl: Option<Duration>,
     lru_at_cap: bool,
     lane_threads: usize,
+    spill_dir: Option<PathBuf>,
+    spill_max_bytes: u64,
 }
 
 impl Default for EngineBuilder {
@@ -56,6 +65,8 @@ impl Default for EngineBuilder {
             idle_ttl: Some(DEFAULT_IDLE_TTL),
             lru_at_cap: true,
             lane_threads: 1,
+            spill_dir: None,
+            spill_max_bytes: DEFAULT_SPILL_MAX_BYTES,
         }
     }
 }
@@ -141,6 +152,30 @@ impl EngineBuilder {
         self
     }
 
+    /// Enable the disk tier (DESIGN.md §14): each worker store gets a
+    /// [`SpillStore`] segment file under `dir`, and capacity/TTL pressure
+    /// **demotes** cold sessions to it (serialize → spill → drop hot)
+    /// instead of evicting them. Any unit arriving for a demoted session
+    /// promotes it back transparently — with a spill dir configured, the
+    /// engine serves more sessions than [`EngineBuilder::session_capacity`]
+    /// without a client-visible [`ServeError::UnknownSession`]. The
+    /// directory is created and validated at [`EngineBuilder::build`] time
+    /// ([`ServeError::InvalidConfig`] on a bad path).
+    pub fn spill_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.spill_dir = Some(dir.into());
+        self
+    }
+
+    /// Hard cap on each worker's spill segment file (bytes). A demotion
+    /// that would overflow it — even after compaction — fails over to a
+    /// real eviction for that one session. Default
+    /// [`DEFAULT_SPILL_MAX_BYTES`]; only meaningful with
+    /// [`EngineBuilder::spill_dir`].
+    pub fn spill_max_bytes(mut self, n: u64) -> Self {
+        self.spill_max_bytes = n;
+        self
+    }
+
     fn validate(&self) -> Result<(), ServeError> {
         let fail = |what: &str| Err(ServeError::InvalidConfig { what: what.into() });
         if self.workers == 0 {
@@ -167,6 +202,12 @@ impl EngineBuilder {
         if self.lane_threads == 0 {
             return fail("lane_threads must be >= 1");
         }
+        if self.spill_dir.is_some() && self.spill_max_bytes == 0 {
+            return fail("spill_max_bytes must be >= 1");
+        }
+        if let Some(dir) = &self.spill_dir {
+            SpillStore::validate_dir(dir)?;
+        }
         Ok(())
     }
 
@@ -175,9 +216,24 @@ impl EngineBuilder {
     pub fn build(self) -> Result<Client, ServeError> {
         let (max_sessions, idle_ttl, lru) = (self.max_sessions, self.idle_ttl, self.lru_at_cap);
         let lanes = self.lane_threads;
+        let spill_dir = self.spill_dir.clone();
+        let spill_max = self.spill_max_bytes;
+        // Each worker thread invokes the factory once; a shared counter
+        // hands each its own segment file (`worker-{n}.spill`).
+        let next_spill = Arc::new(AtomicUsize::new(0));
         self.build_with(move || {
             let store = SessionStore::with_policy(max_sessions, idle_ttl);
-            let store = if lru { store } else { store.reject_at_capacity() };
+            let mut store = if lru { store } else { store.reject_at_capacity() };
+            if let Some(dir) = &spill_dir {
+                // The directory was validated at build time; a racing
+                // open failure here degrades this worker to the hot tier
+                // only (evictions instead of demotions) rather than
+                // killing the engine.
+                let widx = next_spill.fetch_add(1, Ordering::Relaxed);
+                if let Ok(s) = SpillStore::open(dir, widx, spill_max) {
+                    store = store.with_spill(s);
+                }
+            }
             BesfExecutor::with_sessions(store).lane_threads(lanes)
         })
     }
@@ -313,8 +369,11 @@ fn session_fatal(e: &ServeError) -> bool {
 /// ([`SessionHandle::recv_event`] and the blocking `wait_*` helpers).
 /// Eviction by the worker store arrives as [`SessionEvent::Evicted`] — after
 /// observing it, further calls fail fast with
-/// [`ServeError::UnknownSession`]. Dropping the handle closes the session,
-/// freeing its KV-cache and router pin.
+/// [`ServeError::UnknownSession`]. With a spill tier configured
+/// ([`EngineBuilder::spill_dir`]) pressure instead surfaces as a benign
+/// [`SessionEvent::Demoted`]: the handle stays live and the next step
+/// transparently promotes the session back. Dropping the handle closes the
+/// session, freeing its KV-cache (hot or spilled) and router pin.
 pub struct SessionHandle {
     client: Client,
     session: u64,
@@ -587,6 +646,11 @@ impl SessionHandle {
                 self.state = HandleState::Failed;
                 self.events_tx = None;
             }
+            // A demotion is benign: the session's state moved to the spill
+            // tier and the next unit promotes it back transparently
+            // (DESIGN.md §14). The handle stays Live; the event is surfaced
+            // to pollers but never resolves a `wait_*`.
+            SessionEvent::Demoted { .. } => {}
             _ => {}
         }
     }
@@ -778,6 +842,26 @@ mod tests {
                 "{what} must be rejected at build time"
             );
         }
+        // Spill knobs: a zero segment cap and a dir path that is an
+        // existing *file* both fail typed at build time.
+        assert!(matches!(
+            EngineBuilder::new()
+                .spill_dir(std::env::temp_dir())
+                .spill_max_bytes(0)
+                .build(),
+            Err(ServeError::InvalidConfig { .. })
+        ));
+        let not_a_dir = std::env::temp_dir()
+            .join(format!("bitstopper-client-spill-{}", std::process::id()));
+        std::fs::write(&not_a_dir, b"x").expect("fixture file");
+        assert!(
+            matches!(
+                EngineBuilder::new().spill_dir(&not_a_dir).build(),
+                Err(ServeError::InvalidConfig { .. })
+            ),
+            "spill_dir pointing at a file must be rejected"
+        );
+        let _ = std::fs::remove_file(&not_a_dir);
     }
 
     #[test]

@@ -46,10 +46,11 @@ pub mod pjrt;
 pub mod router;
 pub mod scheduler;
 pub mod session;
+pub mod spill;
 
 pub use api::{BlockResponse, EvictReason, ServeError, SessionEvent, StepResponse};
 pub use batch::{BatchConfig, Batcher};
-pub use client::{AttnTicket, Client, EngineBuilder, SessionHandle};
+pub use client::{AttnTicket, Client, EngineBuilder, SessionHandle, DEFAULT_SPILL_MAX_BYTES};
 pub use drive::{
     drive_decode, drive_scored_prefill, drive_spec_decode, DriveReport, ScoredPrefillReport,
     SpecDriveReport,
@@ -61,6 +62,7 @@ pub use scheduler::{
     SchedStats, Scheduler,
 };
 pub use session::SessionStore;
+pub use spill::{SpillReport, SpillStore};
 
 use crate::algo::BesfScratch;
 use crate::attention::attention_f32;
@@ -139,6 +141,15 @@ pub trait AttnExecutor: 'static {
     ) -> Result<(ModelOut, Vec<(u64, EvictReason)>), ServeError> {
         let _ = job;
         Err(ServeError::ExecutorUnsupported { op: "model sessions" })
+    }
+
+    /// Drain the demote/promote activity the last model job triggered in
+    /// this executor's session store (DESIGN.md §14). The worker loop calls
+    /// this after every model job and forwards the report to metrics and
+    /// scheduler feedback. Executors without a spill tier return the empty
+    /// default.
+    fn take_spill(&mut self) -> SpillReport {
+        SpillReport::default()
     }
 }
 
@@ -351,6 +362,10 @@ impl AttnExecutor for BesfExecutor {
             }
         }
     }
+
+    fn take_spill(&mut self) -> SpillReport {
+        self.sessions.take_spill_report()
+    }
 }
 
 /// Aggregated serving metrics.
@@ -378,8 +393,21 @@ pub struct Metrics {
     pub accepts: u64,
     /// Prefill chunks dispatched (including opening chunks).
     pub prefill_chunks: u64,
-    /// Sessions evicted by worker stores (idle-TTL / LRU).
+    /// Sessions evicted by worker stores (idle-TTL / LRU). With a spill
+    /// tier configured ([`EngineBuilder::spill_dir`]) reclamation demotes
+    /// instead, so this stays near zero — it counts only true data loss
+    /// (spill-disabled stores, or spill write/restore failures).
     pub evictions: u64,
+    /// Sessions demoted to the disk spill tier (serialize → spill → drop
+    /// hot; the id stays live).
+    pub demotions: u64,
+    /// Sessions promoted back from the spill tier on touch.
+    pub promotions: u64,
+    /// Live spilled bytes summed across worker stores (gauge; each worker
+    /// publishes its own store's gauge as a delta after every model job).
+    pub spill_bytes: u64,
+    /// Mean promote (restore) latency in microseconds.
+    pub promote_us: f64,
     /// Dispatch opportunities deferred by worker backpressure.
     pub deferred: u64,
     /// Dispatch opportunities deferred by an exhausted per-tick token
@@ -404,6 +432,10 @@ struct MetricsInner {
     finished: Option<Instant>,
     sched: SchedStats,
     session_pins: u64,
+    demotions: u64,
+    promotions: u64,
+    promote_us_total: u64,
+    spill_bytes: u64,
 }
 
 /// Poison-tolerant metrics lock. A worker that panicked while holding the
@@ -513,6 +545,9 @@ impl EngineCore {
             let fb = fb_tx.clone();
             workers.push(std::thread::spawn(move || {
                 let mut exec = factory();
+                // This worker's last-published spill gauge; the shared
+                // metrics hold the sum across workers, updated by delta.
+                let mut last_spill_bytes = 0u64;
                 while let Ok(job) = wrx.recv() {
                     match job {
                         Job::Batch(batch) => {
@@ -670,6 +705,38 @@ impl EngineCore {
                                         }
                                     };
                                     let _ = fb.send(msg);
+                                }
+                            }
+                            // Drain the demote/promote activity this job
+                            // triggered in the store (a no-op default for
+                            // spill-less executors): metrics first, then
+                            // scheduler feedback — spill-failure losses ride
+                            // the same Evicted path as true evictions so
+                            // pins release and handles learn.
+                            let spill = exec.take_spill();
+                            if !spill.is_empty() || spill.spill_bytes != last_spill_bytes {
+                                {
+                                    let mut mi = lock_metrics(&m);
+                                    mi.demotions += spill.demoted.len() as u64;
+                                    mi.promotions += spill.promoted.len() as u64;
+                                    mi.promote_us_total += spill.promote_us;
+                                    mi.spill_bytes = (mi.spill_bytes
+                                        + spill.spill_bytes)
+                                        .saturating_sub(last_spill_bytes);
+                                }
+                                last_spill_bytes = spill.spill_bytes;
+                                if !spill.evicted.is_empty() {
+                                    let _ = fb.send(Feedback::Evicted {
+                                        worker: widx,
+                                        sessions: spill.evicted,
+                                    });
+                                }
+                                if !spill.demoted.is_empty() || !spill.promoted.is_empty() {
+                                    let _ = fb.send(Feedback::Spill {
+                                        worker: widx,
+                                        demoted: spill.demoted,
+                                        promoted: spill.promoted,
+                                    });
                                 }
                             }
                         }
@@ -883,6 +950,14 @@ impl EngineCore {
             budget_deferred: mi.sched.budget_deferred,
             session_pins: mi.session_pins,
             decode_keep_rate: mi.sched.keep_rate(),
+            demotions: mi.demotions,
+            promotions: mi.promotions,
+            spill_bytes: mi.spill_bytes,
+            promote_us: if mi.promotions == 0 {
+                0.0
+            } else {
+                mi.promote_us_total as f64 / mi.promotions as f64
+            },
         }
     }
 

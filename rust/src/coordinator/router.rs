@@ -71,6 +71,17 @@ impl Router {
         self.sessions.remove(&session);
     }
 
+    /// Re-assert a session's pin on a specific worker. The spill tier uses
+    /// this on promote feedback (DESIGN.md §14): a promote proves the
+    /// session's restored state lives in `worker`'s store, so the pin is
+    /// made to match even if it drifted. Pins only count while the session
+    /// is tracked — this never creates load, just corrects the mapping.
+    pub fn repin_session(&mut self, session: u64, worker: usize) {
+        if worker < self.outstanding.len() {
+            self.sessions.insert(session, worker);
+        }
+    }
+
     /// Number of live session pins.
     pub fn n_sessions(&self) -> usize {
         self.sessions.len()
@@ -132,6 +143,23 @@ mod tests {
         assert_eq!(r.n_sessions(), 0);
         // The loaded worker is avoided by fresh binds.
         assert_ne!(r.bind_session(8), w);
+    }
+
+    #[test]
+    fn repin_corrects_the_mapping_without_double_counting() {
+        let mut r = Router::new(2);
+        let w = r.bind_session(7);
+        assert_eq!(r.n_sessions(), 1);
+        let other = 1 - w;
+        r.repin_session(7, other);
+        assert_eq!(r.n_sessions(), 1, "repin replaces, never duplicates");
+        // Repinning an unknown session registers it (the promote is the
+        // source of truth for where the state lives).
+        r.repin_session(9, w);
+        assert_eq!(r.n_sessions(), 2);
+        // Out-of-range workers are ignored, not panicked on.
+        r.repin_session(7, 99);
+        assert_eq!(r.n_sessions(), 2);
     }
 
     #[test]

@@ -367,6 +367,14 @@ pub enum Feedback {
     /// Sessions the worker's store evicted (idle-TTL / LRU, DESIGN.md §9):
     /// their pins must be released and each live handle told why.
     Evicted { worker: usize, sessions: Vec<(u64, EvictReason)> },
+    /// Spill-tier activity in the worker's store (DESIGN.md §14): `demoted`
+    /// sessions went cold (serialized to disk — still live, queued work
+    /// survives, each handle gets an informational
+    /// [`SessionEvent::Demoted`]); `promoted` sessions came back hot and
+    /// have their router pin re-asserted on `worker` (a promote proves the
+    /// session's state lives there). Spill-failure data loss does NOT ride
+    /// here — it arrives as a plain [`Feedback::Evicted`].
+    Spill { worker: usize, demoted: Vec<(u64, EvictReason)>, promoted: Vec<u64> },
     /// A one-shot shape batch of `n` requests finished. Carries no session
     /// state — it exists so the router's outstanding-work estimate decays
     /// for one-shot traffic exactly as it does for model jobs (otherwise
@@ -420,6 +428,10 @@ pub struct SchedStats {
     pub closes: u64,
     /// Sessions evicted by worker stores (idle-TTL / LRU).
     pub evictions: u64,
+    /// Sessions demoted to worker spill tiers (still live, DESIGN.md §14).
+    pub demotions: u64,
+    /// Sessions promoted back from worker spill tiers.
+    pub promotions: u64,
     /// Dispatch opportunities deferred by worker backpressure.
     pub deferred: u64,
     /// Dispatch opportunities deferred by an exhausted per-tick token
@@ -759,6 +771,28 @@ impl Scheduler {
                     dropped += self.drop_session(sid);
                 }
                 dropped
+            }
+            Feedback::Spill { worker, demoted, promoted } => {
+                // Demotion is not death: the session keeps its Sess entry,
+                // its queue, and its pin — the handle just gets told its
+                // next touch may pay a promote. Sessions the scheduler no
+                // longer tracks (a close raced the demotion) are skipped,
+                // mirroring the Evicted arm.
+                for (sid, reason) in demoted {
+                    let Some(s) = self.sessions.get(&sid) else { continue };
+                    let _ = s.events.send(SessionEvent::Demoted { reason });
+                    self.stats.demotions += 1;
+                }
+                for sid in promoted {
+                    if self.sessions.contains_key(&sid) {
+                        // A promote proves the session's state lives on this
+                        // worker; re-assert the pin so routing stays correct
+                        // even across scheduler restarts or pin churn.
+                        router.repin_session(sid, worker);
+                        self.stats.promotions += 1;
+                    }
+                }
+                0
             }
             // Router-only bookkeeping; handled by the coordinator thread.
             Feedback::BatchDone { .. } => 0,
@@ -1277,6 +1311,60 @@ mod tests {
         assert!(rx.recv().is_err(), "terminal event: the stream then disconnects");
         assert_eq!(router.n_sessions(), 0);
         assert_eq!(sched.stats.evictions, 1);
+    }
+
+    #[test]
+    fn spill_feedback_keeps_sessions_live_and_repins_promotes() {
+        // Demotion must NOT tear the session down: queue, pin, and Sess all
+        // survive; the handle just gets an informational Demoted event. A
+        // later promote re-asserts the pin on the promoting worker.
+        let mut router = Router::new(2);
+        let mut sched = Scheduler::new(SchedConfig::default(), 2);
+        let shape = ModelShape::single(2);
+        let rx = open(&mut sched, &mut router, 1, prompt((1, 1), 2, 4));
+        let batch = sched.plan_tick(&mut router, Instant::now());
+        ack_all(&mut sched, &mut router, &batch);
+        sched.enqueue_step(1, step(&shape), Instant::now()).unwrap();
+        let dropped = sched.on_feedback(
+            Feedback::Spill {
+                worker: 0,
+                demoted: vec![(1, EvictReason::IdleTtl)],
+                promoted: vec![],
+            },
+            &mut router,
+        );
+        assert_eq!(dropped, 0, "nothing is dropped on a demotion");
+        assert!(
+            matches!(rx.try_recv(), Ok(SessionEvent::Demoted { reason: EvictReason::IdleTtl })),
+            "the handle is told about the demotion"
+        );
+        assert_eq!(sched.n_sessions(), 1, "the session is still tracked");
+        assert_eq!(router.n_sessions(), 1, "the pin survives");
+        assert_eq!(sched.stats.demotions, 1);
+        assert_eq!(sched.stats.evictions, 0, "a demotion is not an eviction");
+        // The queued step still dispatches (its execution will promote).
+        let batch = sched.plan_tick(&mut router, Instant::now());
+        assert!(matches!(batch[0].job, ModelJob::Step { .. }));
+        let worker = batch[0].worker;
+        ack_all(&mut sched, &mut router, &batch);
+        sched.on_feedback(
+            Feedback::Spill { worker, demoted: vec![], promoted: vec![1] },
+            &mut router,
+        );
+        assert_eq!(sched.stats.promotions, 1);
+        assert_eq!(router.n_sessions(), 1, "repin keeps exactly one pin");
+        // Spill feedback for an untracked session is a silent no-op.
+        let dropped = sched.on_feedback(
+            Feedback::Spill {
+                worker: 0,
+                demoted: vec![(42, EvictReason::Capacity)],
+                promoted: vec![42],
+            },
+            &mut router,
+        );
+        assert_eq!(dropped, 0);
+        assert_eq!(sched.stats.demotions, 1);
+        assert_eq!(sched.stats.promotions, 1);
     }
 
     #[test]

@@ -36,9 +36,24 @@
 //! ([`EvictReason`]); the worker loop reports them upstream so the scheduler
 //! releases their router pins and delivers [`super::SessionEvent::Evicted`]
 //! to each live handle (tested here and end-to-end in `tests/client_e2e.rs`).
+//!
+//! **Demotion (the disk tier, DESIGN.md §14).** A store built
+//! [`SessionStore::with_spill`] turns both reclamation paths into
+//! *demotions*: the victim's [`ModelContext`] is serialized
+//! ([`ModelContext::to_bytes`]) into the worker's [`SpillStore`] segment and
+//! only the hot entry is dropped — the id stays live. Any unit that later
+//! touches a demoted session *promotes* it back inside the accessor
+//! (deserialize → re-insert, demoting the current LRU if the hot tier is
+//! full), so clients never see [`ServeError::UnknownSession`] for a spilled
+//! session. Pending verify candidates are deliberately **not** serialized:
+//! a demote/promote cycle invalidates them, exactly like any other mutating
+//! op. Demotions/promotions (and the rare spill-failure fallback to a true
+//! eviction) are reported through [`SessionStore::take_spill_report`], not
+//! the eviction lists — with a spill tier configured those lists stay empty.
 
 use super::api::{EvictReason, ServeError};
 use super::scheduler::{ModelStep, ModelStepBlock};
+use super::spill::{SpillReport, SpillStore};
 use crate::algo::BesfScratch;
 use crate::config::LatsConfig;
 use crate::engine::{ModelBlockOutput, ModelContext, ModelShape, ModelStepOutput};
@@ -96,6 +111,11 @@ pub struct SessionStore {
     /// the TTL sweep; `false` rejects the open with
     /// [`ServeError::StoreAtCapacity`] instead.
     lru_at_cap: bool,
+    /// Disk tier: when present, TTL/LRU reclamation demotes instead of
+    /// destroying, and accessors promote spilled sessions back on touch.
+    spill: Option<SpillStore>,
+    /// Demote/promote activity since the last [`SessionStore::take_spill_report`].
+    report: SpillReport,
 }
 
 impl Default for SessionStore {
@@ -117,7 +137,22 @@ impl SessionStore {
     /// Store with an explicit cap and TTL (`None` = no idle eviction).
     pub fn with_policy(max_sessions: usize, idle_ttl: Option<Duration>) -> Self {
         assert!(max_sessions >= 1);
-        Self { sessions: HashMap::new(), max_sessions, idle_ttl, lru_at_cap: true }
+        Self {
+            sessions: HashMap::new(),
+            max_sessions,
+            idle_ttl,
+            lru_at_cap: true,
+            spill: None,
+            report: SpillReport::default(),
+        }
+    }
+
+    /// Attach a disk spill tier: reclamation (TTL sweep, LRU at the cap)
+    /// demotes sessions into `spill` instead of destroying them, and any
+    /// accessor touching a spilled session promotes it back transparently.
+    pub fn with_spill(mut self, spill: SpillStore) -> Self {
+        self.spill = Some(spill);
+        self
     }
 
     /// Disable LRU eviction at the cap: an open that still finds the store
@@ -128,22 +163,47 @@ impl SessionStore {
         self
     }
 
-    /// Number of live sessions.
+    /// Number of hot (in-memory) sessions.
     pub fn n_open(&self) -> usize {
         self.sessions.len()
     }
 
-    pub fn contains(&self, session: u64) -> bool {
-        self.sessions.contains_key(&session)
+    /// Number of sessions demoted to the spill tier.
+    pub fn n_spilled(&self) -> usize {
+        self.spill.as_ref().map_or(0, |s| s.len())
     }
 
-    /// Context length (keys per lane) of a live session.
+    /// Whether the session is live — hot **or** spilled (a spilled session
+    /// is still addressable; its next touch promotes it).
+    pub fn contains(&self, session: u64) -> bool {
+        self.sessions.contains_key(&session)
+            || self.spill.as_ref().is_some_and(|s| s.contains(session))
+    }
+
+    /// Context length (keys per lane) of a *hot* session (`None` for
+    /// spilled ones — reading it would force a promote, which only the
+    /// `&mut self` accessors do).
     pub fn context_len(&self, session: u64) -> Option<usize> {
         self.sessions.get(&session).map(|e| e.ctx.context_len())
     }
 
-    /// Evict every session idle longer than the TTL at `now`; returns the
-    /// evicted ids (the caller must release their router pins).
+    /// Drain the demote/promote activity accumulated since the last call
+    /// (the worker loop forwards it to metrics and scheduler feedback). The
+    /// `spill_bytes` field is refreshed to the live gauge at drain time.
+    pub fn take_spill_report(&mut self) -> SpillReport {
+        let mut r = std::mem::take(&mut self.report);
+        if let Some(s) = &self.spill {
+            r.spill_bytes = s.live_bytes();
+        }
+        r
+    }
+
+    /// Reclaim every session idle longer than the TTL at `now`; returns the
+    /// **destroyed** ids (the caller must release their router pins). With a
+    /// spill tier the expired sessions are demoted instead — they stay live
+    /// and the returned list stays empty (barring spill-write failures,
+    /// which are reported via [`SessionStore::take_spill_report`], not
+    /// here).
     pub fn sweep_idle(&mut self, now: Instant) -> Vec<u64> {
         let Some(ttl) = self.idle_ttl else { return Vec::new() };
         let expired: Vec<u64> = self
@@ -152,10 +212,100 @@ impl SessionStore {
             .filter(|(_, e)| now.duration_since(e.last_used) > ttl)
             .map(|(&sid, _)| sid)
             .collect();
+        if self.spill.is_some() {
+            for sid in &expired {
+                self.demote(*sid, EvictReason::IdleTtl);
+            }
+            return Vec::new();
+        }
         for sid in &expired {
             self.sessions.remove(sid);
         }
         expired
+    }
+
+    /// Serialize a hot session into the spill tier and drop the hot entry.
+    /// On a spill-write failure the session falls back to a **true
+    /// eviction** (recorded in the report's `evicted` list) — the store
+    /// must shrink either way, because reclamation runs exactly when it is
+    /// out of room. Pending verify candidates die with the hot entry in
+    /// both cases.
+    fn demote(&mut self, sid: u64, reason: EvictReason) {
+        let (Some(spill), Some(e)) = (self.spill.as_mut(), self.sessions.get(&sid)) else {
+            return;
+        };
+        let bytes = e.ctx.to_bytes();
+        self.sessions.remove(&sid);
+        match spill.put(sid, &bytes) {
+            Ok(()) => self.report.demoted.push((sid, reason)),
+            Err(_) => self.report.evicted.push((sid, reason)),
+        }
+    }
+
+    /// Demote the least-recently-used hot session (promote's make-room path
+    /// and open's at-cap path when a spill tier is present).
+    fn demote_lru(&mut self, reason: EvictReason) {
+        if let Some(&lru) = self
+            .sessions
+            .iter()
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(sid, _)| sid)
+        {
+            self.demote(lru, reason);
+        }
+    }
+
+    /// Restore a spilled session into the hot tier (demoting the current
+    /// LRU if the store is full). O(lanes · seq) — the serialized record
+    /// carries the packed planes, so no re-decomposition happens here. A
+    /// corrupt or truncated record fails typed ([`ServeError::Backend`]),
+    /// drops the record, and reports the loss as a capacity eviction so the
+    /// scheduler releases the pin — the store itself stays healthy.
+    fn promote(&mut self, session: u64, now: Instant) -> Result<(), ServeError> {
+        let Some(spill) = self.spill.as_mut() else {
+            return Err(ServeError::UnknownSession { session });
+        };
+        let t0 = Instant::now();
+        let payload = match spill.take(session) {
+            Ok(Some(p)) => p,
+            Ok(None) => return Err(ServeError::UnknownSession { session }),
+            Err(e) => {
+                self.report.evicted.push((session, EvictReason::Capacity));
+                return Err(e);
+            }
+        };
+        let ctx = match ModelContext::from_bytes(&payload) {
+            Ok(ctx) => ctx,
+            Err(e) => {
+                // The record is already out of the index; the session is
+                // lost but the store is not poisoned.
+                self.report.evicted.push((session, EvictReason::Capacity));
+                return Err(ServeError::Backend {
+                    what: format!("restoring spilled session {session}: {e}"),
+                });
+            }
+        };
+        if self.sessions.len() >= self.max_sessions {
+            self.demote_lru(EvictReason::Capacity);
+        }
+        self.sessions.insert(session, Entry::new(ctx, now));
+        self.report.promoted.push(session);
+        self.report.promote_us += t0.elapsed().as_micros() as u64;
+        Ok(())
+    }
+
+    /// The one accessor gate: hot entry, or promote-on-miss from the spill
+    /// tier. Touches `last_used` on success.
+    fn live_entry(&mut self, session: u64, now: Instant) -> Result<&mut Entry, ServeError> {
+        if !self.sessions.contains_key(&session) {
+            self.promote(session, now)?;
+        }
+        let e = self
+            .sessions
+            .get_mut(&session)
+            .ok_or(ServeError::UnknownSession { session })?;
+        e.last_used = now;
+        Ok(e)
     }
 
     /// Open a session over the first prefill chunk: quantize per-lane K/V
@@ -174,7 +324,8 @@ impl SessionStore {
         rows: usize,
         now: Instant,
     ) -> Result<Vec<(u64, EvictReason)>, ServeError> {
-        if self.sessions.contains_key(&session) {
+        if self.contains(session) {
+            // A spilled id is just as live as a hot one.
             return Err(ServeError::DuplicateSession { session });
         }
         // Validate the chunk BEFORE evicting anyone for it.
@@ -189,16 +340,19 @@ impl SessionStore {
                 .collect();
         }
         if self.sessions.len() >= self.max_sessions {
-            if !self.lru_at_cap {
+            if self.spill.is_some() {
+                // Demotion is not data loss, so it overrides even the
+                // reject-at-capacity policy: the LRU goes cold, nobody dies.
+                self.demote_lru(EvictReason::Capacity);
+            } else if !self.lru_at_cap {
                 return Err(ServeError::StoreAtCapacity { capacity: self.max_sessions });
-            }
-            // Still full: reclaim the least-recently-used session.
-            if let Some(&lru) = self
+            } else if let Some(&lru) = self
                 .sessions
                 .iter()
                 .min_by_key(|(_, e)| e.last_used)
                 .map(|(sid, _)| sid)
             {
+                // Still full: reclaim the least-recently-used session.
                 self.sessions.remove(&lru);
                 evicted.push((lru, EvictReason::Capacity));
             }
@@ -217,11 +371,7 @@ impl SessionStore {
         rows: usize,
         now: Instant,
     ) -> Result<usize, ServeError> {
-        let e = self
-            .sessions
-            .get_mut(&session)
-            .ok_or(ServeError::UnknownSession { session })?;
-        e.last_used = now;
+        let e = self.live_entry(session, now)?;
         e.clear_pending();
         e.ctx
             .append_rows(k, v, rows)
@@ -243,11 +393,7 @@ impl SessionStore {
         lane_threads: usize,
         now: Instant,
     ) -> Result<(usize, Vec<f32>), ServeError> {
-        let e = self
-            .sessions
-            .get_mut(&session)
-            .ok_or(ServeError::UnknownSession { session })?;
-        e.last_used = now;
+        let e = self.live_entry(session, now)?;
         e.clear_pending();
         e.ctx
             .append_rows_scored(k, v, rows, scratch, lane_threads.max(1))
@@ -268,11 +414,7 @@ impl SessionStore {
         lane_threads: usize,
         now: Instant,
     ) -> Result<Vec<f32>, ServeError> {
-        let e = self
-            .sessions
-            .get_mut(&session)
-            .ok_or(ServeError::UnknownSession { session })?;
-        e.last_used = now;
+        let e = self.live_entry(session, now)?;
         e.ctx
             .score_rows(k, rows, scratch, lane_threads.max(1))
             .map_err(|e| ServeError::ShapeMismatch { what: e.to_string() })
@@ -305,11 +447,7 @@ impl SessionStore {
         lane_threads: usize,
         now: Instant,
     ) -> Result<ModelStepOutput, ServeError> {
-        let e = self
-            .sessions
-            .get_mut(&session)
-            .ok_or(ServeError::UnknownSession { session })?;
-        e.last_used = now;
+        let e = self.live_entry(session, now)?;
         let shape_err = |e: anyhow::Error| ServeError::ShapeMismatch { what: e.to_string() };
         if step.has_append() {
             e.clear_pending();
@@ -340,11 +478,7 @@ impl SessionStore {
         lane_threads: usize,
         now: Instant,
     ) -> Result<ModelBlockOutput, ServeError> {
-        let e = self
-            .sessions
-            .get_mut(&session)
-            .ok_or(ServeError::UnknownSession { session })?;
-        e.last_used = now;
+        let e = self.live_entry(session, now)?;
         // Defense in depth behind the submit-time check: `accept` indexes the
         // pending rows by `q_rows * lanes`, so a ragged block must never be
         // stashed.
@@ -370,11 +504,7 @@ impl SessionStore {
         n: usize,
         now: Instant,
     ) -> Result<usize, ServeError> {
-        let e = self
-            .sessions
-            .get_mut(&session)
-            .ok_or(ServeError::UnknownSession { session })?;
-        e.last_used = now;
+        let e = self.live_entry(session, now)?;
         if n > e.pending_rows {
             return Err(ServeError::ShapeMismatch {
                 what: format!(
@@ -396,12 +526,16 @@ impl SessionStore {
         Ok(e.ctx.context_len())
     }
 
-    /// Close a session, freeing its quantized K/V and packed planes.
+    /// Close a session, freeing its quantized K/V and packed planes — hot
+    /// or spilled (a spilled close drops the disk record without promoting).
     pub fn close(&mut self, session: u64) -> Result<(), ServeError> {
-        self.sessions
-            .remove(&session)
-            .map(|_| ())
-            .ok_or(ServeError::UnknownSession { session })
+        if self.sessions.remove(&session).is_some() {
+            return Ok(());
+        }
+        if self.spill.as_mut().is_some_and(|s| s.remove(session)) {
+            return Ok(());
+        }
+        Err(ServeError::UnknownSession { session })
     }
 }
 
@@ -784,6 +918,192 @@ mod tests {
         assert_eq!(store.n_open(), 1);
         // Below the cap nothing else is touched by opens.
         assert!(open_trace(&mut store, 3, &mt, t0 + Duration::from_secs(12)).is_empty());
+    }
+
+    /// Unique per-test spill dir (std only — no tempfile dep).
+    fn spill_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("bitstopper-session-{}-{name}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn spilled_store(dir: &std::path::Path, cap: usize, ttl: Option<Duration>) -> SessionStore {
+        SessionStore::with_policy(cap, ttl).with_spill(SpillStore::open(dir, 0, 0).unwrap())
+    }
+
+    #[test]
+    fn demote_promote_step_is_bit_identical_to_never_demoted() {
+        // THE tiered-store contract: a TTL demotion followed by a transparent
+        // promote-on-touch must be invisible in the outputs — every
+        // StepResponse field identical to a store that never spilled.
+        let mt = trace();
+        let t0 = Instant::now();
+        let dir = spill_dir("bitident");
+        let mut cold = spilled_store(&dir, 4, Some(Duration::from_secs(5)));
+        let mut hot = SessionStore::new();
+        open_trace(&mut cold, 1, &mt, t0);
+        open_trace(&mut hot, 1, &mt, t0);
+        let mut scratch = BesfScratch::new();
+        let (qs, ks, vs) = mt.step_rows(0);
+        let step0 = ModelStep::token(ks, vs, qs);
+        let a0 = cold.step(1, &step0, &mut scratch, t0).unwrap();
+        let b0 = hot.step(1, &step0, &mut scratch, t0).unwrap();
+        assert_eq!(a0.outs, b0.outs);
+
+        // TTL sweep demotes (returned eviction list stays empty).
+        assert!(cold.sweep_idle(t0 + Duration::from_secs(6)).is_empty());
+        assert_eq!(cold.n_open(), 0);
+        assert_eq!(cold.n_spilled(), 1);
+        assert!(cold.contains(1), "a demoted session is still live");
+        assert_eq!(cold.context_len(1), None, "…but cold");
+        let rep = cold.take_spill_report();
+        assert_eq!(rep.demoted, vec![(1, EvictReason::IdleTtl)]);
+        assert!(rep.evicted.is_empty() && rep.promoted.is_empty());
+        assert!(rep.spill_bytes > 0);
+
+        // The next step promotes transparently, bit-identical field for field.
+        let (qs, ks, vs) = mt.step_rows(1);
+        let step1 = ModelStep::token(ks, vs, qs);
+        let t1 = t0 + Duration::from_secs(7);
+        let a = cold.step(1, &step1, &mut scratch, t1).unwrap();
+        let b = hot.step(1, &step1, &mut scratch, t1).unwrap();
+        assert_eq!(a.outs, b.outs);
+        assert_eq!(a.kept, b.kept);
+        assert_eq!(a.context_len, b.context_len);
+        assert_eq!(cold.n_spilled(), 0);
+        assert_eq!(cold.n_open(), 1);
+        let rep = cold.take_spill_report();
+        assert_eq!(rep.promoted, vec![1]);
+        assert_eq!(rep.spill_bytes, 0, "gauge drops once the record is taken");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn at_cap_open_demotes_lru_even_under_reject_policy() {
+        let mt = trace();
+        let t0 = Instant::now();
+        let dir = spill_dir("capdemote");
+        // Demotion is not data loss, so it overrides reject_at_capacity.
+        let mut store = spilled_store(&dir, 1, None).reject_at_capacity();
+        open_trace(&mut store, 1, &mt, t0);
+        let evicted = open_trace(&mut store, 2, &mt, t0 + Duration::from_secs(1));
+        assert!(evicted.is_empty(), "demotion reports through the spill report");
+        assert_eq!(store.n_open(), 1);
+        assert_eq!(store.n_spilled(), 1);
+        let rep = store.take_spill_report();
+        assert_eq!(rep.demoted, vec![(1, EvictReason::Capacity)]);
+        // Touching the demoted session swaps it back in, demoting session 2.
+        let mut scratch = BesfScratch::new();
+        let (qs, _, _) = mt.step_rows(0);
+        store
+            .step(1, &ModelStep::decode_only(qs), &mut scratch, t0 + Duration::from_secs(2))
+            .unwrap();
+        assert!(store.contains(1) && store.contains(2));
+        let rep = store.take_spill_report();
+        assert_eq!(rep.promoted, vec![1]);
+        assert_eq!(rep.demoted, vec![(2, EvictReason::Capacity)]);
+        // Spilled ids are still duplicates.
+        let (pk, pv) = mt.prompt();
+        assert_eq!(
+            store
+                .open(2, LatsConfig::default(), mt.shape(), &pk, &pv, mt.prompt_len, t0)
+                .unwrap_err(),
+            ServeError::DuplicateSession { session: 2 }
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn demote_promote_invalidates_pending_candidates() {
+        // A pending verify block must NOT be resurrected across a
+        // demote/promote cycle — candidates are only valid against the exact
+        // hot context they were scored on.
+        let mt = trace();
+        let t0 = Instant::now();
+        let dir = spill_dir("pending");
+        let mut store = spilled_store(&dir, 4, Some(Duration::from_secs(5)));
+        open_trace(&mut store, 1, &mt, t0);
+        let mut scratch = BesfScratch::new();
+        let (qs, ks, vs) = mt.step_rows(0);
+        let block = ModelStepBlock::new(1, qs, ks, vs);
+        store.step_block(1, &block, &mut scratch, 1, t0).unwrap();
+        assert!(store.sweep_idle(t0 + Duration::from_secs(6)).is_empty());
+        // accept() promotes the session back — with zero pending rows.
+        let t1 = t0 + Duration::from_secs(7);
+        assert!(matches!(
+            store.accept(1, 1, t1),
+            Err(ServeError::ShapeMismatch { .. })
+        ));
+        assert_eq!(store.accept(1, 0, t1).unwrap(), 12, "context itself survived");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_spill_record_fails_typed_without_poisoning_the_store() {
+        let mt = trace();
+        let t0 = Instant::now();
+        let dir = spill_dir("corrupt");
+        let mut store = spilled_store(&dir, 1, None);
+        open_trace(&mut store, 1, &mt, t0);
+        open_trace(&mut store, 2, &mt, t0 + Duration::from_secs(1)); // demotes 1
+        assert_eq!(store.n_spilled(), 1);
+        // Flip one byte inside session 1's serialized payload (the record
+        // frame is the first 16 bytes of the segment; +40 lands well inside
+        // the ModelContext header, so the FNV checksum must catch it).
+        {
+            use std::io::{Seek, SeekFrom, Write};
+            let mut f = std::fs::OpenOptions::new()
+                .read(true)
+                .write(true)
+                .open(dir.join("worker-0.spill"))
+                .unwrap();
+            f.seek(SeekFrom::Start(40)).unwrap();
+            f.write_all(&[0xFF]).unwrap();
+        }
+        let mut scratch = BesfScratch::new();
+        let (qs, _, _) = mt.step_rows(0);
+        let t1 = t0 + Duration::from_secs(2);
+        let err = store
+            .step(1, &ModelStep::decode_only(qs.clone()), &mut scratch, t1)
+            .unwrap_err();
+        assert!(matches!(err, ServeError::Backend { .. }), "{err:?}");
+        // The lost session is reported as a true eviction (pins must release).
+        let rep = store.take_spill_report();
+        assert_eq!(rep.evicted, vec![(1, EvictReason::Capacity)]);
+        // Not poisoned: the id is now simply unknown, the sibling session
+        // still serves, and new demote/promote cycles work.
+        assert_eq!(
+            store
+                .step(1, &ModelStep::decode_only(qs.clone()), &mut scratch, t1)
+                .unwrap_err(),
+            ServeError::UnknownSession { session: 1 }
+        );
+        store.step(2, &ModelStep::decode_only(qs.clone()), &mut scratch, t1).unwrap();
+        open_trace(&mut store, 3, &mt, t1); // demotes 2
+        store.step(2, &ModelStep::decode_only(qs), &mut scratch, t1).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn close_drops_spilled_records_without_promoting() {
+        let mt = trace();
+        let t0 = Instant::now();
+        let dir = spill_dir("close");
+        let mut store = spilled_store(&dir, 1, None);
+        open_trace(&mut store, 1, &mt, t0);
+        open_trace(&mut store, 2, &mt, t0 + Duration::from_secs(1)); // demotes 1
+        assert_eq!(store.n_spilled(), 1);
+        store.close(1).unwrap();
+        assert_eq!(store.n_spilled(), 0);
+        assert!(!store.contains(1));
+        assert_eq!(
+            store.close(1).unwrap_err(),
+            ServeError::UnknownSession { session: 1 }
+        );
+        let rep = store.take_spill_report();
+        assert!(rep.promoted.is_empty(), "close never promotes");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

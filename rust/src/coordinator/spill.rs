@@ -1,0 +1,405 @@
+//! **SpillStore** — the disk tier of the tiered session store (DESIGN.md
+//! §14).
+//!
+//! Bit-plane KV state is compact and byte-packed — exactly the format you
+//! want to serialize — so a session evicted by TTL/LRU need not be destroyed:
+//! [`super::session::SessionStore`] *demotes* it (serialize the
+//! [`crate::engine::ModelContext`] → append here → drop the hot entry) and
+//! *promotes* it back on the next unit that touches it. This module owns the
+//! on-disk half: one append-only segment file per store (= per worker), an
+//! in-memory offset index, and compaction when dead bytes exceed the live
+//! set.
+//!
+//! ## Segment layout
+//!
+//! ```text
+//! record := magic u32 | session u64 | len u32 | payload (len bytes)
+//! ```
+//!
+//! Payloads are whole serialized `ModelContext` records, which carry their
+//! own FNV-1a checksum ([`crate::engine::ModelContext::to_bytes`]); the
+//! framing header here guards the *index* (a stale or torn offset shows up
+//! as a magic/session/len mismatch before the payload checksum even runs).
+//!
+//! ## Failure posture
+//!
+//! Every failure is a typed [`ServeError`] — a corrupt or truncated record
+//! drops *that record* from the index (its session becomes a true eviction)
+//! and never poisons the store: subsequent puts/takes on other sessions keep
+//! working. This file is deliberately the only place under `coordinator/`
+//! that touches `std::fs` (xtask lint rule L7 pins the boundary).
+
+use super::api::{EvictReason, ServeError};
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// Framing magic of one spill record ("SPIL" little-endian).
+const RECORD_MAGIC: u32 = 0x4C49_5053;
+/// Bytes of the record framing header: magic + session + payload length.
+const RECORD_HEADER: u64 = 16;
+/// Segments smaller than this are never compacted — rewriting a few KB to
+/// reclaim half of it costs more than the bytes are worth.
+const COMPACT_FLOOR_BYTES: u64 = 64 * 1024;
+
+/// What the store's spill tier did since the last drain — the worker loop
+/// pulls one of these per executed job batch
+/// ([`super::AttnExecutor::take_spill`]) and feeds metrics + scheduler
+/// feedback from it.
+#[derive(Debug, Clone, Default)]
+pub struct SpillReport {
+    /// Sessions serialized to disk and dropped from the hot tier, with the
+    /// eviction reason that triggered the demotion.
+    pub demoted: Vec<(u64, EvictReason)>,
+    /// Sessions restored from disk back into the hot tier.
+    pub promoted: Vec<u64>,
+    /// Sessions actually *lost* because their spill write or restore failed
+    /// — the data-loss fallback, reported upstream exactly like a plain
+    /// eviction so pins release and handles learn.
+    pub evicted: Vec<(u64, EvictReason)>,
+    /// Total wall time spent inside promote restores since the last drain,
+    /// microseconds.
+    pub promote_us: u64,
+    /// Live spilled bytes at drain time (gauge, not a delta).
+    pub spill_bytes: u64,
+}
+
+impl SpillReport {
+    pub fn is_empty(&self) -> bool {
+        self.demoted.is_empty() && self.promoted.is_empty() && self.evicted.is_empty()
+    }
+}
+
+/// Append-only spill segment + in-memory offset index. One per
+/// [`super::session::SessionStore`], so one per worker — no cross-worker
+/// sharing, no locking.
+pub struct SpillStore {
+    path: PathBuf,
+    file: File,
+    /// session → (record offset, payload length).
+    index: HashMap<u64, (u64, u32)>,
+    /// Logical end of the segment (everything past it is garbage from a
+    /// rolled-back write).
+    tail: u64,
+    /// Bytes of live records (header + payload); `tail - live_bytes` is the
+    /// dead-byte count that drives compaction.
+    live_bytes: u64,
+    /// Hard cap on the segment size; 0 = unbounded.
+    max_bytes: u64,
+}
+
+impl SpillStore {
+    /// Validate a spill directory for [`super::EngineBuilder`]: create it if
+    /// missing, and fail typed if the path exists but is not a directory (or
+    /// cannot be created).
+    pub fn validate_dir(dir: &Path) -> Result<(), ServeError> {
+        std::fs::create_dir_all(dir).map_err(|e| ServeError::InvalidConfig {
+            what: format!("spill_dir {}: {e}", dir.display()),
+        })?;
+        let meta = std::fs::metadata(dir).map_err(|e| ServeError::InvalidConfig {
+            what: format!("spill_dir {}: {e}", dir.display()),
+        })?;
+        if !meta.is_dir() {
+            return Err(ServeError::InvalidConfig {
+                what: format!("spill_dir {} is not a directory", dir.display()),
+            });
+        }
+        Ok(())
+    }
+
+    /// Open (and truncate) the segment file `dir/worker-{worker}.spill`.
+    /// The spill tier caches *live* engine state — it does not persist
+    /// across engine restarts — so a fresh segment per run is correct.
+    pub fn open(dir: &Path, worker: usize, max_bytes: u64) -> Result<Self, ServeError> {
+        let path = dir.join(format!("worker-{worker}.spill"));
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)
+            .map_err(|e| ServeError::Backend {
+                what: format!("opening spill segment {}: {e}", path.display()),
+            })?;
+        Ok(Self { path, file, index: HashMap::new(), tail: 0, live_bytes: 0, max_bytes })
+    }
+
+    /// Number of spilled sessions.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    pub fn contains(&self, session: u64) -> bool {
+        self.index.contains_key(&session)
+    }
+
+    /// Bytes of live spilled records (the `Metrics::spill_bytes` gauge).
+    pub fn live_bytes(&self) -> u64 {
+        self.live_bytes
+    }
+
+    /// Current segment footprint on disk (live + dead bytes).
+    pub fn file_bytes(&self) -> u64 {
+        self.tail
+    }
+
+    /// Append a session's serialized context. An existing record for the
+    /// same session becomes dead bytes. Over the `max_bytes` cap the store
+    /// compacts first and fails typed if the record still does not fit —
+    /// the caller falls back to a true eviction.
+    pub fn put(&mut self, session: u64, payload: &[u8]) -> Result<(), ServeError> {
+        let rec = RECORD_HEADER + payload.len() as u64;
+        if self.max_bytes > 0 && self.tail + rec > self.max_bytes {
+            self.compact()?;
+            if self.tail + rec > self.max_bytes {
+                return Err(ServeError::Backend {
+                    what: format!(
+                        "spill segment over its {}-byte cap ({} live + {} record)",
+                        self.max_bytes, self.live_bytes, rec
+                    ),
+                });
+            }
+        }
+        let offset = self.tail;
+        let write = (|| -> std::io::Result<()> {
+            self.file.seek(SeekFrom::Start(offset))?;
+            self.file.write_all(&RECORD_MAGIC.to_le_bytes())?;
+            self.file.write_all(&session.to_le_bytes())?;
+            self.file.write_all(&(payload.len() as u32).to_le_bytes())?;
+            self.file.write_all(payload)
+        })();
+        if let Err(e) = write {
+            // Roll the segment back to its pre-write tail; a torn record
+            // past `tail` is unreachable garbage.
+            let _ = self.file.set_len(self.tail);
+            return Err(ServeError::Backend {
+                what: format!("writing spill record for session {session}: {e}"),
+            });
+        }
+        if let Some((_, old_len)) = self.index.insert(session, (offset, payload.len() as u32)) {
+            self.live_bytes -= RECORD_HEADER + old_len as u64;
+        }
+        self.tail += rec;
+        self.live_bytes += rec;
+        Ok(())
+    }
+
+    /// Move a session's payload out of the spill tier (the promote path).
+    /// `Ok(None)` = not spilled. A framing mismatch or short read drops the
+    /// record (the session is lost, a true eviction) and returns a typed
+    /// error — the store itself stays healthy.
+    pub fn take(&mut self, session: u64) -> Result<Option<Vec<u8>>, ServeError> {
+        let Some(&(offset, len)) = self.index.get(&session) else { return Ok(None) };
+        let read = (|| -> std::io::Result<(u32, u64, u32, Vec<u8>)> {
+            self.file.seek(SeekFrom::Start(offset))?;
+            let mut header = [0u8; RECORD_HEADER as usize];
+            self.file.read_exact(&mut header)?;
+            let magic = u32::from_le_bytes(header[0..4].try_into().expect("4 bytes"));
+            let sid = u64::from_le_bytes(header[4..12].try_into().expect("8 bytes"));
+            let plen = u32::from_le_bytes(header[12..16].try_into().expect("4 bytes"));
+            let mut payload = vec![0u8; len as usize];
+            self.file.read_exact(&mut payload)?;
+            Ok((magic, sid, plen, payload))
+        })();
+        self.drop_entry(session);
+        match read {
+            Ok((magic, sid, plen, payload))
+                if magic == RECORD_MAGIC && sid == session && plen == len =>
+            {
+                self.maybe_compact();
+                Ok(Some(payload))
+            }
+            Ok(_) => Err(ServeError::Backend {
+                what: format!("spill record for session {session} has a corrupt frame header"),
+            }),
+            Err(e) => Err(ServeError::Backend {
+                what: format!("reading spill record for session {session}: {e}"),
+            }),
+        }
+    }
+
+    /// Drop a spilled session (the close path). Returns whether it existed.
+    pub fn remove(&mut self, session: u64) -> bool {
+        let existed = self.drop_entry(session);
+        if existed {
+            self.maybe_compact();
+        }
+        existed
+    }
+
+    fn drop_entry(&mut self, session: u64) -> bool {
+        match self.index.remove(&session) {
+            Some((_, len)) => {
+                self.live_bytes -= RECORD_HEADER + len as u64;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Compact when dead bytes exceed the live set (and the segment is big
+    /// enough to be worth rewriting).
+    fn maybe_compact(&mut self) {
+        if self.tail > COMPACT_FLOOR_BYTES && self.tail > 2 * self.live_bytes {
+            // A failed compaction leaves the old segment readable; ignore
+            // the error here and let the next put surface it if persistent.
+            let _ = self.compact();
+        }
+    }
+
+    /// Rewrite the segment with live records only. Records that fail to read
+    /// back are dropped (their sessions are already guarded by the payload
+    /// checksum upstream); the rewrite itself failing is a typed error and
+    /// leaves the in-memory index consistent with whatever landed.
+    fn compact(&mut self) -> Result<(), ServeError> {
+        let mut live: Vec<(u64, Vec<u8>)> = Vec::with_capacity(self.index.len());
+        let sids: Vec<u64> = self.index.keys().copied().collect();
+        for sid in sids {
+            match self.take(sid) {
+                Ok(Some(payload)) => live.push((sid, payload)),
+                // take() already dropped the entry; a lost record surfaces
+                // as UnknownSession on its next touch.
+                Ok(None) | Err(_) => {}
+            }
+        }
+        self.file.set_len(0).map_err(|e| ServeError::Backend {
+            what: format!("truncating spill segment {}: {e}", self.path.display()),
+        })?;
+        self.index.clear();
+        self.tail = 0;
+        self.live_bytes = 0;
+        for (sid, payload) in live {
+            self.put(sid, &payload)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// Unique per-test temp dir (std only — no tempfile dep).
+    fn temp_dir(name: &str) -> PathBuf {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let n = SEQ.fetch_add(1, Ordering::Relaxed);
+        let dir = std::env::temp_dir()
+            .join(format!("bitstopper-spill-{}-{}-{name}", std::process::id(), n));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn payload(seed: u8, len: usize) -> Vec<u8> {
+        (0..len).map(|i| seed.wrapping_add(i as u8)).collect()
+    }
+
+    #[test]
+    fn put_take_round_trips_and_promote_removes() {
+        let dir = temp_dir("roundtrip");
+        let mut s = SpillStore::open(&dir, 0, 0).unwrap();
+        assert!(s.is_empty());
+        let p1 = payload(1, 100);
+        let p2 = payload(2, 50);
+        s.put(7, &p1).unwrap();
+        s.put(9, &p2).unwrap();
+        assert_eq!(s.len(), 2);
+        assert!(s.contains(7) && s.contains(9));
+        assert_eq!(s.live_bytes(), 2 * 16 + 150);
+        assert_eq!(s.take(7).unwrap(), Some(p1));
+        assert!(!s.contains(7), "take moves the record out");
+        assert_eq!(s.take(7).unwrap(), None);
+        assert_eq!(s.take(9).unwrap(), Some(p2));
+        assert!(s.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn overwrite_replaces_and_old_bytes_become_dead() {
+        let dir = temp_dir("overwrite");
+        let mut s = SpillStore::open(&dir, 0, 0).unwrap();
+        s.put(5, &payload(1, 80)).unwrap();
+        let newer = payload(9, 40);
+        s.put(5, &newer).unwrap();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.live_bytes(), 16 + 40);
+        assert!(s.file_bytes() > s.live_bytes(), "old record is dead bytes");
+        assert_eq!(s.take(5).unwrap(), Some(newer));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dead_bytes_past_threshold_trigger_compaction() {
+        let dir = temp_dir("compact");
+        let mut s = SpillStore::open(&dir, 0, 0).unwrap();
+        let big = payload(3, 48 * 1024);
+        // Two generations of one big record push the segment past the floor
+        // with >50% dead bytes; the keeper record must survive compaction.
+        let keeper = payload(7, 1000);
+        s.put(1, &keeper).unwrap();
+        s.put(2, &big).unwrap();
+        s.put(2, &big).unwrap(); // first copy of 2 is now dead
+        let _ = s.take(2).unwrap(); // drops to ~1KB live over ~96KB file
+        assert!(s.file_bytes() <= s.live_bytes() + 16, "compaction reclaimed dead bytes");
+        assert_eq!(s.take(1).unwrap(), Some(keeper), "live record survived the rewrite");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn max_bytes_cap_fails_typed_after_compacting() {
+        let dir = temp_dir("cap");
+        let mut s = SpillStore::open(&dir, 0, 400).unwrap();
+        s.put(1, &payload(1, 100)).unwrap();
+        s.put(2, &payload(2, 100)).unwrap();
+        // A third 200-byte record cannot fit under the 400-byte cap even
+        // after compaction (232 live + 216 new > 400).
+        let err = s.put(3, &payload(3, 200)).unwrap_err();
+        assert!(matches!(err, ServeError::Backend { .. }), "{err:?}");
+        // The cap rejection poisoned nothing: both live records round-trip.
+        assert_eq!(s.take(1).unwrap(), Some(payload(1, 100)));
+        assert_eq!(s.take(2).unwrap(), Some(payload(2, 100)));
+        // And with the store drained the same record now fits.
+        s.put(3, &payload(3, 200)).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_frame_header_is_typed_and_does_not_poison() {
+        let dir = temp_dir("corrupt");
+        let mut s = SpillStore::open(&dir, 0, 0).unwrap();
+        s.put(1, &payload(1, 64)).unwrap();
+        s.put(2, &payload(2, 64)).unwrap();
+        // Smash record 1's magic in place (record 1 starts at offset 0).
+        {
+            let mut f = OpenOptions::new().write(true).open(dir.join("worker-0.spill")).unwrap();
+            f.seek(SeekFrom::Start(0)).unwrap();
+            f.write_all(&[0xDE, 0xAD, 0xBE, 0xEF]).unwrap();
+        }
+        let err = s.take(1).unwrap_err();
+        assert!(matches!(err, ServeError::Backend { .. }), "{err:?}");
+        assert!(!s.contains(1), "the corrupt record is dropped, not retried forever");
+        // The sibling record and future writes are unaffected.
+        assert_eq!(s.take(2).unwrap(), Some(payload(2, 64)));
+        s.put(4, &payload(4, 32)).unwrap();
+        assert_eq!(s.take(4).unwrap(), Some(payload(4, 32)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn validate_dir_creates_and_rejects_files() {
+        let dir = temp_dir("validate");
+        let nested = dir.join("a/b");
+        SpillStore::validate_dir(&nested).unwrap();
+        assert!(nested.is_dir());
+        let file = dir.join("plain-file");
+        std::fs::write(&file, b"x").unwrap();
+        let err = SpillStore::validate_dir(&file).unwrap_err();
+        assert!(matches!(err, ServeError::InvalidConfig { .. }), "{err:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

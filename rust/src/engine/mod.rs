@@ -107,6 +107,27 @@ impl<'a> HeadContext<'a> {
         Self { qa, cfg, planes, qplanes, lats }
     }
 
+    /// Rebuild an owned context from already-decomposed parts — the spill
+    /// promote path ([`crate::engine::ModelContext::from_bytes`]): `planes`
+    /// were serialized at demote time, so the restore skips the O(seq·dim)
+    /// re-decomposition of K. Everything else ([`Lats`], query planes) is
+    /// derived exactly as [`HeadContext::from_owned`] derives it, so a
+    /// promoted context is field-for-field identical to one that never left
+    /// RAM whenever `planes == BitPlanes::decompose(&qa.k)` — which the
+    /// serializer guarantees by construction and a checksum guards in
+    /// transit.
+    pub fn from_owned_parts(
+        qa: QuantAttn,
+        cfg: LatsConfig,
+        planes: BitPlanes,
+    ) -> HeadContext<'static> {
+        debug_assert_eq!(planes.keys, qa.seq(), "planes/K row mismatch");
+        debug_assert_eq!(planes.dim, qa.dim(), "planes/K dim mismatch");
+        let lats = Lats::new(cfg, qa.dim(), qa.qp.scale, qa.kp.scale);
+        let qplanes = qa.queries.iter().map(|q| QueryPlanes::decompose(q)).collect();
+        HeadContext { qa: Cow::Owned(qa), cfg, planes, qplanes, lats }
+    }
+
     /// Append one generated token's K/V row to the cached context — O(dim)
     /// work, no rebuild: the row is quantized with the context's *fixed*
     /// scales (out-of-range values saturate like any PTQ outlier), pushed

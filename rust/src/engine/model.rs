@@ -29,6 +29,8 @@
 use super::{HeadContext, QueryResult};
 use crate::algo::besf::BesfScratch;
 use crate::config::LatsConfig;
+use crate::quant::bitplane::{BitPlanes, N_BITS};
+use crate::quant::{IntMatrix, QuantParams};
 use crate::workload::QuantAttn;
 use anyhow::Result;
 
@@ -412,6 +414,111 @@ impl ModelContext {
         Ok((len, scores))
     }
 
+    /// Serialize this context into the **spill record format** (DESIGN.md
+    /// §14) — the demote half of the tiered session store, and deliberately
+    /// the transfer format for the ROADMAP's session-migration item.
+    ///
+    /// Little-endian layout:
+    ///
+    /// ```text
+    /// magic u32 | version u16 | n_layers u32 | n_heads u32 | dim u32 | seq u32
+    /// alpha f64 | radius f64
+    /// per lane (lh-major):
+    ///   qp f32 | kp f32 | vp f32
+    ///   K  i16 × seq·dim          (quantized keys, row-major)
+    ///   V  i16 × seq·dim          (quantized values, row-major)
+    ///   planes u64 × N_BITS·seq·wpr  (packed K bit planes, round-major)
+    /// fnv1a-64 checksum u64 over everything above
+    /// ```
+    ///
+    /// The packed planes are stored even though they are derivable from K so
+    /// a promote skips the O(seq·dim) re-decomposition; [`Self::from_bytes`]
+    /// re-derives only what [`HeadContext`] construction derives (LATS radius
+    /// from `cfg` + scales), which is what makes demote→promote bit-identical
+    /// to never having left RAM (property-tested here and end-to-end in
+    /// `coordinator::session`).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let seq = self.context_len();
+        let dim = self.shape.dim;
+        let wpr = dim.div_ceil(64);
+        let lane_bytes = 12 + 2 * seq * dim * 2 + N_BITS * seq * wpr * 8;
+        let mut buf = Vec::with_capacity(38 + self.lanes.len() * lane_bytes + 8);
+        buf.extend_from_slice(&SPILL_MAGIC.to_le_bytes());
+        buf.extend_from_slice(&SPILL_VERSION.to_le_bytes());
+        buf.extend_from_slice(&(self.shape.n_layers as u32).to_le_bytes());
+        buf.extend_from_slice(&(self.shape.n_heads as u32).to_le_bytes());
+        buf.extend_from_slice(&(dim as u32).to_le_bytes());
+        buf.extend_from_slice(&(seq as u32).to_le_bytes());
+        buf.extend_from_slice(&self.cfg.alpha.to_le_bytes());
+        buf.extend_from_slice(&self.cfg.radius.to_le_bytes());
+        for lane in &self.lanes {
+            let qa = lane.qa.as_ref();
+            debug_assert!(qa.queries.is_empty(), "session lanes carry no cached queries");
+            debug_assert_eq!(qa.seq(), seq, "lanes must share the context length");
+            buf.extend_from_slice(&qa.qp.scale.to_le_bytes());
+            buf.extend_from_slice(&qa.kp.scale.to_le_bytes());
+            buf.extend_from_slice(&qa.vp.scale.to_le_bytes());
+            for &x in &qa.k.data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            for &x in &qa.v.data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            for r in 0..N_BITS {
+                for &w in lane.planes.plane(r) {
+                    buf.extend_from_slice(&w.to_le_bytes());
+                }
+            }
+        }
+        let sum = fnv1a(&buf);
+        buf.extend_from_slice(&sum.to_le_bytes());
+        buf
+    }
+
+    /// Restore a context from [`Self::to_bytes`] output. Any truncation,
+    /// header mismatch, or checksum failure is a typed `Err` — never a panic
+    /// — so a corrupt spill record surfaces as a recoverable
+    /// [`crate::coordinator::ServeError::Backend`] at the store layer instead
+    /// of killing the worker.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        anyhow::ensure!(bytes.len() >= 8, "spill record shorter than its checksum");
+        let (payload, trailer) = bytes.split_at(bytes.len() - 8);
+        let want = u64::from_le_bytes(trailer.try_into().expect("8-byte trailer"));
+        anyhow::ensure!(fnv1a(payload) == want, "spill record checksum mismatch");
+        let mut r = ByteReader { buf: payload, pos: 0 };
+        anyhow::ensure!(r.u32()? == SPILL_MAGIC, "bad spill record magic");
+        let version = r.u16()?;
+        anyhow::ensure!(version == SPILL_VERSION, "unsupported spill format version {version}");
+        let shape =
+            ModelShape::new(r.u32()? as usize, r.u32()? as usize, r.u32()? as usize);
+        let seq = r.u32()? as usize;
+        let cfg = LatsConfig { alpha: r.f64()?, radius: r.f64()? };
+        anyhow::ensure!(shape.lanes() > 0 && shape.dim > 0, "degenerate spill record shape");
+        anyhow::ensure!(seq > 0, "spill record carries an empty context");
+        let dim = shape.dim;
+        let wpr = dim.div_ceil(64);
+        let mut lanes = Vec::with_capacity(shape.lanes());
+        for _ in 0..shape.lanes() {
+            let qp = QuantParams { scale: r.f32()? };
+            let kp = QuantParams { scale: r.f32()? };
+            let vp = QuantParams { scale: r.f32()? };
+            let k = IntMatrix::new(seq, dim, r.i16s(seq * dim)?);
+            let v = IntMatrix::new(seq, dim, r.i16s(seq * dim)?);
+            let mut planes = Vec::with_capacity(N_BITS);
+            for _ in 0..N_BITS {
+                planes.push(r.u64s(seq * wpr)?);
+            }
+            let qa = QuantAttn { queries: Vec::new(), k, v, qp, kp, vp };
+            lanes.push(HeadContext::from_owned_parts(
+                qa,
+                cfg,
+                BitPlanes::from_raw(seq, dim, planes),
+            ));
+        }
+        anyhow::ensure!(r.pos == payload.len(), "spill record carries trailing garbage");
+        Ok(Self { shape, cfg, lanes })
+    }
+
     /// Score `rows` K rows (per-lane flat chunk buffers, `[rows × dim]`
     /// each) as queries against the **current** context through the fused
     /// blocked path — the scoring half of
@@ -442,6 +549,69 @@ impl ModelContext {
         }
         let out = self.decode_block_threads(&qs, rows, scratch, threads)?;
         Ok(out.scores)
+    }
+}
+
+/// Magic prefix of a serialized [`ModelContext`] ("BSKV" little-endian).
+const SPILL_MAGIC: u32 = 0x564B_5342;
+/// Version of the spill record layout; bump on any layout change.
+const SPILL_VERSION: u16 = 1;
+
+/// FNV-1a 64-bit — the per-record integrity checksum. Hand-rolled (the
+/// offline build carries no hashing deps); not cryptographic, it guards
+/// against truncation and bit rot, not adversaries.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Bounds-checked little-endian cursor over a spill record payload: every
+/// read that would run past the end is a typed `Err`, so truncated records
+/// fail cleanly in [`ModelContext::from_bytes`].
+struct ByteReader<'b> {
+    buf: &'b [u8],
+    pos: usize,
+}
+
+impl<'b> ByteReader<'b> {
+    fn take(&mut self, n: usize) -> Result<&'b [u8]> {
+        anyhow::ensure!(self.pos + n <= self.buf.len(), "spill record truncated");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("2 bytes")))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn i16s(&mut self, n: usize) -> Result<Vec<i16>> {
+        let raw = self.take(n * 2)?;
+        Ok(raw.chunks_exact(2).map(|c| i16::from_le_bytes([c[0], c[1]])).collect())
+    }
+
+    fn u64s(&mut self, n: usize) -> Result<Vec<u64>> {
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().expect("8 bytes")))
+            .collect())
     }
 }
 
@@ -842,6 +1012,82 @@ mod tests {
             let bad = vec![vec![0.0; 4], vec![0.0; 3]];
             assert!(ctx.decode_block_threads(&bad, 1, &mut scratch, threads).is_err());
         }
+    }
+
+    #[test]
+    fn spill_round_trip_is_bit_identical_to_never_serialized() {
+        // The tiered-store invariant (ISSUE 9): to_bytes → from_bytes must
+        // reproduce the context field-for-field — quantized K/V, scales,
+        // packed planes, LATS config — so a promoted session decodes
+        // bit-identically to one that never left RAM. Shapes cross the
+        // 64-dim word edge and include multi-lane stacks.
+        for (layers, heads, dim, seed) in
+            [(2usize, 2usize, 8usize, 0xA1u64), (1, 1, 65, 0xA2), (1, 3, 63, 0xA3)]
+        {
+            let mt = ModelDecodeTrace::synth(layers, heads, 10, 3, dim, seed);
+            let (pk, pv) = mt.prompt();
+            let mut ctx =
+                ModelContext::open(mt.shape(), LatsConfig::default(), &pk, &pv, mt.prompt_len)
+                    .unwrap();
+            // Grow past the prompt so appended plane words serialize too.
+            let (_, krs, vrs) = mt.step_rows(0);
+            ctx.append_token(&krs, &vrs).unwrap();
+
+            let bytes = ctx.to_bytes();
+            let restored = ModelContext::from_bytes(&bytes).unwrap();
+            assert_eq!(restored.shape, ctx.shape);
+            assert_eq!(restored.cfg, ctx.cfg);
+            assert_eq!(restored.context_len(), ctx.context_len());
+            for (a, b) in ctx.lanes().iter().zip(restored.lanes()) {
+                assert_eq!(a.qa.k, b.qa.k, "{layers}x{heads}x{dim} K");
+                assert_eq!(a.qa.v, b.qa.v, "{layers}x{heads}x{dim} V");
+                assert_eq!(a.qa.qp, b.qa.qp);
+                assert_eq!(a.qa.kp, b.qa.kp);
+                assert_eq!(a.qa.vp, b.qa.vp);
+                assert_eq!(a.planes, b.planes, "{layers}x{heads}x{dim} planes");
+                assert_eq!(a.lats, b.lats, "{layers}x{heads}x{dim} lats");
+            }
+            // And the restored context steps identically, including growth.
+            let mut scratch = BesfScratch::new();
+            let mut live = ctx;
+            let mut thawed = restored;
+            for i in 1..mt.n_steps() {
+                let (qs, krs, vrs) = mt.step_rows(i);
+                live.append_token(&krs, &vrs).unwrap();
+                thawed.append_token(&krs, &vrs).unwrap();
+                let a = live.decode_step(&qs, &mut scratch).unwrap();
+                let b = thawed.decode_step(&qs, &mut scratch).unwrap();
+                assert_eq!(a.outs, b.outs, "step {i}");
+                assert_eq!(a.kept, b.kept, "step {i}");
+                assert_eq!(a.context_len, b.context_len, "step {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_bytes_rejects_corruption_with_typed_errors() {
+        let mt = ModelDecodeTrace::synth(1, 2, 6, 1, 8, 0xA4);
+        let (pk, pv) = mt.prompt();
+        let ctx =
+            ModelContext::open(mt.shape(), LatsConfig::default(), &pk, &pv, mt.prompt_len)
+                .unwrap();
+        let bytes = ctx.to_bytes();
+        // Truncation at every interesting boundary is an Err, never a panic.
+        for cut in [0usize, 4, 7, bytes.len() / 2, bytes.len() - 1] {
+            assert!(ModelContext::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        // A single flipped bit anywhere fails the checksum.
+        for i in [0usize, 6, 20, bytes.len() / 2, bytes.len() - 3] {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x10;
+            assert!(ModelContext::from_bytes(&bad).is_err(), "flip {i}");
+        }
+        // Trailing garbage (record framing bug upstream) is rejected too.
+        let mut padded = bytes.clone();
+        padded.extend_from_slice(&[0u8; 16]);
+        assert!(ModelContext::from_bytes(&padded).is_err());
+        // The pristine record still parses (the checks above didn't consume it).
+        assert!(ModelContext::from_bytes(&bytes).is_ok());
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! bitstopper simulate [--seq N] [--dim N] [--queries N] [--alpha A] [--config F]
 //! bitstopper serve [--sessions N] [--steps N] [--workers N] [--alpha A]
 //!                  [--lane-threads N] [--prefill-chunk N] [--spec-q Q]
+//!                  [--session-capacity N] [--spill-dir DIR] [--spill-max-bytes N]
 //! bitstopper ppl [--alpha A]                               tiny-LM perplexity eval
 //! bitstopper artifacts                                     list loaded AOT artifacts
 //! bitstopper selftest                                      config + runtime sanity
@@ -94,10 +95,23 @@ fn main() {
             // blocks + accept-all instead of sequential single-row steps.
             let spec_q: usize = get("--spec-q").and_then(|s| s.parse().ok()).unwrap_or(0);
             let (layers, heads, dim, prompt_len) = (2usize, 4usize, 64usize, 256usize);
-            let client = EngineBuilder::new()
+            let mut builder = EngineBuilder::new()
                 .workers(workers)
                 .prefill_chunk(prefill_chunk)
-                .lane_threads(lane_threads)
+                .lane_threads(lane_threads);
+            // --spill-dir enables the disk tier (DESIGN.md §14): cold
+            // sessions demote to per-worker segment files instead of being
+            // evicted, so --sessions can exceed --session-capacity.
+            if let Some(cap) = get("--session-capacity").and_then(|s| s.parse().ok()) {
+                builder = builder.session_capacity(cap);
+            }
+            if let Some(dir) = get("--spill-dir") {
+                builder = builder.spill_dir(dir);
+            }
+            if let Some(max) = get("--spill-max-bytes").and_then(|s| s.parse().ok()) {
+                builder = builder.spill_max_bytes(max);
+            }
+            let client = builder
                 .build()
                 .map_err(|e| anyhow::anyhow!("engine construction: {e}"))?;
             let traces: Vec<ModelDecodeTrace> = (0..sessions)
@@ -126,6 +140,12 @@ fn main() {
                 m.ticks, m.prefill_chunks, m.model_steps, m.spec_steps, m.accepts, m.deferred,
                 m.budget_deferred, m.errors
             );
+            if m.demotions > 0 || m.promotions > 0 {
+                println!(
+                    "spill     : {} demotions, {} promotions ({:.0} us mean), {} bytes live",
+                    m.demotions, m.promotions, m.promote_us, m.spill_bytes
+                );
+            }
             anyhow::ensure!(m.errors == 0, "serving demo completed with errors");
             Ok(())
         })(),
@@ -194,6 +214,7 @@ fn main() {
                  \x20 simulate [--seq N] [--dim N] [--queries N] [--alpha A] [--config FILE]\n\
                  \x20 serve    [--sessions N] [--steps N] [--workers N] [--alpha A]\n\
                  \x20          [--lane-threads N] [--prefill-chunk N] [--spec-q Q]\n\
+                 \x20          [--session-capacity N] [--spill-dir DIR] [--spill-max-bytes N]\n\
                  \x20 ppl      [--alpha A]\n\
                  \x20 artifacts | selftest"
             );

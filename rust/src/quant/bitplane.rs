@@ -222,6 +222,33 @@ impl BitPlanes {
         Self { keys: 0, dim, words_per_row: dim.div_ceil(64), planes: vec![Vec::new(); N_BITS] }
     }
 
+    /// Packed words per key row (`ceil(dim/64)`).
+    #[inline]
+    pub fn words_per_row(&self) -> usize {
+        self.words_per_row
+    }
+
+    /// All packed words of round-`r`'s plane (`keys * words_per_row` words,
+    /// key-major) — the raw storage the session spill tier serializes.
+    #[inline]
+    pub fn plane(&self, r: usize) -> &[u64] {
+        &self.planes[r]
+    }
+
+    /// Reassemble planes from raw per-round word vectors (the spill-restore
+    /// path). The words must be exactly what [`BitPlanes::plane`] yielded for
+    /// the same `(keys, dim)`: [`N_BITS`] planes of `keys * ceil(dim/64)`
+    /// words each. Shape violations panic — the deserializer validates
+    /// lengths (and a checksum) before calling this.
+    pub fn from_raw(keys: usize, dim: usize, planes: Vec<Vec<u64>>) -> Self {
+        let wpr = dim.div_ceil(64);
+        assert_eq!(planes.len(), N_BITS, "expected {N_BITS} planes");
+        for (r, p) in planes.iter().enumerate() {
+            assert_eq!(p.len(), keys * wpr, "plane {r} word count != keys * words_per_row");
+        }
+        Self { keys, dim, words_per_row: wpr, planes }
+    }
+
     /// Append one key row in place — the KV-cache grow path.
     ///
     /// Plane storage is row-major per key (`planes[r][j*wpr..(j+1)*wpr]`), so
@@ -638,6 +665,27 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn from_raw_round_trips_decomposed_planes() {
+        // plane()/words_per_row() expose exactly what from_raw() consumes:
+        // the round trip must be bit-identical, including ragged tail words.
+        let mut rng = crate::util::SplitMix64::new(0x5B11);
+        for dim in [1usize, 63, 64, 65, 129] {
+            let k = rand_matrix(&mut rng, 5, dim);
+            let bp = BitPlanes::decompose(&k);
+            let raw: Vec<Vec<u64>> = (0..N_BITS).map(|r| bp.plane(r).to_vec()).collect();
+            assert_eq!(raw[0].len(), 5 * bp.words_per_row());
+            let rebuilt = BitPlanes::from_raw(bp.keys, bp.dim, raw);
+            assert_eq!(rebuilt, bp, "dim {dim}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_raw_rejects_wrong_word_counts() {
+        let _ = BitPlanes::from_raw(2, 64, vec![vec![0u64; 1]; N_BITS]);
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! `cargo xtask` — repo automation. The one subcommand today is `lint`,
-//! the repo-invariant static-analysis pass (rules L0–L6, see `rules.rs`
+//! the repo-invariant static-analysis pass (rules L0–L7, see `rules.rs`
 //! and DESIGN.md §13).
 //!
 //! Usage:
@@ -172,6 +172,21 @@ mod tests {
         assert_eq!(findings[0].rule, "L2");
         assert_eq!(findings[0].path, "rust/src/injected.rs");
         assert_eq!(findings[0].line, 2);
+    }
+
+    /// L7 end-to-end on the real tree: a stray `std::fs` call in a module
+    /// off the disk allowlist is the only finding.
+    #[test]
+    fn injected_file_io_is_caught_by_l7() {
+        let mut input = gather(&repo_root()).expect("gather repo tree");
+        input.sources.push((
+            "rust/src/sneaky.rs".to_string(),
+            "fn f() { let _ = std::fs::write(\"x\", b\"y\"); }\n".to_string(),
+        ));
+        let findings = rules::run(&input);
+        assert_eq!(findings.len(), 1, "exactly the injected finding: {findings:?}");
+        assert_eq!(findings[0].rule, "L7");
+        assert_eq!(findings[0].path, "rust/src/sneaky.rs");
     }
 
     #[test]

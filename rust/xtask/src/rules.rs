@@ -1,4 +1,4 @@
-//! The lint rules (L1–L6) and the suppression protocol.
+//! The lint rules (L1–L7) and the suppression protocol.
 //!
 //! Each rule freezes one repo invariant the serving stack's safety rests on
 //! (motivations and §-citations live in DESIGN.md §13). Findings carry
@@ -47,6 +47,7 @@ pub fn run(input: &LintInput) -> Vec<Finding> {
         f.l3_scheduler_wall_clock(&mut out);
         f.l4_bare_thread_spawn(&mut out);
         f.l5_serve_error_surface(&mut out);
+        f.l7_file_io_confinement(&mut out);
     }
     if let Some(bench) = &input.bench {
         l6_bench_baseline_sync(bench, &input.baselines, &mut out);
@@ -62,6 +63,20 @@ const L4_SPAWN_ALLOWED: &[&str] = &["coordinator/mod.rs", "engine/mod.rs", "engi
 /// The coordinator files whose fallible `pub fn`s must speak `ServeError`.
 const L5_SERVE_SURFACE: &[&str] =
     &["coordinator/api.rs", "coordinator/client.rs", "coordinator/session.rs"];
+
+/// Files allowed direct file I/O (`std::fs` / `File` / `OpenOptions`): the
+/// spill tier is the serving stack's one disk surface (DESIGN.md §14); the
+/// rest are the pre-existing artifact/config loaders, report/trace writers,
+/// and the CLI. New disk state goes through one of these, not a fresh
+/// `std::fs` call site.
+const L7_FILE_IO_ALLOWED: &[&str] = &[
+    "coordinator/spill.rs",
+    "model/loader.rs",
+    "runtime/mod.rs",
+    "main.rs",
+    "report.rs",
+    "workload/trace.rs",
+];
 
 struct SourceView {
     rel: String,
@@ -281,6 +296,55 @@ impl SourceView {
                 }
             }
             li += 1;
+        }
+    }
+
+    /// L7: direct file I/O is confined to the modules that own a disk
+    /// surface ([`L7_FILE_IO_ALLOWED`]). A stray `std::fs` call anywhere
+    /// else silently grows the set of paths a crash can leave half-written
+    /// and bypasses the spill tier's framing/checksum/rollback discipline
+    /// (DESIGN.md §14). Tests are exempt — fixtures legitimately build and
+    /// tear down temp trees.
+    fn l7_file_io_confinement(&self, out: &mut Vec<Finding>) {
+        if L7_FILE_IO_ALLOWED.iter().any(|a| self.rel.ends_with(a)) {
+            return;
+        }
+        // One finding per line even when several patterns overlap on the
+        // same call (`std::fs::write` matches both the module path and the
+        // function pattern).
+        let mut flagged: Vec<usize> = Vec::new();
+        for pat in [
+            "std::fs::",
+            "fs::write(",
+            "fs::read(",
+            "fs::read_to_string(",
+            "fs::create_dir",
+            "fs::remove_file(",
+            "fs::remove_dir_all(",
+            "fs::rename(",
+            "fs::copy(",
+            "File::open(",
+            "File::create(",
+            "OpenOptions::new(",
+        ] {
+            let mut pos = 0usize;
+            while let Some(i) = self.compact.find_from(pat, pos) {
+                pos = i + 1;
+                let line = self.compact.line_at(i);
+                if self.in_tests(line) || flagged.contains(&line) {
+                    continue;
+                }
+                flagged.push(line);
+                self.emit(
+                    out,
+                    "L7",
+                    line,
+                    format!(
+                        "file I/O `{pat}..` outside the disk-owning modules — route disk \
+                         state through `coordinator/spill.rs` or an allowed writer"
+                    ),
+                );
+            }
         }
     }
 }
@@ -689,6 +753,37 @@ mod tests {
         let f = lint_one("rust/src/coordinator/api.rs", src);
         assert_eq!(f.len(), 1);
         assert_eq!((f[0].rule, f[0].line), ("L5", 1));
+    }
+
+    #[test]
+    fn l7_flags_file_io_outside_the_disk_owning_modules() {
+        let src = "fn f() { let _ = std::fs::write(\"x\", b\"y\"); }\n";
+        let f = lint_one("rust/src/coordinator/batch.rs", src);
+        assert_eq!(f.len(), 1, "one finding per line, not one per overlapping pattern");
+        assert_eq!((f[0].rule, f[0].line), ("L7", 1));
+        // The disk-owning modules are exempt.
+        assert!(lint_one("rust/src/coordinator/spill.rs", src).is_empty());
+        assert!(lint_one("rust/src/report.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l7_catches_the_bare_fs_and_open_options_idioms() {
+        let src = "use std::fs;\nfn f() { let _ = fs::read_to_string(\"x\"); }\n";
+        let f = lint_one("rust/src/quant/x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!((f[0].rule, f[0].line), ("L7", 2));
+        let oo = "fn f() { let _ = OpenOptions::new().read(true).open(\"x\"); }\n";
+        assert_eq!(lint_one("rust/src/quant/x.rs", oo).len(), 1);
+    }
+
+    #[test]
+    fn l7_exempts_test_modules_and_honors_suppressions() {
+        let tests = "#[cfg(test)]\nmod tests {\n    fn t() { let _ = \
+                     std::fs::write(\"x\", b\"y\"); }\n}\n";
+        assert!(lint_one("rust/src/coordinator/batch.rs", tests).is_empty());
+        let allowed = "fn f() {\n    // lint:allow(L7): one-off debug dump behind a flag\n    \
+                       let _ = std::fs::write(\"x\", b\"y\");\n}\n";
+        assert!(lint_one("rust/src/coordinator/batch.rs", allowed).is_empty());
     }
 
     #[test]

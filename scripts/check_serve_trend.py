@@ -17,10 +17,13 @@ that moves the numbers.
 
 Policy (ROADMAP "BENCH trend tracking in CI"):
 
-* Every `serve_decode_b*` / `serve_spec_q*` / `serve_scored_*` cost row is
-  compared by p50 (more robust than the mean on shared CI machines — see
-  EXPERIMENTS.md §Perf). A row more than REGRESSION_PCT slower than its
-  baseline fails the check.
+* Every `serve_decode_b*` / `serve_spec_q*` / `serve_scored_*` /
+  `serve_spill_*` cost row is compared by p50 (more robust than the mean on
+  shared CI machines — see EXPERIMENTS.md §Perf). A row more than
+  REGRESSION_PCT slower than its baseline fails the check. The spill rows
+  cover the disk tier: serialize/deserialize cost of the ModelContext wire
+  format, cold-step promote latency vs context length, and the hot:cold
+  session-mix decode cost (DESIGN.md §14).
 * Every derived ratio whose name contains "speedup" — in BOTH files — is a
   machine-independent higher-is-better number (kernel A vs kernel B on the
   same box). One dropping below RATIO_FLOOR × baseline fails the check.
@@ -54,7 +57,7 @@ def load_doc(path: Path):
     return json.loads(path.read_text())
 
 
-SERVE_ROW_PREFIXES = ("serve_decode_", "serve_spec_", "serve_scored_")
+SERVE_ROW_PREFIXES = ("serve_decode_", "serve_spec_", "serve_scored_", "serve_spill_")
 
 
 def serve_rows(doc):
