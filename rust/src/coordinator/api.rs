@@ -32,6 +32,30 @@ impl fmt::Display for EvictReason {
     }
 }
 
+/// Scheduling priority class of a session (DESIGN.md §15). Interactive
+/// sessions are dispatched ahead of batch sessions by the priority policy
+/// ([`super::SchedPolicy::Priority`]); under the default fair policy the
+/// class is recorded but does not affect dispatch order. The class also
+/// keys the loadgen SLO report (per-class TTFT/ITL percentiles).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Priority {
+    /// Latency-sensitive traffic (chat turns): dispatched first.
+    Interactive,
+    /// Throughput traffic (offline eval, summarization): runs in the
+    /// budget head-room the interactive class leaves, plus a configurable
+    /// reserved share so it cannot fully starve.
+    Batch,
+}
+
+impl fmt::Display for Priority {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Priority::Interactive => write!(f, "interactive"),
+            Priority::Batch => write!(f, "batch"),
+        }
+    }
+}
+
 /// Every way a serving request can fail, end to end: client-side validation
 /// ([`super::Client::submit`], [`super::SessionHandle::step`]), scheduler
 /// admission, and worker-side execution all speak this one enum — the
@@ -69,6 +93,12 @@ pub enum ServeError {
     /// Invalid engine construction parameters
     /// ([`super::EngineBuilder::build`]).
     InvalidConfig { what: String },
+    /// Admission control rejected the open: the scheduler already has
+    /// `runnable` sessions wanting service, at or past the configured
+    /// watermark ([`super::EngineBuilder::admit_watermark`]). Overload is a
+    /// *typed, immediate* rejection — queueing the open would only grow
+    /// every admitted session's tail latency (DESIGN.md §15).
+    Overloaded { runnable: usize, watermark: usize },
     /// A blocking wait on the event stream timed out.
     Timeout,
     /// The engine has shut down (or is shutting down); the channel behind
@@ -99,6 +129,9 @@ impl fmt::Display for ServeError {
             }
             ServeError::Backend { what } => write!(f, "executor backend: {what}"),
             ServeError::InvalidConfig { what } => write!(f, "invalid engine config: {what}"),
+            ServeError::Overloaded { runnable, watermark } => {
+                write!(f, "overloaded: {runnable} runnable sessions (watermark {watermark})")
+            }
             ServeError::Timeout => write!(f, "timed out waiting on the event stream"),
             ServeError::Shutdown => write!(f, "engine shut down"),
         }
@@ -231,7 +264,13 @@ mod tests {
             "session store at capacity (2)"
         );
         assert!(ServeError::InvalidAlpha { alpha: f64::NAN }.to_string().contains("alpha"));
+        assert_eq!(
+            ServeError::Overloaded { runnable: 9, watermark: 8 }.to_string(),
+            "overloaded: 9 runnable sessions (watermark 8)"
+        );
         assert_eq!(EvictReason::IdleTtl.to_string(), "idle TTL expired");
+        assert_eq!(Priority::Interactive.to_string(), "interactive");
+        assert_eq!(Priority::Batch.to_string(), "batch");
     }
 
     #[test]

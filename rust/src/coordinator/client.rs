@@ -20,8 +20,8 @@
 //!   handle closes the session (freeing its worker-side KV-cache and router
 //!   pin), so an early-returning client cannot leak serving state.
 
-use super::api::{BlockResponse, ServeError, SessionEvent, StepResponse};
-use super::scheduler::{ModelPrompt, ModelStep, ModelStepBlock, SchedConfig};
+use super::api::{BlockResponse, Priority, ServeError, SessionEvent, StepResponse};
+use super::scheduler::{ModelPrompt, ModelStep, ModelStepBlock, SchedConfig, SchedPolicy};
 use super::session::{SessionStore, DEFAULT_IDLE_TTL, DEFAULT_MAX_SESSIONS};
 use super::spill::SpillStore;
 use super::{
@@ -152,6 +152,24 @@ impl EngineBuilder {
         self
     }
 
+    /// Dispatch policy for `plan_tick` (DESIGN.md §15): [`SchedPolicy::Fair`]
+    /// round-robin (the default) or [`SchedPolicy::Priority`], which serves
+    /// [`Priority::Interactive`] sessions first each tick while reserving a
+    /// decode-token floor for [`Priority::Batch`] progress.
+    pub fn sched_policy(mut self, policy: SchedPolicy) -> Self {
+        self.sched.policy = policy;
+        self
+    }
+
+    /// Overload admission control (DESIGN.md §15): reject
+    /// [`Client::open_model_session`] with [`ServeError::Overloaded`] while
+    /// `n` or more already-admitted sessions are runnable or in flight.
+    /// `None` (the default) admits unconditionally.
+    pub fn admit_watermark(mut self, n: usize) -> Self {
+        self.sched.admit_watermark = Some(n);
+        self
+    }
+
     /// Enable the disk tier (DESIGN.md §14): each worker store gets a
     /// [`SpillStore`] segment file under `dir`, and capacity/TTL pressure
     /// **demotes** cold sessions to it (serialize → spill → drop hot)
@@ -198,6 +216,16 @@ impl EngineBuilder {
         }
         if self.max_sessions == 0 {
             return fail("session_capacity must be >= 1");
+        }
+        if self.sched.admit_watermark == Some(0) {
+            return fail("admit_watermark must be >= 1");
+        }
+        if let SchedPolicy::Priority { batch_reserve_tokens } = self.sched.policy {
+            // A reserve covering the whole pool would starve interactive
+            // decode outright — the floor must leave at least one token.
+            if batch_reserve_tokens >= self.sched.decode_tokens_per_tick {
+                return fail("batch_reserve_tokens must be < decode_tokens_per_tick");
+            }
         }
         if self.lane_threads == 0 {
             return fail("lane_threads must be >= 1");
@@ -300,6 +328,19 @@ impl Client {
         alpha: f64,
         shape: ModelShape,
     ) -> Result<SessionHandle, ServeError> {
+        self.open_model_session_with_class(alpha, shape, Priority::Interactive)
+    }
+
+    /// [`Client::open_model_session`] with an explicit [`Priority`] class.
+    /// Under [`SchedPolicy::Priority`] the class decides dispatch order and
+    /// the batch reserve; under the default fair policy it is recorded (for
+    /// per-class metrics) but does not change scheduling.
+    pub fn open_model_session_with_class(
+        &self,
+        alpha: f64,
+        shape: ModelShape,
+        class: Priority,
+    ) -> Result<SessionHandle, ServeError> {
         if !alpha.is_finite() || alpha < 0.0 {
             self.core.count_error();
             return Err(ServeError::InvalidAlpha { alpha });
@@ -313,7 +354,7 @@ impl Client {
         let session = self.core.next_session_id();
         let (tx, rx) = channel();
         self.core
-            .send(Submission::Open { session, alpha, shape, events: tx.clone() })?;
+            .send(Submission::Open { session, alpha, shape, class, events: tx.clone() })?;
         Ok(SessionHandle {
             client: self.clone(),
             session,
@@ -359,6 +400,7 @@ fn session_fatal(e: &ServeError) -> bool {
             | ServeError::ExecutorUnsupported { .. }
             | ServeError::DuplicateSession { .. }
             | ServeError::InvalidAlpha { .. }
+            | ServeError::Overloaded { .. }
     )
 }
 

@@ -48,7 +48,7 @@ pub mod scheduler;
 pub mod session;
 pub mod spill;
 
-pub use api::{BlockResponse, EvictReason, ServeError, SessionEvent, StepResponse};
+pub use api::{BlockResponse, EvictReason, Priority, ServeError, SessionEvent, StepResponse};
 pub use batch::{BatchConfig, Batcher};
 pub use client::{AttnTicket, Client, EngineBuilder, SessionHandle, DEFAULT_SPILL_MAX_BYTES};
 pub use drive::{
@@ -59,7 +59,7 @@ pub use pjrt::PjrtExecutor;
 pub use router::Router;
 pub use scheduler::{
     Feedback, ModelJob, ModelOut, ModelPrompt, ModelStep, ModelStepBlock, SchedConfig,
-    SchedStats, Scheduler,
+    SchedPolicy, SchedStats, Scheduler,
 };
 pub use session::SessionStore;
 pub use spill::{SpillReport, SpillStore};
@@ -414,6 +414,13 @@ pub struct Metrics {
     /// budget ([`SchedConfig::prefill_tokens_per_tick`] /
     /// [`SchedConfig::decode_tokens_per_tick`]).
     pub budget_deferred: u64,
+    /// Model jobs dispatched for [`Priority::Interactive`] sessions.
+    pub dispatched_interactive: u64,
+    /// Model jobs dispatched for [`Priority::Batch`] sessions.
+    pub dispatched_batch: u64,
+    /// Session opens rejected by the admission watermark
+    /// ([`EngineBuilder::admit_watermark`]) as [`ServeError::Overloaded`].
+    pub admit_rejected: u64,
     /// Live session→worker pins (gauge).
     pub session_pins: u64,
     /// Mean decode keep rate across completed model decode steps.
@@ -483,7 +490,13 @@ enum Job {
 /// What [`Client`] methods enqueue to the scheduler thread.
 pub(crate) enum Submission {
     OneShot(AttnRequest, OneShotResponder),
-    Open { session: u64, alpha: f64, shape: ModelShape, events: Sender<SessionEvent> },
+    Open {
+        session: u64,
+        alpha: f64,
+        shape: ModelShape,
+        class: Priority,
+        events: Sender<SessionEvent>,
+    },
     Prefill { session: u64, prompt: ModelPrompt, events: Sender<SessionEvent> },
     /// Scored prefill: chunks also score their rows (prompt-logprob output).
     PrefillScored { session: u64, prompt: ModelPrompt, events: Sender<SessionEvent> },
@@ -948,6 +961,9 @@ impl EngineCore {
             evictions: mi.sched.evictions,
             deferred: mi.sched.deferred,
             budget_deferred: mi.sched.budget_deferred,
+            dispatched_interactive: mi.sched.dispatched_interactive,
+            dispatched_batch: mi.sched.dispatched_batch,
+            admit_rejected: mi.sched.admit_rejected,
             session_pins: mi.session_pins,
             decode_keep_rate: mi.sched.keep_rate(),
             demotions: mi.demotions,
@@ -997,8 +1013,8 @@ fn admit(
             batcher.push(req, now, resp);
             None
         }
-        Submission::Open { session, alpha, shape, events } => sched
-            .admit_open(session, alpha, shape, events.clone(), router)
+        Submission::Open { session, alpha, shape, class, events } => sched
+            .admit_open_class(session, alpha, shape, class, events.clone(), router)
             .err()
             .map(|e| (e, events)),
         Submission::Prefill { session, prompt, events } => {

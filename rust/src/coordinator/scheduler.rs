@@ -55,7 +55,7 @@
 //! surplus stays queued (counted in [`SchedStats::deferred`]) and is served
 //! on later ticks by ring order.
 
-use super::api::{EvictReason, ServeError, SessionEvent};
+use super::api::{EvictReason, Priority, ServeError, SessionEvent};
 use super::router::Router;
 use crate::engine::{ModelBlockOutput, ModelShape, ModelStepOutput};
 use std::collections::{HashMap, VecDeque};
@@ -383,6 +383,29 @@ pub enum Feedback {
     BatchDone { worker: usize, n: usize },
 }
 
+/// Dispatch-order policy for [`Scheduler::plan_tick`] (DESIGN.md §15).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Class-blind round-robin — the historical behavior: one ring, one
+    /// rotating cursor, [`Priority`] classes recorded but ignored.
+    Fair,
+    /// Class-aware two-pass dispatch: each tick visits every interactive
+    /// session before any batch session, each class round-robining over its
+    /// own members (rotated by the tick counter), the two passes sharing
+    /// the tick's token budgets. `batch_reserve_tokens` decode tokens are
+    /// withheld from the interactive pass whenever a batch session is
+    /// runnable, so batch traffic keeps a per-tick progress floor instead
+    /// of starving under interactive overload (the per-class starvation
+    /// bound in [`Scheduler::plan_tick`]).
+    Priority {
+        /// Decode tokens reserved for the batch pass while any batch
+        /// session is runnable. 0 means strict priority (batch may starve
+        /// under sustained interactive load). Must be smaller than
+        /// [`SchedConfig::decode_tokens_per_tick`].
+        batch_reserve_tokens: usize,
+    },
+}
+
 /// Scheduler knobs (validated by [`super::EngineBuilder::build`]).
 #[derive(Debug, Clone, Copy)]
 pub struct SchedConfig {
@@ -399,6 +422,13 @@ pub struct SchedConfig {
     /// `q_rows`. A block wider than the whole budget dispatches only on an
     /// untouched budget (see [`Scheduler::plan_tick`]).
     pub decode_tokens_per_tick: usize,
+    /// Dispatch-order policy (fair round-robin vs priority classes).
+    pub policy: SchedPolicy,
+    /// Overload admission control: reject new opens with a typed
+    /// [`ServeError::Overloaded`] once this many sessions already want
+    /// service ([`Scheduler::runnable_sessions`]). `None` (the default)
+    /// admits unconditionally.
+    pub admit_watermark: Option<usize>,
 }
 
 impl Default for SchedConfig {
@@ -408,6 +438,8 @@ impl Default for SchedConfig {
             max_inflight_per_worker: 2,
             prefill_tokens_per_tick: 2048,
             decode_tokens_per_tick: 64,
+            policy: SchedPolicy::Fair,
+            admit_watermark: None,
         }
     }
 }
@@ -439,6 +471,13 @@ pub struct SchedStats {
     pub budget_deferred: u64,
     /// Largest runnable set seen in a single tick.
     pub peak_runnable: u64,
+    /// Units dispatched for interactive-class sessions (all job kinds).
+    pub dispatched_interactive: u64,
+    /// Units dispatched for batch-class sessions.
+    pub dispatched_batch: u64,
+    /// Opens rejected by the admission watermark
+    /// ([`ServeError::Overloaded`], [`SchedConfig::admit_watermark`]).
+    pub admit_rejected: u64,
     /// Decode-step survivor / context token totals (keep-rate numerator /
     /// denominator), accumulated from worker feedback.
     pub kept_tokens: u64,
@@ -489,6 +528,8 @@ struct Sess {
     worker: usize,
     shape: ModelShape,
     alpha: f64,
+    /// Scheduling class ([`SchedPolicy::Priority`] dispatch order).
+    class: Priority,
     /// The session's event stream (the client handle holds the receiver).
     events: Sender<SessionEvent>,
     /// Has the opening chunk been dispatched (per-lane scales fixed)?
@@ -537,6 +578,14 @@ impl Scheduler {
         self.sessions.len()
     }
 
+    /// Sessions currently wanting service: runnable (queued work or a
+    /// pending close) or with a unit in flight. This is the load signal the
+    /// admission watermark compares against — idle sessions holding only a
+    /// pin don't count, because they add no tick pressure.
+    pub fn runnable_sessions(&self) -> usize {
+        self.sessions.values().filter(|s| s.runnable() || s.inflight).count()
+    }
+
     /// Is there anything in flight or waiting? The batcher thread polls
     /// tighter while this holds so completions turn into next-tick dispatches
     /// promptly.
@@ -547,12 +596,31 @@ impl Scheduler {
     /// Admit a new session: validate, pin a worker via the router, register
     /// the session's event sender. The prompt arrives separately via
     /// [`Scheduler::enqueue_prefill`] — a session with no queued work holds
-    /// only its pin.
+    /// only its pin. Defaults to the interactive class; see
+    /// [`Scheduler::admit_open_class`].
     pub fn admit_open(
         &mut self,
         session: u64,
         alpha: f64,
         shape: ModelShape,
+        events: Sender<SessionEvent>,
+        router: &mut Router,
+    ) -> Result<(), ServeError> {
+        self.admit_open_class(session, alpha, shape, Priority::Interactive, events, router)
+    }
+
+    /// [`Scheduler::admit_open`] with an explicit [`Priority`] class. When
+    /// [`SchedConfig::admit_watermark`] is set, admission is rejected with a
+    /// typed [`ServeError::Overloaded`] (and counted in
+    /// [`SchedStats::admit_rejected`]) once [`Scheduler::runnable_sessions`]
+    /// reaches the watermark — before the router pin, so a rejected open
+    /// takes nothing.
+    pub fn admit_open_class(
+        &mut self,
+        session: u64,
+        alpha: f64,
+        shape: ModelShape,
+        class: Priority,
         events: Sender<SessionEvent>,
         router: &mut Router,
     ) -> Result<(), ServeError> {
@@ -567,6 +635,13 @@ impl Scheduler {
         if self.sessions.contains_key(&session) {
             return Err(ServeError::DuplicateSession { session });
         }
+        if let Some(watermark) = self.cfg.admit_watermark {
+            let runnable = self.runnable_sessions();
+            if runnable >= watermark {
+                self.stats.admit_rejected += 1;
+                return Err(ServeError::Overloaded { runnable, watermark });
+            }
+        }
         let worker = router.bind_session(session);
         self.sessions.insert(
             session,
@@ -574,6 +649,7 @@ impl Scheduler {
                 worker,
                 shape,
                 alpha,
+                class,
                 events,
                 opened: false,
                 queue: VecDeque::new(),
@@ -836,6 +912,22 @@ impl Scheduler {
     /// — the rotating cursor visits every session first within `S` ticks, so
     /// a `q_rows > budget` block waits at most one rotation, never forever.
     ///
+    /// **Priority classes.** Under [`SchedPolicy::Priority`] every
+    /// interactive session is visited before any batch session, each class
+    /// round-robining over its own members (its list rotated by the tick
+    /// counter, so the lead member of each class advances every tick). Both
+    /// passes draw from the same budgets, but while any batch session is
+    /// runnable the interactive pass keeps its hands off the last
+    /// `batch_reserve_tokens` of the decode pool, so
+    /// each class retains a per-class starvation bound: interactive
+    /// sessions advance within `ceil(S_i / C)` ticks as before, and batch
+    /// sessions advance within `ceil(S_b / min(C, reserve))` ticks whenever
+    /// unit weights fit the reserve. The untouched-budget ride for oversize
+    /// blocks is deliberately class-blind (an indivisible block must
+    /// dispatch *somewhere*); sustained all-oversize interactive traffic is
+    /// the one shape that can eat the reserve, and the loadgen harness is
+    /// where that trade-off is measured rather than hidden.
+    ///
     /// `now` is the tick's timestamp, supplied by the driving thread: the
     /// scheduler is a pure state machine and never reads the wall clock
     /// itself (lint rule L3, DESIGN.md §13) — that keeps every tick
@@ -856,10 +948,43 @@ impl Scheduler {
         let mut prefill_budget = self.cfg.prefill_tokens_per_tick;
         let mut decode_budget = self.cfg.decode_tokens_per_tick;
         let start = self.cursor % n;
+        let rotation = self.cursor;
         self.cursor = self.cursor.wrapping_add(1);
+        // Visit order: the rotated ring as-is (fair), or interactive first
+        // then batch (priority). Flattening the policy into one visit list
+        // keeps the dispatch body below identical for both policies.
+        let (visit, batch_reserve): (Vec<u64>, usize) = match self.cfg.policy {
+            SchedPolicy::Fair => ((0..n).map(|i| self.order[(start + i) % n]).collect(), 0),
+            SchedPolicy::Priority { batch_reserve_tokens } => {
+                // Each class round-robins over its OWN members, rotated by
+                // the tick counter. (Filtering one globally-rotated ring
+                // would advance a class's lead member only when the global
+                // cursor crosses one of that class's positions, stretching
+                // the per-class gap to the full ring size.)
+                let mut visit: Vec<u64> = Vec::with_capacity(n);
+                for class in [Priority::Interactive, Priority::Batch] {
+                    let members: Vec<u64> = self
+                        .order
+                        .iter()
+                        .copied()
+                        .filter(|sid| self.sessions.get(sid).map(|s| s.class) == Some(class))
+                        .collect();
+                    if !members.is_empty() {
+                        let s = rotation % members.len();
+                        visit.extend(members[s..].iter().chain(members[..s].iter()));
+                    }
+                }
+                // The reserve only bites while a batch session actually
+                // wants service — otherwise interactive gets the whole pool.
+                let batch_waiting = self
+                    .sessions
+                    .values()
+                    .any(|s| s.class == Priority::Batch && s.runnable());
+                (visit, if batch_waiting { batch_reserve_tokens } else { 0 })
+            }
+        };
         let mut closed: Vec<u64> = Vec::new();
-        for i in 0..n {
-            let sid = self.order[(start + i) % n];
+        for sid in visit {
             let Some(s) = self.sessions.get_mut(&sid) else { continue };
             if !s.runnable() {
                 continue;
@@ -869,6 +994,7 @@ impl Scheduler {
                 continue;
             }
             let worker = s.worker;
+            let class = s.class;
             let events = s.events.clone();
             // Per-session order: the unit queue front (prefills, steps,
             // fused blocks, and accepts in strict submission order), then
@@ -949,7 +1075,15 @@ impl Scheduler {
                     Some(Unit::Spec { block, .. }) => block.tokens(),
                     _ => 1,
                 };
-                if weight > decode_budget && decode_budget < self.cfg.decode_tokens_per_tick {
+                // Interactive decode units keep their hands off the batch
+                // reserve (`avail`); the untouched-budget ride is reserved
+                // for blocks wider than the WHOLE pool — a normal-size unit
+                // that merely overflows its class share waits its turn.
+                let floor = if class == Priority::Interactive { batch_reserve } else { 0 };
+                let avail = decode_budget.saturating_sub(floor);
+                let untouched = decode_budget == self.cfg.decode_tokens_per_tick;
+                let oversize = weight > self.cfg.decode_tokens_per_tick;
+                if weight > avail && !(untouched && oversize) {
                     self.stats.budget_deferred += 1;
                     continue;
                 }
@@ -987,6 +1121,10 @@ impl Scheduler {
             };
             s.inflight = true;
             self.inflight[worker] += 1;
+            match class {
+                Priority::Interactive => self.stats.dispatched_interactive += 1,
+                Priority::Batch => self.stats.dispatched_batch += 1,
+            }
             out.push(dispatch);
         }
         for sid in closed {
@@ -1436,6 +1574,7 @@ mod tests {
                 max_inflight_per_worker: 8,
                 prefill_tokens_per_tick: 1024,
                 decode_tokens_per_tick: 4,
+                ..SchedConfig::default()
             },
             1,
         );
@@ -1472,6 +1611,7 @@ mod tests {
                 max_inflight_per_worker: 8,
                 prefill_tokens_per_tick: 6,
                 decode_tokens_per_tick: 64,
+                ..SchedConfig::default()
             },
             1,
         );
@@ -1514,6 +1654,7 @@ mod tests {
                 max_inflight_per_worker: 8,
                 prefill_tokens_per_tick: 1024,
                 decode_tokens_per_tick: 2,
+                ..SchedConfig::default()
             },
             1,
         );
@@ -1557,6 +1698,7 @@ mod tests {
                 max_inflight_per_worker: 8,
                 prefill_tokens_per_tick: 1024,
                 decode_tokens_per_tick: 3,
+                ..SchedConfig::default()
             },
             1,
         );
@@ -1687,5 +1829,189 @@ mod tests {
             ModelOut::Accepted { accepted: 1, context_len: 5 }.keep_totals(),
             (0, 0)
         );
+    }
+
+    /// [`open`] with an explicit priority class.
+    fn open_class(
+        sched: &mut Scheduler,
+        router: &mut Router,
+        sid: u64,
+        class: Priority,
+        p: ModelPrompt,
+    ) -> Receiver<SessionEvent> {
+        let (tx, rx) = channel();
+        sched.admit_open_class(sid, 0.6, p.shape, class, tx, router).unwrap();
+        sched.enqueue_prefill(sid, p, Instant::now()).unwrap();
+        rx
+    }
+
+    #[test]
+    fn priority_policy_dispatches_interactive_before_batch_within_budgets() {
+        // Batch session sits FIRST in the ring; under the priority policy
+        // the interactive session is still dispatched first, and with a
+        // decode pool of 1 (strict priority, reserve 0) the batch step is
+        // budget-deferred while interactive traffic flows.
+        let mut router = Router::new(1);
+        let mut sched = Scheduler::new(
+            SchedConfig {
+                prefill_chunk: 8,
+                max_inflight_per_worker: 8,
+                decode_tokens_per_tick: 1,
+                policy: SchedPolicy::Priority { batch_reserve_tokens: 0 },
+                ..SchedConfig::default()
+            },
+            1,
+        );
+        let shape = ModelShape::single(2);
+        let _b = open_class(&mut sched, &mut router, 1, Priority::Batch, prompt((1, 1), 2, 4));
+        let _i =
+            open_class(&mut sched, &mut router, 2, Priority::Interactive, prompt((1, 1), 2, 4));
+        let batch = sched.plan_tick(&mut router, Instant::now());
+        assert_eq!(batch.len(), 2, "prefills share the prompt pool");
+        assert_eq!(batch[0].job.session(), 2, "interactive prefill walks first");
+        ack_all(&mut sched, &mut router, &batch);
+        sched.enqueue_step(1, step(&shape), Instant::now()).unwrap();
+        sched.enqueue_step(2, step(&shape), Instant::now()).unwrap();
+        let tick = sched.plan_tick(&mut router, Instant::now());
+        assert_eq!(tick.len(), 1, "pool of 1: only one decode unit fits");
+        assert_eq!(tick[0].job.session(), 2, "strict priority serves interactive");
+        assert_eq!(sched.stats.budget_deferred, 1, "the batch step waited on budget");
+        ack_all(&mut sched, &mut router, &tick);
+        // Interactive drained: the deferred batch step now gets the pool.
+        let tick = sched.plan_tick(&mut router, Instant::now());
+        assert_eq!(tick.len(), 1);
+        assert_eq!(tick[0].job.session(), 1);
+        ack_all(&mut sched, &mut router, &tick);
+        assert_eq!(sched.stats.dispatched_interactive, 2, "prefill + step");
+        assert_eq!(sched.stats.dispatched_batch, 2);
+    }
+
+    #[test]
+    fn batch_reserve_keeps_batch_advancing_under_interactive_overload() {
+        // Two interactive sessions demand 2 decode tokens/tick forever; the
+        // pool is 2. With reserve 0 the batch session starves outright;
+        // with reserve 1 it advances every tick (the per-class floor).
+        for (reserve, expect_batch_steps) in [(0usize, 0u64), (1, 8)] {
+            let mut router = Router::new(1);
+            let mut sched = Scheduler::new(
+                SchedConfig {
+                    prefill_chunk: 8,
+                    max_inflight_per_worker: 8,
+                    decode_tokens_per_tick: 2,
+                    policy: SchedPolicy::Priority { batch_reserve_tokens: reserve },
+                    ..SchedConfig::default()
+                },
+                1,
+            );
+            let shape = ModelShape::single(2);
+            let _a =
+                open_class(&mut sched, &mut router, 1, Priority::Interactive, prompt((1, 1), 2, 2));
+            let _b =
+                open_class(&mut sched, &mut router, 2, Priority::Interactive, prompt((1, 1), 2, 2));
+            let _c = open_class(&mut sched, &mut router, 3, Priority::Batch, prompt((1, 1), 2, 2));
+            let batch = sched.plan_tick(&mut router, Instant::now());
+            ack_all(&mut sched, &mut router, &batch);
+            for _ in 0..8 {
+                sched.enqueue_step(1, step(&shape), Instant::now()).unwrap();
+                sched.enqueue_step(2, step(&shape), Instant::now()).unwrap();
+                sched.enqueue_step(3, step(&shape), Instant::now()).unwrap();
+            }
+            let mut batch_steps = 0u64;
+            for _ in 0..8 {
+                let tick = sched.plan_tick(&mut router, Instant::now());
+                batch_steps += tick.iter().filter(|d| d.job.session() == 3).count() as u64;
+                ack_all(&mut sched, &mut router, &tick);
+            }
+            assert_eq!(
+                batch_steps, expect_batch_steps,
+                "reserve {reserve}: batch progress must be exactly the floor"
+            );
+        }
+    }
+
+    #[test]
+    fn per_class_starvation_bound_holds_under_priority() {
+        // 2 interactive + 2 batch decode sessions on a pool of 3 with a
+        // 1-token batch reserve: every session of BOTH classes advances
+        // with a bounded tick gap (interactive shares 2 tokens/tick, batch
+        // alternates on its reserved token).
+        let mut router = Router::new(1);
+        let mut sched = Scheduler::new(
+            SchedConfig {
+                prefill_chunk: 8,
+                max_inflight_per_worker: 8,
+                decode_tokens_per_tick: 3,
+                policy: SchedPolicy::Priority { batch_reserve_tokens: 1 },
+                ..SchedConfig::default()
+            },
+            1,
+        );
+        let shape = ModelShape::single(2);
+        for (sid, class) in
+            [(1u64, Priority::Interactive), (2, Priority::Interactive), (3, Priority::Batch), (4, Priority::Batch)]
+        {
+            let _ = open_class(&mut sched, &mut router, sid, class, prompt((1, 1), 2, 2));
+        }
+        let batch = sched.plan_tick(&mut router, Instant::now());
+        ack_all(&mut sched, &mut router, &batch);
+        for _ in 0..24 {
+            for sid in [1u64, 2, 3, 4] {
+                sched.enqueue_step(sid, step(&shape), Instant::now()).unwrap();
+            }
+        }
+        let mut last_seen: HashMap<u64, usize> = HashMap::new();
+        let mut max_gap: HashMap<u64, usize> = HashMap::new();
+        for tick in 0..32 {
+            let tick_batch = sched.plan_tick(&mut router, Instant::now());
+            for d in &tick_batch {
+                let sid = d.job.session();
+                if let Some(&prev) = last_seen.get(&sid) {
+                    let e = max_gap.entry(sid).or_insert(0);
+                    *e = (*e).max(tick - prev);
+                }
+                last_seen.insert(sid, tick);
+            }
+            ack_all(&mut sched, &mut router, &tick_batch);
+        }
+        for sid in [1u64, 2, 3, 4] {
+            assert!(last_seen.contains_key(&sid), "session {sid} starved entirely");
+            assert!(
+                *max_gap.get(&sid).unwrap_or(&0) <= 3,
+                "session {sid} starved: gap {:?}",
+                max_gap.get(&sid)
+            );
+        }
+    }
+
+    #[test]
+    fn admission_watermark_rejects_typed_counted_and_takes_no_pin() {
+        let mut router = Router::new(1);
+        let mut sched = Scheduler::new(
+            SchedConfig {
+                prefill_chunk: 8,
+                max_inflight_per_worker: 8,
+                admit_watermark: Some(2),
+                ..SchedConfig::default()
+            },
+            1,
+        );
+        let _a = open(&mut sched, &mut router, 1, prompt((1, 1), 2, 4));
+        let _b = open(&mut sched, &mut router, 2, prompt((1, 1), 2, 4));
+        assert_eq!(sched.runnable_sessions(), 2);
+        let (tx, _rx) = channel();
+        assert_eq!(
+            sched.admit_open(3, 0.6, ModelShape::single(2), tx.clone(), &mut router),
+            Err(ServeError::Overloaded { runnable: 2, watermark: 2 })
+        );
+        assert_eq!(sched.stats.admit_rejected, 1);
+        assert_eq!(router.n_sessions(), 2, "rejected open takes no pin");
+        assert_eq!(sched.n_sessions(), 2, "rejected open leaves no session");
+        // Drain the prefills: the load drops below the watermark and the
+        // same open is admitted.
+        let batch = sched.plan_tick(&mut router, Instant::now());
+        ack_all(&mut sched, &mut router, &batch);
+        assert_eq!(sched.runnable_sessions(), 0, "idle sessions add no load");
+        sched.admit_open(3, 0.6, ModelShape::single(2), tx, &mut router).unwrap();
+        assert_eq!(sched.stats.admit_rejected, 1, "admission succeeded this time");
     }
 }

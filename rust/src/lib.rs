@@ -36,6 +36,7 @@ pub mod baselines;
 pub mod model;
 pub mod runtime;
 pub mod coordinator;
+pub mod loadgen;
 pub mod figures;
 pub mod report;
 // Module inventory and layering: DESIGN.md §7. The `engine` module is the

@@ -1,0 +1,46 @@
+//! Trace-driven load harness (DESIGN.md §15): production-shaped traffic for
+//! the serving stack, plus the SLO report that scores it.
+//!
+//! Four pieces, one pipeline:
+//!
+//! * **[`trace`]** — seeded, wall-clock-free generation of a replayable
+//!   [`Trace`]: Zipfian tenant popularity, bursty Poisson arrivals,
+//!   log-normal prompt/decode lengths, mid-decode abandonment. Same seed →
+//!   byte-identical trace (property-tested).
+//! * **[`sim`]** — deterministic virtual-time replay against the pure
+//!   [`crate::coordinator::Scheduler`] state machine: TTFT and inter-token
+//!   gaps in ticks, bit-identical across machines — the half that lets CI
+//!   gate the fifo-vs-priority p99 TTFT ratio as a hard number.
+//! * **[`replay`]** — live replay against the real engine through
+//!   [`crate::coordinator::Client`]: wall-clock TTFT/ITL in microseconds,
+//!   per priority class, banked into bounded [`LogHistogram`]s.
+//! * **[`slo`]** — the report: p50/p95/p99 rows per class + derived ratios,
+//!   rendered as the `BENCH_load.json` document the trend gate consumes.
+//!
+//! Entry point: the `bitstopper loadgen` CLI subcommand (`main.rs`), which
+//! shares the drive idiom with `coordinator/drive.rs`. Lint rule L8 keeps
+//! `trace`/`sim` free of wall-clock reads and thread RNG — seeded
+//! [`crate::util::SplitMix64`] and virtual time only.
+
+pub mod replay;
+pub mod sim;
+pub mod slo;
+pub mod trace;
+
+pub use replay::{replay, ReplayConfig, ReplayReport};
+pub use sim::{policy_comparison, simulate, SimConfig, SimReport};
+pub use slo::{load_derived, load_rows, render_load_json};
+pub use trace::{Trace, TraceConfig, TraceEvent};
+
+use crate::util::LogHistogram;
+
+/// Per-class latency accumulators: time-to-first-token and inter-token
+/// gaps. Units are the producer's — microseconds from [`replay`], virtual
+/// ticks from [`sim`].
+#[derive(Debug, Clone, Default)]
+pub struct ClassLats {
+    /// Arrival → first decode completion.
+    pub ttft: LogHistogram,
+    /// Gap between consecutive decode completions.
+    pub itl: LogHistogram,
+}

@@ -1,0 +1,273 @@
+//! Live replay: play a [`Trace`] against the real engine through the typed
+//! [`Client`]/[`SessionHandle`] surface (DESIGN.md §15).
+//!
+//! Where `loadgen/sim.rs` measures the *policy* in deterministic virtual
+//! ticks, this module measures the *engine* in wall-clock microseconds: real
+//! quantized prompts, real BESF decode steps, real worker threads. Admission
+//! is paced on virtual time (event `at_tick` × [`ReplayConfig::tick`]), each
+//! session's whole decode stream is queued at its arrival — so every
+//! engine-reported unit latency is measured from the arrival instant — and
+//! the drain phase banks time-to-first-token (first step latency) and
+//! inter-token gaps (consecutive step latency deltas) into per-class
+//! [`LogHistogram`]s.
+//!
+//! Single-threaded by design, like `coordinator/drive.rs`: pacing sleeps and
+//! blocking waits happen on the caller's thread; concurrency comes from the
+//! engine's own workers. This file is the one loadgen module allowed to
+//! touch the wall clock (lint rule L8 scopes trace generation and the sim).
+
+use super::trace::{Trace, TraceEvent};
+use super::ClassLats;
+use crate::coordinator::{Client, Metrics, ModelPrompt, ModelStep, Priority, ServeError};
+use crate::workload::ModelDecodeTrace;
+use std::time::{Duration, Instant};
+
+/// Live-replay knobs.
+#[derive(Debug, Clone)]
+pub struct ReplayConfig {
+    /// Early-termination threshold passed to every session.
+    pub alpha: f64,
+    /// Wall duration of one virtual tick (admission pacing).
+    pub tick: Duration,
+    /// Per-head dimension of the synthesized prompts/steps.
+    pub dim: usize,
+    /// Per-wait timeout for the drain phase.
+    pub timeout: Duration,
+    /// Seed mixed into each session's synthetic workload.
+    pub seed: u64,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        Self {
+            alpha: 0.6,
+            tick: Duration::from_micros(200),
+            dim: 16,
+            timeout: Duration::from_secs(30),
+            seed: 0x10AD,
+        }
+    }
+}
+
+/// What one live replay measured.
+#[derive(Debug, Default)]
+pub struct ReplayReport {
+    /// Sessions that ran their full effective decode and closed cleanly.
+    pub completed: usize,
+    /// Opens rejected by admission control ([`ServeError::Overloaded`]).
+    pub rejected: usize,
+    /// Sessions lost to any other error (evictions, failed opens).
+    pub errors: usize,
+    /// Completed sessions that abandoned mid-decode per the trace.
+    pub abandoned: usize,
+    /// Interactive TTFT / inter-token latency in microseconds.
+    pub interactive: ClassLats,
+    /// Batch TTFT / inter-token latency in microseconds.
+    pub batch: ClassLats,
+    /// Wall time of the whole replay (pacing included).
+    pub elapsed: Duration,
+    /// Engine metrics snapshot at the end of the replay.
+    pub metrics: Metrics,
+}
+
+fn synth_for(ev: &TraceEvent, cfg: &ReplayConfig) -> ModelDecodeTrace {
+    ModelDecodeTrace::synth(
+        1,
+        2,
+        ev.prompt_len,
+        ev.effective_steps().max(1),
+        cfg.dim,
+        cfg.seed ^ ev.session.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    )
+}
+
+/// Replay `trace` against `client`. Per-session failures are counted, never
+/// fatal — an overloaded or evicting engine is exactly what the harness is
+/// for; only a dead engine ([`ServeError::Shutdown`]) aborts.
+pub fn replay(
+    client: &Client,
+    trace: &Trace,
+    cfg: &ReplayConfig,
+) -> Result<ReplayReport, ServeError> {
+    let mut report = ReplayReport::default();
+    let t0 = Instant::now();
+    // (event index, handle, synthesized workload) of every session whose
+    // whole stream was queued; latencies drain after admission ends.
+    let mut live: Vec<(usize, crate::coordinator::SessionHandle, ModelDecodeTrace)> = Vec::new();
+
+    for (i, ev) in trace.events.iter().enumerate() {
+        let due = cfg.tick.mul_f64(ev.at_tick as f64);
+        let elapsed = t0.elapsed();
+        if elapsed < due {
+            std::thread::sleep(due - elapsed);
+        }
+        let mt = synth_for(ev, cfg);
+        let mut h = match client.open_model_session_with_class(cfg.alpha, mt.shape(), ev.class) {
+            Ok(h) => h,
+            Err(ServeError::Shutdown) => return Err(ServeError::Shutdown),
+            Err(_) => {
+                report.errors += 1;
+                continue;
+            }
+        };
+        // Queue the session's entire life at arrival: prompt, every
+        // effective step, close. The scheduler paces actual dispatch, so
+        // each step's engine-reported latency is arrival→completion.
+        let (k, v) = mt.prompt();
+        let queued = (|| -> Result<(), ServeError> {
+            h.prefill(ModelPrompt { shape: mt.shape(), prompt_len: mt.prompt_len, k, v })?;
+            for s in 0..mt.n_steps() {
+                let (qs, ks, vs) = mt.step_rows(s);
+                h.step(ModelStep::token(ks, vs, qs))?;
+            }
+            h.close()
+        })();
+        match queued {
+            Ok(()) => live.push((i, h, mt)),
+            Err(ServeError::Shutdown) => return Err(ServeError::Shutdown),
+            Err(ServeError::Overloaded { .. }) => report.rejected += 1,
+            Err(_) => report.errors += 1,
+        }
+    }
+
+    for (i, mut h, mt) in live {
+        let ev = &trace.events[i];
+        match h.wait_prefilled(cfg.timeout) {
+            Ok(_) => {}
+            Err(ServeError::Overloaded { .. }) => {
+                report.rejected += 1;
+                continue;
+            }
+            Err(ServeError::Shutdown) => return Err(ServeError::Shutdown),
+            Err(_) => {
+                report.errors += 1;
+                continue;
+            }
+        }
+        let lats = match ev.class {
+            Priority::Interactive => &mut report.interactive,
+            Priority::Batch => &mut report.batch,
+        };
+        let mut prev: Option<Duration> = None;
+        let mut lost = false;
+        for _ in 0..mt.n_steps() {
+            match h.wait_step(cfg.timeout) {
+                Ok(r) => {
+                    match prev {
+                        // All steps were submitted back-to-back at arrival,
+                        // so the delta of two submission-to-completion
+                        // latencies is the completion gap (clamped: a tiny
+                        // negative delta just means the submissions were
+                        // not literally simultaneous).
+                        None => lats.ttft.record(r.latency.as_secs_f64() * 1e6),
+                        Some(p) => lats.itl.record(
+                            r.latency.saturating_sub(p).as_secs_f64() * 1e6,
+                        ),
+                    }
+                    prev = Some(r.latency);
+                }
+                Err(ServeError::Shutdown) => return Err(ServeError::Shutdown),
+                Err(_) => {
+                    report.errors += 1;
+                    lost = true;
+                    break;
+                }
+            }
+        }
+        if lost {
+            continue;
+        }
+        match h.wait_closed(cfg.timeout) {
+            Ok(()) => {
+                report.completed += 1;
+                if ev.abandon_after.is_some() {
+                    report.abandoned += 1;
+                }
+            }
+            Err(ServeError::Shutdown) => return Err(ServeError::Shutdown),
+            Err(_) => report.errors += 1,
+        }
+    }
+
+    report.elapsed = t0.elapsed();
+    report.metrics = client.metrics();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::trace::TraceConfig;
+    use super::*;
+    use crate::coordinator::{EngineBuilder, SchedPolicy};
+
+    fn small_trace() -> Trace {
+        Trace::generate(&TraceConfig {
+            seed: 0x5EED01,
+            requests: 8,
+            mean_interarrival_ticks: 1.0,
+            prompt_median: 6.0,
+            prompt_cap: 12,
+            steps_median: 3.0,
+            steps_cap: 6,
+            abandon_prob: 0.3,
+            ..TraceConfig::default()
+        })
+    }
+
+    #[test]
+    fn live_replay_completes_a_small_trace_with_per_class_latencies() {
+        let trace = small_trace();
+        let client = EngineBuilder::new()
+            .workers(2)
+            .sched_policy(SchedPolicy::Priority { batch_reserve_tokens: 4 })
+            .build()
+            .expect("build");
+        let cfg = ReplayConfig { tick: Duration::from_micros(50), ..ReplayConfig::default() };
+        let r = replay(&client, &trace, &cfg).expect("replay");
+        assert_eq!(r.completed, trace.events.len(), "errors: {}", r.errors);
+        assert_eq!(r.rejected + r.errors, 0);
+        let steps_expected: usize =
+            trace.events.iter().map(|e| e.effective_steps().max(1)).sum();
+        let recorded = (r.interactive.ttft.count()
+            + r.interactive.itl.count()
+            + r.batch.ttft.count()
+            + r.batch.itl.count()) as usize;
+        assert_eq!(recorded, steps_expected, "every step lands in exactly one histogram");
+        assert_eq!(
+            r.abandoned,
+            trace.events.iter().filter(|e| e.abandon_after.is_some()).count()
+        );
+        assert_eq!(r.metrics.errors, 0);
+        assert_eq!(r.metrics.session_pins, 0, "replay closes every session");
+        client.shutdown();
+    }
+
+    #[test]
+    fn watermark_rejections_surface_typed_and_counted() {
+        // Watermark 1 with several near-simultaneous arrivals: at least one
+        // open must be refused, and refusals are typed, not errors.
+        let trace = Trace::generate(&TraceConfig {
+            seed: 0x0B5E55ED,
+            requests: 6,
+            mean_interarrival_ticks: 0.1,
+            prompt_median: 16.0,
+            prompt_cap: 24,
+            steps_median: 6.0,
+            steps_cap: 10,
+            abandon_prob: 0.0,
+            ..TraceConfig::default()
+        });
+        let client = EngineBuilder::new()
+            .workers(1)
+            .admit_watermark(1)
+            .build()
+            .expect("build");
+        let cfg = ReplayConfig { tick: Duration::from_micros(10), ..ReplayConfig::default() };
+        let r = replay(&client, &trace, &cfg).expect("replay");
+        assert!(r.rejected > 0, "watermark 1 under a burst must reject");
+        assert_eq!(r.errors, 0, "rejections must be Overloaded, not generic errors");
+        assert_eq!(r.completed + r.rejected, trace.events.len());
+        assert_eq!(r.metrics.admit_rejected, r.rejected as u64);
+        client.shutdown();
+    }
+}

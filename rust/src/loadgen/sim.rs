@@ -1,0 +1,314 @@
+//! Deterministic virtual-time replay of a [`Trace`] against the pure
+//! scheduler state machine (DESIGN.md §15).
+//!
+//! The live replay (`loadgen/replay.rs`) measures wall-clock latency on the
+//! real engine; this module answers a different question — *what does the
+//! scheduling policy itself do to the workload?* — with zero machine noise.
+//! It drives [`Scheduler::plan_tick`] tick by tick on a synthetic timeline:
+//! every dispatched unit completes exactly one tick later (a uniform-service
+//! executor model), so TTFT and inter-token gaps come out in **ticks** and
+//! are bit-identical across runs and machines. That determinism is what lets
+//! CI gate the fifo-vs-priority p99 TTFT ratio as a hard number instead of a
+//! noisy wall-clock band.
+//!
+//! No wall clock: the caller supplies one base [`Instant`] that stamps every
+//! scheduler call (the scheduler only ever subtracts these, so a constant is
+//! valid), keeping this file L8-clean alongside the trace generator.
+
+use super::trace::Trace;
+use super::ClassLats;
+use crate::coordinator::{
+    Feedback, ModelJob, ModelPrompt, ModelStep, Priority, Router, SchedConfig, SchedStats,
+    Scheduler, ServeError,
+};
+use crate::engine::ModelShape;
+use std::collections::HashMap;
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+/// Virtual-replay knobs.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Simulated executor workers.
+    pub workers: usize,
+    /// Scheduler under test (policy, budgets, watermark).
+    pub sched: SchedConfig,
+    /// Hard tick horizon — a safety net, not a tuning knob; replay ends
+    /// when the trace drains.
+    pub max_ticks: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self { workers: 2, sched: SchedConfig::default(), max_ticks: 1_000_000 }
+    }
+}
+
+/// What one policy did to one trace, in virtual ticks.
+#[derive(Debug, Default)]
+pub struct SimReport {
+    /// Virtual ticks until the trace drained.
+    pub ticks: u64,
+    /// Sessions admitted (trace events minus rejections).
+    pub admitted: usize,
+    /// Opens rejected by the admission watermark.
+    pub rejected: usize,
+    /// Sessions that ran to their close.
+    pub completed: usize,
+    /// Admitted sessions that abandon mid-decode (close early by trace).
+    pub abandoned: usize,
+    /// TTFT / inter-token gaps of interactive sessions, in ticks.
+    pub interactive: ClassLats,
+    /// TTFT / inter-token gaps of batch sessions, in ticks.
+    pub batch: ClassLats,
+    /// Fraction of elapsed ticks that had runnable work.
+    pub occupancy: f64,
+    /// Final scheduler counters.
+    pub stats: SchedStats,
+}
+
+struct SimSess {
+    class: Priority,
+    arrival: u64,
+    last_step_done: Option<u64>,
+}
+
+/// Replay `trace` under `cfg`. Pure: same inputs → same report, field for
+/// field. `base_now` stamps every scheduler call (pass any instant; the
+/// scheduler never compares it to the wall clock).
+pub fn simulate(trace: &Trace, cfg: &SimConfig, base_now: Instant) -> SimReport {
+    let shape = ModelShape::single(1);
+    let mut sched = Scheduler::new(cfg.sched, cfg.workers);
+    let mut router = Router::new(cfg.workers);
+    // One shared event stream; the sim reads outcomes straight off the
+    // dispatch list, so delivered events are drained implicitly on drop.
+    let (tx, _rx) = channel();
+
+    let mut report = SimReport::default();
+    let mut state: HashMap<u64, SimSess> = HashMap::new();
+    // Units dispatched this tick complete at the start of the next one.
+    let mut pending: Vec<(usize, u64)> = Vec::new();
+    let mut ei = 0usize;
+    let mut elapsed = 0u64;
+
+    for t in 0..cfg.max_ticks {
+        elapsed = t;
+        for (worker, session) in pending.drain(..) {
+            sched.on_feedback(
+                Feedback::Done { worker, session, kept: 0, context: 0 },
+                &mut router,
+            );
+            router.note_complete(worker, 1);
+        }
+        while ei < trace.events.len() && trace.events[ei].at_tick <= t {
+            let ev = &trace.events[ei];
+            ei += 1;
+            match sched.admit_open_class(
+                ev.session,
+                0.6,
+                shape,
+                ev.class,
+                tx.clone(),
+                &mut router,
+            ) {
+                Err(ServeError::Overloaded { .. }) => {
+                    report.rejected += 1;
+                    continue;
+                }
+                Err(e) => unreachable!("sim admission failed non-overload: {e}"),
+                Ok(()) => {}
+            }
+            report.admitted += 1;
+            let steps = ev.effective_steps().max(1);
+            if ev.abandon_after.is_some() {
+                report.abandoned += 1;
+            }
+            let prompt = ModelPrompt::single(
+                1,
+                ev.prompt_len,
+                vec![0.0; ev.prompt_len],
+                vec![0.0; ev.prompt_len],
+            );
+            sched.enqueue_prefill(ev.session, prompt, base_now).expect("sim prefill");
+            for _ in 0..steps {
+                sched
+                    .enqueue_step(ev.session, ModelStep::decode_only(vec![vec![0.0]]), base_now)
+                    .expect("sim step");
+            }
+            sched.enqueue_close(ev.session, base_now).expect("sim close");
+            state.insert(
+                ev.session,
+                SimSess { class: ev.class, arrival: t, last_step_done: None },
+            );
+        }
+        for d in sched.plan_tick(&mut router, base_now) {
+            router.note_dispatch(d.worker, 1);
+            match &d.job {
+                ModelJob::Step { session, .. } => {
+                    let done_at = t + 1;
+                    let s = state.get_mut(session).expect("sim step for unknown session");
+                    let lats = match s.class {
+                        Priority::Interactive => &mut report.interactive,
+                        Priority::Batch => &mut report.batch,
+                    };
+                    match s.last_step_done {
+                        None => lats.ttft.record((done_at - s.arrival) as f64),
+                        Some(prev) => lats.itl.record((done_at - prev) as f64),
+                    }
+                    s.last_step_done = Some(done_at);
+                }
+                ModelJob::Close { session } => {
+                    report.completed += 1;
+                    state.remove(session);
+                }
+                _ => {}
+            }
+            pending.push((d.worker, d.job.session()));
+        }
+        if ei == trace.events.len() && pending.is_empty() && !sched.busy() {
+            break;
+        }
+    }
+    report.ticks = elapsed;
+    report.stats = sched.stats;
+    report.occupancy = if elapsed == 0 {
+        0.0
+    } else {
+        sched.stats.ticks as f64 / elapsed as f64
+    };
+    report
+}
+
+/// Run the same trace under a FIFO (fair) scheduler and a priority+admission
+/// scheduler and return `(fifo, priority, interactive_p99_ttft_speedup)`.
+/// The speedup — fifo p99 interactive TTFT over priority p99 interactive
+/// TTFT — is the derived ratio `BENCH_load.json` carries and CI gates: above
+/// 1.0 means the priority policy bought interactive tail latency.
+pub fn policy_comparison(
+    trace: &Trace,
+    fifo: &SimConfig,
+    priority: &SimConfig,
+    base_now: Instant,
+) -> (SimReport, SimReport, f64) {
+    let f = simulate(trace, fifo, base_now);
+    let p = simulate(trace, priority, base_now);
+    let fp99 = f.interactive.ttft.percentile(99.0);
+    let pp99 = p.interactive.ttft.percentile(99.0);
+    let speedup = if pp99 > 0.0 { fp99 / pp99 } else { 0.0 };
+    (f, p, speedup)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::trace::TraceConfig;
+    use super::*;
+    use crate::coordinator::SchedPolicy;
+
+    fn overload_trace() -> Trace {
+        // Arrivals far faster than a 1-worker, tight-budget engine drains:
+        // sustained queueing, which is where policy choices show up.
+        Trace::generate(&TraceConfig {
+            seed: 0x51A0,
+            requests: 48,
+            interactive_frac: 0.3,
+            mean_interarrival_ticks: 1.0,
+            prompt_median: 8.0,
+            prompt_cap: 32,
+            steps_median: 6.0,
+            steps_cap: 16,
+            ..TraceConfig::default()
+        })
+    }
+
+    fn tight_sched() -> SchedConfig {
+        SchedConfig {
+            prefill_chunk: 8,
+            prefill_tokens_per_tick: 16,
+            decode_tokens_per_tick: 4,
+            max_inflight_per_worker: 2,
+            ..SchedConfig::default()
+        }
+    }
+
+    #[test]
+    fn same_trace_same_config_same_report() {
+        let trace = overload_trace();
+        let cfg = SimConfig { workers: 2, sched: tight_sched(), ..SimConfig::default() };
+        let now = Instant::now();
+        let a = simulate(&trace, &cfg, now);
+        let b = simulate(&trace, &cfg, now);
+        assert_eq!(a.ticks, b.ticks);
+        assert_eq!(
+            (a.admitted, a.rejected, a.completed, a.abandoned),
+            (b.admitted, b.rejected, b.completed, b.abandoned)
+        );
+        assert_eq!(a.stats.steps, b.stats.steps);
+        assert_eq!(a.stats.budget_deferred, b.stats.budget_deferred);
+        assert_eq!(a.interactive.ttft.count(), b.interactive.ttft.count());
+        assert_eq!(a.interactive.ttft.percentile(99.0), b.interactive.ttft.percentile(99.0));
+        assert_eq!(a.batch.itl.percentile(99.0), b.batch.itl.percentile(99.0));
+        // Different seed → different workload → (overwhelmingly) different
+        // step totals; determinism must come from the seed, not the code.
+        let other = Trace::generate(&TraceConfig {
+            seed: 0x51A1,
+            requests: 48,
+            interactive_frac: 0.3,
+            mean_interarrival_ticks: 1.0,
+            prompt_median: 8.0,
+            prompt_cap: 32,
+            steps_median: 6.0,
+            steps_cap: 16,
+            ..TraceConfig::default()
+        });
+        let c = simulate(&other, &cfg, now);
+        assert_ne!(a.stats.steps, c.stats.steps);
+    }
+
+    #[test]
+    fn every_admitted_session_completes_and_occupancy_is_sane() {
+        let trace = overload_trace();
+        let cfg = SimConfig { workers: 2, sched: tight_sched(), ..SimConfig::default() };
+        let r = simulate(&trace, &cfg, Instant::now());
+        assert_eq!(r.admitted, trace.events.len(), "no watermark → no rejections");
+        assert_eq!(r.rejected, 0);
+        assert_eq!(r.completed, r.admitted, "trace must drain fully");
+        assert!(r.occupancy > 0.0 && r.occupancy <= 1.0, "occupancy {}", r.occupancy);
+        let total = r.interactive.ttft.count() + r.batch.ttft.count();
+        assert_eq!(total, r.admitted as u64, "every session got a first token");
+    }
+
+    #[test]
+    fn priority_policy_beats_fifo_on_interactive_p99_ttft_under_overload() {
+        let trace = overload_trace();
+        let fifo = SimConfig { workers: 1, sched: tight_sched(), ..SimConfig::default() };
+        let mut prio_sched = tight_sched();
+        prio_sched.policy = SchedPolicy::Priority { batch_reserve_tokens: 1 };
+        let prio = SimConfig { workers: 1, sched: prio_sched, ..SimConfig::default() };
+        let (f, p, speedup) = policy_comparison(&trace, &fifo, &prio, Instant::now());
+        assert!(f.interactive.ttft.count() > 0 && p.interactive.ttft.count() > 0);
+        assert!(
+            speedup > 1.0,
+            "priority must strictly beat fifo on interactive p99 TTFT: fifo {} vs prio {}",
+            f.interactive.ttft.percentile(99.0),
+            p.interactive.ttft.percentile(99.0)
+        );
+        // The reserve keeps batch alive: it still finishes its sessions.
+        assert_eq!(p.completed, p.admitted);
+    }
+
+    #[test]
+    fn watermark_rejections_are_counted_and_deterministic() {
+        let trace = overload_trace();
+        let mut sched = tight_sched();
+        sched.admit_watermark = Some(4);
+        let cfg = SimConfig { workers: 1, sched, ..SimConfig::default() };
+        let now = Instant::now();
+        let a = simulate(&trace, &cfg, now);
+        assert!(a.rejected > 0, "overload past watermark 4 must reject");
+        assert_eq!(a.admitted + a.rejected, trace.events.len());
+        assert_eq!(a.stats.admit_rejected, a.rejected as u64);
+        assert_eq!(a.completed, a.admitted);
+        let b = simulate(&trace, &cfg, now);
+        assert_eq!(a.rejected, b.rejected);
+    }
+}

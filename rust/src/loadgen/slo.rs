@@ -1,0 +1,138 @@
+//! SLO report assembly: turn replay measurements into `BENCH_load.json`
+//! rows + derived ratios (DESIGN.md §15).
+//!
+//! Rows follow the `BENCH_{serve,hotpath}.json` schema — `name/mean/p50/
+//! p95/min/max/n` — extended with `p99`, the number SLOs are written
+//! against and the one `scripts/check_serve_trend.py` gates for load rows
+//! (>10% p99 regression fails). Derived entries carry the policy-comparison
+//! ratio from the deterministic sim (`load_interactive_p99_ttft_speedup`,
+//! floor-gated in CI) plus occupancy and deferral/eviction/demotion rates.
+//!
+//! This module only *renders* the JSON string; writing it to disk is the
+//! CLI's job (`main.rs` is on the file-I/O allowlist, lint rule L7 — this
+//! file deliberately is not).
+
+use super::replay::ReplayReport;
+use super::sim::SimReport;
+use crate::util::{LogHistogram, Summary};
+
+/// One row per class × metric from a live replay, in microseconds.
+pub fn load_rows(replay: &ReplayReport) -> Vec<(String, Summary)> {
+    let row = |name: &str, h: &LogHistogram| (name.to_string(), h.summary());
+    vec![
+        row("load_ttft_interactive_us", &replay.interactive.ttft),
+        row("load_ttft_batch_us", &replay.batch.ttft),
+        row("load_itl_interactive_us", &replay.interactive.itl),
+        row("load_itl_batch_us", &replay.batch.itl),
+    ]
+}
+
+/// Derived ratios: the CI-gated policy speedup (from the deterministic sim,
+/// so it is machine-independent) plus occupancy and rate diagnostics.
+pub fn load_derived(
+    fifo: &SimReport,
+    priority: &SimReport,
+    speedup: f64,
+    replay: &ReplayReport,
+) -> Vec<(String, f64)> {
+    let total = (priority.admitted + priority.rejected).max(1) as f64;
+    let dispatched = (priority.stats.steps + priority.stats.prefill_chunks).max(1) as f64;
+    let served = replay.completed.max(1) as f64;
+    vec![
+        ("load_interactive_p99_ttft_speedup".to_string(), speedup),
+        ("load_fifo_tick_occupancy".to_string(), fifo.occupancy),
+        ("load_priority_tick_occupancy".to_string(), priority.occupancy),
+        ("load_admit_reject_rate".to_string(), priority.rejected as f64 / total),
+        (
+            "load_budget_deferral_rate".to_string(),
+            priority.stats.budget_deferred as f64 / dispatched,
+        ),
+        ("load_abandon_rate".to_string(), priority.abandoned as f64 / total),
+        ("load_eviction_rate".to_string(), replay.metrics.evictions as f64 / served),
+        ("load_demotion_rate".to_string(), replay.metrics.demotions as f64 / served),
+    ]
+}
+
+/// Render the `BENCH_load.json` document (no trailing-comma JSON, stable
+/// key order — the same hand-formatting contract as `benches/hotpath.rs`;
+/// every value is a finite f64 or a count).
+pub fn render_load_json(rows: &[(String, Summary)], derived: &[(String, f64)]) -> String {
+    let mut out =
+        String::from("{\n  \"bench\": \"load\",\n  \"unit\": \"us\",\n  \"rows\": [\n");
+    for (i, (name, s)) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"mean\": {:.6}, \"p50\": {:.6}, \"p95\": {:.6}, \"p99\": {:.6}, \"min\": {:.6}, \"max\": {:.6}, \"n\": {}}}{}\n",
+            name,
+            s.mean,
+            s.p50,
+            s.p95,
+            s.p99,
+            s.min,
+            s.max,
+            s.n,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n  \"derived\": {\n");
+    for (i, (name, v)) in derived.iter().enumerate() {
+        out.push_str(&format!(
+            "    \"{}\": {:.4}{}\n",
+            name,
+            v,
+            if i + 1 < derived.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  }\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_rows() -> Vec<(String, Summary)> {
+        let mut h = LogHistogram::new();
+        for v in [120.0, 340.0, 980.0, 2100.0, 12000.0] {
+            h.record(v);
+        }
+        let mut r = ReplayReport::default();
+        r.interactive.ttft = h.clone();
+        r.batch.ttft = h.clone();
+        r.interactive.itl = h.clone();
+        r.batch.itl = h;
+        r.completed = 5;
+        load_rows(&r)
+    }
+
+    #[test]
+    fn rows_carry_p99_and_render_parses_shape() {
+        let rows = sample_rows();
+        assert_eq!(rows.len(), 4);
+        for (name, s) in &rows {
+            assert!(name.starts_with("load_"), "row name {name}");
+            assert_eq!(s.n, 5);
+            assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        }
+        let json = render_load_json(&rows, &[("load_interactive_p99_ttft_speedup".into(), 1.5)]);
+        // Structural sanity without a JSON dependency: balanced braces, all
+        // row names and the gated keys present, no trailing commas.
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert!(json.contains("\"bench\": \"load\""));
+        assert!(json.contains("\"p99\":"));
+        assert!(json.contains("load_ttft_interactive_us"));
+        assert!(json.contains("\"load_interactive_p99_ttft_speedup\": 1.5000"));
+        assert!(!json.contains(",\n  ]") && !json.contains(",\n  }"));
+    }
+
+    #[test]
+    fn empty_histograms_render_finite_zeros() {
+        let r = ReplayReport::default();
+        let rows = load_rows(&r);
+        for (_, s) in &rows {
+            assert_eq!(s.n, 0);
+            assert!(s.mean.is_finite() && s.p99.is_finite(), "empty summary must stay finite");
+        }
+        let json = render_load_json(&rows, &[]);
+        assert!(!json.contains("NaN") && !json.contains("inf"), "json must stay parseable");
+    }
+}

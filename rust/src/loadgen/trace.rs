@@ -1,0 +1,338 @@
+//! Seeded, wall-clock-free workload trace generation (DESIGN.md §15).
+//!
+//! A [`Trace`] is the replayable unit of the load harness: a list of session
+//! requests on a **virtual tick** timeline, drawn from the standard
+//! production-shaped distributions — Zipfian tenant popularity, bursty
+//! Poisson arrivals (a two-state modulated process), long-tail (log-normal)
+//! prompt and decode lengths, and Bernoulli mid-decode abandonment. All
+//! randomness comes from one [`SplitMix64`] stream seeded by
+//! [`TraceConfig::seed`], so equal configs yield byte-identical traces
+//! (property-tested below); nothing here may read the wall clock or a
+//! thread-local RNG (lint rule L8).
+
+use crate::coordinator::Priority;
+use crate::util::SplitMix64;
+
+/// Knobs of the trace generator. Every field is part of the deterministic
+/// input: two equal configs produce identical [`Trace`]s.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceConfig {
+    /// PRNG seed — the replay key.
+    pub seed: u64,
+    /// Session requests to generate.
+    pub requests: usize,
+    /// Tenant population for the Zipfian popularity draw.
+    pub tenants: usize,
+    /// Zipf exponent (1.0–1.5 covers most serving-trace fits; larger means
+    /// a heavier head).
+    pub zipf_s: f64,
+    /// Probability a request is [`Priority::Interactive`] (the rest are
+    /// batch).
+    pub interactive_frac: f64,
+    /// Mean inter-arrival gap in ticks during calm periods.
+    pub mean_interarrival_ticks: f64,
+    /// Per-arrival probability (while calm) of entering a burst.
+    pub burst_prob: f64,
+    /// Arrival-rate multiplier inside a burst.
+    pub burst_factor: f64,
+    /// Mean burst duration in ticks (exponential).
+    pub burst_mean_ticks: f64,
+    /// Median prompt length in rows (log-normal location).
+    pub prompt_median: f64,
+    /// Log-normal sigma of the prompt length (larger → heavier tail).
+    pub prompt_sigma: f64,
+    /// Hard cap on generated prompt lengths.
+    pub prompt_cap: usize,
+    /// Median decode length in steps (log-normal location).
+    pub steps_median: f64,
+    /// Log-normal sigma of the decode length.
+    pub steps_sigma: f64,
+    /// Hard cap on generated decode lengths.
+    pub steps_cap: usize,
+    /// Probability a session abandons mid-decode (client walks away after a
+    /// uniform fraction of its steps).
+    pub abandon_prob: f64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0x10AD,
+            requests: 64,
+            tenants: 16,
+            zipf_s: 1.1,
+            interactive_frac: 0.5,
+            mean_interarrival_ticks: 4.0,
+            burst_prob: 0.1,
+            burst_factor: 8.0,
+            burst_mean_ticks: 32.0,
+            prompt_median: 24.0,
+            prompt_sigma: 0.8,
+            prompt_cap: 256,
+            steps_median: 8.0,
+            steps_sigma: 0.6,
+            steps_cap: 64,
+            abandon_prob: 0.1,
+        }
+    }
+}
+
+/// One session request on the virtual timeline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Arrival tick.
+    pub at_tick: u64,
+    /// Session id (unique within the trace, 1-based).
+    pub session: u64,
+    /// Zipf-drawn tenant id (0 is the most popular).
+    pub tenant: u32,
+    /// Scheduling class.
+    pub class: Priority,
+    /// Prompt length in rows.
+    pub prompt_len: usize,
+    /// Requested decode steps.
+    pub steps: usize,
+    /// `Some(k)`: the client abandons after `k < steps` decode steps.
+    pub abandon_after: Option<usize>,
+}
+
+impl TraceEvent {
+    /// Decode steps the client will actually wait for.
+    pub fn effective_steps(&self) -> usize {
+        self.abandon_after.unwrap_or(self.steps)
+    }
+}
+
+/// A replayable workload trace: events in nondecreasing arrival order.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+/// Draw a log-normal length: `median * exp(sigma * N(0,1))`, rounded and
+/// clamped into `[1, cap]`.
+fn lognormal_len(rng: &mut SplitMix64, median: f64, sigma: f64, cap: usize) -> usize {
+    let x = median * (sigma * rng.normal()).exp();
+    (x.round() as usize).clamp(1, cap.max(1))
+}
+
+impl Trace {
+    /// Generate a trace. Same config (seed included) → identical trace.
+    pub fn generate(cfg: &TraceConfig) -> Trace {
+        assert!(cfg.requests >= 1, "trace needs at least one request");
+        assert!(cfg.tenants >= 1, "trace needs at least one tenant");
+        assert!(cfg.mean_interarrival_ticks > 0.0);
+        let mut rng = SplitMix64::new(cfg.seed);
+        // Zipf inverse-CDF table: cum[k] = P(tenant <= k), weights 1/(k+1)^s.
+        let mut cum: Vec<f64> = Vec::with_capacity(cfg.tenants);
+        let mut total = 0.0;
+        for k in 0..cfg.tenants {
+            total += 1.0 / ((k + 1) as f64).powf(cfg.zipf_s);
+            cum.push(total);
+        }
+        for c in cum.iter_mut() {
+            *c /= total;
+        }
+
+        let mut events = Vec::with_capacity(cfg.requests);
+        let mut t = 0.0f64;
+        let mut burst_until = 0.0f64;
+        for i in 0..cfg.requests {
+            // Two-state modulated Poisson process: calm arrivals run at rate
+            // 1/mean; each calm arrival may open a burst window during which
+            // the rate is multiplied by burst_factor.
+            if t >= burst_until && rng.bernoulli(cfg.burst_prob) {
+                burst_until = t + rng.exponential(1.0 / cfg.burst_mean_ticks.max(1e-9));
+            }
+            let rate = if t < burst_until {
+                cfg.burst_factor.max(1.0) / cfg.mean_interarrival_ticks
+            } else {
+                1.0 / cfg.mean_interarrival_ticks
+            };
+            t += rng.exponential(rate);
+
+            let u = rng.next_f64();
+            let tenant = cum.partition_point(|&c| c < u).min(cfg.tenants - 1) as u32;
+            let class = if rng.bernoulli(cfg.interactive_frac) {
+                Priority::Interactive
+            } else {
+                Priority::Batch
+            };
+            let prompt_len =
+                lognormal_len(&mut rng, cfg.prompt_median, cfg.prompt_sigma, cfg.prompt_cap);
+            let steps = lognormal_len(&mut rng, cfg.steps_median, cfg.steps_sigma, cfg.steps_cap);
+            let abandon_after = (steps >= 2 && rng.bernoulli(cfg.abandon_prob))
+                .then(|| 1 + rng.below((steps - 1) as u64) as usize);
+            events.push(TraceEvent {
+                at_tick: t.floor() as u64,
+                session: i as u64 + 1,
+                tenant,
+                class,
+                prompt_len,
+                steps,
+                abandon_after,
+            });
+        }
+        Trace { events }
+    }
+
+    /// Serialize to the line-oriented replay format (one event per line).
+    pub fn serialize(&self) -> String {
+        let mut out = String::from("bitstopper-trace v1\n");
+        for e in &self.events {
+            let class = match e.class {
+                Priority::Interactive => 'i',
+                Priority::Batch => 'b',
+            };
+            let abandon = match e.abandon_after {
+                Some(k) => k.to_string(),
+                None => "-".to_string(),
+            };
+            out.push_str(&format!(
+                "{} {} {} {} {} {} {}\n",
+                e.at_tick, e.session, e.tenant, class, e.prompt_len, e.steps, abandon
+            ));
+        }
+        out
+    }
+
+    /// Parse the [`Trace::serialize`] format back. Round-trips exactly.
+    pub fn parse(text: &str) -> Result<Trace, String> {
+        let mut lines = text.lines();
+        match lines.next() {
+            Some("bitstopper-trace v1") => {}
+            other => return Err(format!("bad trace header: {other:?}")),
+        }
+        let mut events = Vec::new();
+        for (i, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split_whitespace().collect();
+            if f.len() != 7 {
+                return Err(format!("trace line {}: expected 7 fields, got {}", i + 2, f.len()));
+            }
+            let num = |s: &str, what: &str| -> Result<u64, String> {
+                s.parse::<u64>().map_err(|e| format!("trace line {}: bad {what}: {e}", i + 2))
+            };
+            let class = match f[3] {
+                "i" => Priority::Interactive,
+                "b" => Priority::Batch,
+                other => return Err(format!("trace line {}: bad class {other:?}", i + 2)),
+            };
+            let steps = num(f[5], "steps")? as usize;
+            let abandon_after = if f[6] == "-" {
+                None
+            } else {
+                let k = num(f[6], "abandon")? as usize;
+                if k == 0 || k >= steps {
+                    return Err(format!("trace line {}: abandon {k} not in [1, steps)", i + 2));
+                }
+                Some(k)
+            };
+            events.push(TraceEvent {
+                at_tick: num(f[0], "tick")?,
+                session: num(f[1], "session")?,
+                tenant: num(f[2], "tenant")? as u32,
+                class,
+                prompt_len: num(f[4], "prompt")? as usize,
+                steps,
+                abandon_after,
+            });
+        }
+        Ok(Trace { events })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_trace_different_seed_diverges() {
+        let cfg = TraceConfig { requests: 200, ..TraceConfig::default() };
+        let a = Trace::generate(&cfg);
+        let b = Trace::generate(&cfg);
+        assert_eq!(a, b, "equal configs must generate identical traces");
+        let c = Trace::generate(&TraceConfig { seed: cfg.seed + 1, ..cfg });
+        assert_ne!(a, c, "a different seed must change the trace");
+    }
+
+    #[test]
+    fn serialize_parse_round_trips() {
+        let trace = Trace::generate(&TraceConfig { requests: 100, ..TraceConfig::default() });
+        let text = trace.serialize();
+        let back = Trace::parse(&text).expect("parse");
+        assert_eq!(trace, back);
+        // Tampered header and truncated lines are rejected typed.
+        assert!(Trace::parse("nope\n").is_err());
+        assert!(Trace::parse("bitstopper-trace v1\n1 2 3\n").is_err());
+    }
+
+    #[test]
+    fn arrivals_are_monotone_and_rate_is_plausible() {
+        let cfg = TraceConfig { requests: 500, ..TraceConfig::default() };
+        let trace = Trace::generate(&cfg);
+        assert_eq!(trace.events.len(), 500);
+        let ticks: Vec<u64> = trace.events.iter().map(|e| e.at_tick).collect();
+        assert!(ticks.windows(2).all(|w| w[0] <= w[1]), "arrivals must be nondecreasing");
+        // Bursts only compress the timeline, so the mean gap must land at or
+        // below the calm mean (and well above zero).
+        let span = *ticks.last().unwrap() as f64;
+        let mean_gap = span / 500.0;
+        assert!(
+            mean_gap > 0.2 && mean_gap <= cfg.mean_interarrival_ticks * 1.5,
+            "mean gap {mean_gap} out of band"
+        );
+    }
+
+    #[test]
+    fn zipf_head_dominates_tail() {
+        let cfg = TraceConfig { requests: 2000, tenants: 32, ..TraceConfig::default() };
+        let trace = Trace::generate(&cfg);
+        let mut counts = vec![0usize; cfg.tenants];
+        for e in &trace.events {
+            counts[e.tenant as usize] += 1;
+        }
+        // With s = 1.1 over 32 tenants, tenant 0 holds ~24% of the mass; the
+        // bottom half together holds ~15%. Broad bands keep this a shape
+        // check, not a brittle fit.
+        let tail: usize = counts[cfg.tenants / 2..].iter().sum();
+        assert!(counts[0] > counts[cfg.tenants - 1], "head must beat tail");
+        assert!(counts[0] as f64 / 2000.0 > 0.10, "head tenant too light: {}", counts[0]);
+        assert!((tail as f64) / 2000.0 < 0.40, "tail half too heavy: {tail}");
+    }
+
+    #[test]
+    fn lengths_are_long_tailed_and_capped() {
+        let cfg = TraceConfig { requests: 2000, ..TraceConfig::default() };
+        let trace = Trace::generate(&cfg);
+        let mut prompts: Vec<usize> = trace.events.iter().map(|e| e.prompt_len).collect();
+        prompts.sort_unstable();
+        let median = prompts[prompts.len() / 2] as f64;
+        let max = *prompts.last().unwrap();
+        assert!(prompts[0] >= 1 && max <= cfg.prompt_cap);
+        assert!(
+            (median - cfg.prompt_median).abs() < cfg.prompt_median * 0.5,
+            "median {median} far from configured {}",
+            cfg.prompt_median
+        );
+        assert!((max as f64) > median * 2.0, "no long tail: max {max} vs median {median}");
+        assert!(trace.events.iter().all(|e| e.steps >= 1 && e.steps <= cfg.steps_cap));
+    }
+
+    #[test]
+    fn abandonment_matches_probability_and_precedes_completion() {
+        let cfg = TraceConfig { requests: 2000, abandon_prob: 0.25, ..TraceConfig::default() };
+        let trace = Trace::generate(&cfg);
+        let abandoned: Vec<&TraceEvent> =
+            trace.events.iter().filter(|e| e.abandon_after.is_some()).collect();
+        for e in &abandoned {
+            let k = e.abandon_after.unwrap();
+            assert!(k >= 1 && k < e.steps, "abandon point {k} outside [1, {})", e.steps);
+            assert!(e.effective_steps() < e.steps);
+        }
+        let frac = abandoned.len() as f64 / 2000.0;
+        assert!((frac - 0.25).abs() < 0.08, "abandon fraction {frac} far from 0.25");
+    }
+}

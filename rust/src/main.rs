@@ -6,6 +6,9 @@
 //! bitstopper serve [--sessions N] [--steps N] [--workers N] [--alpha A]
 //!                  [--lane-threads N] [--prefill-chunk N] [--spec-q Q]
 //!                  [--session-capacity N] [--spill-dir DIR] [--spill-max-bytes N]
+//! bitstopper loadgen [--seed N] [--requests N] [--tenants N] [--interactive-frac F]
+//!                  [--mean-gap T] [--workers N] [--batch-reserve N] [--watermark N]
+//!                  [--tick-us U] [--sim-only] [--out FILE]   trace-driven load harness
 //! bitstopper ppl [--alpha A]                               tiny-LM perplexity eval
 //! bitstopper artifacts                                     list loaded AOT artifacts
 //! bitstopper selftest                                      config + runtime sanity
@@ -13,8 +16,11 @@
 //! (Hand-rolled parsing: the build environment has no clap.)
 
 use bitstopper::config::{parse_toml, SimConfig};
-use bitstopper::coordinator::{drive_decode, drive_spec_decode, EngineBuilder};
+use bitstopper::coordinator::{
+    drive_decode, drive_spec_decode, EngineBuilder, Priority, SchedConfig, SchedPolicy,
+};
 use bitstopper::figures;
+use bitstopper::loadgen::{self, ReplayConfig, SimConfig as LoadSimConfig, Trace, TraceConfig};
 use bitstopper::runtime::{default_artifact_dir, Runtime};
 use bitstopper::sim::simulate_attention;
 use bitstopper::workload::{ModelDecodeTrace, QuantAttn};
@@ -140,6 +146,10 @@ fn main() {
                 m.ticks, m.prefill_chunks, m.model_steps, m.spec_steps, m.accepts, m.deferred,
                 m.budget_deferred, m.errors
             );
+            println!(
+                "classes   : {} interactive, {} batch dispatched, {} admit-rejected",
+                m.dispatched_interactive, m.dispatched_batch, m.admit_rejected
+            );
             if m.demotions > 0 || m.promotions > 0 {
                 println!(
                     "spill     : {} demotions, {} promotions ({:.0} us mean), {} bytes live",
@@ -147,6 +157,120 @@ fn main() {
                 );
             }
             anyhow::ensure!(m.errors == 0, "serving demo completed with errors");
+            Ok(())
+        })(),
+        "loadgen" => (|| -> anyhow::Result<()> {
+            // Trace-driven load harness (DESIGN.md §15): generate a seeded
+            // multi-tenant trace, score the scheduling policy in the
+            // deterministic virtual-time sim (fifo vs priority+admission),
+            // then replay the same trace against the live engine and persist
+            // the per-class SLO report as BENCH_load.json.
+            let seed: u64 = get("--seed").and_then(|s| s.parse().ok()).unwrap_or(0x10AD);
+            let requests: usize =
+                get("--requests").and_then(|s| s.parse().ok()).unwrap_or(48);
+            let tenants: usize = get("--tenants").and_then(|s| s.parse().ok()).unwrap_or(16);
+            let interactive_frac: f64 =
+                get("--interactive-frac").and_then(|s| s.parse().ok()).unwrap_or(0.5);
+            let mean_gap: f64 = get("--mean-gap").and_then(|s| s.parse().ok()).unwrap_or(2.0);
+            let workers: usize = get("--workers").and_then(|s| s.parse().ok()).unwrap_or(2);
+            let batch_reserve: usize =
+                get("--batch-reserve").and_then(|s| s.parse().ok()).unwrap_or(4);
+            let watermark: Option<usize> = get("--watermark").and_then(|s| s.parse().ok());
+            let tick_us: u64 = get("--tick-us").and_then(|s| s.parse().ok()).unwrap_or(200);
+            let out = get("--out").unwrap_or_else(|| "BENCH_load.json".to_string());
+
+            let trace = Trace::generate(&TraceConfig {
+                seed,
+                requests,
+                tenants,
+                interactive_frac,
+                mean_interarrival_ticks: mean_gap,
+                ..TraceConfig::default()
+            });
+            let n_int =
+                trace.events.iter().filter(|e| e.class == Priority::Interactive).count();
+            println!(
+                "trace     : {} requests ({} interactive / {} batch), {} tenants, seed {seed:#x}",
+                trace.events.len(),
+                n_int,
+                trace.events.len() - n_int,
+                tenants
+            );
+
+            // Policy comparison in the deterministic virtual-time sim: one
+            // worker and tight budgets put the trace under sustained
+            // overload (the same shape the CI gate uses), so the printed
+            // counts — and the speedup — are identical run to run for the
+            // same seed, on any machine.
+            let tight = SchedConfig {
+                prefill_chunk: 8,
+                prefill_tokens_per_tick: 16,
+                decode_tokens_per_tick: 4,
+                max_inflight_per_worker: 2,
+                ..SchedConfig::default()
+            };
+            let sim_reserve = batch_reserve.clamp(1, tight.decode_tokens_per_tick - 1);
+            let fifo = LoadSimConfig { workers: 1, sched: tight, ..LoadSimConfig::default() };
+            let mut prio_sched = tight;
+            prio_sched.policy = SchedPolicy::Priority { batch_reserve_tokens: sim_reserve };
+            prio_sched.admit_watermark = watermark;
+            let prio =
+                LoadSimConfig { workers: 1, sched: prio_sched, ..LoadSimConfig::default() };
+            let now = std::time::Instant::now();
+            let (f, p, speedup) = loadgen::policy_comparison(&trace, &fifo, &prio, now);
+            for (name, r) in [("sim fifo ", &f), ("sim prio ", &p)] {
+                println!(
+                    "{name}: {} ticks, {} admitted, {} rejected, {} completed, {} abandoned, {} budget-deferred",
+                    r.ticks, r.admitted, r.rejected, r.completed, r.abandoned,
+                    r.stats.budget_deferred
+                );
+            }
+            println!(
+                "speedup   : {speedup:.3}x interactive p99 TTFT (fifo {:.0} -> priority {:.0} ticks)",
+                f.interactive.ttft.percentile(99.0),
+                p.interactive.ttft.percentile(99.0)
+            );
+            if has("--sim-only") {
+                println!("sim-only  : skipping live replay; {out} not written");
+                return Ok(());
+            }
+
+            let mut builder = EngineBuilder::new()
+                .workers(workers)
+                .sched_policy(SchedPolicy::Priority { batch_reserve_tokens: batch_reserve });
+            if let Some(w) = watermark {
+                builder = builder.admit_watermark(w);
+            }
+            let client =
+                builder.build().map_err(|e| anyhow::anyhow!("engine construction: {e}"))?;
+            let rcfg = ReplayConfig {
+                tick: Duration::from_micros(tick_us),
+                seed,
+                ..ReplayConfig::default()
+            };
+            let r = loadgen::replay(&client, &trace, &rcfg)
+                .map_err(|e| anyhow::anyhow!("live replay: {e}"))?;
+            client.shutdown();
+            println!(
+                "replay    : {} completed, {} rejected, {} errors, {} abandoned in {:.1} ms",
+                r.completed,
+                r.rejected,
+                r.errors,
+                r.abandoned,
+                r.elapsed.as_secs_f64() * 1e3
+            );
+            let rows = loadgen::load_rows(&r);
+            for (name, s) in &rows {
+                println!(
+                    "{name:<24}: p50 {:8.0} p95 {:8.0} p99 {:8.0} us (n={})",
+                    s.p50, s.p95, s.p99, s.n
+                );
+            }
+            let derived = loadgen::load_derived(&f, &p, speedup, &r);
+            std::fs::write(&out, loadgen::render_load_json(&rows, &derived))
+                .map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
+            println!("wrote     : {out}");
+            anyhow::ensure!(r.errors == 0, "live replay completed with errors");
             Ok(())
         })(),
         "ppl" => {
@@ -209,12 +333,15 @@ fn main() {
         })(),
         _ => {
             eprintln!(
-                "usage: bitstopper <figures|simulate|serve|ppl|artifacts|selftest> [options]\n\
+                "usage: bitstopper <figures|simulate|serve|loadgen|ppl|artifacts|selftest> [options]\n\
                  \x20 figures  [--fig 3a|3b|10|11|12|13a|13b|14|table1|headline] [--all] [--out DIR]\n\
                  \x20 simulate [--seq N] [--dim N] [--queries N] [--alpha A] [--config FILE]\n\
                  \x20 serve    [--sessions N] [--steps N] [--workers N] [--alpha A]\n\
                  \x20          [--lane-threads N] [--prefill-chunk N] [--spec-q Q]\n\
                  \x20          [--session-capacity N] [--spill-dir DIR] [--spill-max-bytes N]\n\
+                 \x20 loadgen  [--seed N] [--requests N] [--tenants N] [--interactive-frac F]\n\
+                 \x20          [--mean-gap T] [--workers N] [--batch-reserve N] [--watermark N]\n\
+                 \x20          [--tick-us U] [--sim-only] [--out FILE]\n\
                  \x20 ppl      [--alpha A]\n\
                  \x20 artifacts | selftest"
             );

@@ -10,7 +10,7 @@ pub mod stats;
 pub mod proptest;
 
 pub use rng::SplitMix64;
-pub use stats::{mean, percentile, stddev, Summary};
+pub use stats::{mean, percentile, stddev, LogHistogram, Summary};
 
 /// Integer ceiling division: `ceil(a / b)` for positive integers.
 #[inline]

@@ -63,6 +63,7 @@ pub struct Summary {
     pub min: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
     pub max: f64,
 }
 
@@ -85,7 +86,173 @@ impl Summary {
             min,
             p50: percentile(xs, 50.0),
             p95: percentile(xs, 95.0),
+            p99: percentile(xs, 99.0),
             max,
+        }
+    }
+}
+
+/// Bounded log-bucket latency histogram.
+///
+/// 64 power-of-two buckets over non-negative `f64` samples (microseconds by
+/// convention on the serving paths): bucket 0 holds samples `< 1.0`, bucket
+/// `i > 0` holds `[2^(i-1), 2^i)`. Memory is O(1) regardless of how many
+/// samples are recorded, so the loadgen replay driver can stream millions of
+/// TTFT/ITL observations without the unbounded `Vec<f64>` the exact
+/// [`percentile`] path needs. Quantiles are bucket-interpolated (linear
+/// within the owning bucket) and clamped to the exact observed min/max, so
+/// the tails stay honest at any sample count.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    counts: [u64; 64],
+    n: u64,
+    sum: f64,
+    sumsq: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self {
+            counts: [0; 64],
+            n: 0,
+            sum: 0.0,
+            sumsq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket(v: f64) -> usize {
+        if !(v >= 1.0) {
+            // Negative / NaN / sub-unit samples all land in bucket 0; a NaN
+            // latency must not panic the metrics path (same contract as
+            // `percentile`).
+            return 0;
+        }
+        let b = 64 - (v.min(u64::MAX as f64) as u64).leading_zeros() as usize;
+        b.min(63)
+    }
+
+    /// Lower/upper bounds of bucket `i`.
+    fn bounds(i: usize) -> (f64, f64) {
+        if i == 0 {
+            (0.0, 1.0)
+        } else {
+            ((1u64 << (i - 1)) as f64, if i >= 63 { f64::MAX } else { (1u64 << i) as f64 })
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.counts[Self::bucket(v)] += 1;
+        self.n += 1;
+        self.sum += v;
+        self.sumsq += v * v;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Merge another histogram into this one (per-worker shards → report).
+    pub fn merge(&mut self, other: &Self) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        self.sumsq += other.sumsq;
+        if other.n > 0 {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+    }
+
+    /// Bucket-interpolated percentile, `p` in [0, 100]; 0.0 for an empty
+    /// histogram. The rank is located in its bucket and linearly
+    /// interpolated between the bucket bounds, then clamped to the observed
+    /// min/max so p0/p100 are exact.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let rank = (p / 100.0).clamp(0.0, 1.0) * (self.n - 1) as f64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            // Rank r falls in this bucket if seen <= r < seen + c.
+            if rank < (seen + c) as f64 {
+                let (lo, hi) = Self::bounds(i);
+                let frac = (rank - seen as f64 + 0.5) / c as f64;
+                let est = lo + (hi - lo) * frac.clamp(0.0, 1.0);
+                return est.clamp(self.min, self.max);
+            }
+            seen += c;
+        }
+        self.max
+    }
+
+    /// Population standard deviation (exact — tracked as running moments,
+    /// not reconstructed from buckets).
+    pub fn stddev(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.sumsq / self.n as f64 - m * m).max(0.0).sqrt()
+    }
+
+    /// Collapse to a [`Summary`] row (mean/std/min/max exact, percentiles
+    /// bucket-interpolated).
+    pub fn summary(&self) -> Summary {
+        Summary {
+            n: self.n as usize,
+            mean: self.mean(),
+            std: self.stddev(),
+            min: self.min(),
+            p50: self.percentile(50.0),
+            p95: self.percentile(95.0),
+            p99: self.percentile(99.0),
+            max: self.max(),
         }
     }
 }
@@ -141,5 +308,100 @@ mod tests {
         assert_eq!(s.max, 3.0);
         assert_eq!(s.p50, 2.0);
         assert_eq!(s.n, 3);
+    }
+
+    #[test]
+    fn summary_p99_tracks_the_tail() {
+        // 100 samples 1..=100: p99 interpolates near the top order statistic
+        // and must sit strictly above p95.
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert!(s.p99 > s.p95, "p99={} p95={}", s.p99, s.p95);
+        assert!((s.p99 - 99.01).abs() < 1e-9, "p99={}", s.p99);
+        assert!(s.p99 <= s.max);
+    }
+
+    #[test]
+    fn log_histogram_empty_is_safe() {
+        let h = LogHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.percentile(50.0), 0.0);
+        let s = h.summary();
+        assert_eq!(s.n, 0);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 0.0);
+    }
+
+    #[test]
+    fn log_histogram_buckets_powers_of_two() {
+        assert_eq!(LogHistogram::bucket(0.0), 0);
+        assert_eq!(LogHistogram::bucket(0.5), 0);
+        assert_eq!(LogHistogram::bucket(1.0), 1);
+        assert_eq!(LogHistogram::bucket(1.9), 1);
+        assert_eq!(LogHistogram::bucket(2.0), 2);
+        assert_eq!(LogHistogram::bucket(3.0), 2);
+        assert_eq!(LogHistogram::bucket(4.0), 3);
+        assert_eq!(LogHistogram::bucket(f64::NAN), 0);
+        assert_eq!(LogHistogram::bucket(-7.0), 0);
+        assert_eq!(LogHistogram::bucket(f64::MAX), 63);
+    }
+
+    #[test]
+    fn log_histogram_quantiles_track_exact_percentiles() {
+        // Log-uniform latencies: bucket interpolation must land within the
+        // owning power-of-two bucket, i.e. within 2x of the exact value.
+        let xs: Vec<f64> = (0..1000).map(|i| (2.0f64).powf(i as f64 * 14.0 / 1000.0)).collect();
+        let mut h = LogHistogram::new();
+        for &x in &xs {
+            h.record(x);
+        }
+        for p in [50.0, 95.0, 99.0] {
+            let exact = percentile(&xs, p);
+            let est = h.percentile(p);
+            assert!(
+                est >= exact / 2.0 && est <= exact * 2.0,
+                "p{p}: est={est} exact={exact}"
+            );
+        }
+        assert_eq!(h.percentile(0.0), h.min());
+        assert_eq!(h.percentile(100.0), h.max());
+        assert!((h.mean() - mean(&xs)).abs() < 1e-9);
+        assert!((h.stddev() - stddev(&xs)).abs() < 1e-6 * stddev(&xs));
+    }
+
+    #[test]
+    fn log_histogram_merge_equals_combined_stream() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut both = LogHistogram::new();
+        for i in 0..500 {
+            let x = (i as f64 * 7.3) % 900.0 + 1.0;
+            if i % 2 == 0 {
+                a.record(x);
+            } else {
+                b.record(x);
+            }
+            both.record(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.summary(), both.summary());
+    }
+
+    #[test]
+    fn log_histogram_percentiles_are_monotone() {
+        let mut h = LogHistogram::new();
+        let mut x = 1.0f64;
+        for _ in 0..200 {
+            h.record(x);
+            x *= 1.07;
+        }
+        let mut prev = 0.0;
+        for p in 0..=100 {
+            let v = h.percentile(p as f64);
+            assert!(v >= prev, "p{p}: {v} < {prev}");
+            prev = v;
+        }
     }
 }

@@ -1,4 +1,4 @@
-//! The lint rules (L1–L7) and the suppression protocol.
+//! The lint rules (L1–L8) and the suppression protocol.
 //!
 //! Each rule freezes one repo invariant the serving stack's safety rests on
 //! (motivations and §-citations live in DESIGN.md §13). Findings carry
@@ -48,10 +48,9 @@ pub fn run(input: &LintInput) -> Vec<Finding> {
         f.l4_bare_thread_spawn(&mut out);
         f.l5_serve_error_surface(&mut out);
         f.l7_file_io_confinement(&mut out);
+        f.l8_loadgen_determinism(&mut out);
     }
-    if let Some(bench) = &input.bench {
-        l6_bench_baseline_sync(bench, &input.baselines, &mut out);
-    }
+    l6_bench_baseline_sync(input.bench.as_deref(), &input.baselines, &input.sources, &mut out);
     out.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
     out
 }
@@ -347,6 +346,47 @@ impl SourceView {
             }
         }
     }
+
+    /// L8: the loadgen trace generator and virtual-time sim are seeded and
+    /// wall-clock-free — same seed, same trace, same report, on any machine
+    /// (DESIGN.md §15). A wall-clock read or ambient RNG would silently
+    /// break same-seed replayability and the CI-gated policy-comparison
+    /// ratio. Scoped to `loadgen/trace.rs` and `loadgen/sim.rs`;
+    /// `loadgen/replay.rs` is exempt by scope (wall-clock pacing is its
+    /// job), and tests are exempt (they *supply* the base instant).
+    fn l8_loadgen_determinism(&self, out: &mut Vec<Finding>) {
+        if !(self.rel.ends_with("loadgen/trace.rs") || self.rel.ends_with("loadgen/sim.rs")) {
+            return;
+        }
+        for pat in [
+            "Instant::now(",
+            "SystemTime::now(",
+            "thread::sleep(",
+            ".elapsed()",
+            "thread_rng(",
+            "rand::",
+            "RandomState::new(",
+        ] {
+            let mut pos = 0usize;
+            while let Some(i) = self.compact.find_from(pat, pos) {
+                pos = i + 1;
+                let line = self.compact.line_at(i);
+                if self.in_tests(line) {
+                    continue;
+                }
+                self.emit(
+                    out,
+                    "L8",
+                    line,
+                    format!(
+                        "`{pat}..` in the seeded loadgen trace/sim path — wall clock and \
+                         ambient RNG break same-seed replayability; use `SplitMix64` and \
+                         the caller-supplied base instant"
+                    ),
+                );
+            }
+        }
+    }
 }
 
 /// Parse `lint:allow(Lk): justification` comments. Returns the justified
@@ -476,17 +516,41 @@ fn return_type(sig: &str) -> Option<String> {
     Some(ret.trim().to_string())
 }
 
-/// L6: every key in the committed bench baselines must still be a name the
-/// bench can emit — each baseline `rows[].name` / `derived` key must match
-/// at least one string literal in `benches/hotpath.rs`, with `format!`
-/// placeholders treated as wildcards. Catches renamed or removed rows that
-/// `scripts/check_serve_trend.py` silently tolerates ("keys present in
-/// only one file are reported but do not fail").
-fn l6_bench_baseline_sync(bench: &str, baselines: &[(String, String)], out: &mut Vec<Finding>) {
-    let lexed = lex(bench);
-    let patterns: Vec<NamePattern> =
-        lexed.strings.iter().map(|(_, s)| NamePattern::parse(s)).collect();
+/// L6: every key in the committed bench baselines must still be a name its
+/// producer can emit — each baseline `rows[].name` / `derived` key must
+/// match at least one string literal in the emitting code, with `format!`
+/// placeholders treated as wildcards. `BENCH_load.baseline.json` is checked
+/// against the `rust/src/loadgen` sources (which assemble the SLO report);
+/// every other baseline is checked against `benches/hotpath.rs`. Catches
+/// renamed or removed rows that `scripts/check_serve_trend.py` silently
+/// tolerates ("keys present in only one file are reported but do not
+/// fail").
+fn l6_bench_baseline_sync(
+    bench: Option<&str>,
+    baselines: &[(String, String)],
+    sources: &[(String, String)],
+    out: &mut Vec<Finding>,
+) {
+    let bench_patterns: Vec<NamePattern> = bench
+        .map(|b| lex(b).strings.iter().map(|(_, s)| NamePattern::parse(s)).collect())
+        .unwrap_or_default();
+    let load_patterns: Vec<NamePattern> = sources
+        .iter()
+        .filter(|(rel, _)| rel.contains("loadgen/"))
+        .flat_map(|(_, text)| {
+            lex(text).strings.iter().map(|(_, s)| NamePattern::parse(s)).collect::<Vec<_>>()
+        })
+        .collect();
     for (path, text) in baselines {
+        let is_load = path.ends_with("BENCH_load.baseline.json");
+        let (patterns, origin) = if is_load {
+            (&load_patterns, "rust/src/loadgen")
+        } else {
+            if bench.is_none() {
+                continue;
+            }
+            (&bench_patterns, "benches/hotpath.rs")
+        };
         let v = match json::parse(text) {
             Ok(v) => v,
             Err(e) => {
@@ -520,7 +584,7 @@ fn l6_bench_baseline_sync(bench: &str, baselines: &[(String, String)], out: &mut
                     line: 1,
                     message: format!(
                         "baseline key `{name}` matches no string literal in \
-                         benches/hotpath.rs — bench row renamed or removed?"
+                         {origin} — bench row renamed or removed?"
                     ),
                 });
             }
@@ -804,6 +868,53 @@ mod tests {
         assert_eq!(f.len(), 1);
         assert_eq!(f[0].rule, "L6");
         assert!(f[0].message.contains("serve_decode_q4"));
+    }
+
+    #[test]
+    fn l6_checks_load_baselines_against_the_loadgen_sources() {
+        let slo = "fn rows() {\n    emit(\"load_ttft_interactive_us\");\n    \
+                   emit(\"load_interactive_p99_ttft_speedup\");\n}\n";
+        let ok = r#"{"rows": [{"name": "load_ttft_interactive_us"}], "derived": {"load_interactive_p99_ttft_speedup": 1.05}}"#;
+        let bad = r#"{"rows": [{"name": "load_ttft_renamed_us"}], "derived": {}}"#;
+        let lint = |baseline: &str| {
+            run(&LintInput {
+                sources: vec![("rust/src/loadgen/slo.rs".to_string(), slo.to_string())],
+                bench: None,
+                baselines: vec![("BENCH_load.baseline.json".to_string(), baseline.to_string())],
+            })
+        };
+        assert!(lint(ok).is_empty());
+        let f = lint(bad);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "L6");
+        assert!(f[0].message.contains("rust/src/loadgen"));
+        assert!(f[0].message.contains("load_ttft_renamed_us"));
+    }
+
+    #[test]
+    fn l8_flags_wall_clock_and_ambient_rng_in_trace_and_sim_only() {
+        let src = "fn generate() { let _ = std::time::Instant::now(); }\n";
+        let f = lint_one("rust/src/loadgen/trace.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!((f[0].rule, f[0].line), ("L8", 1));
+        assert_eq!(lint_one("rust/src/loadgen/sim.rs", src).len(), 1);
+        // The live replay paces on the wall clock by design; other modules
+        // are covered by L3's scheduler scope, not L8.
+        assert!(lint_one("rust/src/loadgen/replay.rs", src).is_empty());
+        assert!(lint_one("rust/src/workload/x.rs", src).is_empty());
+        let rng = "fn generate() { let mut r = rand::thread_rng(); }\n";
+        let f = lint_one("rust/src/loadgen/trace.rs", rng);
+        assert!(!f.is_empty() && f.iter().all(|x| x.rule == "L8"), "{f:?}");
+    }
+
+    #[test]
+    fn l8_exempts_tests_and_honors_suppressions() {
+        let tests = "#[cfg(test)]\nmod tests {\n    fn t() { let _ = \
+                     std::time::Instant::now(); }\n}\n";
+        assert!(lint_one("rust/src/loadgen/sim.rs", tests).is_empty());
+        let allowed = "fn f() {\n    // lint:allow(L8): fixture stamps a one-off epoch\n    \
+                       let _ = std::time::Instant::now();\n}\n";
+        assert!(lint_one("rust/src/loadgen/trace.rs", allowed).is_empty());
     }
 
     #[test]

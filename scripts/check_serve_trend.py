@@ -2,13 +2,16 @@
 """Compare fresh bench JSON against the committed baselines.
 
 Usage:
-    scripts/check_serve_trend.py [--refresh] [SERVE] [SERVE_BASELINE] [HOTPATH] [HOTPATH_BASELINE]
+    scripts/check_serve_trend.py [--refresh] [SERVE] [SERVE_BASELINE] [HOTPATH] [HOTPATH_BASELINE] [LOAD] [LOAD_BASELINE]
 
 SERVE            defaults to BENCH_serve.json          (written by
                                                         `cargo bench --bench hotpath`)
 SERVE_BASELINE   defaults to BENCH_serve.baseline.json (committed)
 HOTPATH          defaults to BENCH_hotpath.json        (same bench run)
 HOTPATH_BASELINE defaults to BENCH_hotpath.baseline.json (committed)
+LOAD             defaults to BENCH_load.json           (written by
+                                                        `bitstopper loadgen`)
+LOAD_BASELINE    defaults to BENCH_load.baseline.json  (committed)
 
 `--refresh` rewrites each baseline from the corresponding current JSON
 (dropping any hand-seeded `"seeded": true` flag and its note) instead of
@@ -24,6 +27,10 @@ Policy (ROADMAP "BENCH trend tracking in CI"):
   cover the disk tier: serialize/deserialize cost of the ModelContext wire
   format, cold-step promote latency vs context length, and the hot:cold
   session-mix decode cost (DESIGN.md §14).
+* Every `load_*` SLO row is compared by **p99** — SLOs are written against
+  the tail, and the loadgen histograms are log-bucketed, so the tail is the
+  stable, meaningful number. A p99 more than REGRESSION_PCT above its
+  baseline fails the check (DESIGN.md §15).
 * Every derived ratio whose name contains "speedup" — in BOTH files — is a
   machine-independent higher-is-better number (kernel A vs kernel B on the
   same box). One dropping below RATIO_FLOOR × baseline fails the check.
@@ -69,6 +76,16 @@ def serve_rows(doc):
     return rows
 
 
+def load_slo_rows(doc):
+    """`load_*` rows keyed by p99 — the number SLOs are written against."""
+    rows = {}
+    for row in doc.get("rows", []):
+        name = row.get("name", "")
+        if name.startswith("load_"):
+            rows[name] = float(row.get("p99", row.get("p95", "nan")))
+    return rows
+
+
 def speedup_ratios(doc):
     return {
         name: float(v)
@@ -101,6 +118,25 @@ def check_serve_rows(current, baseline, failures):
             verdict = "REGRESSION"
             failures.append(name)
         print(f"  {name:<28} {base:9.3f} -> {cur:9.3f} ms/token "
+              f"({delta_pct:+6.1f}%)  {verdict}")
+
+
+def check_load_rows(current, baseline, failures):
+    print(f"load SLO trend (p99, fail threshold: +{REGRESSION_PCT:.0f}%)")
+    for name in sorted(set(current) | set(baseline)):
+        if name not in current:
+            print(f"  {name:<28} missing from current run (row removed?)")
+            continue
+        if name not in baseline:
+            print(f"  {name:<28} {current[name]:12.1f} us p99  (new row, no baseline)")
+            continue
+        base, cur = baseline[name], current[name]
+        delta_pct = 100.0 * (cur - base) / base if base > 0 else float("inf")
+        verdict = "ok"
+        if delta_pct > REGRESSION_PCT:
+            verdict = "REGRESSION"
+            failures.append(name)
+        print(f"  {name:<28} {base:12.1f} -> {cur:12.1f} us p99 "
               f"({delta_pct:+6.1f}%)  {verdict}")
 
 
@@ -141,6 +177,8 @@ def main(argv):
     serve_base = Path(argv[2] if len(argv) > 2 else "BENCH_serve.baseline.json")
     hot_cur = Path(argv[3] if len(argv) > 3 else "BENCH_hotpath.json")
     hot_base = Path(argv[4] if len(argv) > 4 else "BENCH_hotpath.baseline.json")
+    load_cur = Path(argv[5] if len(argv) > 5 else "BENCH_load.json")
+    load_base = Path(argv[6] if len(argv) > 6 else "BENCH_load.baseline.json")
 
     if do_refresh:
         if not serve_cur.exists():
@@ -153,6 +191,11 @@ def main(argv):
                 refresh_baseline(hot_cur, hot_base)
             else:
                 print(f"note: {hot_cur} not found; hotpath baseline untouched.")
+            if load_cur.exists():
+                refresh_baseline(load_cur, load_base)
+            else:
+                print(f"note: {load_cur} not found; load baseline untouched "
+                      "(run `bitstopper loadgen` to produce one).")
         except (json.JSONDecodeError, ValueError) as e:
             print(f"error: malformed bench json: {e}")
             return 2
@@ -193,6 +236,26 @@ def main(argv):
             note_if_seeded(hot_base_doc, hot_base)
             check_ratios("hotpath", speedup_ratios(hot_cur_doc),
                          speedup_ratios(hot_base_doc), failures)
+
+        print()
+        if not load_cur.exists():
+            print(f"note: {load_cur} not found (no loadgen run?); "
+                  "skipping load SLO trend.")
+        elif not load_base.exists():
+            print(f"note: no committed baseline at {load_base}; passing.")
+            print(f"      seed the trend with: cp {load_cur} {load_base}")
+        else:
+            load_cur_doc = load_doc(load_cur)
+            load_base_doc = load_doc(load_base)
+            note_if_seeded(load_base_doc, load_base)
+            if not load_slo_rows(load_cur_doc):
+                print(f"error: {load_cur} has no load_* rows")
+                return 2
+            check_load_rows(load_slo_rows(load_cur_doc),
+                            load_slo_rows(load_base_doc), failures)
+            print()
+            check_ratios("load", speedup_ratios(load_cur_doc),
+                         speedup_ratios(load_base_doc), failures)
     except (json.JSONDecodeError, ValueError) as e:
         print(f"error: malformed bench json: {e}")
         return 2
@@ -205,9 +268,10 @@ def main(argv):
         print("If the change is intentional, refresh the baseline(s) in the "
               "same PR:\n"
               f"    cp {serve_cur} {serve_base}\n"
-              f"    cp {hot_cur} {hot_base}")
+              f"    cp {hot_cur} {hot_base}\n"
+              f"    cp {load_cur} {load_base}")
         return 1
-    print("\nOK: no serve or kernel-speedup regression.")
+    print("\nOK: no serve, kernel-speedup, or load-SLO regression.")
     return 0
 
 
